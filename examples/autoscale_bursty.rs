@@ -1,0 +1,112 @@
+//! SLO-driven autoscaling under a bursty trace: the "10x within minutes"
+//! pattern of §2.2. The Coordinator's load estimator triggers elastic
+//! scale-ups during the burst and scales back down afterwards; the example
+//! prints the device/SLO timeline.
+//!
+//! Run: `cargo run --release --example autoscale_bursty`
+
+use anyhow::Result;
+
+use elastic_moe::config::model::dsv2_lite;
+use elastic_moe::config::{ParallelConfig, SloConfig};
+use elastic_moe::coordinator::{LoadEstimator, ServingSim, Trigger};
+use elastic_moe::device::Timings;
+use elastic_moe::engine::CostModel;
+use elastic_moe::experiments::common::make_method;
+use elastic_moe::workload::{RateProfile, WorkloadGen, WorkloadSpec};
+
+fn main() -> Result<()> {
+    elastic_moe::util::logging::init();
+    let model = dsv2_lite();
+    let tp = model.tp;
+    let slo = SloConfig::new(3.0, 1.0);
+    let cost = CostModel::new(model.clone(), Timings::cloudmatrix());
+
+    // Burst: 4x the base rate for 2 minutes in the middle of a 8-minute
+    // trace.
+    let base = 6.0;
+    let mut gen = WorkloadGen::new(WorkloadSpec {
+        prompt_len: 2000,
+        decode_min: 150,
+        decode_max: 250,
+        profile: RateProfile::Burst {
+            base,
+            factor: 5.0,
+            start: 120.0,
+            len: 120.0,
+        },
+        seed: 9,
+    });
+    let horizon = 480.0;
+    let arrivals = gen.arrivals_until(horizon);
+    println!(
+        "bursty trace: {} requests, {base} rps base, 5x burst at t=120..240",
+        arrivals.len()
+    );
+
+    let mut method = make_method("elastic", &model, 12)?;
+    let mut estimator = LoadEstimator::new(slo);
+    estimator.cooldown = 20.0;
+    estimator.up_patience = 1;
+    estimator.down_patience = 8;
+
+    let step = move |p: &ParallelConfig, delta: isize| {
+        let n = (p.n_devices() as isize + delta * tp as isize).max(0) as usize;
+        if n == 0 || n > 12 {
+            return None;
+        }
+        ParallelConfig::standard(n / tp, tp, (0..n).collect()).ok()
+    };
+    let trigger = Trigger::Auto {
+        estimator,
+        up: Box::new(move |p| step(p, 1)),
+        down: Box::new(move |p| step(p, -1)),
+    };
+
+    let sim = ServingSim::new(cost, slo);
+    let initial = ParallelConfig::standard(2, tp, (0..4).collect())?;
+    let out = sim.run(method.as_mut(), &initial, arrivals, trigger, horizon)?;
+
+    println!("\ntime   devices  SLO%(arrivals in bucket)");
+    let bucket = 30.0;
+    let mut t = 0.0;
+    while t < horizon {
+        let att = out.recorder.attainment_by_arrival(t, t + bucket, &slo);
+        let devs = out
+            .device_timeline
+            .iter()
+            .rev()
+            .find(|(at, _)| *at <= t + bucket)
+            .map(|(_, n)| *n)
+            .unwrap_or(4);
+        println!(
+            "{:>5.0}  {:^7}  {}",
+            t,
+            devs,
+            if att.is_nan() {
+                "-".to_string()
+            } else {
+                format!("{:.1}%", att * 100.0)
+            }
+        );
+        t += bucket;
+    }
+
+    println!("\nscaling events:");
+    for ev in &out.scaling_events {
+        println!(
+            "  {}: {:.2}s latency, {:.2}s downtime",
+            ev.metrics.label(),
+            ev.ready_after,
+            ev.metrics.downtime
+        );
+    }
+    let w = out.recorder.window(0.0, out.end_time + 1e-6, &slo);
+    println!(
+        "\noverall: {} completed, SLO attainment {:.1}%, devices now {}",
+        w.completed,
+        w.slo_attainment * 100.0,
+        out.device_timeline.last().unwrap().1
+    );
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Quickstart: boot a 4-NPU ElasticMoE deployment on the simulated
+//! cluster, serve traffic, perform one zero-downtime scale-up to 6 NPUs,
+//! and print the scaling metrics the paper reports.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+
+use elastic_moe::config::model::dsv2_lite;
+use elastic_moe::config::{ParallelConfig, SloConfig};
+use elastic_moe::coordinator::{ServingSim, Trigger};
+use elastic_moe::device::Timings;
+use elastic_moe::engine::CostModel;
+use elastic_moe::experiments::common::make_method;
+use elastic_moe::workload::{RateProfile, WorkloadGen, WorkloadSpec};
+
+fn main() -> Result<()> {
+    elastic_moe::util::logging::init();
+    let model = dsv2_lite();
+    println!(
+        "model: {} ({:.1}B params, {} experts, top-{})",
+        model.name,
+        model.param_count() as f64 / 1e9,
+        model.n_experts,
+        model.top_k
+    );
+
+    // An ElasticMoE deployment over a 6-device cluster, starting on 4.
+    let mut method = make_method("elastic", &model, 6)?;
+    let initial =
+        ParallelConfig::standard(2, model.tp, (0..4).collect())?;
+    let target =
+        ParallelConfig::standard(3, model.tp, (0..6).collect())?;
+
+    // 2 rps of 2000-token prompts for two minutes; scale-up at t=45 s.
+    let mut gen = WorkloadGen::new(WorkloadSpec {
+        prompt_len: 2000,
+        decode_min: 150,
+        decode_max: 250,
+        profile: RateProfile::Fixed(2.0),
+        seed: 1,
+    });
+    let arrivals = gen.arrivals_until(120.0);
+    println!("workload: {} requests over 120 s", arrivals.len());
+
+    let slo = SloConfig::new(5.0, 1.5);
+    let sim = ServingSim::new(
+        CostModel::new(model.clone(), Timings::cloudmatrix()),
+        slo,
+    );
+    let out = sim.run(
+        method.as_mut(),
+        &initial,
+        arrivals,
+        Trigger::Manual(vec![(45.0, target)]),
+        120.0,
+    )?;
+
+    println!("\n== scaling event ==");
+    for ev in &out.scaling_events {
+        println!("  {}", ev.metrics.label());
+        println!("  scale latency : {:.2} s", ev.ready_after);
+        println!("  downtime      : {:.2} s", ev.metrics.downtime);
+        println!("  peak memory   : {:.1} GB", ev.metrics.peak_gb());
+        for (stage, t) in &ev.metrics.stages {
+            println!("    {stage:<24} {t:>8.3} s");
+        }
+    }
+
+    let w = out.recorder.window(0.0, out.end_time + 1e-6, &slo);
+    println!("\n== serving quality ==");
+    println!("  completed      : {}", w.completed);
+    println!("  SLO attainment : {:.1}%", w.slo_attainment * 100.0);
+    println!("  mean TTFT      : {:.3} s", w.mean_ttft);
+    println!("  mean TPOT      : {:.4} s", w.mean_tpot);
+    assert!(out.scaling_events[0].metrics.downtime == 0.0);
+    println!("\nzero-downtime scale-up verified ✓");
+    Ok(())
+}

@@ -1,0 +1,231 @@
+//! End-to-end validation (DESIGN.md §2, EXPERIMENTS.md §E2E): serve real
+//! batched requests through the full stack — AOT-compiled JAX/Pallas
+//! artifacts executed via PJRT, weights owned by the HMM on simulated
+//! devices, EP routing by the Rust engine — and perform a **live elastic
+//! scale-up with expert migration in the middle of decoding**, verifying
+//! the generated tokens are bit-identical to an unscaled reference run.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example serve_e2e`
+
+use std::cell::RefCell;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use elastic_moe::config::{model, ParallelConfig};
+use elastic_moe::device::Cluster;
+use elastic_moe::engine::pjrt::PjrtBackend;
+use elastic_moe::engine::{BatcherConfig, PagedKv, ServeEngine};
+use elastic_moe::hmm::control::{HmmControl, HmmOptions, PayloadLoader};
+use elastic_moe::hmm::weights::UnitKind;
+use elastic_moe::runtime::{weights, HostTensor, Manifest, Pjrt};
+use elastic_moe::sim::RealClock;
+use elastic_moe::util::rng::Rng;
+use elastic_moe::workload::Request;
+
+fn make_loader(manifest: Manifest) -> PayloadLoader {
+    Box::new(move |unit, _tp_rank| {
+        let names: Vec<String> = match unit.kind {
+            UnitKind::Embed => vec!["emb".into(), "ln_f".into()],
+            UnitKind::Attn { layer } => {
+                ["ln1", "wq", "wk", "wv", "wo", "ln2", "w_gate"]
+                    .iter()
+                    .map(|t| format!("layer{layer}.{t}"))
+                    .collect()
+            }
+            UnitKind::Expert { layer, expert } => vec![
+                format!("layer{layer}.w1.e{expert}"),
+                format!("layer{layer}.w3.e{expert}"),
+                format!("layer{layer}.w2.e{expert}"),
+            ],
+            UnitKind::SharedExpert { .. } => return None,
+        };
+        let tensors: Option<Vec<HostTensor>> = names
+            .iter()
+            .map(|n| {
+                manifest.weight(n).ok().and_then(|s| {
+                    weights::load_weight(&manifest.dir, s, true).ok()
+                })
+            })
+            .collect();
+        tensors.map(Rc::new)
+    })
+}
+
+fn requests(md: &elastic_moe::runtime::ModelDims, decode: usize) -> Vec<Request> {
+    let mut rng = Rng::new(2026);
+    (0..md.batch as u64)
+        .map(|i| {
+            let plen = rng.range(md.prefill_len as u64 / 2, md.prefill_len as u64)
+                as usize;
+            let mut r = Request::new(i + 1, 0.0, plen, decode);
+            r.prompt_ids = (0..plen)
+                .map(|_| rng.below(md.vocab as u64) as i32)
+                .collect();
+            r
+        })
+        .collect()
+}
+
+struct Deployment {
+    hmm: Rc<RefCell<HmmControl>>,
+    rt: Rc<Pjrt>,
+}
+
+fn engine_for(
+    dep: &Deployment,
+    binding: elastic_moe::hmm::control::InstanceBinding,
+) -> Result<ServeEngine> {
+    let md = dep.rt.manifest().model.clone();
+    let backend = PjrtBackend::new(dep.rt.clone(), dep.hmm.clone(), binding)?;
+    Ok(ServeEngine::new(
+        BatcherConfig {
+            max_batch: md.batch,
+            max_prefill_tokens: md.batch * md.prefill_len,
+        },
+        PagedKv::new(4096, 16),
+        Box::new(backend),
+    ))
+}
+
+fn main() -> Result<()> {
+    elastic_moe::util::logging::init();
+    let manifest = Manifest::load("artifacts")
+        .context("run `make artifacts` first")?;
+    let md = manifest.model.clone();
+    println!(
+        "e2e model: {} ({:.1}M params, {} experts, top-{}, batch {})",
+        md.name,
+        md.param_count as f64 / 1e6,
+        md.n_experts,
+        md.top_k,
+        md.batch
+    );
+    let rt = Rc::new(Pjrt::load(manifest.clone())?);
+
+    // ---- boot: DP2-TP1-EP2 on devices {0,1} of a 4-device cluster ------
+    let cluster = Rc::new(RefCell::new(Cluster::cloudmatrix(4)));
+    let mut hmm =
+        HmmControl::new(cluster, model::e2e(), HmmOptions::default());
+    hmm.set_loader(make_loader(manifest.clone()));
+    let p2 = ParallelConfig::standard(2, 1, vec![0, 1])?;
+    let t_load = Instant::now();
+    hmm.load_initial(&p2, 64 << 20)?;
+    let proc = hmm.alloc_proc();
+    let (binding, _) = hmm.attach_instance(proc)?;
+    println!(
+        "booted {} on 2 simulated NPUs in {:.2}s (weights loaded once, \
+         zero-copy attached)",
+        p2.label(),
+        t_load.elapsed().as_secs_f64()
+    );
+    let dep = Deployment {
+        hmm: Rc::new(RefCell::new(hmm)),
+        rt,
+    };
+    let mut engine = engine_for(&dep, binding)?;
+
+    // ---- reference run (no scaling) for the numerics check -------------
+    let decode_len = 24;
+    let reqs = requests(&md, decode_len);
+    let clock = RealClock::new();
+    let mut reference = Vec::new();
+    {
+        let (ref_binding, _) =
+            dep.hmm.borrow_mut().attach_instance(9999)?;
+        let mut ref_engine = engine_for(&dep, ref_binding)?;
+        for r in reqs.clone() {
+            ref_engine.submit(r);
+        }
+        while ref_engine.has_work() {
+            let out = ref_engine.step(&clock)?;
+            reference.extend(out.finished);
+        }
+        reference.sort_by_key(|r| r.id);
+        dep.hmm.borrow_mut().detach_instance(9999)?;
+    }
+
+    // ---- live run: scale 2 -> 4 devices MID-DECODE ----------------------
+    let mut live = Vec::new();
+    for r in reqs.clone() {
+        engine.submit(r);
+    }
+    let t0 = Instant::now();
+    let mut steps = 0usize;
+    let mut scaled = false;
+    let mut scale_wall = 0.0f64;
+    while engine.has_work() {
+        let out = engine.step(&clock)?;
+        live.extend(out.finished);
+        steps += 1;
+        if steps == 6 && !scaled {
+            // Elastic scale-up while requests are mid-decode: the HMM
+            // migrates experts to devices {2,3} with real payload moves;
+            // the backend rebinds; the engine-held KV caches are untouched
+            // (zero-copy reuse).
+            let t_scale = Instant::now();
+            let p4 = ParallelConfig::standard(4, 1, vec![0, 1, 2, 3])?;
+            let (plan, stats, new_binding) = {
+                let mut hmm = dep.hmm.borrow_mut();
+                let plan = hmm.plan_scale(&p4)?;
+                let stats = hmm.execute_plan(&plan, &p4)?;
+                let proc = hmm.alloc_proc();
+                let (b, _) = hmm.attach_instance(proc)?;
+                (plan, stats, b)
+            };
+            engine
+                .backend_as_pjrt()
+                .context("pjrt backend")?
+                .rebind(new_binding)?;
+            dep.hmm.borrow_mut().apply_deferred_frees()?;
+            scale_wall = t_scale.elapsed().as_secs_f64();
+            println!(
+                "live scale-up 2→4 at decode step {steps}: {} experts \
+                 migrated, {} bytes over fabric, sim stage time {:.3}s, \
+                 wall {:.3}s — zero downtime (decode continues)",
+                plan.migrated_expert_count(),
+                plan.p2p_bytes(),
+                stats.total,
+                scale_wall,
+            );
+            scaled = true;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    live.sort_by_key(|r| r.id);
+
+    // ---- verify + report -------------------------------------------------
+    assert_eq!(live.len(), reference.len());
+    for (a, b) in live.iter().zip(&reference) {
+        assert_eq!(
+            a.output_ids, b.output_ids,
+            "request {}: tokens diverged after live migration!",
+            a.id
+        );
+    }
+    let total_tokens: usize = live.iter().map(|r| r.generated).sum();
+    let ttfts: Vec<f64> = live.iter().filter_map(|r| r.ttft()).collect();
+    let tpots: Vec<f64> = live.iter().filter_map(|r| r.tpot()).collect();
+    println!("\n== end-to-end results (real PJRT compute, wall time) ==");
+    println!("  requests        : {}", live.len());
+    println!("  tokens generated: {total_tokens}");
+    println!("  wall time       : {wall:.2} s");
+    println!(
+        "  throughput      : {:.1} tok/s, {:.2} req/s",
+        total_tokens as f64 / wall,
+        live.len() as f64 / wall
+    );
+    println!(
+        "  TTFT mean       : {:.3} s   TPOT mean: {:.4} s",
+        elastic_moe::util::stats::mean(&ttfts),
+        elastic_moe::util::stats::mean(&tpots)
+    );
+    println!("  scale-up wall   : {scale_wall:.3} s (mid-decode)");
+    println!(
+        "\ntokens bit-identical to unscaled reference across live expert \
+         migration ✓"
+    );
+    Ok(())
+}

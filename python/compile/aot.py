@@ -1,0 +1,286 @@
+"""AOT compile path: lower the L2 model to HLO text artifacts for Rust.
+
+Run once via ``make artifacts``. Emits into ``artifacts/``:
+
+- ``<name>.hlo.txt``   — HLO **text** per entry point (NOT ``.serialize()``:
+  jax >= 0.5 emits protos with 64-bit instruction ids which the runtime's
+  xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+  cleanly — see /opt/xla-example/README.md).
+- ``weights/*.bin``    — raw little-endian f32 weight tensors. The Rust HMM's
+  ``disk_copy`` primitive loads these, mirroring the paper's disk->HBM path.
+- ``manifest.json``    — model dims + per-artifact argument/output specs +
+  weight index, consumed by ``rust/src/runtime/artifacts.rs``.
+- ``golden.json``      — a deterministic prefill + multi-step decode trace
+  (tokens and first-step logits) computed with the composed path the Rust
+  engine replicates; the Rust integration tests must match it.
+
+Python never runs at serving time: after this script completes, the Rust
+binary is self-contained.
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .config import E2E, ModelConfig
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dtype_name(d):
+    return jnp.dtype(d).name
+
+
+class ArtifactWriter:
+    def __init__(self, out_dir: str, cfg: ModelConfig):
+        self.out_dir = out_dir
+        self.cfg = cfg
+        self.artifacts = []
+        self.weights = []
+        os.makedirs(os.path.join(out_dir, "weights"), exist_ok=True)
+
+    def add(self, name, fn, args, arg_names, out_names):
+        """Lower ``fn`` at ``args`` specs and record its interface."""
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *args)
+        flat_outs = jax.tree.leaves(outs)
+        assert len(flat_outs) == len(out_names), (name, len(flat_outs),
+                                                  out_names)
+        self.artifacts.append({
+            "name": name,
+            "file": fname,
+            "args": [
+                {"name": n, "dtype": _dtype_name(a.dtype),
+                 "shape": list(a.shape)}
+                for n, a in zip(arg_names, args)
+            ],
+            "outputs": [
+                {"name": n, "dtype": _dtype_name(o.dtype),
+                 "shape": list(o.shape)}
+                for n, o in zip(out_names, flat_outs)
+            ],
+        })
+        print(f"  lowered {name}: {len(text)} chars")
+
+    def add_weight(self, name, array):
+        arr = np.asarray(array, dtype=np.float32)
+        fname = f"weights/{name}.bin"
+        path = os.path.join(self.out_dir, fname)
+        arr.tofile(path)
+        self.weights.append({
+            "name": name,
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": "float32",
+            "sha256": hashlib.sha256(arr.tobytes()).hexdigest(),
+        })
+
+
+def export_weights(w: ArtifactWriter, params):
+    w.add_weight("emb", params["emb"])
+    w.add_weight("ln_f", params["ln_f"])
+    for li, layer in enumerate(params["layers"]):
+        for name in M.LAYER_TENSORS:
+            if name in ("w1", "w3", "w2"):
+                # Expert tensors are exported per expert: they are the unit
+                # of EP migration in the Rust HMM (one vpage run each).
+                for e in range(w.cfg.n_experts):
+                    w.add_weight(f"layer{li}.{name}.e{e}", layer[name][e])
+            else:
+                w.add_weight(f"layer{li}.{name}", layer[name])
+
+
+def export_artifacts(w: ArtifactWriter):
+    cfg = w.cfg
+    b, p, s = cfg.batch, cfg.prefill_len, cfg.max_seq
+    v, d, e, f = cfg.vocab, cfg.d_model, cfg.n_experts, cfg.d_ff
+    h, dh, qkv = cfg.n_heads, cfg.head_dim, cfg.qkv_dim
+    i32 = jnp.int32
+
+    attn_args = [spec((d,)), spec((d, qkv)), spec((d, qkv)), spec((d, qkv)),
+                 spec((qkv, d)), spec((d,)), spec((d, e))]
+    attn_names = ["ln1", "wq", "wk", "wv", "wo", "ln2", "w_gate"]
+
+    w.add("embed_decode",
+          lambda emb, ids: M.embed(emb, ids),
+          [spec((v, d)), spec((b,), i32)],
+          ["emb", "ids"], ["x"])
+
+    w.add("embed_prefill",
+          lambda emb, ids: M.embed(emb, ids),
+          [spec((v, d)), spec((b, p), i32)],
+          ["emb", "ids"], ["x"])
+
+    w.add("attn_gate_decode",
+          functools.partial(M.attn_gate_decode, cfg),
+          [spec((b, d)), spec((b,), i32), *attn_args,
+           spec((b, s, h, dh)), spec((b, s, h, dh))],
+          ["x", "lens", *attn_names, "k_cache", "v_cache"],
+          ["h", "xn2", "cw", "k_new", "v_new"])
+
+    w.add("attn_gate_prefill",
+          functools.partial(M.attn_gate_prefill, cfg),
+          [spec((b, p, d)), spec((b,), i32), *attn_args],
+          ["x", "lens", *attn_names],
+          ["h", "xn2", "cw", "k", "v"])
+
+    w.add("expert_ffn_decode",
+          M.expert_ffn,
+          [spec((b, d)), spec((d, f)), spec((d, f)), spec((f, d))],
+          ["x", "w1", "w3", "w2"], ["y"])
+
+    w.add("expert_ffn_prefill",
+          M.expert_ffn,
+          [spec((b * p, d)), spec((d, f)), spec((d, f)), spec((f, d))],
+          ["x", "w1", "w3", "w2"], ["y"])
+
+    w.add("final_logits",
+          lambda x, ln_f, emb: M.final_logits(x, ln_f, emb, cfg.norm_eps),
+          [spec((b, d)), spec((d,)), spec((v, d))],
+          ["x", "ln_f", "emb"], ["logits"])
+
+    # Monolithic decode step (Pallas MoE kernel on the hot path): used for
+    # cost-model calibration and as the single-device fast path.
+    n_l = cfg.n_layers
+
+    def decode_step_flat(ids, lens, *rest):
+        kcs = list(rest[:n_l])
+        vcs = list(rest[n_l:2 * n_l])
+        emb, ln_f = rest[2 * n_l], rest[2 * n_l + 1]
+        layers = []
+        off = 2 * n_l + 2
+        per = len(M.LAYER_TENSORS)
+        for li in range(n_l):
+            layers.append(dict(zip(M.LAYER_TENSORS,
+                                   rest[off + li * per: off + (li + 1) * per])))
+        params = {"emb": emb, "ln_f": ln_f, "layers": layers}
+        logits, k_news, v_news = M.decode_step(cfg, params, ids, lens, kcs,
+                                               vcs)
+        return (logits, *k_news, *v_news)
+
+    shapes = M.layer_shapes(cfg)
+    layer_specs, layer_names = [], []
+    for li in range(n_l):
+        for name in M.LAYER_TENSORS:
+            layer_specs.append(spec(shapes[name]))
+            layer_names.append(f"layer{li}.{name}")
+    w.add("decode_step_full",
+          decode_step_flat,
+          [spec((b,), i32), spec((b,), i32),
+           *([spec((b, s, h, dh))] * (2 * n_l)),
+           spec((v, d)), spec((d,)), *layer_specs],
+          ["ids", "lens",
+           *[f"k_cache{i}" for i in range(n_l)],
+           *[f"v_cache{i}" for i in range(n_l)],
+           "emb", "ln_f", *layer_names],
+          ["logits",
+           *[f"k_new{i}" for i in range(n_l)],
+           *[f"v_new{i}" for i in range(n_l)]])
+
+
+def export_golden(out_dir: str, cfg: ModelConfig, params, n_steps=8,
+                  seed=1234):
+    """Deterministic composed-path trace the Rust engine must reproduce."""
+    b, p, s = cfg.batch, cfg.prefill_len, cfg.max_seq
+    key = jax.random.key(seed)
+    k1, k2 = jax.random.split(key)
+    ids = jax.random.randint(k1, (b, p), 0, cfg.vocab, jnp.int32)
+    lens = jnp.clip(
+        jax.random.randint(k2, (b,), p // 2, p + 1, jnp.int32), 2, p)
+
+    logits, ks, vs = M.prefill(cfg, params, ids, lens)
+    hd = (cfg.n_heads, cfg.head_dim)
+    kc = [jnp.zeros((b, s, *hd), jnp.float32).at[:, :p].set(k) for k in ks]
+    vc = [jnp.zeros((b, s, *hd), jnp.float32).at[:, :p].set(v) for v in vs]
+
+    first_logits = logits
+    tokens = []
+    cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    cur_lens = lens
+    for _ in range(n_steps):
+        tokens.append(cur)
+        cur_lens = cur_lens + 1
+        logits, k_news, v_news = M.composed_decode_step(
+            cfg, params, cur, cur_lens, kc, vc)
+        idx = jnp.arange(b)
+        for li in range(cfg.n_layers):
+            kc[li] = kc[li].at[idx, cur_lens - 1].set(k_news[li])
+            vc[li] = vc[li].at[idx, cur_lens - 1].set(v_news[li])
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    golden = {
+        "seed": seed,
+        "n_steps": n_steps,
+        "prompt_ids": np.asarray(ids).tolist(),
+        "prompt_lens": np.asarray(lens).tolist(),
+        "tokens": np.asarray(jnp.stack(tokens)).tolist(),  # [n_steps, B]
+        "prefill_logits_row0": np.asarray(first_logits[0]).tolist(),
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+    print(f"  golden: {n_steps} steps, batch {b}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts output directory")
+    ap.add_argument("--skip-golden", action="store_true")
+    args = ap.parse_args()
+    cfg = E2E
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+
+    print(f"model {cfg.name}: {cfg.param_count() / 1e6:.1f}M params")
+    params = M.init_params(cfg, seed=0)
+
+    w = ArtifactWriter(out, cfg)
+    export_weights(w, params)
+    export_artifacts(w)
+    if not args.skip_golden:
+        export_golden(out, cfg, params)
+
+    manifest = {
+        "model": {
+            "name": cfg.name, "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim, "d_ff": cfg.d_ff,
+            "n_experts": cfg.n_experts, "top_k": cfg.top_k,
+            "max_seq": cfg.max_seq, "prefill_len": cfg.prefill_len,
+            "batch": cfg.batch, "param_count": cfg.param_count(),
+        },
+        "layer_tensors": list(M.LAYER_TENSORS),
+        "artifacts": w.artifacts,
+        "weights": w.weights,
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(w.artifacts)} artifacts, {len(w.weights)} weight "
+          f"tensors to {out}/")
+
+
+if __name__ == "__main__":
+    main()

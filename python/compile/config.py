@@ -1,0 +1,76 @@
+"""Model configuration for the compile path.
+
+``E2E`` is the real model the repository serves end-to-end through PJRT: a
+small MoE transformer (~14.5M parameters) with the same structural shape as
+the paper's models (shared attention + gated SwiGLU experts, top-k routing).
+The paper's 16B/30B/671B models are represented on the Rust side as
+*accounting configs* (rust/src/config) that drive the memory/timing model;
+this config drives the live numerics.
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    head_dim: int
+    d_ff: int          # per-expert SwiGLU hidden dim
+    n_experts: int
+    top_k: int
+    max_seq: int       # padded KV-cache length (decode)
+    prefill_len: int   # padded prompt length (prefill artifacts)
+    batch: int         # compiled decode batch size
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    def param_count(self) -> int:
+        d, f = self.d_model, self.d_ff
+        attn = 4 * d * self.qkv_dim            # wq, wk, wv, wo
+        experts = self.n_experts * 3 * d * f   # w1, w3, w2 per expert
+        gate = d * self.n_experts
+        norms = 2 * d
+        per_layer = attn + experts + gate + norms
+        return self.vocab * d + self.n_layers * per_layer + d  # + final norm
+
+
+# The end-to-end model: small enough to interpret-execute quickly on CPU,
+# structurally identical to the paper's MoE models.
+E2E = ModelConfig(
+    name="elastic-moe-e2e",
+    vocab=2048,
+    d_model=256,
+    n_layers=4,
+    n_heads=4,
+    head_dim=64,
+    d_ff=512,
+    n_experts=8,
+    top_k=2,
+    max_seq=256,
+    prefill_len=64,
+    batch=8,
+)
+
+# A miniature config used by the python test-suite for fast full-model checks.
+TINY = ModelConfig(
+    name="tiny",
+    vocab=64,
+    d_model=32,
+    n_layers=2,
+    n_heads=2,
+    head_dim=16,
+    d_ff=48,
+    n_experts=4,
+    top_k=2,
+    max_seq=32,
+    prefill_len=8,
+    batch=2,
+)

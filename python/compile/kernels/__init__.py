@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels for the ElasticMoE reproduction.
+
+Both kernels are authored for the TPU execution model (VMEM tiles feeding the
+MXU, BlockSpec expressing the HBM->VMEM schedule) but are lowered with
+``interpret=True`` so the resulting HLO runs on the CPU PJRT plugin used by
+the Rust runtime. See DESIGN.md §Hardware-Adaptation.
+"""
+
+from .moe_ffn import moe_ffn, DEFAULT_TOKEN_TILE
+from .attention import attn_decode
+
+__all__ = ["moe_ffn", "attn_decode", "DEFAULT_TOKEN_TILE"]

@@ -1,0 +1,73 @@
+"""Single-step (decode) KV-cache attention Pallas kernel.
+
+Each decode step attends one query token per sequence against that sequence's
+KV cache, masked to the sequence's current length. The grid iterates
+``(batch, head)``; each program streams one head's cache slice ``[S, dh]``
+into VMEM, computes masked scores, a numerically-stable softmax, and the
+weighted value sum.
+
+VMEM working set per program: ``2*S*dh + 2*dh + S`` f32 words — for the e2e
+config (S=256, dh=64) about 132 KB, trivially double-bufferable.
+
+``interpret=True``: see kernels/__init__.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, scale):
+    q = q_ref[0, 0]            # [dh]
+    k = k_ref[0, :, 0, :]      # [S, dh]
+    v = v_ref[0, :, 0, :]      # [S, dh]
+    n = len_ref[0]             # scalar current length (includes this token)
+
+    s = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale  # [S]
+    positions = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    s = jnp.where(positions < n, s, -1e30)
+    # Stable softmax over the masked scores.
+    m = jnp.max(s)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p)
+    o_ref[0, 0] = jnp.dot(p, v, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def attn_decode(q, k_cache, v_cache, lens):
+    """Masked decode attention over a padded KV cache.
+
+    Args:
+      q: ``[B, H, dh]`` current-step queries.
+      k_cache: ``[B, S, H, dh]`` key cache, padded to S; position ``lens[b]-1``
+        holds the current token's key.
+      v_cache: ``[B, S, H, dh]`` value cache.
+      lens: ``[B]`` int32 valid lengths (including the current token).
+
+    Returns:
+      ``[B, H, dh]`` attention outputs.
+    """
+    b, h, dh = q.shape
+    _, s, _, _ = k_cache.shape
+    assert k_cache.shape == (b, s, h, dh) and v_cache.shape == (b, s, h, dh)
+    assert lens.shape == (b,)
+    scale = 1.0 / (dh ** 0.5)
+
+    kernel = functools.partial(_attn_decode_kernel, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda bi, hi: (bi, hi, 0)),
+            pl.BlockSpec((1, s, 1, dh), lambda bi, hi: (bi, 0, hi, 0)),
+            pl.BlockSpec((1, s, 1, dh), lambda bi, hi: (bi, 0, hi, 0)),
+            pl.BlockSpec((1,), lambda bi, hi: (bi,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda bi, hi: (bi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), q.dtype),
+        interpret=True,
+    )(q, k_cache, v_cache, lens)

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels and the gating function.
+
+These are the correctness ground truth: every kernel must match its oracle
+under the hypothesis sweeps in python/tests/, and aot.py uses them to emit
+golden outputs for the Rust integration tests.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_moe_ffn(x, w1, w3, w2, combine_weights):
+    """Dense reference MoE FFN: loop over experts in index order.
+
+    Matches the kernel's accumulation order (expert 0 first) so float32
+    results agree to tight tolerance.
+    """
+    t, d = x.shape
+    e = w1.shape[0]
+    out = jnp.zeros((t, d), dtype=jnp.float32)
+    for ei in range(e):
+        h = jax.nn.silu(x @ w1[ei]) * (x @ w3[ei])
+        y = h @ w2[ei]
+        out = out + y * combine_weights[:, ei:ei + 1]
+    return out.astype(x.dtype)
+
+
+def ref_attn_decode(q, k_cache, v_cache, lens):
+    """Reference masked decode attention."""
+    b, h, dh = q.shape
+    s = k_cache.shape[1]
+    scale = 1.0 / (dh ** 0.5)
+    # [B, H, S] scores
+    scores = jnp.einsum("bhd,bshd->bhs", q, k_cache) * scale
+    mask = jnp.arange(s)[None, None, :] < lens[:, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, v_cache).astype(q.dtype)
+
+
+def ref_gate(x, w_gate, top_k):
+    """Reference top-k softmax gate with renormalisation.
+
+    Returns ``[T, E]`` combine weights, zero outside the top-k set — the
+    same representation the kernel and the Rust router consume.
+
+    Implementation note: top-k is computed by iterated argmax rather than
+    ``jax.lax.top_k`` — lax.top_k lowers to an HLO `topk` instruction with a
+    ``largest=`` attribute that the runtime's xla_extension 0.5.1 text
+    parser rejects; iterated argmax lowers to plain reduce/select ops.
+    Argmax tie-breaking (lowest index) matches lax.top_k's ordering.
+    """
+    logits = x @ w_gate                       # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    e = probs.shape[-1]
+    cw = jnp.zeros_like(probs)
+    remaining = probs
+    for _ in range(top_k):
+        idx = jnp.argmax(remaining, axis=-1)            # [T]
+        onehot = jax.nn.one_hot(idx, e, dtype=probs.dtype)
+        cw = cw + onehot * probs
+        remaining = jnp.where(onehot > 0, -jnp.inf, remaining)
+    return cw / jnp.sum(cw, axis=-1, keepdims=True)
+
+
+def ref_moe_layer(x, w_gate, w1, w3, w2, top_k):
+    """Gate + expert FFN, the full MoE layer oracle."""
+    cw = ref_gate(x, w_gate, top_k)
+    return ref_moe_ffn(x, w1, w3, w2, cw), cw

@@ -1,0 +1,294 @@
+"""Layer-2 JAX model: a small MoE transformer with externalised KV cache.
+
+The model is decomposed into *shard-granular* entry points so the Rust
+coordinator can drive real expert parallelism: the attention/gating prefix of
+every layer is one executable (weights are runtime inputs, so a single
+executable serves all layers), each expert's SwiGLU FFN is a separate
+executable invoked with whichever expert weights live on the owning simulated
+device, and the Rust router performs dispatch/combine between them. A
+monolithic ``decode_step_full`` (which routes through the Pallas MoE kernel)
+is also exported for calibration and for cross-checking the composed path.
+
+All entry points are pure functions of flat tensor arguments — no closed-over
+parameters — so the AOT artifacts can be fed weights owned by the Rust HMM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import moe_ffn, attn_decode
+from .kernels.ref import ref_gate
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-5):
+    """RMSNorm over the last dimension."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, pos, theta=10000.0):
+    """Rotary position embedding.
+
+    Args:
+      x: ``[..., H, dh]`` queries or keys.
+      pos: integer positions broadcastable to ``x.shape[:-2]``.
+    """
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = pos[..., None, None].astype(jnp.float32) * freqs  # [..., 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def gate(x, w_gate, top_k):
+    """Top-k softmax gate with renormalisation -> dense combine weights."""
+    return ref_gate(x, w_gate, top_k)
+
+
+def expert_ffn(x, w1, w3, w2):
+    """One expert's SwiGLU MLP — the per-shard executable the Rust EP router
+    invokes on the device owning this expert."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+# ---------------------------------------------------------------------------
+# Layer prefix: attention + residual + gate (shared across EP shards)
+# ---------------------------------------------------------------------------
+
+def attn_gate_decode(cfg: ModelConfig, x, lens, ln1, wq, wk, wv, wo, ln2,
+                     w_gate, k_cache, v_cache):
+    """Decode-step attention + gating prefix of one layer.
+
+    Args:
+      x: ``[B, D]`` layer input.
+      lens: ``[B]`` int32 sequence lengths *including* the current token.
+      k_cache/v_cache: ``[B, S, H, dh]`` caches holding the previous
+        ``lens-1`` tokens; the current token's K/V are computed here.
+
+    Returns:
+      ``(h, xn2, cw, k_new, v_new)`` where ``h = x + attn_out`` is the
+      residual carried to the expert combine, ``xn2 = rmsnorm(h)`` feeds the
+      experts, ``cw [B, E]`` are combine weights, and ``k_new/v_new
+      [B, H, dh]`` must be persisted into the cache at position ``lens-1``.
+    """
+    b = x.shape[0]
+    h_, dh = cfg.n_heads, cfg.head_dim
+    xn1 = rmsnorm(x, ln1, cfg.norm_eps)
+    q = (xn1 @ wq).reshape(b, h_, dh)
+    k = (xn1 @ wk).reshape(b, h_, dh)
+    v = (xn1 @ wv).reshape(b, h_, dh)
+    pos = lens - 1
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    # Insert the current token's K/V at its position, then attend (Pallas).
+    idx = jnp.arange(b)
+    kc = k_cache.at[idx, pos].set(k)
+    vc = v_cache.at[idx, pos].set(v)
+    attn = attn_decode(q, kc, vc, lens)                  # [B, H, dh]
+    out = attn.reshape(b, h_ * dh) @ wo
+    h = x + out
+    xn2 = rmsnorm(h, ln2, cfg.norm_eps)
+    cw = gate(xn2, w_gate, cfg.top_k)
+    return h, xn2, cw, k, v
+
+
+def attn_gate_prefill(cfg: ModelConfig, x, lens, ln1, wq, wk, wv, wo, ln2,
+                      w_gate):
+    """Prefill attention + gating prefix of one layer.
+
+    Args:
+      x: ``[B, P, D]`` padded prompt activations.
+      lens: ``[B]`` valid prompt lengths (<= P).
+
+    Returns:
+      ``(h, xn2, cw, k, v)`` with ``k/v [B, P, H, dh]`` to persist into the
+      cache (positions >= lens[b] are padding).
+    """
+    b, p, d = x.shape
+    h_, dh = cfg.n_heads, cfg.head_dim
+    xn1 = rmsnorm(x, ln1, cfg.norm_eps)
+    q = (xn1 @ wq).reshape(b, p, h_, dh)
+    k = (xn1 @ wk).reshape(b, p, h_, dh)
+    v = (xn1 @ wv).reshape(b, p, h_, dh)
+    pos = jnp.arange(p)[None, :].repeat(b, axis=0)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    scale = 1.0 / (dh ** 0.5)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+    causal = jnp.arange(p)[None, :] <= jnp.arange(p)[:, None]   # [q, k]
+    valid = jnp.arange(p)[None, None, :] < lens[:, None, None]  # [b, 1, k]
+    mask = causal[None, None, :, :] & valid[:, None, :, :]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    attn = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    out = attn.reshape(b, p, h_ * dh) @ wo
+    h = x + out
+    xn2 = rmsnorm(h, ln2, cfg.norm_eps)
+    cw = gate(xn2.reshape(b * p, d), w_gate, cfg.top_k).reshape(
+        b, p, cfg.n_experts
+    )
+    return h, xn2, cw, k, v
+
+
+def embed(emb, ids):
+    """Token embedding lookup (decode: ``[B]``, prefill: ``[B, P]``)."""
+    return jnp.take(emb, ids, axis=0)
+
+
+def final_logits(x, ln_f, emb, eps=1e-5):
+    """Final RMSNorm + tied-embedding output projection."""
+    return rmsnorm(x, ln_f, eps) @ emb.T
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+LAYER_TENSORS = ("ln1", "wq", "wk", "wv", "wo", "ln2", "w_gate",
+                 "w1", "w3", "w2")
+
+
+def layer_shapes(cfg: ModelConfig):
+    d, qkv, f, e = cfg.d_model, cfg.qkv_dim, cfg.d_ff, cfg.n_experts
+    return {
+        "ln1": (d,), "wq": (d, qkv), "wk": (d, qkv), "wv": (d, qkv),
+        "wo": (qkv, d), "ln2": (d,), "w_gate": (d, e),
+        "w1": (e, d, f), "w3": (e, d, f), "w2": (e, f, d),
+    }
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Deterministic parameter initialisation (scaled normal)."""
+    key = jax.random.key(seed)
+    n_tensors = 2 + cfg.n_layers * len(LAYER_TENSORS)
+    keys = iter(jax.random.split(key, n_tensors))
+
+    def dense(k, shape):
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        return jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)
+
+    params = {
+        "emb": jax.random.normal(next(keys), (cfg.vocab, cfg.d_model),
+                                 jnp.float32) * 0.02,
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": [],
+    }
+    shapes = layer_shapes(cfg)
+    for _ in range(cfg.n_layers):
+        layer = {}
+        for name in LAYER_TENSORS:
+            k = next(keys)
+            if name.startswith("ln"):
+                layer[name] = jnp.ones(shapes[name], jnp.float32)
+            else:
+                layer[name] = dense(k, shapes[name])
+        params["layers"].append(layer)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Monolithic steps (Pallas MoE kernel on the hot path)
+# ---------------------------------------------------------------------------
+
+def moe_block(cfg: ModelConfig, h, xn2, cw, w1, w3, w2):
+    """Expert combine via the Pallas grouped-FFN kernel."""
+    t = xn2.shape[0]
+    tile = min(128, max(8, t))
+    y = moe_ffn(xn2, w1, w3, w2, cw, token_tile=tile)
+    return h + y
+
+
+def decode_step(cfg: ModelConfig, params, ids, lens, k_caches, v_caches):
+    """Full single decode step over all layers (monolithic path).
+
+    Args:
+      ids: ``[B]`` current token ids.
+      lens: ``[B]`` lengths including the current token.
+      k_caches/v_caches: lists of ``[B, S, H, dh]`` per layer.
+
+    Returns:
+      ``(logits, k_news, v_news)``.
+    """
+    x = embed(params["emb"], ids)
+    k_news, v_news = [], []
+    for li, layer in enumerate(params["layers"]):
+        h, xn2, cw, k_new, v_new = attn_gate_decode(
+            cfg, x, lens, layer["ln1"], layer["wq"], layer["wk"],
+            layer["wv"], layer["wo"], layer["ln2"], layer["w_gate"],
+            k_caches[li], v_caches[li])
+        x = moe_block(cfg, h, xn2, cw, layer["w1"], layer["w3"], layer["w2"])
+        k_news.append(k_new)
+        v_news.append(v_new)
+    logits = final_logits(x, params["ln_f"], params["emb"], cfg.norm_eps)
+    return logits, k_news, v_news
+
+
+def prefill(cfg: ModelConfig, params, ids, lens):
+    """Full prefill over all layers (monolithic path).
+
+    Args:
+      ids: ``[B, P]`` padded prompt token ids.
+      lens: ``[B]`` valid prompt lengths.
+
+    Returns:
+      ``(logits_last, k_caches, v_caches)`` where ``logits_last [B, V]`` are
+      the logits at each sequence's final prompt token and the caches are
+      ``[B, P, H, dh]`` per layer.
+    """
+    b, p = ids.shape
+    x = embed(params["emb"], ids)
+    ks, vs = [], []
+    for layer in params["layers"]:
+        h, xn2, cw, k, v = attn_gate_prefill(
+            cfg, x, lens, layer["ln1"], layer["wq"], layer["wk"],
+            layer["wv"], layer["wo"], layer["ln2"], layer["w_gate"])
+        d = x.shape[-1]
+        x = moe_block(cfg, h.reshape(b * p, d), xn2.reshape(b * p, d),
+                      cw.reshape(b * p, cfg.n_experts),
+                      layer["w1"], layer["w3"], layer["w2"]).reshape(b, p, d)
+        ks.append(k)
+        vs.append(v)
+    last = jnp.take_along_axis(
+        x, (lens - 1)[:, None, None].repeat(x.shape[-1], axis=2), axis=1
+    )[:, 0]
+    logits = final_logits(last, params["ln_f"], params["emb"], cfg.norm_eps)
+    return logits, ks, vs
+
+
+# ---------------------------------------------------------------------------
+# Composed-path reference (mirrors exactly what the Rust engine does)
+# ---------------------------------------------------------------------------
+
+def composed_decode_step(cfg: ModelConfig, params, ids, lens, k_caches,
+                         v_caches):
+    """Decode step composed the way the Rust EP router composes artifacts:
+    per-layer attention prefix, then per-expert FFN executables combined in
+    ascending expert order. Used to validate that the composed execution is
+    numerically equivalent to the monolithic Pallas path."""
+    x = embed(params["emb"], ids)
+    k_news, v_news = [], []
+    for li, layer in enumerate(params["layers"]):
+        h, xn2, cw, k_new, v_new = attn_gate_decode(
+            cfg, x, lens, layer["ln1"], layer["wq"], layer["wk"],
+            layer["wv"], layer["wo"], layer["ln2"], layer["w_gate"],
+            k_caches[li], v_caches[li])
+        y = jnp.zeros_like(h)
+        for e in range(cfg.n_experts):
+            ye = expert_ffn(xn2, layer["w1"][e], layer["w3"][e],
+                            layer["w2"][e])
+            y = y + ye * cw[:, e:e + 1]
+        x = h + y
+        k_news.append(k_new)
+        v_news.append(v_new)
+    logits = final_logits(x, params["ln_f"], params["emb"], cfg.norm_eps)
+    return logits, k_news, v_news

@@ -1,0 +1,91 @@
+"""Validate the AOT artifact bundle consumed by the Rust runtime."""
+
+import hashlib
+import json
+import os
+
+import numpy as np
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_model_block(manifest):
+    m = manifest["model"]
+    assert m["n_experts"] >= 2 and m["top_k"] >= 1
+    assert m["param_count"] > 10_000_000
+    assert m["d_model"] == m["n_heads"] * m["head_dim"]
+
+
+def test_artifact_files_exist(manifest):
+    names = {a["name"] for a in manifest["artifacts"]}
+    required = {
+        "embed_decode", "embed_prefill", "attn_gate_decode",
+        "attn_gate_prefill", "expert_ffn_decode", "expert_ffn_prefill",
+        "final_logits", "decode_step_full",
+    }
+    assert required <= names
+    for a in manifest["artifacts"]:
+        path = os.path.join(ART, a["file"])
+        assert os.path.exists(path), a["file"]
+        head = open(path).read(200)
+        assert "HloModule" in head, f"{a['file']} is not HLO text"
+
+
+def test_artifact_arg_specs(manifest):
+    m = manifest["model"]
+    by_name = {a["name"]: a for a in manifest["artifacts"]}
+    ag = by_name["attn_gate_decode"]
+    assert [a["name"] for a in ag["args"][:2]] == ["x", "lens"]
+    assert ag["args"][0]["shape"] == [m["batch"], m["d_model"]]
+    assert ag["outputs"][2]["shape"] == [m["batch"], m["n_experts"]]  # cw
+    ef = by_name["expert_ffn_decode"]
+    assert ef["args"][1]["shape"] == [m["d_model"], m["d_ff"]]
+
+
+def test_weight_files_and_checksums(manifest):
+    m = manifest["model"]
+    total = 0
+    for w in manifest["weights"][:20] + manifest["weights"][-5:]:
+        path = os.path.join(ART, w["file"])
+        arr = np.fromfile(path, dtype=np.float32)
+        assert arr.size == int(np.prod(w["shape"])), w["name"]
+        assert w["sha256"] == hashlib.sha256(arr.tobytes()).hexdigest()
+    for w in manifest["weights"]:
+        total += int(np.prod(w["shape"]))
+    assert total == m["param_count"]
+
+
+def test_expert_weights_are_per_expert(manifest):
+    """Expert tensors must be exported one file per expert — the unit of
+    EP migration in the Rust HMM."""
+    m = manifest["model"]
+    names = {w["name"] for w in manifest["weights"]}
+    for li in range(m["n_layers"]):
+        for e in range(m["n_experts"]):
+            assert f"layer{li}.w1.e{e}" in names
+            assert f"layer{li}.w2.e{e}" in names
+            assert f"layer{li}.w3.e{e}" in names
+
+
+def test_golden_trace(manifest):
+    with open(os.path.join(ART, "golden.json")) as f:
+        g = json.load(f)
+    m = manifest["model"]
+    b = m["batch"]
+    assert len(g["prompt_ids"]) == b
+    assert len(g["tokens"]) == g["n_steps"]
+    assert all(len(row) == b for row in g["tokens"])
+    assert len(g["prefill_logits_row0"]) == m["vocab"]
+    assert all(0 <= t < m["vocab"] for row in g["tokens"] for t in row)

@@ -1,0 +1,150 @@
+"""L2 model invariants: composed path ≡ monolithic path, prefill/decode
+consistency, gating properties, parameter accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.config import TINY as cfg
+from compile.config import E2E
+
+jax.config.update("jax_platform_name", "cpu")
+
+PARAMS = M.init_params(cfg, seed=0)
+HD = (cfg.n_heads, cfg.head_dim)
+
+
+def _prompt(seed, b=None, p=None):
+    b = b or cfg.batch
+    p = p or cfg.prefill_len
+    key = jax.random.key(seed)
+    k1, k2 = jax.random.split(key)
+    ids = jax.random.randint(k1, (b, p), 0, cfg.vocab, jnp.int32)
+    lens = jax.random.randint(k2, (b,), 2, p + 1, jnp.int32)
+    return ids, lens
+
+
+def _pad_caches(ks, vs, b):
+    s = cfg.max_seq
+    kc = [jnp.zeros((b, s, *HD), jnp.float32).at[:, :ks[0].shape[1]].set(k)
+          for k in ks]
+    vc = [jnp.zeros((b, s, *HD), jnp.float32).at[:, :vs[0].shape[1]].set(v)
+          for v in vs]
+    return kc, vc
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_monolithic_equals_composed(seed):
+    """The Pallas-kernel decode step must equal the per-expert composed path
+    the Rust EP router executes."""
+    ids, lens = _prompt(seed)
+    _, ks, vs = M.prefill(cfg, PARAMS, ids, lens)
+    kc, vc = _pad_caches(ks, vs, cfg.batch)
+    cur = jnp.zeros((cfg.batch,), jnp.int32)
+    l1, ka, va = M.decode_step(cfg, PARAMS, cur, lens + 1, kc, vc)
+    l2, kb, vb = M.composed_decode_step(cfg, PARAMS, cur, lens + 1, kc, vc)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-4, atol=1e-4)
+    for a, b_ in zip(ka + va, kb + vb):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_decode_consistency():
+    """prefill(n tokens) + decode(token n) == prefill(n+1 tokens) logits."""
+    b, p = 2, cfg.prefill_len
+    key = jax.random.key(7)
+    full_ids = jax.random.randint(key, (b, p), 0, cfg.vocab, jnp.int32)
+    n = p - 1
+    lens_n = jnp.full((b,), n, jnp.int32)
+    # Path A: prefill the first n tokens, then decode token n.
+    _, ks, vs = M.prefill(cfg, PARAMS, full_ids.at[:, n:].set(0), lens_n)
+    kc, vc = _pad_caches(ks, vs, b)
+    logits_a, _, _ = M.decode_step(cfg, PARAMS, full_ids[:, n],
+                                   lens_n + 1, kc, vc)
+    # Path B: prefill all n+1 tokens at once.
+    logits_b, _, _ = M.prefill(cfg, PARAMS, full_ids,
+                               jnp.full((b,), n + 1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(logits_a), np.asarray(logits_b),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_prefill_padding_invariance():
+    """Tokens beyond lens must not influence the valid-token logits."""
+    ids, lens = _prompt(3, b=2)
+    lens = jnp.minimum(lens, cfg.prefill_len - 2)
+    l1, ks1, _ = M.prefill(cfg, PARAMS, ids, lens)
+    ids2 = ids.at[:, -1].set((ids[:, -1] + 17) % cfg.vocab)
+    l2, ks2, _ = M.prefill(cfg, PARAMS, ids2, lens)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gate_renormalised_topk():
+    x = jax.random.normal(jax.random.key(0), (10, cfg.d_model))
+    wg = jax.random.normal(jax.random.key(1), (cfg.d_model, cfg.n_experts))
+    cw = np.asarray(M.gate(x, wg, cfg.top_k))
+    np.testing.assert_allclose(cw.sum(1), np.ones(10), rtol=1e-5)
+    assert ((cw > 0).sum(1) == cfg.top_k).all()
+
+
+def test_rope_rotation_preserves_norm():
+    x = jax.random.normal(jax.random.key(2), (3, 4, cfg.head_dim))
+    pos = jnp.array([0, 5, 11])
+    y = M.rope(x, pos)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(x, axis=-1)),
+        np.asarray(jnp.linalg.norm(y, axis=-1)), rtol=1e-5)
+    # Position 0 is the identity rotation.
+    np.testing.assert_allclose(np.asarray(y[0]), np.asarray(x[0]),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_rmsnorm_scale_invariant():
+    x = jax.random.normal(jax.random.key(3), (4, cfg.d_model))
+    w = jnp.ones((cfg.d_model,))
+    y1 = M.rmsnorm(x, w)
+    y2 = M.rmsnorm(x * 100.0, w)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_param_count_matches_tree():
+    p = M.init_params(cfg, seed=0)
+    n = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(p))
+    assert n == cfg.param_count()
+    assert E2E.param_count() > 10_000_000  # e2e model is "real-sized"
+
+
+def test_init_deterministic():
+    a = M.init_params(cfg, seed=0)
+    b = M.init_params(cfg, seed=0)
+    c = M.init_params(cfg, seed=1)
+    for xa, xb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+    diffs = [float(jnp.abs(xa - xc).max()) > 0
+             for xa, xc in zip(jax.tree.leaves(a), jax.tree.leaves(c))
+             if xa.ndim > 1]
+    assert any(diffs)
+
+
+def test_greedy_generation_stable():
+    """Greedy decode for several steps stays finite and in-vocab."""
+    ids, lens = _prompt(11)
+    logits, ks, vs = M.prefill(cfg, PARAMS, ids, lens)
+    kc, vc = _pad_caches(ks, vs, cfg.batch)
+    cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    cur_lens = lens
+    idx = jnp.arange(cfg.batch)
+    for _ in range(5):
+        cur_lens = cur_lens + 1
+        logits, kn, vn = M.decode_step(cfg, PARAMS, cur, cur_lens, kc, vc)
+        assert bool(jnp.isfinite(logits).all())
+        for li in range(cfg.n_layers):
+            kc[li] = kc[li].at[idx, cur_lens - 1].set(kn[li])
+            vc[li] = vc[li].at[idx, cur_lens - 1].set(vn[li])
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        assert int(cur.max()) < cfg.vocab and int(cur.min()) >= 0

@@ -1,0 +1,186 @@
+//! `cargo bench --bench hotpath` — L3 hot-path microbenchmarks for the
+//! performance pass (EXPERIMENTS.md §Perf): the serving step loop, KV
+//! paging, scaling-plan computation, vpage remaps, the event queue, and the
+//! live PJRT decode step (when artifacts are built).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use elastic_moe::config::model::{dsv2_lite, e2e};
+use elastic_moe::config::ParallelConfig;
+use elastic_moe::device::{Cluster, Timings};
+use elastic_moe::engine::{
+    BatcherConfig, CostModel, CostModelBackend, PagedKv, ServeEngine,
+};
+use elastic_moe::hmm::control::{HmmControl, HmmOptions};
+use elastic_moe::sim::{EventQueue, SimClock};
+use elastic_moe::util::bench::Bench;
+use elastic_moe::workload::Request;
+
+fn par(n: usize) -> ParallelConfig {
+    ParallelConfig::standard(n / 2, 2, (0..n).collect()).unwrap()
+}
+
+fn bench_engine_steps(b: &Bench) {
+    let backend = CostModelBackend::new(
+        CostModel::new(dsv2_lite(), Timings::cloudmatrix()),
+        par(4),
+    );
+    let mut engine = ServeEngine::new(
+        BatcherConfig {
+            max_batch: 256,
+            max_prefill_tokens: 16384,
+        },
+        PagedKv::new(200_000, 16),
+        Box::new(backend),
+    );
+    let clock = SimClock::new();
+    for i in 0..256u64 {
+        engine.submit(Request::new(i, 0.0, 2000, 1_000_000));
+    }
+    // Fill the batch.
+    while engine.batcher.running_len() < 256 {
+        engine.step(&clock).unwrap();
+    }
+    let r = b.run("engine decode step (batch=256, sim backend)", || {
+        engine.step(&clock).unwrap();
+    });
+    println!(
+        "  -> {:.0} scheduled tokens/sec of coordinator overhead budget",
+        r.throughput(256.0)
+    );
+}
+
+fn bench_kv_paging(b: &Bench) {
+    let mut kv = PagedKv::new(1_000_000, 16);
+    let mut id = 0u64;
+    b.run("paged KV admit+grow+release (2600-token seq)", || {
+        id += 1;
+        kv.admit(id, 2000).unwrap();
+        for _ in 0..600 {
+            kv.append_token(id).unwrap();
+        }
+        kv.release(id);
+    });
+}
+
+fn bench_scaling_plan(b: &Bench) {
+    let cluster = Rc::new(RefCell::new(Cluster::cloudmatrix(8)));
+    let mut hmm = HmmControl::new(
+        cluster,
+        dsv2_lite(),
+        HmmOptions::default(),
+    );
+    hmm.load_initial(&par(6), 8 << 30).unwrap();
+    b.run("HMM scale plan computation 6->8 (dsv2lite, 27x64 experts)", || {
+        let plan = hmm.plan_scale(&par(8)).unwrap();
+        std::hint::black_box(plan.migrated_expert_count());
+    });
+}
+
+fn bench_vpage_remap(b: &Bench) {
+    use elastic_moe::hmm::VpageTable;
+    b.run("vpage bind+unbind 27x64 experts", || {
+        let mut t = VpageTable::new();
+        for l in 0..27 {
+            for e in 0..64 {
+                t.bind(l, e, (l * 64 + e) as u64).unwrap();
+            }
+        }
+        for l in 0..27 {
+            for e in 0..64 {
+                t.unbind(l, e).unwrap();
+            }
+        }
+    });
+}
+
+fn bench_event_queue(b: &Bench) {
+    b.run("event queue push+pop 10k", || {
+        let mut q = EventQueue::new();
+        for i in 0..10_000u64 {
+            q.push((i % 97) as f64, i);
+        }
+        while q.pop().is_some() {}
+    });
+}
+
+fn bench_pjrt_decode(b: &Bench) {
+    use elastic_moe::runtime::{Manifest, Pjrt};
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("  (skipping PJRT decode bench: artifacts not built)");
+        return;
+    }
+    let manifest = Manifest::load(dir).unwrap();
+    let rt = Pjrt::load(manifest.clone()).unwrap();
+    // Monolithic decode step with the Pallas MoE kernel on the hot path.
+    let md = &manifest.model;
+    let (bsz, s, h, dh) = (md.batch, md.max_seq, md.n_heads, md.head_dim);
+    use elastic_moe::runtime::{weights, HostTensor};
+    let mut args: Vec<HostTensor> = vec![
+        HostTensor::i32(vec![bsz], vec![1; bsz]),
+        HostTensor::i32(vec![bsz], vec![64; bsz]),
+    ];
+    for _ in 0..2 * md.n_layers {
+        args.push(HostTensor::zeros_f32(vec![bsz, s, h, dh]));
+    }
+    for w in ["emb", "ln_f"] {
+        args.push(
+            weights::load_weight(&manifest.dir, manifest.weight(w).unwrap(), true)
+                .unwrap(),
+        );
+    }
+    for li in 0..md.n_layers {
+        for t in manifest.layer_tensors.clone() {
+            if matches!(t.as_str(), "w1" | "w3" | "w2") {
+                let mut stacked = Vec::new();
+                let mut shape = Vec::new();
+                for eidx in 0..md.n_experts {
+                    let spec = manifest
+                        .weight(&format!("layer{li}.{t}.e{eidx}"))
+                        .unwrap();
+                    let w =
+                        weights::load_weight(&manifest.dir, spec, true).unwrap();
+                    if shape.is_empty() {
+                        shape = vec![md.n_experts];
+                        shape.extend_from_slice(w.shape());
+                    }
+                    stacked.extend_from_slice(w.as_f32().unwrap());
+                }
+                args.push(HostTensor::f32(shape, stacked));
+            } else {
+                let spec = manifest.weight(&format!("layer{li}.{t}")).unwrap();
+                args.push(
+                    weights::load_weight(&manifest.dir, spec, true).unwrap(),
+                );
+            }
+        }
+    }
+    let r = b.run(
+        "PJRT monolithic decode step (e2e model, Pallas MoE kernel)",
+        || {
+            let out = rt.run("decode_step_full", &args).unwrap();
+            std::hint::black_box(out.len());
+        },
+    );
+    let m = e2e();
+    let flops = m.flops_per_token() * bsz as f64;
+    println!(
+        "  -> {:.2} GFLOP/s effective ({} tokens/step)",
+        flops / r.mean_s / 1e9,
+        bsz
+    );
+}
+
+fn main() {
+    let b = Bench::from_env(3, 30);
+    println!("== L3 hot-path microbenchmarks ==");
+    bench_engine_steps(&b);
+    bench_kv_paging(&b);
+    bench_scaling_plan(&b);
+    bench_vpage_remap(&b);
+    bench_event_queue(&b);
+    let b_slow = Bench::from_env(2, 10);
+    bench_pjrt_decode(&b_slow);
+}

@@ -1,0 +1,28 @@
+//! `cargo bench --bench paper_figures` — regenerates every figure of the
+//! paper's evaluation (Figs 1, 4, 7-12) and times each regeneration.
+//! Set `BENCH_FAST=1` for a quick pass (fewer models / RPS points).
+
+use elastic_moe::experiments;
+use elastic_moe::util::bench::time_fn;
+
+fn main() {
+    let fast = std::env::var("BENCH_FAST").is_ok();
+    println!("== paper figures (fast={fast}) ==\n");
+    let figs = [
+        "fig1a", "fig1b", "fig4a", "fig4b", "fig7", "fig8", "fig9a",
+        "fig9b", "fig10", "fig11", "fig12",
+    ];
+    for id in figs {
+        let (t, report) = time_fn(|| experiments::run(id, fast));
+        match report {
+            Ok(r) => {
+                println!("{r}");
+                println!("[{id} regenerated in {t:.2}s]\n");
+            }
+            Err(e) => {
+                eprintln!("{id} FAILED: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

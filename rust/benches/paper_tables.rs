@@ -1,0 +1,24 @@
+//! `cargo bench --bench paper_tables` — regenerates the paper's Tables 1-3
+//! (ablations + during-scaling throughput) and times each regeneration.
+//! Set `BENCH_FAST=1` for a quick pass.
+
+use elastic_moe::experiments;
+use elastic_moe::util::bench::time_fn;
+
+fn main() {
+    let fast = std::env::var("BENCH_FAST").is_ok();
+    println!("== paper tables (fast={fast}) ==\n");
+    for id in ["table1", "table2", "table3"] {
+        let (t, report) = time_fn(|| experiments::run(id, fast));
+        match report {
+            Ok(r) => {
+                println!("{r}");
+                println!("[{id} regenerated in {t:.2}s]\n");
+            }
+            Err(e) => {
+                eprintln!("{id} FAILED: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+}

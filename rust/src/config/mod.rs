@@ -1,0 +1,11 @@
+//! Configuration: model architectures (the paper's three MoE LLMs as
+//! byte-accurate accounting configs + the live e2e model), parallelism
+//! layouts (DP/TP/EP), SLO targets and cluster settings.
+
+pub mod model;
+pub mod parallel;
+pub mod slo;
+
+pub use model::{ModelConfig, MODELS};
+pub use parallel::ParallelConfig;
+pub use slo::SloConfig;

@@ -1,0 +1,164 @@
+//! Parallelism layout: the (DP, TP, EP) triple and the expert placement it
+//! induces. The paper scales by adjusting DP and EP while TP stays fixed
+//! (§4.1), with the common constraint `EP = TP x DP` (§2.1).
+
+use anyhow::{bail, Result};
+
+use super::model::ModelConfig;
+use crate::device::DeviceId;
+
+/// One inference instance's parallel layout over a concrete device set.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParallelConfig {
+    pub dp: usize,
+    pub tp: usize,
+    pub ep: usize,
+    /// The devices this layout occupies, in rank order: device
+    /// `devices[d*tp + t]` is DP replica `d`, TP shard `t`.
+    pub devices: Vec<DeviceId>,
+}
+
+impl ParallelConfig {
+    /// Standard layout: `EP = TP x DP`, one EP shard per device.
+    pub fn standard(dp: usize, tp: usize, devices: Vec<DeviceId>) -> Result<Self> {
+        if dp * tp != devices.len() {
+            bail!(
+                "DP{dp} x TP{tp} needs {} devices, got {}",
+                dp * tp,
+                devices.len()
+            );
+        }
+        Ok(ParallelConfig {
+            dp,
+            tp,
+            ep: dp * tp,
+            devices,
+        })
+    }
+
+    /// Explicit-EP layout: used to model horizontally replicated instances,
+    /// where the *aggregate* device set is large but each replica confines
+    /// its experts to its own EP group (the paper's L4 inefficiency).
+    pub fn with_ep(
+        dp: usize,
+        tp: usize,
+        ep: usize,
+        devices: Vec<DeviceId>,
+    ) -> Result<Self> {
+        if dp * tp != devices.len() {
+            bail!(
+                "DP{dp} x TP{tp} needs {} devices, got {}",
+                dp * tp,
+                devices.len()
+            );
+        }
+        if ep == 0 || ep > devices.len() {
+            bail!("EP{ep} invalid for {} devices", devices.len());
+        }
+        Ok(ParallelConfig {
+            dp,
+            tp,
+            ep,
+            devices,
+        })
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Short display form, e.g. "DP3-TP2-EP6".
+    pub fn label(&self) -> String {
+        format!("DP{}-TP{}-EP{}", self.dp, self.tp, self.ep)
+    }
+
+    /// The device holding EP rank `r`.
+    pub fn ep_device(&self, r: usize) -> DeviceId {
+        self.devices[r % self.devices.len()]
+    }
+
+    /// Balanced expert placement: expert `e` of `n_experts` lives on EP rank
+    /// `e % ep` (round-robin, the paper's default before load-aware
+    /// rebalancing). Returns, per EP rank, the expert ids it owns.
+    pub fn expert_placement(&self, n_experts: usize) -> Vec<Vec<usize>> {
+        let mut owners = vec![Vec::new(); self.ep];
+        for e in 0..n_experts {
+            owners[e % self.ep].push(e);
+        }
+        owners
+    }
+
+    /// Experts per device (ceiling), for memory sizing.
+    pub fn experts_per_device(&self, n_experts: usize) -> usize {
+        n_experts.div_ceil(self.ep)
+    }
+
+    /// Validate against a model (TP must match the model's fixed TP and the
+    /// expert count must be divisible enough to be balanced).
+    pub fn check_model(&self, m: &ModelConfig) -> Result<()> {
+        if self.tp != m.tp {
+            bail!(
+                "model {} fixes TP={}, layout has TP={}",
+                m.name,
+                m.tp,
+                self.tp
+            );
+        }
+        if self.ep > m.n_experts as usize {
+            bail!(
+                "EP{} exceeds expert count {} of {}",
+                self.ep,
+                m.n_experts,
+                m.name
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::dsv2_lite;
+
+    #[test]
+    fn standard_layout() {
+        let p = ParallelConfig::standard(3, 2, (0..6).collect()).unwrap();
+        assert_eq!(p.ep, 6);
+        assert_eq!(p.label(), "DP3-TP2-EP6");
+        assert!(ParallelConfig::standard(2, 2, vec![0, 1]).is_err());
+    }
+
+    #[test]
+    fn placement_is_balanced_and_complete() {
+        let p = ParallelConfig::standard(2, 2, (0..4).collect()).unwrap();
+        let placement = p.expert_placement(64);
+        assert_eq!(placement.len(), 4);
+        let counts: Vec<usize> = placement.iter().map(|v| v.len()).collect();
+        assert!(counts.iter().all(|&c| c == 16));
+        let mut all: Vec<usize> =
+            placement.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn uneven_placement_spreads_remainder() {
+        let p = ParallelConfig::standard(3, 2, (0..6).collect()).unwrap();
+        let placement = p.expert_placement(64); // 64 over 6 ranks
+        let counts: Vec<usize> = placement.iter().map(|v| v.len()).collect();
+        assert_eq!(counts.iter().sum::<usize>(), 64);
+        assert!(counts.iter().max().unwrap() - counts.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn model_check_enforces_fixed_tp() {
+        let m = dsv2_lite();
+        let ok = ParallelConfig::standard(2, 2, (0..4).collect()).unwrap();
+        assert!(ok.check_model(&m).is_ok());
+        let bad_tp = ParallelConfig::standard(1, 4, (0..4).collect()).unwrap();
+        assert!(bad_tp.check_model(&m).is_err());
+        let bad_ep = ParallelConfig::standard(64, 2, (0..128).collect()).unwrap();
+        assert!(bad_ep.check_model(&m).is_err());
+    }
+}

@@ -1,0 +1,57 @@
+//! SLO targets: TTFT/TPOT thresholds and the attainment goal the paper's
+//! Coordinator monitors (§4.3, §7.3).
+
+/// Service-level objective for a serving deployment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloConfig {
+    /// Time-to-first-token threshold, seconds.
+    pub ttft: f64,
+    /// Time-per-output-token threshold, seconds.
+    pub tpot: f64,
+    /// Target attainment fraction (paper uses 90%).
+    pub target_attainment: f64,
+}
+
+impl SloConfig {
+    pub fn new(ttft: f64, tpot: f64) -> Self {
+        SloConfig {
+            ttft,
+            tpot,
+            target_attainment: 0.9,
+        }
+    }
+
+    /// §7.6's thresholds: TTFT <= 1000 ms, TPOT <= 1000 ms.
+    pub fn strict() -> Self {
+        SloConfig::new(1.0, 1.0)
+    }
+
+    /// §7.5 scale-up setting: TTFT <= 5 s, TPOT <= 1.5 s.
+    pub fn scale_up_demo() -> Self {
+        SloConfig::new(5.0, 1.5)
+    }
+
+    /// §7.5 scale-down setting: TTFT <= 2 s, TPOT <= 1 s.
+    pub fn scale_down_demo() -> Self {
+        SloConfig::new(2.0, 1.0)
+    }
+
+    /// Does a request with the given latencies meet the SLO?
+    pub fn met(&self, ttft: f64, tpot: f64) -> bool {
+        ttft <= self.ttft && tpot <= self.tpot
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thresholds() {
+        let slo = SloConfig::strict();
+        assert!(slo.met(0.5, 0.9));
+        assert!(!slo.met(1.5, 0.5));
+        assert!(!slo.met(0.5, 1.5));
+        assert_eq!(slo.target_attainment, 0.9);
+    }
+}

@@ -1,0 +1,149 @@
+//! SLO-aware load estimator (§4.3): tracks windowed SLO attainment and
+//! queue pressure, triggering scale-up on persistent violations and
+//! scale-down on sustained over-provisioning, with hysteresis and cooldown
+//! (the paper's antidote to "aggressive cooldown timers" is fast scaling,
+//! but the estimator still debounces).
+
+use crate::config::SloConfig;
+
+/// Autoscaling decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Up,
+    Down,
+    Hold,
+}
+
+/// Windowed SLO estimator with hysteresis.
+#[derive(Debug, Clone)]
+pub struct LoadEstimator {
+    pub slo: SloConfig,
+    /// Consecutive bad windows before scaling up.
+    pub up_patience: u32,
+    /// Consecutive comfortable windows before scaling down.
+    pub down_patience: u32,
+    /// Seconds between scaling actions.
+    pub cooldown: f64,
+    /// Occupancy (running/batch-capacity) below which down-scaling is
+    /// considered.
+    pub down_occupancy: f64,
+    bad_windows: u32,
+    good_windows: u32,
+    last_action: f64,
+}
+
+impl LoadEstimator {
+    pub fn new(slo: SloConfig) -> Self {
+        LoadEstimator {
+            slo,
+            up_patience: 2,
+            down_patience: 6,
+            cooldown: 30.0,
+            down_occupancy: 0.35,
+            bad_windows: 0,
+            good_windows: 0,
+            last_action: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Feed one window's observation. `attainment` may be NaN (no traffic).
+    pub fn observe(
+        &mut self,
+        now: f64,
+        attainment: f64,
+        occupancy: f64,
+        queue_depth: usize,
+    ) -> ScaleDecision {
+        if now - self.last_action < self.cooldown {
+            return ScaleDecision::Hold;
+        }
+        let violating = !attainment.is_nan()
+            && attainment < self.slo.target_attainment;
+        let pressured = queue_depth > 0 && attainment.is_nan();
+        if violating || pressured {
+            self.bad_windows += 1;
+            self.good_windows = 0;
+        } else if !attainment.is_nan() || queue_depth == 0 {
+            self.good_windows += 1;
+            self.bad_windows = 0;
+        }
+        if self.bad_windows >= self.up_patience {
+            self.bad_windows = 0;
+            self.good_windows = 0;
+            self.last_action = now;
+            return ScaleDecision::Up;
+        }
+        if self.good_windows >= self.down_patience
+            && occupancy < self.down_occupancy
+            && queue_depth == 0
+        {
+            self.good_windows = 0;
+            self.last_action = now;
+            return ScaleDecision::Down;
+        }
+        ScaleDecision::Hold
+    }
+
+    pub fn reset(&mut self) {
+        self.bad_windows = 0;
+        self.good_windows = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est() -> LoadEstimator {
+        let mut e = LoadEstimator::new(SloConfig::strict());
+        e.cooldown = 0.0;
+        e
+    }
+
+    #[test]
+    fn scale_up_after_persistent_violations() {
+        let mut e = est();
+        assert_eq!(e.observe(0.0, 0.5, 0.9, 10), ScaleDecision::Hold);
+        assert_eq!(e.observe(1.0, 0.6, 0.9, 10), ScaleDecision::Up);
+        // Counter reset after action.
+        assert_eq!(e.observe(2.0, 0.5, 0.9, 10), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn one_bad_window_is_not_enough() {
+        let mut e = est();
+        assert_eq!(e.observe(0.0, 0.5, 0.9, 5), ScaleDecision::Hold);
+        assert_eq!(e.observe(1.0, 0.99, 0.9, 0), ScaleDecision::Hold);
+        assert_eq!(e.observe(2.0, 0.5, 0.9, 5), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn scale_down_needs_low_occupancy_and_patience() {
+        let mut e = est();
+        for i in 0..5 {
+            assert_eq!(
+                e.observe(i as f64, 1.0, 0.2, 0),
+                ScaleDecision::Hold
+            );
+        }
+        assert_eq!(e.observe(5.0, 1.0, 0.2, 0), ScaleDecision::Down);
+        // High occupancy blocks down-scaling.
+        let mut e2 = est();
+        for i in 0..20 {
+            assert_eq!(
+                e2.observe(i as f64, 1.0, 0.8, 0),
+                ScaleDecision::Hold
+            );
+        }
+    }
+
+    #[test]
+    fn cooldown_debounces() {
+        let mut e = LoadEstimator::new(SloConfig::strict());
+        e.cooldown = 100.0;
+        e.up_patience = 1;
+        assert_eq!(e.observe(0.0, 0.1, 0.9, 10), ScaleDecision::Up);
+        assert_eq!(e.observe(10.0, 0.1, 0.9, 10), ScaleDecision::Hold);
+        assert_eq!(e.observe(150.0, 0.1, 0.9, 10), ScaleDecision::Up);
+    }
+}

@@ -1,0 +1,10 @@
+//! The Coordinator (§4.3): entry point for requests, SLO monitoring, and
+//! scaling orchestration. [`ServingSim`] is the discrete-event serving loop
+//! used by every paper experiment; [`LoadEstimator`] is the SLO-aware
+//! autoscaling trigger.
+
+pub mod estimator;
+pub mod serving;
+
+pub use estimator::{LoadEstimator, ScaleDecision};
+pub use serving::{ServingSim, SimOutput, Trigger};

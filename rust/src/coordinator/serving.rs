@@ -1,0 +1,490 @@
+//! The serving simulation loop: a Coordinator routing a request stream
+//! into the engine while a scaling method executes transitions beneath it.
+//! Drives Figs 9/10, Table 2 and the SLO experiments.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::config::{ParallelConfig, SloConfig};
+use crate::engine::{
+    BatcherConfig, CostModel, CostModelBackend, PagedKv, ServeEngine,
+};
+use crate::metrics::MetricsRecorder;
+use crate::scaling::{ScalingMethod, ScalingOutcome};
+use crate::sim::{Clock, SimClock};
+use crate::workload::{Request, RequestState};
+
+use super::estimator::{LoadEstimator, ScaleDecision};
+
+/// When scaling happens.
+pub enum Trigger {
+    /// Fire at fixed times toward fixed targets (paper §7.5/§7.6 issue the
+    /// command at a known instant).
+    Manual(Vec<(f64, ParallelConfig)>),
+    /// SLO-driven: the estimator picks the moment; `up`/`down` map the
+    /// current config to the next one (None = can't scale that way).
+    Auto {
+        estimator: LoadEstimator,
+        up: Box<dyn Fn(&ParallelConfig) -> Option<ParallelConfig>>,
+        down: Box<dyn Fn(&ParallelConfig) -> Option<ParallelConfig>>,
+    },
+}
+
+/// Output of a serving simulation.
+pub struct SimOutput {
+    pub recorder: MetricsRecorder,
+    pub scaling_events: Vec<ScalingOutcome>,
+    pub end_time: f64,
+    /// (time, n_devices) timeline of the active configuration.
+    pub device_timeline: Vec<(f64, usize)>,
+}
+
+struct PendingScale {
+    outcome: ScalingOutcome,
+    started: f64,
+}
+
+/// The coordinator-driven serving simulator.
+pub struct ServingSim {
+    pub cost: CostModel,
+    pub slo: SloConfig,
+    pub hbm_per_device: u64,
+    /// Estimator observation window (seconds).
+    pub window: f64,
+    pub max_batch: usize,
+}
+
+impl ServingSim {
+    pub fn new(cost: CostModel, slo: SloConfig) -> Self {
+        ServingSim {
+            cost,
+            slo,
+            hbm_per_device: 64 << 30,
+            window: 5.0,
+            max_batch: 256,
+        }
+    }
+
+    fn make_engine(
+        &self,
+        parallel: &ParallelConfig,
+        kv_factor: f64,
+        batch_factor: f64,
+    ) -> ServeEngine {
+        let kv_budget = (self.cost.kv_budget(parallel, self.hbm_per_device)
+            as f64
+            * kv_factor) as u64;
+        let bytes_per_token = (self.cost.model.kv_bytes_per_token()
+            / parallel.tp as u64)
+            .max(1);
+        let kv = PagedKv::from_bytes(
+            kv_budget * parallel.dp as u64,
+            bytes_per_token,
+            16,
+        );
+        let backend =
+            CostModelBackend::new(self.cost.clone(), parallel.clone());
+        let max_batch = ((self
+            .max_batch
+            .min(self.cost.max_batch(parallel, kv_budget, 2600).max(1)))
+            as f64
+            * batch_factor)
+            .max(1.0) as usize;
+        ServeEngine::new(
+            BatcherConfig {
+                max_batch,
+                max_prefill_tokens: 16384,
+            },
+            kv,
+            Box::new(backend),
+        )
+    }
+
+    /// Run the loop until `horizon` (plus drain of whatever remains, up to
+    /// `horizon * 2`).
+    pub fn run(
+        &self,
+        method: &mut dyn ScalingMethod,
+        initial: &ParallelConfig,
+        mut arrivals: Vec<Request>,
+        mut trigger: Trigger,
+        horizon: f64,
+    ) -> Result<SimOutput> {
+        let clock = SimClock::new();
+        method.boot(initial)?;
+        let kv_factor = method.steady_kv_factor();
+        let batch_factor = method.steady_batch_factor();
+        let mut engine = Some(self.make_engine(initial, kv_factor, batch_factor));
+        let mut current = initial.clone();
+        let mut recorder = MetricsRecorder::new();
+        let mut events: Vec<ScalingOutcome> = Vec::new();
+        let mut device_timeline = vec![(0.0, initial.n_devices())];
+
+        arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        let mut arrivals: VecDeque<Request> = arrivals.into();
+        let mut inbox: VecDeque<Request> = VecDeque::new();
+        let mut pending: Option<PendingScale> = None;
+        let mut next_window = self.window;
+        let hard_stop = horizon * 2.0 + 300.0;
+
+        loop {
+            let now = clock.now();
+            if now >= hard_stop {
+                break;
+            }
+
+            // 1) Deliver arrivals up to `now` into the coordinator inbox.
+            while arrivals
+                .front()
+                .map(|r| r.arrival <= now)
+                .unwrap_or(false)
+            {
+                inbox.push_back(arrivals.pop_front().unwrap());
+            }
+
+            // 2) Complete a pending scaling event.
+            if let Some(p) = &pending {
+                if now >= p.started + p.outcome.ready_after {
+                    let p = pending.take().unwrap();
+                    let new_parallel = p.outcome.new_parallel.clone();
+                    let mut fresh =
+                        self.make_engine(&new_parallel, kv_factor, batch_factor);
+                    if let Some(mut old) = engine.take() {
+                        let (running, waiting) = old.drain();
+                        for mut r in running {
+                            if p.outcome.preserves_inflight {
+                                // KV reused via zero-copy: progress kept.
+                                if fresh.kv.can_admit(r.total_tokens()) {
+                                    fresh
+                                        .kv
+                                        .admit(r.id, r.current_len())
+                                        .ok();
+                                    r.state = RequestState::Decoding;
+                                    fresh.batcher_adopt(r);
+                                    continue;
+                                }
+                            }
+                            // Restart from scratch.
+                            let fresh_req = Request::new(
+                                r.id,
+                                r.arrival,
+                                r.prompt_len,
+                                r.max_new_tokens,
+                            );
+                            fresh.submit(fresh_req);
+                        }
+                        for w in waiting {
+                            fresh.submit(w);
+                        }
+                    }
+                    engine = Some(fresh);
+                    current = new_parallel;
+                    device_timeline.push((now, current.n_devices()));
+                    events.push(p.outcome);
+                }
+            }
+
+            // 3) Downtime / intake handling.
+            let in_downtime = pending
+                .as_ref()
+                .and_then(|p| p.outcome.downtime)
+                .map(|(a, b)| {
+                    let t0 = pending.as_ref().unwrap().started;
+                    now >= t0 + a && now < t0 + b
+                })
+                .unwrap_or(false);
+            let intake_open = pending
+                .as_ref()
+                .and_then(|p| p.outcome.intake_pause)
+                .map(|(a, b)| {
+                    let t0 = pending.as_ref().unwrap().started;
+                    !(now >= t0 + a && now < t0 + b)
+                })
+                .unwrap_or(true);
+
+            // Feed the engine from the inbox when intake is open.
+            if let Some(eng) = engine.as_mut() {
+                if intake_open && !in_downtime {
+                    while let Some(r) = inbox.pop_front() {
+                        eng.submit(r);
+                    }
+                }
+            }
+
+            // 4) Estimator tick.
+            if now >= next_window {
+                next_window += self.window;
+                if let Trigger::Auto {
+                    estimator,
+                    up,
+                    down,
+                } = &mut trigger
+                {
+                    if pending.is_none() {
+                        let att = recorder.attainment_by_arrival(
+                            now - self.window,
+                            now,
+                            &self.slo,
+                        );
+                        let (occ, depth) = engine
+                            .as_ref()
+                            .map(|e| {
+                                (
+                                    e.batcher.running_len() as f64
+                                        / e.batcher.cfg.max_batch.max(1)
+                                            as f64,
+                                    e.batcher.queue_len() + inbox.len(),
+                                )
+                            })
+                            .unwrap_or((1.0, inbox.len()));
+                        let target = match estimator
+                            .observe(now, att, occ, depth)
+                        {
+                            ScaleDecision::Up => up(&current),
+                            ScaleDecision::Down => down(&current),
+                            ScaleDecision::Hold => None,
+                        };
+                        if let Some(target) = target {
+                            let outcome = method.scale(&target)?;
+                            self.begin_transition(
+                                &outcome,
+                                engine.as_mut(),
+                                now,
+                            );
+                            pending = Some(PendingScale {
+                                outcome,
+                                started: now,
+                            });
+                        }
+                    }
+                }
+            }
+            if let Trigger::Manual(list) = &mut trigger {
+                if pending.is_none() {
+                    if let Some((t, _)) = list.first() {
+                        if now >= *t {
+                            let (_, target) = list.remove(0);
+                            let outcome = method.scale(&target)?;
+                            self.begin_transition(
+                                &outcome,
+                                engine.as_mut(),
+                                now,
+                            );
+                            pending = Some(PendingScale {
+                                outcome,
+                                started: now,
+                            });
+                        }
+                    }
+                }
+            }
+
+            // 5) Step the engine (unless downtime).
+            let stepped = if in_downtime {
+                false
+            } else if let Some(eng) = engine.as_mut() {
+                if eng.has_work() {
+                    let out = eng.step(&clock)?;
+                    for r in out.finished {
+                        recorder.record(&r);
+                    }
+                    // An Idle step (e.g. intake paused with only queued
+                    // work) advances nothing: fall through to the event
+                    // jump below or the loop would spin at a frozen clock.
+                    !matches!(out.kind, crate::engine::StepKind::Idle)
+                } else {
+                    false
+                }
+            } else {
+                false
+            };
+
+            // 6) Idle: advance to the next event.
+            if !stepped {
+                let mut next = f64::INFINITY;
+                if let Some(r) = arrivals.front() {
+                    next = next.min(r.arrival);
+                }
+                if let Some(p) = &pending {
+                    next = next.min(p.started + p.outcome.ready_after);
+                    if let Some((_, b)) = p.outcome.downtime {
+                        next = next.min(p.started + b);
+                    }
+                }
+                if !inbox.is_empty() && engine.is_some() {
+                    // Inbox blocked by intake pause: wake at pause end.
+                    if let Some(p) = &pending {
+                        if let Some((_, b)) = p.outcome.intake_pause {
+                            next = next.min(p.started + b);
+                        }
+                    }
+                }
+                // All drained: stop regardless of the horizon (offline
+                // runs use an effectively infinite horizon).
+                if arrivals.is_empty()
+                    && inbox.is_empty()
+                    && engine
+                        .as_ref()
+                        .map(|e| !e.has_work())
+                        .unwrap_or(true)
+                    && pending.is_none()
+                {
+                    break;
+                }
+                next = next.min(next_window);
+                if next.is_infinite() {
+                    break; // nothing left anywhere
+                }
+                clock.advance_to(next + 1e-9);
+            }
+        }
+
+        Ok(SimOutput {
+            recorder,
+            scaling_events: events,
+            end_time: clock.now(),
+            device_timeline,
+        })
+    }
+
+    fn begin_transition(
+        &self,
+        outcome: &ScalingOutcome,
+        engine: Option<&mut ServeEngine>,
+        now: f64,
+    ) {
+        if let Some(eng) = engine {
+            if outcome.intake_pause.is_some() {
+                eng.batcher.pause_intake();
+            }
+            if outcome.transition_derate < 1.0 {
+                eng.backend.set_derate(outcome.transition_derate);
+            }
+            if outcome.downtime.is_some() {
+                // Cold restart: the instance dies now; in-flight work is
+                // requeued at switchover (progress lost).
+                let _ = now;
+            }
+        }
+    }
+}
+
+impl ServeEngine {
+    /// Adopt a request that keeps its decode progress (zero-copy KV reuse
+    /// across switchover). KV must already be admitted by the caller.
+    pub fn batcher_adopt(&mut self, r: Request) {
+        self.batcher.adopt_running(r);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    use crate::config::model::dsv2_lite;
+    use crate::device::{Cluster, Timings};
+    use crate::hmm::control::{HmmControl, HmmOptions};
+    use crate::imm::manager::{ImmOptions, InstanceManager};
+    use crate::scaling::{ColdRestart, ElasticMoE};
+    use crate::workload::{RateProfile, WorkloadGen, WorkloadSpec};
+
+    fn par(n: usize) -> ParallelConfig {
+        ParallelConfig::standard(n / 2, 2, (0..n).collect()).unwrap()
+    }
+
+    fn sim() -> ServingSim {
+        ServingSim::new(
+            CostModel::new(dsv2_lite(), Timings::cloudmatrix()),
+            SloConfig::new(5.0, 1.5),
+        )
+    }
+
+    fn elastic(n: usize) -> ElasticMoE {
+        let cluster = Rc::new(RefCell::new(Cluster::cloudmatrix(n)));
+        ElasticMoE::new(
+            HmmControl::new(cluster, dsv2_lite(), HmmOptions::default()),
+            InstanceManager::new(ImmOptions::default(), Timings::cloudmatrix()),
+            8 << 30,
+        )
+    }
+
+    fn workload(rps: f64, horizon: f64) -> Vec<Request> {
+        let mut g = WorkloadGen::new(WorkloadSpec {
+            prompt_len: 2000,
+            decode_min: 100,
+            decode_max: 150,
+            profile: RateProfile::Fixed(rps),
+            seed: 5,
+        });
+        g.arrivals_until(horizon)
+    }
+
+    #[test]
+    fn steady_serving_completes_requests() {
+        let s = sim();
+        let mut m = elastic(4);
+        let out = s
+            .run(&mut m, &par(4), workload(1.0, 60.0), Trigger::Manual(vec![]), 60.0)
+            .unwrap();
+        assert!(out.recorder.count() > 30, "{}", out.recorder.count());
+        let w = out.recorder.window(0.0, out.end_time, &s.slo);
+        assert!(w.slo_attainment > 0.9, "{}", w.slo_attainment);
+        assert!(out.scaling_events.is_empty());
+    }
+
+    #[test]
+    fn manual_scale_up_mid_run_no_downtime() {
+        let s = sim();
+        let mut m = elastic(6);
+        let out = s
+            .run(
+                &mut m,
+                &par(4),
+                workload(2.0, 120.0),
+                Trigger::Manual(vec![(30.0, par(6))]),
+                120.0,
+            )
+            .unwrap();
+        assert_eq!(out.scaling_events.len(), 1);
+        assert_eq!(out.scaling_events[0].metrics.downtime, 0.0);
+        assert_eq!(out.device_timeline.last().unwrap().1, 6);
+        // Every request eventually finishes.
+        let total_arrived = workload(2.0, 120.0).len();
+        assert_eq!(out.recorder.count(), total_arrived);
+    }
+
+    #[test]
+    fn cold_restart_shows_downtime_gap() {
+        let s = sim();
+        let cluster = Rc::new(RefCell::new(Cluster::cloudmatrix(6)));
+        let mut m = ColdRestart::new(cluster, dsv2_lite(), 8 << 30);
+        let out = s
+            .run(
+                &mut m,
+                &par(4),
+                workload(2.0, 120.0),
+                Trigger::Manual(vec![(30.0, par(6))]),
+                120.0,
+            )
+            .unwrap();
+        assert_eq!(out.scaling_events.len(), 1);
+        let ev = &out.scaling_events[0];
+        assert!(ev.metrics.downtime > 10.0, "{}", ev.metrics.downtime);
+        // Requests arriving during downtime suffer: attainment in the
+        // post-command window is worse than steady state.
+        let before =
+            out.recorder.attainment_by_arrival(0.0, 30.0, &s.slo);
+        let during = out.recorder.attainment_by_arrival(
+            30.0,
+            30.0 + ev.ready_after,
+            &s.slo,
+        );
+        assert!(
+            during < before,
+            "during {during} should be worse than before {before}"
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! The simulated supernode: a set of NPUs plus the shared fabric, disk and
+//! IPC registry. One `Cluster` underlies a whole experiment; scaling methods
+//! acquire/release device subsets from it.
+
+use anyhow::{bail, Result};
+
+use super::disk::Disk;
+use super::interconnect::Interconnect;
+use super::ipc::IpcRegistry;
+use super::npu::Npu;
+use super::timings::Timings;
+use super::DeviceId;
+
+/// Simulated CloudMatrix-style cluster.
+#[derive(Debug)]
+pub struct Cluster {
+    pub devices: Vec<Npu>,
+    pub interconnect: Interconnect,
+    pub disk: Disk,
+    pub ipc: IpcRegistry,
+    pub timings: Timings,
+}
+
+impl Cluster {
+    /// Build a cluster of `n` devices with `hbm_gb` each (910C: 64 GB) and
+    /// 2 MB physical pages (the ACL virtual-memory granule).
+    pub fn new(n: usize, hbm_gb: u64, timings: Timings) -> Self {
+        let devices = (0..n)
+            .map(|i| Npu::new(i, hbm_gb << 30, 2 << 20))
+            .collect();
+        Cluster {
+            devices,
+            interconnect: Interconnect::new(timings.clone()),
+            disk: Disk::new(timings.clone()),
+            ipc: IpcRegistry::new(),
+            timings,
+        }
+    }
+
+    /// CloudMatrix384 defaults: 64 GB HBM per device.
+    pub fn cloudmatrix(n: usize) -> Self {
+        Cluster::new(n, 64, Timings::cloudmatrix())
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn device(&self, id: DeviceId) -> &Npu {
+        &self.devices[id]
+    }
+    pub fn device_mut(&mut self, id: DeviceId) -> &mut Npu {
+        &mut self.devices[id]
+    }
+
+    /// Grow the cluster (the `add-nodes` primitive, Appendix D.6). Returns
+    /// the new device ids and the control-plane time charged (HCCL teardown
+    /// + re-init over the enlarged world).
+    pub fn add_devices(&mut self, count: usize) -> (Vec<DeviceId>, f64) {
+        let start = self.devices.len();
+        let hbm = self
+            .devices
+            .first()
+            .map(|d| d.hbm.capacity())
+            .unwrap_or(64 << 30);
+        for i in 0..count {
+            self.devices.push(Npu::new(start + i, hbm, 2 << 20));
+        }
+        let t = self.timings.comm_init(self.devices.len());
+        ((start..start + count).collect(), t)
+    }
+
+    /// Aggregate used bytes over a device subset (the paper's "peak memory
+    /// across all involved NPUs" denominator).
+    pub fn used_over(&self, ids: &[DeviceId]) -> u64 {
+        ids.iter().map(|&i| self.devices[i].hbm.used()).sum()
+    }
+
+    /// Aggregate peak bytes over a device subset.
+    pub fn peak_over(&self, ids: &[DeviceId]) -> u64 {
+        ids.iter().map(|&i| self.devices[i].hbm.peak()).sum()
+    }
+
+    /// Reset peak watermarks (start of a scaling-event measurement).
+    pub fn reset_peaks(&mut self, ids: &[DeviceId]) {
+        for &i in ids {
+            self.devices[i].hbm.reset_peak();
+        }
+    }
+
+    /// Validate that a device-id set exists and is disjoint-free.
+    pub fn validate_ids(&self, ids: &[DeviceId]) -> Result<()> {
+        let mut seen = vec![false; self.devices.len()];
+        for &i in ids {
+            if i >= self.devices.len() {
+                bail!("device {i} out of range ({} devices)", self.devices.len());
+            }
+            if seen[i] {
+                bail!("device {i} listed twice");
+            }
+            seen[i] = true;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::hbm::RegionKind;
+
+    #[test]
+    fn construction_and_aggregates() {
+        let mut c = Cluster::cloudmatrix(4);
+        assert_eq!(c.len(), 4);
+        c.device_mut(1)
+            .hbm
+            .alloc(10 << 30, RegionKind::AttnWeights, true, "w")
+            .unwrap();
+        c.device_mut(2)
+            .hbm
+            .alloc(5 << 30, RegionKind::KvCache, true, "kv")
+            .unwrap();
+        assert_eq!(c.used_over(&[0, 1, 2, 3]), 15 << 30);
+        assert_eq!(c.used_over(&[1]), 10 << 30);
+        assert!(c.peak_over(&[1, 2]) >= 15 << 30);
+    }
+
+    #[test]
+    fn add_devices_charges_comm_reinit() {
+        let mut c = Cluster::cloudmatrix(4);
+        let (ids, t) = c.add_devices(2);
+        assert_eq!(ids, vec![4, 5]);
+        assert_eq!(c.len(), 6);
+        assert!(t >= c.timings.comm_init(6) - 1e-9);
+    }
+
+    #[test]
+    fn id_validation() {
+        let c = Cluster::cloudmatrix(2);
+        assert!(c.validate_ids(&[0, 1]).is_ok());
+        assert!(c.validate_ids(&[0, 0]).is_err());
+        assert!(c.validate_ids(&[2]).is_err());
+    }
+}

@@ -1,0 +1,68 @@
+//! Shared-storage model: the NVMe/NFS weight store that cold boots read
+//! from. Tracks per-tensor read dedup (the `disk_copy` primitive loads each
+//! tensor at most once — Appendix D.2).
+
+use std::collections::HashSet;
+
+use super::timings::Timings;
+
+/// The weight store and its bandwidth model.
+#[derive(Debug, Clone)]
+pub struct Disk {
+    timings: Timings,
+    reads_seen: HashSet<String>,
+    pub total_bytes_read: u64,
+    pub deduped_bytes: u64,
+}
+
+impl Disk {
+    pub fn new(timings: Timings) -> Self {
+        Disk {
+            timings,
+            reads_seen: HashSet::new(),
+            total_bytes_read: 0,
+            deduped_bytes: 0,
+        }
+    }
+
+    /// Time to read `bytes` (no dedup bookkeeping).
+    pub fn read_time(&self, bytes: u64) -> f64 {
+        self.timings.disk_load(bytes)
+    }
+
+    /// Deduplicated read: the first read of `tensor_tag` costs disk time,
+    /// repeats are free (served from the already-loaded copy via P2P by the
+    /// caller). Returns the time charged.
+    pub fn read_dedup(&mut self, tensor_tag: &str, bytes: u64) -> f64 {
+        if self.reads_seen.insert(tensor_tag.to_string()) {
+            self.total_bytes_read += bytes;
+            self.read_time(bytes)
+        } else {
+            self.deduped_bytes += bytes;
+            0.0
+        }
+    }
+
+    /// Forget dedup history (e.g. a fresh cold boot with no warm source).
+    pub fn reset_dedup(&mut self) {
+        self.reads_seen.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_charges_once() {
+        let mut d = Disk::new(Timings::cloudmatrix());
+        let t1 = d.read_dedup("layer0.wq", 1 << 30);
+        assert!(t1 > 0.0);
+        let t2 = d.read_dedup("layer0.wq", 1 << 30);
+        assert_eq!(t2, 0.0);
+        assert_eq!(d.total_bytes_read, 1 << 30);
+        assert_eq!(d.deduped_bytes, 1 << 30);
+        d.reset_dedup();
+        assert!(d.read_dedup("layer0.wq", 1 << 30) > 0.0);
+    }
+}

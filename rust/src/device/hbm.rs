@@ -1,0 +1,248 @@
+//! Per-device HBM accounting: a page-granular allocator with region
+//! refcounts (zero-copy shares), kind tagging, and peak-watermark tracking.
+//!
+//! This is the data structure behind every peak-memory number in the paper's
+//! tables: regions are allocated/shared/freed by the HMM primitives and the
+//! scaling baselines, and `peak()` reports the high-water mark.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Identifier of an allocated HBM region (unique per device).
+pub type RegionId = u64;
+
+/// What a region holds — used for per-kind accounting (Fig 4b splits weight
+/// memory from KV).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RegionKind {
+    AttnWeights,
+    ExpertWeights,
+    KvCache,
+    Activations,
+    Scratch,
+}
+
+#[derive(Debug, Clone)]
+pub struct Region {
+    pub id: RegionId,
+    pub bytes: u64,
+    pub kind: RegionKind,
+    /// Allocated via the IPC-safe allocator (sharable across processes).
+    pub ipc_safe: bool,
+    /// Number of instance handles referencing this region (zero-copy).
+    pub refcount: u32,
+    /// Owning logical tag, e.g. "layer3.w1.e5" — used by tests/debugging.
+    pub tag: String,
+}
+
+/// One device's HBM.
+#[derive(Debug, Clone)]
+pub struct Hbm {
+    capacity: u64,
+    page_size: u64,
+    used: u64,
+    peak: u64,
+    next_id: RegionId,
+    regions: BTreeMap<RegionId, Region>,
+}
+
+impl Hbm {
+    pub fn new(capacity: u64, page_size: u64) -> Self {
+        assert!(page_size > 0);
+        Hbm {
+            capacity,
+            page_size,
+            used: 0,
+            peak: 0,
+            next_id: 1,
+            regions: BTreeMap::new(),
+        }
+    }
+
+    /// Round a byte count up to whole pages.
+    pub fn page_round(&self, bytes: u64) -> u64 {
+        bytes.div_ceil(self.page_size) * self.page_size
+    }
+
+    /// Allocate a region; fails on OOM (the paper's colocated baseline must
+    /// actually be able to OOM).
+    pub fn alloc(
+        &mut self,
+        bytes: u64,
+        kind: RegionKind,
+        ipc_safe: bool,
+        tag: impl Into<String>,
+    ) -> Result<RegionId> {
+        let rounded = self.page_round(bytes);
+        if self.used + rounded > self.capacity {
+            bail!(
+                "HBM OOM: need {} + {} > capacity {}",
+                self.used,
+                rounded,
+                self.capacity
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.used += rounded;
+        self.peak = self.peak.max(self.used);
+        self.regions.insert(
+            id,
+            Region {
+                id,
+                bytes: rounded,
+                kind,
+                ipc_safe,
+                refcount: 1,
+                tag: tag.into(),
+            },
+        );
+        Ok(id)
+    }
+
+    /// Add a zero-copy reference to an existing region. Only IPC-safe
+    /// regions can be shared across processes.
+    pub fn share(&mut self, id: RegionId) -> Result<()> {
+        let r = self
+            .regions
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("no such region {id}"))?;
+        if !r.ipc_safe {
+            bail!("region {id} ({}) is not IPC-safe", r.tag);
+        }
+        r.refcount += 1;
+        Ok(())
+    }
+
+    /// Drop one reference; the region is freed when the count reaches zero.
+    pub fn release(&mut self, id: RegionId) -> Result<()> {
+        let r = self
+            .regions
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("no such region {id}"))?;
+        r.refcount -= 1;
+        if r.refcount == 0 {
+            let bytes = r.bytes;
+            self.regions.remove(&id);
+            self.used -= bytes;
+        }
+        Ok(())
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+    pub fn free_bytes(&self) -> u64 {
+        self.capacity - self.used
+    }
+    pub fn region(&self, id: RegionId) -> Option<&Region> {
+        self.regions.get(&id)
+    }
+    pub fn region_count(&self) -> usize {
+        self.regions.len()
+    }
+
+    /// Reset the peak watermark to current usage (start of a measurement).
+    pub fn reset_peak(&mut self) {
+        self.peak = self.used;
+    }
+
+    /// Total bytes of a given kind currently resident.
+    pub fn used_by_kind(&self, kind: RegionKind) -> u64 {
+        self.regions
+            .values()
+            .filter(|r| r.kind == kind)
+            .map(|r| r.bytes)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hbm() -> Hbm {
+        Hbm::new(1 << 30, 2 << 20) // 1 GB, 2 MB pages
+    }
+
+    #[test]
+    fn alloc_free_accounting() {
+        let mut h = hbm();
+        let a = h
+            .alloc(3 << 20, RegionKind::AttnWeights, true, "a")
+            .unwrap();
+        assert_eq!(h.used(), 4 << 20); // rounded to 2 pages
+        let b = h.alloc(1, RegionKind::KvCache, true, "b").unwrap();
+        assert_eq!(h.used(), 6 << 20);
+        assert_eq!(h.peak(), 6 << 20);
+        h.release(a).unwrap();
+        assert_eq!(h.used(), 2 << 20);
+        assert_eq!(h.peak(), 6 << 20); // watermark survives frees
+        h.release(b).unwrap();
+        assert_eq!(h.used(), 0);
+        assert_eq!(h.region_count(), 0);
+    }
+
+    #[test]
+    fn oom_is_an_error() {
+        let mut h = hbm();
+        h.alloc(900 << 20, RegionKind::ExpertWeights, true, "big")
+            .unwrap();
+        assert!(h
+            .alloc(200 << 20, RegionKind::KvCache, true, "kv")
+            .is_err());
+        // Accounting unchanged after failed alloc.
+        assert_eq!(h.used(), h.page_round(900 << 20));
+    }
+
+    #[test]
+    fn zero_copy_share_counts_once() {
+        let mut h = hbm();
+        let w = h
+            .alloc(100 << 20, RegionKind::AttnWeights, true, "w")
+            .unwrap();
+        let before = h.used();
+        h.share(w).unwrap(); // second instance attaches
+        assert_eq!(h.used(), before, "zero-copy must not grow usage");
+        h.release(w).unwrap(); // old instance detaches
+        assert_eq!(h.used(), before, "still referenced by new instance");
+        h.release(w).unwrap();
+        assert_eq!(h.used(), 0);
+    }
+
+    #[test]
+    fn non_ipc_regions_cannot_be_shared() {
+        let mut h = hbm();
+        let w = h
+            .alloc(1 << 20, RegionKind::AttnWeights, false, "w")
+            .unwrap();
+        assert!(h.share(w).is_err());
+    }
+
+    #[test]
+    fn kind_accounting() {
+        let mut h = hbm();
+        h.alloc(10 << 20, RegionKind::ExpertWeights, true, "e").unwrap();
+        h.alloc(20 << 20, RegionKind::KvCache, true, "kv").unwrap();
+        assert_eq!(h.used_by_kind(RegionKind::ExpertWeights), 10 << 20);
+        assert_eq!(h.used_by_kind(RegionKind::KvCache), 20 << 20);
+        assert_eq!(h.used_by_kind(RegionKind::Scratch), 0);
+    }
+
+    #[test]
+    fn reset_peak() {
+        let mut h = hbm();
+        let a = h.alloc(500 << 20, RegionKind::Scratch, true, "s").unwrap();
+        h.release(a).unwrap();
+        assert_eq!(h.peak(), h.page_round(500 << 20));
+        h.reset_peak();
+        assert_eq!(h.peak(), 0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Unified-Bus fabric model: all-to-all, near-uniform point-to-point
+//! bandwidth (CloudMatrix384's defining property), with per-device
+//! serialization of concurrent incoming transfers.
+
+use super::timings::Timings;
+use super::DeviceId;
+
+/// Bandwidth/latency model of the UB fabric.
+#[derive(Debug, Clone)]
+pub struct Interconnect {
+    timings: Timings,
+}
+
+impl Interconnect {
+    pub fn new(timings: Timings) -> Self {
+        Interconnect { timings }
+    }
+
+    /// Time for a single point-to-point transfer.
+    pub fn p2p_time(&self, bytes: u64) -> f64 {
+        self.timings.p2p(bytes)
+    }
+
+    /// Completion time of a set of transfers `(src, dst, bytes)` started
+    /// simultaneously: transfers sharing an endpoint serialize on that
+    /// endpoint's link; disjoint pairs run fully in parallel (non-blocking
+    /// all-to-all fabric).
+    pub fn parallel_transfers(
+        &self,
+        transfers: &[(DeviceId, DeviceId, u64)],
+    ) -> f64 {
+        if transfers.is_empty() {
+            return 0.0;
+        }
+        let max_dev = transfers
+            .iter()
+            .map(|&(s, d, _)| s.max(d))
+            .max()
+            .unwrap();
+        // Per-endpoint accumulated busy time.
+        let mut busy = vec![0.0f64; max_dev + 1];
+        for &(src, dst, bytes) in transfers {
+            let t = self.p2p_time(bytes);
+            busy[src] += t;
+            busy[dst] += t;
+        }
+        busy.into_iter().fold(0.0, f64::max)
+    }
+
+    /// One-to-many broadcast of `bytes` to `n_dst` receivers (tree-based:
+    /// log2 rounds over the non-blocking fabric).
+    pub fn broadcast_time(&self, bytes: u64, n_dst: usize) -> f64 {
+        if n_dst == 0 {
+            return 0.0;
+        }
+        let rounds = (n_dst as f64 + 1.0).log2().ceil();
+        self.p2p_time(bytes) * rounds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ic() -> Interconnect {
+        Interconnect::new(Timings::cloudmatrix())
+    }
+
+    #[test]
+    fn disjoint_transfers_parallelize() {
+        let ic = ic();
+        let one = ic.parallel_transfers(&[(0, 4, 1 << 30)]);
+        let disjoint =
+            ic.parallel_transfers(&[(0, 4, 1 << 30), (1, 5, 1 << 30)]);
+        assert!((disjoint - one).abs() < 1e-9, "{disjoint} vs {one}");
+    }
+
+    #[test]
+    fn shared_endpoint_serializes() {
+        let ic = ic();
+        let one = ic.parallel_transfers(&[(0, 4, 1 << 30)]);
+        let fanout =
+            ic.parallel_transfers(&[(0, 4, 1 << 30), (0, 5, 1 << 30)]);
+        assert!(fanout > one * 1.9, "{fanout} vs {one}");
+    }
+
+    #[test]
+    fn broadcast_is_logarithmic() {
+        let ic = ic();
+        let b2 = ic.broadcast_time(1 << 30, 1);
+        let b8 = ic.broadcast_time(1 << 30, 7);
+        assert!(b8 <= b2 * 3.0 + 1e-9);
+        assert!(ic.broadcast_time(1 << 30, 0) == 0.0);
+    }
+}

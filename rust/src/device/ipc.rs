@@ -1,0 +1,147 @@
+//! Ascend-IPC analogue: cross-process memory-handle registry.
+//!
+//! Models `rtIpcSetMemoryName` (export), `rtSetIpcMemPid` (whitelist) and
+//! `rtIpcOpenMemory` (import) — the control plane of the paper's zero-copy
+//! primitive (Appendix D.4). The actual refcount lives in [`super::hbm`];
+//! this registry enforces the export/whitelist/open protocol.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::hbm::RegionId;
+use super::DeviceId;
+
+/// Logical process (inference instance / HMM daemon) identifier.
+pub type ProcId = u32;
+
+/// An exported memory handle.
+#[derive(Debug, Clone)]
+pub struct IpcHandle {
+    pub name: String,
+    pub device: DeviceId,
+    pub region: RegionId,
+    pub owner: ProcId,
+    whitelist: Vec<ProcId>,
+    pub open_count: u32,
+}
+
+/// Cluster-wide IPC handle registry (one per simulated node group).
+#[derive(Debug, Default)]
+pub struct IpcRegistry {
+    handles: HashMap<String, IpcHandle>,
+}
+
+impl IpcRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `rtIpcSetMemoryName`: publish a region under a name.
+    pub fn export(
+        &mut self,
+        name: impl Into<String>,
+        device: DeviceId,
+        region: RegionId,
+        owner: ProcId,
+    ) -> Result<()> {
+        let name = name.into();
+        if self.handles.contains_key(&name) {
+            bail!("IPC name '{name}' already exported");
+        }
+        self.handles.insert(
+            name.clone(),
+            IpcHandle {
+                name,
+                device,
+                region,
+                owner,
+                whitelist: Vec::new(),
+                open_count: 0,
+            },
+        );
+        Ok(())
+    }
+
+    /// `rtSetIpcMemPid`: allow `pid` to open the handle.
+    pub fn whitelist(&mut self, name: &str, pid: ProcId) -> Result<()> {
+        let h = self
+            .handles
+            .get_mut(name)
+            .ok_or_else(|| anyhow::anyhow!("no IPC handle '{name}'"))?;
+        if !h.whitelist.contains(&pid) {
+            h.whitelist.push(pid);
+        }
+        Ok(())
+    }
+
+    /// `rtIpcOpenMemory`: import the region into `pid`. Returns
+    /// (device, region) for the caller to `share()` in the device's HBM.
+    pub fn open(
+        &mut self,
+        name: &str,
+        pid: ProcId,
+    ) -> Result<(DeviceId, RegionId)> {
+        let h = self
+            .handles
+            .get_mut(name)
+            .ok_or_else(|| anyhow::anyhow!("no IPC handle '{name}'"))?;
+        if h.owner != pid && !h.whitelist.contains(&pid) {
+            bail!("process {pid} not whitelisted for IPC handle '{name}'");
+        }
+        h.open_count += 1;
+        Ok((h.device, h.region))
+    }
+
+    /// Unpublish a handle (owner teardown).
+    pub fn unexport(&mut self, name: &str) -> Result<IpcHandle> {
+        self.handles
+            .remove(name)
+            .ok_or_else(|| anyhow::anyhow!("no IPC handle '{name}'"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.handles.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.handles.is_empty()
+    }
+    pub fn get(&self, name: &str) -> Option<&IpcHandle> {
+        self.handles.get(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn export_whitelist_open_protocol() {
+        let mut reg = IpcRegistry::new();
+        reg.export("w:dev0:layer0.wq", 0, 7, 100).unwrap();
+        // Not whitelisted yet.
+        assert!(reg.open("w:dev0:layer0.wq", 200).is_err());
+        reg.whitelist("w:dev0:layer0.wq", 200).unwrap();
+        let (dev, region) = reg.open("w:dev0:layer0.wq", 200).unwrap();
+        assert_eq!((dev, region), (0, 7));
+        // Owner can always open.
+        reg.open("w:dev0:layer0.wq", 100).unwrap();
+        assert_eq!(reg.get("w:dev0:layer0.wq").unwrap().open_count, 2);
+    }
+
+    #[test]
+    fn duplicate_export_rejected() {
+        let mut reg = IpcRegistry::new();
+        reg.export("x", 0, 1, 1).unwrap();
+        assert!(reg.export("x", 0, 2, 1).is_err());
+        reg.unexport("x").unwrap();
+        reg.export("x", 0, 2, 1).unwrap();
+    }
+
+    #[test]
+    fn open_unknown_fails() {
+        let mut reg = IpcRegistry::new();
+        assert!(reg.open("nope", 1).is_err());
+        assert!(reg.unexport("nope").is_err());
+    }
+}

@@ -1,0 +1,26 @@
+//! Simulated NPU cluster: the Ascend CloudMatrix384 substrate the paper runs
+//! on, reproduced as a byte-accurate memory/interconnect/disk model
+//! (DESIGN.md §1 documents the substitution argument).
+//!
+//! The simulator tracks *exactly the quantities the paper's metrics are made
+//! of*: bytes resident per device (peak memory), bytes moved over which link
+//! (scaling latency), and allocation lifetimes (downtime windows).
+
+pub mod cluster;
+pub mod disk;
+pub mod hbm;
+pub mod interconnect;
+pub mod ipc;
+pub mod npu;
+pub mod timings;
+
+pub use cluster::Cluster;
+pub use disk::Disk;
+pub use hbm::{Hbm, RegionId, RegionKind};
+pub use interconnect::Interconnect;
+pub use ipc::IpcRegistry;
+pub use npu::Npu;
+pub use timings::Timings;
+
+/// Device identifier within a cluster.
+pub type DeviceId = usize;

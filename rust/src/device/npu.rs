@@ -1,0 +1,34 @@
+//! One simulated NPU: HBM + identity. Compute/communication timing lives in
+//! [`super::timings`]; data-plane payloads live in the HMM's weight store.
+
+use super::hbm::Hbm;
+use super::DeviceId;
+
+/// A simulated Ascend-class accelerator.
+#[derive(Debug, Clone)]
+pub struct Npu {
+    pub id: DeviceId,
+    pub hbm: Hbm,
+}
+
+impl Npu {
+    pub fn new(id: DeviceId, hbm_capacity: u64, page_size: u64) -> Self {
+        Npu {
+            id,
+            hbm: Hbm::new(hbm_capacity, page_size),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction() {
+        let n = Npu::new(3, 64 << 30, 2 << 20);
+        assert_eq!(n.id, 3);
+        assert_eq!(n.hbm.capacity(), 64 << 30);
+        assert_eq!(n.hbm.used(), 0);
+    }
+}

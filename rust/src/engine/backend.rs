@@ -1,0 +1,157 @@
+//! Execution backends: the engine is generic over *what executes a step* —
+//! the roofline cost model (simulation experiments) or real PJRT forward
+//! passes (end-to-end example). Both advance the same batcher/KV/metrics
+//! machinery, so every experiment exercises the production control path.
+
+use anyhow::Result;
+
+use crate::config::ParallelConfig;
+use crate::workload::{Request, RequestState};
+
+use super::cost_model::CostModel;
+
+/// What kind of step was executed (telemetry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepKind {
+    Prefill,
+    Decode,
+    Idle,
+}
+
+/// A step executor.
+pub trait ExecBackend {
+    /// Run prefill over the requests currently in `Prefilling` state within
+    /// `running`; returns elapsed seconds. Real backends also compute the
+    /// first token for each prefilled request (`output_ids`).
+    fn prefill(&mut self, running: &mut [Request]) -> Result<f64>;
+
+    /// Run one decode iteration over all `Decoding` requests; returns
+    /// elapsed seconds. Real backends append one token per request.
+    fn decode(&mut self, running: &mut [Request]) -> Result<f64>;
+
+    /// The parallel layout this backend executes under.
+    fn parallel(&self) -> &ParallelConfig;
+
+    /// Throughput derating during scaling transitions (colocated baseline
+    /// runs with reduced KV; see `set_derate`). 1.0 = full speed.
+    fn set_derate(&mut self, factor: f64);
+
+    /// Downcast hook (the live path rebinds a [`super::pjrt::PjrtBackend`]
+    /// after scaling).
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any;
+}
+
+/// Simulation backend: charges roofline-model time, produces no tokens.
+#[derive(Debug, Clone)]
+pub struct CostModelBackend {
+    pub cost: CostModel,
+    pub parallel: ParallelConfig,
+    derate: f64,
+}
+
+impl CostModelBackend {
+    pub fn new(cost: CostModel, parallel: ParallelConfig) -> Self {
+        CostModelBackend {
+            cost,
+            parallel,
+            derate: 1.0,
+        }
+    }
+}
+
+impl ExecBackend for CostModelBackend {
+    fn prefill(&mut self, running: &mut [Request]) -> Result<f64> {
+        let tokens: usize = running
+            .iter()
+            .filter(|r| r.state == RequestState::Prefilling)
+            .map(|r| r.prompt_len)
+            .sum();
+        if tokens == 0 {
+            return Ok(0.0);
+        }
+        Ok(self.cost.prefill_time(&self.parallel, tokens) / self.derate)
+    }
+
+    fn decode(&mut self, running: &mut [Request]) -> Result<f64> {
+        let batch = running
+            .iter()
+            .filter(|r| r.state == RequestState::Decoding)
+            .count();
+        Ok(self.cost.decode_step_time(&self.parallel, batch) / self.derate)
+    }
+
+    fn parallel(&self) -> &ParallelConfig {
+        &self.parallel
+    }
+
+    fn set_derate(&mut self, factor: f64) {
+        self.derate = factor.clamp(0.05, 1.0);
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::dsv2_lite;
+    use crate::device::Timings;
+
+    fn backend() -> CostModelBackend {
+        let p = ParallelConfig::standard(2, 2, (0..4).collect()).unwrap();
+        CostModelBackend::new(
+            CostModel::new(dsv2_lite(), Timings::cloudmatrix()),
+            p,
+        )
+    }
+
+    fn reqs(n: usize, state: RequestState) -> Vec<Request> {
+        (0..n)
+            .map(|i| {
+                let mut r = Request::new(i as u64, 0.0, 500, 100);
+                r.state = state;
+                r
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prefill_time_scales_with_tokens() {
+        let mut b = backend();
+        let mut one = reqs(1, RequestState::Prefilling);
+        let mut four = reqs(4, RequestState::Prefilling);
+        let t1 = b.prefill(&mut one).unwrap();
+        let t4 = b.prefill(&mut four).unwrap();
+        assert!(t4 > t1 * 3.0, "t1={t1} t4={t4}");
+    }
+
+    #[test]
+    fn decode_only_counts_decoding() {
+        let mut b = backend();
+        let mut mixed = reqs(4, RequestState::Decoding);
+        mixed.extend(reqs(4, RequestState::Prefilling));
+        let t_mixed = b.decode(&mut mixed).unwrap();
+        let mut four = reqs(4, RequestState::Decoding);
+        let t4 = b.decode(&mut four).unwrap();
+        assert!((t_mixed - t4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn derate_slows_steps() {
+        let mut b = backend();
+        let mut batch = reqs(8, RequestState::Decoding);
+        let t_full = b.decode(&mut batch).unwrap();
+        b.set_derate(0.5);
+        let t_half = b.decode(&mut batch).unwrap();
+        assert!((t_half - 2.0 * t_full).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_steps_are_free() {
+        let mut b = backend();
+        assert_eq!(b.prefill(&mut []).unwrap(), 0.0);
+        assert_eq!(b.decode(&mut []).unwrap(), 0.0);
+    }
+}

@@ -1,0 +1,268 @@
+//! Continuous batcher: admission from the waiting queue into the running
+//! batch under KV and batch-size limits, prefill-first scheduling (vLLM
+//! default), and pause/resume around scaling transitions (the paper's
+//! "active instance pauses intake of new requests" during scale-up).
+
+use std::collections::VecDeque;
+
+use crate::workload::{Request, RequestId, RequestState};
+
+use super::kv_cache::PagedKv;
+
+/// Batcher policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Maximum concurrent sequences.
+    pub max_batch: usize,
+    /// Maximum prompt tokens prefilled in one iteration.
+    pub max_prefill_tokens: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 64,
+            max_prefill_tokens: 8192,
+        }
+    }
+}
+
+/// What the engine should execute next.
+#[derive(Debug, PartialEq, Eq)]
+pub enum NextWork {
+    /// Prefill these newly admitted requests.
+    Prefill(Vec<RequestId>),
+    /// Run one decode step over the running batch.
+    Decode(Vec<RequestId>),
+    /// Nothing runnable.
+    Idle,
+}
+
+/// The continuous batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    pub cfg: BatcherConfig,
+    waiting: VecDeque<Request>,
+    running: Vec<Request>,
+    /// Intake paused (during scale transitions).
+    paused: bool,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Batcher {
+            cfg,
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            paused: false,
+        }
+    }
+
+    /// Enqueue an arriving request.
+    pub fn enqueue(&mut self, r: Request) {
+        self.waiting.push_back(r);
+    }
+
+    /// Pause new admissions (scale-while-serve transition).
+    pub fn pause_intake(&mut self) {
+        self.paused = true;
+    }
+    pub fn resume_intake(&mut self) {
+        self.paused = false;
+    }
+    pub fn intake_paused(&self) -> bool {
+        self.paused
+    }
+
+    /// Decide the next work item: admit + prefill waiting requests if
+    /// possible, otherwise decode the running batch.
+    pub fn next_work(&mut self, kv: &mut PagedKv) -> NextWork {
+        // Admission: FIFO while capacity allows.
+        let mut admitted = Vec::new();
+        let mut prefill_tokens = 0;
+        while !self.paused
+            && self.running.len() + admitted.len() < self.cfg.max_batch
+        {
+            let Some(front) = self.waiting.front() else { break };
+            let need_tokens = front.prompt_len;
+            if prefill_tokens + need_tokens > self.cfg.max_prefill_tokens
+                && !admitted.is_empty()
+            {
+                break;
+            }
+            if !kv.can_admit(front.total_tokens()) {
+                break;
+            }
+            let mut r = self.waiting.pop_front().unwrap();
+            kv.admit(r.id, r.prompt_len).expect("checked can_admit");
+            r.state = RequestState::Prefilling;
+            prefill_tokens += r.prompt_len;
+            admitted.push(r);
+        }
+        if !admitted.is_empty() {
+            let ids: Vec<RequestId> = admitted.iter().map(|r| r.id).collect();
+            self.running.extend(admitted);
+            return NextWork::Prefill(ids);
+        }
+        if !self.running.is_empty() {
+            return NextWork::Decode(
+                self.running.iter().map(|r| r.id).collect(),
+            );
+        }
+        NextWork::Idle
+    }
+
+    /// Requests currently running (mutable, for the backend to update).
+    pub fn running_mut(&mut self) -> &mut [Request] {
+        &mut self.running
+    }
+
+    pub fn running(&self) -> &[Request] {
+        &self.running
+    }
+
+    /// Remove finished requests from the running batch, releasing KV.
+    pub fn reap_finished(&mut self, kv: &mut PagedKv) -> Vec<Request> {
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].is_done() {
+                let r = self.running.swap_remove(i);
+                kv.release(r.id);
+                done.push(r);
+            } else {
+                i += 1;
+            }
+        }
+        done
+    }
+
+    /// Drain: take every in-flight request out (migration to a new
+    /// instance or teardown). KV is released here.
+    pub fn take_all_running(&mut self, kv: &mut PagedKv) -> Vec<Request> {
+        for r in &self.running {
+            kv.release(r.id);
+        }
+        std::mem::take(&mut self.running)
+    }
+
+    /// Take all queued (not yet admitted) requests.
+    pub fn take_waiting(&mut self) -> Vec<Request> {
+        self.waiting.drain(..).collect()
+    }
+
+    /// Adopt an in-flight request directly into the running batch with its
+    /// decode progress intact (switchover with zero-copy KV reuse). The
+    /// caller must have admitted its KV already.
+    pub fn adopt_running(&mut self, r: Request) {
+        debug_assert_eq!(r.state, RequestState::Decoding);
+        self.running.push(r);
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.waiting.len()
+    }
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty() && self.running.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt: usize, decode: usize) -> Request {
+        Request::new(id, 0.0, prompt, decode)
+    }
+
+    fn setup(max_batch: usize) -> (Batcher, PagedKv) {
+        (
+            Batcher::new(BatcherConfig {
+                max_batch,
+                max_prefill_tokens: 4096,
+            }),
+            PagedKv::new(1000, 16),
+        )
+    }
+
+    #[test]
+    fn admits_fifo_until_batch_full() {
+        let (mut b, mut kv) = setup(2);
+        for i in 1..=3 {
+            b.enqueue(req(i, 100, 10));
+        }
+        match b.next_work(&mut kv) {
+            NextWork::Prefill(ids) => assert_eq!(ids, vec![1, 2]),
+            w => panic!("expected prefill, got {w:?}"),
+        }
+        assert_eq!(b.queue_len(), 1);
+        // Next iteration decodes the running batch (no capacity to admit).
+        match b.next_work(&mut kv) {
+            NextWork::Decode(ids) => assert_eq!(ids, vec![1, 2]),
+            w => panic!("expected decode, got {w:?}"),
+        }
+    }
+
+    #[test]
+    fn kv_pressure_blocks_admission() {
+        let (mut b, _) = setup(8);
+        let mut kv = PagedKv::new(10, 16); // 160 tokens
+        b.enqueue(req(1, 100, 20)); // needs 120 total
+        b.enqueue(req(2, 100, 20));
+        match b.next_work(&mut kv) {
+            NextWork::Prefill(ids) => assert_eq!(ids, vec![1]),
+            w => panic!("{w:?}"),
+        }
+        // Second stays queued until blocks free up.
+        assert_eq!(b.queue_len(), 1);
+    }
+
+    #[test]
+    fn paused_intake_decodes_only() {
+        let (mut b, mut kv) = setup(8);
+        b.enqueue(req(1, 50, 5));
+        assert!(matches!(b.next_work(&mut kv), NextWork::Prefill(_)));
+        b.enqueue(req(2, 50, 5));
+        b.pause_intake();
+        assert!(matches!(b.next_work(&mut kv), NextWork::Decode(_)));
+        b.resume_intake();
+        assert!(matches!(b.next_work(&mut kv), NextWork::Prefill(_)));
+    }
+
+    #[test]
+    fn reap_releases_kv() {
+        let (mut b, mut kv) = setup(8);
+        b.enqueue(req(1, 50, 5));
+        b.next_work(&mut kv);
+        let used = kv.used_blocks();
+        assert!(used > 0);
+        b.running_mut()[0].state = RequestState::Finished;
+        let done = b.reap_finished(&mut kv);
+        assert_eq!(done.len(), 1);
+        assert_eq!(kv.used_blocks(), 0);
+        assert!(b.is_idle());
+    }
+
+    #[test]
+    fn drain_takes_everything() {
+        let (mut b, mut kv) = setup(8);
+        b.enqueue(req(1, 50, 5));
+        b.enqueue(req(2, 50, 5));
+        b.next_work(&mut kv);
+        b.enqueue(req(3, 50, 5));
+        let running = b.take_all_running(&mut kv);
+        let waiting = b.take_waiting();
+        assert_eq!(running.len(), 2);
+        assert_eq!(waiting.len(), 1);
+        assert_eq!(kv.used_blocks(), 0);
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        let (mut b, mut kv) = setup(4);
+        assert_eq!(b.next_work(&mut kv), NextWork::Idle);
+    }
+}

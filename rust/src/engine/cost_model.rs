@@ -1,0 +1,219 @@
+//! Roofline cost model: step latencies and capacity limits for the
+//! accounting models (DSv2-Lite / Qwen30B / DSv3) under a (DP, TP, EP)
+//! layout. Decode is weight-read-bound, prefill is compute-bound — the
+//! standard LLM-serving roofline, with constants from
+//! [`crate::device::Timings`] (sanity-checked against real PJRT runs of the
+//! e2e model; see EXPERIMENTS.md §Calibration).
+
+use crate::config::{ModelConfig, ParallelConfig};
+use crate::device::Timings;
+
+/// Step-cost calculator for one model on one timing model.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub model: ModelConfig,
+    pub timings: Timings,
+}
+
+impl CostModel {
+    pub fn new(model: ModelConfig, timings: Timings) -> Self {
+        CostModel { model, timings }
+    }
+
+    /// One decode iteration with `batch` concurrent sequences.
+    ///
+    /// Per device: attention weights are read densely; expert reads cover
+    /// the experts actually hit by routed tokens (bounded by residency and
+    /// by tokens). EP dispatch/combine adds two all-to-all hops.
+    pub fn decode_step_time(&self, p: &ParallelConfig, batch: usize) -> f64 {
+        if batch == 0 {
+            return 0.0;
+        }
+        let m = &self.model;
+        let tokens = batch as f64;
+        // Tokens landing on one EP rank after dispatch.
+        let tokens_per_rank =
+            (tokens * m.top_k as f64 / p.ep as f64).max(1.0);
+        let local_experts =
+            p.experts_per_device(m.n_experts as usize) as f64
+                + m.n_shared_experts as f64;
+        let experts_hit = local_experts.min(tokens_per_rank);
+
+        // Weight-read time per device (decode roofline).
+        let attn_bytes =
+            (m.n_layers * m.attn_bytes_per_layer()) as f64 / p.tp as f64;
+        let expert_bytes =
+            m.n_layers as f64 * experts_hit * m.expert_bytes() as f64;
+        let weight_time =
+            (attn_bytes + expert_bytes) / self.timings.hbm_bw;
+
+        // Compute time per device: batch rows through active params.
+        let batch_per_dp = (batch as f64 / p.dp as f64).ceil();
+        let flops = batch_per_dp * m.flops_per_token() / p.tp as f64;
+        let compute_time = flops / self.timings.flops;
+
+        // KV read grows with context; charge the cache-read term at the
+        // configured max sequence midpoint (fixed-length synthetic IO).
+        let kv_read = batch_per_dp
+            * (m.kv_bytes_per_token() as f64 * 1250.0)
+            / p.tp as f64
+            / self.timings.hbm_bw;
+
+        // EP all-to-all dispatch + combine.
+        let dispatch_bytes = tokens_per_rank
+            * m.top_k as f64
+            * m.d_model as f64
+            * m.dtype_bytes as f64;
+        let dispatch = 2.0
+            * (self.timings.dispatch_latency
+                + dispatch_bytes / self.timings.p2p_bw);
+
+        weight_time.max(compute_time + kv_read) + dispatch
+    }
+
+    /// Prefill time for `n_tokens` total prompt tokens across the instance
+    /// (compute-bound). One engine iteration covers every DP replica's
+    /// prefill concurrently, so the whole world contributes FLOPs.
+    pub fn prefill_time(&self, p: &ParallelConfig, n_tokens: usize) -> f64 {
+        let flops = n_tokens as f64 * self.model.flops_per_token();
+        flops / (self.timings.flops * (p.tp * p.dp) as f64)
+            + 2.0 * self.timings.dispatch_latency
+    }
+
+    /// KV bytes needed per device to admit a sequence of `seq_len` tokens
+    /// (KV sharded across the TP group).
+    pub fn kv_bytes_per_seq_per_device(&self, p: &ParallelConfig, seq_len: usize) -> u64 {
+        self.model.kv_bytes_per_token() * seq_len as u64 / p.tp as u64
+    }
+
+    /// Maximum concurrent sequences given per-device KV budget.
+    pub fn max_batch(
+        &self,
+        p: &ParallelConfig,
+        kv_bytes_per_device: u64,
+        seq_len: usize,
+    ) -> usize {
+        let per_seq = self.kv_bytes_per_seq_per_device(p, seq_len).max(1);
+        let per_replica = (kv_bytes_per_device / per_seq) as usize;
+        per_replica * p.dp
+    }
+
+    /// Per-device KV budget after weights at a given EP degree (Fig 1a's
+    /// mechanism: lower per-device expert memory -> more KV -> bigger
+    /// batches).
+    pub fn kv_budget(&self, p: &ParallelConfig, hbm_bytes: u64) -> u64 {
+        let weights = self.model.device_weight_bytes(p.tp, p.ep);
+        // Reserve 10% for activations/fragmentation.
+        let reserve = hbm_bytes / 10;
+        hbm_bytes.saturating_sub(weights + reserve)
+    }
+
+    /// Steady-state decode throughput (requests/sec) at full batch for
+    /// fixed-length IO (Fig 1a / Fig 10 capacity curves).
+    pub fn steady_throughput_rps(
+        &self,
+        p: &ParallelConfig,
+        hbm_bytes: u64,
+        prompt_len: usize,
+        decode_len: usize,
+    ) -> f64 {
+        let kv = self.kv_budget(p, hbm_bytes);
+        // Engines cap concurrent sequences (vLLM max_num_seqs; our
+        // batcher's max_batch) — without the cap, KV-rich configs would
+        // claim unbounded batches.
+        let batch = self
+            .max_batch(p, kv, prompt_len + decode_len)
+            .min(32 * p.dp);
+        if batch == 0 {
+            return 0.0;
+        }
+        let step = self.decode_step_time(p, batch);
+        let prefill = self.prefill_time(p, prompt_len);
+        // Over one batch generation: `batch` requests pay `batch` prefill
+        // iterations (prefill blocks decode in the engine) plus decode_len
+        // shared decode steps.
+        let total = decode_len as f64 * step + batch as f64 * prefill;
+        batch as f64 / total.max(1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::{dsv2_lite, dsv3};
+
+    fn cm() -> CostModel {
+        CostModel::new(dsv2_lite(), Timings::cloudmatrix())
+    }
+
+    fn par(dp: usize, n: usize) -> ParallelConfig {
+        ParallelConfig::standard(dp, 2, (0..n).collect()).unwrap()
+    }
+
+    #[test]
+    fn decode_step_in_plausible_range() {
+        let c = cm();
+        let t = c.decode_step_time(&par(2, 4), 32);
+        // 2.4B active params bf16 at ~1 TB/s → ~10-100 ms class.
+        assert!((0.001..0.5).contains(&t), "decode step {t}s");
+    }
+
+    #[test]
+    fn decode_scales_sublinearly_with_batch() {
+        // Weight-read-bound: doubling batch must not double step time.
+        let c = cm();
+        let p = par(2, 4);
+        let t8 = c.decode_step_time(&p, 8);
+        let t64 = c.decode_step_time(&p, 64);
+        assert!(t64 < t8 * 8.0 * 0.8, "t8={t8} t64={t64}");
+        assert!(t64 > t8, "more tokens can't be free");
+    }
+
+    #[test]
+    fn more_devices_higher_throughput() {
+        let c = cm();
+        let hbm = 64u64 << 30;
+        let t4 = c.steady_throughput_rps(&par(2, 4), hbm, 2000, 600);
+        let t8 = c.steady_throughput_rps(&par(4, 8), hbm, 2000, 600);
+        assert!(t8 > t4 * 1.2, "t4={t4} t8={t8}");
+    }
+
+    #[test]
+    fn higher_ep_beats_replicated_experts() {
+        // Fig 1a: one EP16 instance outperforms four isolated EP4 replicas
+        // (per-device expert memory shrinks -> bigger batches).
+        let c = cm();
+        let hbm = 64u64 << 30;
+        let one_big = c.steady_throughput_rps(&par(8, 16), hbm, 2000, 600);
+        let one_small = c.steady_throughput_rps(&par(2, 4), hbm, 2000, 600);
+        assert!(
+            one_big > 4.0 * one_small,
+            "EP16 {one_big} rps vs 4x EP4 {}",
+            4.0 * one_small
+        );
+    }
+
+    #[test]
+    fn prefill_is_compute_bound_and_longer_than_decode_step() {
+        let c = cm();
+        let p = par(2, 4);
+        let prefill = c.prefill_time(&p, 2000);
+        let decode = c.decode_step_time(&p, 1);
+        assert!(prefill > decode, "prefill {prefill} vs decode {decode}");
+    }
+
+    #[test]
+    fn max_batch_respects_kv_budget() {
+        let c = cm();
+        let p = par(2, 4);
+        let kv = c.kv_budget(&p, 64 << 30);
+        assert!(kv > 8 << 30, "kv budget {kv}");
+        let b = c.max_batch(&p, kv, 2600);
+        assert!(b > 8, "batch {b}");
+        // Larger model, tighter budget.
+        let c3 = CostModel::new(dsv3(), Timings::cloudmatrix());
+        let p3 = ParallelConfig::standard(4, 8, (0..32).collect()).unwrap();
+        let kv3 = c3.kv_budget(&p3, 64 << 30);
+        assert!(kv3 < kv * 4, "dsv3 budget should be tight: {kv3}");
+    }
+}

@@ -1,0 +1,187 @@
+//! Paged KV-cache allocator (vLLM-style block tables) — admission control
+//! for the continuous batcher and the unit of KV accounting.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::workload::RequestId;
+
+/// Paged KV allocator over a fixed block pool.
+#[derive(Debug, Clone)]
+pub struct PagedKv {
+    block_tokens: usize,
+    n_blocks: usize,
+    free: Vec<usize>,
+    tables: HashMap<RequestId, Vec<usize>>,
+    /// Tokens currently stored per request.
+    lens: HashMap<RequestId, usize>,
+}
+
+impl PagedKv {
+    /// A pool of `n_blocks` blocks of `block_tokens` tokens each.
+    pub fn new(n_blocks: usize, block_tokens: usize) -> Self {
+        assert!(block_tokens > 0);
+        PagedKv {
+            block_tokens,
+            n_blocks,
+            free: (0..n_blocks).rev().collect(),
+            tables: HashMap::new(),
+            lens: HashMap::new(),
+        }
+    }
+
+    /// Pool sized from a byte budget.
+    pub fn from_bytes(
+        budget_bytes: u64,
+        bytes_per_token: u64,
+        block_tokens: usize,
+    ) -> Self {
+        let tokens = (budget_bytes / bytes_per_token.max(1)) as usize;
+        PagedKv::new(tokens / block_tokens.max(1), block_tokens)
+    }
+
+    pub fn blocks_needed(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_tokens)
+    }
+
+    /// Can a sequence of `tokens` total tokens be admitted right now?
+    pub fn can_admit(&self, tokens: usize) -> bool {
+        self.blocks_needed(tokens) <= self.free.len()
+    }
+
+    /// Reserve blocks for a new sequence (prompt only; grows on decode).
+    pub fn admit(&mut self, id: RequestId, prompt_tokens: usize) -> Result<()> {
+        if self.tables.contains_key(&id) {
+            bail!("request {id} already admitted");
+        }
+        let need = self.blocks_needed(prompt_tokens.max(1));
+        if need > self.free.len() {
+            bail!(
+                "KV pool exhausted: need {need} blocks, {} free",
+                self.free.len()
+            );
+        }
+        let blocks: Vec<usize> =
+            (0..need).map(|_| self.free.pop().unwrap()).collect();
+        self.tables.insert(id, blocks);
+        self.lens.insert(id, prompt_tokens);
+        Ok(())
+    }
+
+    /// Append one decoded token; may claim a new block.
+    pub fn append_token(&mut self, id: RequestId) -> Result<()> {
+        let len = self
+            .lens
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("request {id} not admitted"))?;
+        *len += 1;
+        let need = len.div_ceil(self.block_tokens);
+        let table = self.tables.get_mut(&id).unwrap();
+        if need > table.len() {
+            let Some(b) = self.free.pop() else {
+                *self.lens.get_mut(&id).unwrap() -= 1;
+                bail!("KV pool exhausted growing request {id}");
+            };
+            table.push(b);
+        }
+        Ok(())
+    }
+
+    /// Release a finished request's blocks.
+    pub fn release(&mut self, id: RequestId) {
+        if let Some(blocks) = self.tables.remove(&id) {
+            self.free.extend(blocks);
+        }
+        self.lens.remove(&id);
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+    pub fn used_blocks(&self) -> usize {
+        self.n_blocks - self.free.len()
+    }
+    pub fn total_blocks(&self) -> usize {
+        self.n_blocks
+    }
+    pub fn active_requests(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Shrink the pool (colocated baseline pre-shrinks KV to fit two model
+    /// copies). Fails if in-use blocks would be lost.
+    pub fn resize(&mut self, new_blocks: usize) -> Result<()> {
+        let used = self.used_blocks();
+        if new_blocks < used {
+            bail!("cannot shrink below {used} in-use blocks");
+        }
+        self.n_blocks = new_blocks;
+        let free_target = new_blocks - used;
+        // Rebuild the free list with fresh ids (identity of free blocks is
+        // immaterial).
+        self.free = (0..free_target).rev().collect();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_grow_release() {
+        let mut kv = PagedKv::new(10, 16);
+        kv.admit(1, 100).unwrap(); // 7 blocks
+        assert_eq!(kv.used_blocks(), 7);
+        assert!(kv.can_admit(48));
+        assert!(!kv.can_admit(64));
+
+        // 100 -> 112 tokens fits in 7 blocks; 113 takes an 8th.
+        for _ in 0..12 {
+            kv.append_token(1).unwrap();
+        }
+        assert_eq!(kv.used_blocks(), 7);
+        kv.append_token(1).unwrap();
+        assert_eq!(kv.used_blocks(), 8);
+
+        kv.release(1);
+        assert_eq!(kv.used_blocks(), 0);
+        assert_eq!(kv.free_blocks(), 10);
+    }
+
+    #[test]
+    fn exhaustion_is_an_error_not_corruption() {
+        let mut kv = PagedKv::new(2, 4);
+        kv.admit(1, 8).unwrap();
+        assert!(kv.admit(2, 4).is_err());
+        assert!(kv.append_token(1).is_err());
+        // State unchanged after failures.
+        assert_eq!(kv.used_blocks(), 2);
+        kv.release(1);
+        kv.admit(2, 4).unwrap();
+    }
+
+    #[test]
+    fn double_admit_rejected() {
+        let mut kv = PagedKv::new(4, 4);
+        kv.admit(1, 4).unwrap();
+        assert!(kv.admit(1, 4).is_err());
+    }
+
+    #[test]
+    fn from_bytes_sizing() {
+        // 1 GB at 1 KB/token, 16-token blocks -> 65536 blocks.
+        let kv = PagedKv::from_bytes(1 << 30, 1024, 16);
+        assert_eq!(kv.total_blocks(), 65536);
+    }
+
+    #[test]
+    fn resize_preserves_in_use() {
+        let mut kv = PagedKv::new(10, 4);
+        kv.admit(1, 16).unwrap(); // 4 blocks
+        kv.resize(6).unwrap();
+        assert_eq!(kv.free_blocks(), 2);
+        assert!(kv.resize(3).is_err());
+    }
+}

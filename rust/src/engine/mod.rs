@@ -1,0 +1,22 @@
+//! The serving engine: continuous batching over a paged KV cache, with MoE
+//! token routing across EP shards, generic over the execution backend —
+//! [`backend::CostModelBackend`] (roofline-timed simulation, used by the
+//! paper experiments) or [`pjrt::PjrtBackend`] (real forward passes through
+//! the AOT artifacts, used by the end-to-end example).
+//!
+//! All five scaling methods serve through this same engine, mirroring the
+//! paper's all-baselines-on-vLLM methodology.
+
+pub mod backend;
+pub mod batcher;
+pub mod cost_model;
+pub mod kv_cache;
+pub mod moe;
+pub mod pjrt;
+pub mod serve;
+
+pub use backend::{CostModelBackend, ExecBackend, StepKind};
+pub use batcher::{Batcher, BatcherConfig};
+pub use cost_model::CostModel;
+pub use kv_cache::PagedKv;
+pub use serve::{ServeEngine, StepOutcome};

@@ -1,0 +1,148 @@
+//! MoE token routing across EP shards: dispatch bookkeeping, combine-weight
+//! handling, and load-balance statistics for the real (PJRT) path.
+
+use crate::device::DeviceId;
+
+/// Routing decision for one decode/prefill batch: which tokens go to which
+/// expert, derived from the gate's dense combine-weight matrix.
+#[derive(Debug, Clone)]
+pub struct Routing {
+    pub n_tokens: usize,
+    pub n_experts: usize,
+    /// Per expert: indices of tokens routed to it.
+    pub tokens_per_expert: Vec<Vec<usize>>,
+}
+
+impl Routing {
+    /// Build routing from a dense `[T, E]` combine-weight matrix (nonzero =
+    /// routed; the gate emits exactly top-k nonzeros per row).
+    pub fn from_combine_weights(cw: &[f32], t: usize, e: usize) -> Self {
+        assert_eq!(cw.len(), t * e);
+        let mut tokens_per_expert = vec![Vec::new(); e];
+        for ti in 0..t {
+            for ei in 0..e {
+                if cw[ti * e + ei] > 0.0 {
+                    tokens_per_expert[ei].push(ti);
+                }
+            }
+        }
+        Routing {
+            n_tokens: t,
+            n_experts: e,
+            tokens_per_expert,
+        }
+    }
+
+    /// Experts that received at least one token (the set of expert-FFN
+    /// executions this step needs).
+    pub fn active_experts(&self) -> Vec<usize> {
+        (0..self.n_experts)
+            .filter(|&e| !self.tokens_per_expert[e].is_empty())
+            .collect()
+    }
+
+    /// Token count per device given an owner map `expert -> device`.
+    pub fn tokens_per_device(
+        &self,
+        owner: &dyn Fn(usize) -> DeviceId,
+        n_devices: usize,
+    ) -> Vec<usize> {
+        let mut counts = vec![0usize; n_devices];
+        for (e, toks) in self.tokens_per_expert.iter().enumerate() {
+            if !toks.is_empty() {
+                let d = owner(e);
+                if d < n_devices {
+                    counts[d] += toks.len();
+                }
+            }
+        }
+        counts
+    }
+
+    /// Load-balance factor: max/mean token load across devices (1.0 =
+    /// perfectly balanced; the paper's L4 concerns this degrading when
+    /// experts can't be redistributed).
+    pub fn imbalance(
+        &self,
+        owner: &dyn Fn(usize) -> DeviceId,
+        n_devices: usize,
+    ) -> f64 {
+        let counts = self.tokens_per_device(owner, n_devices);
+        let total: usize = counts.iter().sum();
+        if total == 0 {
+            return 1.0;
+        }
+        let mean = total as f64 / n_devices as f64;
+        let max = *counts.iter().max().unwrap() as f64;
+        max / mean
+    }
+}
+
+/// Accumulate the weighted expert output into the residual stream:
+/// `x[t] += cw[t] * y[t]` over rows of width `d`.
+pub fn combine_into(x: &mut [f32], y: &[f32], cw_col: &[f32], d: usize) {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(x.len(), cw_col.len() * d);
+    for (t, &w) in cw_col.iter().enumerate() {
+        if w == 0.0 {
+            continue;
+        }
+        let row = t * d;
+        for i in 0..d {
+            x[row + i] += w * y[row + i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routing_from_cw() {
+        // 3 tokens, 4 experts, top-2 each.
+        #[rustfmt::skip]
+        let cw = vec![
+            0.5, 0.5, 0.0, 0.0,
+            0.0, 0.3, 0.7, 0.0,
+            0.9, 0.0, 0.0, 0.1,
+        ];
+        let r = Routing::from_combine_weights(&cw, 3, 4);
+        assert_eq!(r.tokens_per_expert[0], vec![0, 2]);
+        assert_eq!(r.tokens_per_expert[1], vec![0, 1]);
+        assert_eq!(r.tokens_per_expert[2], vec![1]);
+        assert_eq!(r.tokens_per_expert[3], vec![2]);
+        assert_eq!(r.active_experts(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn device_load_and_imbalance() {
+        let cw = vec![
+            1.0, 0.0, 0.0, 0.0,
+            1.0, 0.0, 0.0, 0.0,
+            1.0, 0.0, 0.0, 0.0,
+            0.0, 0.0, 0.0, 1.0,
+        ];
+        let r = Routing::from_combine_weights(&cw, 4, 4);
+        // Experts 0,1 on device 0; experts 2,3 on device 1.
+        let owner = |e: usize| e / 2;
+        let counts = r.tokens_per_device(&owner, 2);
+        assert_eq!(counts, vec![3, 1]);
+        assert_eq!(r.imbalance(&owner, 2), 1.5);
+    }
+
+    #[test]
+    fn combine_accumulates_weighted_rows() {
+        let d = 2;
+        let mut x = vec![1.0, 1.0, 2.0, 2.0];
+        let y = vec![10.0, 10.0, 10.0, 10.0];
+        combine_into(&mut x, &y, &[0.5, 0.0], d);
+        assert_eq!(x, vec![6.0, 6.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn empty_routing_is_balanced() {
+        let r = Routing::from_combine_weights(&[], 0, 4);
+        assert_eq!(r.imbalance(&|e| e, 4), 1.0);
+    }
+}

@@ -1,0 +1,524 @@
+//! Real execution backend: drives the AOT-compiled artifacts through PJRT,
+//! composing the per-layer attention prefix with per-expert FFN executables
+//! exactly the way the golden trace does. Expert weights are fetched from
+//! whichever simulated device currently owns them (via the instance's
+//! binding snapshot), so EP migrations are exercised with live numerics.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ParallelConfig;
+use crate::device::{DeviceId, RegionId};
+use crate::hmm::control::{HmmControl, InstanceBinding};
+use crate::runtime::{HostTensor, ModelDims, Pjrt};
+use crate::workload::{Request, RequestId, RequestState};
+
+use super::backend::ExecBackend;
+use super::moe::{combine_into, Routing};
+
+/// Per-step EP routing statistics (live load-balance telemetry).
+#[derive(Debug, Clone, Default)]
+pub struct EpStats {
+    pub steps: u64,
+    pub tokens_dispatched: u64,
+    pub max_imbalance: f64,
+}
+
+/// The live backend.
+pub struct PjrtBackend {
+    rt: Rc<Pjrt>,
+    hmm: Rc<RefCell<HmmControl>>,
+    binding: InstanceBinding,
+    parallel: ParallelConfig,
+    md: ModelDims,
+    /// (dev, region) of the embedding payload `[emb, ln_f]`.
+    embed_ref: (DeviceId, RegionId),
+    /// Per layer: (dev, region) of `[ln1, wq, wk, wv, wo, ln2, w_gate]`.
+    attn_refs: Vec<(DeviceId, RegionId)>,
+    /// KV caches per layer: `[B, S, H, dh]`.
+    kc: Vec<HostTensor>,
+    vc: Vec<HostTensor>,
+    /// Slot assignment: compiled batch row -> request.
+    slots: Vec<Option<RequestId>>,
+    /// Stored sequence length per slot (prompt + generated-so-far tokens
+    /// whose KV is in the cache).
+    lens: Vec<i32>,
+    last_token: Vec<i32>,
+    /// Layer index the current `moe_combine` call is operating on.
+    layer_cursor: usize,
+    /// Device-resident weight buffers, keyed by (device, region, tensor
+    /// index). This is the real-path analogue of weights living in HBM:
+    /// each payload is uploaded once per residency; migrations produce new
+    /// regions and therefore fresh uploads (§Perf optimization P1).
+    weight_bufs: HashMap<(DeviceId, RegionId, usize), Rc<xla::PjRtBuffer>>,
+    pub ep_stats: EpStats,
+}
+
+impl PjrtBackend {
+    pub fn new(
+        rt: Rc<Pjrt>,
+        hmm: Rc<RefCell<HmmControl>>,
+        binding: InstanceBinding,
+    ) -> Result<Self> {
+        let md = rt.manifest().model.clone();
+        let (b, s, h, dh) = (md.batch, md.max_seq, md.n_heads, md.head_dim);
+
+        // Resolve the embedding + per-layer attention payload references
+        // from the binding snapshot.
+        let mut embed_ref = None;
+        let mut attn_map: BTreeMap<usize, (DeviceId, RegionId)> =
+            BTreeMap::new();
+        for (&dev, tags) in &binding.attn_regions {
+            for (tag, region) in tags {
+                if tag.starts_with("embed.") && embed_ref.is_none() {
+                    embed_ref = Some((dev, *region));
+                } else if let Some(layer) = parse_attn_tag(tag) {
+                    attn_map.entry(layer).or_insert((dev, *region));
+                }
+            }
+        }
+        let embed_ref = embed_ref.context("binding has no embed unit")?;
+        let attn_refs: Vec<(DeviceId, RegionId)> = (0..md.n_layers)
+            .map(|l| {
+                attn_map
+                    .get(&l)
+                    .copied()
+                    .with_context(|| format!("binding missing attn layer {l}"))
+            })
+            .collect::<Result<_>>()?;
+        if binding.expert_map.len() != md.n_layers {
+            bail!("binding expert map layers != model layers");
+        }
+
+        let parallel = binding.parallel.clone();
+        Ok(PjrtBackend {
+            rt,
+            hmm,
+            binding,
+            parallel,
+            kc: (0..md.n_layers)
+                .map(|_| HostTensor::zeros_f32(vec![b, s, h, dh]))
+                .collect(),
+            vc: (0..md.n_layers)
+                .map(|_| HostTensor::zeros_f32(vec![b, s, h, dh]))
+                .collect(),
+            slots: vec![None; b],
+            lens: vec![0; b],
+            last_token: vec![0; b],
+            embed_ref,
+            attn_refs,
+            md,
+            layer_cursor: 0,
+            weight_bufs: HashMap::new(),
+            ep_stats: EpStats::default(),
+        })
+    }
+
+    /// Replace the binding after a scaling event (switchover): expert
+    /// weights may now live on different devices; KV caches and slots are
+    /// preserved — this is the zero-copy KV reuse of §5.2.
+    pub fn rebind(&mut self, binding: InstanceBinding) -> Result<()> {
+        if binding.expert_map.len() != self.md.n_layers {
+            bail!("rebind: wrong layer count");
+        }
+        self.parallel = binding.parallel.clone();
+        self.binding = binding;
+        Ok(())
+    }
+
+    fn payload(&self, dev: DeviceId, region: RegionId) -> Result<Rc<Vec<HostTensor>>> {
+        self.hmm
+            .borrow()
+            .payload(dev, region)
+            .with_context(|| format!("no payload at dev {dev} region {region}"))
+    }
+
+    /// Device-resident buffer for tensor `idx` of the payload at
+    /// (dev, region); uploaded on first use and cached until the region is
+    /// superseded (migration ⇒ new region id ⇒ new upload, mirroring the
+    /// P2P transfer).
+    fn weight_buf(
+        &mut self,
+        dev: DeviceId,
+        region: RegionId,
+        idx: usize,
+    ) -> Result<Rc<xla::PjRtBuffer>> {
+        if let Some(b) = self.weight_bufs.get(&(dev, region, idx)) {
+            return Ok(b.clone());
+        }
+        let payload = self.payload(dev, region)?;
+        let t = payload
+            .get(idx)
+            .with_context(|| format!("payload idx {idx} missing"))?;
+        let buf = Rc::new(self.rt.upload(t)?);
+        self.weight_bufs.insert((dev, region, idx), buf.clone());
+        Ok(buf)
+    }
+
+    /// Release slots whose request is no longer running.
+    fn sync_slots(&mut self, running: &[Request]) {
+        for slot in 0..self.slots.len() {
+            if let Some(id) = self.slots[slot] {
+                let alive = running.iter().any(|r| {
+                    r.id == id
+                        && matches!(
+                            r.state,
+                            RequestState::Prefilling | RequestState::Decoding
+                        )
+                });
+                if !alive {
+                    self.slots[slot] = None;
+                    self.lens[slot] = 0;
+                    self.last_token[slot] = 0;
+                }
+            }
+        }
+    }
+
+    fn free_slot(&self) -> Option<usize> {
+        self.slots.iter().position(|s| s.is_none())
+    }
+
+    fn slot_of(&self, id: RequestId) -> Option<usize> {
+        self.slots.iter().position(|s| *s == Some(id))
+    }
+
+    /// Gate matrix -> routing stats accounting.
+    fn record_routing(&mut self, cw: &[f32], t: usize) {
+        let e = self.md.n_experts;
+        let routing = Routing::from_combine_weights(cw, t, e);
+        let owners: Vec<DeviceId> = (0..e)
+            .map(|ei| {
+                self.binding.expert_map[0]
+                    .get(&ei)
+                    .map(|&(d, _)| d)
+                    .unwrap_or(0)
+            })
+            .collect();
+        let n_dev = self.parallel.n_devices().max(1);
+        let imb = routing.imbalance(&|ei| owners[ei] % n_dev, n_dev);
+        self.ep_stats.max_imbalance = self.ep_stats.max_imbalance.max(imb);
+        self.ep_stats.tokens_dispatched +=
+            routing.tokens_per_expert.iter().map(|v| v.len() as u64).sum::<u64>();
+    }
+
+    /// Expert dispatch/combine over flat tokens: `x_out = h + sum_e cw_e *
+    /// expert_e(xn2)` in ascending expert order (matches the golden trace).
+    fn moe_combine(
+        &mut self,
+        artifact: &str,
+        h: &HostTensor,
+        xn2: &HostTensor,
+        cw: &HostTensor,
+        t: usize,
+    ) -> Result<HostTensor> {
+        let d = self.md.d_model;
+        let e_total = self.md.n_experts;
+        let cw_data = cw.as_f32()?.to_vec();
+        self.record_routing(&cw_data, t);
+        let mut out = HostTensor::f32(
+            h.shape().to_vec(),
+            h.as_f32()?.to_vec(),
+        );
+        // Upload the expert input once; reuse it across all expert calls.
+        let xn2_buf = self.rt.upload(xn2)?;
+        for e in 0..e_total {
+            let col: Vec<f32> =
+                (0..t).map(|ti| cw_data[ti * e_total + e]).collect();
+            if col.iter().all(|&w| w == 0.0) {
+                continue;
+            }
+            let &(dev, region) = self.binding.expert_map[self.layer_cursor]
+                .get(&e)
+                .with_context(|| format!("expert {e} unbound"))?;
+            let w1 = self.weight_buf(dev, region, 0)?;
+            let w3 = self.weight_buf(dev, region, 1)?;
+            let w2 = self.weight_buf(dev, region, 2)?;
+            let y = self
+                .rt
+                .run_b(artifact, &[&xn2_buf, &w1, &w3, &w2])?;
+            combine_into(out.as_f32_mut()?, y[0].as_f32()?, &col, d);
+        }
+        Ok(out)
+    }
+}
+
+/// Current layer index used by `moe_combine` (single-threaded scratch).
+impl PjrtBackend {
+    fn set_layer(&mut self, l: usize) {
+        self.layer_cursor = l;
+    }
+}
+
+fn parse_attn_tag(tag: &str) -> Option<usize> {
+    let rest = tag.strip_prefix("layer")?;
+    let (l, kind) = rest.split_once('.')?;
+    if kind.starts_with("attn") {
+        l.parse().ok()
+    } else {
+        None
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn prefill(&mut self, running: &mut [Request]) -> Result<f64> {
+        let t0 = Instant::now();
+        self.sync_slots(running);
+        let (b, p, d) = (self.md.batch, self.md.prefill_len, self.md.d_model);
+        let (h_, dh) = (self.md.n_heads, self.md.head_dim);
+
+        // Assign slots to the new requests.
+        let mut new_slots: Vec<(usize, usize)> = Vec::new(); // (slot, idx)
+        for (idx, r) in running.iter().enumerate() {
+            if r.state != RequestState::Prefilling {
+                continue;
+            }
+            if self.slot_of(r.id).is_some() {
+                continue;
+            }
+            if r.prompt_ids.len() != r.prompt_len {
+                bail!("request {} missing prompt ids", r.id);
+            }
+            if r.prompt_len > p {
+                bail!("prompt {} exceeds compiled P={p}", r.prompt_len);
+            }
+            let slot = self
+                .free_slot()
+                .context("no free slot (batch > compiled B?)")?;
+            self.slots[slot] = Some(r.id);
+            self.lens[slot] = r.prompt_len as i32;
+            new_slots.push((slot, idx));
+        }
+        if new_slots.is_empty() {
+            return Ok(t0.elapsed().as_secs_f64());
+        }
+
+        // Build padded [B, P] ids and lens.
+        let mut ids = vec![0i32; b * p];
+        let mut lens = vec![1i32; b];
+        for &(slot, idx) in &new_slots {
+            let r = &running[idx];
+            for (j, &tok) in r.prompt_ids.iter().enumerate() {
+                ids[slot * p + j] = tok;
+            }
+            lens[slot] = r.prompt_len as i32;
+        }
+        let ids_t = HostTensor::i32(vec![b, p], ids);
+        let lens_t = HostTensor::i32(vec![b], lens.clone());
+        let lens_buf = self.rt.upload(&lens_t)?;
+
+        let (e_dev, e_reg) = self.embed_ref;
+        let emb_buf = self.weight_buf(e_dev, e_reg, 0)?;
+        let lnf_buf = self.weight_buf(e_dev, e_reg, 1)?;
+        let ids_buf = self.rt.upload(&ids_t)?;
+        let mut x = self
+            .rt
+            .run_b("embed_prefill", &[&emb_buf, &ids_buf])?
+            .remove(0);
+
+        for layer in 0..self.md.n_layers {
+            let (a_dev, a_reg) = self.attn_refs[layer];
+            let w: Vec<Rc<xla::PjRtBuffer>> = (0..7)
+                .map(|i| self.weight_buf(a_dev, a_reg, i))
+                .collect::<Result<_>>()?;
+            let x_buf = self.rt.upload(&x)?;
+            let mut outs = self.rt.run_b(
+                "attn_gate_prefill",
+                &[
+                    &x_buf, &lens_buf,
+                    &w[0], &w[1], &w[2], &w[3], &w[4], &w[5], &w[6],
+                ],
+            )?;
+            let v = outs.pop().unwrap();
+            let k = outs.pop().unwrap();
+            let cw = outs.pop().unwrap();
+            let xn2 = outs.pop().unwrap();
+            let h = outs.pop().unwrap();
+
+            // Persist K/V rows for the NEW slots only (old slots keep their
+            // existing cache — batch rows are independent in prefill).
+            let s = self.md.max_seq;
+            let kd = k.as_f32()?;
+            let vd = v.as_f32()?;
+            let kc = self.kc[layer].as_f32_mut()?;
+            let vcm = self.vc[layer].as_f32_mut()?;
+            for &(slot, idx) in &new_slots {
+                let plen = running[idx].prompt_len;
+                for pos in 0..plen {
+                    for hh in 0..h_ {
+                        for dd in 0..dh {
+                            let src = ((slot * p + pos) * h_ + hh) * dh + dd;
+                            let dst = ((slot * s + pos) * h_ + hh) * dh + dd;
+                            kc[dst] = kd[src];
+                            vcm[dst] = vd[src];
+                        }
+                    }
+                }
+            }
+
+            // Expert combine over flattened tokens.
+            let bp = b * p;
+            let h_flat = HostTensor::f32(
+                vec![bp, d],
+                h.as_f32()?.to_vec(),
+            );
+            let xn2_flat = HostTensor::f32(
+                vec![bp, d],
+                xn2.as_f32()?.to_vec(),
+            );
+            let cw_flat = HostTensor::f32(
+                vec![bp, self.md.n_experts],
+                cw.as_f32()?.to_vec(),
+            );
+            self.set_layer(layer);
+            let out = self.moe_combine(
+                "expert_ffn_prefill",
+                &h_flat,
+                &xn2_flat,
+                &cw_flat,
+                bp,
+            )?;
+            x = HostTensor::f32(vec![b, p, d], out.as_f32()?.to_vec());
+        }
+
+        // First token: final_logits on each new request's last prompt row.
+        let mut last = vec![0.0f32; b * d];
+        let xd = x.as_f32()?;
+        for &(slot, idx) in &new_slots {
+            let plen = running[idx].prompt_len;
+            let src = (slot * p + plen - 1) * d;
+            last[slot * d..(slot + 1) * d]
+                .copy_from_slice(&xd[src..src + d]);
+        }
+        let last_buf =
+            self.rt.upload(&HostTensor::f32(vec![b, d], last))?;
+        let logits = self
+            .rt
+            .run_b("final_logits", &[&last_buf, &lnf_buf, &emb_buf])?;
+        let am = logits[0].argmax_last()?;
+        let toks = am.as_i32()?;
+        for &(slot, idx) in &new_slots {
+            let tok = toks[slot];
+            running[idx].output_ids.push(tok);
+            self.last_token[slot] = tok;
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn decode(&mut self, running: &mut [Request]) -> Result<f64> {
+        let t0 = Instant::now();
+        self.sync_slots(running);
+        let b = self.md.batch;
+        let (h_, dh, s) = (self.md.n_heads, self.md.head_dim, self.md.max_seq);
+
+        // Active decode slots.
+        let mut active: Vec<(usize, usize)> = Vec::new(); // (slot, idx)
+        for (idx, r) in running.iter().enumerate() {
+            if r.state == RequestState::Decoding {
+                if let Some(slot) = self.slot_of(r.id) {
+                    active.push((slot, idx));
+                }
+            }
+        }
+        if active.is_empty() {
+            return Ok(t0.elapsed().as_secs_f64());
+        }
+
+        let mut ids = vec![0i32; b];
+        let mut lens = vec![1i32; b];
+        for &(slot, _) in &active {
+            ids[slot] = self.last_token[slot];
+            lens[slot] = self.lens[slot] + 1; // includes the current token
+            if lens[slot] as usize > s {
+                bail!("sequence exceeds compiled max_seq {s}");
+            }
+        }
+        let ids_t = HostTensor::i32(vec![b], ids);
+        let lens_t = HostTensor::i32(vec![b], lens.clone());
+        let lens_buf = self.rt.upload(&lens_t)?;
+
+        let (e_dev, e_reg) = self.embed_ref;
+        let emb_buf = self.weight_buf(e_dev, e_reg, 0)?;
+        let lnf_buf = self.weight_buf(e_dev, e_reg, 1)?;
+        let ids_buf = self.rt.upload(&ids_t)?;
+        let mut x = self
+            .rt
+            .run_b("embed_decode", &[&emb_buf, &ids_buf])?
+            .remove(0);
+
+        for layer in 0..self.md.n_layers {
+            let (a_dev, a_reg) = self.attn_refs[layer];
+            let w: Vec<Rc<xla::PjRtBuffer>> = (0..7)
+                .map(|i| self.weight_buf(a_dev, a_reg, i))
+                .collect::<Result<_>>()?;
+            let x_buf = self.rt.upload(&x)?;
+            let kc_buf = self.rt.upload(&self.kc[layer])?;
+            let vc_buf = self.rt.upload(&self.vc[layer])?;
+            let mut outs = self.rt.run_b(
+                "attn_gate_decode",
+                &[
+                    &x_buf, &lens_buf,
+                    &w[0], &w[1], &w[2], &w[3], &w[4], &w[5], &w[6],
+                    &kc_buf, &vc_buf,
+                ],
+            )?;
+            let v_new = outs.pop().unwrap();
+            let k_new = outs.pop().unwrap();
+            let cw = outs.pop().unwrap();
+            let xn2 = outs.pop().unwrap();
+            let h = outs.pop().unwrap();
+
+            // Persist this token's K/V at position lens-1 for active slots.
+            let kd = k_new.as_f32()?;
+            let vd = v_new.as_f32()?;
+            let kc = self.kc[layer].as_f32_mut()?;
+            let vcm = self.vc[layer].as_f32_mut()?;
+            for &(slot, _) in &active {
+                let pos = (lens[slot] - 1) as usize;
+                for hh in 0..h_ {
+                    for dd in 0..dh {
+                        let src = (slot * h_ + hh) * dh + dd;
+                        let dst = ((slot * s + pos) * h_ + hh) * dh + dd;
+                        kc[dst] = kd[src];
+                        vcm[dst] = vd[src];
+                    }
+                }
+            }
+
+            self.set_layer(layer);
+            x = self.moe_combine("expert_ffn_decode", &h, &xn2, &cw, b)?;
+        }
+
+        let x_buf = self.rt.upload(&x)?;
+        let logits = self
+            .rt
+            .run_b("final_logits", &[&x_buf, &lnf_buf, &emb_buf])?;
+        let am = logits[0].argmax_last()?;
+        let toks = am.as_i32()?;
+        for &(slot, idx) in &active {
+            let tok = toks[slot];
+            running[idx].output_ids.push(tok);
+            self.last_token[slot] = tok;
+            self.lens[slot] += 1;
+        }
+        self.ep_stats.steps += 1;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    fn parallel(&self) -> &ParallelConfig {
+        &self.parallel
+    }
+
+    fn set_derate(&mut self, _factor: f64) {
+        // Real backend: transition capacity effects appear naturally (the
+        // batcher pauses intake), no synthetic derating.
+    }
+
+    fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}

@@ -1,0 +1,110 @@
+//! Fig 10: SLO compliance vs request rate (DSv2-Lite, TTFT<=1s, TPOT<=1s,
+//! 2000-token prompts, 500-750 decode). A scale-up command fires at a
+//! fixed time; horizontal is excluded (infeasible in this setup), matching
+//! the paper.
+
+use anyhow::Result;
+
+use crate::config::model::dsv2_lite;
+use crate::config::SloConfig;
+use crate::coordinator::{ServingSim, Trigger};
+use crate::device::Timings;
+use crate::engine::CostModel;
+use crate::util::table::{f, Table};
+use crate::workload::{RateProfile, WorkloadGen, WorkloadSpec};
+
+use super::common::{display_name, make_method, par};
+
+const COMMAND_AT: f64 = 30.0;
+const HORIZON: f64 = 300.0;
+
+pub fn slo_at_rps(method: &str, rps: f64, decode_scale: f64) -> Result<f64> {
+    let m = dsv2_lite();
+    let slo = SloConfig::strict();
+    let mut meth = make_method(method, &m, 6)?;
+    let sim = ServingSim::new(
+        CostModel::new(m.clone(), Timings::cloudmatrix()),
+        slo,
+    );
+    let mut g = WorkloadGen::new(WorkloadSpec {
+        prompt_len: 2000,
+        decode_min: (500.0 * decode_scale) as usize,
+        decode_max: (750.0 * decode_scale) as usize,
+        profile: RateProfile::Fixed(rps),
+        seed: 23,
+    });
+    let arrivals = g.arrivals_until(HORIZON);
+    let out = sim.run(
+        meth.as_mut(),
+        &par(&m, 4)?,
+        arrivals,
+        Trigger::Manual(vec![(COMMAND_AT, par(&m, 6)?)]),
+        HORIZON,
+    )?;
+    Ok(out
+        .recorder
+        .attainment_by_arrival(0.0, HORIZON, &slo))
+}
+
+pub fn run(fast: bool) -> Result<String> {
+    // Decode lengths are scaled down in fast mode to keep CI quick; the
+    // qualitative knee ordering is unchanged.
+    let decode_scale = if fast { 0.2 } else { 0.4 };
+    let rates: &[f64] = if fast {
+        &[1.0, 4.0, 8.0]
+    } else {
+        &[0.5, 1.0, 2.0, 4.0, 6.0, 8.0, 10.0, 12.0]
+    };
+    let methods = ["elastic", "cold", "colocated"];
+    let mut table = Table::new(
+        "Fig 10: SLO compliance (%) vs RPS — dsv2lite, TTFT≤1s TPOT≤1s",
+    )
+    .header(
+        std::iter::once("RPS".to_string())
+            .chain(methods.iter().map(|m| display_name(m).to_string())),
+    );
+    for &rps in rates {
+        let mut cells = vec![format!("{rps}")];
+        for name in methods {
+            let att = slo_at_rps(name, rps, decode_scale)?;
+            cells.push(if att.is_nan() {
+                "-".into()
+            } else {
+                f(att * 100.0, 1)
+            });
+        }
+        table.row(cells);
+    }
+    let mut out = table.render();
+    out.push_str(
+        "\nExpected shape: ElasticMoE holds ≥90% to the highest RPS knee; \
+         Naive Cold Start degrades steadily with load (downtime backlog); \
+         Concurrent/Colocated collapses early (permanently shrunken KV).\n",
+    );
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_ordering_under_pressure() {
+        // Colocated's permanently shrunken KV and Cold Restart's downtime
+        // bite once the load approaches capacity.
+        let e = slo_at_rps("elastic", 8.0, 0.2).unwrap();
+        let c = slo_at_rps("cold", 8.0, 0.2).unwrap();
+        let l = slo_at_rps("colocated", 8.0, 0.2).unwrap();
+        // Cold Restart's downtime must cost it outright; colocated's
+        // derated transition may or may not bite at this load (its
+        // collapse in the paper needs KV-heavy models), so allow ties.
+        assert!(e > c, "elastic {e} vs cold {c}");
+        assert!(e + 0.03 >= l, "elastic {e} vs colocated {l}");
+    }
+
+    #[test]
+    fn elastic_sustains_low_load_perfectly() {
+        let e = slo_at_rps("elastic", 1.0, 0.2).unwrap();
+        assert!(e > 0.9, "{e}");
+    }
+}

@@ -1,0 +1,107 @@
+//! Fig 12 (Appendix A.2): scale-down latency across methods and models —
+//! the mirror of Fig 7, with transitions reducing the NPU count.
+
+use anyhow::Result;
+
+use crate::util::table::{f, Table};
+
+use super::common::{
+    display_name, make_method, par, par_on, paper_models, METHODS,
+};
+use crate::config::ModelConfig;
+
+fn down_transitions(m: &ModelConfig) -> Vec<(usize, usize)> {
+    match m.name {
+        "dsv3" => vec![(64, 48), (48, 40), (48, 32)],
+        _ => vec![(10, 8), (8, 6), (6, 4), (4, 2)],
+    }
+    .into_iter()
+    .filter(|&(_, b)| b >= m.min_devices && b % m.tp == 0)
+    .collect()
+}
+
+pub fn run(fast: bool) -> Result<String> {
+    let mut out = String::new();
+    let models = paper_models();
+    let models = if fast { &models[..1] } else { &models[..] };
+    for m in models {
+        let mut table = Table::new(&format!(
+            "Fig 12: scale-down latency (s) — {}",
+            m.name
+        ))
+        .header(
+            std::iter::once("transition".to_string()).chain(
+                METHODS
+                    .iter()
+                    .filter(|s| **s != "horizontal")
+                    .map(|s| display_name(s).to_string()),
+            ),
+        );
+        for &(from_n, to_n) in &down_transitions(m) {
+            let mut cells = vec![format!("{from_n}→{to_n}")];
+            for &name in METHODS.iter().filter(|s| **s != "horizontal") {
+                let cell = match down_latency(name, m, from_n, to_n) {
+                    Ok(Some(t)) => f(t, 2),
+                    _ => "—".to_string(),
+                };
+                cells.push(cell);
+            }
+            table.row(cells);
+        }
+        out.push_str(&table.render());
+        out.push('\n');
+    }
+    out.push_str(
+        "Expected shape: ElasticMoE completes scale-down in <0.15x the \
+         fastest baseline (80-90% reduction; DSv3 48→32 ≈0.10x).\n",
+    );
+    Ok(out)
+}
+
+pub fn down_latency(
+    method: &str,
+    m: &ModelConfig,
+    from_n: usize,
+    to_n: usize,
+) -> Result<Option<f64>> {
+    match method {
+        "extravagant" => {
+            let mut meth = make_method(method, m, from_n + to_n)?;
+            meth.boot(&par(m, from_n)?)?;
+            let out = meth.scale(&par_on(m, from_n..from_n + to_n)?)?;
+            Ok(Some(out.ready_after))
+        }
+        "horizontal" => Ok(None),
+        _ => {
+            let mut meth = make_method(method, m, from_n)?;
+            meth.boot(&par(m, from_n)?)?;
+            let out = meth.scale(&par(m, to_n)?)?;
+            Ok(Some(out.ready_after))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::dsv2_lite;
+
+    #[test]
+    fn elastic_scale_down_is_fastest() {
+        let m = dsv2_lite();
+        let e = down_latency("elastic", &m, 6, 4).unwrap().unwrap();
+        let c = down_latency("cold", &m, 6, 4).unwrap().unwrap();
+        assert!(e / c < 0.2, "elastic {e} vs cold {c}");
+    }
+
+    #[test]
+    fn scale_down_faster_than_scale_up_for_elastic() {
+        // Fewer transfers are needed when shrinking (Appendix E).
+        let m = dsv2_lite();
+        let down = down_latency("elastic", &m, 6, 4).unwrap().unwrap();
+        let up = super::super::fig7::scale_latency("elastic", &m, 4, 6)
+            .unwrap()
+            .unwrap();
+        assert!(down <= up * 1.1, "down {down} vs up {up}");
+    }
+}

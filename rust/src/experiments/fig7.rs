@@ -1,0 +1,124 @@
+//! Fig 7: scale-up latency across methods and models. The x-axis is
+//! source->destination NPU transitions; infeasible baselines are omitted
+//! exactly as in the paper (Extravagant needs src+dst fresh devices;
+//! Horizontal only fires on exact doubling).
+
+use anyhow::Result;
+
+use crate::util::table::{f, Table};
+
+use super::common::{
+    display_name, make_method, par, par_on, paper_models, transitions,
+    METHODS,
+};
+
+pub fn run(fast: bool) -> Result<String> {
+    let mut out = String::new();
+    let models = paper_models();
+    let models = if fast { &models[..1] } else { &models[..] };
+    for m in models {
+        let mut table = Table::new(&format!(
+            "Fig 7: scale-up latency (s) — {}",
+            m.name
+        ))
+        .header(
+            std::iter::once("transition".to_string()).chain(
+                METHODS.iter().map(|s| display_name(s).to_string()),
+            ),
+        );
+        for &(from_n, to_n) in &transitions(m) {
+            let mut cells = vec![format!("{from_n}→{to_n}")];
+            for &name in METHODS {
+                let cell = match scale_latency(name, m, from_n, to_n) {
+                    Ok(Some(t)) => f(t, 2),
+                    Ok(None) => "—".to_string(),
+                    Err(e) => {
+                        log::debug!("{name} {from_n}->{to_n}: {e}");
+                        "—".to_string()
+                    }
+                };
+                cells.push(cell);
+            }
+            table.row(cells);
+        }
+        out.push_str(&table.render());
+        out.push('\n');
+    }
+    out.push_str(
+        "Expected shape: ElasticMoE ≈0.1x the best baseline on every \
+         transition (paper: ≈0.11x, 80.9% improvement).\n",
+    );
+    Ok(out)
+}
+
+/// Run one (method, model, transition); None = infeasible (omitted bar).
+pub fn scale_latency(
+    method: &str,
+    m: &crate::config::ModelConfig,
+    from_n: usize,
+    to_n: usize,
+) -> Result<Option<f64>> {
+    match method {
+        "horizontal" => {
+            // Feasible only when resources are exactly doubled.
+            if to_n != 2 * from_n {
+                return Ok(None);
+            }
+            let mut meth = make_method(method, m, 2 * from_n)?;
+            meth.boot(&par(m, from_n)?)?;
+            let out = meth.scale(&par_on(m, from_n..2 * from_n)?)?;
+            Ok(Some(out.ready_after))
+        }
+        "extravagant" => {
+            // Needs src+dst simultaneously.
+            let mut meth = make_method(method, m, from_n + to_n)?;
+            meth.boot(&par(m, from_n)?)?;
+            let out = meth.scale(&par_on(m, from_n..from_n + to_n)?)?;
+            Ok(Some(out.ready_after))
+        }
+        _ => {
+            let mut meth = make_method(method, m, to_n.max(from_n))?;
+            meth.boot(&par(m, from_n)?)?;
+            let out = meth.scale(&par(m, to_n)?)?;
+            Ok(Some(out.ready_after))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::dsv2_lite;
+
+    #[test]
+    fn elastic_is_order_of_magnitude_faster() {
+        let m = dsv2_lite();
+        let e = scale_latency("elastic", &m, 4, 6).unwrap().unwrap();
+        let c = scale_latency("cold", &m, 4, 6).unwrap().unwrap();
+        let x = scale_latency("extravagant", &m, 4, 6).unwrap().unwrap();
+        let best_baseline = c.min(x);
+        assert!(
+            e / best_baseline < 0.2,
+            "elastic {e} vs best baseline {best_baseline}"
+        );
+    }
+
+    #[test]
+    fn horizontal_only_on_doubling() {
+        let m = dsv2_lite();
+        assert!(scale_latency("horizontal", &m, 4, 6)
+            .unwrap()
+            .is_none());
+        assert!(scale_latency("horizontal", &m, 4, 8)
+            .unwrap()
+            .is_some());
+    }
+
+    #[test]
+    fn dsv3_large_jumps_run() {
+        let m = crate::config::model::dsv3();
+        let e = scale_latency("elastic", &m, 32, 48).unwrap().unwrap();
+        let c = scale_latency("cold", &m, 32, 48).unwrap().unwrap();
+        assert!(e < c, "elastic {e} cold {c}");
+    }
+}

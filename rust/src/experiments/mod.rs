@@ -1,0 +1,61 @@
+//! Experiment harness: one module per table/figure of the paper's
+//! evaluation (§7 + Appendix A). Each regenerates the corresponding rows;
+//! `repro exp <id>` prints them and writes `reports/<id>.txt`.
+//!
+//! | id      | paper artifact                                   |
+//! |---------|--------------------------------------------------|
+//! | fig1a/b | throughput vs devices / devices vs goodput       |
+//! | fig4a/b | init-latency breakdown / weight memory vs EP     |
+//! | fig7    | scale-up latency, 5 methods x 3 models           |
+//! | fig8    | scale-up peak memory (DSv2-Lite)                 |
+//! | fig9a/b | SLO dynamics, scale-up / scale-down              |
+//! | fig10   | SLO% vs RPS sweep                                |
+//! | fig11   | ElasticMoE scale-up latency breakdown            |
+//! | fig12   | scale-down latency, methods x models             |
+//! | table1  | progressive ablation, scale-up DP3->DP4          |
+//! | table2  | throughput before/during/after scaling           |
+//! | table3  | progressive ablation, scale-down DP4->DP3        |
+
+pub mod common;
+pub mod fig1;
+pub mod fig4;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod fig10;
+pub mod fig11;
+pub mod fig12;
+pub mod tables;
+
+use anyhow::{bail, Result};
+
+/// All experiment ids in paper order.
+pub const ALL: &[&str] = &[
+    "fig1a", "fig1b", "fig4a", "fig4b", "fig7", "fig8", "fig9a", "fig9b",
+    "fig10", "fig11", "fig12", "table1", "table2", "table3",
+];
+
+/// Run one experiment by id, returning the rendered report.
+pub fn run(id: &str, fast: bool) -> Result<String> {
+    let report = match id {
+        "fig1a" => fig1::fig1a()?,
+        "fig1b" => fig1::fig1b()?,
+        "fig4a" => fig4::fig4a()?,
+        "fig4b" => fig4::fig4b()?,
+        "fig7" => fig7::run(fast)?,
+        "fig8" => fig8::run()?,
+        "fig9a" => fig9::scale_up(fast)?,
+        "fig9b" => fig9::scale_down(fast)?,
+        "fig10" => fig10::run(fast)?,
+        "fig11" => fig11::run()?,
+        "fig12" => fig12::run(fast)?,
+        "table1" => tables::table1()?,
+        "table2" => tables::table2(fast)?,
+        "table3" => tables::table3()?,
+        other => bail!("unknown experiment '{other}' (see `repro exp list`)"),
+    };
+    // Persist alongside printing.
+    let _ = std::fs::create_dir_all("reports");
+    let _ = std::fs::write(format!("reports/{id}.txt"), &report);
+    Ok(report)
+}

@@ -1,0 +1,256 @@
+//! Tables 1/3 (progressive ablation, scale-up and scale-down) and Table 2
+//! (throughput before/during/after scaling).
+
+use anyhow::Result;
+
+use crate::config::model::dsv2_lite;
+use crate::config::SloConfig;
+use crate::coordinator::{ServingSim, Trigger};
+use crate::device::Timings;
+use crate::engine::CostModel;
+use crate::hmm::control::HmmOptions;
+use crate::imm::manager::ImmOptions;
+use crate::util::table::{f, Table};
+use crate::workload::{WorkloadGen, WorkloadSpec};
+
+use super::common::{elastic_with_opts, par};
+use crate::scaling::ScalingMethod;
+
+/// The cumulative ablation ladder of Tables 1/3.
+fn ablation_ladder() -> Vec<(&'static str, HmmOptions, ImmOptions)> {
+    let full = HmmOptions::default();
+    let imm = ImmOptions::default();
+    vec![
+        ("ElasticMoE (full)", full, imm),
+        (
+            "- IPCAlloc",
+            HmmOptions {
+                ipc_safe_alloc: false,
+                ..full
+            },
+            imm,
+        ),
+        (
+            "- HCCL",
+            HmmOptions {
+                ipc_safe_alloc: false,
+                use_p2p: false,
+                ..full
+            },
+            imm,
+        ),
+        (
+            "- PreInit",
+            HmmOptions {
+                ipc_safe_alloc: false,
+                use_p2p: false,
+                ..full
+            },
+            ImmOptions {
+                pre_init: false,
+                ..imm
+            },
+        ),
+        (
+            "- ZeroCopy",
+            HmmOptions {
+                ipc_safe_alloc: false,
+                use_p2p: false,
+                use_zero_copy: false,
+                ..full
+            },
+            ImmOptions {
+                pre_init: false,
+                ..imm
+            },
+        ),
+    ]
+}
+
+fn ablation(
+    title: &str,
+    from_n: usize,
+    to_n: usize,
+    expect: &str,
+) -> Result<String> {
+    let m = dsv2_lite();
+    let mut table = Table::new(title).header([
+        "Configuration",
+        "Scale Time (s)",
+        "Down Time (s)",
+        "Peak Mem. (GB)",
+    ]);
+    for (name, hmm_opts, imm_opts) in ablation_ladder() {
+        let mut meth = elastic_with_opts(
+            &m,
+            from_n.max(to_n),
+            hmm_opts,
+            imm_opts,
+        );
+        meth.boot(&par(&m, from_n)?)?;
+        let out = meth.scale(&par(&m, to_n)?)?;
+        table.row([
+            name.to_string(),
+            f(out.ready_after, 2),
+            f(out.metrics.downtime, 2),
+            f(out.metrics.peak_gb(), 1),
+        ]);
+    }
+    let mut s = table.render();
+    s.push_str(expect);
+    Ok(s)
+}
+
+/// Table 1: scale-up DP3 -> DP4 (6 -> 8 devices at TP2).
+pub fn table1() -> Result<String> {
+    ablation(
+        "Table 1: progressive ablation, scale-up DP3→DP4 (dsv2lite)",
+        6,
+        8,
+        "\nExpected shape (paper: 2.43 / 3.14 / 10.42 / 62.78 / 67.40 s): \
+         each removal slows scaling — IPCAlloc slightly (but raises peak \
+         memory), HCCL by an order of magnitude, PreInit past 60 s; only \
+         -ZeroCopy introduces downtime (= full scale time).\n",
+    )
+}
+
+/// Table 3: scale-down DP4 -> DP3 (8 -> 6 devices at TP2).
+pub fn table3() -> Result<String> {
+    ablation(
+        "Table 3: progressive ablation, scale-down DP4→DP3 (dsv2lite)",
+        8,
+        6,
+        "\nExpected shape (paper: 1.38 / 1.36 / 7.74 / 50.21 / 64.57 s): \
+         mirrors Table 1 with smaller absolute times (fewer transfers on \
+         the way down); downtime only at -ZeroCopy.\n",
+    )
+}
+
+/// Table 2: offline throughput before/during/after a 6->8 scale-up.
+pub fn table2(fast: bool) -> Result<String> {
+    let m = dsv2_lite();
+    // Enough work that the batch outlasts the slowest transition's
+    // "during" window (~85 s for cold restart). The paper uses 10000.
+    let n_requests = if fast { 4000 } else { 10000 };
+    let command_at = 10.0;
+    let methods: [&str; 3] = ["colocated", "cold", "elastic"];
+    let mut results: Vec<(String, f64, f64, f64)> = Vec::new();
+
+    // The "during" window is +-5s around the longest transition (the
+    // paper pins it to Cold Restart's).
+    let mut longest = 0.0f64;
+    let mut raw: Vec<(String, crate::coordinator::SimOutput)> = Vec::new();
+    for name in methods {
+        let mut meth = super::common::make_method(name, &m, 8)?;
+        let sim = ServingSim::new(
+            CostModel::new(m.clone(), Timings::cloudmatrix()),
+            SloConfig::new(1e9, 1e9), // offline: no SLO
+        );
+        let mut g = WorkloadGen::new(WorkloadSpec::offline_batch());
+        let arrivals = g.offline_batch(n_requests);
+        let out = sim.run(
+            meth.as_mut(),
+            &par(&m, 6)?,
+            arrivals,
+            Trigger::Manual(vec![(command_at, par(&m, 8)?)]),
+            1e7, // offline: run to completion
+        )?;
+        if let Some(ev) = out.scaling_events.first() {
+            longest = longest.max(ev.ready_after);
+        }
+        raw.push((super::common::display_name(name).to_string(), out));
+    }
+    let during0 = command_at - 5.0;
+    let during1 = command_at + longest + 5.0;
+    let slo = SloConfig::new(1e9, 1e9);
+    for (name, out) in raw {
+        let before = out.recorder.window(0.0, during0, &slo);
+        let during = out.recorder.window(during0, during1, &slo);
+        let after = out.recorder.window(during1, out.end_time, &slo);
+        results.push((
+            name,
+            before.throughput_rps,
+            during.throughput_rps,
+            after.throughput_rps,
+        ));
+    }
+
+    let mut table = Table::new(
+        "Table 2: throughput (req/s) before/during/after scale-up 6→8 — \
+         dsv2lite offline batch",
+    )
+    .header(["Method", "Before", "During", "After"]);
+    for (name, b, d, a) in &results {
+        table.row([name.clone(), f(*b, 3), f(*d, 3), f(*a, 3)]);
+    }
+    let mut s = table.render();
+    s.push_str(
+        "\nExpected shape (paper: Concurrent 1.34/0.47/2.27, Cold \
+         6.00/2.06/7.82, Elastic 6.00/3.94/7.82): Colocated is crippled \
+         even before scaling (reserved KV); during the transition Elastic \
+         sustains ~2x Cold Restart's throughput with zero downtime; all \
+         methods improve after.\n",
+    );
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_ordering_matches_paper() {
+        let m = dsv2_lite();
+        let mut times = Vec::new();
+        let mut downs = Vec::new();
+        let mut peaks = Vec::new();
+        for (_, h, i) in ablation_ladder() {
+            let mut meth = elastic_with_opts(&m, 8, h, i);
+            meth.boot(&par(&m, 6).unwrap()).unwrap();
+            let out = meth.scale(&par(&m, 8).unwrap()).unwrap();
+            times.push(out.ready_after);
+            downs.push(out.metrics.downtime);
+            peaks.push(out.metrics.peak_gb());
+        }
+        // Monotone non-decreasing scale time down the ladder.
+        for w in times.windows(2) {
+            assert!(w[1] >= w[0] * 0.99, "{times:?}");
+        }
+        // -HCCL is an order of magnitude over full.
+        assert!(times[2] > times[0] * 2.5, "{times:?}");
+        // -PreInit exceeds 40 s.
+        assert!(times[3] > 40.0, "{times:?}");
+        // Downtime appears only at -ZeroCopy.
+        assert!(downs[..4].iter().all(|&d| d == 0.0), "{downs:?}");
+        assert!(downs[4] > 0.0, "{downs:?}");
+        // -IPCAlloc raises peak memory.
+        assert!(peaks[1] > peaks[0] * 1.05, "{peaks:?}");
+    }
+
+    #[test]
+    fn table2_fast_shape() {
+        let report = table2(true).unwrap();
+        assert!(report.contains("Before"));
+        // Parse the elastic and cold rows and compare the During columns.
+        let get = |name: &str| -> Vec<f64> {
+            report
+                .lines()
+                .find(|l| l.contains(name))
+                .unwrap()
+                .split_whitespace()
+                .rev()
+                .take(3)
+                .map(|x| x.parse::<f64>().unwrap())
+                .collect::<Vec<_>>()
+                .into_iter()
+                .rev()
+                .collect()
+        };
+        let elastic = get("ElasticMoE");
+        let cold = get("Cold Restart");
+        assert!(
+            elastic[1] > cold[1],
+            "during: elastic {elastic:?} vs cold {cold:?}"
+        );
+    }
+}

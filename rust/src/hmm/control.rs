@@ -1,0 +1,973 @@
+//! HMM control plane (§4.4): cluster-wide state, scaling-plan computation
+//! and execution, and zero-copy distribution of weight/KV references to
+//! inference instances.
+//!
+//! In the paper this is a Ray-based daemon coordinating per-device workers;
+//! here it is a single-owner struct driving the simulated cluster (and, on
+//! the live path, the real tensor payloads) through the primitives.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ModelConfig, ParallelConfig};
+use crate::device::hbm::RegionKind;
+use crate::device::ipc::ProcId;
+use crate::device::{Cluster, DeviceId, RegionId};
+
+use super::plan::{PlanOp, ScalePlan};
+use super::primitives::{disk_copy, p2p_copy, zero_copy};
+use super::store::{Payload, TensorStore};
+use super::weights::{UnitKind, WeightLayout, WeightUnit};
+use super::worker::Worker;
+
+/// Feature flags for the ablation study (Table 1/3). Flags are cumulative
+/// in the paper's table but independent here; the experiment disables them
+/// progressively.
+#[derive(Debug, Clone, Copy)]
+pub struct HmmOptions {
+    /// IpcSafeAllocator: allocations are IPC-sharable (D.1).
+    pub ipc_safe_alloc: bool,
+    /// HCCL P2P transfers; when false, new devices reload from disk (D.3).
+    pub use_p2p: bool,
+    /// Virtual-page expert remap; when false, expert reshaping reallocates
+    /// and copies contiguous buffers (D.5).
+    pub use_vpage: bool,
+    /// Zero-copy sharing; when false, every instance duplicates weights and
+    /// KV — which also forces downtime (old instance must stop first).
+    pub use_zero_copy: bool,
+}
+
+impl Default for HmmOptions {
+    fn default() -> Self {
+        HmmOptions {
+            ipc_safe_alloc: true,
+            use_p2p: true,
+            use_vpage: true,
+            use_zero_copy: true,
+        }
+    }
+}
+
+/// Loader for live payloads: (unit, tp_rank) -> tensors. `None` for
+/// simulation-only models.
+pub type PayloadLoader = Box<dyn Fn(&WeightUnit, usize) -> Option<Payload>>;
+
+/// Stage-level timing of an executed scaling plan (drives Fig 11).
+#[derive(Debug, Clone, Default)]
+pub struct ScaleStats {
+    pub attn_p2p_time: f64,
+    pub expert_p2p_time: f64,
+    pub remap_time: f64,
+    pub kv_init_time: f64,
+    /// Non-vpage realloc penalty (ablation only).
+    pub realloc_time: f64,
+    pub total: f64,
+}
+
+/// The weight/KV references handed to one inference instance: its private
+/// snapshot of the memory layout. Old instances keep serving from their
+/// snapshot while the control plane prepares the next one — this is what
+/// makes scale-while-serve safe.
+#[derive(Debug, Clone)]
+pub struct InstanceBinding {
+    pub proc: ProcId,
+    pub parallel: ParallelConfig,
+    /// Per device: (tag, region) of non-expert units.
+    pub attn_regions: BTreeMap<DeviceId, Vec<(String, RegionId)>>,
+    /// `[layer][expert] -> (device, region)`.
+    pub expert_map: Vec<BTreeMap<usize, (DeviceId, RegionId)>>,
+    /// Per device KV-cache region.
+    pub kv_regions: BTreeMap<DeviceId, RegionId>,
+}
+
+/// The HMM control plane.
+pub struct HmmControl {
+    pub cluster: Rc<RefCell<Cluster>>,
+    pub model: ModelConfig,
+    pub opts: HmmOptions,
+    pub store: TensorStore,
+    workers: BTreeMap<DeviceId, Worker>,
+    loader: Option<PayloadLoader>,
+    /// Current (target) configuration and its layout.
+    layout: Option<(ParallelConfig, WeightLayout)>,
+    /// Source of truth for expert ownership: `[layer][expert] -> device`.
+    /// Updated by plan execution (layout recomputation would lose the
+    /// minimal-movement placement history).
+    expert_owner: Vec<Vec<DeviceId>>,
+    /// Zero-copy references held by each attached instance.
+    attachments: HashMap<ProcId, Vec<(DeviceId, RegionId)>>,
+    /// Regions owned by duplicated (non-zero-copy) instances.
+    private_regions: HashMap<ProcId, Vec<(DeviceId, RegionId)>>,
+    /// Orphaned expert pages freed at switchover.
+    deferred_frees: Vec<(DeviceId, RegionId)>,
+    kv_bytes_per_device: u64,
+    next_proc: ProcId,
+}
+
+impl HmmControl {
+    pub fn new(
+        cluster: Rc<RefCell<Cluster>>,
+        model: ModelConfig,
+        opts: HmmOptions,
+    ) -> Self {
+        HmmControl {
+            cluster,
+            model,
+            opts,
+            store: TensorStore::new(),
+            workers: BTreeMap::new(),
+            loader: None,
+            layout: None,
+            expert_owner: Vec::new(),
+            attachments: HashMap::new(),
+            private_regions: HashMap::new(),
+            deferred_frees: Vec::new(),
+            kv_bytes_per_device: 0,
+            next_proc: 1,
+        }
+    }
+
+    pub fn set_loader(&mut self, loader: PayloadLoader) {
+        self.loader = Some(loader);
+    }
+
+    pub fn alloc_proc(&mut self) -> ProcId {
+        let p = self.next_proc;
+        self.next_proc += 1;
+        p
+    }
+
+    pub fn current_parallel(&self) -> Option<&ParallelConfig> {
+        self.layout.as_ref().map(|(p, _)| p)
+    }
+
+    pub fn worker(&self, dev: DeviceId) -> Option<&Worker> {
+        self.workers.get(&dev)
+    }
+
+    fn load_payload(&self, unit: &WeightUnit, tp_rank: usize) -> Option<Payload> {
+        self.loader.as_ref().and_then(|f| f(unit, tp_rank))
+    }
+
+    /// ---- initial boot ----------------------------------------------------
+
+    /// Load the initial configuration from disk: every unit is read once
+    /// (disk-copy dedup) and replicas come over P2P. Also allocates KV
+    /// caches. Returns the memory-operation time (max over devices, which
+    /// load in parallel).
+    pub fn load_initial(
+        &mut self,
+        parallel: &ParallelConfig,
+        kv_bytes_per_device: u64,
+    ) -> Result<f64> {
+        parallel.check_model(&self.model)?;
+        let layout = WeightLayout::compute(&self.model, parallel);
+        let mut cluster = self.cluster.borrow_mut();
+        let ipc = self.opts.ipc_safe_alloc;
+        // tag -> (device, region) of the first resident copy.
+        let mut first_copy: HashMap<String, (DeviceId, RegionId)> = HashMap::new();
+        let mut busy: BTreeMap<DeviceId, f64> = BTreeMap::new();
+
+        for &dev in &parallel.devices {
+            self.workers.entry(dev).or_insert_with(|| Worker::new(dev));
+        }
+        for &dev in &parallel.devices {
+            let rank = layout.tp_rank[&dev];
+            for unit in layout.units(dev) {
+                let tag = unit.tag(rank);
+                let kind = if unit.is_expert() {
+                    RegionKind::ExpertWeights
+                } else {
+                    RegionKind::AttnWeights
+                };
+                let payload = self.load_payload(unit, rank);
+                let (region, t) = if let Some(&(src_dev, src_region)) =
+                    first_copy.get(&tag)
+                {
+                    if self.opts.use_p2p {
+                        let (r, t) = p2p_copy(
+                            &mut cluster, &mut self.store, src_dev,
+                            src_region, dev, &tag, kind, ipc,
+                        )?;
+                        *busy.entry(src_dev).or_default() += t;
+                        (r, t)
+                    } else {
+                        disk_copy(
+                            &mut cluster, &mut self.store, dev,
+                            &format!("{tag}#{dev}"), unit.bytes, kind, ipc,
+                            payload,
+                        )?
+                    }
+                } else {
+                    let (r, t) = disk_copy(
+                        &mut cluster, &mut self.store, dev, &tag, unit.bytes,
+                        kind, ipc, payload,
+                    )?;
+                    first_copy.insert(tag.clone(), (dev, r));
+                    (r, t)
+                };
+                *busy.entry(dev).or_default() += t;
+                let worker = self.workers.get_mut(&dev).unwrap();
+                match unit.kind {
+                    UnitKind::Expert { layer, expert } => {
+                        worker.vpages.bind(layer, expert, region)?;
+                    }
+                    _ => {
+                        worker.regions.insert(tag, region);
+                    }
+                }
+            }
+            // KV cache allocation.
+            let kv = cluster.devices[dev].hbm.alloc(
+                kv_bytes_per_device,
+                RegionKind::KvCache,
+                ipc,
+                "kv",
+            )?;
+            *busy.entry(dev).or_default() +=
+                cluster.timings.kv_alloc(kv_bytes_per_device);
+            self.workers.get_mut(&dev).unwrap().kv_region = Some(kv);
+        }
+        self.kv_bytes_per_device = kv_bytes_per_device;
+        self.expert_owner = layout.expert_owner.clone();
+        self.layout = Some((parallel.clone(), layout));
+        Ok(busy.values().cloned().fold(0.0, f64::max))
+    }
+
+    /// Minimal-movement balanced expert placement: keep every expert on its
+    /// current device where possible (subject to balanced per-rank target
+    /// counts), moving only the overflow and the experts on departing
+    /// devices ("global remapping ... while minimizing data transfer", §5.2).
+    fn rebalance_experts(
+        current: &[DeviceId],
+        to: &ParallelConfig,
+    ) -> Vec<DeviceId> {
+        let n = current.len();
+        let ep = to.ep;
+        // Balanced targets: first (n % ep) ranks take one extra.
+        let base = n / ep;
+        let extra = n % ep;
+        let mut target: BTreeMap<DeviceId, usize> = BTreeMap::new();
+        for (rank, &dev) in to.devices.iter().enumerate() {
+            target.insert(dev, base + usize::from(rank < extra));
+        }
+        let mut count: BTreeMap<DeviceId, usize> = BTreeMap::new();
+        let mut owner = vec![DeviceId::MAX; n];
+        let mut pending = Vec::new();
+        for (e, &cur) in current.iter().enumerate() {
+            let keep = target
+                .get(&cur)
+                .map(|&t| count.get(&cur).copied().unwrap_or(0) < t)
+                .unwrap_or(false);
+            if keep {
+                owner[e] = cur;
+                *count.entry(cur).or_default() += 1;
+            } else {
+                pending.push(e);
+            }
+        }
+        // Fill under-target devices in rank order (deterministic).
+        let mut fill = to.devices.iter().copied().cycle();
+        for e in pending {
+            loop {
+                let dev = fill.next().unwrap();
+                let c = count.entry(dev).or_default();
+                if *c < target[&dev] {
+                    owner[e] = dev;
+                    *c += 1;
+                    break;
+                }
+            }
+        }
+        owner
+    }
+
+    /// ---- scaling ----------------------------------------------------------
+
+    /// Compute the minimal-cost redistribution plan from the current
+    /// configuration to `to` (§5.2 "HMM Reconfigures Memory Layout").
+    pub fn plan_scale(&self, to: &ParallelConfig) -> Result<ScalePlan> {
+        let (from, from_layout) = self
+            .layout
+            .as_ref()
+            .context("HMM not initialised (call load_initial)")?;
+        to.check_model(&self.model)?;
+        if to.tp != from.tp {
+            bail!(
+                "TP must stay fixed during scaling (paper §4.1): {} -> {}",
+                from.tp,
+                to.tp
+            );
+        }
+        let to_layout = WeightLayout::compute(&self.model, to);
+        let mut ops = Vec::new();
+
+        let survivors: Vec<DeviceId> = to
+            .devices
+            .iter()
+            .copied()
+            .filter(|d| from.devices.contains(d))
+            .collect();
+        let newcomers: Vec<DeviceId> = to
+            .devices
+            .iter()
+            .copied()
+            .filter(|d| !from.devices.contains(d))
+            .collect();
+
+        // Non-expert units: reuse on survivors, P2P to newcomers from the
+        // TP-rank-matched survivor.
+        for &dev in &survivors {
+            let rank = to_layout.tp_rank[&dev];
+            for unit in to_layout.units(dev) {
+                if !unit.is_expert() {
+                    ops.push(PlanOp::ZeroCopyReuse {
+                        dev,
+                        tag: unit.tag(rank),
+                        bytes: unit.bytes,
+                    });
+                }
+            }
+            ops.push(PlanOp::KvReuse { dev });
+        }
+        for &dev in &newcomers {
+            let rank = to_layout.tp_rank[&dev];
+            // Source: a current device with the same TP rank.
+            let src = from
+                .devices
+                .iter()
+                .copied()
+                .find(|d| from_layout.tp_rank[d] == rank)
+                .context("no TP-rank-matched source for new device")?;
+            for unit in to_layout.units(dev) {
+                if !unit.is_expert() {
+                    ops.push(PlanOp::P2pAttn {
+                        src,
+                        dst: dev,
+                        tag: unit.tag(rank),
+                        bytes: unit.bytes,
+                    });
+                }
+            }
+            ops.push(PlanOp::KvInit {
+                dev,
+                bytes: self.kv_bytes_per_device,
+            });
+        }
+
+        // Departing devices release their attention shards and KV (their
+        // experts are migrated below; the frees are deferred to drain).
+        for &dev in &from.devices {
+            if !to.devices.contains(&dev) {
+                ops.push(PlanOp::ReleaseShard { dev });
+            }
+        }
+
+        // Experts: minimal-movement rebalance; migrate only owner changes.
+        for layer in 0..self.model.n_layers as usize {
+            let new_owners =
+                Self::rebalance_experts(&self.expert_owner[layer], to);
+            for e in 0..self.model.n_experts as usize {
+                let old_owner = self.expert_owner[layer][e];
+                let new_owner = new_owners[e];
+                if old_owner == new_owner {
+                    ops.push(PlanOp::ZeroCopyReuse {
+                        dev: new_owner,
+                        tag: format!("layer{layer}.expert{e}"),
+                        bytes: self.model.expert_bytes(),
+                    });
+                } else {
+                    ops.push(PlanOp::MigrateExpert {
+                        layer,
+                        expert: e,
+                        src: old_owner,
+                        dst: new_owner,
+                        bytes: self.model.expert_bytes(),
+                    });
+                    ops.push(PlanOp::EvictExpert {
+                        layer,
+                        expert: e,
+                        dev: old_owner,
+                    });
+                }
+            }
+        }
+
+        Ok(ScalePlan {
+            from_label: from.label(),
+            to_label: to.label(),
+            ops,
+        })
+    }
+
+    /// Execute a scaling plan: perform the transfers/allocations against the
+    /// cluster, bind migrated experts into destination vpage tables, and
+    /// queue evicted pages for deferred free. The old configuration stays
+    /// fully usable until [`Self::apply_deferred_frees`].
+    pub fn execute_plan(
+        &mut self,
+        plan: &ScalePlan,
+        to: &ParallelConfig,
+    ) -> Result<ScaleStats> {
+        let mut stats = ScaleStats::default();
+        let ipc = self.opts.ipc_safe_alloc;
+        let to_layout = WeightLayout::compute(&self.model, to);
+        for &dev in &to.devices {
+            self.workers.entry(dev).or_insert_with(|| Worker::new(dev));
+        }
+
+        let mut owner_updates: Vec<(usize, usize, DeviceId)> = Vec::new();
+        let mut attn_transfers: Vec<(DeviceId, DeviceId, u64)> = Vec::new();
+        let mut expert_transfers: Vec<(DeviceId, DeviceId, u64)> = Vec::new();
+        let mut disk_time: BTreeMap<DeviceId, f64> = BTreeMap::new();
+        let mut remap_ops: BTreeMap<DeviceId, u64> = BTreeMap::new();
+        let mut kv_inits: Vec<(DeviceId, u64)> = Vec::new();
+
+        {
+            let mut cluster = self.cluster.borrow_mut();
+            for op in &plan.ops {
+                match op {
+                    PlanOp::ZeroCopyReuse { .. } | PlanOp::KvReuse { .. } => {}
+                    PlanOp::P2pAttn {
+                        src,
+                        dst,
+                        tag,
+                        bytes,
+                    } => {
+                        let rank = to_layout.tp_rank[dst];
+                        if self.opts.use_p2p {
+                            let src_region = self
+                                .workers
+                                .get(src)
+                                .and_then(|w| w.regions.get(tag).copied())
+                                .with_context(|| {
+                                    format!("source region for '{tag}' missing on dev {src}")
+                                })?;
+                            let (r, _) = p2p_copy(
+                                &mut cluster, &mut self.store, *src,
+                                src_region, *dst, tag,
+                                RegionKind::AttnWeights, ipc,
+                            )?;
+                            attn_transfers.push((*src, *dst, *bytes));
+                            self.workers
+                                .get_mut(dst)
+                                .unwrap()
+                                .regions
+                                .insert(tag.clone(), r);
+                        } else {
+                            // -HCCL ablation: reload from disk.
+                            let unit = to_layout
+                                .units(*dst)
+                                .iter()
+                                .find(|u| u.tag(rank) == *tag)
+                                .cloned()
+                                .context("unit for tag")?;
+                            let payload = self.load_payload(&unit, rank);
+                            let (r, t) = disk_copy(
+                                &mut cluster, &mut self.store, *dst,
+                                &format!("{tag}#scale{dst}"), *bytes,
+                                RegionKind::AttnWeights, ipc, payload,
+                            )?;
+                            *disk_time.entry(*dst).or_default() += t;
+                            self.workers
+                                .get_mut(dst)
+                                .unwrap()
+                                .regions
+                                .insert(tag.clone(), r);
+                        }
+                    }
+                    PlanOp::MigrateExpert {
+                        layer,
+                        expert,
+                        src,
+                        dst,
+                        bytes,
+                    } => {
+                        let tag = format!("layer{layer}.expert{expert}");
+                        let src_region = self
+                            .workers
+                            .get(src)
+                            .and_then(|w| w.vpages.lookup(*layer, *expert))
+                            .with_context(|| {
+                                format!("expert {tag} not resident on dev {src}")
+                            })?;
+                        let (r, t) = if self.opts.use_p2p {
+                            let (r, _) = p2p_copy(
+                                &mut cluster, &mut self.store, *src,
+                                src_region, *dst, &tag,
+                                RegionKind::ExpertWeights, ipc,
+                            )?;
+                            expert_transfers.push((*src, *dst, *bytes));
+                            (r, 0.0)
+                        } else {
+                            let unit = WeightUnit {
+                                kind: UnitKind::Expert {
+                                    layer: *layer,
+                                    expert: *expert,
+                                },
+                                bytes: *bytes,
+                            };
+                            let payload = self.load_payload(&unit, 0);
+                            disk_copy(
+                                &mut cluster, &mut self.store, *dst,
+                                &format!("{tag}#scale{dst}"), *bytes,
+                                RegionKind::ExpertWeights, ipc, payload,
+                            )?
+                        };
+                        *disk_time.entry(*dst).or_default() += t;
+                        self.workers
+                            .get_mut(dst)
+                            .unwrap()
+                            .vpages
+                            .bind(*layer, *expert, r)?;
+                        *remap_ops.entry(*dst).or_default() += 1;
+                        owner_updates.push((*layer, *expert, *dst));
+                    }
+                    PlanOp::EvictExpert { layer, expert, dev } => {
+                        let region = self
+                            .workers
+                            .get_mut(dev)
+                            .and_then(|w| w.vpages.unbind(*layer, *expert).ok())
+                            .with_context(|| {
+                                format!("evict: expert missing on dev {dev}")
+                            })?;
+                        // Pages stay mapped for the old instance until
+                        // switchover (deferred free).
+                        self.deferred_frees.push((*dev, region));
+                        *remap_ops.entry(*dev).or_default() += 1;
+                    }
+                    PlanOp::ReleaseShard { dev } => {
+                        if let Some(w) = self.workers.get_mut(dev) {
+                            for (_, region) in std::mem::take(&mut w.regions)
+                            {
+                                self.deferred_frees.push((*dev, region));
+                            }
+                            if let Some(kv) = w.kv_region.take() {
+                                self.deferred_frees.push((*dev, kv));
+                            }
+                        }
+                    }
+                    PlanOp::KvInit { dev, bytes } => {
+                        let kv = cluster.devices[*dev].hbm.alloc(
+                            *bytes,
+                            RegionKind::KvCache,
+                            ipc,
+                            "kv",
+                        )?;
+                        self.workers.get_mut(dev).unwrap().kv_region = Some(kv);
+                        kv_inits.push((*dev, *bytes));
+                    }
+                }
+            }
+
+            // Stage timing.
+            stats.attn_p2p_time = cluster
+                .interconnect
+                .parallel_transfers(&attn_transfers);
+            stats.expert_p2p_time = cluster
+                .interconnect
+                .parallel_transfers(&expert_transfers);
+            let disk_max = disk_time.values().cloned().fold(0.0, f64::max);
+            stats.attn_p2p_time += disk_max;
+            stats.remap_time = remap_ops
+                .values()
+                .map(|&n| n as f64 * cluster.timings.vpage_remap_per_expert)
+                .fold(0.0, f64::max);
+            if !self.opts.use_vpage {
+                // Realloc path: every device whose expert set changed must
+                // rebuild its contiguous expert buffer (alloc + copy), with
+                // a transient double allocation.
+                let mut realloc = 0.0f64;
+                for (&dev, _) in remap_ops.iter() {
+                    let local_bytes: u64 = self
+                        .workers
+                        .get(&dev)
+                        .map(|w| {
+                            w.vpages.bound_count() as u64
+                                * self.model.expert_bytes()
+                        })
+                        .unwrap_or(0);
+                    let scratch = cluster.devices[dev].hbm.alloc(
+                        local_bytes,
+                        RegionKind::Scratch,
+                        false,
+                        "realloc-scratch",
+                    )?;
+                    cluster.devices[dev].hbm.release(scratch)?;
+                    realloc =
+                        realloc.max(cluster.timings.realloc_copy(local_bytes));
+                }
+                stats.realloc_time = realloc;
+            }
+            stats.kv_init_time = kv_inits
+                .iter()
+                .map(|&(_, b)| cluster.timings.kv_alloc(b))
+                .fold(0.0, f64::max);
+        }
+
+        // New configuration becomes current; old instance bindings keep
+        // their snapshots. The layout's expert placement is overridden with
+        // the actual (minimal-movement) ownership.
+        for (layer, expert, dev) in owner_updates {
+            self.expert_owner[layer][expert] = dev;
+        }
+        let mut new_layout = WeightLayout::compute(&self.model, to);
+        new_layout.expert_owner = self.expert_owner.clone();
+        self.layout = Some((to.clone(), new_layout));
+        stats.total = stats.attn_p2p_time
+            + stats.expert_p2p_time
+            + stats.remap_time
+            + stats.realloc_time
+            + stats.kv_init_time;
+        Ok(stats)
+    }
+
+    /// Free pages orphaned by the last scaling event (called after the old
+    /// instance has drained and detached — §5.2 switchover).
+    pub fn apply_deferred_frees(&mut self) -> Result<usize> {
+        let mut cluster = self.cluster.borrow_mut();
+        let n = self.deferred_frees.len();
+        for (dev, region) in self.deferred_frees.drain(..) {
+            cluster.devices[dev].hbm.release(region)?;
+        }
+        Ok(n)
+    }
+
+    pub fn deferred_free_count(&self) -> usize {
+        self.deferred_frees.len()
+    }
+
+    /// ---- instance attach/detach -------------------------------------------
+
+    /// Hand the current configuration's weights and KV to an instance via
+    /// zero-copy handles. Returns the binding snapshot and the time charged.
+    /// Without zero-copy (ablation) the instance receives private duplicates
+    /// of every region — slow and memory-doubling.
+    pub fn attach_instance(&mut self, proc: ProcId) -> Result<(InstanceBinding, f64)> {
+        let (parallel, _layout) = self
+            .layout
+            .as_ref()
+            .context("HMM not initialised")?
+            .clone();
+        let mut time = 0.0;
+        let mut shares: Vec<(DeviceId, RegionId)> = Vec::new();
+        let mut privates: Vec<(DeviceId, RegionId)> = Vec::new();
+        let mut attn_regions: BTreeMap<DeviceId, Vec<(String, RegionId)>> =
+            BTreeMap::new();
+        let mut expert_map: Vec<BTreeMap<usize, (DeviceId, RegionId)>> =
+            vec![BTreeMap::new(); self.model.n_layers as usize];
+        let mut kv_regions = BTreeMap::new();
+        let mut cluster = self.cluster.borrow_mut();
+
+        for &dev in &parallel.devices {
+            let worker = self
+                .workers
+                .get(&dev)
+                .with_context(|| format!("no worker on dev {dev}"))?
+                .clone();
+            // Non-expert units + KV + experts.
+            let mut all: Vec<(String, RegionId, RegionKind)> = worker
+                .regions
+                .iter()
+                .map(|(t, &r)| (t.clone(), r, RegionKind::AttnWeights))
+                .collect();
+            if let Some(kv) = worker.kv_region {
+                all.push(("kv".into(), kv, RegionKind::KvCache));
+            }
+            for (layer, expert, region) in worker.vpages.all_bindings() {
+                all.push((
+                    format!("layer{layer}.expert{expert}"),
+                    region,
+                    RegionKind::ExpertWeights,
+                ));
+            }
+            // True zero-copy sharing needs both the feature and IPC-safe
+            // allocations; without the IpcSafeAllocator sharing degrades to
+            // device-local staging copies (Table 1 `-IPCAlloc`: small
+            // latency bump, large peak-memory bump, still no downtime).
+            let can_share =
+                self.opts.use_zero_copy && self.opts.ipc_safe_alloc;
+            for (tag, region, kind) in all {
+                if can_share {
+                    time += zero_copy(&mut cluster, dev, region, 0, proc)?;
+                    shares.push((dev, region));
+                    Self::record_binding(
+                        &mut attn_regions, &mut expert_map, &mut kv_regions,
+                        dev, &tag, region, kind,
+                    );
+                } else {
+                    // Duplicate the region privately (memcpy on device).
+                    let bytes = cluster.devices[dev]
+                        .hbm
+                        .region(region)
+                        .context("region")?
+                        .bytes;
+                    let dup = cluster.devices[dev].hbm.alloc(
+                        bytes,
+                        kind,
+                        false,
+                        format!("{tag}#dup{proc}"),
+                    )?;
+                    time += cluster.timings.realloc_copy(bytes);
+                    if let Some(p) = self.store.get(dev, region) {
+                        self.store.put(dev, dup, p);
+                    }
+                    privates.push((dev, dup));
+                    Self::record_binding(
+                        &mut attn_regions, &mut expert_map, &mut kv_regions,
+                        dev, &tag, dup, kind,
+                    );
+                }
+            }
+        }
+        drop(cluster);
+        self.attachments.insert(proc, shares);
+        if !privates.is_empty() {
+            self.private_regions.insert(proc, privates);
+        }
+        Ok((
+            InstanceBinding {
+                proc,
+                parallel,
+                attn_regions,
+                expert_map,
+                kv_regions,
+            },
+            time,
+        ))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn record_binding(
+        attn_regions: &mut BTreeMap<DeviceId, Vec<(String, RegionId)>>,
+        expert_map: &mut [BTreeMap<usize, (DeviceId, RegionId)>],
+        kv_regions: &mut BTreeMap<DeviceId, RegionId>,
+        dev: DeviceId,
+        tag: &str,
+        region: RegionId,
+        kind: RegionKind,
+    ) {
+        match kind {
+            RegionKind::KvCache => {
+                kv_regions.insert(dev, region);
+            }
+            RegionKind::ExpertWeights => {
+                // tag = "layer{L}.expert{E}"
+                if let Some((l, e)) = parse_expert_tag(tag) {
+                    expert_map[l].insert(e, (dev, region));
+                }
+            }
+            _ => {
+                attn_regions
+                    .entry(dev)
+                    .or_default()
+                    .push((tag.to_string(), region));
+            }
+        }
+    }
+
+    /// Release an instance's references (switchover completion / teardown).
+    pub fn detach_instance(&mut self, proc: ProcId) -> Result<()> {
+        let mut cluster = self.cluster.borrow_mut();
+        if let Some(shares) = self.attachments.remove(&proc) {
+            for (dev, region) in shares {
+                cluster.devices[dev].hbm.release(region)?;
+            }
+        }
+        if let Some(privates) = self.private_regions.remove(&proc) {
+            for (dev, region) in privates {
+                cluster.devices[dev].hbm.release(region)?;
+                self.store.remove(dev, region);
+            }
+        }
+        Ok(())
+    }
+
+    /// Tear down everything the HMM holds (cold-restart baselines).
+    pub fn teardown_all(&mut self) -> Result<()> {
+        let mut cluster = self.cluster.borrow_mut();
+        for (_, worker) in std::mem::take(&mut self.workers) {
+            for region in worker.all_regions() {
+                // Regions may hold extra refs from live attachments; release
+                // the HMM's own reference.
+                let _ = cluster.devices[worker.dev].hbm.release(region);
+                self.store.remove(worker.dev, region);
+            }
+        }
+        drop(cluster);
+        self.deferred_frees.clear();
+        self.layout = None;
+        Ok(())
+    }
+
+    /// Payload lookup for the live engine.
+    pub fn payload(&self, dev: DeviceId, region: RegionId) -> Option<Payload> {
+        self.store.get(dev, region)
+    }
+}
+
+fn parse_expert_tag(tag: &str) -> Option<(usize, usize)> {
+    let rest = tag.strip_prefix("layer")?;
+    let (l, e) = rest.split_once(".expert")?;
+    Some((l.parse().ok()?, e.parse().ok()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::dsv2_lite;
+
+    fn setup(n_dev: usize) -> (Rc<RefCell<Cluster>>, HmmControl) {
+        let cluster = Rc::new(RefCell::new(Cluster::cloudmatrix(n_dev)));
+        let hmm = HmmControl::new(
+            cluster.clone(),
+            dsv2_lite(),
+            HmmOptions::default(),
+        );
+        (cluster, hmm)
+    }
+
+    fn par(dp: usize, tp: usize, devs: std::ops::Range<usize>) -> ParallelConfig {
+        ParallelConfig::standard(dp, tp, devs.collect()).unwrap()
+    }
+
+    const KV: u64 = 8 << 30;
+
+    #[test]
+    fn initial_load_places_everything() {
+        let (cluster, mut hmm) = setup(4);
+        let p = par(2, 2, 0..4);
+        let t = hmm.load_initial(&p, KV).unwrap();
+        assert!(t > 1.0, "cold load should take seconds: {t}");
+        let c = cluster.borrow();
+        for d in 0..4 {
+            let used = c.devices[d].hbm.used();
+            assert!(used > KV, "device {d} has weights + kv: {used}");
+        }
+        // Every expert bound exactly once across workers.
+        let total: usize = (0..4)
+            .map(|d| hmm.worker(d).unwrap().vpages.bound_count())
+            .sum();
+        assert_eq!(total, (27 * 64) as usize);
+    }
+
+    #[test]
+    fn scale_up_plan_maximises_reuse() {
+        let (_c, mut hmm) = setup(6);
+        hmm.load_initial(&par(2, 2, 0..4), KV).unwrap();
+        let plan = hmm.plan_scale(&par(3, 2, 0..6)).unwrap();
+        // TP fixed: attention on survivors reused, never moved.
+        assert!(plan.reuse_fraction() > 0.5, "{}", plan.reuse_fraction());
+        // Migrations only to the two new devices.
+        for op in &plan.ops {
+            if let PlanOp::MigrateExpert { dst, .. } = op {
+                assert!(*dst >= 4, "migration to survivor {dst}");
+            }
+        }
+        // 64 experts over 6 ranks: ranks 4,5 get ~1/3 of experts per layer.
+        let migrated = plan.migrated_expert_count();
+        assert!(migrated > 0);
+        assert_eq!(migrated, plan.evicted_expert_count());
+    }
+
+    #[test]
+    fn execute_plan_times_and_deferred_frees() {
+        let (cluster, mut hmm) = setup(6);
+        hmm.load_initial(&par(2, 2, 0..4), KV).unwrap();
+        let used_before: u64 = cluster.borrow().used_over(&[0, 1, 2, 3]);
+        let to = par(3, 2, 0..6);
+        let plan = hmm.plan_scale(&to).unwrap();
+        let stats = hmm.execute_plan(&plan, &to).unwrap();
+        assert!(stats.total > 0.0 && stats.total < 10.0, "{stats:?}");
+        assert!(stats.expert_p2p_time > 0.0);
+        assert!(stats.kv_init_time > 0.0);
+        // Old pages still resident (deferred).
+        assert!(hmm.deferred_free_count() > 0);
+        let used_mid: u64 = cluster.borrow().used_over(&[0, 1, 2, 3]);
+        assert_eq!(used_mid, used_before, "survivor usage unchanged mid-scale");
+        let n = hmm.apply_deferred_frees().unwrap();
+        assert!(n > 0);
+        let used_after: u64 = cluster.borrow().used_over(&[0, 1, 2, 3]);
+        assert!(used_after < used_before, "evicted experts freed");
+    }
+
+    #[test]
+    fn scale_down_moves_experts_to_survivors() {
+        let (cluster, mut hmm) = setup(6);
+        hmm.load_initial(&par(3, 2, 0..6), KV).unwrap();
+        let to = par(2, 2, 0..4);
+        let plan = hmm.plan_scale(&to).unwrap();
+        for op in &plan.ops {
+            if let PlanOp::MigrateExpert { src, dst, .. } = op {
+                assert!(*src >= 4 && *dst < 4, "src {src} dst {dst}");
+            }
+        }
+        let stats = hmm.execute_plan(&plan, &to).unwrap();
+        assert!(stats.total > 0.0);
+        hmm.apply_deferred_frees().unwrap();
+        // Devices 4,5 still hold attention (until instance teardown) but no
+        // expert pages.
+        let c = cluster.borrow();
+        assert_eq!(
+            c.devices[5].hbm.used_by_kind(RegionKind::ExpertWeights),
+            0
+        );
+    }
+
+    #[test]
+    fn tp_change_is_rejected() {
+        let (_c, mut hmm) = setup(8);
+        hmm.load_initial(&par(2, 2, 0..4), KV).unwrap();
+        let bad = ParallelConfig::standard(2, 4, (0..8).collect()).unwrap();
+        assert!(hmm.plan_scale(&bad).is_err());
+    }
+
+    #[test]
+    fn attach_zero_copy_does_not_grow_memory() {
+        let (cluster, mut hmm) = setup(4);
+        hmm.load_initial(&par(2, 2, 0..4), KV).unwrap();
+        let used = cluster.borrow().used_over(&[0, 1, 2, 3]);
+        let proc = hmm.alloc_proc();
+        let (binding, t) = hmm.attach_instance(proc).unwrap();
+        assert!(t < 2.0, "zero-copy attach should be fast: {t}");
+        assert_eq!(cluster.borrow().used_over(&[0, 1, 2, 3]), used);
+        assert_eq!(binding.kv_regions.len(), 4);
+        assert_eq!(binding.expert_map.len(), 27);
+        // Detach releases the references without freeing HMM-owned state.
+        hmm.detach_instance(proc).unwrap();
+        assert_eq!(cluster.borrow().used_over(&[0, 1, 2, 3]), used);
+    }
+
+    #[test]
+    fn attach_without_zero_copy_duplicates_memory() {
+        let cluster = Rc::new(RefCell::new(Cluster::new(
+            4,
+            256, // larger HBM so the duplicate fits
+            crate::device::Timings::cloudmatrix(),
+        )));
+        let mut hmm = HmmControl::new(
+            cluster.clone(),
+            dsv2_lite(),
+            HmmOptions {
+                use_zero_copy: false,
+                ipc_safe_alloc: false,
+                ..Default::default()
+            },
+        );
+        hmm.load_initial(&par(2, 2, 0..4), KV).unwrap();
+        let used = cluster.borrow().used_over(&[0, 1, 2, 3]);
+        let proc = hmm.alloc_proc();
+        let (_binding, t) = hmm.attach_instance(proc).unwrap();
+        let used_after = cluster.borrow().used_over(&[0, 1, 2, 3]);
+        assert!(
+            used_after > used * 19 / 10,
+            "duplication must ~double usage: {used} -> {used_after}"
+        );
+        assert!(t > 0.05, "duplication is slow: {t}");
+        hmm.detach_instance(proc).unwrap();
+        assert_eq!(cluster.borrow().used_over(&[0, 1, 2, 3]), used);
+    }
+}

@@ -1,0 +1,28 @@
+//! HBM Management Module (HMM) — the core of ElasticMoE (§4.4).
+//!
+//! The HMM decouples expensive memory operations (weight loading, KV-cache
+//! setup, expert redistribution) from inference execution. It loads weights
+//! once, keeps them resident, and serves them to inference instances through
+//! zero-copy handles. During scaling it computes a minimal-cost plan that
+//! maximises zero-copy reuse on surviving devices, provisions new devices
+//! with high-bandwidth P2P transfers, and remaps experts in place through
+//! the virtual-page tables — all while the active instance keeps serving.
+//!
+//! Structure mirrors the paper: a *control plane* ([`control::HmmControl`])
+//! coordinating *per-device workers* ([`worker`]) that execute data-plane
+//! primitives ([`primitives`]) against the simulated devices, with expert
+//! tensors managed by [`vpage`] tables.
+
+pub mod control;
+pub mod plan;
+pub mod primitives;
+pub mod store;
+pub mod vpage;
+pub mod weights;
+pub mod worker;
+
+pub use control::{HmmControl, HmmOptions};
+pub use plan::{PlanOp, ScalePlan};
+pub use store::TensorStore;
+pub use vpage::VpageTable;
+pub use weights::{UnitKind, WeightLayout, WeightUnit};

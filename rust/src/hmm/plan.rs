@@ -1,0 +1,174 @@
+//! Scaling plans: the minimal-cost weight-redistribution schedule the HMM
+//! control plane computes before a scaling event (§5.2, Fig 6).
+//!
+//! The objective is the paper's: maximise zero-copy reuse of existing
+//! weights and KV caches, restrict P2P transfers to the minimal required
+//! set, and perform expert migration via vpage remap instead of realloc.
+
+use crate::device::DeviceId;
+
+/// One planned operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanOp {
+    /// Reuse a resident unit on a surviving device via zero-copy.
+    ZeroCopyReuse { dev: DeviceId, tag: String, bytes: u64 },
+    /// P2P-copy a non-expert shard (attention/embed) to a new device.
+    P2pAttn {
+        src: DeviceId,
+        dst: DeviceId,
+        tag: String,
+        bytes: u64,
+    },
+    /// Migrate one expert to a new owner (P2P + vpage bind on dst).
+    MigrateExpert {
+        layer: usize,
+        expert: usize,
+        src: DeviceId,
+        dst: DeviceId,
+        bytes: u64,
+    },
+    /// Unbind an expert from a device that no longer owns it; the physical
+    /// pages are freed only at switchover (deferred).
+    EvictExpert {
+        layer: usize,
+        expert: usize,
+        dev: DeviceId,
+    },
+    /// Allocate a fresh KV cache on a new device.
+    KvInit { dev: DeviceId, bytes: u64 },
+    /// Reuse the existing KV cache on a surviving device.
+    KvReuse { dev: DeviceId },
+    /// Release a departing device's non-expert shards and KV cache
+    /// (deferred until the old instance drains).
+    ReleaseShard { dev: DeviceId },
+}
+
+/// A full scaling plan.
+#[derive(Debug, Clone, Default)]
+pub struct ScalePlan {
+    pub from_label: String,
+    pub to_label: String,
+    pub ops: Vec<PlanOp>,
+}
+
+impl ScalePlan {
+    /// Total bytes moved over the fabric.
+    pub fn p2p_bytes(&self) -> u64 {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                PlanOp::P2pAttn { bytes, .. }
+                | PlanOp::MigrateExpert { bytes, .. } => *bytes,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Bytes reused with zero-copy (no movement).
+    pub fn reused_bytes(&self) -> u64 {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                PlanOp::ZeroCopyReuse { bytes, .. } => *bytes,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    pub fn migrated_expert_count(&self) -> usize {
+        self.ops
+            .iter()
+            .filter(|op| matches!(op, PlanOp::MigrateExpert { .. }))
+            .count()
+    }
+
+    pub fn evicted_expert_count(&self) -> usize {
+        self.ops
+            .iter()
+            .filter(|op| matches!(op, PlanOp::EvictExpert { .. }))
+            .count()
+    }
+
+    /// The P2P transfer list `(src, dst, bytes)` for fabric timing.
+    pub fn transfers(&self) -> Vec<(DeviceId, DeviceId, u64)> {
+        self.ops
+            .iter()
+            .filter_map(|op| match op {
+                PlanOp::P2pAttn {
+                    src, dst, bytes, ..
+                } => Some((*src, *dst, *bytes)),
+                PlanOp::MigrateExpert {
+                    src, dst, bytes, ..
+                } => Some((*src, *dst, *bytes)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Reuse fraction: zero-copied bytes / (zero-copied + moved) — the
+    /// plan-quality metric the paper's design maximises.
+    pub fn reuse_fraction(&self) -> f64 {
+        let moved = self.p2p_bytes() as f64;
+        let reused = self.reused_bytes() as f64;
+        if moved + reused == 0.0 {
+            return 1.0;
+        }
+        reused / (moved + reused)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> ScalePlan {
+        ScalePlan {
+            from_label: "DP2-TP2-EP4".into(),
+            to_label: "DP3-TP2-EP6".into(),
+            ops: vec![
+                PlanOp::ZeroCopyReuse {
+                    dev: 0,
+                    tag: "embed.tp0".into(),
+                    bytes: 100,
+                },
+                PlanOp::P2pAttn {
+                    src: 0,
+                    dst: 4,
+                    tag: "layer0.attn.tp0".into(),
+                    bytes: 50,
+                },
+                PlanOp::MigrateExpert {
+                    layer: 0,
+                    expert: 3,
+                    src: 1,
+                    dst: 5,
+                    bytes: 30,
+                },
+                PlanOp::EvictExpert {
+                    layer: 0,
+                    expert: 3,
+                    dev: 1,
+                },
+                PlanOp::KvInit { dev: 4, bytes: 500 },
+                PlanOp::KvReuse { dev: 0 },
+            ],
+        }
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let p = plan();
+        assert_eq!(p.p2p_bytes(), 80);
+        assert_eq!(p.reused_bytes(), 100);
+        assert_eq!(p.migrated_expert_count(), 1);
+        assert_eq!(p.evicted_expert_count(), 1);
+        assert_eq!(p.transfers(), vec![(0, 4, 50), (1, 5, 30)]);
+        let rf = p.reuse_fraction();
+        assert!((rf - 100.0 / 180.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_plan_reuses_everything() {
+        assert_eq!(ScalePlan::default().reuse_fraction(), 1.0);
+    }
+}

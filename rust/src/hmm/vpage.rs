@@ -1,0 +1,161 @@
+//! Virtual-page expert tables (the `vpage-remap` primitive, §4.6 / D.5).
+//!
+//! Expert weights must look contiguous to kernels, but rebuilding a
+//! contiguous buffer on every EP change is O(bytes) in both time and peak
+//! memory. The paper instead backs a contiguous *virtual* range with
+//! physical pages and remaps slots in O(1). This module reproduces that
+//! mechanism: each device has, per layer, a table of expert slots mapping
+//! logical expert ids to physical regions. Migration = bind new region into
+//! a slot (O(1)); eviction = unbind (deferred free until switchover).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::device::RegionId;
+
+/// One bound expert slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Slot {
+    pub expert: usize,
+    pub region: RegionId,
+}
+
+/// Per-device virtual-page table: `layer -> ordered expert slots`.
+///
+/// The slot order *is* the virtual-address order the kernel sees; lookups
+/// and remaps are O(log E) map operations (O(1) in the paper's page-table
+/// sense: independent of tensor bytes).
+#[derive(Debug, Clone, Default)]
+pub struct VpageTable {
+    layers: BTreeMap<usize, BTreeMap<usize, RegionId>>,
+    /// Remap operations performed (ablation/telemetry).
+    pub remap_count: u64,
+}
+
+impl VpageTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bind `expert` of `layer` to a physical region. Errors if the slot is
+    /// already bound (must `unbind` first — mirrors aclrtMapMem semantics).
+    pub fn bind(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        region: RegionId,
+    ) -> Result<()> {
+        let slots = self.layers.entry(layer).or_default();
+        if slots.contains_key(&expert) {
+            bail!("layer{layer} expert{expert} already bound");
+        }
+        slots.insert(expert, region);
+        self.remap_count += 1;
+        Ok(())
+    }
+
+    /// Unbind a slot, returning the physical region (caller frees it —
+    /// usually *deferred* until the old instance switches away).
+    pub fn unbind(&mut self, layer: usize, expert: usize) -> Result<RegionId> {
+        let slots = self
+            .layers
+            .get_mut(&layer)
+            .ok_or_else(|| anyhow::anyhow!("no layer {layer}"))?;
+        let region = slots
+            .remove(&expert)
+            .ok_or_else(|| anyhow::anyhow!("layer{layer} expert{expert} not bound"))?;
+        self.remap_count += 1;
+        Ok(region)
+    }
+
+    /// Rebind an existing slot to a new region in place (migration refresh),
+    /// returning the old region.
+    pub fn rebind(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        region: RegionId,
+    ) -> Result<RegionId> {
+        let old = self.unbind(layer, expert)?;
+        self.bind(layer, expert, region)?;
+        Ok(old)
+    }
+
+    /// Physical region of a bound expert.
+    pub fn lookup(&self, layer: usize, expert: usize) -> Option<RegionId> {
+        self.layers.get(&layer)?.get(&expert).copied()
+    }
+
+    /// Experts bound for a layer, in virtual order.
+    pub fn experts(&self, layer: usize) -> Vec<usize> {
+        self.layers
+            .get(&layer)
+            .map(|s| s.keys().copied().collect())
+            .unwrap_or_default()
+    }
+
+    /// Number of bound slots across all layers.
+    pub fn bound_count(&self) -> usize {
+        self.layers.values().map(|s| s.len()).sum()
+    }
+
+    /// Every binding as `(layer, expert, region)`.
+    pub fn all_bindings(&self) -> Vec<(usize, usize, RegionId)> {
+        self.layers
+            .iter()
+            .flat_map(|(&l, slots)| {
+                slots.iter().map(move |(&e, &r)| (l, e, r))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_lookup_unbind() {
+        let mut t = VpageTable::new();
+        t.bind(0, 5, 100).unwrap();
+        t.bind(0, 9, 101).unwrap();
+        t.bind(1, 5, 102).unwrap();
+        assert_eq!(t.lookup(0, 5), Some(100));
+        assert_eq!(t.lookup(1, 5), Some(102));
+        assert_eq!(t.lookup(2, 5), None);
+        assert_eq!(t.experts(0), vec![5, 9]);
+        assert_eq!(t.bound_count(), 3);
+
+        let r = t.unbind(0, 5).unwrap();
+        assert_eq!(r, 100);
+        assert_eq!(t.lookup(0, 5), None);
+        assert!(t.unbind(0, 5).is_err());
+    }
+
+    #[test]
+    fn double_bind_rejected() {
+        let mut t = VpageTable::new();
+        t.bind(0, 1, 10).unwrap();
+        assert!(t.bind(0, 1, 11).is_err());
+        assert_eq!(t.lookup(0, 1), Some(10));
+    }
+
+    #[test]
+    fn rebind_swaps_regions() {
+        let mut t = VpageTable::new();
+        t.bind(3, 7, 50).unwrap();
+        let old = t.rebind(3, 7, 60).unwrap();
+        assert_eq!(old, 50);
+        assert_eq!(t.lookup(3, 7), Some(60));
+    }
+
+    #[test]
+    fn remap_count_tracks_operations() {
+        let mut t = VpageTable::new();
+        t.bind(0, 0, 1).unwrap();
+        t.bind(0, 1, 2).unwrap();
+        t.unbind(0, 0).unwrap();
+        assert_eq!(t.remap_count, 3);
+    }
+}

@@ -1,0 +1,66 @@
+//! Per-device HMM worker: the data-plane agent bound to one accelerator
+//! (§4.4). Tracks the regions it has allocated for weight units (by tag),
+//! its KV-cache region, and its virtual-page expert table.
+
+use std::collections::BTreeMap;
+
+use crate::device::{DeviceId, RegionId};
+
+use super::vpage::VpageTable;
+
+/// One device's HMM worker state.
+#[derive(Debug, Clone, Default)]
+pub struct Worker {
+    pub dev: DeviceId,
+    /// Non-expert weight regions by unit tag (embed/attn/shared-expert).
+    pub regions: BTreeMap<String, RegionId>,
+    /// KV-cache region, if allocated.
+    pub kv_region: Option<RegionId>,
+    /// Expert slots (virtual-page table).
+    pub vpages: VpageTable,
+}
+
+impl Worker {
+    pub fn new(dev: DeviceId) -> Self {
+        Worker {
+            dev,
+            ..Default::default()
+        }
+    }
+
+    /// All regions this worker currently references (for teardown).
+    pub fn all_regions(&self) -> Vec<RegionId> {
+        let mut out: Vec<RegionId> = self.regions.values().copied().collect();
+        out.extend(self.kv_region);
+        out.extend(self.vpages.all_bindings().into_iter().map(|(_, _, r)| r));
+        out
+    }
+
+    /// Number of zero-copy handles an instance needs from this worker
+    /// (one per non-expert unit + one per bound expert + KV).
+    pub fn handle_count(&self) -> usize {
+        self.regions.len()
+            + self.vpages.bound_count()
+            + usize::from(self.kv_region.is_some())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handle_count_tracks_state() {
+        let mut w = Worker::new(0);
+        assert_eq!(w.handle_count(), 0);
+        w.regions.insert("embed.tp0".into(), 1);
+        w.regions.insert("layer0.attn.tp0".into(), 2);
+        w.vpages.bind(0, 3, 10).unwrap();
+        w.kv_region = Some(99);
+        assert_eq!(w.handle_count(), 4);
+        let regions = w.all_regions();
+        assert!(regions.contains(&1));
+        assert!(regions.contains(&10));
+        assert!(regions.contains(&99));
+    }
+}

@@ -1,0 +1,175 @@
+//! Inference-instance lifecycle: the paper's transient, selectively
+//! activated serving processes (Fig 5 right).
+
+use crate::config::ParallelConfig;
+use crate::device::ipc::ProcId;
+use crate::hmm::control::InstanceBinding;
+
+/// Instance identifier within the IMM.
+pub type InstanceId = u64;
+
+/// Lifecycle states (§4.5 / §5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstanceState {
+    /// Pre-initialised on CPU, not bound to device memory ("ready-to-attach").
+    Standby,
+    /// Binding to HMM memory / warming up.
+    Preparing,
+    /// Fully initialised, can serve as soon as traffic is routed.
+    Ready,
+    /// Currently serving requests.
+    Active,
+    /// No longer receiving new requests; finishing in-flight work.
+    Draining,
+    /// Terminated; resources released.
+    Retired,
+}
+
+/// Per-stage boot timing, the unit of Fig 4a and Fig 11.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct BootBreakdown {
+    /// Container/process start (cold boots only).
+    pub container: f64,
+    /// CPU-side engine pre-initialisation (skipped when standby).
+    pub preinit: f64,
+    /// Communication-group (HCCL) setup.
+    pub comm_init: f64,
+    /// Weight load: disk for cold boots, P2P for elastic provisioning.
+    pub weight_load: f64,
+    /// KV-cache allocation.
+    pub kv_alloc: f64,
+    /// Zero-copy attach of weight/KV handles.
+    pub attach: f64,
+    /// Model warmup (first forward, graph capture).
+    pub warmup: f64,
+}
+
+impl BootBreakdown {
+    pub fn total(&self) -> f64 {
+        self.container
+            + self.preinit
+            + self.comm_init
+            + self.weight_load
+            + self.kv_alloc
+            + self.attach
+            + self.warmup
+    }
+
+    /// Named stages for reports.
+    pub fn stages(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("container", self.container),
+            ("preinit", self.preinit),
+            ("comm_init", self.comm_init),
+            ("weight_load", self.weight_load),
+            ("kv_alloc", self.kv_alloc),
+            ("attach", self.attach),
+            ("warmup", self.warmup),
+        ]
+    }
+}
+
+/// One inference instance.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub id: InstanceId,
+    pub proc: ProcId,
+    pub parallel: ParallelConfig,
+    pub state: InstanceState,
+    /// Zero-copy references into HMM memory (None while standby).
+    pub binding: Option<InstanceBinding>,
+    /// Boot timing of the most recent preparation.
+    pub boot: BootBreakdown,
+    /// Simulated time the instance became ready (for metrics).
+    pub ready_at: Option<f64>,
+}
+
+impl Instance {
+    pub fn standby(id: InstanceId, proc: ProcId, parallel: ParallelConfig) -> Self {
+        Instance {
+            id,
+            proc,
+            parallel,
+            state: InstanceState::Standby,
+            binding: None,
+            boot: BootBreakdown::default(),
+            ready_at: None,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        self.parallel.label()
+    }
+
+    pub fn is_serving(&self) -> bool {
+        matches!(self.state, InstanceState::Active | InstanceState::Draining)
+    }
+
+    /// State transition with validity checking.
+    pub fn transition(&mut self, to: InstanceState) -> anyhow::Result<()> {
+        use InstanceState::*;
+        let ok = matches!(
+            (self.state, to),
+            (Standby, Preparing)
+                | (Preparing, Ready)
+                | (Ready, Active)
+                | (Active, Draining)
+                | (Draining, Retired)
+                | (Active, Retired)     // hard stop (cold restart baseline)
+                | (Ready, Retired)
+                | (Standby, Retired)
+        );
+        if !ok {
+            anyhow::bail!("invalid transition {:?} -> {to:?}", self.state);
+        }
+        self.state = to;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inst() -> Instance {
+        let p = ParallelConfig::standard(2, 2, vec![0, 1, 2, 3]).unwrap();
+        Instance::standby(1, 10, p)
+    }
+
+    #[test]
+    fn lifecycle_happy_path() {
+        let mut i = inst();
+        assert_eq!(i.state, InstanceState::Standby);
+        i.transition(InstanceState::Preparing).unwrap();
+        i.transition(InstanceState::Ready).unwrap();
+        i.transition(InstanceState::Active).unwrap();
+        assert!(i.is_serving());
+        i.transition(InstanceState::Draining).unwrap();
+        assert!(i.is_serving());
+        i.transition(InstanceState::Retired).unwrap();
+        assert!(!i.is_serving());
+    }
+
+    #[test]
+    fn invalid_transitions_rejected() {
+        let mut i = inst();
+        assert!(i.transition(InstanceState::Active).is_err());
+        i.transition(InstanceState::Preparing).unwrap();
+        assert!(i.transition(InstanceState::Draining).is_err());
+    }
+
+    #[test]
+    fn boot_breakdown_totals() {
+        let b = BootBreakdown {
+            container: 18.0,
+            preinit: 35.0,
+            comm_init: 8.0,
+            weight_load: 20.0,
+            kv_alloc: 0.5,
+            attach: 0.1,
+            warmup: 4.2,
+        };
+        assert!((b.total() - 85.8).abs() < 1e-9);
+        assert_eq!(b.stages().len(), 7);
+    }
+}

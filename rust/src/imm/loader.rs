@@ -1,0 +1,104 @@
+//! Weight loaders: the ZeroCopyLoader (ElasticMoE path — attach to HMM
+//! memory) vs the standard DiskLoader (vLLM-style baselines — every
+//! instance loads its own private copy from disk).
+
+use anyhow::Result;
+
+use crate::config::{ModelConfig, ParallelConfig};
+use crate::device::hbm::RegionKind;
+use crate::device::ipc::ProcId;
+use crate::device::{Cluster, DeviceId, RegionId};
+use crate::hmm::control::{HmmControl, InstanceBinding};
+use crate::hmm::weights::WeightLayout;
+
+/// ZeroCopyLoader: attach the instance to HMM-managed tensors. Returns the
+/// binding and the attach time (sub-second: handles only, no data).
+pub fn zero_copy_attach(
+    hmm: &mut HmmControl,
+    proc: ProcId,
+) -> Result<(InstanceBinding, f64)> {
+    hmm.attach_instance(proc)
+}
+
+/// DiskLoader: the baseline cold-boot path. The instance allocates private
+/// regions on every device and reads weights from disk — naively, i.e.
+/// *per device*, without cross-device dedup (Appendix D.2 calls this out).
+/// Also allocates a private KV cache. Returns (regions, time) where time is
+/// the max over devices (parallel loading).
+pub fn disk_loader_boot(
+    cluster: &mut Cluster,
+    model: &ModelConfig,
+    parallel: &ParallelConfig,
+    kv_bytes_per_device: u64,
+    proc: ProcId,
+) -> Result<(Vec<(DeviceId, RegionId)>, f64)> {
+    let layout = WeightLayout::compute(model, parallel);
+    let mut regions = Vec::new();
+    let mut worst: f64 = 0.0;
+    for &dev in &parallel.devices {
+        let mut t = 0.0;
+        let weight_bytes = layout.device_bytes(dev);
+        let r = cluster.devices[dev].hbm.alloc(
+            weight_bytes,
+            RegionKind::AttnWeights,
+            false,
+            format!("diskloader:{proc}"),
+        )?;
+        regions.push((dev, r));
+        t += cluster.disk.read_time(weight_bytes);
+        let kv = cluster.devices[dev].hbm.alloc(
+            kv_bytes_per_device,
+            RegionKind::KvCache,
+            false,
+            format!("diskloader-kv:{proc}"),
+        )?;
+        regions.push((dev, kv));
+        t += cluster.timings.kv_alloc(kv_bytes_per_device);
+        worst = worst.max(t);
+    }
+    Ok((regions, worst))
+}
+
+/// Release a DiskLoader instance's private regions.
+pub fn disk_loader_teardown(
+    cluster: &mut Cluster,
+    regions: &[(DeviceId, RegionId)],
+) -> Result<()> {
+    for &(dev, r) in regions {
+        cluster.devices[dev].hbm.release(r)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::dsv2_lite;
+
+    #[test]
+    fn disk_loader_is_slow_and_private() {
+        let mut c = Cluster::cloudmatrix(4);
+        let m = dsv2_lite();
+        let p = ParallelConfig::standard(2, 2, (0..4).collect()).unwrap();
+        let (regions, t) =
+            disk_loader_boot(&mut c, &m, &p, 4 << 30, 7).unwrap();
+        // ~12 GB of weights per device at 1.5 GB/s: several seconds.
+        assert!(t > 3.0, "disk boot too fast: {t}");
+        assert!(c.devices[0].hbm.used() > 10 << 30);
+        // Private: regions are not IPC-safe.
+        let (dev, r) = regions[0];
+        assert!(!c.devices[dev].hbm.region(r).unwrap().ipc_safe);
+        disk_loader_teardown(&mut c, &regions).unwrap();
+        assert_eq!(c.devices[0].hbm.used(), 0);
+    }
+
+    #[test]
+    fn disk_loader_can_oom_on_small_devices() {
+        // A 4 GB device cannot hold a DSv2-Lite shard: the colocated
+        // baseline's failure mode must be a real error.
+        let mut c = Cluster::new(2, 4, crate::device::Timings::cloudmatrix());
+        let m = dsv2_lite();
+        let p = ParallelConfig::standard(1, 2, vec![0, 1]).unwrap();
+        assert!(disk_loader_boot(&mut c, &m, &p, 1 << 30, 1).is_err());
+    }
+}

@@ -1,0 +1,110 @@
+//! LRU cache of standby instances (§4.5: "idle instances ... tracked in an
+//! LRU cache and remain ready to attach").
+
+use std::collections::VecDeque;
+
+/// A small ordered LRU: most-recently-used at the back.
+#[derive(Debug, Clone)]
+pub struct LruCache<K: PartialEq + Clone, V> {
+    cap: usize,
+    entries: VecDeque<(K, V)>,
+}
+
+impl<K: PartialEq + Clone, V> LruCache<K, V> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        LruCache {
+            cap,
+            entries: VecDeque::new(),
+        }
+    }
+
+    /// Insert (or replace) a value; evicts the least-recently-used entry if
+    /// over capacity, returning it.
+    pub fn insert(&mut self, key: K, value: V) -> Option<(K, V)> {
+        if let Some(pos) = self.entries.iter().position(|(k, _)| *k == key) {
+            self.entries.remove(pos);
+        }
+        self.entries.push_back((key, value));
+        if self.entries.len() > self.cap {
+            self.entries.pop_front()
+        } else {
+            None
+        }
+    }
+
+    /// Remove and return the value for `key`, if cached (a standby hit).
+    pub fn take(&mut self, key: &K) -> Option<V> {
+        let pos = self.entries.iter().position(|(k, _)| k == key)?;
+        self.entries.remove(pos).map(|(_, v)| v)
+    }
+
+    /// Peek without affecting recency.
+    pub fn contains(&self, key: &K) -> bool {
+        self.entries.iter().any(|(k, _)| k == key)
+    }
+
+    /// Touch an entry, marking it most-recently-used.
+    pub fn touch(&mut self, key: &K) -> bool {
+        if let Some(pos) = self.entries.iter().position(|(k, _)| k == key) {
+            if let Some(e) = self.entries.remove(pos) {
+                self.entries.push_back(e);
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+    pub fn keys(&self) -> impl Iterator<Item = &K> {
+        self.entries.iter().map(|(k, _)| k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_eviction_order() {
+        let mut c = LruCache::new(2);
+        assert!(c.insert("a", 1).is_none());
+        assert!(c.insert("b", 2).is_none());
+        let evicted = c.insert("c", 3).unwrap();
+        assert_eq!(evicted, ("a", 1)); // least recently used
+        assert!(c.contains(&"b") && c.contains(&"c"));
+    }
+
+    #[test]
+    fn touch_protects_from_eviction() {
+        let mut c = LruCache::new(2);
+        c.insert("a", 1);
+        c.insert("b", 2);
+        assert!(c.touch(&"a"));
+        let evicted = c.insert("c", 3).unwrap();
+        assert_eq!(evicted.0, "b");
+    }
+
+    #[test]
+    fn take_removes() {
+        let mut c = LruCache::new(4);
+        c.insert("a", 1);
+        assert_eq!(c.take(&"a"), Some(1));
+        assert_eq!(c.take(&"a"), None);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn reinsert_replaces() {
+        let mut c = LruCache::new(2);
+        c.insert("a", 1);
+        c.insert("a", 9);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.take(&"a"), Some(9));
+    }
+}

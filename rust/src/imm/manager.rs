@@ -1,0 +1,234 @@
+//! Instance manager: tracks instance lifecycles, the standby LRU cache, and
+//! the active-instance pointer; produces ready-to-attach instances for the
+//! scaling choreography (§4.5).
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::config::ParallelConfig;
+use crate::device::Timings;
+
+use super::instance::{Instance, InstanceId, InstanceState};
+use super::lru::LruCache;
+
+/// IMM policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ImmOptions {
+    /// Keep pre-initialised standby instances (the `-PreInit` ablation
+    /// disables this: every acquisition pays full CPU pre-init).
+    pub pre_init: bool,
+    /// Standby cache capacity.
+    pub lru_cap: usize,
+}
+
+impl Default for ImmOptions {
+    fn default() -> Self {
+        ImmOptions {
+            pre_init: true,
+            lru_cap: 4,
+        }
+    }
+}
+
+/// The Inference Management Module.
+pub struct InstanceManager {
+    pub opts: ImmOptions,
+    timings: Timings,
+    next_id: InstanceId,
+    standby: LruCache<String, Instance>,
+    pub instances: BTreeMap<InstanceId, Instance>,
+    pub active: Option<InstanceId>,
+}
+
+impl InstanceManager {
+    pub fn new(opts: ImmOptions, timings: Timings) -> Self {
+        InstanceManager {
+            opts,
+            timings,
+            next_id: 1,
+            standby: LruCache::new(opts.lru_cap.max(1)),
+            instances: BTreeMap::new(),
+            active: None,
+        }
+    }
+
+    fn next_id(&mut self) -> InstanceId {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Pre-initialise a standby instance for an anticipated configuration
+    /// (done in the background; no scale-time cost).
+    pub fn prepare_standby(
+        &mut self,
+        parallel: ParallelConfig,
+        proc: u32,
+    ) -> InstanceId {
+        let id = self.next_id();
+        let inst = Instance::standby(id, proc, parallel.clone());
+        self.standby.insert(parallel.label(), inst);
+        id
+    }
+
+    /// Whether a standby instance exists for the configuration.
+    pub fn has_standby(&self, parallel: &ParallelConfig) -> bool {
+        self.standby.contains(&parallel.label())
+    }
+
+    /// Acquire an instance for `parallel`: an LRU hit costs nothing (the
+    /// instance is pre-initialised, comm groups ready); a miss pays CPU
+    /// pre-init + communication-group setup. Returns (instance, prep_time).
+    pub fn acquire(
+        &mut self,
+        parallel: &ParallelConfig,
+        proc: u32,
+    ) -> (Instance, f64) {
+        if self.opts.pre_init {
+            if let Some(mut inst) = self.standby.take(&parallel.label()) {
+                inst.proc = proc;
+                return (inst, 0.0);
+            }
+        }
+        let id = self.next_id();
+        let inst = Instance::standby(id, proc, parallel.clone());
+        let t = self.timings.preinit_cpu
+            + self.timings.comm_init(parallel.n_devices());
+        (inst, t)
+    }
+
+    /// Register a prepared instance and mark it Ready.
+    pub fn register_ready(&mut self, mut inst: Instance, now: f64) -> Result<InstanceId> {
+        inst.transition(InstanceState::Preparing)?;
+        inst.transition(InstanceState::Ready)?;
+        inst.ready_at = Some(now);
+        let id = inst.id;
+        self.instances.insert(id, inst);
+        Ok(id)
+    }
+
+    /// Route traffic to an instance (switchover endpoint).
+    pub fn activate(&mut self, id: InstanceId) -> Result<()> {
+        let inst = self
+            .instances
+            .get_mut(&id)
+            .context("no such instance")?;
+        inst.transition(InstanceState::Active)?;
+        self.active = Some(id);
+        Ok(())
+    }
+
+    /// Stop routing new requests to the active instance (begin drain).
+    pub fn drain_active(&mut self) -> Result<Option<InstanceId>> {
+        let Some(id) = self.active.take() else {
+            return Ok(None);
+        };
+        self.instances
+            .get_mut(&id)
+            .context("active instance missing")?
+            .transition(InstanceState::Draining)?;
+        Ok(Some(id))
+    }
+
+    /// Retire an instance; optionally return it to the standby cache for
+    /// future reuse (scale-down keeps the config warm).
+    pub fn retire(
+        &mut self,
+        id: InstanceId,
+        back_to_standby: bool,
+    ) -> Result<Instance> {
+        let mut inst = self
+            .instances
+            .remove(&id)
+            .context("no such instance")?;
+        inst.transition(InstanceState::Retired)?;
+        if self.active == Some(id) {
+            self.active = None;
+        }
+        if back_to_standby && self.opts.pre_init {
+            let mut standby = Instance::standby(
+                inst.id,
+                inst.proc,
+                inst.parallel.clone(),
+            );
+            standby.boot = inst.boot;
+            self.standby.insert(inst.parallel.label(), standby);
+        }
+        Ok(inst)
+    }
+
+    pub fn active_instance(&self) -> Option<&Instance> {
+        self.active.and_then(|id| self.instances.get(&id))
+    }
+
+    pub fn standby_count(&self) -> usize {
+        self.standby.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn par(n: usize) -> ParallelConfig {
+        ParallelConfig::standard(n / 2, 2, (0..n).collect()).unwrap()
+    }
+
+    fn imm() -> InstanceManager {
+        InstanceManager::new(ImmOptions::default(), Timings::cloudmatrix())
+    }
+
+    #[test]
+    fn standby_hit_is_free() {
+        let mut m = imm();
+        m.prepare_standby(par(6), 1);
+        assert!(m.has_standby(&par(6)));
+        let (inst, t) = m.acquire(&par(6), 2);
+        assert_eq!(t, 0.0);
+        assert_eq!(inst.parallel, par(6));
+        assert!(!m.has_standby(&par(6)), "taken from cache");
+    }
+
+    #[test]
+    fn standby_miss_pays_preinit_and_comm() {
+        let mut m = imm();
+        let (_, t) = m.acquire(&par(6), 1);
+        assert!(t > 30.0, "miss should cost tens of seconds: {t}");
+    }
+
+    #[test]
+    fn preinit_disabled_always_misses() {
+        let mut m = InstanceManager::new(
+            ImmOptions {
+                pre_init: false,
+                lru_cap: 4,
+            },
+            Timings::cloudmatrix(),
+        );
+        m.prepare_standby(par(4), 1);
+        let (_, t) = m.acquire(&par(4), 2);
+        assert!(t > 30.0);
+    }
+
+    #[test]
+    fn activation_flow_and_switchover() {
+        let mut m = imm();
+        let (inst, _) = m.acquire(&par(4), 1);
+        let id = m.register_ready(inst, 0.0).unwrap();
+        m.activate(id).unwrap();
+        assert_eq!(m.active, Some(id));
+
+        // Scale-up: prepare the 6-device instance, drain old, activate new.
+        let (inst6, _) = m.acquire(&par(6), 2);
+        let id6 = m.register_ready(inst6, 10.0).unwrap();
+        let drained = m.drain_active().unwrap().unwrap();
+        assert_eq!(drained, id);
+        m.activate(id6).unwrap();
+        let retired = m.retire(id, true).unwrap();
+        assert_eq!(retired.state, InstanceState::Retired);
+        // Old config cached for future scale-down.
+        assert!(m.has_standby(&par(4)));
+        assert_eq!(m.active, Some(id6));
+    }
+}

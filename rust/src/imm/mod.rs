@@ -1,0 +1,14 @@
+//! Inference Management Module (IMM, §4.5): owns the inference instances,
+//! keeps pre-initialised standby instances in an LRU cache, attaches the
+//! active instance to HMM-managed memory through the zero-copy loader, and
+//! orchestrates activation/draining/retirement around scaling events.
+
+pub mod instance;
+pub mod loader;
+pub mod lru;
+pub mod manager;
+
+pub use instance::{BootBreakdown, Instance, InstanceId, InstanceState};
+pub use loader::{disk_loader_boot, zero_copy_attach};
+pub use lru::LruCache;
+pub use manager::InstanceManager;

@@ -1,0 +1,37 @@
+//! # ElasticMoE — fine-grained, zero-downtime autoscaling for MoE serving
+//!
+//! Reproduction of *ElasticMoE: An Efficient Auto Scaling Method for
+//! Mixture-of-Experts Models* (CS.DC 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the paper's system contribution: the
+//!   [`coordinator`] (request routing, SLO-aware autoscaling, switchover),
+//!   the [`hmm`] HBM Management Module (zero-copy weight/KV sharing, P2P
+//!   transfers, virtual-page expert remapping), the [`imm`] Inference
+//!   Management Module (pre-initialised standby instances), the serving
+//!   [`engine`] (continuous batching, paged KV cache, EP token routing),
+//!   plus four scaling baselines in [`scaling`].
+//! - **Layer 2** — a JAX MoE transformer, AOT-lowered to HLO text
+//!   (`python/compile/`), loaded and executed by [`runtime`] via PJRT.
+//! - **Layer 1** — Pallas kernels for the MoE FFN and decode attention
+//!   (`python/compile/kernels/`), on the hot path of the monolithic step.
+//!
+//! The Ascend CloudMatrix384 substrate the paper runs on is reproduced as a
+//! byte-accurate simulated NPU cluster in [`device`]; see DESIGN.md §1 for
+//! the substitution argument. Serving experiments run under a discrete-event
+//! clock ([`sim`]); the end-to-end example runs the same system under wall
+//! time with real PJRT compute.
+
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod engine;
+pub mod experiments;
+pub mod hmm;
+pub mod imm;
+pub mod metrics;
+pub mod runtime;
+pub mod scaling;
+pub mod sim;
+pub mod util;
+pub mod workload;

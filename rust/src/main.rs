@@ -1,0 +1,220 @@
+//! `repro` — ElasticMoE reproduction CLI (the L3 leader entrypoint).
+//!
+//! Subcommands:
+//! - `exp <id>|all [--fast]` — regenerate a paper table/figure (reports/).
+//! - `serve [--model M] [--devices N] [--rps R] [--duration S]
+//!   [--method elastic|cold|extravagant|colocated] [--autoscale]` — run the
+//!   serving simulator and print SLO/throughput stats.
+//! - `info` — models, artifact manifest, cluster defaults.
+
+use anyhow::{bail, Context, Result};
+
+use elastic_moe::config::model;
+use elastic_moe::config::SloConfig;
+use elastic_moe::coordinator::{LoadEstimator, ServingSim, Trigger};
+use elastic_moe::device::Timings;
+use elastic_moe::engine::CostModel;
+use elastic_moe::experiments;
+use elastic_moe::util::cli::Args;
+use elastic_moe::util::{fmt_bytes, logging};
+use elastic_moe::workload::{RateProfile, WorkloadGen, WorkloadSpec};
+
+fn main() {
+    logging::init();
+    let args = Args::from_env();
+    let result = match args.subcommand() {
+        Some("exp") => cmd_exp(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "repro — ElasticMoE reproduction\n\
+         \n\
+         USAGE:\n\
+         repro exp <id>|all|list [--fast]   regenerate paper tables/figures\n\
+         repro serve [options]              run the serving simulator\n\
+         repro info                         model and artifact inventory\n\
+         \n\
+         serve options:\n\
+         --model dsv2lite|qwen30b|dsv3   (default dsv2lite)\n\
+         --method elastic|cold|extravagant|colocated (default elastic)\n\
+         --devices N     initial devices (default 4)\n\
+         --cluster N     total cluster devices (default 2x devices)\n\
+         --rps R         request rate (default 2.0)\n\
+         --duration S    seconds of traffic (default 120)\n\
+         --scale-at S    manual scale-up (+2 devices) at time S\n\
+         --autoscale     SLO-driven autoscaling instead of manual"
+    );
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("list");
+    let fast = args.flag("fast");
+    match id {
+        "list" => {
+            println!("experiments: {}", experiments::ALL.join(" "));
+            Ok(())
+        }
+        "all" => {
+            for id in experiments::ALL {
+                println!("—— {id} ————————————————————————");
+                println!("{}", experiments::run(id, fast)?);
+            }
+            println!("reports written to reports/");
+            Ok(())
+        }
+        id => {
+            println!("{}", experiments::run(id, fast)?);
+            Ok(())
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model_name = args.get_or("model", "dsv2lite");
+    let m = model::by_name(model_name)
+        .with_context(|| format!("unknown model '{model_name}'"))?;
+    let method_name = args.get_or("method", "elastic");
+    let devices = args.get_usize("devices", 4);
+    let cluster_n = args.get_usize("cluster", devices * 2);
+    let rps = args.get_f64("rps", 2.0);
+    let duration = args.get_f64("duration", 120.0);
+
+    if devices % m.tp != 0 {
+        bail!("--devices must be a multiple of TP{}", m.tp);
+    }
+    let mut method =
+        elastic_moe::experiments::common::make_method(method_name, &m, cluster_n)?;
+    let slo = SloConfig::strict();
+    let sim = ServingSim::new(
+        CostModel::new(m.clone(), Timings::cloudmatrix()),
+        slo,
+    );
+    let mut gen = WorkloadGen::new(WorkloadSpec {
+        prompt_len: 2000,
+        decode_min: 200,
+        decode_max: 300,
+        profile: RateProfile::Fixed(rps),
+        seed: 42,
+    });
+    let arrivals = gen.arrivals_until(duration);
+    let n_arrived = arrivals.len();
+
+    let tp = m.tp;
+    let trigger = if args.flag("autoscale") {
+        Trigger::Auto {
+            estimator: LoadEstimator::new(slo),
+            up: Box::new(move |p| {
+                let n = p.n_devices() + tp;
+                elastic_moe::config::ParallelConfig::standard(
+                    n / tp,
+                    tp,
+                    (0..n).collect(),
+                )
+                .ok()
+            }),
+            down: Box::new(move |p| {
+                let n = p.n_devices().checked_sub(tp)?;
+                if n == 0 {
+                    return None;
+                }
+                elastic_moe::config::ParallelConfig::standard(
+                    n / tp,
+                    tp,
+                    (0..n).collect(),
+                )
+                .ok()
+            }),
+        }
+    } else if let Some(at) = args.get("scale-at") {
+        let at: f64 = at.parse().context("--scale-at")?;
+        let target = elastic_moe::experiments::common::par(&m, devices + m.tp)?;
+        Trigger::Manual(vec![(at, target)])
+    } else {
+        Trigger::Manual(vec![])
+    };
+
+    let initial = elastic_moe::experiments::common::par(&m, devices)?;
+    println!(
+        "serving {model_name} with {method_name}: {} devices, {rps} rps, {duration}s",
+        devices
+    );
+    let out = sim.run(method.as_mut(), &initial, arrivals, trigger, duration)?;
+
+    let w = out.recorder.window(0.0, out.end_time + 1e-6, &slo);
+    println!("\n== results ==");
+    println!("requests: {n_arrived} arrived, {} completed, {} dropped",
+        w.completed, w.dropped);
+    println!("throughput: {:.2} req/s  {:.0} tok/s",
+        w.throughput_rps, w.tokens_per_sec);
+    println!("SLO attainment: {:.1}%  (TTFT<=1s, TPOT<=1s)",
+        w.slo_attainment * 100.0);
+    println!("TTFT mean {:.3}s p99 {:.3}s  TPOT mean {:.4}s",
+        w.mean_ttft, w.p99_ttft, w.mean_tpot);
+    for ev in &out.scaling_events {
+        println!(
+            "scaling: {} in {:.2}s (downtime {:.2}s, peak {:.1} GB)",
+            ev.metrics.label(),
+            ev.ready_after,
+            ev.metrics.downtime,
+            ev.metrics.peak_gb()
+        );
+    }
+    println!("device timeline: {:?}", out.device_timeline);
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("== models ==");
+    for name in model::MODELS {
+        if let Some(m) = model::by_name(name) {
+            println!(
+                "{:<10} {:>7.1}B params  {:>6} experts (top-{})  TP{} min {} devices  {}/device at EP{}",
+                m.name,
+                m.param_count() as f64 / 1e9,
+                m.n_experts,
+                m.top_k,
+                m.tp,
+                m.min_devices,
+                fmt_bytes(m.device_weight_bytes(m.tp, m.min_devices)),
+                m.min_devices,
+            );
+        }
+    }
+    let art = std::path::Path::new("artifacts/manifest.json");
+    if art.exists() {
+        let manifest = elastic_moe::runtime::Manifest::load("artifacts")?;
+        println!("\n== artifacts ({}) ==", manifest.model.name);
+        for a in &manifest.artifacts {
+            println!(
+                "{:<22} {} args -> {} outputs",
+                a.name,
+                a.args.len(),
+                a.outputs.len()
+            );
+        }
+        println!(
+            "{} weight tensors, {} total",
+            manifest.weights.len(),
+            fmt_bytes(manifest.total_weight_bytes())
+        );
+    } else {
+        println!("\n(artifacts not built — run `make artifacts`)");
+    }
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! Serving metrics (§7.3): TTFT, TPOT, SLO attainment, SLO-per-NPU,
+//! windowed throughput, and scaling-event metrics (scale latency, downtime,
+//! peak memory).
+
+pub mod recorder;
+pub mod scaling;
+
+pub use recorder::{MetricsRecorder, WindowStats};
+pub use scaling::ScalingMetrics;

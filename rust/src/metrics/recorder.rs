@@ -1,0 +1,169 @@
+//! Request-level metric recording and windowed aggregation.
+
+use crate::config::SloConfig;
+use crate::workload::Request;
+
+/// One finished request's metrics.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestMetrics {
+    pub arrival: f64,
+    pub finished: f64,
+    pub ttft: f64,
+    pub tpot: f64,
+    pub tokens: usize,
+    pub dropped: bool,
+}
+
+/// Aggregated stats over a time window.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WindowStats {
+    pub completed: usize,
+    pub dropped: usize,
+    pub throughput_rps: f64,
+    pub tokens_per_sec: f64,
+    pub slo_attainment: f64,
+    pub mean_ttft: f64,
+    pub p99_ttft: f64,
+    pub mean_tpot: f64,
+}
+
+/// Collects per-request metrics across a run.
+#[derive(Debug, Default)]
+pub struct MetricsRecorder {
+    finished: Vec<RequestMetrics>,
+}
+
+impl MetricsRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a finished (or dropped) request.
+    pub fn record(&mut self, r: &Request) {
+        let dropped =
+            matches!(r.state, crate::workload::RequestState::Dropped);
+        self.finished.push(RequestMetrics {
+            arrival: r.arrival,
+            finished: r.finished_at.unwrap_or(r.arrival),
+            ttft: r.ttft().unwrap_or(f64::INFINITY),
+            tpot: r.tpot().unwrap_or(f64::INFINITY),
+            tokens: r.generated,
+            dropped,
+        });
+    }
+
+    pub fn count(&self) -> usize {
+        self.finished.len()
+    }
+
+    pub fn all(&self) -> &[RequestMetrics] {
+        &self.finished
+    }
+
+    /// Stats over requests that *finished* within `[t0, t1)`.
+    pub fn window(&self, t0: f64, t1: f64, slo: &SloConfig) -> WindowStats {
+        let in_window: Vec<&RequestMetrics> = self
+            .finished
+            .iter()
+            .filter(|m| m.finished >= t0 && m.finished < t1)
+            .collect();
+        let dur = (t1 - t0).max(1e-9);
+        let completed: Vec<&&RequestMetrics> =
+            in_window.iter().filter(|m| !m.dropped).collect();
+        let dropped = in_window.len() - completed.len();
+        if in_window.is_empty() {
+            return WindowStats::default();
+        }
+        let met = in_window
+            .iter()
+            .filter(|m| !m.dropped && slo.met(m.ttft, m.tpot))
+            .count();
+        let ttfts: Vec<f64> = completed.iter().map(|m| m.ttft).collect();
+        let tpots: Vec<f64> = completed.iter().map(|m| m.tpot).collect();
+        WindowStats {
+            completed: completed.len(),
+            dropped,
+            throughput_rps: completed.len() as f64 / dur,
+            tokens_per_sec: completed.iter().map(|m| m.tokens).sum::<usize>()
+                as f64
+                / dur,
+            slo_attainment: met as f64 / in_window.len() as f64,
+            mean_ttft: crate::util::stats::mean(&ttfts),
+            p99_ttft: crate::util::stats::percentile(&ttfts, 99.0),
+            mean_tpot: crate::util::stats::mean(&tpots),
+        }
+    }
+
+    /// SLO attainment over requests *arriving* in `[t0, t1)` — the paper's
+    /// timeline plots bucket by arrival.
+    pub fn attainment_by_arrival(
+        &self,
+        t0: f64,
+        t1: f64,
+        slo: &SloConfig,
+    ) -> f64 {
+        let arrived: Vec<&RequestMetrics> = self
+            .finished
+            .iter()
+            .filter(|m| m.arrival >= t0 && m.arrival < t1)
+            .collect();
+        if arrived.is_empty() {
+            return f64::NAN;
+        }
+        let met = arrived
+            .iter()
+            .filter(|m| !m.dropped && slo.met(m.ttft, m.tpot))
+            .count();
+        met as f64 / arrived.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{Request, RequestState};
+
+    fn finished_req(
+        id: u64,
+        arrival: f64,
+        ttft: f64,
+        tpot: f64,
+        n: usize,
+    ) -> Request {
+        let mut r = Request::new(id, arrival, 100, n);
+        r.first_token_at = Some(arrival + ttft);
+        r.finished_at = Some(arrival + ttft + tpot * (n - 1) as f64);
+        r.generated = n;
+        r.state = RequestState::Finished;
+        r
+    }
+
+    #[test]
+    fn window_stats() {
+        let slo = SloConfig::new(1.0, 0.5);
+        let mut rec = MetricsRecorder::new();
+        rec.record(&finished_req(1, 0.0, 0.5, 0.1, 11)); // meets SLO
+        rec.record(&finished_req(2, 1.0, 2.0, 0.1, 11)); // TTFT violation
+        let mut dropped = Request::new(3, 2.0, 100, 10);
+        dropped.state = RequestState::Dropped;
+        dropped.finished_at = Some(2.0);
+        rec.record(&dropped);
+
+        let w = rec.window(0.0, 100.0, &slo);
+        assert_eq!(w.completed, 2);
+        assert_eq!(w.dropped, 1);
+        assert!((w.slo_attainment - 1.0 / 3.0).abs() < 1e-9);
+        assert!(w.tokens_per_sec > 0.0);
+    }
+
+    #[test]
+    fn attainment_by_arrival_buckets() {
+        let slo = SloConfig::new(1.0, 1.0);
+        let mut rec = MetricsRecorder::new();
+        rec.record(&finished_req(1, 5.0, 0.1, 0.1, 5));
+        rec.record(&finished_req(2, 15.0, 9.9, 0.1, 5));
+        assert_eq!(rec.attainment_by_arrival(0.0, 10.0, &slo), 1.0);
+        assert_eq!(rec.attainment_by_arrival(10.0, 20.0, &slo), 0.0);
+        assert!(rec.attainment_by_arrival(30.0, 40.0, &slo).is_nan());
+    }
+}

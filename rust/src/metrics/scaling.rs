@@ -1,0 +1,68 @@
+//! Scaling-event metrics (§7.3): scaling latency, downtime, peak memory —
+//! the rows of Fig 7/8/12 and Tables 1/3.
+
+/// Measured outcome of one scaling event.
+#[derive(Debug, Clone, Default)]
+pub struct ScalingMetrics {
+    pub method: String,
+    pub from_devices: usize,
+    pub to_devices: usize,
+    /// Command issued -> new instance ready to serve.
+    pub scale_latency: f64,
+    /// Interval with no serving instance available.
+    pub downtime: f64,
+    /// Peak memory summed across all involved NPUs during the event, bytes.
+    pub peak_memory: u64,
+    /// Devices occupied at the transition's worst moment (Extravagant
+    /// holds old+new simultaneously).
+    pub peak_devices: usize,
+    /// Stage breakdown (name, seconds) for Fig 11.
+    pub stages: Vec<(String, f64)>,
+}
+
+impl ScalingMetrics {
+    pub fn new(method: &str, from: usize, to: usize) -> Self {
+        ScalingMetrics {
+            method: method.to_string(),
+            from_devices: from,
+            to_devices: to,
+            ..Default::default()
+        }
+    }
+
+    pub fn stage(&mut self, name: &str, secs: f64) {
+        self.stages.push((name.to_string(), secs));
+    }
+
+    pub fn stage_total(&self) -> f64 {
+        self.stages.iter().map(|(_, t)| t).sum()
+    }
+
+    /// Peak memory in GB (paper table units).
+    pub fn peak_gb(&self) -> f64 {
+        self.peak_memory as f64 / (1u64 << 30) as f64
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{} {}→{}",
+            self.method, self.from_devices, self.to_devices
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_accounting() {
+        let mut m = ScalingMetrics::new("elastic", 4, 6);
+        m.stage("p2p", 0.5);
+        m.stage("warmup", 4.2);
+        assert!((m.stage_total() - 4.7).abs() < 1e-12);
+        m.peak_memory = 275 * (1 << 30);
+        assert!((m.peak_gb() - 275.0).abs() < 1e-9);
+        assert_eq!(m.label(), "elastic 4→6");
+    }
+}

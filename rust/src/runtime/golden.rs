@@ -1,0 +1,84 @@
+//! Golden trace loader: the composed-path prefill + decode trace exported by
+//! `aot.py`, which the Rust engine must reproduce (integration tests).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// The golden generation trace.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub seed: u64,
+    pub n_steps: usize,
+    /// `[B][P]` padded prompt token ids.
+    pub prompt_ids: Vec<Vec<i32>>,
+    /// `[B]` valid prompt lengths.
+    pub prompt_lens: Vec<i32>,
+    /// `[n_steps][B]` greedy tokens (step 0 = argmax of prefill logits).
+    pub tokens: Vec<Vec<i32>>,
+    /// Full prefill logits for batch row 0 (tolerance check anchor).
+    pub prefill_logits_row0: Vec<f32>,
+}
+
+impl Golden {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let path = dir.as_ref().join("golden.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        let v = json::parse(&text).context("parsing golden.json")?;
+
+        fn i32_rows(v: &Json) -> Option<Vec<Vec<i32>>> {
+            v.as_arr()?
+                .iter()
+                .map(|row| {
+                    row.as_arr()?
+                        .iter()
+                        .map(|x| x.as_i64().map(|i| i as i32))
+                        .collect()
+                })
+                .collect()
+        }
+
+        Ok(Golden {
+            seed: v.get("seed").as_u64().context("seed")?,
+            n_steps: v.get("n_steps").as_usize().context("n_steps")?,
+            prompt_ids: i32_rows(v.get("prompt_ids")).context("prompt_ids")?,
+            prompt_lens: v
+                .get("prompt_lens")
+                .as_arr()
+                .context("prompt_lens")?
+                .iter()
+                .map(|x| x.as_i64().unwrap_or(0) as i32)
+                .collect(),
+            tokens: i32_rows(v.get("tokens")).context("tokens")?,
+            prefill_logits_row0: v
+                .get("prefill_logits_row0")
+                .f64_vec()
+                .context("prefill_logits_row0")?
+                .into_iter()
+                .map(|x| x as f32)
+                .collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn load_real_golden_if_present() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("golden.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let g = Golden::load(&dir).unwrap();
+        assert_eq!(g.tokens.len(), g.n_steps);
+        assert_eq!(g.prompt_ids.len(), g.prompt_lens.len());
+        assert!(!g.prefill_logits_row0.is_empty());
+    }
+}

@@ -1,0 +1,236 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime (entry-point names, argument/output specs, weight index).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Model dimensions recorded by the compile path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelDims {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub max_seq: usize,
+    pub prefill_len: usize,
+    pub batch: usize,
+    pub param_count: u64,
+}
+
+/// One tensor argument or output of an artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One compiled entry point.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub args: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// One exported weight tensor (raw little-endian f32 on disk).
+#[derive(Debug, Clone)]
+pub struct WeightSpec {
+    pub name: String,
+    pub file: String,
+    pub shape: Vec<usize>,
+    pub sha256: String,
+}
+
+impl WeightSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn byte_len(&self) -> u64 {
+        self.numel() as u64 * 4
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelDims,
+    pub layer_tensors: Vec<String>,
+    pub artifacts: Vec<ArtifactSpec>,
+    pub weights: Vec<WeightSpec>,
+}
+
+fn tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .context("expected array of tensor specs")?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t.get("name").as_str().context("missing name")?.into(),
+                dtype: t.get("dtype").as_str().context("missing dtype")?.into(),
+                shape: t.get("shape").usize_vec().context("missing shape")?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let v = json::parse(&text).context("parsing manifest.json")?;
+
+        let m = v.get("model");
+        let get = |k: &str| -> Result<usize> {
+            m.get(k).as_usize().with_context(|| format!("model.{k}"))
+        };
+        let model = ModelDims {
+            name: m.get("name").as_str().unwrap_or("unknown").into(),
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            head_dim: get("head_dim")?,
+            d_ff: get("d_ff")?,
+            n_experts: get("n_experts")?,
+            top_k: get("top_k")?,
+            max_seq: get("max_seq")?,
+            prefill_len: get("prefill_len")?,
+            batch: get("batch")?,
+            param_count: m.get("param_count").as_u64().context("param_count")?,
+        };
+
+        let layer_tensors = v
+            .get("layer_tensors")
+            .as_arr()
+            .context("layer_tensors")?
+            .iter()
+            .map(|s| s.as_str().unwrap_or("").to_string())
+            .collect();
+
+        let artifacts = v
+            .get("artifacts")
+            .as_arr()
+            .context("artifacts")?
+            .iter()
+            .map(|a| {
+                Ok(ArtifactSpec {
+                    name: a.get("name").as_str().context("name")?.into(),
+                    file: a.get("file").as_str().context("file")?.into(),
+                    args: tensor_specs(a.get("args"))?,
+                    outputs: tensor_specs(a.get("outputs"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let weights = v
+            .get("weights")
+            .as_arr()
+            .context("weights")?
+            .iter()
+            .map(|w| {
+                Ok(WeightSpec {
+                    name: w.get("name").as_str().context("name")?.into(),
+                    file: w.get("file").as_str().context("file")?.into(),
+                    shape: w.get("shape").usize_vec().context("shape")?,
+                    sha256: w.get("sha256").as_str().unwrap_or("").into(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            dir,
+            model,
+            layer_tensors,
+            artifacts,
+            weights,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn weight(&self, name: &str) -> Result<&WeightSpec> {
+        self.weights
+            .iter()
+            .find(|w| w.name == name)
+            .with_context(|| format!("weight '{name}' not in manifest"))
+    }
+
+    /// Total parameter bytes (f32) across all weight tensors.
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.weights.iter().map(|w| w.byte_len()).sum()
+    }
+
+    /// Names of the per-expert weight tensors for (layer, expert).
+    pub fn expert_weight_names(&self, layer: usize, expert: usize) -> [String; 3] {
+        [
+            format!("layer{layer}.w1.e{expert}"),
+            format!("layer{layer}.w3.e{expert}"),
+            format!("layer{layer}.w2.e{expert}"),
+        ]
+    }
+
+    /// Names of the non-expert (attention/gate/norm) tensors for a layer.
+    pub fn attn_weight_names(&self, layer: usize) -> Vec<String> {
+        self.layer_tensors
+            .iter()
+            .filter(|t| !matches!(t.as_str(), "w1" | "w3" | "w2"))
+            .map(|t| format!("layer{layer}.{t}"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn parse_real_manifest_if_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model.n_experts >= 2);
+        assert_eq!(m.model.d_model, m.model.n_heads * m.model.head_dim);
+        assert!(m.artifact("attn_gate_decode").is_ok());
+        assert!(m.artifact("nonexistent").is_err());
+        let ag = m.artifact("attn_gate_decode").unwrap();
+        assert_eq!(ag.args[0].shape, vec![m.model.batch, m.model.d_model]);
+        // weights cover the whole parameter count
+        let total: usize = m.weights.iter().map(|w| w.numel()).sum();
+        assert_eq!(total as u64, m.model.param_count);
+        let names = m.expert_weight_names(0, 3);
+        assert!(m.weight(&names[0]).is_ok());
+        assert_eq!(m.attn_weight_names(0).len(), 7);
+    }
+}

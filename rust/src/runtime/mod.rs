@@ -1,0 +1,20 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the request path. Python never runs at serving time.
+//!
+//! Interchange format is HLO **text** (`HloModuleProto::from_text_file`):
+//! jax >= 0.5 emits serialized protos with 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids cleanly.
+//!
+//! PJRT handles are `Rc`-based (not `Send`): the runtime is single-threaded
+//! by design and is owned by the engine that drives it.
+
+pub mod golden;
+pub mod manifest;
+pub mod pjrt;
+pub mod tensor;
+pub mod weights;
+
+pub use golden::Golden;
+pub use manifest::{ArtifactSpec, Manifest, ModelDims, TensorSpec, WeightSpec};
+pub use pjrt::Pjrt;
+pub use tensor::HostTensor;

@@ -1,0 +1,156 @@
+//! PJRT client wrapper: compiles HLO-text artifacts once, caches the loaded
+//! executables, and runs them with literal or device-buffer arguments.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::Manifest;
+use super::tensor::HostTensor;
+
+/// The single-threaded PJRT runtime. Owns the CPU client, the manifest and
+/// the compiled-executable cache.
+pub struct Pjrt {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Pjrt {
+    /// Create a CPU PJRT client over the given artifacts directory.
+    pub fn load(manifest: Manifest) -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Pjrt {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let path = self.manifest.dir.join(&spec.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?,
+        );
+        log::debug!(
+            "compiled artifact '{name}' in {:.1} ms",
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile every artifact (instance warmup).
+    pub fn warmup_all(&self) -> Result<()> {
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .map(|a| a.name.clone())
+            .collect();
+        for n in &names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Validate provided tensors against the artifact's argument specs.
+    fn check_args(&self, name: &str, shapes: &[Vec<usize>]) -> Result<()> {
+        let spec = self.manifest.artifact(name)?;
+        if shapes.len() != spec.args.len() {
+            bail!(
+                "artifact '{name}': expected {} args, got {}",
+                spec.args.len(),
+                shapes.len()
+            );
+        }
+        for (i, (given, want)) in shapes.iter().zip(&spec.args).enumerate() {
+            if given != &want.shape {
+                bail!(
+                    "artifact '{name}' arg {i} ({}): shape {:?} != expected {:?}",
+                    want.name,
+                    given,
+                    want.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with host tensors (copies in/out). Outputs are un-tupled.
+    pub fn run(&self, name: &str, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let shapes: Vec<Vec<usize>> =
+            args.iter().map(|t| t.shape().to_vec()).collect();
+        self.check_args(name, &shapes)?;
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| t.literal())
+            .collect::<Result<Vec<_>>>()?;
+        let out = exe.execute::<xla::Literal>(&literals)?;
+        Self::untuple(&out[0][0])
+    }
+
+    /// Execute with device-resident buffers (zero host->device copies for
+    /// weights that already live "in HBM"). Outputs are un-tupled literals.
+    pub fn run_b(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<HostTensor>> {
+        let exe = self.executable(name)?;
+        let out = exe.execute_b::<&xla::PjRtBuffer>(args)?;
+        Self::untuple(&out[0][0])
+    }
+
+    /// Upload a host tensor to a device-resident buffer.
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        t.buffer(&self.client)
+    }
+
+    fn untuple(buf: &xla::PjRtBuffer) -> Result<Vec<HostTensor>> {
+        // aot.py lowers with return_tuple=True: the single output buffer is
+        // a tuple literal; decompose and convert each element.
+        let lit = buf.to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        parts
+            .iter()
+            .map(HostTensor::from_literal)
+            .collect::<Result<Vec<_>>>()
+    }
+
+    /// Count of compiled (cached) executables.
+    pub fn compiled_count(&self) -> usize {
+        self.exes.borrow().len()
+    }
+}

@@ -1,0 +1,189 @@
+//! Host-side tensors: the interchange type between the engine, the HMM's
+//! weight storage, and PJRT literals/buffers.
+
+use anyhow::{bail, Context, Result};
+
+/// A shaped host tensor, f32 or i32 (the only dtypes the artifacts use).
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn zeros_f32(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor::F32 {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => {
+                shape
+            }
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.numel() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// Convert to an XLA literal (copies to XLA-owned memory).
+    pub fn literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> =
+            self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => {
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            HostTensor::I32 { data, .. } => {
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    /// Upload to a device-resident PJRT buffer (the real-path analogue of a
+    /// weight living in HBM).
+    pub fn buffer(&self, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        let b = match self {
+            HostTensor::F32 { shape, data } => {
+                client.buffer_from_host_buffer(data, shape, None)?
+            }
+            HostTensor::I32 { shape, data } => {
+                client.buffer_from_host_buffer(data, shape, None)?
+            }
+        };
+        Ok(b)
+    }
+
+    /// Read back from an XLA literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().context("literal has no array shape")?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(HostTensor::f32(dims, lit.to_vec::<f32>()?))
+            }
+            xla::ElementType::S32 => {
+                Ok(HostTensor::i32(dims, lit.to_vec::<i32>()?))
+            }
+            ty => bail!("unsupported literal dtype {ty:?}"),
+        }
+    }
+
+    /// Row-major index helper.
+    pub fn idx(&self, coords: &[usize]) -> usize {
+        let shape = self.shape();
+        assert_eq!(coords.len(), shape.len());
+        let mut i = 0;
+        for (c, s) in coords.iter().zip(shape) {
+            debug_assert!(c < s);
+            i = i * s + c;
+        }
+        i
+    }
+
+    /// Maximum absolute difference against another f32 tensor.
+    pub fn max_abs_diff(&self, other: &HostTensor) -> Result<f32> {
+        let a = self.as_f32()?;
+        let b = other.as_f32()?;
+        if a.len() != b.len() {
+            bail!("shape mismatch: {:?} vs {:?}", self.shape(), other.shape());
+        }
+        Ok(a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f32::max))
+    }
+
+    /// Argmax along the last axis; returns i32 indices shaped `shape[..-1]`.
+    pub fn argmax_last(&self) -> Result<HostTensor> {
+        let data = self.as_f32()?;
+        let shape = self.shape();
+        let last = *shape.last().context("scalar tensor")?;
+        let rows = self.numel() / last;
+        let mut out = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let row = &data[r * last..(r + 1) * last];
+            let mut best = 0usize;
+            for (i, v) in row.iter().enumerate() {
+                if *v > row[best] {
+                    best = i;
+                }
+            }
+            out.push(best as i32);
+        }
+        Ok(HostTensor::i32(shape[..shape.len() - 1].to_vec(), out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_accounting() {
+        let t = HostTensor::zeros_f32(vec![2, 3, 4]);
+        assert_eq!(t.numel(), 24);
+        assert_eq!(t.byte_len(), 96);
+        assert_eq!(t.idx(&[1, 2, 3]), 23);
+        assert_eq!(t.idx(&[0, 0, 0]), 0);
+    }
+
+    #[test]
+    fn argmax() {
+        let t = HostTensor::f32(
+            vec![2, 3],
+            vec![0.1, 0.9, 0.2, 5.0, -1.0, 2.0],
+        );
+        let am = t.argmax_last().unwrap();
+        assert_eq!(am.as_i32().unwrap(), &[1, 0]);
+        assert_eq!(am.shape(), &[2]);
+    }
+
+    #[test]
+    fn diff() {
+        let a = HostTensor::f32(vec![2], vec![1.0, 2.0]);
+        let b = HostTensor::f32(vec![2], vec![1.5, 2.0]);
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 0.5);
+    }
+}

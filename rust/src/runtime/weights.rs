@@ -1,0 +1,89 @@
+//! Raw weight-file loading (the disk side of the HMM's `disk_copy`
+//! primitive). Files are little-endian f32, integrity-checked against the
+//! manifest's sha256.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use sha2::{Digest, Sha256};
+
+use super::manifest::WeightSpec;
+use super::tensor::HostTensor;
+
+/// Read one weight tensor from disk, verifying size (and checksum unless
+/// `skip_checksum`).
+pub fn load_weight(
+    dir: &Path,
+    spec: &WeightSpec,
+    skip_checksum: bool,
+) -> Result<HostTensor> {
+    let path = dir.join(&spec.file);
+    let bytes = std::fs::read(&path)
+        .with_context(|| format!("reading weight file {path:?}"))?;
+    if bytes.len() != spec.numel() * 4 {
+        bail!(
+            "weight '{}': expected {} bytes, file has {}",
+            spec.name,
+            spec.numel() * 4,
+            bytes.len()
+        );
+    }
+    if !skip_checksum && !spec.sha256.is_empty() {
+        let digest = hex(&Sha256::digest(&bytes));
+        if digest != spec.sha256 {
+            bail!("weight '{}': sha256 mismatch (corrupt file?)", spec.name);
+        }
+    }
+    let data: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(HostTensor::f32(spec.shape.clone(), data))
+}
+
+fn hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join("elastic_moe_weights_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let data: Vec<f32> = (0..6).map(|i| i as f32 * 0.5).collect();
+        let bytes: Vec<u8> =
+            data.iter().flat_map(|f| f.to_le_bytes()).collect();
+        std::fs::write(dir.join("t.bin"), &bytes).unwrap();
+        let spec = WeightSpec {
+            name: "t".into(),
+            file: "t.bin".into(),
+            shape: vec![2, 3],
+            sha256: hex(&Sha256::digest(&bytes)),
+        };
+        let t = load_weight(&dir, &spec, false).unwrap();
+        assert_eq!(t.as_f32().unwrap(), &data[..]);
+
+        // Corrupt checksum is rejected...
+        let bad = WeightSpec {
+            sha256: "00".repeat(32),
+            ..spec.clone()
+        };
+        assert!(load_weight(&dir, &bad, false).is_err());
+        // ...unless skipped.
+        assert!(load_weight(&dir, &bad, true).is_ok());
+
+        // Wrong size is always rejected.
+        let wrong = WeightSpec {
+            shape: vec![7],
+            ..spec
+        };
+        assert!(load_weight(&dir, &wrong, true).is_err());
+    }
+}

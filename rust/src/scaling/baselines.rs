@@ -1,0 +1,508 @@
+//! The four baselines of §7.2, implemented on the same simulated cluster
+//! and engine as ElasticMoE (mirroring the paper's all-on-vLLM setup):
+//!
+//! - **Horizontal (Replica)** — full extra replica on fresh devices; no
+//!   downtime, coarse quanta, replicated experts.
+//! - **Vertical (Cold Restart)** — tear down, reboot bigger; downtime.
+//! - **Vertical (Extravagant)** — boot the target on *fresh* devices, then
+//!   release the old ones; no downtime, old+new devices held during.
+//! - **Vertical (Colocated)** — boot the target on the *same* devices; no
+//!   downtime but double-resident weights and a pre-shrunk KV cache.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ModelConfig, ParallelConfig};
+use crate::device::{Cluster, DeviceId, RegionId};
+use crate::imm::loader::disk_loader_teardown;
+use crate::metrics::ScalingMetrics;
+
+use super::boot::cold_boot;
+use super::outcome::{ScalingMethod, ScalingOutcome};
+
+/// State shared by the DiskLoader-based baselines.
+struct BaselineState {
+    cluster: Rc<RefCell<Cluster>>,
+    model: ModelConfig,
+    kv_bytes: u64,
+    current: Option<(ParallelConfig, Vec<(DeviceId, RegionId)>)>,
+    next_proc: u32,
+}
+
+impl BaselineState {
+    fn new(cluster: Rc<RefCell<Cluster>>, model: ModelConfig, kv_bytes: u64) -> Self {
+        BaselineState {
+            cluster,
+            model,
+            kv_bytes,
+            current: None,
+            next_proc: 1000,
+        }
+    }
+
+    fn proc(&mut self) -> u32 {
+        self.next_proc += 1;
+        self.next_proc
+    }
+
+    fn boot_on(
+        &mut self,
+        parallel: &ParallelConfig,
+        kv_factor: f64,
+    ) -> Result<(Vec<(DeviceId, RegionId)>, f64, crate::imm::BootBreakdown)>
+    {
+        let kv = (self.kv_bytes as f64 * kv_factor) as u64;
+        let proc = self.proc();
+        let mut cluster = self.cluster.borrow_mut();
+        let (regions, breakdown) =
+            cold_boot(&mut cluster, &self.model, parallel, kv, proc)?;
+        Ok((regions, breakdown.total(), breakdown))
+    }
+
+    fn teardown_current(&mut self) -> Result<()> {
+        if let Some((_, regions)) = self.current.take() {
+            let mut cluster = self.cluster.borrow_mut();
+            disk_loader_teardown(&mut cluster, &regions)?;
+        }
+        Ok(())
+    }
+
+    fn union_and_reset(&self, to: &ParallelConfig) -> Vec<DeviceId> {
+        let mut union = to.devices.clone();
+        if let Some((from, _)) = &self.current {
+            for &d in &from.devices {
+                if !union.contains(&d) {
+                    union.push(d);
+                }
+            }
+        }
+        self.cluster.borrow_mut().reset_peaks(&union);
+        union
+    }
+
+    fn metrics_for(
+        &self,
+        name: &'static str,
+        to: &ParallelConfig,
+        union: &[DeviceId],
+    ) -> ScalingMetrics {
+        let from_n = self
+            .current
+            .as_ref()
+            .map(|(p, _)| p.n_devices())
+            .unwrap_or(0);
+        let mut m = ScalingMetrics::new(name, from_n, to.n_devices());
+        m.peak_memory = self.cluster.borrow().peak_over(union);
+        m.peak_devices = union.len();
+        m
+    }
+}
+
+/// Vertical (Cold Restart).
+pub struct ColdRestart(BaselineState);
+
+impl ColdRestart {
+    pub fn new(cluster: Rc<RefCell<Cluster>>, model: ModelConfig, kv_bytes: u64) -> Self {
+        ColdRestart(BaselineState::new(cluster, model, kv_bytes))
+    }
+}
+
+impl ScalingMethod for ColdRestart {
+    fn name(&self) -> &'static str {
+        "Vertical (Cold Restart)"
+    }
+
+    fn boot(&mut self, parallel: &ParallelConfig) -> Result<f64> {
+        let (regions, t, _) = self.0.boot_on(parallel, 1.0)?;
+        self.0.current = Some((parallel.clone(), regions));
+        Ok(t)
+    }
+
+    fn scale(&mut self, to: &ParallelConfig) -> Result<ScalingOutcome> {
+        let union = self.0.union_and_reset(to);
+        // Tear down FIRST (that's the whole problem with this method).
+        self.0.teardown_current()?;
+        let (regions, boot_t, breakdown) = self.0.boot_on(to, 1.0)?;
+        let mut metrics = self.0.metrics_for(self.name(), to, &union);
+        for (name, t) in breakdown.stages() {
+            metrics.stage(name, t);
+        }
+        self.0.current = Some((to.clone(), regions));
+        metrics.from_devices = union.len() - to.n_devices()
+            + to.n_devices().min(union.len());
+        metrics.peak_memory = self.0.cluster.borrow().peak_over(&union);
+        metrics.scale_latency = boot_t;
+        metrics.downtime = boot_t;
+        Ok(ScalingOutcome {
+            metrics,
+            ready_after: boot_t,
+            downtime: Some((0.0, boot_t)),
+            intake_pause: None,
+            transition_derate: 1.0,
+            preserves_inflight: false,
+            new_parallel: to.clone(),
+            peak_devices: to.n_devices(),
+        })
+    }
+
+    fn current(&self) -> Option<&ParallelConfig> {
+        self.0.current.as_ref().map(|(p, _)| p)
+    }
+}
+
+/// Vertical (Extravagant): target booted on fresh devices.
+pub struct Extravagant(BaselineState);
+
+impl Extravagant {
+    pub fn new(cluster: Rc<RefCell<Cluster>>, model: ModelConfig, kv_bytes: u64) -> Self {
+        Extravagant(BaselineState::new(cluster, model, kv_bytes))
+    }
+}
+
+impl ScalingMethod for Extravagant {
+    fn name(&self) -> &'static str {
+        "Vertical (Extravagant)"
+    }
+
+    fn boot(&mut self, parallel: &ParallelConfig) -> Result<f64> {
+        let (regions, t, _) = self.0.boot_on(parallel, 1.0)?;
+        self.0.current = Some((parallel.clone(), regions));
+        Ok(t)
+    }
+
+    fn scale(&mut self, to: &ParallelConfig) -> Result<ScalingOutcome> {
+        // `to.devices` must be disjoint from the current set.
+        if let Some((from, _)) = &self.0.current {
+            if to.devices.iter().any(|d| from.devices.contains(d)) {
+                bail!(
+                    "Extravagant requires fresh devices (old {:?}, new {:?})",
+                    from.devices,
+                    to.devices
+                );
+            }
+        }
+        let union = self.0.union_and_reset(to);
+        let from_n = self
+            .0
+            .current
+            .as_ref()
+            .map(|(p, _)| p.n_devices())
+            .unwrap_or(0);
+        // Old serves while the new boots on fresh devices.
+        let (regions, boot_t, breakdown) = self.0.boot_on(to, 1.0)?;
+        // Switchover, then release the old devices.
+        self.0.teardown_current()?;
+        self.0.current = Some((to.clone(), regions));
+        let mut metrics = self.0.metrics_for(self.name(), to, &union);
+        metrics.from_devices = from_n;
+        for (name, t) in breakdown.stages() {
+            metrics.stage(name, t);
+        }
+        metrics.scale_latency = boot_t;
+        metrics.downtime = 0.0;
+        Ok(ScalingOutcome {
+            metrics,
+            ready_after: boot_t,
+            downtime: None,
+            intake_pause: None,
+            transition_derate: 1.0,
+            preserves_inflight: true, // old instance drains in-flight work
+            new_parallel: to.clone(),
+            peak_devices: union.len(),
+        })
+    }
+
+    fn current(&self) -> Option<&ParallelConfig> {
+        self.0.current.as_ref().map(|(p, _)| p)
+    }
+}
+
+/// Vertical (Colocated / Concurrent): target booted on the same devices.
+pub struct Colocated(BaselineState);
+
+impl Colocated {
+    pub fn new(cluster: Rc<RefCell<Cluster>>, model: ModelConfig, kv_bytes: u64) -> Self {
+        Colocated(BaselineState::new(cluster, model, kv_bytes))
+    }
+
+    /// KV shrink factor the colocated instance runs with at all times
+    /// (headroom for the second model copy during transitions).
+    pub const KV_FACTOR: f64 = 0.45;
+}
+
+impl ScalingMethod for Colocated {
+    fn name(&self) -> &'static str {
+        "Vertical (Colocated)"
+    }
+
+    fn boot(&mut self, parallel: &ParallelConfig) -> Result<f64> {
+        let (regions, t, _) = self.0.boot_on(parallel, Self::KV_FACTOR)?;
+        self.0.current = Some((parallel.clone(), regions));
+        Ok(t)
+    }
+
+    fn scale(&mut self, to: &ParallelConfig) -> Result<ScalingOutcome> {
+        // New devices must be a superset (scale-up) or subset (scale-down)
+        // sharing the old devices.
+        let from = self
+            .0
+            .current
+            .as_ref()
+            .map(|(p, _)| p.clone())
+            .context("not booted")?;
+        let shares = to.devices.iter().any(|d| from.devices.contains(d));
+        if !shares {
+            bail!("Colocated requires overlapping device sets");
+        }
+        let union = self.0.union_and_reset(to);
+        // Boot the target with shrunken KV while the old copy is resident:
+        // both copies coexist on the shared devices (peak!).
+        let (regions, boot_t, breakdown) =
+            self.0.boot_on(to, Self::KV_FACTOR)?;
+        // Old torn down only after the new one is ready.
+        let old = self.0.current.replace((to.clone(), regions));
+        if let Some((_, old_regions)) = old {
+            let mut cluster = self.0.cluster.borrow_mut();
+            disk_loader_teardown(&mut cluster, &old_regions)?;
+        }
+        let mut metrics = self.0.metrics_for(self.name(), to, &union);
+        metrics.from_devices = from.n_devices();
+        for (name, t) in breakdown.stages() {
+            metrics.stage(name, t);
+        }
+        metrics.scale_latency = boot_t;
+        metrics.downtime = 0.0;
+        Ok(ScalingOutcome {
+            metrics,
+            ready_after: boot_t,
+            downtime: None,
+            intake_pause: None,
+            // Two copies share the devices: the active instance is heavily
+            // derated during the transition (Table 2 "During": 0.467 vs
+            // 1.338 steady -> ~0.35).
+            transition_derate: 0.35,
+            preserves_inflight: true,
+            new_parallel: to.clone(),
+            peak_devices: union.len(),
+        })
+    }
+
+    fn current(&self) -> Option<&ParallelConfig> {
+        self.0.current.as_ref().map(|(p, _)| p)
+    }
+
+    fn steady_kv_factor(&self) -> f64 {
+        Self::KV_FACTOR
+    }
+
+    fn steady_batch_factor(&self) -> f64 {
+        Self::KV_FACTOR
+    }
+}
+
+/// Horizontal (Replica): adds a full replica of the current configuration
+/// on fresh devices. The aggregate capacity is modelled as doubled DP with
+/// *unchanged per-replica EP* (experts replicated, the paper's L4).
+pub struct Horizontal {
+    state: BaselineState,
+    replicas: usize,
+    base: Option<ParallelConfig>,
+}
+
+impl Horizontal {
+    pub fn new(cluster: Rc<RefCell<Cluster>>, model: ModelConfig, kv_bytes: u64) -> Self {
+        Horizontal {
+            state: BaselineState::new(cluster, model, kv_bytes),
+            replicas: 0,
+            base: None,
+        }
+    }
+
+    /// The aggregate layout across replicas (for the cost model).
+    pub fn aggregate_parallel(&self) -> Option<ParallelConfig> {
+        let base = self.base.as_ref()?;
+        let n = base.n_devices() * self.replicas;
+        ParallelConfig::with_ep(
+            base.dp * self.replicas,
+            base.tp,
+            base.ep, // experts confined per replica
+            (0..n).collect(),
+        )
+        .ok()
+    }
+}
+
+impl ScalingMethod for Horizontal {
+    fn name(&self) -> &'static str {
+        "Horizontal (Replica)"
+    }
+
+    fn boot(&mut self, parallel: &ParallelConfig) -> Result<f64> {
+        let (regions, t, _) = self.state.boot_on(parallel, 1.0)?;
+        self.state.current = Some((parallel.clone(), regions));
+        self.base = Some(parallel.clone());
+        self.replicas = 1;
+        Ok(t)
+    }
+
+    fn scale(&mut self, to: &ParallelConfig) -> Result<ScalingOutcome> {
+        let base = self.base.clone().context("not booted")?;
+        // Horizontal can only add whole replicas: `to` must be a fresh
+        // device set the size of the base config.
+        if to.n_devices() != base.n_devices() {
+            bail!(
+                "Horizontal adds whole replicas of {} devices, asked for {}",
+                base.n_devices(),
+                to.n_devices()
+            );
+        }
+        let union = self.state.union_and_reset(to);
+        let from_n = base.n_devices() * self.replicas;
+        let (regions, boot_t, breakdown) = self.state.boot_on(to, 1.0)?;
+        // Keep both: the old replica keeps serving.
+        if let Some((_, old_regions)) = &mut self.state.current {
+            old_regions.extend(regions);
+        }
+        self.replicas += 1;
+        let mut metrics = self.state.metrics_for(self.name(), to, &union);
+        metrics.from_devices = from_n;
+        metrics.to_devices = base.n_devices() * self.replicas;
+        for (name, t) in breakdown.stages() {
+            metrics.stage(name, t);
+        }
+        metrics.scale_latency = boot_t;
+        metrics.downtime = 0.0;
+        let agg = self.aggregate_parallel().context("aggregate")?;
+        Ok(ScalingOutcome {
+            metrics,
+            ready_after: boot_t,
+            downtime: None,
+            intake_pause: None,
+            transition_derate: 1.0,
+            preserves_inflight: true,
+            new_parallel: agg,
+            peak_devices: union.len(),
+        })
+    }
+
+    fn current(&self) -> Option<&ParallelConfig> {
+        self.base.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::dsv2_lite;
+
+    fn cluster(n: usize) -> Rc<RefCell<Cluster>> {
+        Rc::new(RefCell::new(Cluster::cloudmatrix(n)))
+    }
+
+    fn par(devs: std::ops::Range<usize>) -> ParallelConfig {
+        let v: Vec<usize> = devs.collect();
+        ParallelConfig::standard(v.len() / 2, 2, v).unwrap()
+    }
+
+    const KV: u64 = 8 << 30;
+
+    #[test]
+    fn cold_restart_has_downtime_and_low_peak() {
+        let c = cluster(6);
+        let mut m = ColdRestart::new(c.clone(), dsv2_lite(), KV);
+        m.boot(&par(0..4)).unwrap();
+        let used_steady = c.borrow().used_over(&[0, 1, 2, 3]);
+        let out = m.scale(&par(0..6)).unwrap();
+        assert!(out.downtime.is_some());
+        assert!(out.ready_after > 30.0, "{}", out.ready_after);
+        // Peak never holds two copies.
+        assert!(
+            out.metrics.peak_memory < used_steady * 2,
+            "peak {} vs steady {used_steady}",
+            out.metrics.peak_memory
+        );
+        assert!(!out.preserves_inflight);
+    }
+
+    #[test]
+    fn extravagant_no_downtime_but_double_devices() {
+        let c = cluster(10);
+        let mut m = Extravagant::new(c.clone(), dsv2_lite(), KV);
+        m.boot(&par(0..4)).unwrap();
+        let out = m
+            .scale(&ParallelConfig::standard(3, 2, (4..10).collect()).unwrap())
+            .unwrap();
+        assert!(out.downtime.is_none());
+        assert_eq!(out.peak_devices, 10);
+        // Overlapping devices rejected.
+        let mut m2 = Extravagant::new(cluster(6), dsv2_lite(), KV);
+        m2.boot(&par(0..4)).unwrap();
+        assert!(m2.scale(&par(0..6)).is_err());
+    }
+
+    #[test]
+    fn colocated_doubles_peak_on_shared_devices() {
+        let c = cluster(6);
+        let mut m = Colocated::new(c.clone(), dsv2_lite(), KV);
+        m.boot(&par(0..4)).unwrap();
+        let steady = c.borrow().used_over(&[0, 1, 2, 3]);
+        let out = m.scale(&par(0..6)).unwrap();
+        assert!(out.downtime.is_none());
+        assert!(
+            out.metrics.peak_memory > steady + steady / 2,
+            "peak {} should reflect two copies vs steady {steady}",
+            out.metrics.peak_memory
+        );
+        assert!(out.transition_derate < 0.5);
+        assert!(m.steady_kv_factor() < 1.0);
+    }
+
+    #[test]
+    fn horizontal_adds_whole_replicas_with_confined_ep() {
+        let c = cluster(8);
+        let mut m = Horizontal::new(c, dsv2_lite(), KV);
+        m.boot(&par(0..4)).unwrap();
+        let out = m
+            .scale(&ParallelConfig::standard(2, 2, (4..8).collect()).unwrap())
+            .unwrap();
+        assert!(out.downtime.is_none());
+        let agg = out.new_parallel;
+        assert_eq!(agg.n_devices(), 8);
+        assert_eq!(agg.ep, 4, "experts confined per replica");
+        assert_eq!(agg.dp, 4);
+        // Wrong-size replica rejected.
+        assert!(m
+            .scale(&ParallelConfig::standard(3, 2, (0..6).collect()).unwrap())
+            .is_err());
+    }
+
+    #[test]
+    fn all_baselines_slower_than_elastic() {
+        // Fig 7's headline: ElasticMoE ~0.1x the best baseline.
+        use crate::hmm::control::{HmmControl, HmmOptions};
+        use crate::imm::manager::{ImmOptions, InstanceManager};
+        use crate::scaling::ElasticMoE;
+
+        let c = cluster(6);
+        let hmm = HmmControl::new(c, dsv2_lite(), HmmOptions::default());
+        let imm = InstanceManager::new(
+            ImmOptions::default(),
+            crate::device::Timings::cloudmatrix(),
+        );
+        let mut e = ElasticMoE::new(hmm, imm, KV);
+        e.boot(&par(0..4)).unwrap();
+        let elastic_t = e.scale(&par(0..6)).unwrap().ready_after;
+
+        let c2 = cluster(6);
+        let mut cold = ColdRestart::new(c2, dsv2_lite(), KV);
+        cold.boot(&par(0..4)).unwrap();
+        let cold_t = cold.scale(&par(0..6)).unwrap().ready_after;
+
+        assert!(
+            elastic_t < cold_t * 0.2,
+            "elastic {elastic_t} vs cold {cold_t}"
+        );
+    }
+}

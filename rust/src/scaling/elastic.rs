@@ -1,0 +1,319 @@
+//! ElasticMoE's scaling choreography (§5.2, Fig 6): plan -> concurrent
+//! {HMM memory reconfiguration ∥ IMM instance preparation} -> zero-copy
+//! attach -> warmup -> switchover, with deferred frees at drain.
+
+use anyhow::{Context, Result};
+
+use crate::config::ParallelConfig;
+use crate::hmm::control::{HmmControl, InstanceBinding};
+use crate::imm::manager::InstanceManager;
+use crate::imm::InstanceState;
+use crate::metrics::ScalingMetrics;
+
+use super::outcome::{ScalingMethod, ScalingOutcome};
+
+/// The ElasticMoE method: owns the HMM and IMM.
+pub struct ElasticMoE {
+    pub hmm: HmmControl,
+    pub imm: InstanceManager,
+    kv_bytes_per_device: u64,
+    current: Option<ParallelConfig>,
+    active_proc: Option<u32>,
+    /// Binding of the most recently activated instance (live path rebinds
+    /// its backend from this).
+    pub last_binding: Option<InstanceBinding>,
+    /// Pre-initialise standby instances for +/- this many device deltas.
+    pub anticipate_steps: Vec<isize>,
+}
+
+impl ElasticMoE {
+    pub fn new(
+        hmm: HmmControl,
+        imm: InstanceManager,
+        kv_bytes_per_device: u64,
+    ) -> Self {
+        ElasticMoE {
+            hmm,
+            imm,
+            kv_bytes_per_device,
+            current: None,
+            active_proc: None,
+            last_binding: None,
+            // In units of the model's fixed TP (one DP replica per step).
+            anticipate_steps: vec![-1, 1, 2, 4],
+        }
+    }
+
+    /// Pre-initialise standby instances for anticipated neighbour
+    /// configurations (runs in the background; free at scale time).
+    fn anticipate(&mut self, around: &ParallelConfig) {
+        let tp = around.tp;
+        let cluster_n = self.hmm.cluster.borrow().len();
+        for &delta in &self.anticipate_steps.clone() {
+            let n = around.n_devices() as isize + delta * tp as isize;
+            if n <= 0 || n as usize > cluster_n {
+                continue;
+            }
+            let n = n as usize;
+            if n % tp != 0 {
+                continue;
+            }
+            if let Ok(p) = ParallelConfig::standard(n / tp, tp, (0..n).collect())
+            {
+                if !self.imm.has_standby(&p) {
+                    let proc = self.hmm.alloc_proc();
+                    self.imm.prepare_standby(p, proc);
+                }
+            }
+        }
+    }
+}
+
+impl ScalingMethod for ElasticMoE {
+    fn name(&self) -> &'static str {
+        "ElasticMoE"
+    }
+
+    fn boot(&mut self, parallel: &ParallelConfig) -> Result<f64> {
+        let t = self.hmm.cluster.borrow().timings.clone();
+        let load = self.hmm.load_initial(parallel, self.kv_bytes_per_device)?;
+        let proc = self.hmm.alloc_proc();
+        let (inst, prep) = self.imm.acquire(parallel, proc);
+        let (binding, attach) = self.hmm.attach_instance(proc)?;
+        let id = self.imm.register_ready(inst, 0.0)?;
+        self.imm.activate(id)?;
+        self.active_proc = Some(proc);
+        self.current = Some(parallel.clone());
+        self.last_binding = Some(binding);
+        self.anticipate(parallel);
+        // First boot is a cold start: container + prep + load + attach +
+        // warmup.
+        Ok(t.container_start + prep + load + attach
+            + t.warmup_for(self.hmm.model.n_layers))
+    }
+
+    fn scale(&mut self, to: &ParallelConfig) -> Result<ScalingOutcome> {
+        let from = self
+            .current
+            .clone()
+            .context("ElasticMoE not booted")?;
+        let t = self.hmm.cluster.borrow().timings.clone();
+        let mut metrics = ScalingMetrics::new(
+            self.name(),
+            from.n_devices(),
+            to.n_devices(),
+        );
+
+        // Validate the target against the physical cluster before touching
+        // any state.
+        self.hmm.cluster.borrow().validate_ids(&to.devices)?;
+
+        // Peak-memory measurement window over the union device set.
+        let union: Vec<usize> = {
+            let mut u = from.devices.clone();
+            for &d in &to.devices {
+                if !u.contains(&d) {
+                    u.push(d);
+                }
+            }
+            u
+        };
+        self.hmm.cluster.borrow_mut().reset_peaks(&union);
+
+        // 1) HMM reconfigures memory concurrently with serving.
+        let plan = self.hmm.plan_scale(to)?;
+        let stats = self.hmm.execute_plan(&plan, to)?;
+
+        // 2) IMM prepares the target instance concurrently.
+        let proc = self.hmm.alloc_proc();
+        let (inst, prep_time) = self.imm.acquire(to, proc);
+
+        // 3) Zero-copy attach once HMM is done.
+        let (binding, attach_time) = self.hmm.attach_instance(proc)?;
+
+        // 4) Warmup, then switchover (drain + reroute).
+        let warmup = t.warmup_for(self.hmm.model.n_layers);
+        let switchover = t.switchover;
+
+        let concurrent = stats.total.max(prep_time);
+        let ready_after = concurrent + attach_time + warmup + switchover;
+
+        metrics.stage("hmm_attn_p2p", stats.attn_p2p_time);
+        metrics.stage("hmm_expert_migration", stats.expert_p2p_time);
+        metrics.stage("hmm_vpage_remap", stats.remap_time);
+        if stats.realloc_time > 0.0 {
+            metrics.stage("hmm_realloc(no-vpage)", stats.realloc_time);
+        }
+        metrics.stage("kv_init", stats.kv_init_time);
+        metrics.stage("imm_prep", prep_time);
+        metrics.stage("zero_copy_attach", attach_time);
+        metrics.stage("warmup", warmup);
+        metrics.stage("switchover", switchover);
+
+        // Switchover bookkeeping: drain + retire the old instance, release
+        // its references, free orphaned expert pages.
+        if let Some(old_id) = self.imm.drain_active()? {
+            // In-flight requests finish on the shared KV; then retire.
+            let old = self.imm.retire(old_id, true)?;
+            debug_assert_eq!(old.state, InstanceState::Retired);
+        }
+        if let Some(old_proc) = self.active_proc.replace(proc) {
+            self.hmm.detach_instance(old_proc)?;
+        }
+        self.hmm.apply_deferred_frees()?;
+
+        let new_id = self.imm.register_ready(inst, ready_after)?;
+        self.imm.activate(new_id)?;
+
+        // Peak memory across the union (watermark survives the frees).
+        metrics.peak_memory = self.hmm.cluster.borrow().peak_over(&union);
+        metrics.peak_devices = union.len();
+        metrics.scale_latency = ready_after;
+        let downtime = if self.hmm.opts.use_zero_copy {
+            metrics.downtime = 0.0;
+            None
+        } else {
+            // Without zero-copy the KV cannot be shared: the old instance
+            // must stop before the new one owns the cache (Table 1 row 5).
+            metrics.downtime = ready_after;
+            Some((0.0, ready_after))
+        };
+
+        self.current = Some(to.clone());
+        self.last_binding = Some(binding);
+        self.anticipate(to);
+
+        Ok(ScalingOutcome {
+            metrics,
+            ready_after,
+            downtime,
+            intake_pause: Some((0.0, ready_after)),
+            transition_derate: 1.0,
+            preserves_inflight: self.hmm.opts.use_zero_copy,
+            new_parallel: to.clone(),
+            peak_devices: union.len(),
+        })
+    }
+
+    fn current(&self) -> Option<&ParallelConfig> {
+        self.current.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    use crate::config::model::dsv2_lite;
+    use crate::device::{Cluster, Timings};
+    use crate::hmm::control::HmmOptions;
+    use crate::imm::manager::ImmOptions;
+
+    fn elastic(n: usize) -> ElasticMoE {
+        let cluster = Rc::new(RefCell::new(Cluster::cloudmatrix(n)));
+        let hmm = HmmControl::new(
+            cluster,
+            dsv2_lite(),
+            HmmOptions::default(),
+        );
+        let imm = InstanceManager::new(
+            ImmOptions::default(),
+            Timings::cloudmatrix(),
+        );
+        ElasticMoE::new(hmm, imm, 8 << 30)
+    }
+
+    fn par(n: usize) -> ParallelConfig {
+        ParallelConfig::standard(n / 2, 2, (0..n).collect()).unwrap()
+    }
+
+    #[test]
+    fn scale_up_is_seconds_not_minutes() {
+        let mut e = elastic(6);
+        let boot = e.boot(&par(4)).unwrap();
+        assert!(boot > 30.0, "cold boot should be slow: {boot}");
+        let out = e.scale(&par(6)).unwrap();
+        // Paper Table 1: ~2.4 s for DP3->DP4; ours must be single-digit
+        // seconds with warmup dominating.
+        assert!(
+            out.ready_after > 1.5 && out.ready_after < 12.0,
+            "elastic scale-up {}",
+            out.ready_after
+        );
+        assert!(out.downtime.is_none());
+        assert!(out.preserves_inflight);
+        assert_eq!(out.metrics.downtime, 0.0);
+        // Warmup dominates (Fig 11).
+        let warmup = out
+            .metrics
+            .stages
+            .iter()
+            .find(|(n, _)| n == "warmup")
+            .unwrap()
+            .1;
+        let others: f64 = out
+            .metrics
+            .stages
+            .iter()
+            .filter(|(n, _)| n != "warmup" && n != "imm_prep")
+            .map(|(_, t)| t)
+            .sum();
+        assert!(warmup > others * 0.5, "warmup {warmup} vs others {others}");
+    }
+
+    #[test]
+    fn standby_hit_skips_preinit() {
+        let mut e = elastic(6);
+        e.boot(&par(4)).unwrap();
+        // boot() anticipated DP3-TP2 (6 devices).
+        assert!(e.imm.has_standby(&par(6)));
+        let out = e.scale(&par(6)).unwrap();
+        let prep = out
+            .metrics
+            .stages
+            .iter()
+            .find(|(n, _)| n == "imm_prep")
+            .unwrap()
+            .1;
+        assert_eq!(prep, 0.0, "standby hit must be free");
+    }
+
+    #[test]
+    fn preinit_disabled_dominates_latency() {
+        let mut e = elastic(6);
+        e.imm.opts.pre_init = false;
+        e.boot(&par(4)).unwrap();
+        let out = e.scale(&par(6)).unwrap();
+        // Table 1 -PreInit: scale time jumps to ~60 s.
+        assert!(
+            out.ready_after > 40.0,
+            "without preinit: {}",
+            out.ready_after
+        );
+        assert!(out.downtime.is_none(), "still no downtime");
+    }
+
+    #[test]
+    fn no_zero_copy_causes_downtime() {
+        let mut e = elastic(6);
+        e.hmm.opts.use_zero_copy = false;
+        e.hmm.opts.ipc_safe_alloc = false;
+        e.boot(&par(4)).unwrap();
+        let out = e.scale(&par(6)).unwrap();
+        assert!(out.downtime.is_some());
+        assert!(out.metrics.downtime > 0.0);
+        assert!(!out.preserves_inflight);
+    }
+
+    #[test]
+    fn scale_down_works_and_is_fast() {
+        let mut e = elastic(6);
+        e.boot(&par(6)).unwrap();
+        let out = e.scale(&par(4)).unwrap();
+        assert!(out.ready_after < 12.0, "{}", out.ready_after);
+        assert_eq!(out.new_parallel.n_devices(), 4);
+        assert!(out.downtime.is_none());
+    }
+}

@@ -1,0 +1,14 @@
+//! Scaling methods: ElasticMoE plus the paper's four baselines (§7.2), all
+//! serving through the same engine. Each method implements
+//! [`ScalingMethod`]: boot an initial configuration, then execute scaling
+//! events that produce measured [`crate::metrics::ScalingMetrics`] and a
+//! transition timeline the serving simulator enacts.
+
+pub mod baselines;
+pub mod boot;
+pub mod elastic;
+pub mod outcome;
+
+pub use baselines::{ColdRestart, Colocated, Extravagant, Horizontal};
+pub use elastic::ElasticMoE;
+pub use outcome::{ScalingMethod, ScalingOutcome};

@@ -1,0 +1,60 @@
+//! The scaling-method interface and the transition timeline it produces.
+
+use anyhow::Result;
+
+use crate::config::ParallelConfig;
+use crate::metrics::ScalingMetrics;
+
+/// What a scaling event does to the serving timeline, all times relative to
+/// the scale command (t = 0).
+#[derive(Debug, Clone)]
+pub struct ScalingOutcome {
+    /// Measured latency/downtime/peak-memory (the paper's scaling metrics).
+    pub metrics: ScalingMetrics,
+    /// When the target instance is ready to serve.
+    pub ready_after: f64,
+    /// Window with no serving instance (cold restart), if any.
+    pub downtime: Option<(f64, f64)>,
+    /// Window during which the active instance pauses *new* intake
+    /// (ElasticMoE's transition-capacity trade-off, §C).
+    pub intake_pause: Option<(f64, f64)>,
+    /// Throughput derate of the active instance during the transition
+    /// (colocated: two copies share the devices).
+    pub transition_derate: f64,
+    /// Whether in-flight requests survive the switchover with their KV
+    /// (zero-copy reuse) or must restart from scratch.
+    pub preserves_inflight: bool,
+    /// The configuration after the event.
+    pub new_parallel: ParallelConfig,
+    /// Total devices occupied at the transition's peak.
+    pub peak_devices: usize,
+}
+
+/// A scaling strategy: boots an initial configuration and executes scaling
+/// events. All five methods drive the same simulated cluster and serve
+/// through the same engine.
+pub trait ScalingMethod {
+    fn name(&self) -> &'static str;
+
+    /// Boot the initial configuration; returns the boot time (seconds).
+    fn boot(&mut self, parallel: &ParallelConfig) -> Result<f64>;
+
+    /// Execute a scaling event to `to`.
+    fn scale(&mut self, to: &ParallelConfig) -> Result<ScalingOutcome>;
+
+    /// Current configuration.
+    fn current(&self) -> Option<&ParallelConfig>;
+
+    /// Steady-state KV-budget factor (< 1.0 for colocated, which must keep
+    /// headroom for a second model copy at all times — Table 2's "Before"
+    /// column).
+    fn steady_kv_factor(&self) -> f64 {
+        1.0
+    }
+
+    /// Steady-state batch-capacity factor: colocated also halves its
+    /// max concurrent sequences so the second copy's activations fit.
+    fn steady_batch_factor(&self) -> f64 {
+        1.0
+    }
+}

@@ -1,0 +1,104 @@
+//! Clock abstraction: simulated (discrete-event) vs wall time.
+
+use std::cell::Cell;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Time source for the serving stack. Seconds as f64 since an arbitrary
+/// epoch (simulation start / process start).
+pub trait Clock {
+    fn now(&self) -> f64;
+    /// Advance time by `dt` seconds. For [`SimClock`] this is instantaneous
+    /// bookkeeping; for [`RealClock`] it sleeps.
+    fn advance(&self, dt: f64);
+}
+
+/// Shared simulated clock. Cloning shares the underlying time cell, so every
+/// component observes the same simulated instant.
+#[derive(Debug, Clone, Default)]
+pub struct SimClock {
+    now: Rc<Cell<f64>>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Jump directly to an absolute time. Clamped to be monotonic: a target
+    /// in the past leaves the clock unchanged (concurrent phases may report
+    /// completion times out of order).
+    pub fn advance_to(&self, t: f64) {
+        self.now.set(self.now.get().max(t));
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> f64 {
+        self.now.get()
+    }
+
+    fn advance(&self, dt: f64) {
+        debug_assert!(dt >= 0.0, "negative advance {dt}");
+        self.now.set(self.now.get() + dt);
+    }
+}
+
+/// Wall-clock time (used by the end-to-end example).
+#[derive(Debug, Clone)]
+pub struct RealClock {
+    epoch: Instant,
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        RealClock {
+            epoch: Instant::now(),
+        }
+    }
+}
+
+impl RealClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    fn advance(&self, _dt: f64) {
+        // No-op: under wall time the work being accounted for has already
+        // taken its real duration (backends measure with Instant). Sleeping
+        // here would double-count. Real-time waits (e.g. for the next
+        // arrival) are explicit `std::thread::sleep`s in the caller.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sim_clock_is_shared() {
+        let c1 = SimClock::new();
+        let c2 = c1.clone();
+        c1.advance(1.5);
+        assert_eq!(c2.now(), 1.5);
+        c2.advance_to(3.0);
+        assert_eq!(c1.now(), 3.0);
+        // advance_to never moves backwards
+        c2.advance_to(2.0);
+        assert_eq!(c1.now(), 3.0);
+    }
+
+    #[test]
+    fn real_clock_monotonic() {
+        let c = RealClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+}

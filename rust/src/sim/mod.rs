@@ -1,0 +1,10 @@
+//! Simulated / real time: the whole serving stack is generic over [`Clock`],
+//! so the paper experiments run deterministically under [`SimClock`]
+//! (discrete-event time) while the end-to-end example runs the *same code*
+//! under [`RealClock`] wall time with real PJRT compute.
+
+pub mod clock;
+pub mod events;
+
+pub use clock::{Clock, RealClock, SimClock};
+pub use events::{Event, EventQueue};

@@ -1,0 +1,125 @@
+//! Micro/endtoend bench harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use `harness = false` and call [`Bench::run`] /
+//! [`time_fn`] directly. Reports mean/p50/p99 and optional throughput.
+
+use std::time::Instant;
+
+use super::stats::{mean, percentile, std};
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p99 {:>12}",
+            self.name,
+            self.iters,
+            super::fmt_secs(self.mean_s),
+            super::fmt_secs(self.p50_s),
+            super::fmt_secs(self.p99_s),
+        )
+    }
+
+    /// items/sec at the measured mean.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean_s
+    }
+}
+
+/// Bench runner with warmup.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 3,
+            iters: 20,
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_iters: usize, iters: usize) -> Self {
+        Bench {
+            warmup_iters,
+            iters,
+        }
+    }
+
+    /// Quick-mode override: `BENCH_FAST=1` shrinks iteration counts so the
+    /// full suite stays fast in CI.
+    pub fn from_env(warmup: usize, iters: usize) -> Self {
+        if std::env::var("BENCH_FAST").is_ok() {
+            Bench::new(1, 3.min(iters))
+        } else {
+            Bench::new(warmup, iters)
+        }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_s: mean(&samples),
+            std_s: std(&samples),
+            p50_s: percentile(&samples, 50.0),
+            p99_s: percentile(&samples, 99.0),
+            min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        };
+        println!("{}", result.report());
+        result
+    }
+}
+
+/// One-shot timing of a closure, returning (elapsed seconds, value).
+pub fn time_fn<T, F: FnOnce() -> T>(f: F) -> (f64, T) {
+    let t0 = Instant::now();
+    let v = f();
+    (t0.elapsed().as_secs_f64(), v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures() {
+        let b = Bench::new(1, 5);
+        let r = b.run("noop-spin", || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_s >= 0.0 && r.mean_s < 0.1);
+        assert!(r.p99_s >= r.p50_s);
+    }
+
+    #[test]
+    fn time_fn_returns_value() {
+        let (t, v) = time_fn(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(t >= 0.0);
+    }
+}

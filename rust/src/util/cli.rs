@@ -1,0 +1,118 @@
+//! Minimal command-line parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand-style positionals + options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = iter.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects an integer, got '{v}'")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get_usize(name, default as usize) as u64
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects a number, got '{v}'")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("exp fig7 --model dsv2lite --steps=3 --verbose --rps 2.5");
+        assert_eq!(a.subcommand(), Some("exp"));
+        assert_eq!(a.positional[1], "fig7");
+        assert_eq!(a.get("model"), Some("dsv2lite"));
+        assert_eq!(a.get_usize("steps", 0), 3);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get_f64("rps", 1.0), 2.5);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("serve");
+        assert_eq!(a.get_or("addr", "127.0.0.1"), "127.0.0.1");
+        assert_eq!(a.get_usize("devices", 4), 4);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --dry-run");
+        assert!(a.flag("dry-run"));
+    }
+}

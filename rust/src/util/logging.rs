@@ -1,0 +1,65 @@
+//! Stderr logger backend for the `log` facade (env_logger is unavailable).
+//!
+//! Level is controlled by the `ELASTIC_LOG` environment variable
+//! (`error|warn|info|debug|trace`, default `info`).
+
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger;
+
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+static LOGGER: StderrLogger = StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let tag = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let target = record.target().rsplit("::").next().unwrap_or("");
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(err, "[{tag} {target}] {}", record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent). Honors `ELASTIC_LOG`.
+pub fn init() {
+    if INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let level = match std::env::var("ELASTIC_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("warn") => LevelFilter::Warn,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Info,
+    };
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

@@ -1,0 +1,61 @@
+//! Self-contained utilities replacing crates unavailable in the offline
+//! environment (see DESIGN.md §1): JSON, CLI parsing, logging, PRNG,
+//! statistics, a mini property-test harness, a bench harness, and table
+//! rendering for experiment reports.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod proplite;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Format a byte count using binary units (GiB shown as "GB" to match the
+/// paper's tables).
+pub fn fmt_bytes(bytes: u64) -> String {
+    const KB: f64 = 1024.0;
+    let b = bytes as f64;
+    if b >= KB * KB * KB {
+        format!("{:.1} GB", b / (KB * KB * KB))
+    } else if b >= KB * KB {
+        format!("{:.1} MB", b / (KB * KB))
+    } else if b >= KB {
+        format!("{:.1} KB", b / KB)
+    } else {
+        format!("{bytes} B")
+    }
+}
+
+/// Format a duration given in seconds with adaptive precision.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0} s")
+    } else if s >= 1.0 {
+        format!("{s:.2} s")
+    } else if s >= 1e-3 {
+        format!("{:.1} ms", s * 1e3)
+    } else {
+        format!("{:.1} us", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KB");
+        assert_eq!(fmt_bytes(64 * 1024 * 1024 * 1024), "64.0 GB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(120.0), "120 s");
+        assert_eq!(fmt_secs(2.43), "2.43 s");
+        assert_eq!(fmt_secs(0.0042), "4.2 ms");
+    }
+}

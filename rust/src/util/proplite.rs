@@ -1,0 +1,85 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! Runs a property over many deterministically-seeded random cases and, on
+//! failure, reports the case seed so the exact input can be replayed:
+//!
+//! ```no_run
+//! use elastic_moe::util::proplite::check;
+//! check("sort is idempotent", 200, |rng| {
+//!     let n = rng.range(0, 50);
+//!     let mut v: Vec<u64> = (0..n).map(|_| rng.below(100)).collect();
+//!     v.sort_unstable();
+//!     let once = v.clone();
+//!     v.sort_unstable();
+//!     assert_eq!(once, v);
+//! });
+//! ```
+//!
+//! Set `PROPLITE_SEED=<n>` to replay one specific case of every property.
+
+use super::rng::Rng;
+
+/// Base seed; mixed with the case index per case.
+const BASE_SEED: u64 = 0xE1A5_71C0_0E5E_ED42;
+
+/// Run `cases` random cases of `prop`. Panics (with the failing seed) on the
+/// first failure. Properties express failure by panicking (assert!).
+pub fn check<F: FnMut(&mut Rng)>(name: &str, cases: u64, mut prop: F) {
+    if let Ok(s) = std::env::var("PROPLITE_SEED") {
+        let seed: u64 = s.parse().expect("PROPLITE_SEED must be an integer");
+        let mut rng = Rng::new(BASE_SEED ^ seed);
+        prop(&mut rng);
+        return;
+    }
+    for case in 0..cases {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || {
+                let mut rng = Rng::new(BASE_SEED ^ case);
+                prop(&mut rng);
+            },
+        ));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case} \
+                 (replay with PROPLITE_SEED={case}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("counts", 50, |_rng| {
+            count += 1;
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(|| {
+            check("fails on 7", 20, |rng| {
+                // deterministic per-case value
+                let x = rng.below(20);
+                assert!(x != 13, "x was 13");
+            });
+        });
+        // Some case will draw 13 with ~64% probability over 20 cases; to be
+        // deterministic we just check the harness propagates panics when
+        // they happen, and passes otherwise.
+        if let Err(p) = result {
+            let msg = p.downcast_ref::<String>().unwrap();
+            assert!(msg.contains("PROPLITE_SEED="), "{msg}");
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! Request-stream generation with the paper's load profiles (§7.1: fixed,
+//! variable and patterned request rates; §7.6: rps(t) = f(t) ramps).
+
+use crate::util::rng::Rng;
+
+use super::request::Request;
+
+/// Arrival-rate profile, requests/second as a function of time.
+#[derive(Debug, Clone)]
+pub enum RateProfile {
+    /// Constant rate.
+    Fixed(f64),
+    /// Linear ramp from `from` to `to` over `duration` seconds.
+    Ramp { from: f64, to: f64, duration: f64 },
+    /// Base rate with a multiplicative burst in `[start, start+len)`
+    /// (the "10x within minutes" pattern of §2.2).
+    Burst {
+        base: f64,
+        factor: f64,
+        start: f64,
+        len: f64,
+    },
+    /// Step change at `at` (used to trigger scaling events, §7.5).
+    Step { before: f64, after: f64, at: f64 },
+    /// Repeating day/night-style sinusoid: `base * (1 + amp*sin)`.
+    Diurnal { base: f64, amp: f64, period: f64 },
+}
+
+impl RateProfile {
+    /// Rate at time `t`.
+    pub fn rate(&self, t: f64) -> f64 {
+        match *self {
+            RateProfile::Fixed(r) => r,
+            RateProfile::Ramp { from, to, duration } => {
+                if duration <= 0.0 {
+                    return to;
+                }
+                let f = (t / duration).clamp(0.0, 1.0);
+                from + (to - from) * f
+            }
+            RateProfile::Burst {
+                base,
+                factor,
+                start,
+                len,
+            } => {
+                if t >= start && t < start + len {
+                    base * factor
+                } else {
+                    base
+                }
+            }
+            RateProfile::Step { before, after, at } => {
+                if t < at {
+                    before
+                } else {
+                    after
+                }
+            }
+            RateProfile::Diurnal { base, amp, period } => {
+                base * (1.0
+                    + amp * (2.0 * std::f64::consts::PI * t / period).sin())
+                .max(0.0)
+            }
+        }
+    }
+}
+
+/// IO-shape spec: fixed-length prompts and bounded random decode lengths
+/// (the paper's synthetic workload, e.g. §7.6: 2000-token prompts, 500-750
+/// decode).
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub prompt_len: usize,
+    pub decode_min: usize,
+    pub decode_max: usize,
+    pub profile: RateProfile,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    /// §7.6's workload.
+    pub fn slo_sweep(rps: f64) -> Self {
+        WorkloadSpec {
+            prompt_len: 2000,
+            decode_min: 500,
+            decode_max: 750,
+            profile: RateProfile::Fixed(rps),
+            seed: 7,
+        }
+    }
+
+    /// Appendix A.1's offline throughput workload.
+    pub fn offline_batch() -> Self {
+        WorkloadSpec {
+            prompt_len: 500,
+            decode_min: 250,
+            decode_max: 500,
+            profile: RateProfile::Fixed(f64::INFINITY),
+            seed: 11,
+        }
+    }
+}
+
+/// Deterministic Poisson-arrival request generator.
+#[derive(Debug)]
+pub struct WorkloadGen {
+    spec: WorkloadSpec,
+    rng: Rng,
+    next_id: u64,
+    t: f64,
+}
+
+impl WorkloadGen {
+    pub fn new(spec: WorkloadSpec) -> Self {
+        let rng = Rng::new(spec.seed);
+        WorkloadGen {
+            spec,
+            rng,
+            next_id: 1,
+            t: 0.0,
+        }
+    }
+
+    fn decode_len(&mut self) -> usize {
+        if self.spec.decode_max <= self.spec.decode_min {
+            return self.spec.decode_min;
+        }
+        self.rng
+            .range(self.spec.decode_min as u64, self.spec.decode_max as u64)
+            as usize
+    }
+
+    /// Next arrival (None when the profile's rate is 0 for good). Advances
+    /// internal time by exponential inter-arrival draws against the
+    /// instantaneous rate (thinning-free approximation: fine for the
+    /// piecewise-constant profiles used in the experiments).
+    pub fn next_arrival(&mut self) -> Option<Request> {
+        let rate = self.spec.profile.rate(self.t);
+        if rate <= 0.0 {
+            // Jump forward looking for a nonzero rate (bounded scan).
+            for _ in 0..10_000 {
+                self.t += 1.0;
+                if self.spec.profile.rate(self.t) > 0.0 {
+                    return self.next_arrival();
+                }
+            }
+            return None;
+        }
+        if rate.is_infinite() {
+            // Offline mode: all requests arrive at t=0.
+            let d = self.decode_len();
+            let id = self.next_id;
+            self.next_id += 1;
+            return Some(Request::new(id, 0.0, self.spec.prompt_len, d));
+        }
+        self.t += self.rng.exponential(rate);
+        let d = self.decode_len();
+        let id = self.next_id;
+        self.next_id += 1;
+        Some(Request::new(id, self.t, self.spec.prompt_len, d))
+    }
+
+    /// Generate all arrivals up to `horizon` seconds.
+    pub fn arrivals_until(&mut self, horizon: f64) -> Vec<Request> {
+        let mut out = Vec::new();
+        loop {
+            match self.next_arrival() {
+                Some(r) if r.arrival <= horizon => out.push(r),
+                _ => break,
+            }
+        }
+        out
+    }
+
+    /// A fixed-size offline batch (all arrive at t=0).
+    pub fn offline_batch(&mut self, n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|_| {
+                let d = self.decode_len();
+                let id = self.next_id;
+                self.next_id += 1;
+                Request::new(id, 0.0, self.spec.prompt_len, d)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_shape() {
+        let ramp = RateProfile::Ramp {
+            from: 1.0,
+            to: 5.0,
+            duration: 100.0,
+        };
+        assert_eq!(ramp.rate(0.0), 1.0);
+        assert_eq!(ramp.rate(50.0), 3.0);
+        assert_eq!(ramp.rate(200.0), 5.0);
+
+        let burst = RateProfile::Burst {
+            base: 2.0,
+            factor: 10.0,
+            start: 60.0,
+            len: 30.0,
+        };
+        assert_eq!(burst.rate(0.0), 2.0);
+        assert_eq!(burst.rate(75.0), 20.0);
+        assert_eq!(burst.rate(90.0), 2.0);
+
+        let step = RateProfile::Step {
+            before: 1.0,
+            after: 4.0,
+            at: 10.0,
+        };
+        assert_eq!(step.rate(9.9), 1.0);
+        assert_eq!(step.rate(10.0), 4.0);
+    }
+
+    #[test]
+    fn poisson_rate_is_respected() {
+        let spec = WorkloadSpec {
+            prompt_len: 100,
+            decode_min: 10,
+            decode_max: 20,
+            profile: RateProfile::Fixed(5.0),
+            seed: 3,
+        };
+        let mut g = WorkloadGen::new(spec);
+        let arr = g.arrivals_until(200.0);
+        let rate = arr.len() as f64 / 200.0;
+        assert!((rate - 5.0).abs() < 0.5, "empirical rate {rate}");
+        // Arrivals are sorted and ids unique.
+        for w in arr.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+            assert!(w[0].id < w[1].id);
+        }
+    }
+
+    #[test]
+    fn decode_lengths_in_range() {
+        let mut g = WorkloadGen::new(WorkloadSpec::slo_sweep(1.0));
+        for _ in 0..100 {
+            let r = g.next_arrival().unwrap();
+            assert_eq!(r.prompt_len, 2000);
+            assert!((500..=750).contains(&r.max_new_tokens));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a: Vec<f64> = WorkloadGen::new(WorkloadSpec::slo_sweep(2.0))
+            .arrivals_until(50.0)
+            .iter()
+            .map(|r| r.arrival)
+            .collect();
+        let b: Vec<f64> = WorkloadGen::new(WorkloadSpec::slo_sweep(2.0))
+            .arrivals_until(50.0)
+            .iter()
+            .map(|r| r.arrival)
+            .collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn offline_batch_all_at_zero() {
+        let mut g = WorkloadGen::new(WorkloadSpec::offline_batch());
+        let batch = g.offline_batch(100);
+        assert_eq!(batch.len(), 100);
+        assert!(batch.iter().all(|r| r.arrival == 0.0));
+    }
+}

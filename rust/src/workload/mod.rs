@@ -1,0 +1,9 @@
+//! Synthetic workload generation (§7.1): fixed-length IO request streams
+//! with fixed, ramping, bursty and patterned arrival-rate profiles, drawn
+//! from seeded PRNGs for deterministic experiments.
+
+pub mod generator;
+pub mod request;
+
+pub use generator::{RateProfile, WorkloadGen, WorkloadSpec};
+pub use request::{Request, RequestId, RequestState};

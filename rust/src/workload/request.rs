@@ -1,0 +1,117 @@
+//! Request state: one generation request moving through the serving stack.
+
+/// Unique request id.
+pub type RequestId = u64;
+
+/// Lifecycle of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestState {
+    /// In the coordinator queue.
+    Queued,
+    /// Admitted, waiting for / undergoing prefill.
+    Prefilling,
+    /// Generating tokens.
+    Decoding,
+    /// All tokens produced.
+    Finished,
+    /// Dropped (baseline downtime only — ElasticMoE never drops).
+    Dropped,
+}
+
+/// One inference request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: RequestId,
+    pub arrival: f64,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+    pub state: RequestState,
+    /// Decode progress.
+    pub generated: usize,
+    /// Time the first token was emitted.
+    pub first_token_at: Option<f64>,
+    /// Time the request finished.
+    pub finished_at: Option<f64>,
+    /// Live-path payload: prompt token ids (empty in simulation).
+    pub prompt_ids: Vec<i32>,
+    /// Live-path payload: generated token ids.
+    pub output_ids: Vec<i32>,
+}
+
+impl Request {
+    pub fn new(
+        id: RequestId,
+        arrival: f64,
+        prompt_len: usize,
+        max_new_tokens: usize,
+    ) -> Self {
+        Request {
+            id,
+            arrival,
+            prompt_len,
+            max_new_tokens,
+            state: RequestState::Queued,
+            generated: 0,
+            first_token_at: None,
+            finished_at: None,
+            prompt_ids: Vec::new(),
+            output_ids: Vec::new(),
+        }
+    }
+
+    /// Total KV footprint in tokens at completion.
+    pub fn total_tokens(&self) -> usize {
+        self.prompt_len + self.max_new_tokens
+    }
+
+    /// Current sequence length (prompt + generated so far).
+    pub fn current_len(&self) -> usize {
+        self.prompt_len + self.generated
+    }
+
+    pub fn is_done(&self) -> bool {
+        matches!(self.state, RequestState::Finished | RequestState::Dropped)
+    }
+
+    /// TTFT if the first token has been emitted.
+    pub fn ttft(&self) -> Option<f64> {
+        self.first_token_at.map(|t| t - self.arrival)
+    }
+
+    /// Mean TPOT over the decode phase (excluding the first token).
+    pub fn tpot(&self) -> Option<f64> {
+        let (first, done) = (self.first_token_at?, self.finished_at?);
+        if self.generated <= 1 {
+            return Some(0.0);
+        }
+        Some((done - first) / (self.generated - 1) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_accounting() {
+        let mut r = Request::new(1, 10.0, 100, 50);
+        assert_eq!(r.total_tokens(), 150);
+        assert_eq!(r.current_len(), 100);
+        r.first_token_at = Some(12.0);
+        r.generated = 50;
+        r.finished_at = Some(61.0);
+        r.state = RequestState::Finished;
+        assert_eq!(r.ttft(), Some(2.0));
+        assert!((r.tpot().unwrap() - 1.0).abs() < 1e-9);
+        assert!(r.is_done());
+    }
+
+    #[test]
+    fn single_token_tpot_is_zero() {
+        let mut r = Request::new(1, 0.0, 10, 1);
+        r.first_token_at = Some(1.0);
+        r.finished_at = Some(1.0);
+        r.generated = 1;
+        assert_eq!(r.tpot(), Some(0.0));
+    }
+}

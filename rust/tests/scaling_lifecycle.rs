@@ -1,0 +1,158 @@
+//! Full scaling lifecycles per method: boot -> up -> down -> up again,
+//! asserting the paper's qualitative contract for each method (downtime,
+//! peak memory, device usage, repeatability).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use elastic_moe::config::model::dsv2_lite;
+use elastic_moe::config::ParallelConfig;
+use elastic_moe::device::Cluster;
+use elastic_moe::experiments::common::{make_method, par, KV_BYTES};
+use elastic_moe::scaling::{ColdRestart, ScalingMethod};
+
+fn m() -> elastic_moe::config::ModelConfig {
+    dsv2_lite()
+}
+
+#[test]
+fn elastic_up_down_up_is_stable() {
+    let model = m();
+    let mut meth = make_method("elastic", &model, 8).unwrap();
+    meth.boot(&par(&model, 4).unwrap()).unwrap();
+    let up1 = meth.scale(&par(&model, 6).unwrap()).unwrap();
+    let down = meth.scale(&par(&model, 4).unwrap()).unwrap();
+    let up2 = meth.scale(&par(&model, 8).unwrap()).unwrap();
+    for (label, out) in
+        [("up1", &up1), ("down", &down), ("up2", &up2)]
+    {
+        assert_eq!(out.metrics.downtime, 0.0, "{label}");
+        assert!(out.ready_after < 15.0, "{label}: {}", out.ready_after);
+        assert!(out.preserves_inflight, "{label}");
+    }
+    // Second scale-up to a standby-cached config is not slower than the
+    // first by more than noise.
+    assert!(up2.ready_after < up1.ready_after * 2.0);
+    assert_eq!(meth.current().unwrap().n_devices(), 8);
+}
+
+#[test]
+fn elastic_memory_returns_to_steady_state() {
+    let model = m();
+    let cluster = Rc::new(RefCell::new(Cluster::cloudmatrix(6)));
+    let hmm = elastic_moe::hmm::control::HmmControl::new(
+        cluster.clone(),
+        model.clone(),
+        Default::default(),
+    );
+    let imm = elastic_moe::imm::manager::InstanceManager::new(
+        Default::default(),
+        elastic_moe::device::Timings::cloudmatrix(),
+    );
+    let mut meth =
+        elastic_moe::scaling::ElasticMoE::new(hmm, imm, KV_BYTES);
+    meth.boot(&par(&model, 4).unwrap()).unwrap();
+    let steady4 = cluster.borrow().used_over(&[0, 1, 2, 3]);
+    meth.scale(&par(&model, 6).unwrap()).unwrap();
+    let after_up = cluster.borrow().used_over(&[0, 1, 2, 3, 4, 5]);
+    // After switchover (deferred frees applied inside scale), usage on the
+    // original 4 devices must have DROPPED (experts moved away), and the
+    // 6-device total must be bounded by ~steady + 2 new device loads.
+    let on_old = cluster.borrow().used_over(&[0, 1, 2, 3]);
+    assert!(on_old < steady4, "evicted experts not freed: {on_old} vs {steady4}");
+    assert!(after_up > steady4, "new devices hold weights");
+    meth.scale(&par(&model, 4).unwrap()).unwrap();
+    let back4 = cluster.borrow().used_over(&[0, 1, 2, 3]);
+    // All experts back on 4 devices: usage within rounding of steady4.
+    let ratio = back4 as f64 / steady4 as f64;
+    assert!(
+        (0.95..1.05).contains(&ratio),
+        "steady {steady4} vs back {back4}"
+    );
+    // Devices 4,5 may retain attention shards until instance teardown but
+    // hold no expert pages.
+    let c = cluster.borrow();
+    assert_eq!(
+        c.devices[4]
+            .hbm
+            .used_by_kind(elastic_moe::device::RegionKind::ExpertWeights),
+        0
+    );
+}
+
+#[test]
+fn cold_restart_repeats_full_boot_every_time() {
+    let model = m();
+    let cluster = Rc::new(RefCell::new(Cluster::cloudmatrix(8)));
+    let mut meth = ColdRestart::new(cluster, model.clone(), KV_BYTES);
+    meth.boot(&par(&model, 4).unwrap()).unwrap();
+    let a = meth.scale(&par(&model, 6).unwrap()).unwrap();
+    let b = meth.scale(&par(&model, 8).unwrap()).unwrap();
+    // Both transitions pay the full cold boot with downtime.
+    for out in [&a, &b] {
+        assert!(out.downtime.is_some());
+        assert!(out.ready_after > 30.0);
+        assert!(!out.preserves_inflight);
+    }
+    // Bigger target, longer load.
+    assert!(b.ready_after > a.ready_after * 0.9);
+}
+
+#[test]
+fn methods_disagree_only_in_choreography_not_capacity() {
+    // After scaling completes, elastic and cold restart land on the same
+    // configuration (same devices, same parallel layout).
+    let model = m();
+    let mut e = make_method("elastic", &model, 6).unwrap();
+    let mut c = make_method("cold", &model, 6).unwrap();
+    e.boot(&par(&model, 4).unwrap()).unwrap();
+    c.boot(&par(&model, 4).unwrap()).unwrap();
+    let eo = e.scale(&par(&model, 6).unwrap()).unwrap();
+    let co = c.scale(&par(&model, 6).unwrap()).unwrap();
+    assert_eq!(eo.new_parallel.label(), co.new_parallel.label());
+    assert_eq!(eo.new_parallel.devices, co.new_parallel.devices);
+    // ...but the transition costs differ by ~an order of magnitude.
+    assert!(eo.ready_after * 5.0 < co.ready_after);
+}
+
+#[test]
+fn elastic_rejects_invalid_targets() {
+    let model = m();
+    let mut meth = make_method("elastic", &model, 8).unwrap();
+    meth.boot(&par(&model, 4).unwrap()).unwrap();
+    // TP change rejected.
+    let bad_tp = ParallelConfig::standard(1, 4, (0..4).collect()).unwrap();
+    assert!(meth.scale(&bad_tp).is_err());
+    // EP beyond expert count rejected (128 devices > 64 experts).
+    // (construct directly: the config itself is fine, the model check
+    // fails in plan_scale)
+    let too_many = ParallelConfig::standard(64, 2, (0..128).collect()).unwrap();
+    assert!(meth.scale(&too_many).is_err());
+}
+
+#[test]
+fn repeated_scaling_does_not_leak_memory() {
+    let model = m();
+    let cluster = Rc::new(RefCell::new(Cluster::cloudmatrix(8)));
+    let hmm = elastic_moe::hmm::control::HmmControl::new(
+        cluster.clone(),
+        model.clone(),
+        Default::default(),
+    );
+    let imm = elastic_moe::imm::manager::InstanceManager::new(
+        Default::default(),
+        elastic_moe::device::Timings::cloudmatrix(),
+    );
+    let mut meth =
+        elastic_moe::scaling::ElasticMoE::new(hmm, imm, KV_BYTES);
+    meth.boot(&par(&model, 4).unwrap()).unwrap();
+    meth.scale(&par(&model, 6).unwrap()).unwrap();
+    meth.scale(&par(&model, 4).unwrap()).unwrap();
+    let usage1 = cluster.borrow().used_over(&[0, 1, 2, 3, 4, 5, 6, 7]);
+    for _ in 0..3 {
+        meth.scale(&par(&model, 6).unwrap()).unwrap();
+        meth.scale(&par(&model, 4).unwrap()).unwrap();
+    }
+    let usage2 = cluster.borrow().used_over(&[0, 1, 2, 3, 4, 5, 6, 7]);
+    assert_eq!(usage1, usage2, "memory leak across scaling cycles");
+}
