@@ -88,6 +88,24 @@ impl LoadEstimator {
         self.bad_windows = 0;
         self.good_windows = 0;
     }
+
+    /// Undo the state consumption of an `Up`/`Down` decision the caller
+    /// could not act on (no eligible replica, pool exhausted): clears the
+    /// cooldown and re-arms the patience counter so one more matching
+    /// window re-fires immediately, instead of waiting out a full
+    /// cooldown + patience cycle while the condition persists.
+    pub fn refund(&mut self, decision: ScaleDecision) {
+        self.last_action = f64::NEG_INFINITY;
+        match decision {
+            ScaleDecision::Up => {
+                self.bad_windows = self.up_patience.saturating_sub(1);
+            }
+            ScaleDecision::Down => {
+                self.good_windows = self.down_patience.saturating_sub(1);
+            }
+            ScaleDecision::Hold => {}
+        }
+    }
 }
 
 #[cfg(test)]
@@ -135,6 +153,18 @@ mod tests {
                 ScaleDecision::Hold
             );
         }
+    }
+
+    #[test]
+    fn refund_rearms_an_unactionable_trigger() {
+        let mut e = LoadEstimator::new(SloConfig::strict());
+        e.cooldown = 100.0;
+        assert_eq!(e.observe(0.0, 0.5, 0.9, 10), ScaleDecision::Hold);
+        assert_eq!(e.observe(1.0, 0.5, 0.9, 10), ScaleDecision::Up);
+        // Caller couldn't act: refund. The very next bad window re-fires
+        // despite the long cooldown.
+        e.refund(ScaleDecision::Up);
+        assert_eq!(e.observe(2.0, 0.5, 0.9, 10), ScaleDecision::Up);
     }
 
     #[test]

@@ -1,0 +1,811 @@
+//! Fleet serving simulator: N replicas behind a pluggable router, each
+//! wrapping its own [`ScalingMethod`], with a [`FleetPolicy`] deciding per
+//! window between vertical steps (ElasticMoE's fast path), whole-replica
+//! add/drain (horizontal, cold-boot priced), or holding.
+//!
+//! The single-instance [`super::ServingSim`] reproduces the paper's
+//! experiments; `FleetSim` composes many of those instances the way a real
+//! deployment would, so ElasticMoE's seconds-scale vertical steps can be
+//! measured against replica-granular horizontal provisioning on the same
+//! trace. Simulation is windowed co-simulation: arrivals are routed at
+//! window granularity, each replica advances its own discrete-event clock
+//! to the window boundary, then the policy observes the fleet and acts.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::config::{ParallelConfig, SloConfig};
+use crate::engine::{CostModel, ServeEngine};
+use crate::metrics::MetricsRecorder;
+use crate::scaling::{ScalingMethod, ScalingOutcome};
+use crate::sim::{Clock, SimClock};
+use crate::workload::Request;
+
+use super::policy::{FleetAction, FleetPolicy, ReplicaLoad};
+use super::serving::{
+    begin_transition_on, build_engine, switchover_engine, PendingScale,
+};
+
+/// How arrivals are spread across ready replicas.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Router {
+    /// Cycle through replicas in order.
+    RoundRobin,
+    /// Send each request to the replica with the fewest queued + running
+    /// requests at routing time.
+    JoinShortestQueue,
+    /// Pin each tenant to a replica (sticky modulo the current fleet
+    /// size), so a tenant's KV/prefix locality survives across requests.
+    SessionAffinity,
+}
+
+impl Router {
+    /// Pick a replica id from `eligible` `(id, backlog)` pairs.
+    fn pick(
+        &self,
+        rr: &mut usize,
+        tenant: u32,
+        eligible: &[(usize, usize)],
+    ) -> usize {
+        debug_assert!(!eligible.is_empty());
+        match self {
+            Router::RoundRobin => {
+                let id = eligible[*rr % eligible.len()].0;
+                *rr += 1;
+                id
+            }
+            Router::JoinShortestQueue => {
+                eligible
+                    .iter()
+                    .min_by_key(|(id, backlog)| (*backlog, *id))
+                    .unwrap()
+                    .0
+            }
+            Router::SessionAffinity => {
+                eligible[tenant as usize % eligible.len()].0
+            }
+        }
+    }
+}
+
+/// One fleet member: an engine plus the scaling method that resizes it.
+struct Replica {
+    id: usize,
+    method: Box<dyn ScalingMethod>,
+    engine: Option<ServeEngine>,
+    clock: SimClock,
+    current: ParallelConfig,
+    inbox: VecDeque<Request>,
+    pending: Option<PendingScale>,
+    /// Absolute time this replica starts serving (cold boot completes).
+    ready_at: f64,
+    draining: bool,
+    retired: bool,
+    kv_factor: f64,
+    batch_factor: f64,
+}
+
+impl Replica {
+    /// Devices this replica holds against the shared pool budget: the max
+    /// of its current and pending-target footprint (a transition may
+    /// momentarily reserve both).
+    fn devices_reserved(&self) -> usize {
+        if self.retired {
+            return 0;
+        }
+        let cur = self.current.n_devices();
+        match &self.pending {
+            Some(p) => cur.max(p.outcome.new_parallel.n_devices()),
+            None => cur,
+        }
+    }
+
+    fn backlog(&self) -> usize {
+        let engine_q = self
+            .engine
+            .as_ref()
+            .map(|e| e.batcher.queue_len() + e.batcher.running_len())
+            .unwrap_or(0);
+        self.inbox.len() + engine_q
+    }
+
+    fn queue_depth(&self) -> usize {
+        let engine_q = self
+            .engine
+            .as_ref()
+            .map(|e| e.batcher.queue_len())
+            .unwrap_or(0);
+        self.inbox.len() + engine_q
+    }
+
+    fn is_idle(&self) -> bool {
+        self.inbox.is_empty()
+            && self.pending.is_none()
+            && self
+                .engine
+                .as_ref()
+                .map(|e| !e.has_work())
+                .unwrap_or(true)
+    }
+}
+
+/// Output of a fleet simulation.
+pub struct FleetOutput {
+    pub recorder: MetricsRecorder,
+    /// Applied policy actions with their issue times (Hold is not logged).
+    pub actions: Vec<(f64, FleetAction)>,
+    /// Completed per-replica scaling transitions, in completion order.
+    pub scaling_events: Vec<ScalingOutcome>,
+    /// Whole-replica cold boots issued (0 = every burst was absorbed
+    /// vertically).
+    pub cold_boots: usize,
+    /// (time, serving devices) timeline across the fleet.
+    pub device_timeline: Vec<(f64, usize)>,
+    pub end_time: f64,
+    /// Replicas alive (not retired) at the end.
+    pub final_replicas: usize,
+    /// Requests never served because the run hit its hard stop with a
+    /// backlog. Non-zero means SLO-attainment figures are optimistic:
+    /// unserved requests are absent from the attainment denominator, so
+    /// compare policies on the same trace only when this is 0.
+    pub truncated: usize,
+}
+
+impl FleetOutput {
+    /// Count of actions matching a predicate (test/report convenience).
+    pub fn count_actions(&self, f: impl Fn(&FleetAction) -> bool) -> usize {
+        self.actions.iter().filter(|(_, a)| f(a)).count()
+    }
+}
+
+/// The fleet-level serving simulator.
+pub struct FleetSim {
+    pub cost: CostModel,
+    pub slo: SloConfig,
+    pub hbm_per_device: u64,
+    /// Routing/policy window (seconds).
+    pub window: f64,
+    pub max_batch: usize,
+    pub router: Router,
+}
+
+impl FleetSim {
+    pub fn new(cost: CostModel, slo: SloConfig, router: Router) -> Self {
+        FleetSim {
+            cost,
+            slo,
+            hbm_per_device: 64 << 30,
+            window: 5.0,
+            max_batch: 256,
+            router,
+        }
+    }
+
+    /// Run the fleet until every arrival is served (bounded by
+    /// `horizon * 2 + 600` seconds of simulated time).
+    ///
+    /// `factory` builds the scaling method for replica `i` — each replica
+    /// needs its own simulated cluster, sized at least
+    /// `policy.limits.replica_max` so vertical growth has somewhere to go.
+    /// `initial_replicas` replicas of `policy.limits.replica_base` devices
+    /// are booted before t = 0 (warm start, like the paper's experiments).
+    pub fn run(
+        &self,
+        policy: &mut FleetPolicy,
+        factory: &mut dyn FnMut(usize) -> Result<Box<dyn ScalingMethod>>,
+        initial_replicas: usize,
+        mut arrivals: Vec<Request>,
+        horizon: f64,
+    ) -> Result<FleetOutput> {
+        let tp = self.cost.model.tp;
+        let limits = policy.limits;
+        if limits.replica_base % tp != 0 || limits.step % tp != 0 {
+            bail!(
+                "replica_base {} and step {} must be multiples of TP{tp}",
+                limits.replica_base,
+                limits.step
+            );
+        }
+        if initial_replicas == 0 {
+            bail!("fleet needs at least one initial replica");
+        }
+        let base_par = self.par(limits.replica_base)?;
+
+        let mut replicas: Vec<Replica> = Vec::new();
+        for i in 0..initial_replicas {
+            let mut method = factory(i)?;
+            method.boot(&base_par)?;
+            let kv_factor = method.steady_kv_factor();
+            let batch_factor = method.steady_batch_factor();
+            let engine = build_engine(
+                &self.cost,
+                self.hbm_per_device,
+                self.max_batch,
+                &base_par,
+                kv_factor,
+                batch_factor,
+            );
+            replicas.push(Replica {
+                id: i,
+                method,
+                engine: Some(engine),
+                clock: SimClock::new(),
+                current: base_par.clone(),
+                inbox: VecDeque::new(),
+                pending: None,
+                ready_at: 0.0,
+                draining: false,
+                retired: false,
+                kv_factor,
+                batch_factor,
+            });
+        }
+
+        arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        let mut next_arrival = 0usize;
+        let mut recorder = MetricsRecorder::new();
+        let mut actions: Vec<(f64, FleetAction)> = Vec::new();
+        let mut events: Vec<ScalingOutcome> = Vec::new();
+        let mut cold_boots = 0usize;
+        let serving0 = initial_replicas * limits.replica_base;
+        let mut device_timeline = vec![(0.0, serving0)];
+        let mut rr = 0usize;
+        let hard_stop = horizon * 2.0 + 600.0;
+
+        let mut t_end = self.window;
+        loop {
+            let t_start = t_end - self.window;
+
+            // 1) Route this window's arrivals into replica inboxes.
+            while next_arrival < arrivals.len()
+                && arrivals[next_arrival].arrival < t_end
+            {
+                let r = arrivals[next_arrival].clone();
+                next_arrival += 1;
+                let eligible: Vec<(usize, usize)> = replicas
+                    .iter()
+                    .filter(|rep| {
+                        !rep.retired
+                            && !rep.draining
+                            && rep.engine.is_some()
+                            && rep.ready_at <= r.arrival
+                    })
+                    .map(|rep| (rep.id, rep.backlog()))
+                    .collect();
+                let target = if eligible.is_empty() {
+                    // Every replica is booting or draining: fall back to
+                    // any live one (min_replicas keeps this non-empty).
+                    replicas
+                        .iter()
+                        .find(|rep| !rep.retired && rep.engine.is_some())
+                        .map(|rep| rep.id)
+                } else {
+                    Some(self.router.pick(&mut rr, r.tenant, &eligible))
+                };
+                match target {
+                    Some(id) => replicas[id].inbox.push_back(r),
+                    None => bail!("no live replica to route to"),
+                }
+            }
+
+            // 2) Advance every replica to the window boundary.
+            for rep in replicas.iter_mut() {
+                self.advance_replica(rep, t_end, &mut recorder, &mut events)?;
+            }
+
+            // 3) Retire drained replicas and release their devices.
+            for rep in replicas.iter_mut() {
+                if rep.draining && !rep.retired && rep.is_idle() {
+                    rep.retired = true;
+                    rep.engine = None;
+                }
+            }
+
+            // 4) Serving-capacity timeline.
+            let serving_devices: usize = replicas
+                .iter()
+                .filter(|r| !r.retired && r.ready_at <= t_end)
+                .map(|r| r.current.n_devices())
+                .sum();
+            if device_timeline
+                .last()
+                .map(|&(_, d)| d != serving_devices)
+                .unwrap_or(true)
+            {
+                device_timeline.push((t_end, serving_devices));
+            }
+
+            // 5) Stop once the trace is fully served.
+            if next_arrival >= arrivals.len()
+                && replicas.iter().all(|r| r.retired || r.is_idle())
+            {
+                break;
+            }
+            if t_end >= hard_stop {
+                break;
+            }
+
+            // 6) Policy tick over the window that just ended.
+            let attainment =
+                recorder.attainment_by_arrival(t_start, t_end, &self.slo);
+            let loads: Vec<ReplicaLoad> = replicas
+                .iter()
+                .filter(|r| !r.retired)
+                .map(|r| ReplicaLoad {
+                    id: r.id,
+                    devices: r.devices_reserved(),
+                    occupancy: r
+                        .engine
+                        .as_ref()
+                        .map(|e| {
+                            e.batcher.running_len() as f64
+                                / e.batcher.cfg.max_batch.max(1) as f64
+                        })
+                        .unwrap_or(0.0),
+                    queue_depth: r.queue_depth(),
+                    busy: r.pending.is_some() || r.ready_at > t_end,
+                    booting: r.ready_at > t_end,
+                    draining: r.draining,
+                })
+                .collect();
+            let reserved: usize =
+                replicas.iter().map(|r| r.devices_reserved()).sum();
+            let free = limits.pool_devices.saturating_sub(reserved);
+            let action = policy.decide(t_end, attainment, &loads, free);
+            match action {
+                FleetAction::Hold => {}
+                FleetAction::VerticalUp { replica, to_devices }
+                | FleetAction::VerticalDown { replica, to_devices } => {
+                    let target = self.par(to_devices)?;
+                    let rep = &mut replicas[replica];
+                    let outcome = rep.method.scale(&target)?;
+                    begin_transition_on(&outcome, rep.engine.as_mut());
+                    rep.pending = Some(PendingScale {
+                        outcome,
+                        started: t_end,
+                    });
+                    actions.push((t_end, action));
+                }
+                FleetAction::AddReplica => {
+                    let id = replicas.len();
+                    let mut method = factory(id)?;
+                    let boot_t = method.boot(&base_par)?;
+                    cold_boots += 1;
+                    let kv_factor = method.steady_kv_factor();
+                    let batch_factor = method.steady_batch_factor();
+                    let engine = build_engine(
+                        &self.cost,
+                        self.hbm_per_device,
+                        self.max_batch,
+                        &base_par,
+                        kv_factor,
+                        batch_factor,
+                    );
+                    let clock = SimClock::new();
+                    clock.advance_to(t_end);
+                    replicas.push(Replica {
+                        id,
+                        method,
+                        engine: Some(engine),
+                        clock,
+                        current: base_par.clone(),
+                        inbox: VecDeque::new(),
+                        pending: None,
+                        ready_at: t_end + boot_t,
+                        draining: false,
+                        retired: false,
+                        kv_factor,
+                        batch_factor,
+                    });
+                    policy.note_event(id, t_end);
+                    actions.push((t_end, action));
+                }
+                FleetAction::DrainReplica { replica } => {
+                    replicas[replica].draining = true;
+                    actions.push((t_end, action));
+                }
+            }
+
+            t_end += self.window;
+        }
+
+        let end_time = replicas
+            .iter()
+            .map(|r| r.clock.now())
+            .fold(0.0f64, f64::max);
+        let truncated = arrivals.len().saturating_sub(recorder.count());
+        Ok(FleetOutput {
+            recorder,
+            actions,
+            scaling_events: events,
+            cold_boots,
+            device_timeline,
+            end_time,
+            final_replicas: replicas.iter().filter(|r| !r.retired).count(),
+            truncated,
+        })
+    }
+
+    /// Standard layout over `n` local devices of one replica's cluster.
+    fn par(&self, n: usize) -> Result<ParallelConfig> {
+        let tp = self.cost.model.tp;
+        if n == 0 || n % tp != 0 {
+            bail!("{n} devices not divisible by TP{tp}");
+        }
+        Ok(ParallelConfig::standard(n / tp, tp, (0..n).collect())?)
+    }
+
+    /// Advance one replica's discrete-event loop to `t_end`, completing
+    /// any pending transition, enforcing downtime/intake windows, and
+    /// recording finished requests. Mirrors [`super::ServingSim::run`]'s
+    /// inner loop at per-replica scope.
+    fn advance_replica(
+        &self,
+        rep: &mut Replica,
+        t_end: f64,
+        recorder: &mut MetricsRecorder,
+        events: &mut Vec<ScalingOutcome>,
+    ) -> Result<()> {
+        if rep.retired {
+            rep.clock.advance_to(t_end);
+            return Ok(());
+        }
+        loop {
+            let now = rep.clock.now();
+            if now >= t_end {
+                break;
+            }
+            if now < rep.ready_at {
+                rep.clock.advance_to(rep.ready_at.min(t_end));
+                continue;
+            }
+
+            // Complete a pending transition: switch over to a fresh engine
+            // for the new configuration, migrating in-flight work.
+            if let Some(p) = &rep.pending {
+                if now >= p.started + p.outcome.ready_after {
+                    let p = rep.pending.take().unwrap();
+                    let fresh = switchover_engine(
+                        &self.cost,
+                        self.hbm_per_device,
+                        self.max_batch,
+                        &p.outcome,
+                        rep.engine.take(),
+                        rep.kv_factor,
+                        rep.batch_factor,
+                    );
+                    rep.engine = Some(fresh);
+                    rep.current = p.outcome.new_parallel.clone();
+                    events.push(p.outcome);
+                    continue;
+                }
+            }
+
+            // Downtime / intake windows of the in-flight transition.
+            let in_downtime = rep
+                .pending
+                .as_ref()
+                .map(|p| p.outcome.in_downtime(p.started, now))
+                .unwrap_or(false);
+            let intake_open = rep
+                .pending
+                .as_ref()
+                .map(|p| p.outcome.intake_open(p.started, now))
+                .unwrap_or(true);
+
+            if let Some(eng) = rep.engine.as_mut() {
+                if rep.pending.is_some() {
+                    if intake_open {
+                        eng.batcher.resume_intake();
+                    } else {
+                        eng.batcher.pause_intake();
+                    }
+                }
+                if intake_open && !in_downtime {
+                    while rep
+                        .inbox
+                        .front()
+                        .map(|r| r.arrival <= now)
+                        .unwrap_or(false)
+                    {
+                        eng.submit(rep.inbox.pop_front().unwrap());
+                    }
+                }
+            }
+
+            let stepped = if in_downtime {
+                false
+            } else if let Some(eng) = rep.engine.as_mut() {
+                if eng.has_work() {
+                    let out = eng.step(&rep.clock)?;
+                    for r in out.finished {
+                        recorder.record(&r);
+                    }
+                    !matches!(out.kind, crate::engine::StepKind::Idle)
+                } else {
+                    false
+                }
+            } else {
+                false
+            };
+
+            if !stepped {
+                // Jump to the next event strictly after `now` (bounded by
+                // the window boundary, where the fleet loop takes over).
+                let mut next = t_end;
+                let mut consider = |t: f64| {
+                    if t > now && t < next {
+                        next = t;
+                    }
+                };
+                if let Some(p) = &rep.pending {
+                    consider(p.started + p.outcome.ready_after);
+                    if let Some((_, b)) = p.outcome.downtime {
+                        consider(p.started + b);
+                    }
+                    if let Some((_, b)) = p.outcome.intake_pause {
+                        consider(p.started + b);
+                    }
+                }
+                if let Some(r) = rep.inbox.front() {
+                    consider(r.arrival);
+                }
+                rep.clock.advance_to(next + 1e-9);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::dsv2_lite;
+    use crate::config::SloConfig;
+    use crate::coordinator::policy::{FleetLimits, PolicyMode};
+    use crate::device::Timings;
+    use crate::experiments::common::{elastic_with_opts, KV_BYTES};
+    use crate::hmm::control::HmmOptions;
+    use crate::imm::manager::ImmOptions;
+    use crate::scaling::ColdRestart;
+    use crate::workload::{RateProfile, WorkloadGen, WorkloadSpec};
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    fn fleet(router: Router) -> FleetSim {
+        FleetSim::new(
+            CostModel::new(dsv2_lite(), Timings::cloudmatrix()),
+            SloConfig::scale_up_demo(),
+            router,
+        )
+    }
+
+    fn limits(replica_max: usize) -> FleetLimits {
+        FleetLimits {
+            pool_devices: 12,
+            replica_base: 2,
+            replica_max,
+            step: 2,
+            min_replicas: 2,
+        }
+    }
+
+    fn fast_policy(mode: PolicyMode, replica_max: usize) -> FleetPolicy {
+        let mut p = FleetPolicy::new(
+            mode,
+            limits(replica_max),
+            SloConfig::scale_up_demo(),
+        );
+        p.estimator.up_patience = 1;
+        p.estimator.cooldown = 10.0;
+        p.replica_cooldown = 10.0;
+        p
+    }
+
+    /// Factory: each replica gets its own simulated cluster, big enough
+    /// for the vertical ceiling.
+    fn elastic_factory(
+        replica_max: usize,
+    ) -> impl FnMut(usize) -> Result<Box<dyn ScalingMethod>> {
+        move |_i| {
+            Ok(Box::new(elastic_with_opts(
+                &dsv2_lite(),
+                replica_max,
+                HmmOptions::default(),
+                ImmOptions::default(),
+            )) as Box<dyn ScalingMethod>)
+        }
+    }
+
+    fn cold_factory(
+    ) -> impl FnMut(usize) -> Result<Box<dyn ScalingMethod>> {
+        move |_i| {
+            let c = Rc::new(RefCell::new(
+                crate::device::Cluster::cloudmatrix(4),
+            ));
+            Ok(Box::new(ColdRestart::new(c, dsv2_lite(), KV_BYTES))
+                as Box<dyn ScalingMethod>)
+        }
+    }
+
+    fn burst_trace(horizon: f64) -> Vec<Request> {
+        let mut g = WorkloadGen::new(WorkloadSpec {
+            prompt_len: 2000,
+            decode_min: 100,
+            decode_max: 150,
+            profile: RateProfile::Burst {
+                base: 0.8,
+                factor: 10.0,
+                start: 60.0,
+                len: 60.0,
+            },
+            seed: 17,
+        });
+        g.arrivals_until(horizon)
+    }
+
+    #[test]
+    fn router_pick_policies() {
+        let eligible = [(0usize, 5usize), (1, 1), (2, 9)];
+        let mut rr = 0;
+        assert_eq!(Router::RoundRobin.pick(&mut rr, 0, &eligible), 0);
+        assert_eq!(Router::RoundRobin.pick(&mut rr, 0, &eligible), 1);
+        assert_eq!(Router::RoundRobin.pick(&mut rr, 0, &eligible), 2);
+        assert_eq!(Router::RoundRobin.pick(&mut rr, 0, &eligible), 0);
+        assert_eq!(
+            Router::JoinShortestQueue.pick(&mut rr, 0, &eligible),
+            1
+        );
+        assert_eq!(Router::SessionAffinity.pick(&mut rr, 4, &eligible), 1);
+        // Same tenant, same replica.
+        assert_eq!(Router::SessionAffinity.pick(&mut rr, 4, &eligible), 1);
+    }
+
+    #[test]
+    fn steady_fleet_serves_everything() {
+        let sim = fleet(Router::JoinShortestQueue);
+        let mut policy = fast_policy(PolicyMode::Hybrid, 8);
+        let mut g = WorkloadGen::new(WorkloadSpec {
+            prompt_len: 2000,
+            decode_min: 100,
+            decode_max: 150,
+            profile: RateProfile::Fixed(0.8),
+            seed: 5,
+        });
+        let arrivals = g.arrivals_until(90.0);
+        let n = arrivals.len();
+        let out = sim
+            .run(&mut policy, &mut elastic_factory(8), 2, arrivals, 90.0)
+            .unwrap();
+        assert_eq!(out.recorder.count(), n);
+        let att = out.recorder.attainment_by_arrival(0.0, 90.0, &sim.slo);
+        assert!(att > 0.9, "steady fleet attainment {att}");
+    }
+
+    /// Acceptance: under a flash crowd (Burst x10), the hybrid policy with
+    /// ElasticMoE replicas absorbs the burst with vertical steps — no
+    /// replica cold-boot — and beats a horizontal-only fleet on the same
+    /// trace.
+    #[test]
+    fn flash_crowd_hybrid_beats_horizontal_only() {
+        let horizon = 240.0;
+
+        let sim = fleet(Router::JoinShortestQueue);
+        let mut hybrid = fast_policy(PolicyMode::Hybrid, 8);
+        let out_h = sim
+            .run(
+                &mut hybrid,
+                &mut elastic_factory(8),
+                2,
+                burst_trace(horizon),
+                horizon,
+            )
+            .unwrap();
+
+        let mut horiz = fast_policy(PolicyMode::HorizontalOnly, 8);
+        let out_x = sim
+            .run(
+                &mut horiz,
+                &mut cold_factory(),
+                2,
+                burst_trace(horizon),
+                horizon,
+            )
+            .unwrap();
+
+        // Both runs fully drained: the attainment comparison is on the
+        // complete trace, not a truncated one.
+        assert_eq!(out_h.truncated, 0);
+        assert_eq!(out_x.truncated, 0);
+        // Vertical absorption: no cold boots, at least one vertical step.
+        assert_eq!(out_h.cold_boots, 0, "hybrid must not cold-boot");
+        let verticals = out_h.count_actions(|a| {
+            matches!(a, FleetAction::VerticalUp { .. })
+        });
+        assert!(verticals >= 1, "burst must trigger vertical scaling");
+        // The horizontal-only fleet had to cold-boot whole replicas.
+        assert!(out_x.cold_boots >= 1, "horizontal must add a replica");
+
+        let att_h =
+            out_h.recorder.attainment_by_arrival(0.0, horizon, &sim.slo);
+        let att_x =
+            out_x.recorder.attainment_by_arrival(0.0, horizon, &sim.slo);
+        assert!(
+            att_h > att_x,
+            "hybrid {att_h} must strictly beat horizontal-only {att_x}"
+        );
+    }
+
+    /// Acceptance: a sustained ramp exhausts the per-replica vertical
+    /// envelope and provably adds a whole replica.
+    #[test]
+    fn sustained_ramp_adds_a_replica() {
+        let sim = fleet(Router::JoinShortestQueue);
+        // Tight vertical ceiling: one step and a replica is maxed out.
+        let mut policy = fast_policy(PolicyMode::Hybrid, 4);
+        policy.limits.min_replicas = 1;
+        let mut g = WorkloadGen::new(WorkloadSpec {
+            prompt_len: 2000,
+            decode_min: 100,
+            decode_max: 150,
+            profile: RateProfile::Ramp {
+                from: 0.3,
+                to: 6.0,
+                duration: 150.0,
+            },
+            seed: 29,
+        });
+        let horizon = 200.0;
+        let arrivals = g.arrivals_until(horizon);
+        let out = sim
+            .run(&mut policy, &mut elastic_factory(4), 1, arrivals, horizon)
+            .unwrap();
+        let verticals = out.count_actions(|a| {
+            matches!(a, FleetAction::VerticalUp { .. })
+        });
+        let adds = out
+            .count_actions(|a| matches!(a, FleetAction::AddReplica));
+        assert!(
+            verticals >= 1,
+            "ramp should scale vertically first ({:?})",
+            out.actions
+        );
+        assert!(
+            adds >= 1,
+            "sustained ramp must add a replica ({:?})",
+            out.actions
+        );
+        assert!(out.cold_boots >= 1);
+        assert!(out.final_replicas >= 2);
+    }
+
+    #[test]
+    fn session_affinity_keeps_tenants_sticky_and_reports_per_tenant() {
+        use crate::workload::{MultiTenantGen, TenantSpec};
+        let sim = fleet(Router::SessionAffinity);
+        let mut policy = fast_policy(PolicyMode::Hybrid, 6);
+        let spec = |rps: f64, seed: u64| WorkloadSpec {
+            prompt_len: 1000,
+            decode_min: 50,
+            decode_max: 100,
+            profile: RateProfile::Fixed(rps),
+            seed,
+        };
+        let tenants = MultiTenantGen::new(vec![
+            TenantSpec::new("chat", spec(0.6, 1), SloConfig::strict()),
+            TenantSpec::new("agent", spec(0.6, 2), SloConfig::new(8.0, 2.0)),
+        ]);
+        let arrivals = tenants.arrivals_until(90.0);
+        let n = arrivals.len();
+        let out = sim
+            .run(&mut policy, &mut elastic_factory(6), 2, arrivals, 90.0)
+            .unwrap();
+        assert_eq!(out.recorder.count(), n);
+        for (i, t) in tenants.tenants.iter().enumerate() {
+            let att =
+                out.recorder.attainment_for_tenant(i as u32, &t.slo);
+            assert!(!att.is_nan(), "tenant {i} must have traffic");
+        }
+    }
+}

@@ -1,10 +1,19 @@
 //! The Coordinator (§4.3): entry point for requests, SLO monitoring, and
 //! scaling orchestration. [`ServingSim`] is the discrete-event serving loop
 //! used by every paper experiment; [`LoadEstimator`] is the SLO-aware
-//! autoscaling trigger.
+//! autoscaling trigger. Above the single instance, [`FleetSim`] runs N
+//! replicas behind a pluggable [`Router`] with a [`FleetPolicy`] choosing
+//! per window between vertical steps, whole-replica add/drain, and hold —
+//! the hybrid deployment shape the paper's §2 motivates.
 
 pub mod estimator;
+pub mod fleet;
+pub mod policy;
 pub mod serving;
 
 pub use estimator::{LoadEstimator, ScaleDecision};
+pub use fleet::{FleetOutput, FleetSim, Router};
+pub use policy::{
+    FleetAction, FleetLimits, FleetPolicy, PolicyMode, ReplicaLoad,
+};
 pub use serving::{ServingSim, SimOutput, Trigger};

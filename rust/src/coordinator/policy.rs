@@ -1,0 +1,438 @@
+//! Fleet-level scaling policy: per window, decide between (a) a vertical
+//! step of one replica (ElasticMoE's fast path), (b) adding/draining a
+//! whole replica (horizontal, replica-granular cold boot), or (c) holding.
+//!
+//! This generalises [`LoadEstimator`]'s hysteresis to fleet granularity:
+//! one fleet-wide estimator debounces the *direction* (up/down/hold), then
+//! the policy maps the direction to a concrete [`FleetAction`] under the
+//! shared device-pool budget, the per-replica vertical envelope, and
+//! per-replica cooldowns (so one hot replica cannot absorb every event
+//! while others starve).
+
+use std::collections::HashMap;
+
+use crate::config::SloConfig;
+
+use super::estimator::{LoadEstimator, ScaleDecision};
+
+/// A point-in-time load snapshot of one replica, as seen by the policy.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaLoad {
+    pub id: usize,
+    /// Devices the replica currently holds (or has reserved mid-scale).
+    pub devices: usize,
+    /// Running batch occupancy in `[0, 1]`.
+    pub occupancy: f64,
+    /// Queued requests (coordinator inbox + batcher queue).
+    pub queue_depth: usize,
+    /// A scaling transition or boot is in flight on this replica.
+    pub busy: bool,
+    /// The replica is still cold-booting (not serving yet). Implies
+    /// `busy`; distinguishes "capacity arriving via horizontal add" from
+    /// "live replica mid-vertical-step".
+    pub booting: bool,
+    /// The replica is draining out of the fleet.
+    pub draining: bool,
+}
+
+/// Fleet sizing envelope and the shared device-pool budget.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetLimits {
+    /// Total devices the fleet may hold across all replicas.
+    pub pool_devices: usize,
+    /// Devices a freshly added replica boots with.
+    pub replica_base: usize,
+    /// Vertical ceiling per replica (devices).
+    pub replica_max: usize,
+    /// Vertical step size (usually the model's fixed TP).
+    pub step: usize,
+    /// The fleet never drains below this many replicas.
+    pub min_replicas: usize,
+}
+
+/// How the fleet is allowed to scale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyMode {
+    /// Prefer fast vertical steps; fall back to whole replicas only when
+    /// every replica's vertical headroom (or the pool) is exhausted.
+    Hybrid,
+    /// Replica-granular only: the horizontal-autoscaler baseline.
+    HorizontalOnly,
+    /// Vertical steps only (never changes the replica count).
+    VerticalOnly,
+}
+
+/// One fleet scaling action for the simulator to apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetAction {
+    Hold,
+    /// Grow `replica` vertically to `to_devices` (ElasticMoE scale-up).
+    VerticalUp { replica: usize, to_devices: usize },
+    /// Shrink `replica` vertically to `to_devices`.
+    VerticalDown { replica: usize, to_devices: usize },
+    /// Cold-boot a whole new replica of `replica_base` devices.
+    AddReplica,
+    /// Stop routing to `replica`; release its devices once empty.
+    DrainReplica { replica: usize },
+}
+
+/// The fleet policy: fleet-wide hysteresis plus action selection.
+pub struct FleetPolicy {
+    pub mode: PolicyMode,
+    pub limits: FleetLimits,
+    /// Fleet-wide up/down/hold debouncing (windowed SLO + queue pressure).
+    pub estimator: LoadEstimator,
+    /// Minimum seconds between successive events on the same replica.
+    pub replica_cooldown: f64,
+    /// Fleet queue depth at which the window counts as violating even if
+    /// the finished-request attainment still looks healthy (during a burst
+    /// the backlog grows before any late request has *finished* and pulled
+    /// the windowed attainment down).
+    pub pressure_queue: usize,
+    last_event: HashMap<usize, f64>,
+}
+
+impl FleetPolicy {
+    pub fn new(mode: PolicyMode, limits: FleetLimits, slo: SloConfig) -> Self {
+        FleetPolicy {
+            mode,
+            limits,
+            estimator: LoadEstimator::new(slo),
+            replica_cooldown: 20.0,
+            pressure_queue: 8,
+            last_event: HashMap::new(),
+        }
+    }
+
+    /// Record that `replica` was touched at `now` (starts its cooldown).
+    pub fn note_event(&mut self, replica: usize, now: f64) {
+        self.last_event.insert(replica, now);
+    }
+
+    fn cooled_down(&self, replica: usize, now: f64) -> bool {
+        self.last_event
+            .get(&replica)
+            .map(|&t| now - t >= self.replica_cooldown)
+            .unwrap_or(true)
+    }
+
+    /// Decide the fleet action for the window ending at `now`.
+    ///
+    /// `attainment` is the fleet-wide windowed SLO attainment (NaN when no
+    /// traffic finished), `loads` the per-replica snapshots, and
+    /// `free_devices` what remains of the shared pool budget.
+    pub fn decide(
+        &mut self,
+        now: f64,
+        attainment: f64,
+        loads: &[ReplicaLoad],
+        free_devices: usize,
+    ) -> FleetAction {
+        let serving: Vec<&ReplicaLoad> =
+            loads.iter().filter(|l| !l.draining).collect();
+        if serving.is_empty() {
+            return FleetAction::Hold;
+        }
+        let occupancy = serving.iter().map(|l| l.occupancy).sum::<f64>()
+            / serving.len() as f64;
+        let queue: usize = serving.iter().map(|l| l.queue_depth).sum();
+        let attainment = if queue >= self.pressure_queue.max(1) {
+            0.0
+        } else {
+            attainment
+        };
+        let decision =
+            self.estimator.observe(now, attainment, occupancy, queue);
+        let action = match decision {
+            ScaleDecision::Up => self.scale_up(now, &serving, free_devices),
+            ScaleDecision::Down => self.scale_down(now, &serving),
+            ScaleDecision::Hold => FleetAction::Hold,
+        };
+        if action == FleetAction::Hold && decision != ScaleDecision::Hold {
+            // The trigger fired but no action was possible (candidates
+            // busy/cooling, pool exhausted, floor reached): re-arm the
+            // estimator so it retries at the next window instead of
+            // waiting out patience + cooldown while the condition holds.
+            self.estimator.refund(decision);
+        }
+        action
+    }
+
+    fn scale_up(
+        &mut self,
+        now: f64,
+        serving: &[&ReplicaLoad],
+        free_devices: usize,
+    ) -> FleetAction {
+        if self.mode != PolicyMode::HorizontalOnly {
+            // Vertical first: the most pressured replica that still has
+            // headroom, pool budget, and a lapsed cooldown.
+            if free_devices >= self.limits.step {
+                let candidate = serving
+                    .iter()
+                    .filter(|l| {
+                        !l.busy
+                            && l.devices + self.limits.step
+                                <= self.limits.replica_max
+                            && self.cooled_down(l.id, now)
+                    })
+                    .max_by(|a, b| {
+                        a.queue_depth
+                            .cmp(&b.queue_depth)
+                            .then(a.occupancy.total_cmp(&b.occupancy))
+                    });
+                if let Some(l) = candidate {
+                    self.note_event(l.id, now);
+                    return FleetAction::VerticalUp {
+                        replica: l.id,
+                        to_devices: l.devices + self.limits.step,
+                    };
+                }
+            }
+            // Live vertical headroom exists but every candidate is
+            // mid-scale or cooling down: wait for the fast path instead of
+            // paying a whole-replica cold boot (hybrid goes horizontal
+            // only when the vertical envelope is genuinely exhausted).
+            // Cold-booting replicas don't count — their headroom is not
+            // live capacity, and holding on it would serialise replica
+            // adds behind each full boot.
+            let headroom = serving.iter().any(|l| {
+                !l.booting
+                    && l.devices + self.limits.step
+                        <= self.limits.replica_max
+            });
+            if headroom && free_devices >= self.limits.step {
+                return FleetAction::Hold;
+            }
+        }
+        // Horizontal fallback: a whole fresh replica if the pool allows.
+        if self.mode != PolicyMode::VerticalOnly
+            && free_devices >= self.limits.replica_base
+        {
+            return FleetAction::AddReplica;
+        }
+        FleetAction::Hold
+    }
+
+    fn scale_down(
+        &mut self,
+        now: f64,
+        serving: &[&ReplicaLoad],
+    ) -> FleetAction {
+        // Prefer returning a vertical step from the least loaded replica
+        // that has grown beyond its base size.
+        if self.mode != PolicyMode::HorizontalOnly {
+            let candidate = serving
+                .iter()
+                .filter(|l| {
+                    !l.busy
+                        && l.devices
+                            >= self.limits.replica_base + self.limits.step
+                        && self.cooled_down(l.id, now)
+                })
+                .min_by(|a, b| {
+                    a.queue_depth
+                        .cmp(&b.queue_depth)
+                        .then(a.occupancy.total_cmp(&b.occupancy))
+                });
+            if let Some(l) = candidate {
+                self.note_event(l.id, now);
+                return FleetAction::VerticalDown {
+                    replica: l.id,
+                    to_devices: l.devices - self.limits.step,
+                };
+            }
+        }
+        // Otherwise drain a whole idle replica, keeping the floor.
+        if self.mode != PolicyMode::VerticalOnly
+            && serving.len() > self.limits.min_replicas
+        {
+            let candidate = serving
+                .iter()
+                .filter(|l| {
+                    !l.busy
+                        && l.queue_depth == 0
+                        && self.cooled_down(l.id, now)
+                })
+                .min_by(|a, b| a.occupancy.total_cmp(&b.occupancy));
+            if let Some(l) = candidate {
+                self.note_event(l.id, now);
+                return FleetAction::DrainReplica { replica: l.id };
+            }
+        }
+        FleetAction::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn limits() -> FleetLimits {
+        FleetLimits {
+            pool_devices: 12,
+            replica_base: 2,
+            replica_max: 6,
+            step: 2,
+            min_replicas: 1,
+        }
+    }
+
+    fn policy(mode: PolicyMode) -> FleetPolicy {
+        let mut p = FleetPolicy::new(mode, limits(), SloConfig::strict());
+        // Deterministic unit tests: no debouncing.
+        p.estimator.up_patience = 1;
+        p.estimator.down_patience = 1;
+        p.estimator.cooldown = 0.0;
+        p.replica_cooldown = 0.0;
+        p
+    }
+
+    fn load(id: usize, devices: usize, occ: f64, queue: usize) -> ReplicaLoad {
+        ReplicaLoad {
+            id,
+            devices,
+            occupancy: occ,
+            queue_depth: queue,
+            busy: false,
+            booting: false,
+            draining: false,
+        }
+    }
+
+    #[test]
+    fn hybrid_prefers_vertical_on_the_hottest_replica() {
+        let mut p = policy(PolicyMode::Hybrid);
+        let loads = [load(0, 2, 0.9, 3), load(1, 2, 1.0, 20)];
+        let a = p.decide(5.0, 0.5, &loads, 8);
+        assert_eq!(
+            a,
+            FleetAction::VerticalUp {
+                replica: 1,
+                to_devices: 4
+            }
+        );
+    }
+
+    #[test]
+    fn hybrid_falls_back_to_add_replica_when_vertical_exhausted() {
+        let mut p = policy(PolicyMode::Hybrid);
+        // Both replicas at the vertical ceiling.
+        let loads = [load(0, 6, 1.0, 10), load(1, 6, 1.0, 10)];
+        let a = p.decide(5.0, 0.5, &loads, 4);
+        assert_eq!(a, FleetAction::AddReplica);
+    }
+
+    #[test]
+    fn busy_or_cooling_vertical_headroom_holds_instead_of_cold_boot() {
+        // Replica 0 is mid-scale, replica 1 just scaled (cooling down):
+        // hybrid must wait for the fast vertical path, not cold-boot.
+        let mut p = policy(PolicyMode::Hybrid);
+        p.replica_cooldown = 100.0;
+        p.note_event(1, 4.0);
+        let mut busy = load(0, 4, 1.0, 20);
+        busy.busy = true;
+        let loads = [busy, load(1, 2, 1.0, 15)];
+        assert_eq!(p.decide(5.0, 0.5, &loads, 6), FleetAction::Hold);
+    }
+
+    #[test]
+    fn booting_replicas_headroom_does_not_serialise_adds() {
+        // Both live replicas at the ceiling, a third still cold-booting:
+        // its (not yet live) headroom must not block a concurrent add.
+        let mut p = policy(PolicyMode::Hybrid);
+        p.limits.pool_devices = 24;
+        let mut boot = load(2, 2, 0.0, 0);
+        boot.busy = true;
+        boot.booting = true;
+        let loads = [load(0, 6, 1.0, 20), load(1, 6, 1.0, 20), boot];
+        assert_eq!(p.decide(5.0, 0.5, &loads, 10), FleetAction::AddReplica);
+    }
+
+    #[test]
+    fn unactionable_trigger_is_refunded_and_retries_next_window() {
+        let mut p = policy(PolicyMode::Hybrid);
+        p.estimator.cooldown = 100.0;
+        p.replica_cooldown = 0.0;
+        // Trigger fires but the only replica is mid-scale: Hold + refund.
+        let mut busy = load(0, 2, 1.0, 20);
+        busy.busy = true;
+        assert_eq!(p.decide(5.0, 0.5, &[busy], 6), FleetAction::Hold);
+        // Next window the replica is free: despite the 100 s estimator
+        // cooldown, the refunded trigger acts immediately.
+        let loads = [load(0, 2, 1.0, 20)];
+        assert_eq!(
+            p.decide(10.0, 0.5, &loads, 6),
+            FleetAction::VerticalUp {
+                replica: 0,
+                to_devices: 4
+            }
+        );
+    }
+
+    #[test]
+    fn pool_budget_blocks_everything() {
+        let mut p = policy(PolicyMode::Hybrid);
+        let loads = [load(0, 6, 1.0, 10)];
+        assert_eq!(p.decide(5.0, 0.5, &loads, 1), FleetAction::Hold);
+    }
+
+    #[test]
+    fn horizontal_only_never_scales_vertically() {
+        let mut p = policy(PolicyMode::HorizontalOnly);
+        let loads = [load(0, 2, 1.0, 10)];
+        assert_eq!(p.decide(5.0, 0.5, &loads, 8), FleetAction::AddReplica);
+    }
+
+    #[test]
+    fn down_prefers_vertical_shrink_then_drain() {
+        let mut p = policy(PolicyMode::Hybrid);
+        // Grown replica present: shrink it first.
+        let loads = [load(0, 4, 0.1, 0), load(1, 2, 0.1, 0)];
+        let a = p.decide(5.0, 1.0, &loads, 0);
+        assert_eq!(
+            a,
+            FleetAction::VerticalDown {
+                replica: 0,
+                to_devices: 2
+            }
+        );
+        // All at base: drain the idler one (floor permitting).
+        let mut p = policy(PolicyMode::Hybrid);
+        let loads = [load(0, 2, 0.3, 0), load(1, 2, 0.05, 0)];
+        let a = p.decide(5.0, 1.0, &loads, 0);
+        assert_eq!(a, FleetAction::DrainReplica { replica: 1 });
+    }
+
+    #[test]
+    fn min_replicas_floor_holds() {
+        let mut p = policy(PolicyMode::Hybrid);
+        let loads = [load(0, 2, 0.05, 0)];
+        assert_eq!(p.decide(5.0, 1.0, &loads, 0), FleetAction::Hold);
+    }
+
+    #[test]
+    fn replica_cooldown_rotates_vertical_events() {
+        let mut p = policy(PolicyMode::Hybrid);
+        p.replica_cooldown = 100.0;
+        let loads = [load(0, 2, 1.0, 20), load(1, 2, 0.9, 5)];
+        let a = p.decide(5.0, 0.5, &loads, 8);
+        assert_eq!(
+            a,
+            FleetAction::VerticalUp {
+                replica: 0,
+                to_devices: 4
+            }
+        );
+        // Replica 0 is cooling down: the next event lands on replica 1.
+        let loads = [load(0, 4, 1.0, 20), load(1, 2, 0.9, 5)];
+        let a = p.decide(10.0, 0.5, &loads, 6);
+        assert_eq!(
+            a,
+            FleetAction::VerticalUp {
+                replica: 1,
+                to_devices: 4
+            }
+        );
+    }
+}

@@ -40,9 +40,122 @@ pub struct SimOutput {
     pub device_timeline: Vec<(f64, usize)>,
 }
 
-struct PendingScale {
-    outcome: ScalingOutcome,
-    started: f64,
+/// A scaling event in flight: the outcome timeline plus its absolute
+/// issue time. Shared by [`ServingSim`] and [`super::FleetSim`].
+pub(crate) struct PendingScale {
+    pub(crate) outcome: ScalingOutcome,
+    pub(crate) started: f64,
+}
+
+/// Build a [`ServeEngine`] for one instance of `parallel` under the given
+/// cost model. Shared by the single-instance [`ServingSim`] and the
+/// fleet-level [`super::FleetSim`] so both simulators serve through
+/// identically provisioned engines.
+pub(crate) fn build_engine(
+    cost: &CostModel,
+    hbm_per_device: u64,
+    max_batch_cap: usize,
+    parallel: &ParallelConfig,
+    kv_factor: f64,
+    batch_factor: f64,
+) -> ServeEngine {
+    let kv_budget =
+        (cost.kv_budget(parallel, hbm_per_device) as f64 * kv_factor) as u64;
+    let bytes_per_token =
+        (cost.model.kv_bytes_per_token() / parallel.tp as u64).max(1);
+    let kv = PagedKv::from_bytes(
+        kv_budget * parallel.dp as u64,
+        bytes_per_token,
+        16,
+    );
+    let backend = CostModelBackend::new(cost.clone(), parallel.clone());
+    let max_batch = ((max_batch_cap
+        .min(cost.max_batch(parallel, kv_budget, 2600).max(1)))
+        as f64
+        * batch_factor)
+        .max(1.0) as usize;
+    ServeEngine::new(
+        BatcherConfig {
+            max_batch,
+            max_prefill_tokens: 16384,
+        },
+        kv,
+        Box::new(backend),
+    )
+}
+
+/// Complete a transition: build the successor engine for
+/// `outcome.new_parallel` and migrate the old engine's work into it —
+/// in-flight requests are adopted with their KV when the outcome preserves
+/// them (zero-copy reuse) and restarted from scratch otherwise; queued
+/// requests transfer as-is. Shared by [`ServingSim`] and
+/// [`super::FleetSim`] so switchover semantics cannot diverge.
+pub(crate) fn switchover_engine(
+    cost: &CostModel,
+    hbm_per_device: u64,
+    max_batch_cap: usize,
+    outcome: &ScalingOutcome,
+    old: Option<ServeEngine>,
+    kv_factor: f64,
+    batch_factor: f64,
+) -> ServeEngine {
+    let mut fresh = build_engine(
+        cost,
+        hbm_per_device,
+        max_batch_cap,
+        &outcome.new_parallel,
+        kv_factor,
+        batch_factor,
+    );
+    if let Some(mut old) = old {
+        let (running, waiting) = old.drain();
+        for mut r in running {
+            if outcome.preserves_inflight
+                && fresh.kv.can_admit(r.total_tokens())
+            {
+                // KV reused via zero-copy: progress kept.
+                fresh.kv.admit(r.id, r.current_len()).ok();
+                r.state = RequestState::Decoding;
+                fresh.batcher_adopt(r);
+            } else {
+                // Restart from scratch (same fields the preemption
+                // restart path preserves: tenant and live-path prompt).
+                let mut restart = Request::new(
+                    r.id,
+                    r.arrival,
+                    r.prompt_len,
+                    r.max_new_tokens,
+                )
+                .with_tenant(r.tenant);
+                restart.prompt_ids = r.prompt_ids.clone();
+                fresh.submit(restart);
+            }
+        }
+        for w in waiting {
+            fresh.submit(w);
+        }
+    }
+    fresh
+}
+
+/// Enact the instantaneous effects of a freshly issued scaling event on
+/// the active engine: pause intake if the pause window opens at the
+/// command itself (a later window is enacted by the serving loop when it
+/// opens), and derate throughput for the transition.
+pub(crate) fn begin_transition_on(
+    outcome: &ScalingOutcome,
+    engine: Option<&mut ServeEngine>,
+) {
+    if let Some(eng) = engine {
+        if let Some((a, _)) = outcome.intake_pause {
+            if a <= 0.0 {
+                eng.batcher.pause_intake();
+            }
+        }
+        if outcome.transition_derate < 1.0 {
+            eng.backend.set_derate(outcome.transition_derate);
+        }
+    }
 }
 
 /// The coordinator-driven serving simulator.
@@ -72,32 +185,13 @@ impl ServingSim {
         kv_factor: f64,
         batch_factor: f64,
     ) -> ServeEngine {
-        let kv_budget = (self.cost.kv_budget(parallel, self.hbm_per_device)
-            as f64
-            * kv_factor) as u64;
-        let bytes_per_token = (self.cost.model.kv_bytes_per_token()
-            / parallel.tp as u64)
-            .max(1);
-        let kv = PagedKv::from_bytes(
-            kv_budget * parallel.dp as u64,
-            bytes_per_token,
-            16,
-        );
-        let backend =
-            CostModelBackend::new(self.cost.clone(), parallel.clone());
-        let max_batch = ((self
-            .max_batch
-            .min(self.cost.max_batch(parallel, kv_budget, 2600).max(1)))
-            as f64
-            * batch_factor)
-            .max(1.0) as usize;
-        ServeEngine::new(
-            BatcherConfig {
-                max_batch,
-                max_prefill_tokens: 16384,
-            },
-            kv,
-            Box::new(backend),
+        build_engine(
+            &self.cost,
+            self.hbm_per_device,
+            self.max_batch,
+            parallel,
+            kv_factor,
+            batch_factor,
         )
     }
 
@@ -147,39 +241,17 @@ impl ServingSim {
             if let Some(p) = &pending {
                 if now >= p.started + p.outcome.ready_after {
                     let p = pending.take().unwrap();
-                    let new_parallel = p.outcome.new_parallel.clone();
-                    let mut fresh =
-                        self.make_engine(&new_parallel, kv_factor, batch_factor);
-                    if let Some(mut old) = engine.take() {
-                        let (running, waiting) = old.drain();
-                        for mut r in running {
-                            if p.outcome.preserves_inflight {
-                                // KV reused via zero-copy: progress kept.
-                                if fresh.kv.can_admit(r.total_tokens()) {
-                                    fresh
-                                        .kv
-                                        .admit(r.id, r.current_len())
-                                        .ok();
-                                    r.state = RequestState::Decoding;
-                                    fresh.batcher_adopt(r);
-                                    continue;
-                                }
-                            }
-                            // Restart from scratch.
-                            let fresh_req = Request::new(
-                                r.id,
-                                r.arrival,
-                                r.prompt_len,
-                                r.max_new_tokens,
-                            );
-                            fresh.submit(fresh_req);
-                        }
-                        for w in waiting {
-                            fresh.submit(w);
-                        }
-                    }
+                    let fresh = switchover_engine(
+                        &self.cost,
+                        self.hbm_per_device,
+                        self.max_batch,
+                        &p.outcome,
+                        engine.take(),
+                        kv_factor,
+                        batch_factor,
+                    );
                     engine = Some(fresh);
-                    current = new_parallel;
+                    current = p.outcome.new_parallel.clone();
                     device_timeline.push((now, current.n_devices()));
                     events.push(p.outcome);
                 }
@@ -188,23 +260,25 @@ impl ServingSim {
             // 3) Downtime / intake handling.
             let in_downtime = pending
                 .as_ref()
-                .and_then(|p| p.outcome.downtime)
-                .map(|(a, b)| {
-                    let t0 = pending.as_ref().unwrap().started;
-                    now >= t0 + a && now < t0 + b
-                })
+                .map(|p| p.outcome.in_downtime(p.started, now))
                 .unwrap_or(false);
             let intake_open = pending
                 .as_ref()
-                .and_then(|p| p.outcome.intake_pause)
-                .map(|(a, b)| {
-                    let t0 = pending.as_ref().unwrap().started;
-                    !(now >= t0 + a && now < t0 + b)
-                })
+                .map(|p| p.outcome.intake_open(p.started, now))
                 .unwrap_or(true);
 
-            // Feed the engine from the inbox when intake is open.
+            // Feed the engine from the inbox when intake is open, and keep
+            // the batcher's admission gate in sync with the pause window
+            // (the window may start mid-transition: ElasticMoE only pauses
+            // for the final switchover, not the concurrent HMM/IMM phase).
             if let Some(eng) = engine.as_mut() {
+                if pending.is_some() {
+                    if intake_open {
+                        eng.batcher.resume_intake();
+                    } else {
+                        eng.batcher.pause_intake();
+                    }
+                }
                 if intake_open && !in_downtime {
                     while let Some(r) = inbox.pop_front() {
                         eng.submit(r);
@@ -247,11 +321,7 @@ impl ServingSim {
                         };
                         if let Some(target) = target {
                             let outcome = method.scale(&target)?;
-                            self.begin_transition(
-                                &outcome,
-                                engine.as_mut(),
-                                now,
-                            );
+                            begin_transition_on(&outcome, engine.as_mut());
                             pending = Some(PendingScale {
                                 outcome,
                                 started: now,
@@ -266,11 +336,7 @@ impl ServingSim {
                         if now >= *t {
                             let (_, target) = list.remove(0);
                             let outcome = method.scale(&target)?;
-                            self.begin_transition(
-                                &outcome,
-                                engine.as_mut(),
-                                now,
-                            );
+                            begin_transition_on(&outcome, engine.as_mut());
                             pending = Some(PendingScale {
                                 outcome,
                                 started: now,
@@ -348,26 +414,6 @@ impl ServingSim {
         })
     }
 
-    fn begin_transition(
-        &self,
-        outcome: &ScalingOutcome,
-        engine: Option<&mut ServeEngine>,
-        now: f64,
-    ) {
-        if let Some(eng) = engine {
-            if outcome.intake_pause.is_some() {
-                eng.batcher.pause_intake();
-            }
-            if outcome.transition_derate < 1.0 {
-                eng.backend.set_derate(outcome.transition_derate);
-            }
-            if outcome.downtime.is_some() {
-                // Cold restart: the instance dies now; in-flight work is
-                // requeued at switchover (progress lost).
-                let _ = now;
-            }
-        }
-    }
 }
 
 impl ServeEngine {

@@ -145,7 +145,8 @@ impl ServeEngine {
                     r.arrival,
                     r.prompt_len,
                     r.max_new_tokens,
-                );
+                )
+                .with_tenant(r.tenant);
                 fresh.prompt_ids = r.prompt_ids.clone();
                 moved.push(fresh);
                 r.state = RequestState::Dropped; // reaped below, re-queued

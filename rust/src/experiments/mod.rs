@@ -15,9 +15,13 @@
 //! | table1  | progressive ablation, scale-up DP3->DP4          |
 //! | table2  | throughput before/during/after scaling           |
 //! | table3  | progressive ablation, scale-down DP4->DP3        |
+//! | fleet   | fleet scenarios (beyond the paper): hybrid       |
+//! |         | vertical×horizontal autoscaling, diurnal,        |
+//! |         | flash-crowd and multi-tenant traffic             |
 
 pub mod common;
 pub mod fig1;
+pub mod fleet;
 pub mod fig4;
 pub mod fig7;
 pub mod fig8;
@@ -32,7 +36,7 @@ use anyhow::{bail, Result};
 /// All experiment ids in paper order.
 pub const ALL: &[&str] = &[
     "fig1a", "fig1b", "fig4a", "fig4b", "fig7", "fig8", "fig9a", "fig9b",
-    "fig10", "fig11", "fig12", "table1", "table2", "table3",
+    "fig10", "fig11", "fig12", "table1", "table2", "table3", "fleet",
 ];
 
 /// Run one experiment by id, returning the rendered report.
@@ -52,6 +56,7 @@ pub fn run(id: &str, fast: bool) -> Result<String> {
         "table1" => tables::table1()?,
         "table2" => tables::table2(fast)?,
         "table3" => tables::table3()?,
+        "fleet" => fleet::run(fast)?,
         other => bail!("unknown experiment '{other}' (see `repro exp list`)"),
     };
     // Persist alongside printing.

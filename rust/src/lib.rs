@@ -21,6 +21,21 @@
 //! the substitution argument. Serving experiments run under a discrete-event
 //! clock ([`sim`]); the end-to-end example runs the same system under wall
 //! time with real PJRT compute.
+//!
+//! Above the single instance, [`coordinator::FleetSim`] composes N
+//! elastically resizable replicas behind a pluggable [`coordinator::Router`]
+//! with a [`coordinator::FleetPolicy`] deciding per window between vertical
+//! steps, whole-replica add/drain, and hold — the hybrid deployment the
+//! paper's fine-grained scaling enables. Multi-tenant traffic comes from
+//! [`workload::MultiTenantGen`].
+//!
+//! Start with the narrative docs:
+//!
+//! - `docs/architecture/01-system-overview.md` — module map and data flow
+//!   (config → device → hmm/imm → scaling → coordinator → experiments).
+//! - `docs/architecture/02-scaling-choreography.md` — the §5.2/Fig-6
+//!   scaling pipeline and exactly when `downtime` / `intake_pause` are set.
+//! - `README.md` — quickstart, experiment and bench commands.
 
 pub mod config;
 pub mod coordinator;

@@ -12,6 +12,8 @@ pub struct RequestMetrics {
     pub tpot: f64,
     pub tokens: usize,
     pub dropped: bool,
+    /// Owning tenant (0 for single-tenant runs).
+    pub tenant: u32,
 }
 
 /// Aggregated stats over a time window.
@@ -49,6 +51,7 @@ impl MetricsRecorder {
             tpot: r.tpot().unwrap_or(f64::INFINITY),
             tokens: r.generated,
             dropped,
+            tenant: r.tenant,
         });
     }
 
@@ -116,6 +119,29 @@ impl MetricsRecorder {
             .count();
         met as f64 / arrived.len() as f64
     }
+
+    /// SLO attainment for one tenant over the whole run, judged against
+    /// that tenant's own SLO (multi-tenant fleets sell different SLOs).
+    /// NaN when the tenant sent no traffic.
+    pub fn attainment_for_tenant(
+        &self,
+        tenant: u32,
+        slo: &SloConfig,
+    ) -> f64 {
+        let theirs: Vec<&RequestMetrics> = self
+            .finished
+            .iter()
+            .filter(|m| m.tenant == tenant)
+            .collect();
+        if theirs.is_empty() {
+            return f64::NAN;
+        }
+        let met = theirs
+            .iter()
+            .filter(|m| !m.dropped && slo.met(m.ttft, m.tpot))
+            .count();
+        met as f64 / theirs.len() as f64
+    }
 }
 
 #[cfg(test)]
@@ -154,6 +180,23 @@ mod tests {
         assert_eq!(w.dropped, 1);
         assert!((w.slo_attainment - 1.0 / 3.0).abs() < 1e-9);
         assert!(w.tokens_per_sec > 0.0);
+    }
+
+    #[test]
+    fn attainment_per_tenant_uses_that_tenants_slo() {
+        let mut rec = MetricsRecorder::new();
+        let mut fast = finished_req(1, 0.0, 0.5, 0.1, 5);
+        fast.tenant = 0;
+        let mut slow = finished_req(2, 0.0, 3.0, 0.1, 5);
+        slow.tenant = 1;
+        rec.record(&fast);
+        rec.record(&slow);
+        let strict = SloConfig::new(1.0, 1.0);
+        let relaxed = SloConfig::new(5.0, 1.0);
+        assert_eq!(rec.attainment_for_tenant(0, &strict), 1.0);
+        assert_eq!(rec.attainment_for_tenant(1, &strict), 0.0);
+        assert_eq!(rec.attainment_for_tenant(1, &relaxed), 1.0);
+        assert!(rec.attainment_for_tenant(9, &strict).is_nan());
     }
 
     #[test]

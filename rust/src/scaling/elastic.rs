@@ -183,11 +183,23 @@ impl ScalingMethod for ElasticMoE {
         self.last_binding = Some(binding);
         self.anticipate(to);
 
+        // With zero-copy enabled the old instance keeps serving — and
+        // admitting — while the HMM/IMM work runs concurrently beneath it;
+        // intake only pauses for the final drain+reroute window so the
+        // in-flight KV handover is consistent (§5.2 step 5). Without
+        // zero-copy the whole transition is downtime, so intake is closed
+        // from the command onward.
+        let intake_pause = if self.hmm.opts.use_zero_copy {
+            Some((ready_after - switchover, ready_after))
+        } else {
+            Some((0.0, ready_after))
+        };
+
         Ok(ScalingOutcome {
             metrics,
             ready_after,
             downtime,
-            intake_pause: Some((0.0, ready_after)),
+            intake_pause,
             transition_derate: 1.0,
             preserves_inflight: self.hmm.opts.use_zero_copy,
             new_parallel: to.clone(),
@@ -293,6 +305,42 @@ mod tests {
             out.ready_after
         );
         assert!(out.downtime.is_none(), "still no downtime");
+    }
+
+    #[test]
+    fn intake_pauses_only_during_switchover() {
+        // Regression: with zero-copy concurrent serving, the old instance
+        // keeps admitting requests during the HMM/IMM/attach/warmup phase;
+        // only the final switchover window closes intake.
+        let mut e = elastic(6);
+        e.boot(&par(4)).unwrap();
+        let out = e.scale(&par(6)).unwrap();
+        let switchover = Timings::cloudmatrix().switchover;
+        let (a, b) = out.intake_pause.unwrap();
+        assert!(
+            (b - out.ready_after).abs() < 1e-9,
+            "pause ends at readiness: {b} vs {}",
+            out.ready_after
+        );
+        assert!(
+            (b - a - switchover).abs() < 1e-9,
+            "pause window {} should equal switchover {switchover}",
+            b - a
+        );
+        assert!(
+            a > 0.0,
+            "intake must stay open during the concurrent phase (a = {a})"
+        );
+    }
+
+    #[test]
+    fn no_zero_copy_pauses_intake_for_whole_transition() {
+        let mut e = elastic(6);
+        e.hmm.opts.use_zero_copy = false;
+        e.hmm.opts.ipc_safe_alloc = false;
+        e.boot(&par(4)).unwrap();
+        let out = e.scale(&par(6)).unwrap();
+        assert_eq!(out.intake_pause, Some((0.0, out.ready_after)));
     }
 
     #[test]

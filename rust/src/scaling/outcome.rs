@@ -1,48 +1,106 @@
 //! The scaling-method interface and the transition timeline it produces.
+//!
+//! A [`ScalingMethod`] executes a scaling event *instantaneously* in
+//! simulated terms and returns a [`ScalingOutcome`] describing what the
+//! event does to the serving timeline. The serving simulators
+//! ([`crate::coordinator::ServingSim`], [`crate::coordinator::FleetSim`])
+//! then *enact* that timeline: they keep the old instance stepping, close
+//! intake or kill the instance during the declared windows, and perform the
+//! engine switchover at `ready_after`. See
+//! `docs/architecture/02-scaling-choreography.md` for the full pipeline.
 
 use anyhow::Result;
 
 use crate::config::ParallelConfig;
 use crate::metrics::ScalingMetrics;
 
-/// What a scaling event does to the serving timeline, all times relative to
-/// the scale command (t = 0).
+/// What a scaling event does to the serving timeline. All times are in
+/// seconds **relative to the scale command** (t = 0); the simulator adds
+/// the command's absolute issue time.
+///
+/// The three easily confused fields, from weakest to strongest effect:
+///
+/// - [`transition_derate`](Self::transition_derate) — the active instance
+///   keeps serving *and* admitting, but slower (a capacity tax, e.g. two
+///   colocated model copies sharing the same NPUs).
+/// - [`intake_pause`](Self::intake_pause) — the active instance keeps
+///   serving its in-flight batch at full speed but admits no *new*
+///   requests inside the window; arrivals queue in the coordinator and are
+///   handed to the successor at switchover. Queueing delay, no lost work.
+/// - [`downtime`](Self::downtime) — no serving instance exists inside the
+///   window. Nothing is served, and in-flight progress is lost unless
+///   [`preserves_inflight`](Self::preserves_inflight) is set.
 #[derive(Debug, Clone)]
 pub struct ScalingOutcome {
-    /// Measured latency/downtime/peak-memory (the paper's scaling metrics).
+    /// Measured latency/downtime/peak-memory (the paper's scaling metrics,
+    /// §7.3), including the per-stage breakdown of Fig 11.
     pub metrics: ScalingMetrics,
-    /// When the target instance is ready to serve.
+    /// When the target instance is ready to serve. At this instant the
+    /// simulator builds the successor engine, migrates in-flight and
+    /// queued requests to it, and retires the old instance.
     pub ready_after: f64,
-    /// Window with no serving instance (cold restart), if any.
+    /// Window `(start, end)` with **no serving instance at all** (cold
+    /// restart tears down before booting). `None` for every method that
+    /// keeps the old instance alive through the transition.
     pub downtime: Option<(f64, f64)>,
-    /// Window during which the active instance pauses *new* intake
-    /// (ElasticMoE's transition-capacity trade-off, §C).
+    /// Window `(start, end)` during which the active instance pauses
+    /// intake of *new* requests while continuing to serve its in-flight
+    /// batch. ElasticMoE with zero-copy pauses only for the final
+    /// drain+reroute switchover (the window starts at
+    /// `ready_after - switchover`, not at 0 — the concurrent HMM/IMM phase
+    /// serves normally); without zero-copy the pause spans the whole
+    /// transition, which is then also downtime.
     pub intake_pause: Option<(f64, f64)>,
-    /// Throughput derate of the active instance during the transition
-    /// (colocated: two copies share the devices).
+    /// Throughput multiplier (`0 < x <= 1`) applied to the active instance
+    /// for the duration of the transition. 1.0 = no slowdown; Colocated
+    /// runs at ~0.35 while two model copies share its devices.
     pub transition_derate: f64,
     /// Whether in-flight requests survive the switchover with their KV
-    /// (zero-copy reuse) or must restart from scratch.
+    /// intact (zero-copy reuse: decode resumes on the successor) or must
+    /// restart from scratch on the new instance.
     pub preserves_inflight: bool,
-    /// The configuration after the event.
+    /// The parallel configuration after the event.
     pub new_parallel: ParallelConfig,
-    /// Total devices occupied at the transition's peak.
+    /// Total devices occupied at the transition's peak (Extravagant holds
+    /// old + new sets simultaneously).
     pub peak_devices: usize,
 }
 
+impl ScalingOutcome {
+    /// Whether `now` falls inside the downtime window of an event issued
+    /// at absolute time `started`.
+    pub fn in_downtime(&self, started: f64, now: f64) -> bool {
+        self.downtime
+            .map(|(a, b)| now >= started + a && now < started + b)
+            .unwrap_or(false)
+    }
+
+    /// Whether intake is open at `now` for an event issued at absolute
+    /// time `started` (outside the `intake_pause` window, or no window).
+    pub fn intake_open(&self, started: f64, now: f64) -> bool {
+        self.intake_pause
+            .map(|(a, b)| !(now >= started + a && now < started + b))
+            .unwrap_or(true)
+    }
+}
+
 /// A scaling strategy: boots an initial configuration and executes scaling
-/// events. All five methods drive the same simulated cluster and serve
-/// through the same engine.
+/// events. All five methods (ElasticMoE and the four §7.2 baselines) drive
+/// the same simulated cluster and serve through the same engine, so their
+/// outcomes are directly comparable.
 pub trait ScalingMethod {
+    /// Display name used in tables and reports.
     fn name(&self) -> &'static str;
 
     /// Boot the initial configuration; returns the boot time (seconds).
+    /// Must be called exactly once before the first [`scale`](Self::scale).
     fn boot(&mut self, parallel: &ParallelConfig) -> Result<f64>;
 
-    /// Execute a scaling event to `to`.
+    /// Execute a scaling event to `to`, mutating the simulated cluster and
+    /// returning the transition timeline for the simulator to enact.
     fn scale(&mut self, to: &ParallelConfig) -> Result<ScalingOutcome>;
 
-    /// Current configuration.
+    /// Current configuration (`None` before boot).
     fn current(&self) -> Option<&ParallelConfig>;
 
     /// Steady-state KV-budget factor (< 1.0 for colocated, which must keep

@@ -24,16 +24,21 @@ pub enum RateProfile {
     Step { before: f64, after: f64, at: f64 },
     /// Repeating day/night-style sinusoid: `base * (1 + amp*sin)`.
     Diurnal { base: f64, amp: f64, period: f64 },
+    /// Superposition of independent profiles (multi-tenant aggregate
+    /// traffic: each tenant contributes its own shape and the instantaneous
+    /// fleet rate is the sum).
+    Sum(Vec<RateProfile>),
 }
 
 impl RateProfile {
-    /// Rate at time `t`.
+    /// Rate at time `t`. Never negative: each variant clamps at zero so a
+    /// composed profile cannot cancel below an empty stream.
     pub fn rate(&self, t: f64) -> f64 {
-        match *self {
+        let r = match *self {
             RateProfile::Fixed(r) => r,
             RateProfile::Ramp { from, to, duration } => {
                 if duration <= 0.0 {
-                    return to;
+                    return to.max(0.0);
                 }
                 let f = (t / duration).clamp(0.0, 1.0);
                 from + (to - from) * f
@@ -62,7 +67,11 @@ impl RateProfile {
                     + amp * (2.0 * std::f64::consts::PI * t / period).sin())
                 .max(0.0)
             }
-        }
+            RateProfile::Sum(ref parts) => {
+                parts.iter().map(|p| p.rate(t)).sum()
+            }
+        };
+        r.max(0.0)
     }
 }
 
@@ -218,6 +227,99 @@ mod tests {
         };
         assert_eq!(step.rate(9.9), 1.0);
         assert_eq!(step.rate(10.0), 4.0);
+    }
+
+    #[test]
+    fn rates_never_negative() {
+        // Diurnal with amp > 1 dips below zero mid-period without the
+        // clamp; every other variant must clamp too.
+        let profiles = [
+            RateProfile::Diurnal {
+                base: 2.0,
+                amp: 3.0,
+                period: 100.0,
+            },
+            RateProfile::Fixed(-1.0),
+            RateProfile::Ramp {
+                from: 5.0,
+                to: -5.0,
+                duration: 10.0,
+            },
+            RateProfile::Step {
+                before: 1.0,
+                after: -2.0,
+                at: 5.0,
+            },
+            RateProfile::Sum(vec![
+                RateProfile::Fixed(1.0),
+                RateProfile::Ramp {
+                    from: -10.0,
+                    to: -10.0,
+                    duration: 1.0,
+                },
+            ]),
+        ];
+        for p in &profiles {
+            for i in 0..1000 {
+                let t = i as f64 * 0.25;
+                assert!(p.rate(t) >= 0.0, "{p:?} at t={t}: {}", p.rate(t));
+            }
+        }
+    }
+
+    #[test]
+    fn burst_boundary_is_exclusive() {
+        let burst = RateProfile::Burst {
+            base: 2.0,
+            factor: 10.0,
+            start: 60.0,
+            len: 30.0,
+        };
+        assert_eq!(burst.rate(60.0), 20.0, "start is inclusive");
+        assert_eq!(burst.rate(89.999), 20.0);
+        assert_eq!(burst.rate(90.0), 2.0, "start+len is exclusive");
+    }
+
+    #[test]
+    fn ramp_with_nonpositive_duration_is_a_step_to_target() {
+        for duration in [0.0, -5.0] {
+            let ramp = RateProfile::Ramp {
+                from: 1.0,
+                to: 4.0,
+                duration,
+            };
+            assert_eq!(ramp.rate(0.0), 4.0);
+            assert_eq!(ramp.rate(100.0), 4.0);
+        }
+    }
+
+    #[test]
+    fn sum_superposes_component_rates() {
+        let p = RateProfile::Sum(vec![
+            RateProfile::Fixed(1.0),
+            RateProfile::Burst {
+                base: 0.5,
+                factor: 10.0,
+                start: 10.0,
+                len: 5.0,
+            },
+        ]);
+        assert_eq!(p.rate(0.0), 1.5);
+        assert_eq!(p.rate(12.0), 6.0);
+        assert_eq!(p.rate(15.0), 1.5);
+        // A Sum profile drives the generator like any other.
+        let mut g = WorkloadGen::new(WorkloadSpec {
+            prompt_len: 100,
+            decode_min: 10,
+            decode_max: 20,
+            profile: p,
+            seed: 9,
+        });
+        let arr = g.arrivals_until(100.0);
+        assert!(!arr.is_empty());
+        for w in arr.windows(2) {
+            assert!(w[0].arrival <= w[1].arrival);
+        }
     }
 
     #[test]

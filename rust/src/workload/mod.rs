@@ -1,9 +1,13 @@
 //! Synthetic workload generation (§7.1): fixed-length IO request streams
 //! with fixed, ramping, bursty and patterned arrival-rate profiles, drawn
-//! from seeded PRNGs for deterministic experiments.
+//! from seeded PRNGs for deterministic experiments. [`MultiTenantGen`]
+//! merges several tenants' streams (each with its own profile and SLO)
+//! into the fleet-level workloads of `experiments::fleet`.
 
 pub mod generator;
 pub mod request;
+pub mod tenant;
 
 pub use generator::{RateProfile, WorkloadGen, WorkloadSpec};
 pub use request::{Request, RequestId, RequestState};
+pub use tenant::{MultiTenantGen, TenantSpec};

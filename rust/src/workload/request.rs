@@ -25,6 +25,9 @@ pub struct Request {
     pub arrival: f64,
     pub prompt_len: usize,
     pub max_new_tokens: usize,
+    /// Owning tenant (0 = the default single-tenant stream). Used by the
+    /// fleet router for session affinity and by per-tenant SLO accounting.
+    pub tenant: u32,
     pub state: RequestState,
     /// Decode progress.
     pub generated: usize,
@@ -50,6 +53,7 @@ impl Request {
             arrival,
             prompt_len,
             max_new_tokens,
+            tenant: 0,
             state: RequestState::Queued,
             generated: 0,
             first_token_at: None,
@@ -57,6 +61,12 @@ impl Request {
             prompt_ids: Vec::new(),
             output_ids: Vec::new(),
         }
+    }
+
+    /// Tag the request with its owning tenant.
+    pub fn with_tenant(mut self, tenant: u32) -> Self {
+        self.tenant = tenant;
+        self
     }
 
     /// Total KV footprint in tokens at completion.
