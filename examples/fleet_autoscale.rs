@@ -92,6 +92,9 @@ fn main() -> Result<()> {
             FleetAction::DrainReplica { replica } => {
                 println!("  t={t:>6.1}s  drain replica {replica}")
             }
+            FleetAction::Rebalance { replica } => println!(
+                "  t={t:>6.1}s  replica {replica} expert rebalance (same devices)"
+            ),
             FleetAction::Hold => {}
         }
     }

@@ -78,8 +78,10 @@ impl ParallelConfig {
     }
 
     /// Balanced expert placement: expert `e` of `n_experts` lives on EP rank
-    /// `e % ep` (round-robin, the paper's default before load-aware
-    /// rebalancing). Returns, per EP rank, the expert ids it owns.
+    /// `e % ep` (round-robin, the paper's default). Load-aware rebalancing
+    /// lives in [`crate::placement`] and takes over during scaling events
+    /// when [`crate::placement::PlacementMode::LoadAware`] is enabled.
+    /// Returns, per EP rank, the expert ids it owns.
     pub fn expert_placement(&self, n_experts: usize) -> Vec<Vec<usize>> {
         let mut owners = vec![Vec::new(); self.ep];
         for e in 0..n_experts {

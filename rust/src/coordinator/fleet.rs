@@ -347,6 +347,7 @@ impl FleetSim {
                     busy: r.pending.is_some() || r.ready_at > t_end,
                     booting: r.ready_at > t_end,
                     draining: r.draining,
+                    imbalance: r.method.placement_imbalance(),
                 })
                 .collect();
             let reserved: usize =
@@ -404,6 +405,23 @@ impl FleetSim {
                 FleetAction::DrainReplica { replica } => {
                     replicas[replica].draining = true;
                     actions.push((t_end, action));
+                }
+                FleetAction::Rebalance { replica } => {
+                    // Redistribution-only event: same devices, new expert
+                    // placement. Methods without load-aware placement
+                    // decline (None) and the window is a no-op; the
+                    // replica's cooldown was still charged by the policy,
+                    // which keeps a persistently declining method from
+                    // being re-asked every single window.
+                    let rep = &mut replicas[replica];
+                    if let Some(outcome) = rep.method.rebalance()? {
+                        begin_transition_on(&outcome, rep.engine.as_mut());
+                        rep.pending = Some(PendingScale {
+                            outcome,
+                            started: t_end,
+                        });
+                        actions.push((t_end, action));
+                    }
                 }
             }
 
@@ -778,6 +796,70 @@ mod tests {
         );
         assert!(out.cold_boots >= 1);
         assert!(out.final_replicas >= 2);
+    }
+
+    /// End-to-end redistribution-only event: replicas whose expert
+    /// popularity is skewed (stats fed into the HMM before boot, as a
+    /// routing-aware engine would) get a `Rebalance` action from the
+    /// policy during quiet windows, execute it through the full scaling
+    /// choreography, and come out balanced — same device count, no
+    /// downtime, trace fully served.
+    #[test]
+    fn skewed_replicas_rebalance_through_the_fleet_loop() {
+        let sim = fleet(Router::JoinShortestQueue);
+        let mut policy = fast_policy(PolicyMode::Hybrid, 8);
+        // Light steady traffic: estimator must hold. Disable down-scaling
+        // so low occupancy cannot preempt the quiet-window rebalance.
+        policy.estimator.down_occupancy = 0.0;
+        let mut factory = |_i: usize| -> Result<Box<dyn ScalingMethod>> {
+            let mut e = elastic_with_opts(
+                &dsv2_lite(),
+                8,
+                HmmOptions::default(),
+                ImmOptions::default(),
+            );
+            e.hmm.placement =
+                crate::placement::PlacementConfig::load_aware();
+            // Hot experts co-located on EP rank 1 of the 2-device boot
+            // placement (e % 2 == 1): one device carries all the load.
+            let n = e.hmm.model.n_experts as usize;
+            let mut tokens_per_expert = vec![Vec::new(); n];
+            for hot in [1usize, 3, 5, 7] {
+                tokens_per_expert[hot] = (0..12).collect();
+            }
+            let routing = crate::engine::moe::Routing {
+                n_tokens: 48,
+                n_experts: n,
+                tokens_per_expert,
+            };
+            for layer in 0..e.hmm.model.n_layers as usize {
+                e.hmm.record_routing(layer, &routing);
+            }
+            Ok(Box::new(e) as Box<dyn ScalingMethod>)
+        };
+        let mut g = WorkloadGen::new(WorkloadSpec {
+            prompt_len: 1000,
+            decode_min: 20,
+            decode_max: 40,
+            profile: RateProfile::Fixed(0.3),
+            seed: 3,
+        });
+        let horizon = 120.0;
+        let arrivals = g.arrivals_until(horizon);
+        let n = arrivals.len();
+        let out = sim
+            .run(&mut policy, &mut factory, 2, arrivals, horizon)
+            .unwrap();
+        let rebalances = out
+            .count_actions(|a| matches!(a, FleetAction::Rebalance { .. }));
+        assert!(rebalances >= 1, "skew must trigger a rebalance: {:?}", out.actions);
+        // Redistribution-only: no capacity change, no downtime.
+        for ev in &out.scaling_events {
+            assert_eq!(ev.new_parallel.n_devices(), 2);
+            assert_eq!(ev.metrics.downtime, 0.0);
+        }
+        assert_eq!(out.cold_boots, 0);
+        assert_eq!(out.recorder.count(), n, "trace fully served");
     }
 
     #[test]

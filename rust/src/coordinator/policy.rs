@@ -33,6 +33,10 @@ pub struct ReplicaLoad {
     pub booting: bool,
     /// The replica is draining out of the fleet.
     pub draining: bool,
+    /// Predicted max/mean expert token load across the replica's devices
+    /// (1.0 = balanced or unknown; see
+    /// [`crate::scaling::ScalingMethod::placement_imbalance`]).
+    pub imbalance: f64,
 }
 
 /// Fleet sizing envelope and the shared device-pool budget.
@@ -74,6 +78,9 @@ pub enum FleetAction {
     AddReplica,
     /// Stop routing to `replica`; release its devices once empty.
     DrainReplica { replica: usize },
+    /// Redistribution-only event on `replica`: same devices, new expert
+    /// placement (the answer to popularity skew, not load volume).
+    Rebalance { replica: usize },
 }
 
 /// The fleet policy: fleet-wide hysteresis plus action selection.
@@ -89,6 +96,10 @@ pub struct FleetPolicy {
     /// the backlog grows before any late request has *finished* and pulled
     /// the windowed attainment down).
     pub pressure_queue: usize,
+    /// Expert-placement imbalance (max/mean token load) at which a
+    /// replica earns a redistribution-only event when the fleet is
+    /// otherwise holding.
+    pub rebalance_threshold: f64,
     last_event: HashMap<usize, f64>,
 }
 
@@ -100,6 +111,7 @@ impl FleetPolicy {
             estimator: LoadEstimator::new(slo),
             replica_cooldown: 20.0,
             pressure_queue: 8,
+            rebalance_threshold: 1.5,
             last_event: HashMap::new(),
         }
     }
@@ -154,6 +166,29 @@ impl FleetPolicy {
             // estimator so it retries at the next window instead of
             // waiting out patience + cooldown while the condition holds.
             self.estimator.refund(decision);
+        }
+        if action == FleetAction::Hold
+            && decision == ScaleDecision::Hold
+            && self.mode != PolicyMode::HorizontalOnly
+        {
+            // Load volume is healthy, but a replica's expert placement may
+            // have drifted out of balance with traffic skew: spend the
+            // quiet window on a redistribution-only event (same devices,
+            // new placement) so the next burst hits balanced EP ranks.
+            let candidate = serving
+                .iter()
+                .filter(|l| {
+                    !l.busy
+                        && l.imbalance >= self.rebalance_threshold
+                        && self.cooled_down(l.id, now)
+                })
+                .max_by(|a, b| {
+                    a.imbalance.total_cmp(&b.imbalance).then(b.id.cmp(&a.id))
+                });
+            if let Some(l) = candidate {
+                self.note_event(l.id, now);
+                return FleetAction::Rebalance { replica: l.id };
+            }
         }
         action
     }
@@ -297,6 +332,7 @@ mod tests {
             busy: false,
             booting: false,
             draining: false,
+            imbalance: 1.0,
         }
     }
 
@@ -409,6 +445,66 @@ mod tests {
         let mut p = policy(PolicyMode::Hybrid);
         let loads = [load(0, 2, 0.05, 0)];
         assert_eq!(p.decide(5.0, 1.0, &loads, 0), FleetAction::Hold);
+    }
+
+    #[test]
+    fn skewed_replica_earns_a_rebalance_in_quiet_windows() {
+        let mut p = policy(PolicyMode::Hybrid);
+        // Healthy load (good attainment, mid occupancy, no queue) so the
+        // estimator holds; replica 1's placement has drifted.
+        let mut skew = load(1, 4, 0.5, 0);
+        skew.imbalance = 2.0;
+        let loads = [load(0, 4, 0.5, 0), skew];
+        assert_eq!(
+            p.decide(5.0, 1.0, &loads, 4),
+            FleetAction::Rebalance { replica: 1 }
+        );
+        // The event starts the replica's cooldown.
+        let mut p = policy(PolicyMode::Hybrid);
+        p.replica_cooldown = 100.0;
+        let mut skew = load(1, 4, 0.5, 0);
+        skew.imbalance = 2.0;
+        let loads = [load(0, 4, 0.5, 0), skew];
+        assert_eq!(
+            p.decide(5.0, 1.0, &loads, 4),
+            FleetAction::Rebalance { replica: 1 }
+        );
+        assert_eq!(p.decide(10.0, 1.0, &loads, 4), FleetAction::Hold);
+    }
+
+    #[test]
+    fn balanced_or_busy_replicas_do_not_rebalance() {
+        let mut p = policy(PolicyMode::Hybrid);
+        // Below threshold: hold.
+        let mut mild = load(0, 4, 0.5, 0);
+        mild.imbalance = 1.2;
+        assert_eq!(p.decide(5.0, 1.0, &[mild], 4), FleetAction::Hold);
+        // Above threshold but mid-transition: hold.
+        let mut busy = load(0, 4, 0.5, 0);
+        busy.imbalance = 3.0;
+        busy.busy = true;
+        assert_eq!(p.decide(10.0, 1.0, &[busy], 4), FleetAction::Hold);
+        // Horizontal-only fleets cannot remap experts.
+        let mut p = policy(PolicyMode::HorizontalOnly);
+        let mut skew = load(0, 4, 0.5, 0);
+        skew.imbalance = 3.0;
+        assert_eq!(p.decide(5.0, 1.0, &[skew], 4), FleetAction::Hold);
+    }
+
+    #[test]
+    fn scaling_pressure_outranks_rebalancing() {
+        // A violating window scales up even on a skewed replica; the
+        // rebalance only fires when the fleet is otherwise holding.
+        let mut p = policy(PolicyMode::Hybrid);
+        let mut skew = load(0, 2, 1.0, 20);
+        skew.imbalance = 3.0;
+        assert_eq!(
+            p.decide(5.0, 0.5, &[skew], 8),
+            FleetAction::VerticalUp {
+                replica: 0,
+                to_devices: 4
+            }
+        );
     }
 
     #[test]

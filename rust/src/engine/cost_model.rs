@@ -13,11 +13,28 @@ use crate::device::Timings;
 pub struct CostModel {
     pub model: ModelConfig,
     pub timings: Timings,
+    /// Max/mean token load across EP ranks (`>= 1.0`). The decode step's
+    /// MoE phase is gated by the most-loaded rank — it receives `imb`
+    /// times the mean token work while the other ranks idle at the
+    /// all-to-all combine — so the expert read/dispatch terms stretch by
+    /// this factor. 1.0 = perfectly balanced placement; the placement
+    /// subsystem ([`crate::placement`]) exists to keep it there.
+    pub ep_imbalance: f64,
 }
 
 impl CostModel {
     pub fn new(model: ModelConfig, timings: Timings) -> Self {
-        CostModel { model, timings }
+        CostModel {
+            model,
+            timings,
+            ep_imbalance: 1.0,
+        }
+    }
+
+    /// Builder: set the EP token-load imbalance (clamped to `>= 1.0`).
+    pub fn with_ep_imbalance(mut self, imb: f64) -> Self {
+        self.ep_imbalance = imb.max(1.0);
+        self
     }
 
     /// One decode iteration with `batch` concurrent sequences.
@@ -31,21 +48,27 @@ impl CostModel {
         }
         let m = &self.model;
         let tokens = batch as f64;
-        // Tokens landing on one EP rank after dispatch.
+        let imb = self.ep_imbalance.max(1.0);
+        // Mean tokens landing on one EP rank after dispatch; the hottest
+        // rank sees `imb` times this under a skewed placement.
         let tokens_per_rank =
             (tokens * m.top_k as f64 / p.ep as f64).max(1.0);
+        let tokens_hot = tokens_per_rank * imb;
         let local_experts =
             p.experts_per_device(m.n_experts as usize) as f64
                 + m.n_shared_experts as f64;
         let experts_hit = local_experts.min(tokens_per_rank);
 
-        // Weight-read time per device (decode roofline).
+        // Weight-read time per device (decode roofline). The MoE phase is
+        // gated by the most-loaded rank, which carries `imb` times the
+        // mean rank's expert token work while the other ranks wait at the
+        // combine — applied once (linear in `imb`).
         let attn_bytes =
             (m.n_layers * m.attn_bytes_per_layer()) as f64 / p.tp as f64;
         let expert_bytes =
             m.n_layers as f64 * experts_hit * m.expert_bytes() as f64;
-        let weight_time =
-            (attn_bytes + expert_bytes) / self.timings.hbm_bw;
+        let weight_time = (attn_bytes + expert_bytes * imb)
+            / self.timings.hbm_bw;
 
         // Compute time per device: batch rows through active params.
         let batch_per_dp = (batch as f64 / p.dp as f64).ceil();
@@ -59,11 +82,11 @@ impl CostModel {
             / p.tp as f64
             / self.timings.hbm_bw;
 
-        // EP all-to-all dispatch + combine.
-        let dispatch_bytes = tokens_per_rank
-            * m.top_k as f64
-            * m.d_model as f64
-            * m.dtype_bytes as f64;
+        // EP all-to-all dispatch + combine (sized by the hot rank's
+        // shard). `tokens_hot` already counts each token's top-k routed
+        // copies, so the per-rank bytes are tokens_hot activations.
+        let dispatch_bytes =
+            tokens_hot * m.d_model as f64 * m.dtype_bytes as f64;
         let dispatch = 2.0
             * (self.timings.dispatch_latency
                 + dispatch_bytes / self.timings.p2p_bw);
@@ -191,6 +214,46 @@ mod tests {
             "EP16 {one_big} rps vs 4x EP4 {}",
             4.0 * one_small
         );
+    }
+
+    #[test]
+    fn ep_imbalance_slows_decode_and_throughput() {
+        let c = cm();
+        let p = par(2, 4);
+        let t_bal = c.decode_step_time(&p, 32);
+        let c_skew = cm().with_ep_imbalance(2.0);
+        let t_skew = c_skew.decode_step_time(&p, 32);
+        // The expert phase dominates the decode roofline, so a 2x hot rank
+        // must cost well over 20% of a step.
+        assert!(t_skew > t_bal * 1.2, "bal {t_bal} skew {t_skew}");
+        let hbm = 64u64 << 30;
+        let r_bal = c.steady_throughput_rps(&p, hbm, 2000, 600);
+        let r_skew = c_skew.steady_throughput_rps(&p, hbm, 2000, 600);
+        assert!(r_skew < r_bal, "skewed {r_skew} vs balanced {r_bal}");
+        // Sub-balanced values clamp: imbalance cannot speed things up.
+        let t_clamp =
+            cm().with_ep_imbalance(0.5).decode_step_time(&p, 32);
+        assert_eq!(t_clamp, t_bal);
+    }
+
+    #[test]
+    fn imbalance_penalty_is_linear_in_the_factor() {
+        // The hot rank carries imb× the mean token work: the extra cost
+        // over balanced must scale with (imb - 1), not quadratically —
+        // also at small batches where expert reads are token-limited.
+        let p = par(2, 4);
+        for batch in [2usize, 32] {
+            let base = cm().decode_step_time(&p, batch);
+            let e2 = cm().with_ep_imbalance(2.0).decode_step_time(&p, batch)
+                - base;
+            let e4 = cm().with_ep_imbalance(4.0).decode_step_time(&p, batch)
+                - base;
+            assert!(e2 > 0.0, "batch {batch}: no penalty");
+            assert!(
+                e4 <= e2 * 3.0 + 1e-9,
+                "batch {batch}: superlinear penalty (e2 {e2}, e4 {e4})"
+            );
+        }
     }
 
     #[test]

@@ -42,21 +42,82 @@ impl Routing {
     }
 
     /// Token count per device given an owner map `expert -> device`.
+    /// Debug-asserts that every routed token lands on a device in range;
+    /// use [`Self::tokens_per_device_counted`] to observe out-of-range
+    /// tokens instead of asserting.
     pub fn tokens_per_device(
         &self,
         owner: &dyn Fn(usize) -> DeviceId,
         n_devices: usize,
     ) -> Vec<usize> {
+        let (counts, dropped) = self.tokens_per_device_counted(owner, n_devices);
+        debug_assert_eq!(
+            dropped, 0,
+            "{dropped} tokens routed to devices >= {n_devices}"
+        );
+        counts
+    }
+
+    /// Like [`Self::tokens_per_device`], but returns `(counts, dropped)`
+    /// where `dropped` tallies tokens whose owner device is `>= n_devices`
+    /// (a stale owner map mid-reconfiguration) rather than silently
+    /// skipping them.
+    pub fn tokens_per_device_counted(
+        &self,
+        owner: &dyn Fn(usize) -> DeviceId,
+        n_devices: usize,
+    ) -> (Vec<usize>, usize) {
         let mut counts = vec![0usize; n_devices];
+        let mut dropped = 0usize;
         for (e, toks) in self.tokens_per_expert.iter().enumerate() {
-            if !toks.is_empty() {
-                let d = owner(e);
-                if d < n_devices {
-                    counts[d] += toks.len();
-                }
+            if toks.is_empty() {
+                continue;
+            }
+            let d = owner(e);
+            if d < n_devices {
+                counts[d] += toks.len();
+            } else {
+                dropped += toks.len();
             }
         }
-        counts
+        (counts, dropped)
+    }
+
+    /// Token count per device when experts may be replicated on several
+    /// devices (`owners[e]` lists every owner of expert `e`): each token
+    /// goes to the owner with the fewest tokens so far — the router's
+    /// least-loaded-replica pick under hot-expert replication. Tokens of
+    /// experts with no in-range owner are tallied as `dropped`.
+    pub fn tokens_per_device_replicated(
+        &self,
+        owners: &[Vec<DeviceId>],
+        n_devices: usize,
+    ) -> (Vec<usize>, usize) {
+        let mut counts = vec![0usize; n_devices];
+        let mut dropped = 0usize;
+        for (e, toks) in self.tokens_per_expert.iter().enumerate() {
+            if toks.is_empty() {
+                continue;
+            }
+            let valid: Vec<DeviceId> = owners
+                .get(e)
+                .map(|v| {
+                    v.iter().copied().filter(|&d| d < n_devices).collect()
+                })
+                .unwrap_or_default();
+            if valid.is_empty() {
+                dropped += toks.len();
+                continue;
+            }
+            for _ in toks {
+                let &d = valid
+                    .iter()
+                    .min_by_key(|&&d| (counts[d], d))
+                    .unwrap();
+                counts[d] += 1;
+            }
+        }
+        (counts, dropped)
     }
 
     /// Load-balance factor: max/mean token load across devices (1.0 =
@@ -144,5 +205,55 @@ mod tests {
     fn empty_routing_is_balanced() {
         let r = Routing::from_combine_weights(&[], 0, 4);
         assert_eq!(r.imbalance(&|e| e, 4), 1.0);
+    }
+
+    #[test]
+    fn out_of_range_owners_are_counted_not_dropped() {
+        let cw = vec![
+            1.0, 0.0, 0.0, 0.0,
+            0.0, 1.0, 0.0, 0.0,
+            0.0, 0.0, 1.0, 0.0,
+        ];
+        let r = Routing::from_combine_weights(&cw, 3, 4);
+        // Expert 2's owner points past the device set (stale map).
+        let owner = |e: usize| if e == 2 { 7 } else { 0 };
+        let (counts, dropped) = r.tokens_per_device_counted(&owner, 2);
+        assert_eq!(counts, vec![2, 0]);
+        assert_eq!(dropped, 1);
+        // In-range maps report zero dropped.
+        let (_, ok) = r.tokens_per_device_counted(&|_| 1, 2);
+        assert_eq!(ok, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "routed to devices")]
+    #[cfg(debug_assertions)]
+    fn tokens_per_device_asserts_in_range_owners() {
+        let cw = vec![1.0, 0.0];
+        let r = Routing::from_combine_weights(&cw, 1, 2);
+        let _ = r.tokens_per_device(&|_| 9, 2);
+    }
+
+    #[test]
+    fn replicated_owners_split_tokens_to_least_loaded() {
+        // 6 tokens all on expert 0, which is owned by devices 0 and 1;
+        // expert 1's single token goes to device 2.
+        let mut tokens_per_expert = vec![Vec::new(); 2];
+        tokens_per_expert[0] = (0..6).collect();
+        tokens_per_expert[1] = vec![6];
+        let r = Routing {
+            n_tokens: 7,
+            n_experts: 2,
+            tokens_per_expert,
+        };
+        let owners = vec![vec![0, 1], vec![2]];
+        let (counts, dropped) = r.tokens_per_device_replicated(&owners, 3);
+        assert_eq!(counts, vec![3, 3, 1]);
+        assert_eq!(dropped, 0);
+        // An expert with no in-range owner drops its tokens into the tally.
+        let owners = vec![vec![0, 1], vec![9]];
+        let (counts, dropped) = r.tokens_per_device_replicated(&owners, 3);
+        assert_eq!(counts, vec![3, 3, 0]);
+        assert_eq!(dropped, 1);
     }
 }

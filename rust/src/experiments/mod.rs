@@ -18,6 +18,9 @@
 //! | fleet   | fleet scenarios (beyond the paper): hybrid       |
 //! |         | vertical×horizontal autoscaling, diurnal,        |
 //! |         | flash-crowd and multi-tenant traffic             |
+//! | placement | expert placement (beyond the paper): round-    |
+//! |         | robin vs load-aware vs replication on a          |
+//! |         | Zipf-skewed routing trace across an EP change    |
 
 pub mod common;
 pub mod fig1;
@@ -29,6 +32,7 @@ pub mod fig9;
 pub mod fig10;
 pub mod fig11;
 pub mod fig12;
+pub mod placement;
 pub mod tables;
 
 use anyhow::{bail, Result};
@@ -37,6 +41,7 @@ use anyhow::{bail, Result};
 pub const ALL: &[&str] = &[
     "fig1a", "fig1b", "fig4a", "fig4b", "fig7", "fig8", "fig9a", "fig9b",
     "fig10", "fig11", "fig12", "table1", "table2", "table3", "fleet",
+    "placement",
 ];
 
 /// Run one experiment by id, returning the rendered report.
@@ -57,6 +62,7 @@ pub fn run(id: &str, fast: bool) -> Result<String> {
         "table2" => tables::table2(fast)?,
         "table3" => tables::table3()?,
         "fleet" => fleet::run(fast)?,
+        "placement" => placement::run(fast)?,
         other => bail!("unknown experiment '{other}' (see `repro exp list`)"),
     };
     // Persist alongside printing.

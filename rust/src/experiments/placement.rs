@@ -1,0 +1,303 @@
+//! Placement experiment (beyond the paper): round-robin vs load-aware vs
+//! load-aware + hot-expert replication on a Zipf(1.0)-skewed routing
+//! trace, across an EP reconfiguration (DSv2-Lite, 4 → 6 devices).
+//!
+//! The trace pins the hot experts onto ids that co-locate under the boot
+//! placement (`e % ep`) — the adversarial-but-common case the placement
+//! subsystem exists for: round-robin redistribution has no defense when
+//! popularity correlates with id blocks, and any placement produced by
+//! earlier minimal-movement scalings preserves such correlations.
+//!
+//! Reported per variant: expert-migration P2P bytes, peak per-device
+//! token load on a held-out trace, max/mean imbalance, and simulated
+//! decode throughput after the event (via [`CostModel`]'s `ep_imbalance`
+//! term). Throughput *during* the event equals the pre-scale EP4 figure —
+//! the old instance keeps serving through the concurrent HMM/IMM phase.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::model::dsv2_lite;
+use crate::config::ParallelConfig;
+use crate::device::{Cluster, DeviceId, Timings};
+use crate::engine::moe::Routing;
+use crate::engine::CostModel;
+use crate::hmm::control::{HmmControl, HmmOptions};
+use crate::placement::{replicate_hot, PlacementMode};
+use crate::util::table::{f, Table};
+use crate::workload::ZipfRouting;
+
+use super::common::KV_BYTES;
+
+const ZIPF_S: f64 = 1.0;
+const TOKENS_PER_STEP: usize = 64;
+const HBM: u64 = 64 << 30;
+
+/// One placement variant's outcome.
+pub struct VariantResult {
+    pub label: String,
+    /// Expert weights moved over the fabric by the scaling plan (plus
+    /// replica copies for the replication variant).
+    pub expert_p2p_bytes: u64,
+    /// Peak per-device token load over the held-out trace.
+    pub peak_tokens: usize,
+    /// Max/mean per-device token load.
+    pub imbalance: f64,
+    /// Simulated decode throughput at EP6 under that imbalance.
+    pub rps_after: f64,
+}
+
+/// The full comparison (shared trace, shared boot state).
+pub struct PlacementComparison {
+    /// Configured discretionary migration budget (expert bytes).
+    pub budget_bytes: u64,
+    /// Pre-scale EP4 throughput — also the throughput *during* the event,
+    /// since the old instance serves through the concurrent phase.
+    pub rps_before: f64,
+    pub imbalance_before: f64,
+    pub round_robin: VariantResult,
+    pub load_aware: VariantResult,
+    pub replicated: VariantResult,
+}
+
+/// Popularity rank → expert id: rank `r` maps to expert `(r % 16) * 4 +
+/// r / 16`, so the 16 hottest experts are exactly the ids `≡ 0 (mod 4)` —
+/// one EP4 boot rank's full expert set.
+fn hot_block_mapping(n_experts: usize) -> Vec<usize> {
+    let quarter = n_experts / 4;
+    (0..n_experts).map(|r| (r % quarter) * 4 + r / quarter).collect()
+}
+
+fn single(owner: &[DeviceId]) -> Vec<Vec<DeviceId>> {
+    owner.iter().map(|&d| vec![d]).collect()
+}
+
+pub fn compare(fast: bool) -> Result<PlacementComparison> {
+    let m = dsv2_lite();
+    let n_exp = m.n_experts as usize;
+    let (warm_steps, eval_steps) = if fast { (120, 80) } else { (400, 200) };
+    let from = ParallelConfig::standard(2, 2, (0..4).collect())?;
+    let to = ParallelConfig::standard(3, 2, (0..6).collect())?;
+    // Discretionary budget: 40 experts per layer — above the balanced
+    // minimum for 4 → 6 (~22/layer) yet a real cap on churn.
+    let budget = 40 * m.n_layers * m.expert_bytes();
+
+    let mut gate = ZipfRouting::with_rank_mapping(
+        n_exp,
+        m.top_k as usize,
+        ZIPF_S,
+        1234,
+        hot_block_mapping(n_exp),
+    );
+    let warm: Vec<Routing> =
+        (0..warm_steps).map(|_| gate.step(TOKENS_PER_STEP)).collect();
+    let eval: Vec<Routing> =
+        (0..eval_steps).map(|_| gate.step(TOKENS_PER_STEP)).collect();
+
+    // Peak/imbalance of an owner map over the held-out trace.
+    let measure = |owners: &[Vec<DeviceId>], n_dev: usize| -> (usize, f64) {
+        let mut totals = vec![0usize; n_dev];
+        for r in &eval {
+            let (c, dropped) = r.tokens_per_device_replicated(owners, n_dev);
+            debug_assert_eq!(dropped, 0, "owner map out of range");
+            for (t, x) in totals.iter_mut().zip(c) {
+                *t += x;
+            }
+        }
+        let peak = *totals.iter().max().unwrap();
+        let loads: Vec<f64> = totals.iter().map(|&t| t as f64).collect();
+        (peak, crate::placement::imbalance(&loads))
+    };
+
+    // Booted EP4 HMM with popularity stats warmed on the shared trace.
+    let build = |mode: PlacementMode| -> Result<HmmControl> {
+        let cluster = Rc::new(RefCell::new(Cluster::cloudmatrix(6)));
+        let mut hmm =
+            HmmControl::new(cluster, m.clone(), HmmOptions::default());
+        hmm.placement.mode = mode;
+        hmm.placement.migration_budget_bytes = budget;
+        // Enough slack that no device is forced over capacity at EP6
+        // (old devices hold 16 experts; ceil(64/6) + 5 = 16): every move
+        // the load-aware plan makes is discretionary, so its expert P2P
+        // bytes are bounded by the budget by construction.
+        hmm.placement.capacity_slack = 5;
+        hmm.load_initial(&from, KV_BYTES)?;
+        for r in &warm {
+            for layer in 0..m.n_layers as usize {
+                hmm.record_routing(layer, r);
+            }
+        }
+        Ok(hmm)
+    };
+
+    let cost = CostModel::new(m.clone(), Timings::cloudmatrix());
+
+    // Pre-scale state is identical for every variant.
+    let hmm_rr = build(PlacementMode::MinMove)?;
+    let owners0 = single(hmm_rr.expert_owners(0).unwrap());
+    let (_, imbalance_before) = measure(&owners0, 4);
+    let rps_before = cost
+        .clone()
+        .with_ep_imbalance(imbalance_before)
+        .steady_throughput_rps(&from, HBM, 2000, 600);
+
+    // Execute the scaling event under one placement mode and measure the
+    // resulting layer-0 owner map (all layers saw identical stats).
+    let run_variant =
+        |mut hmm: HmmControl, label: &str| -> Result<(VariantResult, HmmControl)> {
+            let plan = hmm.plan_scale(&to)?;
+            debug_assert!(plan.migrations_have_matching_evictions());
+            let moved =
+                plan.migrated_expert_count() as u64 * m.expert_bytes();
+            hmm.execute_plan(&plan, &to)?;
+            hmm.apply_deferred_frees()?;
+            let owners = single(hmm.expert_owners(0).unwrap());
+            let (peak_tokens, imbalance) = measure(&owners, 6);
+            let rps_after = cost
+                .clone()
+                .with_ep_imbalance(imbalance)
+                .steady_throughput_rps(&to, HBM, 2000, 600);
+            Ok((
+                VariantResult {
+                    label: label.to_string(),
+                    expert_p2p_bytes: moved,
+                    peak_tokens,
+                    imbalance,
+                    rps_after,
+                },
+                hmm,
+            ))
+        };
+
+    let (round_robin, _) = run_variant(hmm_rr, "round-robin (min-move)")?;
+    let (load_aware, hmm_la) =
+        run_variant(build(PlacementMode::LoadAware)?, "load-aware")?;
+
+    // Replication overlay on the load-aware placement: grant the hottest
+    // experts extra owners, router picks the least-loaded replica.
+    let loads0 = hmm_la.load_stats().unwrap().predicted(0).to_vec();
+    let owner0 = hmm_la.expert_owners(0).unwrap().to_vec();
+    let capacity = n_exp.div_ceil(to.devices.len())
+        + hmm_la.placement.capacity_slack;
+    let owners_repl =
+        replicate_hot(&owner0, &loads0, &to.devices, 6, capacity);
+    let n_replicas: usize =
+        owners_repl.iter().map(|os| os.len() - 1).sum();
+    let (peak_tokens, imbalance) = measure(&owners_repl, 6);
+    let rps_after = cost
+        .clone()
+        .with_ep_imbalance(imbalance)
+        .steady_throughput_rps(&to, HBM, 2000, 600);
+    let replicated = VariantResult {
+        label: format!("load-aware + replicate x{n_replicas}"),
+        expert_p2p_bytes: load_aware.expert_p2p_bytes
+            + n_replicas as u64 * m.n_layers * m.expert_bytes(),
+        peak_tokens,
+        imbalance,
+        rps_after,
+    };
+
+    Ok(PlacementComparison {
+        budget_bytes: budget,
+        rps_before,
+        imbalance_before,
+        round_robin,
+        load_aware,
+        replicated,
+    })
+}
+
+/// Render the `repro exp placement` report.
+pub fn run(fast: bool) -> Result<String> {
+    let c = compare(fast)?;
+    let gb = |b: u64| b as f64 / (1u64 << 30) as f64;
+    let mut report = String::new();
+    let mut t = Table::new(
+        "Expert placement under Zipf(1.0) routing — DSv2-Lite, EP4 -> EP6",
+    )
+    .header([
+        "placement",
+        "expert p2p GB",
+        "peak dev tokens",
+        "max/mean",
+        "rps after",
+    ]);
+    for v in [&c.round_robin, &c.load_aware, &c.replicated] {
+        t.row([
+            v.label.clone(),
+            f(gb(v.expert_p2p_bytes), 2),
+            v.peak_tokens.to_string(),
+            f(v.imbalance, 2),
+            f(v.rps_after, 2),
+        ]);
+    }
+    report.push_str(&t.render());
+    report.push_str(&format!(
+        "\nDuring the event the old EP4 instance keeps serving: {:.2} rps \
+         at max/mean {:.2}. Migration budget: {:.1} GB of expert weights \
+         (plans above stay within it by construction).\n\
+         Expected shape: count-balanced round-robin leaves the hot-expert \
+         block on one device (high peak load, slow hot rank); load-aware \
+         placement spreads it for similar migration bytes, cutting peak \
+         load and lifting post-scale throughput; replication splits the \
+         hottest experts across owners to shave the residual peak.\n",
+        c.rps_before,
+        c.imbalance_before,
+        gb(c.budget_bytes),
+    ));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// ISSUE acceptance: on the Zipf(1.0) trace, load-aware placement
+    /// strictly beats round-robin on peak per-device load and post-scale
+    /// throughput, within the configured migration budget.
+    #[test]
+    fn load_aware_beats_round_robin_on_zipf_trace() {
+        let c = compare(true).unwrap();
+        assert!(
+            c.load_aware.peak_tokens < c.round_robin.peak_tokens,
+            "peak load: load-aware {} vs round-robin {}",
+            c.load_aware.peak_tokens,
+            c.round_robin.peak_tokens
+        );
+        assert!(
+            c.load_aware.rps_after > c.round_robin.rps_after,
+            "rps: load-aware {} vs round-robin {}",
+            c.load_aware.rps_after,
+            c.round_robin.rps_after
+        );
+        assert!(
+            c.load_aware.expert_p2p_bytes <= c.budget_bytes,
+            "migration bytes {} exceed budget {}",
+            c.load_aware.expert_p2p_bytes,
+            c.budget_bytes
+        );
+        // Replication never loses to single ownership (small tolerance
+        // for held-out-trace noise on the online replica pick).
+        assert!(
+            c.replicated.peak_tokens as f64
+                <= c.load_aware.peak_tokens as f64 * 1.05,
+            "replication peak {} vs load-aware {}",
+            c.replicated.peak_tokens,
+            c.load_aware.peak_tokens
+        );
+        // The skew the subsystem fixes is really there.
+        assert!(c.round_robin.imbalance > 1.5, "{}", c.round_robin.imbalance);
+        assert!(c.load_aware.imbalance < c.round_robin.imbalance);
+    }
+
+    #[test]
+    fn placement_report_renders() {
+        let r = run(true).unwrap();
+        assert!(r.contains("round-robin"));
+        assert!(r.contains("load-aware"));
+        assert!(r.contains("replicate"));
+        assert!(r.contains("Migration budget"));
+    }
+}

@@ -16,6 +16,11 @@ use crate::config::{ModelConfig, ParallelConfig};
 use crate::device::hbm::RegionKind;
 use crate::device::ipc::ProcId;
 use crate::device::{Cluster, DeviceId, RegionId};
+use crate::engine::moe::Routing;
+use crate::placement::{
+    solve_layer, ExpertLoadStats, LayerPlacementInput, PlacementConfig,
+    PlacementMode,
+};
 
 use super::plan::{PlanOp, ScalePlan};
 use super::primitives::{disk_copy, p2p_copy, zero_copy};
@@ -88,6 +93,8 @@ pub struct HmmControl {
     pub cluster: Rc<RefCell<Cluster>>,
     pub model: ModelConfig,
     pub opts: HmmOptions,
+    /// Expert-placement policy (load-aware solver, migration budget).
+    pub placement: PlacementConfig,
     pub store: TensorStore,
     workers: BTreeMap<DeviceId, Worker>,
     loader: Option<PayloadLoader>,
@@ -103,6 +110,8 @@ pub struct HmmControl {
     private_regions: HashMap<ProcId, Vec<(DeviceId, RegionId)>>,
     /// Orphaned expert pages freed at switchover.
     deferred_frees: Vec<(DeviceId, RegionId)>,
+    /// EWMA expert popularity, fed via [`Self::record_routing`].
+    load_stats: Option<ExpertLoadStats>,
     kv_bytes_per_device: u64,
     next_proc: ProcId,
 }
@@ -117,6 +126,7 @@ impl HmmControl {
             cluster,
             model,
             opts,
+            placement: PlacementConfig::default(),
             store: TensorStore::new(),
             workers: BTreeMap::new(),
             loader: None,
@@ -125,6 +135,7 @@ impl HmmControl {
             attachments: HashMap::new(),
             private_regions: HashMap::new(),
             deferred_frees: Vec::new(),
+            load_stats: None,
             kv_bytes_per_device: 0,
             next_proc: 1,
         }
@@ -285,10 +296,105 @@ impl HmmControl {
         owner
     }
 
+    /// ---- load-aware placement ---------------------------------------------
+
+    /// Fold one step's routing decision for `layer` into the expert
+    /// popularity stats (created lazily from the model dimensions).
+    pub fn record_routing(&mut self, layer: usize, routing: &Routing) {
+        let (n_layers, n_experts, alpha) = (
+            self.model.n_layers as usize,
+            self.model.n_experts as usize,
+            self.placement.ewma_alpha,
+        );
+        let stats = self.load_stats.get_or_insert_with(|| {
+            ExpertLoadStats::new(n_layers, n_experts, alpha)
+        });
+        stats.observe(layer, routing);
+    }
+
+    pub fn load_stats(&self) -> Option<&ExpertLoadStats> {
+        self.load_stats.as_ref()
+    }
+
+    /// Current owner map of `layer` (`[expert] -> device`).
+    pub fn expert_owners(&self, layer: usize) -> Option<&[DeviceId]> {
+        self.expert_owner.get(layer).map(|v| v.as_slice())
+    }
+
+    /// Predicted max/mean per-device expert token load of the current
+    /// placement, aggregated over all layers (1.0 when no stats or no
+    /// layout — balanced as far as anyone knows).
+    pub fn placement_imbalance(&self) -> f64 {
+        let (Some(stats), Some((parallel, _))) =
+            (&self.load_stats, &self.layout)
+        else {
+            return 1.0;
+        };
+        let mut dload: BTreeMap<DeviceId, f64> =
+            parallel.devices.iter().map(|&d| (d, 0.0)).collect();
+        for (layer, owners) in self.expert_owner.iter().enumerate() {
+            let load = stats.predicted(layer);
+            for (e, &dev) in owners.iter().enumerate() {
+                if let Some(v) = dload.get_mut(&dev) {
+                    *v += load[e];
+                }
+            }
+        }
+        let loads: Vec<f64> = dload.into_values().collect();
+        crate::placement::imbalance(&loads)
+    }
+
+    /// Owner map for one layer of the target configuration: load-aware
+    /// (solver) when enabled and the layer has observations, else
+    /// count-balanced minimal movement. Returns the owners and the
+    /// discretionary migration bytes consumed from `budget_bytes`.
+    fn plan_layer_owners(
+        &self,
+        layer: usize,
+        to: &ParallelConfig,
+        budget_bytes: u64,
+    ) -> (Vec<DeviceId>, u64) {
+        if self.placement.mode == PlacementMode::LoadAware {
+            if let Some(stats) =
+                self.load_stats.as_ref().filter(|s| s.steps(layer) > 0)
+            {
+                let n = self.model.n_experts as usize;
+                let capacity = n.div_ceil(to.devices.len())
+                    + self.placement.capacity_slack;
+                let out = solve_layer(&LayerPlacementInput {
+                    devices: &to.devices,
+                    current: &self.expert_owner[layer],
+                    load: stats.predicted(layer),
+                    bytes_per_expert: self.model.expert_bytes(),
+                    capacity,
+                    budget_bytes,
+                    uniform_prior: self.placement.uniform_prior,
+                });
+                return (out.owner, out.discretionary_bytes);
+            }
+        }
+        (Self::rebalance_experts(&self.expert_owner[layer], to), 0)
+    }
+
     /// ---- scaling ----------------------------------------------------------
+
+    /// Redistribution-only plan: same configuration, new expert placement.
+    /// Triggered when popularity skew has degraded token balance rather
+    /// than by a capacity change; under the default
+    /// [`PlacementMode::MinMove`] it plans zero migrations.
+    pub fn plan_rebalance(&self) -> Result<ScalePlan> {
+        let to = self
+            .current_parallel()
+            .context("HMM not initialised (call load_initial)")?
+            .clone();
+        self.plan_scale(&to)
+    }
 
     /// Compute the minimal-cost redistribution plan from the current
     /// configuration to `to` (§5.2 "HMM Reconfigures Memory Layout").
+    /// Expert owners come from the load-aware solver when
+    /// [`PlacementMode::LoadAware`] is active and routing stats exist;
+    /// otherwise from count-balanced minimal movement.
     pub fn plan_scale(&self, to: &ParallelConfig) -> Result<ScalePlan> {
         let (from, from_layout) = self
             .layout
@@ -366,10 +472,15 @@ impl HmmControl {
             }
         }
 
-        // Experts: minimal-movement rebalance; migrate only owner changes.
-        for layer in 0..self.model.n_layers as usize {
-            let new_owners =
-                Self::rebalance_experts(&self.expert_owner[layer], to);
+        // Experts: migrate only owner changes. The migration-byte budget
+        // is split evenly across layers, leftovers carrying forward.
+        let n_layers = self.model.n_layers as usize;
+        let mut budget = self.placement.migration_budget_bytes;
+        for layer in 0..n_layers {
+            let layer_budget = budget / (n_layers - layer) as u64;
+            let (new_owners, used) =
+                self.plan_layer_owners(layer, to, layer_budget);
+            budget = budget.saturating_sub(used);
             for e in 0..self.model.n_experts as usize {
                 let old_owner = self.expert_owner[layer][e];
                 let new_owner = new_owners[e];
@@ -939,6 +1050,125 @@ mod tests {
         // Detach releases the references without freeing HMM-owned state.
         hmm.detach_instance(proc).unwrap();
         assert_eq!(cluster.borrow().used_over(&[0, 1, 2, 3]), used);
+    }
+
+    /// Feed skewed routing stats: each expert in `hots` takes 12 tokens
+    /// per step, every even expert takes 1, identically for every layer.
+    fn feed_skewed(hmm: &mut HmmControl, hots: &[usize], steps: usize) {
+        let n = hmm.model.n_experts as usize;
+        let mut tokens_per_expert = vec![Vec::new(); n];
+        for &hot in hots {
+            tokens_per_expert[hot] = (0..12).collect();
+        }
+        for (e, toks) in tokens_per_expert.iter_mut().enumerate() {
+            if !hots.contains(&e) && e % 2 == 0 {
+                toks.push(0);
+            }
+        }
+        let routing = crate::engine::moe::Routing {
+            n_tokens: 48,
+            n_experts: n,
+            tokens_per_expert,
+        };
+        for _ in 0..steps {
+            for layer in 0..hmm.model.n_layers as usize {
+                hmm.record_routing(layer, &routing);
+            }
+        }
+    }
+
+    #[test]
+    fn load_aware_rebalance_spreads_hot_experts() {
+        let (_c, mut hmm) = setup(4);
+        hmm.placement = crate::placement::PlacementConfig::load_aware();
+        hmm.load_initial(&par(2, 2, 0..4), KV).unwrap();
+        // Four hot experts that all live on EP rank 1 under the boot
+        // placement (e % 4 == 1): one device carries 48 of 80 tokens.
+        feed_skewed(&mut hmm, &[5, 9, 13, 17], 10);
+        assert!(hmm.placement_imbalance() > 1.5, "{}", hmm.placement_imbalance());
+        let plan = hmm.plan_rebalance().unwrap();
+        assert!(plan.migrated_expert_count() > 0, "skew must trigger moves");
+        assert!(plan.migrations_have_matching_evictions());
+        let to = hmm.current_parallel().unwrap().clone();
+        hmm.execute_plan(&plan, &to).unwrap();
+        hmm.apply_deferred_frees().unwrap();
+        // Hot experts spread out (one-ish per device): predicted imbalance
+        // collapses toward balanced.
+        let after = hmm.placement_imbalance();
+        assert!(after < 1.5, "imbalance after rebalance: {after}");
+        // Still a partition per layer.
+        let total: usize = (0..4)
+            .map(|d| hmm.worker(d).unwrap().vpages.bound_count())
+            .sum();
+        assert_eq!(total, (27 * 64) as usize);
+    }
+
+    #[test]
+    fn min_move_rebalance_plans_nothing() {
+        let (_c, mut hmm) = setup(4);
+        hmm.load_initial(&par(2, 2, 0..4), KV).unwrap();
+        feed_skewed(&mut hmm, &[5, 9, 13, 17], 10);
+        // Default MinMove mode: a redistribution-only plan is a no-op.
+        let plan = hmm.plan_rebalance().unwrap();
+        assert_eq!(plan.migrated_expert_count(), 0);
+    }
+
+    #[test]
+    fn migration_budget_caps_load_aware_plans() {
+        let (_c, mut hmm) = setup(4);
+        hmm.placement = crate::placement::PlacementConfig::load_aware();
+        // Budget for ~2 experts per layer.
+        let per_layer = 2 * hmm.model.expert_bytes();
+        hmm.placement.migration_budget_bytes =
+            per_layer * hmm.model.n_layers;
+        hmm.load_initial(&par(2, 2, 0..4), KV).unwrap();
+        feed_skewed(&mut hmm, &[5, 9, 13, 17], 10);
+        let plan = hmm.plan_rebalance().unwrap();
+        let moved_bytes =
+            plan.migrated_expert_count() as u64 * hmm.model.expert_bytes();
+        assert!(
+            moved_bytes <= hmm.placement.migration_budget_bytes,
+            "{moved_bytes} > budget"
+        );
+        assert!(plan.migrated_expert_count() > 0, "budget allows some moves");
+    }
+
+    #[test]
+    fn load_aware_scale_up_stays_a_partition() {
+        let (_c, mut hmm) = setup(6);
+        hmm.placement = crate::placement::PlacementConfig::load_aware();
+        hmm.load_initial(&par(2, 2, 0..4), KV).unwrap();
+        feed_skewed(&mut hmm, &[9], 10);
+        let to = par(3, 2, 0..6);
+        let plan = hmm.plan_scale(&to).unwrap();
+        assert!(plan.migrations_have_matching_evictions());
+        hmm.execute_plan(&plan, &to).unwrap();
+        hmm.apply_deferred_frees().unwrap();
+        for layer in [0usize, 26] {
+            let mut seen = vec![0u32; 64];
+            for d in 0..6 {
+                for e in hmm.worker(d).unwrap().vpages.experts(layer) {
+                    seen[e] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "layer {layer}: {seen:?}");
+        }
+        // New devices actually received experts (the uniform prior spreads
+        // cold experts even under skew).
+        assert!(hmm.worker(4).unwrap().vpages.bound_count() > 0);
+        assert!(hmm.worker(5).unwrap().vpages.bound_count() > 0);
+    }
+
+    #[test]
+    fn generated_plans_pair_migrations_with_evictions() {
+        let (_c, mut hmm) = setup(6);
+        hmm.load_initial(&par(3, 2, 0..6), KV).unwrap();
+        let down = hmm.plan_scale(&par(2, 2, 0..4)).unwrap();
+        assert!(down.migrations_have_matching_evictions());
+        hmm.execute_plan(&down, &par(2, 2, 0..4)).unwrap();
+        hmm.apply_deferred_frees().unwrap();
+        let up = hmm.plan_scale(&par(3, 2, 0..6)).unwrap();
+        assert!(up.migrations_have_matching_evictions());
     }
 
     #[test]

@@ -105,6 +105,25 @@ impl ScalePlan {
             .collect()
     }
 
+    /// Plan invariant: every [`PlanOp::MigrateExpert`] has a matching
+    /// [`PlanOp::EvictExpert`] for the same `(layer, expert)` on the old
+    /// owner. A migration without its eviction would leave the expert
+    /// double-bound (and its old pages never freed at switchover).
+    pub fn migrations_have_matching_evictions(&self) -> bool {
+        self.ops.iter().all(|op| match op {
+            PlanOp::MigrateExpert {
+                layer, expert, src, ..
+            } => self.ops.iter().any(|o| {
+                matches!(
+                    o,
+                    PlanOp::EvictExpert { layer: l, expert: e, dev }
+                        if l == layer && e == expert && dev == src
+                )
+            }),
+            _ => true,
+        })
+    }
+
     /// Reuse fraction: zero-copied bytes / (zero-copied + moved) — the
     /// plan-quality metric the paper's design maximises.
     pub fn reuse_fraction(&self) -> f64 {
@@ -170,5 +189,76 @@ mod tests {
     #[test]
     fn empty_plan_reuses_everything() {
         assert_eq!(ScalePlan::default().reuse_fraction(), 1.0);
+    }
+
+    #[test]
+    fn migration_eviction_pairing_invariant() {
+        // The hand-built plan is well-formed.
+        assert!(plan().migrations_have_matching_evictions());
+        // Dropping the eviction breaks it.
+        let mut p = plan();
+        p.ops.retain(|op| !matches!(op, PlanOp::EvictExpert { .. }));
+        assert!(!p.migrations_have_matching_evictions());
+        // An eviction on the wrong device does not count.
+        let mut p = plan();
+        for op in &mut p.ops {
+            if let PlanOp::EvictExpert { dev, .. } = op {
+                *dev = 3; // migration src is 1
+            }
+        }
+        assert!(!p.migrations_have_matching_evictions());
+        // Evictions without migrations are fine (departing devices).
+        let p = ScalePlan {
+            from_label: "a".into(),
+            to_label: "b".into(),
+            ops: vec![PlanOp::EvictExpert {
+                layer: 0,
+                expert: 1,
+                dev: 2,
+            }],
+        };
+        assert!(p.migrations_have_matching_evictions());
+    }
+
+    #[test]
+    fn accounting_on_a_multi_expert_plan() {
+        // Hand-built plan with several migrations: byte totals and counts
+        // must track exactly.
+        let e = |layer: usize, expert: usize, src, dst| {
+            [
+                PlanOp::MigrateExpert {
+                    layer,
+                    expert,
+                    src,
+                    dst,
+                    bytes: 40,
+                },
+                PlanOp::EvictExpert { layer, expert, dev: src },
+            ]
+        };
+        let mut ops = vec![PlanOp::ZeroCopyReuse {
+            dev: 0,
+            tag: "embed".into(),
+            bytes: 1000,
+        }];
+        ops.extend(e(0, 1, 0, 2));
+        ops.extend(e(0, 5, 1, 2));
+        ops.extend(e(1, 1, 0, 3));
+        let p = ScalePlan {
+            from_label: "x".into(),
+            to_label: "y".into(),
+            ops,
+        };
+        assert_eq!(p.migrated_expert_count(), 3);
+        assert_eq!(p.evicted_expert_count(), 3);
+        assert_eq!(p.p2p_bytes(), 120);
+        assert_eq!(p.reused_bytes(), 1000);
+        assert_eq!(
+            p.transfers(),
+            vec![(0, 2, 40), (1, 2, 40), (0, 3, 40)]
+        );
+        assert!(p.migrations_have_matching_evictions());
+        let rf = p.reuse_fraction();
+        assert!((rf - 1000.0 / 1120.0).abs() < 1e-12);
     }
 }

@@ -26,7 +26,9 @@ impl Default for ImmOptions {
     fn default() -> Self {
         ImmOptions {
             pre_init: true,
-            lru_cap: 4,
+            // One slot per anticipated configuration (ElasticMoE prepares
+            // standbys for deltas -1/+1/+2/+4 and the current shape).
+            lru_cap: 5,
         }
     }
 }

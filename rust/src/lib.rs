@@ -45,6 +45,7 @@ pub mod experiments;
 pub mod hmm;
 pub mod imm;
 pub mod metrics;
+pub mod placement;
 pub mod runtime;
 pub mod scaling;
 pub mod sim;

@@ -1,0 +1,104 @@
+//! Load-aware expert placement & migration planning (beyond the paper).
+//!
+//! ElasticMoE's §4.6/§5.2 expert redistribution balances experts by
+//! *count* (round-robin `e % ep` at boot, minimal-movement count balance
+//! on scaling). Real MoE traffic is heavily skewed: a small set of hot
+//! experts receives most tokens (Huang et al., *Towards MoE Deployment*,
+//! arXiv:2303.06182), so count-balanced placement leaves the *token* load
+//! imbalanced and every decode step waits on the hottest EP rank.
+//!
+//! This subsystem closes that gap in three parts:
+//!
+//! 1. **Popularity tracking** — [`ExpertLoadStats`]: an EWMA of
+//!    tokens-per-step per layer × expert, fed from the engine's
+//!    [`crate::engine::moe::Routing`] via
+//!    [`crate::hmm::HmmControl::record_routing`].
+//! 2. **Placement solver** — [`solver::solve_layer`]: minimises the max
+//!    per-device token load under a per-device capacity and a
+//!    migration-byte budget, keeping experts on their current owner when
+//!    ties allow (zero-copy reuse), with optional hot-expert replication
+//!    ([`solver::replicate_hot`]).
+//! 3. **Plan integration** — [`crate::hmm::HmmControl::plan_scale`]
+//!    consumes solver output when [`PlacementMode::LoadAware`] is active;
+//!    [`crate::scaling::ScalingMethod::rebalance`] runs a
+//!    *redistribution-only* scaling event (same devices, new placement)
+//!    when [`crate::coordinator::FleetPolicy`] sees the imbalance exceed
+//!    its `rebalance_threshold` (the single threshold authority); and
+//!    [`crate::engine::CostModel`]'s `ep_imbalance` term makes the
+//!    resulting balance visible in simulated throughput.
+//!
+//! `repro exp placement` compares round-robin, load-aware, and
+//! load-aware + replication on a Zipf-skewed trace across an EP
+//! reconfiguration. See `docs/architecture/03-expert-placement.md`.
+
+pub mod solver;
+pub mod stats;
+
+pub use solver::{
+    device_loads, imbalance, replicate_hot, solve_layer, LayerPlacement,
+    LayerPlacementInput,
+};
+pub use stats::ExpertLoadStats;
+
+/// How the HMM chooses expert owners when planning a scaling event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementMode {
+    /// Count-balanced minimal-movement placement (the paper's default).
+    MinMove,
+    /// Load-aware placement from EWMA popularity stats; layers with no
+    /// observations fall back to [`PlacementMode::MinMove`].
+    LoadAware,
+}
+
+/// Placement policy knobs, held by [`crate::hmm::HmmControl`].
+#[derive(Debug, Clone, Copy)]
+pub struct PlacementConfig {
+    pub mode: PlacementMode,
+    /// Cap on *discretionary* expert-migration bytes per scaling event
+    /// (split evenly across layers, leftovers carrying forward). Forced
+    /// moves — experts whose owner leaves the device set — are exempt.
+    pub migration_budget_bytes: u64,
+    /// Extra expert slots per device above `ceil(E / devices)`, giving the
+    /// solver room to pack cold experts around hot ones.
+    pub capacity_slack: usize,
+    /// Prior tokens added to every expert's predicted load so cold experts
+    /// still spread across devices.
+    pub uniform_prior: f64,
+    /// EWMA weight of the newest routing observation.
+    pub ewma_alpha: f64,
+}
+
+impl Default for PlacementConfig {
+    fn default() -> Self {
+        PlacementConfig {
+            mode: PlacementMode::MinMove,
+            migration_budget_bytes: u64::MAX,
+            capacity_slack: 2,
+            uniform_prior: 0.25,
+            ewma_alpha: 0.2,
+        }
+    }
+}
+
+impl PlacementConfig {
+    /// Load-aware placement with the default knobs.
+    pub fn load_aware() -> Self {
+        PlacementConfig {
+            mode: PlacementMode::LoadAware,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_the_papers_placement() {
+        let c = PlacementConfig::default();
+        assert_eq!(c.mode, PlacementMode::MinMove);
+        assert_eq!(c.migration_budget_bytes, u64::MAX);
+        assert_eq!(PlacementConfig::load_aware().mode, PlacementMode::LoadAware);
+    }
+}

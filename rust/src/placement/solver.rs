@@ -1,0 +1,527 @@
+//! Load-aware expert placement solver.
+//!
+//! Given the current owner map, per-expert predicted token loads, and a
+//! target device set, produce an assignment minimising the **maximum
+//! per-device token load** subject to a per-device capacity and a
+//! migration-byte budget, with tie-breaking that keeps experts on their
+//! current owner (zero-copy reuse costs nothing; a migration costs
+//! `bytes_per_expert` over the fabric).
+//!
+//! Algorithm (per layer): keep-home → forced LPT → budgeted local search.
+//!
+//! 1. Every expert whose current owner survives in the target set stays
+//!    put (hottest first under the capacity cap) — the zero-copy-maximal
+//!    starting point, mirroring the minimal-movement placement of
+//!    [`crate::hmm::HmmControl`].
+//! 2. Homeless experts (owner departed, or home full) are placed
+//!    longest-processing-time-first onto the least-loaded device.
+//! 3. Local search: repeatedly move one expert off the most-loaded device
+//!    when that strictly lowers the pairwise max load, preferring the
+//!    cheapest such move, until no improving move exists or the
+//!    discretionary-migration budget is exhausted. Each applied move
+//!    strictly reduces the sorted load vector, so the loop terminates.
+//!
+//! An optional post-pass ([`replicate_hot`]) grants the hottest experts
+//! extra owners; at serving time the router sends each token to the
+//! least-loaded replica ([`crate::engine::moe::Routing::tokens_per_device_replicated`]).
+
+use std::cmp::Ordering;
+use std::collections::BTreeMap;
+
+use crate::device::DeviceId;
+
+/// One layer's placement problem.
+#[derive(Debug, Clone)]
+pub struct LayerPlacementInput<'a> {
+    /// Target device set, in EP-rank order.
+    pub devices: &'a [DeviceId],
+    /// Current owner per expert (may name devices outside `devices`).
+    pub current: &'a [DeviceId],
+    /// Predicted tokens per step per expert.
+    pub load: &'a [f64],
+    pub bytes_per_expert: u64,
+    /// Maximum experts one device may own.
+    pub capacity: usize,
+    /// Cap on *discretionary* migration bytes — load-balancing moves the
+    /// solver chooses to make. Forced moves are exempt (they must happen
+    /// regardless of budget): the source device departed, or holds more
+    /// experts than `capacity` allows.
+    pub budget_bytes: u64,
+    /// Prior tokens added to every expert's load, so cold experts still
+    /// spread across devices instead of piling on one.
+    pub uniform_prior: f64,
+}
+
+/// One layer's solved placement.
+#[derive(Debug, Clone)]
+pub struct LayerPlacement {
+    /// New owner per expert; always a member of the input device set.
+    pub owner: Vec<DeviceId>,
+    /// Bytes moved by choice (load balancing) — counted against the budget.
+    pub discretionary_bytes: u64,
+    /// Bytes moved out of necessity: the source device left the
+    /// configuration or exceeded the capacity cap.
+    pub forced_bytes: u64,
+    /// Experts whose owner changed.
+    pub migrated: usize,
+    /// Predicted max/mean device load of the produced assignment.
+    pub imbalance: f64,
+}
+
+/// Solve one layer's placement. Panics if the devices cannot hold the
+/// experts (`capacity * devices < experts`).
+pub fn solve_layer(inp: &LayerPlacementInput) -> LayerPlacement {
+    let n = inp.current.len();
+    assert_eq!(inp.load.len(), n, "load/current length mismatch");
+    let d = inp.devices.len();
+    assert!(d > 0, "no target devices");
+    assert!(
+        inp.capacity * d >= n,
+        "capacity {} x {d} devices cannot hold {n} experts",
+        inp.capacity
+    );
+    let index: BTreeMap<DeviceId, usize> = inp
+        .devices
+        .iter()
+        .enumerate()
+        .map(|(i, &dev)| (dev, i))
+        .collect();
+    let w: Vec<f64> = inp.load.iter().map(|&l| l + inp.uniform_prior).collect();
+
+    // Experts by descending weight (stable by index for determinism).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| w[b].total_cmp(&w[a]).then(a.cmp(&b)));
+
+    let mut assign: Vec<usize> = vec![usize::MAX; n];
+    let mut count = vec![0usize; d];
+    let mut dload = vec![0.0f64; d];
+
+    // 1) Keep-home (hottest first under the capacity cap). Experts that
+    //    cannot stay — home departed, or home over the new capacity — are
+    //    forced movers: they relocate regardless of budget.
+    let mut homeless: Vec<usize> = Vec::new();
+    let mut forced = vec![false; n];
+    for &e in &order {
+        match index.get(&inp.current[e]) {
+            Some(&di) if count[di] < inp.capacity => {
+                assign[e] = di;
+                count[di] += 1;
+                dload[di] += w[e];
+            }
+            _ => {
+                forced[e] = true;
+                homeless.push(e);
+            }
+        }
+    }
+
+    // 2) Forced LPT: homeless experts to the least-loaded open device.
+    for &e in &homeless {
+        let di = (0..d)
+            .filter(|&i| count[i] < inp.capacity)
+            .min_by(|&a, &b| dload[a].total_cmp(&dload[b]).then(a.cmp(&b)))
+            .expect("capacity * devices >= experts");
+        assign[e] = di;
+        count[di] += 1;
+        dload[di] += w[e];
+    }
+
+    // Budget cost of holding expert `e` on device slot `di`: forced
+    // movers are budget-exempt wherever they land.
+    let bytes = inp.bytes_per_expert;
+    let disc_of = |e: usize, di: usize| -> u64 {
+        if forced[e] {
+            return 0;
+        }
+        match index.get(&inp.current[e]) {
+            Some(&home) if home == di => 0,
+            _ => bytes,
+        }
+    };
+    let mut disc: u64 = (0..n).map(|e| disc_of(e, assign[e])).sum();
+
+    // 3) Budgeted local search off the most-loaded device.
+    for _ in 0..(8 * n.max(1)) {
+        let src = (0..d)
+            .max_by(|&a, &b| dload[a].total_cmp(&dload[b]).then(b.cmp(&a)))
+            .unwrap();
+        // Best single move: minimise the pairwise max, then the budget
+        // cost, then indices (determinism).
+        let mut best: Option<(f64, u64, usize, usize)> = None;
+        for e in 0..n {
+            if assign[e] != src || w[e] <= 0.0 {
+                continue;
+            }
+            for dst in 0..d {
+                if dst == src || count[dst] >= inp.capacity {
+                    continue;
+                }
+                let new_dst = dload[dst] + w[e];
+                if new_dst >= dload[src] {
+                    continue; // must strictly reduce the pair max
+                }
+                let pair_max = (dload[src] - w[e]).max(new_dst);
+                let new_disc = disc - disc_of(e, src) + disc_of(e, dst);
+                if new_disc > inp.budget_bytes && new_disc > disc {
+                    continue; // over budget and not an improvement
+                }
+                let better = match best {
+                    None => true,
+                    Some((bm, bd, be, bdst)) => {
+                        match pair_max.total_cmp(&bm) {
+                            Ordering::Less => true,
+                            Ordering::Greater => false,
+                            Ordering::Equal => {
+                                (new_disc, e, dst) < (bd, be, bdst)
+                            }
+                        }
+                    }
+                };
+                if better {
+                    best = Some((pair_max, new_disc, e, dst));
+                }
+            }
+        }
+        let Some((_, new_disc, e, dst)) = best else { break };
+        dload[src] -= w[e];
+        count[src] -= 1;
+        dload[dst] += w[e];
+        count[dst] += 1;
+        assign[e] = dst;
+        disc = new_disc;
+    }
+
+    let owner: Vec<DeviceId> =
+        assign.iter().map(|&di| inp.devices[di]).collect();
+    let mut forced_bytes = 0u64;
+    let mut migrated = 0usize;
+    for e in 0..n {
+        if owner[e] != inp.current[e] {
+            migrated += 1;
+            if forced[e] {
+                forced_bytes += bytes;
+            }
+        }
+    }
+    LayerPlacement {
+        owner,
+        discretionary_bytes: disc,
+        forced_bytes,
+        migrated,
+        imbalance: imbalance(&dload),
+    }
+}
+
+/// Hot-expert replication: grant up to `n_replicas` extra owners to the
+/// hottest experts, each replica on the least-loaded device not already
+/// owning the expert, while it strictly reduces the predicted max
+/// per-device load. An expert's load is assumed to split evenly across its
+/// owners (the router picks the least-loaded replica at serving time).
+/// Returns the owner set per expert (primary first).
+pub fn replicate_hot(
+    owner: &[DeviceId],
+    load: &[f64],
+    devices: &[DeviceId],
+    n_replicas: usize,
+    capacity: usize,
+) -> Vec<Vec<DeviceId>> {
+    let d = devices.len();
+    let index: BTreeMap<DeviceId, usize> = devices
+        .iter()
+        .enumerate()
+        .map(|(i, &dev)| (dev, i))
+        .collect();
+    let mut owners: Vec<Vec<usize>> = owner
+        .iter()
+        .map(|dev| vec![*index.get(dev).expect("owner outside device set")])
+        .collect();
+    let mut count = vec![0usize; d];
+    for os in &owners {
+        count[os[0]] += 1;
+    }
+
+    let loads_of = |owners: &[Vec<usize>]| -> Vec<f64> {
+        let mut dl = vec![0.0f64; d];
+        for (e, os) in owners.iter().enumerate() {
+            let share = load[e] / os.len() as f64;
+            for &di in os {
+                dl[di] += share;
+            }
+        }
+        dl
+    };
+
+    for _ in 0..n_replicas {
+        let dl = loads_of(&owners);
+        let cur_max = dl.iter().cloned().fold(0.0, f64::max);
+        // Hottest per-owner share on the most-loaded device.
+        let src = (0..d)
+            .max_by(|&a, &b| dl[a].total_cmp(&dl[b]).then(b.cmp(&a)))
+            .unwrap();
+        let candidate = (0..owner.len())
+            .filter(|&e| owners[e].contains(&src))
+            .max_by(|&a, &b| {
+                let sa = load[a] / owners[a].len() as f64;
+                let sb = load[b] / owners[b].len() as f64;
+                sa.total_cmp(&sb).then(b.cmp(&a))
+            });
+        let Some(e) = candidate else { break };
+        let dst = (0..d)
+            .filter(|&i| !owners[e].contains(&i) && count[i] < capacity)
+            .min_by(|&a, &b| dl[a].total_cmp(&dl[b]).then(a.cmp(&b)));
+        let Some(dst) = dst else { break };
+        // Apply only if the predicted max strictly drops.
+        let mut trial = owners.clone();
+        trial[e].push(dst);
+        let new_max = loads_of(&trial).iter().cloned().fold(0.0, f64::max);
+        if new_max >= cur_max {
+            break;
+        }
+        owners = trial;
+        count[dst] += 1;
+    }
+
+    owners
+        .into_iter()
+        .map(|os| os.into_iter().map(|di| devices[di]).collect())
+        .collect()
+}
+
+/// Per-device predicted load of a (possibly replicated) assignment,
+/// aligned with `devices`. An expert's load splits evenly across its
+/// owners; owners outside `devices` are ignored.
+pub fn device_loads(
+    owners: &[Vec<DeviceId>],
+    load: &[f64],
+    devices: &[DeviceId],
+) -> Vec<f64> {
+    let index: BTreeMap<DeviceId, usize> = devices
+        .iter()
+        .enumerate()
+        .map(|(i, &dev)| (dev, i))
+        .collect();
+    let mut dl = vec![0.0f64; devices.len()];
+    for (e, os) in owners.iter().enumerate() {
+        let present: Vec<usize> = os
+            .iter()
+            .filter_map(|dev| index.get(dev).copied())
+            .collect();
+        if present.is_empty() {
+            continue;
+        }
+        let share = load[e] / present.len() as f64;
+        for di in present {
+            dl[di] += share;
+        }
+    }
+    dl
+}
+
+/// Max/mean of a load vector (1.0 when empty or all-zero).
+pub fn imbalance(loads: &[f64]) -> f64 {
+    let total: f64 = loads.iter().sum();
+    if loads.is_empty() || total <= 0.0 {
+        return 1.0;
+    }
+    let mean = total / loads.len() as f64;
+    let max = loads.iter().cloned().fold(0.0, f64::max);
+    (max / mean).max(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn single(owner: &[DeviceId]) -> Vec<Vec<DeviceId>> {
+        owner.iter().map(|&d| vec![d]).collect()
+    }
+
+    fn input<'a>(
+        devices: &'a [DeviceId],
+        current: &'a [DeviceId],
+        load: &'a [f64],
+    ) -> LayerPlacementInput<'a> {
+        LayerPlacementInput {
+            devices,
+            current,
+            load,
+            bytes_per_expert: 100,
+            capacity: current.len(), // unconstrained by default
+            budget_bytes: u64::MAX,
+            uniform_prior: 0.0,
+        }
+    }
+
+    #[test]
+    fn balanced_load_stays_home() {
+        let devices = [0, 1];
+        let current = [0, 0, 1, 1];
+        let load = [5.0, 5.0, 5.0, 5.0];
+        let out = solve_layer(&input(&devices, &current, &load));
+        assert_eq!(out.owner, current);
+        assert_eq!(out.migrated, 0);
+        assert_eq!(out.discretionary_bytes, 0);
+        assert!((out.imbalance - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skewed_load_is_rebalanced_to_the_optimum() {
+        let devices = [0, 1];
+        // Device 0 owns the hot expert plus two warm ones; device 1 is cold.
+        let current = [0, 0, 0, 1];
+        let load = [10.0, 4.0, 4.0, 1.0];
+        let out = solve_layer(&input(&devices, &current, &load));
+        // Optimal split is 10 vs 9 (hot expert alone or with the light
+        // one); the solver must reach it, moving exactly two experts.
+        let l0: f64 = (0..4)
+            .filter(|&e| out.owner[e] == 0)
+            .map(|e| load[e])
+            .sum();
+        let max = l0.max(19.0 - l0);
+        assert_eq!(max, 10.0, "{:?}", out.owner);
+        assert_eq!(out.migrated, 2);
+        assert_eq!(out.discretionary_bytes, 200);
+        let mean = 19.0 / 2.0;
+        assert!((out.imbalance - max / mean).abs() < 1e-12);
+    }
+
+    #[test]
+    fn departed_device_forces_moves_budget_exempt() {
+        let devices = [0, 1];
+        // Device 9 is leaving; its experts must move even at zero budget.
+        let current = [9, 9, 0, 1];
+        let load = [3.0, 3.0, 3.0, 3.0];
+        let mut inp = input(&devices, &current, &load);
+        inp.budget_bytes = 0;
+        let out = solve_layer(&inp);
+        assert!(out.owner.iter().all(|d| devices.contains(d)));
+        assert_eq!(out.forced_bytes, 200);
+        assert_eq!(out.discretionary_bytes, 0, "budget must hold");
+        // Forced placement is balanced: one homeless expert per device.
+        let c0 = out.owner.iter().filter(|&&d| d == 0).count();
+        assert_eq!(c0, 2, "{:?}", out.owner);
+    }
+
+    #[test]
+    fn zero_budget_freezes_discretionary_moves() {
+        let devices = [0, 1];
+        let current = [0, 0, 0, 1];
+        let load = [10.0, 4.0, 4.0, 1.0];
+        let mut inp = input(&devices, &current, &load);
+        inp.budget_bytes = 0;
+        let out = solve_layer(&inp);
+        assert_eq!(out.owner, current, "no budget, no moves");
+        assert_eq!(out.discretionary_bytes, 0);
+    }
+
+    #[test]
+    fn partial_budget_spends_on_the_best_move_only() {
+        let devices = [0, 1];
+        let current = [0, 0, 0, 1];
+        let load = [10.0, 4.0, 4.0, 1.0];
+        let mut inp = input(&devices, &current, &load);
+        inp.budget_bytes = 100; // one move only
+        let out = solve_layer(&inp);
+        assert_eq!(out.migrated, 1);
+        assert_eq!(out.discretionary_bytes, 100);
+        // The single best move is the hot expert: 8 vs 11 beats 14 vs 5.
+        let l0: f64 = (0..4)
+            .filter(|&e| out.owner[e] == 0)
+            .map(|e| load[e])
+            .sum();
+        assert_eq!(l0.max(19.0 - l0), 11.0, "{:?}", out.owner);
+    }
+
+    #[test]
+    fn capacity_evictions_are_forced_not_budget_blocked() {
+        let devices = [0, 1];
+        let current = [0, 0, 0, 0];
+        let load = [4.0, 3.0, 2.0, 1.0];
+        let mut inp = input(&devices, &current, &load);
+        inp.capacity = 2;
+        inp.budget_bytes = 0;
+        let out = solve_layer(&inp);
+        // Two experts cannot stay on device 0: they relocate despite the
+        // zero budget and are accounted as forced, not discretionary.
+        let c0 = out.owner.iter().filter(|&&d| d == 0).count();
+        assert_eq!(c0, 2, "{:?}", out.owner);
+        assert_eq!(out.discretionary_bytes, 0);
+        assert_eq!(out.forced_bytes, 200);
+        assert_eq!(out.migrated, 2);
+    }
+
+    #[test]
+    fn capacity_cap_is_respected() {
+        let devices = [0, 1, 2];
+        let current = [0, 0, 0, 0, 0, 0];
+        let load = [1.0; 6];
+        let mut inp = input(&devices, &current, &load);
+        inp.capacity = 2;
+        inp.uniform_prior = 0.1;
+        let out = solve_layer(&inp);
+        for d in devices {
+            let c = out.owner.iter().filter(|&&o| o == d).count();
+            assert!(c <= 2, "device {d} over capacity: {:?}", out.owner);
+        }
+    }
+
+    #[test]
+    fn uniform_prior_spreads_cold_experts_to_new_devices() {
+        // All-zero loads (cold stats): the prior still drives count balance,
+        // so a scale-up populates the new device.
+        let devices = [0, 1];
+        let current = [0, 0, 0, 0];
+        let load = [0.0; 4];
+        let mut inp = input(&devices, &current, &load);
+        inp.uniform_prior = 1.0;
+        let out = solve_layer(&inp);
+        let c1 = out.owner.iter().filter(|&&o| o == 1).count();
+        assert_eq!(c1, 2, "{:?}", out.owner);
+    }
+
+    #[test]
+    fn solver_is_deterministic() {
+        let devices = [3, 1, 4];
+        let current = [1, 1, 1, 3, 3, 4, 9, 9];
+        let load = [8.0, 1.0, 2.5, 7.0, 0.5, 3.0, 6.0, 0.25];
+        let a = solve_layer(&input(&devices, &current, &load));
+        let b = solve_layer(&input(&devices, &current, &load));
+        assert_eq!(a.owner, b.owner);
+        assert_eq!(a.discretionary_bytes, b.discretionary_bytes);
+    }
+
+    #[test]
+    fn replication_splits_the_hottest_expert() {
+        let devices = [0, 1, 2];
+        let owner = [0, 1, 2];
+        let load = [12.0, 2.0, 1.0];
+        let owners = replicate_hot(&owner, &load, &devices, 2, 3);
+        assert!(owners[0].len() > 1, "hot expert must gain a replica");
+        let dl = device_loads(&owners, &load, &devices);
+        let max0 =
+            device_loads(&single(&owner), &load, &devices)
+                .iter()
+                .cloned()
+                .fold(0.0, f64::max);
+        let max1 = dl.iter().cloned().fold(0.0, f64::max);
+        assert!(max1 < max0, "replication must cut the peak: {max0} -> {max1}");
+    }
+
+    #[test]
+    fn replication_stops_when_it_cannot_help() {
+        let devices = [0, 1];
+        let owner = [0, 1];
+        let load = [1.0, 1.0];
+        let owners = replicate_hot(&owner, &load, &devices, 4, 2);
+        // Balanced already: replicating can't reduce the max.
+        assert!(owners.iter().all(|os| os.len() == 1), "{owners:?}");
+    }
+
+    #[test]
+    fn imbalance_helper_edge_cases() {
+        assert_eq!(imbalance(&[]), 1.0);
+        assert_eq!(imbalance(&[0.0, 0.0]), 1.0);
+        assert_eq!(imbalance(&[2.0, 2.0]), 1.0);
+        assert!((imbalance(&[3.0, 1.0]) - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,174 @@
+//! Expert-popularity tracking: EWMA token loads per layer × expert, fed
+//! from the engine's per-step routing decisions
+//! ([`crate::engine::moe::Routing`]).
+//!
+//! Production MoE traffic routes most tokens to a small set of hot experts
+//! (Huang et al., *Towards MoE Deployment*, arXiv:2303.06182), and which
+//! experts are hot drifts with the workload. The stats here are the
+//! placement solver's demand forecast: an exponentially weighted moving
+//! average of tokens-per-step per expert, cheap to update on the hot path
+//! (one multiply-add per expert per layer per step) and robust to routing
+//! noise.
+
+use crate::engine::moe::Routing;
+
+/// EWMA token-load tracker, `[layer][expert] -> predicted tokens/step`.
+#[derive(Debug, Clone)]
+pub struct ExpertLoadStats {
+    n_layers: usize,
+    n_experts: usize,
+    /// EWMA weight of the newest observation (`0 < alpha <= 1`).
+    pub alpha: f64,
+    ewma: Vec<Vec<f64>>,
+    steps: Vec<u64>,
+}
+
+impl ExpertLoadStats {
+    pub fn new(n_layers: usize, n_experts: usize, alpha: f64) -> Self {
+        assert!(
+            alpha > 0.0 && alpha <= 1.0,
+            "EWMA alpha must be in (0, 1], got {alpha}"
+        );
+        ExpertLoadStats {
+            n_layers,
+            n_experts,
+            alpha,
+            ewma: vec![vec![0.0; n_experts]; n_layers],
+            steps: vec![0; n_layers],
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    /// Fold one step's routing decision for `layer` into the EWMA.
+    pub fn observe(&mut self, layer: usize, routing: &Routing) {
+        assert_eq!(
+            routing.n_experts, self.n_experts,
+            "routing expert count mismatch"
+        );
+        let counts: Vec<f64> = routing
+            .tokens_per_expert
+            .iter()
+            .map(|t| t.len() as f64)
+            .collect();
+        self.observe_counts(layer, &counts);
+    }
+
+    /// Fold raw per-expert token counts for one step of `layer`. The first
+    /// observation seeds the EWMA directly (no zero-bias warm-up).
+    pub fn observe_counts(&mut self, layer: usize, counts: &[f64]) {
+        assert_eq!(counts.len(), self.n_experts, "expert count mismatch");
+        let row = &mut self.ewma[layer];
+        if self.steps[layer] == 0 {
+            row.copy_from_slice(counts);
+        } else {
+            for (v, &c) in row.iter_mut().zip(counts) {
+                *v = (1.0 - self.alpha) * *v + self.alpha * c;
+            }
+        }
+        self.steps[layer] += 1;
+    }
+
+    /// Predicted tokens-per-step per expert for `layer`.
+    pub fn predicted(&self, layer: usize) -> &[f64] {
+        &self.ewma[layer]
+    }
+
+    /// Observations folded in for `layer`.
+    pub fn steps(&self, layer: usize) -> u64 {
+        self.steps[layer]
+    }
+
+    /// Whether every layer has at least `min_steps` observations.
+    pub fn warm(&self, min_steps: u64) -> bool {
+        self.steps.iter().all(|&s| s >= min_steps)
+    }
+
+    /// Multiply every EWMA entry by `factor` (idle decay between windows,
+    /// so stale popularity fades when traffic stops).
+    pub fn decay(&mut self, factor: f64) {
+        assert!((0.0..=1.0).contains(&factor), "decay factor in [0, 1]");
+        for row in &mut self.ewma {
+            for v in row.iter_mut() {
+                *v *= factor;
+            }
+        }
+    }
+
+    /// Copy of the full `[layer][expert]` load matrix.
+    pub fn snapshot(&self) -> Vec<Vec<f64>> {
+        self.ewma.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn routing(counts: &[usize]) -> Routing {
+        let n_tokens = counts.iter().sum();
+        Routing {
+            n_tokens,
+            n_experts: counts.len(),
+            tokens_per_expert: counts
+                .iter()
+                .map(|&c| (0..c).collect())
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn first_observation_seeds_directly() {
+        let mut s = ExpertLoadStats::new(2, 3, 0.5);
+        s.observe(0, &routing(&[4, 0, 2]));
+        assert_eq!(s.predicted(0), &[4.0, 0.0, 2.0]);
+        assert_eq!(s.predicted(1), &[0.0, 0.0, 0.0]);
+        assert_eq!(s.steps(0), 1);
+        assert_eq!(s.steps(1), 0);
+        assert!(!s.warm(1));
+    }
+
+    #[test]
+    fn ewma_converges_toward_steady_counts() {
+        let mut s = ExpertLoadStats::new(1, 2, 0.2);
+        for _ in 0..100 {
+            s.observe_counts(0, &[10.0, 2.0]);
+        }
+        let p = s.predicted(0);
+        assert!((p[0] - 10.0).abs() < 1e-6, "{p:?}");
+        assert!((p[1] - 2.0).abs() < 1e-6, "{p:?}");
+    }
+
+    #[test]
+    fn ewma_tracks_popularity_drift() {
+        let mut s = ExpertLoadStats::new(1, 2, 0.3);
+        for _ in 0..50 {
+            s.observe_counts(0, &[10.0, 0.0]);
+        }
+        for _ in 0..10 {
+            s.observe_counts(0, &[0.0, 10.0]);
+        }
+        let p = s.predicted(0);
+        assert!(p[1] > p[0], "drifted load must dominate: {p:?}");
+    }
+
+    #[test]
+    fn decay_fades_stale_popularity() {
+        let mut s = ExpertLoadStats::new(1, 2, 0.5);
+        s.observe_counts(0, &[8.0, 4.0]);
+        s.decay(0.5);
+        assert_eq!(s.predicted(0), &[4.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha")]
+    fn zero_alpha_rejected() {
+        ExpertLoadStats::new(1, 1, 0.0);
+    }
+}

@@ -40,7 +40,10 @@ impl ElasticMoE {
             active_proc: None,
             last_binding: None,
             // In units of the model's fixed TP (one DP replica per step).
-            anticipate_steps: vec![-1, 1, 2, 4],
+            // Delta 0 keeps a standby of the *current* shape warm so
+            // redistribution-only events (same devices, new placement)
+            // also skip pre-init.
+            anticipate_steps: vec![-1, 1, 2, 4, 0],
         }
     }
 
@@ -210,6 +213,38 @@ impl ScalingMethod for ElasticMoE {
     fn current(&self) -> Option<&ParallelConfig> {
         self.current.as_ref()
     }
+
+    /// Reported only when load-aware placement could act on it: under
+    /// MinMove a skewed measurement would make the fleet policy schedule
+    /// rebalances this method will always decline.
+    fn placement_imbalance(&self) -> f64 {
+        if self.hmm.placement.mode != crate::placement::PlacementMode::LoadAware
+        {
+            return 1.0;
+        }
+        self.hmm.placement_imbalance()
+    }
+
+    /// Redistribution-only event: re-run the scaling choreography toward
+    /// the *same* configuration, letting the load-aware solver pick new
+    /// expert owners. Zero-copy reuse covers everything except the
+    /// migrated experts, so the event costs expert P2P + remap + warmup —
+    /// no capacity change, no downtime. Declines (`None`) only when there
+    /// is no load-aware placement to apply; *when* to rebalance is the
+    /// caller's call ([`crate::coordinator::FleetPolicy`]'s
+    /// `rebalance_threshold` in the fleet).
+    fn rebalance(&mut self) -> Result<Option<ScalingOutcome>> {
+        use crate::placement::PlacementMode;
+        let Some(cur) = self.current.clone() else {
+            return Ok(None);
+        };
+        if self.hmm.placement.mode != PlacementMode::LoadAware
+            || self.hmm.load_stats().is_none()
+        {
+            return Ok(None);
+        }
+        Ok(Some(self.scale(&cur)?))
+    }
 }
 
 #[cfg(test)]
@@ -353,6 +388,48 @@ mod tests {
         assert!(out.downtime.is_some());
         assert!(out.metrics.downtime > 0.0);
         assert!(!out.preserves_inflight);
+    }
+
+    #[test]
+    fn rebalance_without_load_stats_is_a_noop() {
+        let mut e = elastic(4);
+        e.boot(&par(4)).unwrap();
+        // Default MinMove mode, no stats: nothing to do.
+        assert!(e.rebalance().unwrap().is_none());
+        assert_eq!(e.placement_imbalance(), 1.0);
+    }
+
+    #[test]
+    fn rebalance_is_a_fast_zero_downtime_event() {
+        let mut e = elastic(4);
+        e.hmm.placement = crate::placement::PlacementConfig::load_aware();
+        e.boot(&par(4)).unwrap();
+        // Hot experts co-located on EP rank 1 (e % 4 == 1 at boot).
+        let n = e.hmm.model.n_experts as usize;
+        let mut tokens_per_expert = vec![Vec::new(); n];
+        for hot in [5usize, 9, 13, 17] {
+            tokens_per_expert[hot] = (0..12).collect();
+        }
+        let routing = crate::engine::moe::Routing {
+            n_tokens: 48,
+            n_experts: n,
+            tokens_per_expert,
+        };
+        for layer in 0..e.hmm.model.n_layers as usize {
+            e.hmm.record_routing(layer, &routing);
+        }
+        let before = e.placement_imbalance();
+        assert!(before > 1.5, "skew must show up: {before}");
+
+        let out = e.rebalance().unwrap().expect("load-aware rebalance");
+        assert!(out.downtime.is_none(), "redistribution keeps serving");
+        assert!(out.preserves_inflight);
+        assert_eq!(out.new_parallel.n_devices(), 4, "same device set");
+        // Delta-0 anticipation keeps the current shape standby: the event
+        // is in the same seconds class as a vertical step.
+        assert!(out.ready_after < 12.0, "{}", out.ready_after);
+        let after = e.placement_imbalance();
+        assert!(after < before, "imbalance must improve: {before} -> {after}");
     }
 
     #[test]

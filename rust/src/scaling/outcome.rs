@@ -115,4 +115,21 @@ pub trait ScalingMethod {
     fn steady_batch_factor(&self) -> f64 {
         1.0
     }
+
+    /// Predicted max/mean expert token load across the current placement's
+    /// devices (1.0 = balanced or unknown). ElasticMoE reports it from the
+    /// HMM's popularity stats; it drives redistribution-only scaling
+    /// decisions in [`crate::coordinator::FleetPolicy`].
+    fn placement_imbalance(&self) -> f64 {
+        1.0
+    }
+
+    /// Execute a *redistribution-only* scaling event: same device set, new
+    /// expert placement (the response to popularity skew rather than load
+    /// volume). Returns `Ok(None)` when the method has no load-aware
+    /// placement to apply — every baseline, and ElasticMoE before any
+    /// routing stats exist.
+    fn rebalance(&mut self) -> Result<Option<ScalingOutcome>> {
+        Ok(None)
+    }
 }

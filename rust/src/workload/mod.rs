@@ -2,12 +2,16 @@
 //! with fixed, ramping, bursty and patterned arrival-rate profiles, drawn
 //! from seeded PRNGs for deterministic experiments. [`MultiTenantGen`]
 //! merges several tenants' streams (each with its own profile and SLO)
-//! into the fleet-level workloads of `experiments::fleet`.
+//! into the fleet-level workloads of `experiments::fleet`;
+//! [`ZipfRouting`] generates the skewed expert-routing traces of
+//! `experiments::placement`.
 
 pub mod generator;
 pub mod request;
 pub mod tenant;
+pub mod zipf;
 
 pub use generator::{RateProfile, WorkloadGen, WorkloadSpec};
 pub use request::{Request, RequestId, RequestState};
 pub use tenant::{MultiTenantGen, TenantSpec};
+pub use zipf::ZipfRouting;

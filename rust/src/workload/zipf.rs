@@ -1,0 +1,257 @@
+//! Zipf-skewed expert routing traces: synthetic gate decisions with the
+//! heavy-tailed expert popularity observed in production MoE serving
+//! (Huang et al., *Towards MoE Deployment*, arXiv:2303.06182 — a handful
+//! of hot experts receive most tokens). Each token picks `top_k` distinct
+//! experts whose popularity ranks follow `P(rank r) ∝ 1/(r+1)^s`; the
+//! rank → expert mapping is shuffled so hot experts are scattered across
+//! expert ids, as a trained gate would scatter them. Drives the placement
+//! experiments (`repro exp placement`).
+
+use crate::engine::moe::Routing;
+use crate::util::rng::Rng;
+
+/// Deterministic Zipf-skewed gate.
+#[derive(Debug, Clone)]
+pub struct ZipfRouting {
+    pub n_experts: usize,
+    pub top_k: usize,
+    /// Zipf exponent: 0 = uniform, 1.0 = classic heavy skew.
+    pub s: f64,
+    rng: Rng,
+    /// CDF over popularity ranks.
+    cdf: Vec<f64>,
+    /// Popularity rank -> expert id.
+    rank_to_expert: Vec<usize>,
+}
+
+impl ZipfRouting {
+    pub fn new(n_experts: usize, top_k: usize, s: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut rank_to_expert: Vec<usize> = (0..n_experts).collect();
+        rng.shuffle(&mut rank_to_expert);
+        Self::with_rank_mapping(n_experts, top_k, s, seed, rank_to_expert)
+    }
+
+    /// Like [`Self::new`], but with an explicit popularity-rank → expert-id
+    /// mapping (must be a permutation of `0..n_experts`). Lets experiments
+    /// pin *where* the hot experts sit relative to the round-robin
+    /// placement instead of rolling the dice with a shuffle.
+    pub fn with_rank_mapping(
+        n_experts: usize,
+        top_k: usize,
+        s: f64,
+        seed: u64,
+        rank_to_expert: Vec<usize>,
+    ) -> Self {
+        assert!(
+            top_k >= 1 && top_k <= n_experts,
+            "top_k {top_k} out of range for {n_experts} experts"
+        );
+        let mut seen = vec![false; n_experts];
+        for &e in &rank_to_expert {
+            assert!(e < n_experts && !seen[e], "mapping must be a permutation");
+            seen[e] = true;
+        }
+        assert_eq!(rank_to_expert.len(), n_experts);
+        let rng = Rng::new(seed.wrapping_add(1));
+        let weights: Vec<f64> = (0..n_experts)
+            .map(|r| 1.0 / ((r + 1) as f64).powf(s))
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let mut cdf = Vec::with_capacity(n_experts);
+        let mut acc = 0.0;
+        for w in &weights {
+            acc += w / total;
+            cdf.push(acc);
+        }
+        *cdf.last_mut().unwrap() = 1.0; // guard fp drift
+        ZipfRouting {
+            n_experts,
+            top_k,
+            s,
+            rng,
+            cdf,
+            rank_to_expert,
+        }
+    }
+
+    fn sample_rank(&mut self) -> usize {
+        let u = self.rng.f64();
+        self.cdf
+            .partition_point(|&c| c < u)
+            .min(self.n_experts - 1)
+    }
+
+    /// One gate step: `n_tokens` tokens, each routed to `top_k` distinct
+    /// experts drawn from the popularity law (rejection on duplicates,
+    /// falling back to the coldest unchosen experts if rejection stalls).
+    pub fn step(&mut self, n_tokens: usize) -> Routing {
+        let mut tokens_per_expert = vec![Vec::new(); self.n_experts];
+        for t in 0..n_tokens {
+            let mut chosen: Vec<usize> = Vec::with_capacity(self.top_k);
+            let mut stalls = 0usize;
+            while chosen.len() < self.top_k {
+                let rank = self.sample_rank();
+                let e = self.rank_to_expert[rank];
+                if chosen.contains(&e) {
+                    stalls += 1;
+                    if stalls > 64 * self.top_k {
+                        // Pathological skew: deterministically complete
+                        // with the coldest unchosen experts.
+                        for &e in self.rank_to_expert.iter().rev() {
+                            if chosen.len() == self.top_k {
+                                break;
+                            }
+                            if !chosen.contains(&e) {
+                                chosen.push(e);
+                                tokens_per_expert[e].push(t);
+                            }
+                        }
+                        break;
+                    }
+                    continue;
+                }
+                chosen.push(e);
+                tokens_per_expert[e].push(t);
+            }
+        }
+        Routing {
+            n_tokens,
+            n_experts: self.n_experts,
+            tokens_per_expert,
+        }
+    }
+
+    /// The popularity law as per-expert single-draw probabilities (rank
+    /// probabilities mapped through the shuffle).
+    pub fn probabilities(&self) -> Vec<f64> {
+        let mut p = vec![0.0; self.n_experts];
+        let mut prev = 0.0;
+        for (r, &c) in self.cdf.iter().enumerate() {
+            p[self.rank_to_expert[r]] = c - prev;
+            prev = c;
+        }
+        p
+    }
+
+    /// The expert at popularity rank `r` (0 = hottest).
+    pub fn expert_at_rank(&self, r: usize) -> usize {
+        self.rank_to_expert[r]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probabilities_form_a_distribution() {
+        let g = ZipfRouting::new(16, 2, 1.0, 7);
+        let p = g.probabilities();
+        let total: f64 = p.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9, "{total}");
+        assert!(p.iter().all(|&x| x > 0.0));
+        // The rank-0 expert carries the largest single-draw probability.
+        let hot = g.expert_at_rank(0);
+        assert!(p.iter().all(|&x| x <= p[hot] + 1e-12));
+    }
+
+    #[test]
+    fn steps_route_top_k_distinct_experts_per_token() {
+        let mut g = ZipfRouting::new(32, 4, 1.0, 3);
+        let r = g.step(50);
+        assert_eq!(r.n_tokens, 50);
+        // Every token appears in exactly top_k expert lists.
+        let mut per_token = vec![0usize; 50];
+        for toks in &r.tokens_per_expert {
+            for &t in toks {
+                per_token[t] += 1;
+            }
+            // Distinctness: an expert lists a token at most once.
+            let mut sorted = toks.clone();
+            sorted.dedup();
+            assert_eq!(sorted.len(), toks.len());
+        }
+        assert!(per_token.iter().all(|&c| c == 4), "{per_token:?}");
+    }
+
+    #[test]
+    fn zipf_skew_concentrates_tokens_on_hot_experts() {
+        let mut g = ZipfRouting::new(64, 6, 1.0, 11);
+        let hot = g.expert_at_rank(0);
+        let cold = g.expert_at_rank(63);
+        let mut hot_count = 0usize;
+        let mut cold_count = 0usize;
+        for _ in 0..50 {
+            let r = g.step(64);
+            hot_count += r.tokens_per_expert[hot].len();
+            cold_count += r.tokens_per_expert[cold].len();
+        }
+        assert!(
+            hot_count > cold_count * 5,
+            "hot {hot_count} vs cold {cold_count}"
+        );
+    }
+
+    #[test]
+    fn uniform_exponent_is_roughly_flat() {
+        let mut g = ZipfRouting::new(8, 2, 0.0, 5);
+        let mut counts = vec![0usize; 8];
+        for _ in 0..400 {
+            let r = g.step(8);
+            for (e, toks) in r.tokens_per_expert.iter().enumerate() {
+                counts[e] += toks.len();
+            }
+        }
+        let total: usize = counts.iter().sum();
+        let mean = total as f64 / 8.0;
+        for &c in &counts {
+            assert!(
+                (c as f64) > mean * 0.7 && (c as f64) < mean * 1.3,
+                "{counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = ZipfRouting::new(32, 4, 1.0, 9);
+        let mut b = ZipfRouting::new(32, 4, 1.0, 9);
+        for _ in 0..5 {
+            let ra = a.step(16);
+            let rb = b.step(16);
+            assert_eq!(ra.tokens_per_expert, rb.tokens_per_expert);
+        }
+    }
+
+    #[test]
+    fn explicit_rank_mapping_pins_the_hot_expert() {
+        let mapping: Vec<usize> = (0..8).rev().collect();
+        let mut g = ZipfRouting::with_rank_mapping(8, 2, 1.0, 3, mapping);
+        assert_eq!(g.expert_at_rank(0), 7);
+        let mut counts = vec![0usize; 8];
+        for _ in 0..100 {
+            let r = g.step(8);
+            for (e, toks) in r.tokens_per_expert.iter().enumerate() {
+                counts[e] += toks.len();
+            }
+        }
+        let max = *counts.iter().max().unwrap();
+        assert_eq!(counts[7], max, "{counts:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "permutation")]
+    fn non_permutation_mapping_rejected() {
+        ZipfRouting::with_rank_mapping(4, 1, 1.0, 0, vec![0, 0, 1, 2]);
+    }
+
+    #[test]
+    fn top_k_equal_to_experts_routes_everywhere() {
+        let mut g = ZipfRouting::new(4, 4, 1.5, 2);
+        let r = g.step(3);
+        for toks in &r.tokens_per_expert {
+            assert_eq!(toks.len(), 3);
+        }
+    }
+}

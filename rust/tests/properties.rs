@@ -171,6 +171,98 @@ fn prop_no_request_lost_across_scaling() {
     });
 }
 
+/// VpageTable under random op sequences: bind/unbind round-trips, double
+/// binds are rejected without corrupting state, and `remap_count` grows
+/// monotonically — bumping exactly once per successful bind/unbind (twice
+/// per rebind) and never on a failed op.
+#[test]
+fn prop_vpage_table_matches_model_under_random_ops() {
+    use elastic_moe::hmm::VpageTable;
+    use std::collections::BTreeMap;
+
+    check("vpage model equivalence", 100, |rng: &mut Rng| {
+        let mut table = VpageTable::new();
+        // Mirror model: (layer, expert) -> region.
+        let mut model: BTreeMap<(usize, usize), u64> = BTreeMap::new();
+        let mut next_region = 100u64;
+        let layers = 1 + rng.below(4) as usize;
+        let experts = 1 + rng.below(8) as usize;
+        for _ in 0..120 {
+            let layer = rng.below(layers as u64) as usize;
+            let expert = rng.below(experts as u64) as usize;
+            let key = (layer, expert);
+            let before = table.remap_count;
+            match rng.below(3) {
+                0 => {
+                    let region = next_region;
+                    next_region += 1;
+                    let r = table.bind(layer, expert, region);
+                    if model.contains_key(&key) {
+                        assert!(r.is_err(), "double bind must be rejected");
+                        assert_eq!(
+                            table.remap_count, before,
+                            "failed bind must not count as a remap"
+                        );
+                    } else {
+                        r.unwrap();
+                        model.insert(key, region);
+                        assert_eq!(table.remap_count, before + 1);
+                    }
+                }
+                1 => {
+                    let r = table.unbind(layer, expert);
+                    match model.remove(&key) {
+                        Some(region) => {
+                            assert_eq!(r.unwrap(), region, "round-trip");
+                            assert_eq!(table.remap_count, before + 1);
+                        }
+                        None => {
+                            assert!(r.is_err(), "unbound unbind must fail");
+                            assert_eq!(table.remap_count, before);
+                        }
+                    }
+                }
+                _ => {
+                    let region = next_region;
+                    next_region += 1;
+                    let r = table.rebind(layer, expert, region);
+                    match model.get_mut(&key) {
+                        Some(old) => {
+                            assert_eq!(r.unwrap(), *old, "rebind returns old");
+                            *old = region;
+                            assert_eq!(table.remap_count, before + 2);
+                        }
+                        None => {
+                            assert!(r.is_err());
+                            assert_eq!(table.remap_count, before);
+                        }
+                    }
+                }
+            }
+            assert!(
+                table.remap_count >= before,
+                "remap_count must be monotone"
+            );
+            // Full-state equivalence with the mirror.
+            assert_eq!(table.bound_count(), model.len());
+            for l in 0..layers {
+                for e in 0..experts {
+                    assert_eq!(
+                        table.lookup(l, e),
+                        model.get(&(l, e)).copied(),
+                        "lookup mismatch at ({l}, {e})"
+                    );
+                }
+            }
+            let bindings = table.all_bindings();
+            assert_eq!(bindings.len(), model.len());
+            for (l, e, r) in bindings {
+                assert_eq!(model.get(&(l, e)), Some(&r));
+            }
+        }
+    });
+}
+
 /// Paged KV never double-books a block and always conserves the pool.
 #[test]
 fn prop_paged_kv_conserves_blocks() {
