@@ -17,6 +17,7 @@ use anyhow::{bail, Result};
 
 use crate::config::{ParallelConfig, SloConfig};
 use crate::engine::{CostModel, ServeEngine};
+use crate::kvmigrate::{KvHandoffStats, KvSnapshot};
 use crate::metrics::MetricsRecorder;
 use crate::scaling::{ScalingMethod, ScalingOutcome};
 use crate::sim::{Clock, SimClock};
@@ -150,6 +151,8 @@ pub struct FleetOutput {
     /// unserved requests are absent from the attainment denominator, so
     /// compare policies on the same trace only when this is 0.
     pub truncated: usize,
+    /// In-flight KV handoff tally across every replica switchover.
+    pub handoff: KvHandoffStats,
 }
 
 impl FleetOutput {
@@ -247,6 +250,7 @@ impl FleetSim {
         let mut recorder = MetricsRecorder::new();
         let mut actions: Vec<(f64, FleetAction)> = Vec::new();
         let mut events: Vec<ScalingOutcome> = Vec::new();
+        let mut handoff = KvHandoffStats::default();
         let mut cold_boots = 0usize;
         let serving0 = initial_replicas * limits.replica_base;
         let mut device_timeline = vec![(0.0, serving0)];
@@ -291,7 +295,13 @@ impl FleetSim {
 
             // 2) Advance every replica to the window boundary.
             for rep in replicas.iter_mut() {
-                self.advance_replica(rep, t_end, &mut recorder, &mut events)?;
+                self.advance_replica(
+                    rep,
+                    t_end,
+                    &mut recorder,
+                    &mut events,
+                    &mut handoff,
+                )?;
             }
 
             // 3) Retire drained replicas and release their devices.
@@ -360,12 +370,17 @@ impl FleetSim {
                 | FleetAction::VerticalDown { replica, to_devices } => {
                     let target = self.par(to_devices)?;
                     let rep = &mut replicas[replica];
-                    let outcome = rep.method.scale(&target)?;
+                    // Hand the replica's live block tables to the method
+                    // so its KV-migration planner can carry them.
+                    let outcome = match rep.engine.as_ref() {
+                        Some(e) => rep.method.scale_with_kv(
+                            &target,
+                            &KvSnapshot::capture(&e.kv, &rep.current),
+                        )?,
+                        None => rep.method.scale(&target)?,
+                    };
                     begin_transition_on(&outcome, rep.engine.as_mut());
-                    rep.pending = Some(PendingScale {
-                        outcome,
-                        started: t_end,
-                    });
+                    rep.pending = Some(PendingScale::new(outcome, t_end));
                     actions.push((t_end, action));
                 }
                 FleetAction::AddReplica => {
@@ -416,10 +431,7 @@ impl FleetSim {
                     let rep = &mut replicas[replica];
                     if let Some(outcome) = rep.method.rebalance()? {
                         begin_transition_on(&outcome, rep.engine.as_mut());
-                        rep.pending = Some(PendingScale {
-                            outcome,
-                            started: t_end,
-                        });
+                        rep.pending = Some(PendingScale::new(outcome, t_end));
                         actions.push((t_end, action));
                     }
                 }
@@ -442,6 +454,7 @@ impl FleetSim {
             end_time,
             final_replicas: replicas.iter().filter(|r| !r.retired).count(),
             truncated,
+            handoff,
         })
     }
 
@@ -464,6 +477,7 @@ impl FleetSim {
         t_end: f64,
         recorder: &mut MetricsRecorder,
         events: &mut Vec<ScalingOutcome>,
+        handoff: &mut KvHandoffStats,
     ) -> Result<()> {
         if rep.retired {
             rep.clock.advance_to(t_end);
@@ -484,7 +498,7 @@ impl FleetSim {
             if let Some(p) = &rep.pending {
                 if now >= p.started + p.outcome.ready_after {
                     let p = rep.pending.take().unwrap();
-                    let fresh = switchover_engine(
+                    let (fresh, ho) = switchover_engine(
                         &self.cost,
                         self.hbm_per_device,
                         self.max_batch,
@@ -493,6 +507,7 @@ impl FleetSim {
                         rep.kv_factor,
                         rep.batch_factor,
                     );
+                    handoff.merge(&ho);
                     rep.engine = Some(fresh);
                     rep.current = p.outcome.new_parallel.clone();
                     events.push(p.outcome);
@@ -513,11 +528,20 @@ impl FleetSim {
                 .unwrap_or(true);
 
             if let Some(eng) = rep.engine.as_mut() {
-                if rep.pending.is_some() {
+                if let Some(p) = rep.pending.as_mut() {
                     if intake_open {
                         eng.batcher.resume_intake();
                     } else {
                         eng.batcher.pause_intake();
+                        // Freeze the KV-handoff plan's copy sequences
+                        // while their blocks are in flight (once per
+                        // event, when the pause window opens).
+                        if !p.suspended_applied {
+                            p.suspended_applied = true;
+                            if let Some(h) = &p.outcome.kv_handoff {
+                                eng.suspend_sequences(h.suspend_ids());
+                            }
+                        }
                     }
                 }
                 if intake_open && !in_downtime {

@@ -10,6 +10,7 @@ use crate::config::{ParallelConfig, SloConfig};
 use crate::engine::{
     BatcherConfig, CostModel, CostModelBackend, PagedKv, ServeEngine,
 };
+use crate::kvmigrate::{HandoffDisposition, KvHandoffStats, KvSnapshot};
 use crate::metrics::MetricsRecorder;
 use crate::scaling::{ScalingMethod, ScalingOutcome};
 use crate::sim::{Clock, SimClock};
@@ -38,6 +39,9 @@ pub struct SimOutput {
     pub end_time: f64,
     /// (time, n_devices) timeline of the active configuration.
     pub device_timeline: Vec<(f64, usize)>,
+    /// What happened to in-flight sequences across every switchover of
+    /// the run: adopted (remap/copy) vs restarted, with the token bill.
+    pub handoff: KvHandoffStats,
 }
 
 /// A scaling event in flight: the outcome timeline plus its absolute
@@ -45,6 +49,19 @@ pub struct SimOutput {
 pub(crate) struct PendingScale {
     pub(crate) outcome: ScalingOutcome,
     pub(crate) started: f64,
+    /// The per-sequence suspend of the KV-handoff window has been applied
+    /// (it fires once, when the intake-pause window opens).
+    pub(crate) suspended_applied: bool,
+}
+
+impl PendingScale {
+    pub(crate) fn new(outcome: ScalingOutcome, started: f64) -> Self {
+        PendingScale {
+            outcome,
+            started,
+            suspended_applied: false,
+        }
+    }
 }
 
 /// Build a [`ServeEngine`] for one instance of `parallel` under the given
@@ -67,7 +84,8 @@ pub(crate) fn build_engine(
         kv_budget * parallel.dp as u64,
         bytes_per_token,
         16,
-    );
+    )
+    .expect("per-instance KV budget must hold at least one block");
     let backend = CostModelBackend::new(cost.clone(), parallel.clone());
     let max_batch = ((max_batch_cap
         .min(cost.max_batch(parallel, kv_budget, 2600).max(1)))
@@ -85,11 +103,15 @@ pub(crate) fn build_engine(
 }
 
 /// Complete a transition: build the successor engine for
-/// `outcome.new_parallel` and migrate the old engine's work into it —
-/// in-flight requests are adopted with their KV when the outcome preserves
-/// them (zero-copy reuse) and restarted from scratch otherwise; queued
-/// requests transfer as-is. Shared by [`ServingSim`] and
-/// [`super::FleetSim`] so switchover semantics cannot diverge.
+/// `outcome.new_parallel` and migrate the old engine's work into it.
+/// Every drained in-flight sequence (running *and* suspended) is disposed
+/// of exactly once: adopted with its decode progress when its KV crossed
+/// the event (remap or p2p copy, per the outcome's
+/// [`crate::kvmigrate::KvHandoff`] — or the blanket `preserves_inflight`
+/// when no per-sequence plan exists), restarted from scratch otherwise;
+/// queued requests transfer as-is. Returns the successor and the handoff
+/// tally. Shared by [`ServingSim`] and [`super::FleetSim`] so switchover
+/// semantics cannot diverge.
 pub(crate) fn switchover_engine(
     cost: &CostModel,
     hbm_per_device: u64,
@@ -98,7 +120,7 @@ pub(crate) fn switchover_engine(
     old: Option<ServeEngine>,
     kv_factor: f64,
     batch_factor: f64,
-) -> ServeEngine {
+) -> (ServeEngine, KvHandoffStats) {
     let mut fresh = build_engine(
         cost,
         hbm_per_device,
@@ -107,19 +129,42 @@ pub(crate) fn switchover_engine(
         kv_factor,
         batch_factor,
     );
+    let mut stats = KvHandoffStats::default();
     if let Some(mut old) = old {
         let (running, waiting) = old.drain();
         for mut r in running {
-            if outcome.preserves_inflight
-                && fresh.kv.can_admit(r.total_tokens())
-            {
-                // KV reused via zero-copy: progress kept.
+            // `blanket` marks adoption without a per-sequence plan: the
+            // method keeps in-flight work alive but models no KV
+            // movement, so it must not count as a zero-copy remap.
+            let (disposition, blanket) = match &outcome.kv_handoff {
+                Some(h) => (h.disposition(r.id), false),
+                None if outcome.preserves_inflight => {
+                    (HandoffDisposition::Remap, true)
+                }
+                None => (HandoffDisposition::Recompute, false),
+            };
+            let adopt = disposition != HandoffDisposition::Recompute
+                && fresh.kv.can_admit(r.total_tokens());
+            if adopt {
+                // KV carried across the event: progress kept.
                 fresh.kv.admit(r.id, r.current_len()).ok();
                 r.state = RequestState::Decoding;
+                if blanket {
+                    stats.adopted_blanket += 1;
+                } else {
+                    match disposition {
+                        HandoffDisposition::Remap => stats.remapped += 1,
+                        _ => stats.copied += 1,
+                    }
+                }
+                stats.adopted_tokens += r.generated as u64;
                 fresh.batcher_adopt(r);
             } else {
                 // Restart from scratch (same fields the preemption
                 // restart path preserves: tenant and live-path prompt).
+                stats.recomputed += 1;
+                stats.recompute_tokens += r.prompt_len as u64;
+                stats.lost_decode_tokens += r.generated as u64;
                 let mut restart = Request::new(
                     r.id,
                     r.arrival,
@@ -135,7 +180,7 @@ pub(crate) fn switchover_engine(
             fresh.submit(w);
         }
     }
-    fresh
+    (fresh, stats)
 }
 
 /// Enact the instantaneous effects of a freshly issued scaling event on
@@ -214,6 +259,7 @@ impl ServingSim {
         let mut recorder = MetricsRecorder::new();
         let mut events: Vec<ScalingOutcome> = Vec::new();
         let mut device_timeline = vec![(0.0, initial.n_devices())];
+        let mut handoff = KvHandoffStats::default();
 
         arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
         let mut arrivals: VecDeque<Request> = arrivals.into();
@@ -241,7 +287,7 @@ impl ServingSim {
             if let Some(p) = &pending {
                 if now >= p.started + p.outcome.ready_after {
                     let p = pending.take().unwrap();
-                    let fresh = switchover_engine(
+                    let (fresh, ho) = switchover_engine(
                         &self.cost,
                         self.hbm_per_device,
                         self.max_batch,
@@ -250,6 +296,7 @@ impl ServingSim {
                         kv_factor,
                         batch_factor,
                     );
+                    handoff.merge(&ho);
                     engine = Some(fresh);
                     current = p.outcome.new_parallel.clone();
                     device_timeline.push((now, current.n_devices()));
@@ -271,12 +318,21 @@ impl ServingSim {
             // the batcher's admission gate in sync with the pause window
             // (the window may start mid-transition: ElasticMoE only pauses
             // for the final switchover, not the concurrent HMM/IMM phase).
+            // When the pause window opens, the KV-handoff plan's copy
+            // sequences are suspended — their blocks are in flight to the
+            // new owner and must stay byte-stable until switchover.
             if let Some(eng) = engine.as_mut() {
-                if pending.is_some() {
+                if let Some(p) = pending.as_mut() {
                     if intake_open {
                         eng.batcher.resume_intake();
                     } else {
                         eng.batcher.pause_intake();
+                        if !p.suspended_applied {
+                            p.suspended_applied = true;
+                            if let Some(h) = &p.outcome.kv_handoff {
+                                eng.suspend_sequences(h.suspend_ids());
+                            }
+                        }
                     }
                 }
                 if intake_open && !in_downtime {
@@ -320,12 +376,17 @@ impl ServingSim {
                             ScaleDecision::Hold => None,
                         };
                         if let Some(target) = target {
-                            let outcome = method.scale(&target)?;
+                            // The live block tables become the ownership
+                            // snapshot the KV-migration planner works on.
+                            let outcome = match engine.as_ref() {
+                                Some(e) => method.scale_with_kv(
+                                    &target,
+                                    &KvSnapshot::capture(&e.kv, &current),
+                                )?,
+                                None => method.scale(&target)?,
+                            };
                             begin_transition_on(&outcome, engine.as_mut());
-                            pending = Some(PendingScale {
-                                outcome,
-                                started: now,
-                            });
+                            pending = Some(PendingScale::new(outcome, now));
                         }
                     }
                 }
@@ -335,12 +396,15 @@ impl ServingSim {
                     if let Some((t, _)) = list.first() {
                         if now >= *t {
                             let (_, target) = list.remove(0);
-                            let outcome = method.scale(&target)?;
+                            let outcome = match engine.as_ref() {
+                                Some(e) => method.scale_with_kv(
+                                    &target,
+                                    &KvSnapshot::capture(&e.kv, &current),
+                                )?,
+                                None => method.scale(&target)?,
+                            };
                             begin_transition_on(&outcome, engine.as_mut());
-                            pending = Some(PendingScale {
-                                outcome,
-                                started: now,
-                            });
+                            pending = Some(PendingScale::new(outcome, now));
                         }
                     }
                 }
@@ -411,6 +475,7 @@ impl ServingSim {
             scaling_events: events,
             end_time: clock.now(),
             device_timeline,
+            handoff,
         })
     }
 
@@ -500,6 +565,39 @@ mod tests {
         // Every request eventually finishes.
         let total_arrived = workload(2.0, 120.0).len();
         assert_eq!(out.recorder.count(), total_arrived);
+    }
+
+    #[test]
+    fn elastic_scale_up_adopts_inflight_with_zero_recompute() {
+        // Long-context traffic so plenty of sequences are mid-decode at
+        // the command. Scale-up 4->6: every device group survives, so the
+        // handoff is pure remap — zero prefill recompute, no lost decode.
+        let s = sim();
+        let mut m = elastic(6);
+        let mut g = WorkloadGen::new(WorkloadSpec {
+            prompt_len: 4000,
+            decode_min: 150,
+            decode_max: 250,
+            profile: RateProfile::Fixed(1.5),
+            seed: 11,
+        });
+        let arrivals = g.arrivals_until(120.0);
+        let n = arrivals.len();
+        let out = s
+            .run(
+                &mut m,
+                &par(4),
+                arrivals,
+                Trigger::Manual(vec![(30.0, par(6))]),
+                120.0,
+            )
+            .unwrap();
+        assert_eq!(out.recorder.count(), n, "every request finishes once");
+        assert!(out.handoff.remapped > 0, "in-flight work was adopted");
+        assert_eq!(out.handoff.recomputed, 0);
+        assert_eq!(out.handoff.recompute_tokens, 0);
+        assert_eq!(out.handoff.lost_decode_tokens, 0);
+        assert!(out.handoff.adopted_tokens > 0);
     }
 
     #[test]

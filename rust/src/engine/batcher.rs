@@ -2,6 +2,27 @@
 //! batch under KV and batch-size limits, prefill-first scheduling (vLLM
 //! default), and pause/resume around scaling transitions (the paper's
 //! "active instance pauses intake of new requests" during scale-up).
+//!
+//! # Scheduling states and transition windows
+//!
+//! A request moves `waiting -> running -> (finished | suspended)`:
+//!
+//! - **waiting** — enqueued, no KV held. Admission is FIFO, gated by
+//!   [`BatcherConfig::max_batch`], the per-iteration prefill-token cap,
+//!   KV availability, and the intake gate.
+//! - **running** — KV admitted; prefilling or decoding every iteration.
+//! - **suspended** — decode paused with KV still resident: the sequence
+//!   is mid-handoff across a scaling event (its blocks are in flight to
+//!   the successor's owner device). Suspended sequences are invisible to
+//!   [`Batcher::next_work`] but count as live work; they are drained with
+//!   the running set at switchover and resume on the successor.
+//!
+//! Two independent gates exist during scaling transitions:
+//! [`Batcher::pause_intake`] closes *admission* (the paper's intake-pause
+//! window — in-flight work keeps decoding), while [`Batcher::suspend`]
+//! freezes *individual sequences* (the KV-handoff window). The two
+//! compose: a sequence is either drained once at switchover or migrated
+//! once, never both — see `rust/tests/integration.rs`.
 
 use std::collections::VecDeque;
 
@@ -44,6 +65,8 @@ pub struct Batcher {
     pub cfg: BatcherConfig,
     waiting: VecDeque<Request>,
     running: Vec<Request>,
+    /// Sequences frozen mid-decode for KV handoff (blocks still held).
+    suspended: Vec<Request>,
     /// Intake paused (during scale transitions).
     paused: bool,
 }
@@ -54,6 +77,7 @@ impl Batcher {
             cfg,
             waiting: VecDeque::new(),
             running: Vec::new(),
+            suspended: Vec::new(),
             paused: false,
         }
     }
@@ -117,6 +141,7 @@ impl Batcher {
         &mut self.running
     }
 
+    /// Requests currently running (read-only view).
     pub fn running(&self) -> &[Request] {
         &self.running
     }
@@ -137,13 +162,50 @@ impl Batcher {
         done
     }
 
-    /// Drain: take every in-flight request out (migration to a new
-    /// instance or teardown). KV is released here.
+    /// Freeze decode for the given running sequences while their KV blocks
+    /// are handed off across a scaling event. Their KV stays admitted (the
+    /// successor adopts it); they simply stop appearing in
+    /// [`Self::next_work`] until drained at switchover. Returns the number
+    /// of sequences actually suspended (ids not in the running batch — or
+    /// already suspended — are ignored).
+    pub fn suspend(&mut self, ids: &[RequestId]) -> usize {
+        let mut n = 0;
+        let mut i = 0;
+        while i < self.running.len() {
+            if ids.contains(&self.running[i].id) {
+                let mut r = self.running.swap_remove(i);
+                r.state = RequestState::Suspended;
+                self.suspended.push(r);
+                n += 1;
+            } else {
+                i += 1;
+            }
+        }
+        n
+    }
+
+    /// Sequences currently frozen for KV handoff.
+    pub fn suspended_len(&self) -> usize {
+        self.suspended.len()
+    }
+
+    /// Frozen sequences (read-only view).
+    pub fn suspended(&self) -> &[Request] {
+        &self.suspended
+    }
+
+    /// Drain: take every in-flight request out — running *and* suspended —
+    /// for migration to a new instance or teardown. KV is released here
+    /// (the successor's pool re-admits adopted sequences; zero-copy reuse
+    /// is modelled by keeping their decode progress, see
+    /// [`crate::kvmigrate`]).
     pub fn take_all_running(&mut self, kv: &mut PagedKv) -> Vec<Request> {
-        for r in &self.running {
+        for r in self.running.iter().chain(self.suspended.iter()) {
             kv.release(r.id);
         }
-        std::mem::take(&mut self.running)
+        let mut all = std::mem::take(&mut self.running);
+        all.extend(std::mem::take(&mut self.suspended));
+        all
     }
 
     /// Take all queued (not yet admitted) requests.
@@ -159,14 +221,21 @@ impl Batcher {
         self.running.push(r);
     }
 
+    /// Requests waiting for admission.
     pub fn queue_len(&self) -> usize {
         self.waiting.len()
     }
+    /// Requests in the running batch (excludes suspended).
     pub fn running_len(&self) -> usize {
         self.running.len()
     }
+    /// No work anywhere: empty queue, empty batch, nothing suspended.
+    /// Suspended sequences count as live work — they are waiting on a
+    /// switchover, not finished.
     pub fn is_idle(&self) -> bool {
-        self.waiting.is_empty() && self.running.is_empty()
+        self.waiting.is_empty()
+            && self.running.is_empty()
+            && self.suspended.is_empty()
     }
 }
 
@@ -264,5 +333,31 @@ mod tests {
     fn idle_when_empty() {
         let (mut b, mut kv) = setup(4);
         assert_eq!(b.next_work(&mut kv), NextWork::Idle);
+    }
+
+    #[test]
+    fn suspended_sequences_keep_kv_and_drain_with_running() {
+        let (mut b, mut kv) = setup(8);
+        b.enqueue(req(1, 50, 5));
+        b.enqueue(req(2, 50, 5));
+        b.next_work(&mut kv); // both admitted
+        let used = kv.used_blocks();
+        assert_eq!(b.suspend(&[2, 99]), 1); // unknown ids ignored
+        assert_eq!(b.suspended_len(), 1);
+        assert_eq!(b.suspended()[0].state, RequestState::Suspended);
+        // KV stays admitted while suspended.
+        assert_eq!(kv.used_blocks(), used);
+        // Suspended sequences are invisible to scheduling...
+        match b.next_work(&mut kv) {
+            NextWork::Decode(ids) => assert_eq!(ids, vec![1]),
+            w => panic!("{w:?}"),
+        }
+        // ...but count as live work.
+        assert!(!b.is_idle());
+        // Drain returns running + suspended exactly once each.
+        let all = b.take_all_running(&mut kv);
+        assert_eq!(all.len(), 2);
+        assert_eq!(kv.used_blocks(), 0);
+        assert!(b.is_idle());
     }
 }

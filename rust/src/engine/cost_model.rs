@@ -109,6 +109,39 @@ impl CostModel {
         self.model.kv_bytes_per_token() * seq_len as u64 / p.tp as u64
     }
 
+    /// Total KV bytes a sequence of `seq_len` tokens occupies across its
+    /// DP replica (all TP shards together).
+    pub fn kv_seq_bytes(&self, seq_len: usize) -> u64 {
+        self.model.kv_bytes_per_token() * seq_len as u64
+    }
+
+    /// Time to P2P-copy one sequence's KV to a new owner replica: each TP
+    /// shard's slice moves on its own device pair in parallel, so the leg
+    /// time is the per-shard transfer (setup + bytes/tp over the fabric).
+    pub fn kv_transfer_time(&self, p: &ParallelConfig, seq_len: usize) -> f64 {
+        self.timings
+            .p2p(self.kv_seq_bytes(seq_len) / p.tp.max(1) as u64)
+    }
+
+    /// Time to rebuild one sequence's KV from scratch on the target
+    /// configuration: a full re-prefill of its current length. This is
+    /// the TTFT inflation a drained-and-recomputed sequence pays (on top
+    /// of queueing), and what the paper's zero-copy KV reuse avoids.
+    pub fn kv_recompute_time(&self, p: &ParallelConfig, seq_len: usize) -> f64 {
+        self.prefill_time(p, seq_len)
+    }
+
+    /// KV-handoff decision for one mid-stream sequence whose owner device
+    /// departs: copy its blocks when the transfer is cheaper than
+    /// re-prefilling on the target, recompute otherwise. Long contexts
+    /// copy (transfer is linear in bytes over a ~150 GB/s fabric); very
+    /// short sequences recompute (the per-transfer setup latency exceeds
+    /// their prefill cost).
+    pub fn kv_prefer_copy(&self, to: &ParallelConfig, seq_len: usize) -> bool {
+        self.kv_transfer_time(to, seq_len)
+            < self.kv_recompute_time(to, seq_len)
+    }
+
     /// Maximum concurrent sequences given per-device KV budget.
     pub fn max_batch(
         &self,

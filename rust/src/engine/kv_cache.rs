@@ -1,5 +1,23 @@
 //! Paged KV-cache allocator (vLLM-style block tables) — admission control
 //! for the continuous batcher and the unit of KV accounting.
+//!
+//! # Block accounting invariants
+//!
+//! - The pool holds exactly [`PagedKv::total_blocks`] blocks at all times:
+//!   `free_blocks() + used_blocks() == total_blocks()` after every
+//!   operation, including failed ones (exhaustion is an error, never a
+//!   leak — see `exhaustion_is_an_error_not_corruption`).
+//! - A request owns `ceil(len / block_tokens)` blocks, where `len` is its
+//!   current sequence length ([`PagedKv::seq_len`]); growth claims at most
+//!   one block per appended token.
+//! - [`PagedKv::can_admit`] agrees with [`PagedKv::admit`]: whenever
+//!   `can_admit(tokens)` is true, an `admit` for `tokens` succeeds
+//!   (property-tested in `rust/tests/properties.rs`).
+//!
+//! Per-request block tables are the migratable unit of the KV-handoff
+//! subsystem ([`crate::kvmigrate`]): a scaling event snapshots them via
+//! [`PagedKv::sequences`] and classifies each table as remap / p2p-copy /
+//! recompute.
 
 use std::collections::HashMap;
 
@@ -31,16 +49,26 @@ impl PagedKv {
         }
     }
 
-    /// Pool sized from a byte budget.
+    /// Pool sized from a byte budget. Errors when the budget is smaller
+    /// than a single block — a 0-block pool would silently reject every
+    /// admission, which looks like livelock rather than misconfiguration.
     pub fn from_bytes(
         budget_bytes: u64,
         bytes_per_token: u64,
         block_tokens: usize,
-    ) -> Self {
+    ) -> Result<Self> {
         let tokens = (budget_bytes / bytes_per_token.max(1)) as usize;
-        PagedKv::new(tokens / block_tokens.max(1), block_tokens)
+        let blocks = tokens / block_tokens.max(1);
+        if blocks == 0 {
+            bail!(
+                "KV budget {budget_bytes} B holds less than one block \
+                 ({block_tokens} tokens x {bytes_per_token} B/token)"
+            );
+        }
+        Ok(PagedKv::new(blocks, block_tokens))
     }
 
+    /// Blocks a sequence of `tokens` total tokens occupies.
     pub fn blocks_needed(&self, tokens: usize) -> usize {
         tokens.div_ceil(self.block_tokens)
     }
@@ -69,7 +97,8 @@ impl PagedKv {
         Ok(())
     }
 
-    /// Append one decoded token; may claim a new block.
+    /// Append one decoded token; may claim a new block. On exhaustion the
+    /// length is rolled back and the request's state is unchanged.
     pub fn append_token(&mut self, id: RequestId) -> Result<()> {
         let len = self
             .lens
@@ -88,7 +117,8 @@ impl PagedKv {
         Ok(())
     }
 
-    /// Release a finished request's blocks.
+    /// Release a finished request's blocks. Idempotent: releasing an
+    /// unknown or already-released id is a no-op.
     pub fn release(&mut self, id: RequestId) {
         if let Some(blocks) = self.tables.remove(&id) {
             self.free.extend(blocks);
@@ -96,17 +126,48 @@ impl PagedKv {
         self.lens.remove(&id);
     }
 
+    /// Blocks currently free.
     pub fn free_blocks(&self) -> usize {
         self.free.len()
     }
+    /// Blocks currently held by admitted sequences.
     pub fn used_blocks(&self) -> usize {
         self.n_blocks - self.free.len()
     }
+    /// Pool capacity in blocks.
     pub fn total_blocks(&self) -> usize {
         self.n_blocks
     }
+    /// Sequences currently holding blocks.
     pub fn active_requests(&self) -> usize {
         self.tables.len()
+    }
+    /// Tokens per block (pool-wide constant).
+    pub fn block_tokens(&self) -> usize {
+        self.block_tokens
+    }
+
+    /// Current stored length of one sequence, `None` if not admitted.
+    pub fn seq_len(&self, id: RequestId) -> Option<usize> {
+        self.lens.get(&id).copied()
+    }
+
+    /// Blocks held by one sequence, `None` if not admitted.
+    pub fn seq_blocks(&self, id: RequestId) -> Option<usize> {
+        self.tables.get(&id).map(|t| t.len())
+    }
+
+    /// Every admitted sequence as `(id, tokens, blocks)`, sorted by id
+    /// (deterministic — the underlying map is not). This is the snapshot
+    /// the KV-migration planner consumes at a scaling event.
+    pub fn sequences(&self) -> Vec<(RequestId, usize, usize)> {
+        let mut v: Vec<(RequestId, usize, usize)> = self
+            .tables
+            .iter()
+            .map(|(&id, blocks)| (id, self.lens[&id], blocks.len()))
+            .collect();
+        v.sort_unstable_by_key(|&(id, _, _)| id);
+        v
     }
 
     /// Shrink the pool (colocated baseline pre-shrinks KV to fit two model
@@ -172,8 +233,35 @@ mod tests {
     #[test]
     fn from_bytes_sizing() {
         // 1 GB at 1 KB/token, 16-token blocks -> 65536 blocks.
-        let kv = PagedKv::from_bytes(1 << 30, 1024, 16);
+        let kv = PagedKv::from_bytes(1 << 30, 1024, 16).unwrap();
         assert_eq!(kv.total_blocks(), 65536);
+    }
+
+    #[test]
+    fn from_bytes_rejects_sub_block_budget() {
+        // 16-token blocks at 1 KB/token need 16 KB; 15 KB holds none.
+        assert!(PagedKv::from_bytes(15 << 10, 1024, 16).is_err());
+        // Exactly one block is fine.
+        let kv = PagedKv::from_bytes(16 << 10, 1024, 16).unwrap();
+        assert_eq!(kv.total_blocks(), 1);
+        // Zero budget is an error, not a 0-block pool.
+        assert!(PagedKv::from_bytes(0, 1024, 16).is_err());
+    }
+
+    #[test]
+    fn sequences_snapshot_is_sorted_and_exact() {
+        let mut kv = PagedKv::new(100, 16);
+        kv.admit(9, 40).unwrap(); // 3 blocks
+        kv.admit(2, 16).unwrap(); // 1 block
+        kv.admit(5, 17).unwrap(); // 2 blocks
+        kv.append_token(2).unwrap(); // 17 tokens -> 2 blocks
+        let seqs = kv.sequences();
+        assert_eq!(seqs, vec![(2, 17, 2), (5, 17, 2), (9, 40, 3)]);
+        assert_eq!(kv.seq_len(5), Some(17));
+        assert_eq!(kv.seq_blocks(9), Some(3));
+        assert_eq!(kv.seq_len(99), None);
+        let total: usize = seqs.iter().map(|&(_, _, b)| b).sum();
+        assert_eq!(total, kv.used_blocks());
     }
 
     #[test]

@@ -1,5 +1,21 @@
 //! The serving loop: one `step()` = one batcher decision + one backend
 //! execution + bookkeeping. Driven by the coordinator under either clock.
+//!
+//! # Drain semantics
+//!
+//! [`ServeEngine::drain`] is the switchover primitive: it empties the
+//! engine completely — running **and** suspended sequences with their
+//! decode progress, plus the untouched waiting queue — and releases every
+//! KV block in this engine's pool. Whether a drained sequence resumes on
+//! the successor with its progress (zero-copy remap / p2p copy) or
+//! restarts from scratch (drain-and-recompute) is decided by the
+//! coordinator from the scaling outcome's KV handoff plan
+//! ([`crate::kvmigrate`]); the engine itself never re-prefills on drain.
+//!
+//! [`ServeEngine::suspend_sequences`] opens the per-sequence pause window
+//! of that handoff: suspended sequences stop decoding (their KV must stay
+//! byte-stable while in flight to the new owner device) but remain live
+//! work until the drain.
 
 use anyhow::Result;
 
@@ -13,8 +29,11 @@ use super::kv_cache::PagedKv;
 /// Result of one engine step.
 #[derive(Debug)]
 pub struct StepOutcome {
+    /// What the step executed (prefill / decode / idle).
     pub kind: StepKind,
+    /// Simulated (or wall) seconds the step took.
     pub duration: f64,
+    /// Requests that completed during this step, reaped with their KV.
     pub finished: Vec<Request>,
     /// Requests preempted back to the queue (KV pressure).
     pub preempted: usize,
@@ -22,8 +41,11 @@ pub struct StepOutcome {
 
 /// One inference instance's serving engine.
 pub struct ServeEngine {
+    /// Admission + scheduling (see [`Batcher`] for the state machine).
     pub batcher: Batcher,
+    /// The paged KV pool backing the running batch.
     pub kv: PagedKv,
+    /// Execution backend: roofline cost model or live PJRT.
     pub backend: Box<dyn ExecBackend>,
     /// Total decode tokens produced (throughput accounting).
     pub tokens_emitted: u64,
@@ -160,12 +182,22 @@ impl ServeEngine {
         n
     }
 
-    /// Drain everything (switchover): in-flight requests are handed back
-    /// for migration to the successor instance.
+    /// Drain everything (switchover): in-flight requests — running and
+    /// suspended, with their decode progress — are handed back for
+    /// migration to the successor instance, followed by the waiting
+    /// queue. All KV blocks in this engine's pool are released.
     pub fn drain(&mut self) -> (Vec<Request>, Vec<Request>) {
         let running = self.batcher.take_all_running(&mut self.kv);
         let waiting = self.batcher.take_waiting();
         (running, waiting)
+    }
+
+    /// Freeze decode for the given sequences while their KV blocks are
+    /// copied to a new owner (scaling-event handoff). Returns how many
+    /// were actually suspended. They are returned by the next
+    /// [`Self::drain`] alongside the running batch.
+    pub fn suspend_sequences(&mut self, ids: &[u64]) -> usize {
+        self.batcher.suspend(ids)
     }
 
     pub fn has_work(&self) -> bool {

@@ -21,10 +21,14 @@
 //! | placement | expert placement (beyond the paper): round-    |
 //! |         | robin vs load-aware vs replication on a          |
 //! |         | Zipf-skewed routing trace across an EP change    |
+//! | kvmigrate | live-sequence KV handoff (§4.4 claim): remap / |
+//! |         | p2p-copy / recompute vs drain-and-recompute      |
+//! |         | across DP4→DP6 and DP4→DP3 under long contexts   |
 
 pub mod common;
 pub mod fig1;
 pub mod fleet;
+pub mod kvmigrate;
 pub mod fig4;
 pub mod fig7;
 pub mod fig8;
@@ -41,7 +45,7 @@ use anyhow::{bail, Result};
 pub const ALL: &[&str] = &[
     "fig1a", "fig1b", "fig4a", "fig4b", "fig7", "fig8", "fig9a", "fig9b",
     "fig10", "fig11", "fig12", "table1", "table2", "table3", "fleet",
-    "placement",
+    "placement", "kvmigrate",
 ];
 
 /// Run one experiment by id, returning the rendered report.
@@ -63,6 +67,7 @@ pub fn run(id: &str, fast: bool) -> Result<String> {
         "table3" => tables::table3()?,
         "fleet" => fleet::run(fast)?,
         "placement" => placement::run(fast)?,
+        "kvmigrate" => kvmigrate::run(fast)?,
         other => bail!("unknown experiment '{other}' (see `repro exp list`)"),
     };
     // Persist alongside printing.

@@ -17,6 +17,8 @@ use crate::device::hbm::RegionKind;
 use crate::device::ipc::ProcId;
 use crate::device::{Cluster, DeviceId, RegionId};
 use crate::engine::moe::Routing;
+use crate::engine::CostModel;
+use crate::kvmigrate::{plan_kv_migration, KvSnapshot, KvVerdict};
 use crate::placement::{
     solve_layer, ExpertLoadStats, LayerPlacementInput, PlacementConfig,
     PlacementMode,
@@ -69,6 +71,15 @@ pub struct ScaleStats {
     pub kv_init_time: f64,
     /// Non-vpage realloc penalty (ablation only).
     pub realloc_time: f64,
+    /// Live-sequence KV handoff: fabric time of the block copies plus the
+    /// per-sequence page-table handovers. NOT included in [`Self::total`]:
+    /// the weight work runs in the serving-concurrent phase, while KV
+    /// copies run inside the switchover window (the owning sequences are
+    /// suspended so their blocks stay byte-stable) — the scaling method
+    /// adds this to the switchover stage instead.
+    pub kv_migrate_time: f64,
+    /// Sum of the serving-concurrent stages (excludes
+    /// [`Self::kv_migrate_time`]).
     pub total: f64,
 }
 
@@ -394,8 +405,24 @@ impl HmmControl {
     /// configuration to `to` (§5.2 "HMM Reconfigures Memory Layout").
     /// Expert owners come from the load-aware solver when
     /// [`PlacementMode::LoadAware`] is active and routing stats exist;
-    /// otherwise from count-balanced minimal movement.
+    /// otherwise from count-balanced minimal movement. Plans weights only;
+    /// use [`Self::plan_scale_with_kv`] to also carry live sequences.
     pub fn plan_scale(&self, to: &ParallelConfig) -> Result<ScalePlan> {
+        self.plan_scale_with_kv(to, None)
+    }
+
+    /// Like [`Self::plan_scale`], but additionally plans the handoff of
+    /// every live sequence's KV blocks (`kv` is the ownership snapshot
+    /// taken at the scale command): remap legs for sequences whose device
+    /// group survives, P2P copy legs for movers (sharing the expert
+    /// migration's byte budget — experts are planned first, KV copies
+    /// consume the leftover), and drop-recompute legs only where
+    /// re-prefill is cheaper than the transfer or the budget ran out.
+    pub fn plan_scale_with_kv(
+        &self,
+        to: &ParallelConfig,
+        kv: Option<&KvSnapshot>,
+    ) -> Result<ScalePlan> {
         let (from, from_layout) = self
             .layout
             .as_ref()
@@ -507,6 +534,46 @@ impl HmmControl {
             }
         }
 
+        // Live-sequence KV legs: planned after experts so the copy legs
+        // see only the leftover migration budget.
+        if let Some(snapshot) = kv.filter(|s| !s.is_empty()) {
+            let cost = CostModel::new(
+                self.model.clone(),
+                self.cluster.borrow().timings.clone(),
+            );
+            let (kv_plan, _used) =
+                plan_kv_migration(snapshot, to, &cost, budget);
+            for leg in &kv_plan.legs {
+                match leg.verdict {
+                    KvVerdict::Remap { rank } => {
+                        ops.push(PlanOp::KvBlockRemap {
+                            request: leg.id,
+                            // Lead device of the surviving group (KV is
+                            // TP-sharded; the group moves as one).
+                            dev: to.devices[rank * to.tp],
+                            blocks: leg.blocks,
+                        });
+                    }
+                    KvVerdict::Copy { .. } => {
+                        ops.push(PlanOp::KvBlockCopy {
+                            request: leg.id,
+                            blocks: leg.blocks,
+                            bytes: leg.len as u64
+                                * kv_plan.bytes_per_token,
+                            legs: kv_plan.fabric_legs(leg),
+                        });
+                    }
+                    KvVerdict::Recompute => {
+                        ops.push(PlanOp::KvDropRecompute {
+                            request: leg.id,
+                            tokens: leg.len,
+                            blocks: leg.blocks,
+                        });
+                    }
+                }
+            }
+        }
+
         Ok(ScalePlan {
             from_label: from.label(),
             to_label: to.label(),
@@ -536,6 +603,10 @@ impl HmmControl {
         let mut disk_time: BTreeMap<DeviceId, f64> = BTreeMap::new();
         let mut remap_ops: BTreeMap<DeviceId, u64> = BTreeMap::new();
         let mut kv_inits: Vec<(DeviceId, u64)> = Vec::new();
+        // Live-sequence KV handoff legs (timed into the switchover
+        // window, not the concurrent phase).
+        let mut kv_legs: Vec<(DeviceId, DeviceId, u64)> = Vec::new();
+        let mut kv_seq_handovers: u64 = 0;
 
         {
             let mut cluster = self.cluster.borrow_mut();
@@ -661,6 +732,23 @@ impl HmmControl {
                             }
                         }
                     }
+                    PlanOp::KvBlockRemap { .. } => {
+                        // Blocks stay physically put; the successor's
+                        // block table adopts them — one O(1) page-table
+                        // handover per sequence.
+                        kv_seq_handovers += 1;
+                    }
+                    PlanOp::KvBlockCopy { legs, .. } => {
+                        kv_legs.extend(legs.iter().copied());
+                        // Destination block-table bind after the copy.
+                        kv_seq_handovers += 1;
+                    }
+                    PlanOp::KvDropRecompute { .. } => {
+                        // Blocks are released when the old engine drains;
+                        // nothing moves and nothing is charged here — the
+                        // recompute bill lands on the successor's prefill
+                        // path (and in the sequence's TTFT).
+                    }
                     PlanOp::KvInit { dev, bytes } => {
                         let kv = cluster.devices[*dev].hbm.alloc(
                             *bytes,
@@ -717,6 +805,11 @@ impl HmmControl {
                 .iter()
                 .map(|&(_, b)| cluster.timings.kv_alloc(b))
                 .fold(0.0, f64::max);
+            stats.kv_migrate_time = cluster
+                .interconnect
+                .parallel_transfers(&kv_legs)
+                + kv_seq_handovers as f64
+                    * cluster.timings.vpage_remap_per_expert;
         }
 
         // New configuration becomes current; old instance bindings keep
@@ -1026,6 +1119,59 @@ mod tests {
             c.devices[5].hbm.used_by_kind(RegionKind::ExpertWeights),
             0
         );
+    }
+
+    #[test]
+    fn plan_with_kv_shares_budget_and_conserves_blocks() {
+        use crate::engine::PagedKv;
+        use crate::kvmigrate::KvSnapshot;
+
+        let (_c, mut hmm) = setup(6);
+        let from = par(3, 2, 0..6);
+        hmm.load_initial(&from, KV).unwrap();
+
+        // Live pool: two long sequences per DP rank (ids mod 3), one tiny
+        // one on the departing rank 2.
+        let mut pool = PagedKv::new(100_000, 16);
+        for id in [0u64, 1, 2, 3, 4, 5] {
+            pool.admit(id, 5000).unwrap();
+        }
+        pool.admit(8, 30).unwrap(); // rank 2, tiny → recompute by cost
+        let snap = KvSnapshot::capture(&pool, &from);
+
+        let to = par(2, 2, 0..4);
+        let plan = hmm.plan_scale_with_kv(&to, Some(&snap)).unwrap();
+        assert!(plan.kv_blocks_conserved(snap.total_blocks()));
+        // Ranks 0/1 survive: their four long sequences remap.
+        assert_eq!(plan.kv_remapped_blocks(), 4 * 313);
+        // Rank 2's long sequences copy; the tiny one recomputes.
+        assert_eq!(plan.kv_copied_blocks(), 2 * 313);
+        assert_eq!(plan.kv_freed_blocks(), 2);
+        assert_eq!(plan.kv_recompute_tokens(), 30);
+        // Copy legs start on departing devices 4/5 only.
+        for (src, dst, _) in plan.kv_transfers() {
+            assert!(src >= 4 && dst < 4, "{src} -> {dst}");
+        }
+        // The weight plan is untouched by KV legs.
+        assert!(plan.migrations_have_matching_evictions());
+
+        // Executing the plan times the KV legs into the switchover-side
+        // stat, not the concurrent total.
+        let stats = hmm.execute_plan(&plan, &to).unwrap();
+        assert!(stats.kv_migrate_time > 0.0);
+        assert!(
+            stats.total > stats.kv_migrate_time,
+            "kv time must not dominate or leak into total: {stats:?}"
+        );
+
+        // A zero leftover budget forces every mover to recompute.
+        let (_c2, mut hmm2) = setup(6);
+        hmm2.placement.migration_budget_bytes = 0;
+        hmm2.load_initial(&from, KV).unwrap();
+        let starved = hmm2.plan_scale_with_kv(&to, Some(&snap)).unwrap();
+        assert_eq!(starved.kv_copied_blocks(), 0);
+        assert_eq!(starved.kv_freed_blocks(), 2 * 313 + 2);
+        assert!(starved.kv_blocks_conserved(snap.total_blocks()));
     }
 
     #[test]

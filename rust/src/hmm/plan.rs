@@ -38,6 +38,33 @@ pub enum PlanOp {
     KvInit { dev: DeviceId, bytes: u64 },
     /// Reuse the existing KV cache on a surviving device.
     KvReuse { dev: DeviceId },
+    /// Zero-copy remap of one live sequence's KV block table: its device
+    /// group survives, the blocks stay physically put, and the successor
+    /// adopts them through the virtual-page tables (an O(1) page-table
+    /// handover per sequence, independent of context length).
+    KvBlockRemap {
+        request: u64,
+        dev: DeviceId,
+        blocks: usize,
+    },
+    /// P2P-copy one live sequence's KV blocks to its new owner replica.
+    /// `legs` holds the per-TP-shard fabric transfers `(src, dst, bytes)`;
+    /// `bytes` is their total, charged against the shared migration
+    /// budget.
+    KvBlockCopy {
+        request: u64,
+        blocks: usize,
+        bytes: u64,
+        legs: Vec<(DeviceId, DeviceId, u64)>,
+    },
+    /// Drop one live sequence's KV and re-prefill it on the successor —
+    /// planned only when recompute is cheaper than the transfer or the
+    /// byte budget is exhausted.
+    KvDropRecompute {
+        request: u64,
+        tokens: usize,
+        blocks: usize,
+    },
     /// Release a departing device's non-expert shards and KV cache
     /// (deferred until the old instance drains).
     ReleaseShard { dev: DeviceId },
@@ -124,6 +151,86 @@ impl ScalePlan {
         })
     }
 
+    /// ---- live-KV migration legs ------------------------------------------
+
+    /// Blocks of live sequences that remap in place (zero-copy).
+    pub fn kv_remapped_blocks(&self) -> usize {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                PlanOp::KvBlockRemap { blocks, .. } => *blocks,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Blocks of live sequences that move over the fabric.
+    pub fn kv_copied_blocks(&self) -> usize {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                PlanOp::KvBlockCopy { blocks, .. } => *blocks,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Blocks freed because their sequence re-prefills on the successor.
+    pub fn kv_freed_blocks(&self) -> usize {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                PlanOp::KvDropRecompute { blocks, .. } => *blocks,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Total bytes the live-KV copy legs move.
+    pub fn kv_copied_bytes(&self) -> u64 {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                PlanOp::KvBlockCopy { bytes, .. } => *bytes,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Tokens re-prefilled from scratch by the recompute legs.
+    pub fn kv_recompute_tokens(&self) -> usize {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                PlanOp::KvDropRecompute { tokens, .. } => *tokens,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Per-device fabric legs of the live-KV copies (for
+    /// [`crate::device::Interconnect::parallel_transfers`]). Kept
+    /// separate from [`Self::transfers`]: weight migration runs in the
+    /// concurrent phase, KV copies in the switchover window.
+    pub fn kv_transfers(&self) -> Vec<(DeviceId, DeviceId, u64)> {
+        self.ops
+            .iter()
+            .flat_map(|op| match op {
+                PlanOp::KvBlockCopy { legs, .. } => legs.clone(),
+                _ => Vec::new(),
+            })
+            .collect()
+    }
+
+    /// Conservation invariant over live KV: every snapshot block is
+    /// accounted exactly once — remapped, copied, or freed.
+    pub fn kv_blocks_conserved(&self, snapshot_blocks: usize) -> bool {
+        self.kv_remapped_blocks()
+            + self.kv_copied_blocks()
+            + self.kv_freed_blocks()
+            == snapshot_blocks
+    }
+
     /// Reuse fraction: zero-copied bytes / (zero-copied + moved) — the
     /// plan-quality metric the paper's design maximises.
     pub fn reuse_fraction(&self) -> f64 {
@@ -189,6 +296,37 @@ mod tests {
     #[test]
     fn empty_plan_reuses_everything() {
         assert_eq!(ScalePlan::default().reuse_fraction(), 1.0);
+    }
+
+    #[test]
+    fn kv_leg_accounting_and_conservation() {
+        let p = ScalePlan {
+            from_label: "DP4-TP2-EP8".into(),
+            to_label: "DP3-TP2-EP6".into(),
+            ops: vec![
+                PlanOp::KvBlockRemap { request: 1, dev: 0, blocks: 7 },
+                PlanOp::KvBlockRemap { request: 2, dev: 2, blocks: 5 },
+                PlanOp::KvBlockCopy {
+                    request: 3,
+                    blocks: 250,
+                    bytes: 4000,
+                    legs: vec![(6, 0, 2000), (7, 1, 2000)],
+                },
+                PlanOp::KvDropRecompute { request: 7, tokens: 40, blocks: 3 },
+            ],
+        };
+        assert_eq!(p.kv_remapped_blocks(), 12);
+        assert_eq!(p.kv_copied_blocks(), 250);
+        assert_eq!(p.kv_freed_blocks(), 3);
+        assert_eq!(p.kv_copied_bytes(), 4000);
+        assert_eq!(p.kv_recompute_tokens(), 40);
+        assert_eq!(p.kv_transfers(), vec![(6, 0, 2000), (7, 1, 2000)]);
+        assert!(p.kv_blocks_conserved(265));
+        assert!(!p.kv_blocks_conserved(264));
+        // KV legs are invisible to the weight-migration accounting.
+        assert_eq!(p.p2p_bytes(), 0);
+        assert_eq!(p.transfers(), Vec::new());
+        assert!(p.migrations_have_matching_evictions());
     }
 
     #[test]

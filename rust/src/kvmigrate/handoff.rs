@@ -1,0 +1,246 @@
+//! The live-sequence handoff contract between a scaling method and the
+//! serving loop.
+//!
+//! A [`KvHandoff`] rides in [`crate::scaling::ScalingOutcome`] and tells
+//! the coordinator two things: which sequences to *suspend* when the
+//! switchover window opens (their KV blocks are in flight and must stay
+//! byte-stable), and how to dispose of every drained sequence at
+//! switchover — adopt with decode progress intact (remap / copy) or
+//! restart from scratch (recompute). Sequences admitted *after* the plan
+//! was drawn are not in the per-id lists; they fall back to their home
+//! rank's verdict (a surviving rank remaps, a departing one recomputes —
+//! such sequences are young, so the recompute is cheap).
+
+use crate::config::ParallelConfig;
+use crate::workload::RequestId;
+
+use super::ownership::{home_rank, rank_devices};
+use super::planner::{KvMigrationPlan, KvVerdict};
+
+/// How ElasticMoE carries live KV across a scaling event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KvHandoffPolicy {
+    /// Plan per-sequence remap / p2p-copy / recompute legs (the paper's
+    /// zero-copy KV reuse, extended with costed transfers).
+    #[default]
+    Migrate,
+    /// Legacy switchover: drop every in-flight sequence's KV and
+    /// re-prefill it on the successor. Kept as the measurable baseline
+    /// for `repro exp kvmigrate`.
+    DrainRecompute,
+}
+
+/// Disposition of one drained sequence at switchover.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HandoffDisposition {
+    /// Blocks stayed put (device group survives): adopt, zero bytes moved.
+    Remap,
+    /// Blocks were P2P-copied to a new owner: adopt.
+    CopyAdopt,
+    /// KV dropped: restart the sequence from scratch.
+    Recompute,
+}
+
+/// Per-sequence dispositions of one scaling event.
+#[derive(Debug, Clone)]
+pub struct KvHandoff {
+    /// Sequences whose blocks remap in place (sorted by id).
+    pub remap: Vec<RequestId>,
+    /// Sequences whose blocks are copied over the fabric (sorted by id).
+    pub copy: Vec<RequestId>,
+    /// Sequences that re-prefill on the successor (sorted by id).
+    pub recompute: Vec<RequestId>,
+    /// Source-configuration DP degree (for the home-rank fallback).
+    pub from_dp: usize,
+    /// Per source rank: does its device group survive into the target?
+    pub rank_survives: Vec<bool>,
+}
+
+impl KvHandoff {
+    /// Build a handoff from disposition lists — the single place the
+    /// rank-survival (device-group identity) rule is computed. Lists are
+    /// sorted here; callers may pass them in any order.
+    pub fn new(
+        mut remap: Vec<RequestId>,
+        mut copy: Vec<RequestId>,
+        mut recompute: Vec<RequestId>,
+        from: &ParallelConfig,
+        to: &ParallelConfig,
+    ) -> Self {
+        remap.sort_unstable();
+        copy.sort_unstable();
+        recompute.sort_unstable();
+        let rank_survives = (0..from.dp)
+            .map(|r| {
+                let group = rank_devices(from, r);
+                (0..to.dp).any(|tr| rank_devices(to, tr) == group)
+            })
+            .collect();
+        KvHandoff {
+            remap,
+            copy,
+            recompute,
+            from_dp: from.dp,
+            rank_survives,
+        }
+    }
+
+    /// Build the handoff from a migration plan.
+    pub fn from_plan(plan: &KvMigrationPlan) -> Self {
+        let (mut remap, mut copy, mut recompute) =
+            (Vec::new(), Vec::new(), Vec::new());
+        for leg in &plan.legs {
+            match leg.verdict {
+                KvVerdict::Remap { .. } => remap.push(leg.id),
+                KvVerdict::Copy { .. } => copy.push(leg.id),
+                KvVerdict::Recompute => recompute.push(leg.id),
+            }
+        }
+        KvHandoff::new(remap, copy, recompute, &plan.from, &plan.to)
+    }
+
+    /// Disposition of one drained sequence. Ids missing from the plan
+    /// (admitted after the snapshot) fall back to their home rank's
+    /// survival verdict.
+    pub fn disposition(&self, id: RequestId) -> HandoffDisposition {
+        if self.remap.binary_search(&id).is_ok() {
+            return HandoffDisposition::Remap;
+        }
+        if self.copy.binary_search(&id).is_ok() {
+            return HandoffDisposition::CopyAdopt;
+        }
+        if self.recompute.binary_search(&id).is_ok() {
+            return HandoffDisposition::Recompute;
+        }
+        let rank = home_rank(id, self.from_dp);
+        if self.rank_survives.get(rank).copied().unwrap_or(false) {
+            HandoffDisposition::Remap
+        } else {
+            HandoffDisposition::Recompute
+        }
+    }
+
+    /// Sequences the serving loop must suspend when the switchover window
+    /// opens: exactly the copy legs (their bytes are in flight; remapped
+    /// sequences keep decoding in place, recompute sequences have nothing
+    /// to keep stable).
+    pub fn suspend_ids(&self) -> &[RequestId] {
+        &self.copy
+    }
+}
+
+/// What actually happened to in-flight sequences at a switchover —
+/// accumulated by the serving simulators across every scaling event of a
+/// run, and the quantity `repro exp kvmigrate` compares across methods.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct KvHandoffStats {
+    /// Sequences adopted with blocks in place under a per-sequence plan.
+    pub remapped: usize,
+    /// Sequences adopted after a P2P block copy.
+    pub copied: usize,
+    /// Sequences adopted under a blanket `preserves_inflight` with no
+    /// per-sequence plan (methods that keep in-flight work alive without
+    /// modelling KV movement — e.g. the Horizontal/Extravagant
+    /// baselines). Kept separate from `remapped` so cross-method
+    /// comparisons never read false zero-copy-remap activity.
+    pub adopted_blanket: usize,
+    /// Sequences restarted from scratch.
+    pub recomputed: usize,
+    /// Prompt tokens re-prefilled because of restarts (the recompute
+    /// bill; 0 under a fully zero-recompute handoff).
+    pub recompute_tokens: u64,
+    /// Decode tokens discarded by restarts (regenerated afterwards).
+    pub lost_decode_tokens: u64,
+    /// Decode progress carried across events by adopted sequences.
+    pub adopted_tokens: u64,
+}
+
+impl KvHandoffStats {
+    /// Fold another event's stats into this accumulator.
+    pub fn merge(&mut self, other: &KvHandoffStats) {
+        self.remapped += other.remapped;
+        self.copied += other.copied;
+        self.adopted_blanket += other.adopted_blanket;
+        self.recomputed += other.recomputed;
+        self.recompute_tokens += other.recompute_tokens;
+        self.lost_decode_tokens += other.lost_decode_tokens;
+        self.adopted_tokens += other.adopted_tokens;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ParallelConfig;
+    use crate::kvmigrate::planner::KvLeg;
+
+    fn par(dp: usize) -> ParallelConfig {
+        ParallelConfig::standard(dp, 2, (0..dp * 2).collect()).unwrap()
+    }
+
+    fn plan() -> KvMigrationPlan {
+        KvMigrationPlan {
+            legs: vec![
+                KvLeg {
+                    id: 1,
+                    len: 100,
+                    blocks: 7,
+                    verdict: KvVerdict::Remap { rank: 1 },
+                },
+                KvLeg {
+                    id: 3,
+                    len: 4000,
+                    blocks: 250,
+                    verdict: KvVerdict::Copy { src_rank: 3, dst_rank: 0 },
+                },
+                KvLeg {
+                    id: 7,
+                    len: 40,
+                    blocks: 3,
+                    verdict: KvVerdict::Recompute,
+                },
+            ],
+            bytes_per_token: 1024,
+            from: par(4),
+            to: par(3),
+        }
+    }
+
+    #[test]
+    fn dispositions_follow_the_plan() {
+        let h = KvHandoff::from_plan(&plan());
+        assert_eq!(h.disposition(1), HandoffDisposition::Remap);
+        assert_eq!(h.disposition(3), HandoffDisposition::CopyAdopt);
+        assert_eq!(h.disposition(7), HandoffDisposition::Recompute);
+        assert_eq!(h.suspend_ids(), &[3]);
+    }
+
+    #[test]
+    fn unknown_ids_fall_back_to_rank_survival() {
+        let h = KvHandoff::from_plan(&plan());
+        // DP4 -> DP3 on a device prefix: ranks 0..2 survive, 3 departs.
+        assert_eq!(h.rank_survives, vec![true, true, true, false]);
+        // id 21 ≡ 1 (mod 4): surviving rank → remap.
+        assert_eq!(h.disposition(21), HandoffDisposition::Remap);
+        // id 23 ≡ 3 (mod 4): departing rank → recompute.
+        assert_eq!(h.disposition(23), HandoffDisposition::Recompute);
+    }
+
+    #[test]
+    fn stats_merge_adds_fields() {
+        let mut a = KvHandoffStats {
+            remapped: 1,
+            copied: 2,
+            adopted_blanket: 4,
+            recomputed: 3,
+            recompute_tokens: 100,
+            lost_decode_tokens: 10,
+            adopted_tokens: 50,
+        };
+        a.merge(&a.clone());
+        assert_eq!(a.remapped, 2);
+        assert_eq!(a.adopted_blanket, 8);
+        assert_eq!(a.recompute_tokens, 200);
+        assert_eq!(a.adopted_tokens, 100);
+    }
+}

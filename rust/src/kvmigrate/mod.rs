@@ -1,0 +1,49 @@
+//! Zero-recompute KV-cache migration across scaling events.
+//!
+//! ElasticMoE's zero-downtime claim rests on reusing not just weights but
+//! the *KV caches of live sequences* across a reconfiguration: "an HBM
+//! Management Module reuses weights and KV caches via zero-copy
+//! remapping" while P2P transfers bring new devices online. Before this
+//! subsystem, the switchover path drained every in-flight sequence and
+//! re-prefilled it from scratch on the successor — correct, but it pays a
+//! full recompute of every mid-stream context and inflates TTFT through
+//! the scaling window.
+//!
+//! This module makes the per-request block tables of
+//! [`crate::engine::PagedKv`] the migratable unit:
+//!
+//! 1. [`ownership`] — a block-granular ownership map layered on the paged
+//!    pool: each live sequence is attributed to the DP replica (device
+//!    group) that holds its blocks, captured as a [`KvSnapshot`] at the
+//!    scale command.
+//! 2. [`planner`] — classifies every sequence for the target
+//!    configuration: **remap** (its device group survives → zero-copy via
+//!    the same virtual-page machinery experts use), **p2p-copy** (its
+//!    group departs → blocks move over the fabric, costed through
+//!    [`crate::device::Interconnect`] and charged against the shared
+//!    migration-byte budget), or **recompute** (only when re-prefill is
+//!    cheaper than the transfer, per [`crate::engine::CostModel`], or the
+//!    budget is exhausted). The plan conserves blocks exactly:
+//!    `before = remapped + copied + freed`.
+//! 3. [`handoff`] — the choreography contract the coordinator enacts:
+//!    which sequences suspend decode during the copy window, and how each
+//!    drained sequence is disposed of at switchover (adopt with progress
+//!    vs. restart).
+//!
+//! The HMM folds the plan into its scaling plan
+//! ([`crate::hmm::HmmControl::plan_scale_with_kv`]) so KV legs ride the
+//! same op list, timing model, and byte budget as expert migrations;
+//! [`crate::scaling::ElasticMoE`] carries the resulting [`KvHandoff`] in
+//! its [`crate::scaling::ScalingOutcome`]. Baselines keep the legacy
+//! drain-and-recompute path, so `repro exp kvmigrate` can measure the
+//! delta.
+
+pub mod handoff;
+pub mod ownership;
+pub mod planner;
+
+pub use handoff::{
+    HandoffDisposition, KvHandoff, KvHandoffPolicy, KvHandoffStats,
+};
+pub use ownership::{home_rank, rank_devices, KvSeq, KvSnapshot};
+pub use planner::{plan_kv_migration, KvLeg, KvMigrationPlan, KvVerdict};

@@ -1,0 +1,143 @@
+//! Block-granular KV ownership: which DP replica's devices hold each live
+//! sequence's blocks.
+//!
+//! The serving engine pools the KV budget of all DP replicas into one
+//! [`crate::engine::PagedKv`]; physically, a sequence's blocks live on the
+//! `tp` devices of exactly one replica (attention is data-parallel — a
+//! sequence never spans replicas). The ownership map recovers that
+//! attribution deterministically: request `id` is homed on DP rank
+//! `id % dp` (sticky for the request's lifetime, balanced in
+//! expectation). A [`KvSnapshot`] captures the map plus per-sequence
+//! block tables at the instant a scale command is issued; the planner
+//! ([`super::planner`]) classifies each entry against the target
+//! configuration.
+
+use crate::config::ParallelConfig;
+use crate::device::DeviceId;
+use crate::engine::PagedKv;
+use crate::workload::RequestId;
+
+/// DP rank whose devices hold `id`'s KV blocks (sticky hash).
+pub fn home_rank(id: RequestId, dp: usize) -> usize {
+    (id % dp.max(1) as u64) as usize
+}
+
+/// The `tp` devices backing DP rank `rank` of `p` (rank-major layout:
+/// replica `d` owns `devices[d*tp .. (d+1)*tp]`).
+pub fn rank_devices(p: &ParallelConfig, rank: usize) -> &[DeviceId] {
+    &p.devices[rank * p.tp..(rank + 1) * p.tp]
+}
+
+/// One live sequence's KV footprint at snapshot time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvSeq {
+    pub id: RequestId,
+    /// Current stored tokens (prompt + generated so far).
+    pub len: usize,
+    /// Blocks held in the paged pool.
+    pub blocks: usize,
+    /// DP rank of the owning replica in the *source* configuration.
+    pub home_rank: usize,
+}
+
+/// Snapshot of every live sequence's KV ownership at a scale command.
+#[derive(Debug, Clone)]
+pub struct KvSnapshot {
+    /// Tokens per block of the underlying pool.
+    pub block_tokens: usize,
+    /// Live sequences, sorted by request id (deterministic).
+    pub seqs: Vec<KvSeq>,
+    /// The configuration the blocks currently live on.
+    pub from: ParallelConfig,
+}
+
+impl KvSnapshot {
+    /// Capture the ownership map from a live pool.
+    pub fn capture(kv: &PagedKv, from: &ParallelConfig) -> Self {
+        let seqs = kv
+            .sequences()
+            .into_iter()
+            .map(|(id, len, blocks)| KvSeq {
+                id,
+                len,
+                blocks,
+                home_rank: home_rank(id, from.dp),
+            })
+            .collect();
+        KvSnapshot {
+            block_tokens: kv.block_tokens(),
+            seqs,
+            from: from.clone(),
+        }
+    }
+
+    /// An empty snapshot (no live sequences) on `from`.
+    pub fn empty(from: &ParallelConfig) -> Self {
+        KvSnapshot {
+            block_tokens: 16,
+            seqs: Vec::new(),
+            from: from.clone(),
+        }
+    }
+
+    /// Total blocks held by live sequences — the conservation baseline
+    /// the migration plan must account for exactly.
+    pub fn total_blocks(&self) -> usize {
+        self.seqs.iter().map(|s| s.blocks).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn par(dp: usize, tp: usize) -> ParallelConfig {
+        ParallelConfig::standard(dp, tp, (0..dp * tp).collect()).unwrap()
+    }
+
+    #[test]
+    fn home_rank_is_sticky_and_balanced() {
+        let dp = 4;
+        let counts = (0..1000u64).fold(vec![0usize; dp], |mut c, id| {
+            c[home_rank(id, dp)] += 1;
+            c
+        });
+        assert!(counts.iter().all(|&c| c == 250), "{counts:?}");
+        // Sticky: same id, same rank, every time.
+        assert_eq!(home_rank(42, dp), home_rank(42, dp));
+        // Degenerate dp never panics.
+        assert_eq!(home_rank(7, 0), 0);
+    }
+
+    #[test]
+    fn rank_devices_are_rank_major() {
+        let p = par(3, 2);
+        assert_eq!(rank_devices(&p, 0), &[0, 1]);
+        assert_eq!(rank_devices(&p, 2), &[4, 5]);
+    }
+
+    #[test]
+    fn capture_attributes_every_sequence() {
+        let p = par(2, 2);
+        let mut kv = PagedKv::new(100, 16);
+        kv.admit(3, 100).unwrap(); // rank 1, 7 blocks
+        kv.admit(4, 33).unwrap(); // rank 0, 3 blocks
+        let snap = KvSnapshot::capture(&kv, &p);
+        assert_eq!(snap.block_tokens, 16);
+        assert_eq!(snap.seqs.len(), 2);
+        assert_eq!(snap.total_blocks(), kv.used_blocks());
+        assert_eq!(
+            snap.seqs[0],
+            KvSeq { id: 3, len: 100, blocks: 7, home_rank: 1 }
+        );
+        assert_eq!(
+            snap.seqs[1],
+            KvSeq { id: 4, len: 33, blocks: 3, home_rank: 0 }
+        );
+        assert!(KvSnapshot::empty(&p).is_empty());
+    }
+}

@@ -1,0 +1,364 @@
+//! The KV-migration planner: classify every live sequence for the target
+//! configuration as remap / p2p-copy / recompute, under the shared
+//! migration-byte budget, conserving blocks exactly.
+
+use crate::config::ParallelConfig;
+use crate::device::DeviceId;
+use crate::engine::CostModel;
+
+use super::ownership::{rank_devices, KvSnapshot};
+use crate::workload::RequestId;
+
+/// How one sequence's KV crosses the scaling event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvVerdict {
+    /// Its device group survives unchanged: blocks stay physically put
+    /// and the successor adopts them via zero-copy remap (the same
+    /// virtual-page mechanism experts use). Zero bytes moved, zero
+    /// tokens recomputed.
+    Remap {
+        /// DP rank in the *target* configuration (same devices).
+        rank: usize,
+    },
+    /// Its device group departs: blocks are P2P-copied, one leg per TP
+    /// shard pair, to the least-loaded target replica. Bytes are charged
+    /// against the shared migration budget.
+    Copy { src_rank: usize, dst_rank: usize },
+    /// KV is dropped and the sequence re-prefills on the successor —
+    /// chosen only when recompute is cheaper than the transfer
+    /// ([`CostModel::kv_prefer_copy`]) or the byte budget is exhausted.
+    Recompute,
+}
+
+/// One sequence's leg of the migration plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvLeg {
+    pub id: RequestId,
+    /// Stored tokens at snapshot time.
+    pub len: usize,
+    /// Blocks held at snapshot time.
+    pub blocks: usize,
+    pub verdict: KvVerdict,
+}
+
+/// The full KV-migration plan for one scaling event.
+#[derive(Debug, Clone)]
+pub struct KvMigrationPlan {
+    pub legs: Vec<KvLeg>,
+    /// KV bytes per token of the model (for byte accounting).
+    pub bytes_per_token: u64,
+    pub from: ParallelConfig,
+    pub to: ParallelConfig,
+}
+
+impl KvMigrationPlan {
+    /// Blocks that stay put and remap (zero-copy).
+    pub fn remapped_blocks(&self) -> usize {
+        self.count(|v| matches!(v, KvVerdict::Remap { .. }))
+    }
+
+    /// Blocks that move over the fabric.
+    pub fn copied_blocks(&self) -> usize {
+        self.count(|v| matches!(v, KvVerdict::Copy { .. }))
+    }
+
+    /// Blocks freed for recompute (their sequences re-prefill).
+    pub fn freed_blocks(&self) -> usize {
+        self.count(|v| matches!(v, KvVerdict::Recompute))
+    }
+
+    fn count(&self, f: impl Fn(&KvVerdict) -> bool) -> usize {
+        self.legs
+            .iter()
+            .filter(|l| f(&l.verdict))
+            .map(|l| l.blocks)
+            .sum()
+    }
+
+    /// Total bytes the copy legs move.
+    pub fn copied_bytes(&self) -> u64 {
+        self.legs
+            .iter()
+            .filter(|l| matches!(l.verdict, KvVerdict::Copy { .. }))
+            .map(|l| l.len as u64 * self.bytes_per_token)
+            .sum()
+    }
+
+    /// Tokens that will be re-prefilled from scratch.
+    pub fn recompute_tokens(&self) -> usize {
+        self.legs
+            .iter()
+            .filter(|l| matches!(l.verdict, KvVerdict::Recompute))
+            .map(|l| l.len)
+            .sum()
+    }
+
+    /// Per-device fabric legs `(src, dst, bytes)` of one copy verdict:
+    /// each TP shard's KV slice moves between the pairwise shard devices
+    /// of the old and new owner replicas. Empty for remap/recompute.
+    /// Single source of truth for the shard-pair split — the HMM embeds
+    /// these legs in its [`crate::hmm::PlanOp::KvBlockCopy`] ops.
+    pub fn fabric_legs(&self, leg: &KvLeg) -> Vec<(DeviceId, DeviceId, u64)> {
+        let KvVerdict::Copy { src_rank, dst_rank } = leg.verdict else {
+            return Vec::new();
+        };
+        let tp = self.from.tp.max(1);
+        let bytes = leg.len as u64 * self.bytes_per_token;
+        let src = rank_devices(&self.from, src_rank);
+        let dst = rank_devices(&self.to, dst_rank);
+        (0..tp)
+            .map(|t| (src[t], dst[t], bytes / tp as u64))
+            .collect()
+    }
+
+    /// All copy verdicts' fabric legs, flattened.
+    pub fn transfers(&self) -> Vec<(DeviceId, DeviceId, u64)> {
+        self.legs
+            .iter()
+            .flat_map(|l| self.fabric_legs(l))
+            .collect()
+    }
+
+    /// Conservation invariant: every block that existed at the snapshot
+    /// is accounted for exactly once — remapped, copied, or freed.
+    pub fn blocks_conserved(&self, snapshot_blocks: usize) -> bool {
+        self.remapped_blocks() + self.copied_blocks() + self.freed_blocks()
+            == snapshot_blocks
+    }
+}
+
+/// Map each source DP rank to the target DP rank occupying the *same*
+/// device group, if any. A rank "survives" only when its full TP group is
+/// intact — a partially reused group would still have to move KV shards.
+fn surviving_ranks(
+    from: &ParallelConfig,
+    to: &ParallelConfig,
+) -> Vec<Option<usize>> {
+    (0..from.dp)
+        .map(|r| {
+            let group = rank_devices(from, r);
+            (0..to.dp).find(|&tr| rank_devices(to, tr) == group)
+        })
+        .collect()
+}
+
+/// Plan the KV migration for `snapshot` onto `to`. `budget_bytes` is the
+/// migration-byte budget *remaining after expert migration* (the two
+/// share one budget); copy legs consume it and fall back to recompute
+/// once exhausted. Returns the plan and the bytes it consumed.
+pub fn plan_kv_migration(
+    snapshot: &KvSnapshot,
+    to: &ParallelConfig,
+    cost: &CostModel,
+    budget_bytes: u64,
+) -> (KvMigrationPlan, u64) {
+    let from = &snapshot.from;
+    let survive = surviving_ranks(from, to);
+    let bytes_per_token = cost.model.kv_bytes_per_token();
+
+    // Target-replica block load, seeded by the remapped sequences, so
+    // copy destinations spread across the least-loaded replicas (new
+    // devices start empty and naturally absorb movers).
+    let mut load = vec![0usize; to.dp];
+    let mut legs: Vec<KvLeg> = Vec::with_capacity(snapshot.seqs.len());
+    let mut movers = Vec::new();
+    for s in &snapshot.seqs {
+        match survive.get(s.home_rank).copied().flatten() {
+            Some(rank) => {
+                load[rank] += s.blocks;
+                legs.push(KvLeg {
+                    id: s.id,
+                    len: s.len,
+                    blocks: s.blocks,
+                    verdict: KvVerdict::Remap { rank },
+                });
+            }
+            None => movers.push(*s),
+        }
+    }
+
+    // Longest contexts first: they gain the most from avoiding
+    // recompute, so they get first claim on the byte budget.
+    movers.sort_unstable_by(|a, b| b.len.cmp(&a.len).then(a.id.cmp(&b.id)));
+    let mut budget = budget_bytes;
+    let mut used = 0u64;
+    for s in movers {
+        let bytes = s.len as u64 * bytes_per_token;
+        let verdict = if cost.kv_prefer_copy(to, s.len) && bytes <= budget {
+            let dst_rank = (0..to.dp)
+                .min_by_key(|&r| (load[r], r))
+                .expect("target has at least one replica");
+            load[dst_rank] += s.blocks;
+            budget -= bytes;
+            used += bytes;
+            KvVerdict::Copy { src_rank: s.home_rank, dst_rank }
+        } else {
+            KvVerdict::Recompute
+        };
+        legs.push(KvLeg {
+            id: s.id,
+            len: s.len,
+            blocks: s.blocks,
+            verdict,
+        });
+    }
+    legs.sort_unstable_by_key(|l| l.id);
+
+    (
+        KvMigrationPlan {
+            legs,
+            bytes_per_token,
+            from: from.clone(),
+            to: to.clone(),
+        },
+        used,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::dsv2_lite;
+    use crate::device::Timings;
+    use crate::engine::PagedKv;
+    use crate::kvmigrate::{home_rank, KvSnapshot};
+
+    fn par(dp: usize) -> ParallelConfig {
+        ParallelConfig::standard(dp, 2, (0..dp * 2).collect()).unwrap()
+    }
+
+    fn cost() -> CostModel {
+        CostModel::new(dsv2_lite(), Timings::cloudmatrix())
+    }
+
+    /// A pool with one long sequence per id in `ids` (len 4000 + id).
+    fn snapshot(ids: &[u64], from: &ParallelConfig) -> KvSnapshot {
+        let mut kv = PagedKv::new(100_000, 16);
+        for &id in ids {
+            kv.admit(id, 4000 + id as usize).unwrap();
+        }
+        KvSnapshot::capture(&kv, from)
+    }
+
+    #[test]
+    fn scale_up_remaps_everything() {
+        let from = par(4);
+        let snap = snapshot(&[1, 2, 3, 4, 5, 6, 7, 8], &from);
+        let (plan, used) =
+            plan_kv_migration(&snap, &par(6), &cost(), u64::MAX);
+        assert_eq!(used, 0);
+        assert_eq!(plan.copied_blocks(), 0);
+        assert_eq!(plan.freed_blocks(), 0);
+        assert_eq!(plan.recompute_tokens(), 0);
+        assert_eq!(plan.remapped_blocks(), snap.total_blocks());
+        assert!(plan.blocks_conserved(snap.total_blocks()));
+        assert!(plan.transfers().is_empty());
+        // Remap ranks keep the same device groups.
+        for leg in &plan.legs {
+            let KvVerdict::Remap { rank } = leg.verdict else {
+                panic!("{leg:?}");
+            };
+            assert_eq!(
+                rank_devices(&par(6), rank),
+                rank_devices(&from, home_rank(leg.id, 4)),
+            );
+        }
+    }
+
+    #[test]
+    fn scale_down_copies_long_contexts_off_departing_ranks() {
+        let from = par(4);
+        // Rank 3 (devices 6,7) departs under DP3. ids ≡ 3 (mod 4) live
+        // there.
+        let snap = snapshot(&[1, 2, 3, 4, 6, 7, 11, 15], &from);
+        let to = par(3);
+        let (plan, used) = plan_kv_migration(&snap, &to, &cost(), u64::MAX);
+        assert!(plan.blocks_conserved(snap.total_blocks()));
+        assert!(used > 0, "long contexts must copy, not recompute");
+        assert_eq!(plan.freed_blocks(), 0);
+        let movers: Vec<&KvLeg> = plan
+            .legs
+            .iter()
+            .filter(|l| matches!(l.verdict, KvVerdict::Copy { .. }))
+            .collect();
+        // Exactly the rank-3 sequences move.
+        let mover_ids: Vec<u64> = movers.iter().map(|l| l.id).collect();
+        assert_eq!(mover_ids, vec![3, 7, 11, 15]);
+        // Every fabric leg starts on a departing device (6 or 7).
+        for (src, dst, bytes) in plan.transfers() {
+            assert!(src >= 6, "src {src}");
+            assert!(dst < 6, "dst {dst}");
+            assert!(bytes > 0);
+        }
+        assert_eq!(used, plan.copied_bytes());
+    }
+
+    #[test]
+    fn short_sequences_recompute_by_cost() {
+        let from = par(2);
+        let mut kv = PagedKv::new(100_000, 16);
+        kv.admit(1, 50).unwrap(); // rank 1 (1 % 2), tiny context
+        kv.admit(3, 6000).unwrap(); // rank 1, long context
+        let snap = KvSnapshot::capture(&kv, &from);
+        // Shrink to DP1: rank 1 departs.
+        let to = ParallelConfig::standard(1, 2, vec![0, 1]).unwrap();
+        let (plan, _) = plan_kv_migration(&snap, &to, &cost(), u64::MAX);
+        let verdict = |id: u64| {
+            plan.legs.iter().find(|l| l.id == id).unwrap().verdict
+        };
+        // 50 tokens: the 2 ms P2P setup dwarfs its re-prefill — recompute.
+        assert_eq!(verdict(1), KvVerdict::Recompute);
+        // 6000 tokens: transfer is far cheaper than re-prefill — copy.
+        assert!(matches!(verdict(3), KvVerdict::Copy { .. }));
+        assert!(plan.blocks_conserved(snap.total_blocks()));
+        assert_eq!(plan.recompute_tokens(), 50);
+    }
+
+    #[test]
+    fn exhausted_budget_forces_recompute() {
+        let from = par(4);
+        let snap = snapshot(&[3, 7, 11], &from); // all on departing rank 3
+        let to = par(3);
+        let c = cost();
+        // Budget for exactly one sequence (the longest, id 11: 4011 tok).
+        let budget = 4011 * c.model.kv_bytes_per_token();
+        let (plan, used) = plan_kv_migration(&snap, &to, &c, budget);
+        assert!(used <= budget);
+        let copies = plan
+            .legs
+            .iter()
+            .filter(|l| matches!(l.verdict, KvVerdict::Copy { .. }))
+            .count();
+        assert_eq!(copies, 1, "{plan:?}");
+        // Longest-first: the budget goes to id 11.
+        assert!(matches!(
+            plan.legs.iter().find(|l| l.id == 11).unwrap().verdict,
+            KvVerdict::Copy { .. }
+        ));
+        assert_eq!(plan.freed_blocks() + plan.copied_blocks(), snap.total_blocks());
+        assert!(plan.blocks_conserved(snap.total_blocks()));
+    }
+
+    #[test]
+    fn copy_destinations_balance_block_load() {
+        let from = par(4);
+        // Eight long movers on rank 3; survivors 0..2 carry one seq each.
+        let ids: Vec<u64> =
+            vec![3, 7, 11, 15, 19, 23, 27, 31, 0, 1, 2];
+        let snap = snapshot(&ids, &from);
+        let (plan, _) = plan_kv_migration(&snap, &par(3), &cost(), u64::MAX);
+        let mut per_rank = vec![0usize; 3];
+        for l in &plan.legs {
+            match l.verdict {
+                KvVerdict::Copy { dst_rank, .. } => per_rank[dst_rank] += 1,
+                KvVerdict::Remap { .. } => {}
+                v => panic!("unexpected {v:?}"),
+            }
+        }
+        let (min, max) = (
+            per_rank.iter().min().unwrap(),
+            per_rank.iter().max().unwrap(),
+        );
+        assert!(max - min <= 1, "skewed destinations: {per_rank:?}");
+    }
+}

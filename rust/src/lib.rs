@@ -35,7 +35,11 @@
 //!   (config → device → hmm/imm → scaling → coordinator → experiments).
 //! - `docs/architecture/02-scaling-choreography.md` — the §5.2/Fig-6
 //!   scaling pipeline and exactly when `downtime` / `intake_pause` are set.
-//! - `README.md` — quickstart, experiment and bench commands.
+//! - `docs/architecture/04-kv-cache-lifecycle.md` — KV block lifecycle and
+//!   the live-sequence handoff (remap / p2p-copy / recompute) across
+//!   scaling events ([`kvmigrate`]).
+//! - `README.md` — quickstart, experiment and bench commands, and the
+//!   repro matrix mapping `repro exp` ids to paper artifacts.
 
 pub mod config;
 pub mod coordinator;
@@ -44,6 +48,7 @@ pub mod engine;
 pub mod experiments;
 pub mod hmm;
 pub mod imm;
+pub mod kvmigrate;
 pub mod metrics;
 pub mod placement;
 pub mod runtime;

@@ -6,6 +6,10 @@ use crate::workload::Request;
 /// One finished request's metrics.
 #[derive(Debug, Clone, Copy)]
 pub struct RequestMetrics {
+    /// Request id (each request must finish exactly once — switchover
+    /// handoffs adopt or restart, never duplicate; see
+    /// `rust/tests/integration.rs`).
+    pub id: u64,
     pub arrival: f64,
     pub finished: f64,
     pub ttft: f64,
@@ -45,6 +49,7 @@ impl MetricsRecorder {
         let dropped =
             matches!(r.state, crate::workload::RequestState::Dropped);
         self.finished.push(RequestMetrics {
+            id: r.id,
             arrival: r.arrival,
             finished: r.finished_at.unwrap_or(r.arrival),
             ttft: r.ttft().unwrap_or(f64::INFINITY),
@@ -118,6 +123,29 @@ impl MetricsRecorder {
             .filter(|m| !m.dropped && slo.met(m.ttft, m.tpot))
             .count();
         met as f64 / arrived.len() as f64
+    }
+
+    /// TTFT percentile over requests *arriving* in `[t0, t1)` — the
+    /// KV-handoff experiments measure the scaling window this way, so a
+    /// drained-and-recomputed in-flight sequence (whose TTFT restarts)
+    /// lands in the same bucket as its arrival cohort. NaN when the
+    /// window is empty.
+    pub fn ttft_percentile_by_arrival(
+        &self,
+        t0: f64,
+        t1: f64,
+        pct: f64,
+    ) -> f64 {
+        let ttfts: Vec<f64> = self
+            .finished
+            .iter()
+            .filter(|m| m.arrival >= t0 && m.arrival < t1 && !m.dropped)
+            .map(|m| m.ttft)
+            .collect();
+        if ttfts.is_empty() {
+            return f64::NAN;
+        }
+        crate::util::stats::percentile(&ttfts, pct)
     }
 
     /// SLO attainment for one tenant over the whole run, judged against
@@ -197,6 +225,21 @@ mod tests {
         assert_eq!(rec.attainment_for_tenant(1, &strict), 0.0);
         assert_eq!(rec.attainment_for_tenant(1, &relaxed), 1.0);
         assert!(rec.attainment_for_tenant(9, &strict).is_nan());
+    }
+
+    #[test]
+    fn ttft_percentile_by_arrival_windows() {
+        let mut rec = MetricsRecorder::new();
+        rec.record(&finished_req(1, 5.0, 0.2, 0.1, 5));
+        rec.record(&finished_req(2, 6.0, 8.0, 0.1, 5));
+        rec.record(&finished_req(3, 20.0, 0.3, 0.1, 5));
+        let p99 = rec.ttft_percentile_by_arrival(0.0, 10.0, 99.0);
+        assert!(p99 >= 7.9, "{p99}");
+        let p99_late = rec.ttft_percentile_by_arrival(15.0, 25.0, 99.0);
+        assert!(p99_late < 1.0, "{p99_late}");
+        assert!(rec.ttft_percentile_by_arrival(30.0, 40.0, 99.0).is_nan());
+        // Ids ride along for uniqueness checks.
+        assert_eq!(rec.all()[0].id, 1);
     }
 
     #[test]

@@ -142,6 +142,7 @@ impl ScalingMethod for ColdRestart {
             intake_pause: None,
             transition_derate: 1.0,
             preserves_inflight: false,
+            kv_handoff: None,
             new_parallel: to.clone(),
             peak_devices: to.n_devices(),
         })
@@ -209,6 +210,7 @@ impl ScalingMethod for Extravagant {
             intake_pause: None,
             transition_derate: 1.0,
             preserves_inflight: true, // old instance drains in-flight work
+            kv_handoff: None,
             new_parallel: to.clone(),
             peak_devices: union.len(),
         })
@@ -284,6 +286,7 @@ impl ScalingMethod for Colocated {
             // 1.338 steady -> ~0.35).
             transition_derate: 0.35,
             preserves_inflight: true,
+            kv_handoff: None,
             new_parallel: to.clone(),
             peak_devices: union.len(),
         })
@@ -382,6 +385,7 @@ impl ScalingMethod for Horizontal {
             intake_pause: None,
             transition_derate: 1.0,
             preserves_inflight: true,
+            kv_handoff: None,
             new_parallel: agg,
             peak_devices: union.len(),
         })

@@ -8,6 +8,7 @@ use crate::config::ParallelConfig;
 use crate::hmm::control::{HmmControl, InstanceBinding};
 use crate::imm::manager::InstanceManager;
 use crate::imm::InstanceState;
+use crate::kvmigrate::{KvHandoff, KvHandoffPolicy, KvSnapshot};
 use crate::metrics::ScalingMetrics;
 
 use super::outcome::{ScalingMethod, ScalingOutcome};
@@ -24,6 +25,11 @@ pub struct ElasticMoE {
     pub last_binding: Option<InstanceBinding>,
     /// Pre-initialise standby instances for +/- this many device deltas.
     pub anticipate_steps: Vec<isize>,
+    /// How live sequences' KV crosses a scaling event: per-sequence
+    /// remap/copy/recompute legs (default) or the legacy
+    /// drain-and-recompute switchover (the `repro exp kvmigrate`
+    /// baseline).
+    pub kv_policy: KvHandoffPolicy,
 }
 
 impl ElasticMoE {
@@ -44,6 +50,7 @@ impl ElasticMoE {
             // redistribution-only events (same devices, new placement)
             // also skip pre-init.
             anticipate_steps: vec![-1, 1, 2, 4, 0],
+            kv_policy: KvHandoffPolicy::default(),
         }
     }
 
@@ -72,30 +79,19 @@ impl ElasticMoE {
     }
 }
 
-impl ScalingMethod for ElasticMoE {
-    fn name(&self) -> &'static str {
-        "ElasticMoE"
-    }
-
-    fn boot(&mut self, parallel: &ParallelConfig) -> Result<f64> {
-        let t = self.hmm.cluster.borrow().timings.clone();
-        let load = self.hmm.load_initial(parallel, self.kv_bytes_per_device)?;
-        let proc = self.hmm.alloc_proc();
-        let (inst, prep) = self.imm.acquire(parallel, proc);
-        let (binding, attach) = self.hmm.attach_instance(proc)?;
-        let id = self.imm.register_ready(inst, 0.0)?;
-        self.imm.activate(id)?;
-        self.active_proc = Some(proc);
-        self.current = Some(parallel.clone());
-        self.last_binding = Some(binding);
-        self.anticipate(parallel);
-        // First boot is a cold start: container + prep + load + attach +
-        // warmup.
-        Ok(t.container_start + prep + load + attach
-            + t.warmup_for(self.hmm.model.n_layers))
-    }
-
-    fn scale(&mut self, to: &ParallelConfig) -> Result<ScalingOutcome> {
+impl ElasticMoE {
+    /// The shared scaling choreography. `kv` is the live-sequence
+    /// snapshot taken at the command instant, when the caller has one;
+    /// under [`KvHandoffPolicy::Migrate`] (and zero-copy enabled) the HMM
+    /// plans per-sequence KV legs from it and the switchover window
+    /// stretches by their copy time, during which those sequences are
+    /// suspended. Under [`KvHandoffPolicy::DrainRecompute`] — or without
+    /// zero-copy — live KV is dropped and in-flight work re-prefills.
+    fn scale_inner(
+        &mut self,
+        to: &ParallelConfig,
+        kv: Option<&KvSnapshot>,
+    ) -> Result<ScalingOutcome> {
         let from = self
             .current
             .clone()
@@ -123,8 +119,15 @@ impl ScalingMethod for ElasticMoE {
         };
         self.hmm.cluster.borrow_mut().reset_peaks(&union);
 
+        // KV legs are planned only when the handoff can actually happen:
+        // zero-copy sharing on and the migrate policy selected.
+        let kv = kv.filter(|_| {
+            self.kv_policy == KvHandoffPolicy::Migrate
+                && self.hmm.opts.use_zero_copy
+        });
+
         // 1) HMM reconfigures memory concurrently with serving.
-        let plan = self.hmm.plan_scale(to)?;
+        let plan = self.hmm.plan_scale_with_kv(to, kv)?;
         let stats = self.hmm.execute_plan(&plan, to)?;
 
         // 2) IMM prepares the target instance concurrently.
@@ -134,9 +137,12 @@ impl ScalingMethod for ElasticMoE {
         // 3) Zero-copy attach once HMM is done.
         let (binding, attach_time) = self.hmm.attach_instance(proc)?;
 
-        // 4) Warmup, then switchover (drain + reroute).
+        // 4) Warmup, then switchover (drain + reroute). Live-KV copy legs
+        // run inside the switchover window — their sequences are
+        // suspended so the blocks stay byte-stable — stretching it by the
+        // fabric time.
         let warmup = t.warmup_for(self.hmm.model.n_layers);
-        let switchover = t.switchover;
+        let switchover = t.switchover + stats.kv_migrate_time;
 
         let concurrent = stats.total.max(prep_time);
         let ready_after = concurrent + attach_time + warmup + switchover;
@@ -148,10 +154,39 @@ impl ScalingMethod for ElasticMoE {
             metrics.stage("hmm_realloc(no-vpage)", stats.realloc_time);
         }
         metrics.stage("kv_init", stats.kv_init_time);
+        if stats.kv_migrate_time > 0.0 {
+            metrics.stage("kv_handoff", stats.kv_migrate_time);
+        }
         metrics.stage("imm_prep", prep_time);
         metrics.stage("zero_copy_attach", attach_time);
         metrics.stage("warmup", warmup);
-        metrics.stage("switchover", switchover);
+        // The reroute cost alone: the KV copy legs that stretch the
+        // window are already reported as the "kv_handoff" stage.
+        metrics.stage("switchover", t.switchover);
+
+        // Per-sequence dispositions for the coordinator, read back from
+        // the plan's KV legs (rank-survival logic lives in
+        // [`KvHandoff::new`], shared with the planner path).
+        let kv_handoff = kv.map(|snapshot| {
+            use crate::hmm::PlanOp;
+            let (mut remap, mut copy, mut recompute) =
+                (Vec::new(), Vec::new(), Vec::new());
+            for op in &plan.ops {
+                match op {
+                    PlanOp::KvBlockRemap { request, .. } => {
+                        remap.push(*request)
+                    }
+                    PlanOp::KvBlockCopy { request, .. } => {
+                        copy.push(*request)
+                    }
+                    PlanOp::KvDropRecompute { request, .. } => {
+                        recompute.push(*request)
+                    }
+                    _ => {}
+                }
+            }
+            KvHandoff::new(remap, copy, recompute, &snapshot.from, to)
+        });
 
         // Switchover bookkeeping: drain + retire the old instance, release
         // its references, free orphaned expert pages.
@@ -188,15 +223,20 @@ impl ScalingMethod for ElasticMoE {
 
         // With zero-copy enabled the old instance keeps serving — and
         // admitting — while the HMM/IMM work runs concurrently beneath it;
-        // intake only pauses for the final drain+reroute window so the
-        // in-flight KV handover is consistent (§5.2 step 5). Without
-        // zero-copy the whole transition is downtime, so intake is closed
-        // from the command onward.
+        // intake only pauses for the final drain+reroute window (stretched
+        // by any live-KV copy legs) so the in-flight KV handover is
+        // consistent (§5.2 step 5). Without zero-copy the whole transition
+        // is downtime, so intake is closed from the command onward.
         let intake_pause = if self.hmm.opts.use_zero_copy {
             Some((ready_after - switchover, ready_after))
         } else {
             Some((0.0, ready_after))
         };
+
+        // DrainRecompute deliberately discards in-flight KV even though
+        // zero-copy could carry it — the measurable baseline.
+        let preserves_inflight = self.hmm.opts.use_zero_copy
+            && self.kv_policy == KvHandoffPolicy::Migrate;
 
         Ok(ScalingOutcome {
             metrics,
@@ -204,10 +244,47 @@ impl ScalingMethod for ElasticMoE {
             downtime,
             intake_pause,
             transition_derate: 1.0,
-            preserves_inflight: self.hmm.opts.use_zero_copy,
+            preserves_inflight,
+            kv_handoff,
             new_parallel: to.clone(),
             peak_devices: union.len(),
         })
+    }
+}
+
+impl ScalingMethod for ElasticMoE {
+    fn name(&self) -> &'static str {
+        "ElasticMoE"
+    }
+
+    fn boot(&mut self, parallel: &ParallelConfig) -> Result<f64> {
+        let t = self.hmm.cluster.borrow().timings.clone();
+        let load = self.hmm.load_initial(parallel, self.kv_bytes_per_device)?;
+        let proc = self.hmm.alloc_proc();
+        let (inst, prep) = self.imm.acquire(parallel, proc);
+        let (binding, attach) = self.hmm.attach_instance(proc)?;
+        let id = self.imm.register_ready(inst, 0.0)?;
+        self.imm.activate(id)?;
+        self.active_proc = Some(proc);
+        self.current = Some(parallel.clone());
+        self.last_binding = Some(binding);
+        self.anticipate(parallel);
+        // First boot is a cold start: container + prep + load + attach +
+        // warmup.
+        Ok(t.container_start + prep + load + attach
+            + t.warmup_for(self.hmm.model.n_layers))
+    }
+
+    fn scale(&mut self, to: &ParallelConfig) -> Result<ScalingOutcome> {
+        self.scale_inner(to, None)
+    }
+
+    fn scale_with_kv(
+        &mut self,
+        to: &ParallelConfig,
+        kv: &KvSnapshot,
+    ) -> Result<ScalingOutcome> {
+        self.scale_inner(to, Some(kv))
     }
 
     fn current(&self) -> Option<&ParallelConfig> {
@@ -430,6 +507,83 @@ mod tests {
         assert!(out.ready_after < 12.0, "{}", out.ready_after);
         let after = e.placement_imbalance();
         assert!(after < before, "imbalance must improve: {before} -> {after}");
+    }
+
+    #[test]
+    fn scale_up_with_kv_remaps_all_and_keeps_pause_window() {
+        use crate::engine::PagedKv;
+        use crate::kvmigrate::KvSnapshot;
+
+        let mut e = elastic(6);
+        e.boot(&par(4)).unwrap();
+        let mut pool = PagedKv::new(100_000, 16);
+        for id in 1u64..=6 {
+            pool.admit(id, 4000).unwrap();
+        }
+        let snap = KvSnapshot::capture(&pool, &par(4));
+        let out = e.scale_with_kv(&par(6), &snap).unwrap();
+        let h = out.kv_handoff.as_ref().expect("migrate policy plans");
+        // Scale-up: every device group survives — pure remap, nothing to
+        // suspend, no stretch of the switchover window.
+        assert_eq!(h.remap.len(), 6);
+        assert!(h.copy.is_empty() && h.recompute.is_empty());
+        assert!(h.suspend_ids().is_empty());
+        let (a, b) = out.intake_pause.unwrap();
+        let switchover = Timings::cloudmatrix().switchover;
+        // Remap handovers are O(µs)/sequence: the window stays within a
+        // millisecond of the plain switchover (no fabric legs).
+        assert!(((b - a) - switchover).abs() < 1e-3, "{}", b - a);
+        assert!(out.preserves_inflight);
+    }
+
+    #[test]
+    fn scale_down_with_kv_stretches_switchover_by_copy_time() {
+        use crate::engine::PagedKv;
+        use crate::kvmigrate::KvSnapshot;
+
+        let mut e = elastic(6);
+        e.boot(&par(6)).unwrap();
+        let mut pool = PagedKv::new(100_000, 16);
+        for id in 0u64..9 {
+            pool.admit(id, 6000).unwrap(); // long contexts: copy wins
+        }
+        let snap = KvSnapshot::capture(&pool, &par(6));
+        let out = e.scale_with_kv(&par(4), &snap).unwrap();
+        let h = out.kv_handoff.as_ref().unwrap();
+        // DP3 -> DP2 on the device prefix: rank 2 (ids ≡ 2 mod 3) moves.
+        assert_eq!(h.copy, vec![2, 5, 8]);
+        assert_eq!(h.remap.len(), 6);
+        assert!(h.recompute.is_empty(), "long contexts never recompute");
+        assert_eq!(h.suspend_ids(), &[2, 5, 8]);
+        // The pause window = switchover + KV copy time > plain switchover.
+        let (a, b) = out.intake_pause.unwrap();
+        let switchover = Timings::cloudmatrix().switchover;
+        assert!(b - a > switchover, "window {} must stretch", b - a);
+        assert!(
+            out.metrics
+                .stages
+                .iter()
+                .any(|(n, t)| n == "kv_handoff" && *t > 0.0),
+            "kv_handoff stage must be reported"
+        );
+        assert!(out.downtime.is_none(), "still zero downtime");
+    }
+
+    #[test]
+    fn drain_recompute_policy_discards_inflight() {
+        use crate::engine::PagedKv;
+        use crate::kvmigrate::{KvHandoffPolicy, KvSnapshot};
+
+        let mut e = elastic(6);
+        e.kv_policy = KvHandoffPolicy::DrainRecompute;
+        e.boot(&par(4)).unwrap();
+        let mut pool = PagedKv::new(100_000, 16);
+        pool.admit(1, 5000).unwrap();
+        let snap = KvSnapshot::capture(&pool, &par(4));
+        let out = e.scale_with_kv(&par(6), &snap).unwrap();
+        assert!(out.kv_handoff.is_none(), "no per-sequence plan");
+        assert!(!out.preserves_inflight, "in-flight work restarts");
+        assert!(out.downtime.is_none(), "weights still zero-copy");
     }
 
     #[test]

@@ -12,6 +12,7 @@
 use anyhow::Result;
 
 use crate::config::ParallelConfig;
+use crate::kvmigrate::{KvHandoff, KvSnapshot};
 use crate::metrics::ScalingMetrics;
 
 /// What a scaling event does to the serving timeline. All times are in
@@ -57,8 +58,17 @@ pub struct ScalingOutcome {
     pub transition_derate: f64,
     /// Whether in-flight requests survive the switchover with their KV
     /// intact (zero-copy reuse: decode resumes on the successor) or must
-    /// restart from scratch on the new instance.
+    /// restart from scratch on the new instance. When
+    /// [`kv_handoff`](Self::kv_handoff) is present it refines this blanket
+    /// verdict per sequence.
     pub preserves_inflight: bool,
+    /// Per-sequence KV handoff plan: which in-flight sequences suspend
+    /// during the switchover window (their blocks are in flight) and how
+    /// each drained sequence is disposed of — remap-adopt, copy-adopt, or
+    /// restart. `None` means no plan was drawn (baselines, events issued
+    /// without a live snapshot): the simulator falls back to the blanket
+    /// `preserves_inflight` behaviour.
+    pub kv_handoff: Option<KvHandoff>,
     /// The parallel configuration after the event.
     pub new_parallel: ParallelConfig,
     /// Total devices occupied at the transition's peak (Extravagant holds
@@ -99,6 +109,21 @@ pub trait ScalingMethod {
     /// Execute a scaling event to `to`, mutating the simulated cluster and
     /// returning the transition timeline for the simulator to enact.
     fn scale(&mut self, to: &ParallelConfig) -> Result<ScalingOutcome>;
+
+    /// Execute a scaling event with a snapshot of the live KV state (the
+    /// per-sequence block tables at the command instant). Methods that
+    /// migrate KV ([`crate::scaling::ElasticMoE`]) plan a per-sequence
+    /// handoff from it; the default ignores the snapshot — the baselines'
+    /// drain semantics are exactly the legacy path, which keeps the
+    /// `repro exp kvmigrate` delta measurable.
+    fn scale_with_kv(
+        &mut self,
+        to: &ParallelConfig,
+        kv: &KvSnapshot,
+    ) -> Result<ScalingOutcome> {
+        let _ = kv;
+        self.scale(to)
+    }
 
     /// Current configuration (`None` before boot).
     fn current(&self) -> Option<&ParallelConfig>;

@@ -12,6 +12,10 @@ pub enum RequestState {
     Prefilling,
     /// Generating tokens.
     Decoding,
+    /// Decode paused with KV held resident: the sequence is mid-handoff
+    /// across a scaling event (its blocks are being copied to the new
+    /// owner) and resumes decoding on the successor instance.
+    Suspended,
     /// All tokens produced.
     Finished,
     /// Dropped (baseline downtime only — ElasticMoE never drops).

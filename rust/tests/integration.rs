@@ -211,3 +211,93 @@ fn expert_migration_preserves_numerics() {
     let _ = proc;
     stack.hmm.borrow_mut().apply_deferred_frees().unwrap();
 }
+
+/// Regression for the KV-handoff choreography: ElasticMoE's intake-pause
+/// window and the per-sequence suspend window compose. Across a
+/// scale-down (which suspends the departing replica's sequences for
+/// their block copies, while intake is paused for the stretched
+/// switchover window), no request is both drained-restarted and
+/// migrated — every request finishes exactly once — and token counts
+/// are conserved: each finished request produced exactly its requested
+/// tokens, with adopted sequences keeping their pre-event progress.
+#[test]
+fn intake_pause_and_suspend_window_compose() {
+    use std::collections::{HashMap, HashSet};
+
+    use elastic_moe::config::SloConfig;
+    use elastic_moe::coordinator::{ServingSim, Trigger};
+    use elastic_moe::device::Timings;
+    use elastic_moe::engine::CostModel;
+    use elastic_moe::workload::{RateProfile, WorkloadGen, WorkloadSpec};
+
+    let m = model::dsv2_lite();
+    let sim = ServingSim::new(
+        CostModel::new(m.clone(), Timings::cloudmatrix()),
+        SloConfig::new(8.0, 1.5),
+    );
+    let mut method =
+        elastic_moe::experiments::common::make_method("elastic", &m, 6)
+            .unwrap();
+    // Long contexts at moderate load so ~10 sequences are mid-decode at
+    // the command — their (roughly consecutive) ids cover every DP-rank
+    // residue, including the departing replica's.
+    let mut gen = WorkloadGen::new(WorkloadSpec {
+        prompt_len: 4000,
+        decode_min: 150,
+        decode_max: 250,
+        profile: RateProfile::Fixed(1.2),
+        seed: 31,
+    });
+    let arrivals = gen.arrivals_until(140.0);
+    let expected: HashMap<u64, usize> = arrivals
+        .iter()
+        .map(|r| (r.id, r.max_new_tokens))
+        .collect();
+
+    let par = |n: usize| {
+        ParallelConfig::standard(n / 2, 2, (0..n).collect()).unwrap()
+    };
+    let out = sim
+        .run(
+            method.as_mut(),
+            &par(6),
+            arrivals,
+            Trigger::Manual(vec![(40.0, par(4))]),
+            140.0,
+        )
+        .unwrap();
+
+    // The event actually planned a handoff with suspended copy legs.
+    assert_eq!(out.scaling_events.len(), 1);
+    let ev = &out.scaling_events[0];
+    let handoff = ev.kv_handoff.as_ref().expect("migrate policy plans");
+    assert!(
+        !handoff.suspend_ids().is_empty(),
+        "scale-down must suspend the departing replica's sequences"
+    );
+    assert!(ev.intake_pause.is_some(), "pause window still declared");
+    assert!(out.handoff.remapped > 0 && out.handoff.copied > 0);
+
+    // Exactly-once: every arrival finishes once, none twice (a request
+    // that was both drained-restarted and migrated would finish twice or
+    // overproduce).
+    let mut seen = HashSet::new();
+    for r in out.recorder.all() {
+        assert!(seen.insert(r.id), "request {} finished twice", r.id);
+        assert_eq!(
+            r.tokens,
+            expected[&r.id],
+            "request {} token count not conserved",
+            r.id
+        );
+    }
+    assert_eq!(seen.len(), expected.len(), "every request finishes");
+
+    // Conservation across the event: adopted progress + restarted losses
+    // account for every in-flight sequence exactly once.
+    let inflight = out.handoff.remapped
+        + out.handoff.copied
+        + out.handoff.recomputed;
+    assert!(inflight <= expected.len());
+    assert!(out.handoff.adopted_tokens > 0);
+}

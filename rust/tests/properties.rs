@@ -400,3 +400,123 @@ fn prop_request_timestamps_are_ordered() {
         }
     });
 }
+
+/// PagedKv block accounting: under any random sequence of
+/// admit/append/release operations, no block is ever leaked or double
+/// freed (`free + used == total` at every step), per-sequence tables
+/// always hold exactly `ceil(len / block_tokens)` blocks, and
+/// `can_admit` agrees with `admit`'s success.
+#[test]
+fn prop_paged_kv_alloc_free_never_leaks() {
+    check("paged kv accounting", 80, |rng: &mut Rng| {
+        let block_tokens = 1 + rng.below(32) as usize;
+        let n_blocks = 1 + rng.below(80) as usize;
+        let mut kv = PagedKv::new(n_blocks, block_tokens);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+
+        let invariants = |kv: &PagedKv, live: &[u64]| {
+            assert_eq!(
+                kv.free_blocks() + kv.used_blocks(),
+                kv.total_blocks(),
+                "pool leaked or double-freed"
+            );
+            assert_eq!(kv.active_requests(), live.len());
+            let mut sum = 0;
+            for &id in live {
+                let len = kv.seq_len(id).expect("live seq has a length");
+                let blocks = kv.seq_blocks(id).unwrap();
+                assert_eq!(
+                    blocks,
+                    len.max(1).div_ceil(block_tokens),
+                    "table size drifted from length"
+                );
+                sum += blocks;
+            }
+            assert_eq!(sum, kv.used_blocks(), "tables != used blocks");
+        };
+
+        for _ in 0..rng.range(1, 150) {
+            match rng.below(4) {
+                0 | 1 => {
+                    // Admit: can_admit must agree with the outcome.
+                    let tokens = 1 + rng.below(3 * block_tokens as u64 + 40)
+                        as usize;
+                    let predicted = kv.can_admit(tokens);
+                    let id = next_id;
+                    next_id += 1;
+                    let outcome = kv.admit(id, tokens);
+                    assert_eq!(
+                        predicted,
+                        outcome.is_ok(),
+                        "can_admit({tokens}) said {predicted}"
+                    );
+                    if outcome.is_ok() {
+                        live.push(id);
+                    }
+                }
+                2 => {
+                    // Grow a random live sequence (failure must not
+                    // corrupt state; retrying later may succeed).
+                    if !live.is_empty() {
+                        let id =
+                            live[rng.below(live.len() as u64) as usize];
+                        let before = kv.seq_len(id).unwrap();
+                        if kv.append_token(id).is_err() {
+                            assert_eq!(kv.seq_len(id), Some(before));
+                            assert_eq!(kv.free_blocks(), 0);
+                        } else {
+                            assert_eq!(kv.seq_len(id), Some(before + 1));
+                        }
+                    }
+                }
+                _ => {
+                    // Release a random live sequence; double release is
+                    // a no-op.
+                    if !live.is_empty() {
+                        let i = rng.below(live.len() as u64) as usize;
+                        let id = live.swap_remove(i);
+                        kv.release(id);
+                        kv.release(id);
+                    }
+                }
+            }
+            invariants(&kv, &live);
+        }
+
+        // Releasing everything returns the pool to pristine.
+        for id in live.drain(..) {
+            kv.release(id);
+        }
+        assert_eq!(kv.free_blocks(), kv.total_blocks());
+        assert_eq!(kv.used_blocks(), 0);
+        assert_eq!(kv.active_requests(), 0);
+    });
+}
+
+/// A freshly sized pool admits what it promised: `from_bytes` either
+/// errors (budget below one block) or yields a pool whose first
+/// admission of up to `block_tokens` tokens succeeds.
+#[test]
+fn prop_paged_kv_from_bytes_is_usable_or_errors() {
+    check("paged kv from_bytes", 120, |rng: &mut Rng| {
+        let bytes_per_token = 1 + rng.below(4096);
+        let block_tokens = 1 + rng.below(64) as usize;
+        let budget = rng.below(1 << 24);
+        match PagedKv::from_bytes(budget, bytes_per_token, block_tokens) {
+            Ok(mut kv) => {
+                assert!(kv.total_blocks() > 0);
+                assert!(kv.can_admit(block_tokens));
+                kv.admit(1, block_tokens).unwrap();
+            }
+            Err(_) => {
+                // Refused exactly when the budget holds less than one
+                // block's worth of tokens.
+                assert!(
+                    (budget / bytes_per_token) < block_tokens as u64,
+                    "spurious error: budget {budget} holds a block"
+                );
+            }
+        }
+    });
+}
