@@ -82,7 +82,7 @@ fn main() -> Result<()> {
         }
     }
 
-    let stats = hmm.execute_plan(&plan, &p6)?;
+    let stats = hmm.execute_plan(&plan, &p6)?.stats;
     println!("\n== executed (simulated stage times) ==");
     println!("  attn P2P        : {:.3} s", stats.attn_p2p_time);
     println!("  expert P2P      : {:.3} s", stats.expert_p2p_time);

@@ -170,7 +170,7 @@ fn main() -> Result<()> {
             let (plan, stats, new_binding) = {
                 let mut hmm = dep.hmm.borrow_mut();
                 let plan = hmm.plan_scale(&p4)?;
-                let stats = hmm.execute_plan(&plan, &p4)?;
+                let stats = hmm.execute_plan(&plan, &p4)?.stats;
                 let proc = hmm.alloc_proc();
                 let (b, _) = hmm.attach_instance(proc)?;
                 (plan, stats, b)

@@ -1,0 +1,380 @@
+//! Deterministic fault injection for scaling events.
+//!
+//! A [`FaultPlan`] is a fully deterministic schedule of faults armed for
+//! specific scaling events; a [`FaultInjector`] consumes it. The HMM
+//! consults the injector at every fabric leg and device touch of
+//! [`crate::hmm::HmmControl::execute_plan`], and at plan time for the
+//! migration byte budget; the serving simulators drain the fired-fault
+//! records into the run's event trace ([`super::trace`]).
+//!
+//! Faults come in two flavours:
+//!
+//! - **Aborting** ([`FaultKind::P2pLinkFail`], [`FaultKind::KvCopyFail`],
+//!   [`FaultKind::DeviceLoss`]) — the op fails, the HMM rolls the whole
+//!   plan back, and the scaling event surfaces as aborted.
+//! - **Degrading** ([`FaultKind::HbmPressure`], [`FaultKind::Straggler`])
+//!   — the event completes, but with a shrunken migration budget (more
+//!   recompute verdicts) or stretched fabric legs (longer windows).
+//!
+//! The trace invariants ([`super::invariants`]) must hold either way.
+
+use std::collections::BTreeSet;
+
+use crate::device::DeviceId;
+
+/// One injectable fault kind.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// The `after_legs`-th fabric leg of the event (1-based, counting
+    /// attention P2P, expert migration and live-KV copy legs in execution
+    /// order) fails mid-copy. The partially transferred bytes are
+    /// discarded and the event aborts.
+    P2pLinkFail {
+        /// 1-based index of the first leg that fails.
+        after_legs: usize,
+    },
+    /// Like [`FaultKind::P2pLinkFail`], but counting only live-KV copy
+    /// legs — so tests can fault the KV handoff window deterministically
+    /// regardless of how many weight legs the plan happens to contain.
+    KvCopyFail {
+        /// 1-based index of the first KV copy leg that fails.
+        after_legs: usize,
+    },
+    /// Device `dev` drops out: the first leg touching it (as source or
+    /// destination) or the first allocation targeting it fails, and the
+    /// event aborts.
+    DeviceLoss { dev: DeviceId },
+    /// An HBM pressure spike shrinks the event's migration byte budget to
+    /// `budget_factor` (clamped to `0.0..=1.0`) of its configured value.
+    /// Degrades — the KV planner falls back to recompute verdicts once
+    /// the shrunken budget runs out — but never aborts.
+    HbmPressure { budget_factor: f64 },
+    /// Device `dev` is a straggler: every fabric leg touching it takes
+    /// `stretch`× its nominal time. Degrades (longer concurrent phase and
+    /// switchover window), never aborts.
+    Straggler { dev: DeviceId, stretch: f64 },
+}
+
+impl FaultKind {
+    /// Short stable label for reports and trace rendering.
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::P2pLinkFail { .. } => "p2p-link-fail",
+            FaultKind::KvCopyFail { .. } => "kv-copy-fail",
+            FaultKind::DeviceLoss { .. } => "device-loss",
+            FaultKind::HbmPressure { .. } => "hbm-pressure",
+            FaultKind::Straggler { .. } => "straggler",
+        }
+    }
+
+    /// Whether this fault aborts the scaling event (vs degrading it).
+    pub fn aborts(&self) -> bool {
+        matches!(
+            self,
+            FaultKind::P2pLinkFail { .. }
+                | FaultKind::KvCopyFail { .. }
+                | FaultKind::DeviceLoss { .. }
+        )
+    }
+}
+
+/// One scheduled fault: arm `kind` for the `event`-th scaling event
+/// (0-based count of plans drawn since the injector was built).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEntry {
+    pub event: usize,
+    pub kind: FaultKind,
+}
+
+/// A deterministic fault schedule.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub entries: Vec<FaultEntry>,
+}
+
+impl FaultPlan {
+    /// The empty schedule (no faults ever fire).
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Arm a single fault for one scaling event.
+    pub fn single(event: usize, kind: FaultKind) -> Self {
+        FaultPlan {
+            entries: vec![FaultEntry { event, kind }],
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// A fault that actually fired.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultRecord {
+    /// Scaling-event index the fault fired in.
+    pub event: usize,
+    pub kind: FaultKind,
+}
+
+/// Consumes a [`FaultPlan`] across a run's scaling events.
+///
+/// The event scope is opened by [`Self::begin_event`] — called by the HMM
+/// whenever a scaling plan is drawn — and all subsequent consultations
+/// (`on_leg`, `on_kv_leg`, `on_device`, `budget_factor`, `stretch`) match
+/// faults armed for that event. Each armed fault fires at most once per
+/// event; fired faults accumulate until [`Self::take_fired`] drains them
+/// (the simulators do this into the trace).
+#[derive(Debug, Default)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    /// Scaling events planned so far; the next event gets this index.
+    events_seen: usize,
+    /// Current event scope (`None` before the first `begin_event`).
+    event: Option<usize>,
+    /// Fabric legs consulted in the current event (weight + KV).
+    legs: usize,
+    /// Live-KV copy legs consulted in the current event.
+    kv_legs: usize,
+    /// Plan-entry indices that already fired in the current event.
+    fired_entries: BTreeSet<usize>,
+    fired: Vec<FaultRecord>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        FaultInjector {
+            plan,
+            ..Default::default()
+        }
+    }
+
+    /// Open the scope of the next scaling event. Called once per event,
+    /// when the HMM draws the plan.
+    pub fn begin_event(&mut self) {
+        self.event = Some(self.events_seen);
+        self.events_seen += 1;
+        self.legs = 0;
+        self.kv_legs = 0;
+        self.fired_entries.clear();
+    }
+
+    /// Index of the current event scope (`None` before the first plan).
+    pub fn event_index(&self) -> Option<usize> {
+        self.event
+    }
+
+    /// Faults armed for the current event, with their plan-entry indices.
+    fn armed(&self) -> Vec<(usize, FaultKind)> {
+        let Some(ev) = self.event else {
+            return Vec::new();
+        };
+        self.plan
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.event == ev)
+            .map(|(i, e)| (i, e.kind))
+            .collect()
+    }
+
+    fn fire(&mut self, entry: usize, kind: FaultKind) {
+        if self.fired_entries.insert(entry) {
+            self.fired.push(FaultRecord {
+                event: self.event.unwrap_or(0),
+                kind,
+            });
+        }
+    }
+
+    /// Effective migration-budget factor for the current event: the
+    /// minimum of all armed [`FaultKind::HbmPressure`] factors (1.0 when
+    /// none). Consulting records the pressure fault as fired.
+    pub fn budget_factor(&mut self) -> f64 {
+        let mut factor = 1.0f64;
+        for (i, kind) in self.armed() {
+            if let FaultKind::HbmPressure { budget_factor } = kind {
+                factor = factor.min(budget_factor.clamp(0.0, 1.0));
+                self.fire(i, kind);
+            }
+        }
+        factor
+    }
+
+    /// Consult before a weight-plane fabric leg. `Some(fault)` means the
+    /// leg fails and the event must abort.
+    pub fn on_leg(&mut self, src: DeviceId, dst: DeviceId) -> Option<FaultKind> {
+        self.legs += 1;
+        let legs = self.legs;
+        let hit = self.armed().into_iter().find(|&(_, kind)| match kind {
+            FaultKind::P2pLinkFail { after_legs } => legs >= after_legs,
+            FaultKind::DeviceLoss { dev } => dev == src || dev == dst,
+            _ => false,
+        });
+        if let Some((i, kind)) = hit {
+            self.fire(i, kind);
+            return Some(kind);
+        }
+        None
+    }
+
+    /// Consult before a live-KV copy leg. KV-scoped faults are checked
+    /// first; otherwise the leg also counts toward the global leg counter
+    /// via [`Self::on_leg`].
+    pub fn on_kv_leg(
+        &mut self,
+        src: DeviceId,
+        dst: DeviceId,
+    ) -> Option<FaultKind> {
+        self.kv_legs += 1;
+        let kv_legs = self.kv_legs;
+        let hit = self.armed().into_iter().find(|&(_, kind)| {
+            matches!(kind, FaultKind::KvCopyFail { after_legs } if kv_legs >= after_legs)
+        });
+        if let Some((i, kind)) = hit {
+            self.fire(i, kind);
+            return Some(kind);
+        }
+        self.on_leg(src, dst)
+    }
+
+    /// Consult when an op touches `dev` without a fabric leg (e.g. a KV
+    /// cache allocation on a new device).
+    pub fn on_device(&mut self, dev: DeviceId) -> Option<FaultKind> {
+        let hit = self.armed().into_iter().find(|&(_, kind)| {
+            matches!(kind, FaultKind::DeviceLoss { dev: d } if d == dev)
+        });
+        if let Some((i, kind)) = hit {
+            self.fire(i, kind);
+            return Some(kind);
+        }
+        None
+    }
+
+    /// Straggler stretch factor (`>= 1.0`) for a fabric leg between `src`
+    /// and `dst`. Consulting records the straggler fault as fired.
+    pub fn stretch(&mut self, src: DeviceId, dst: DeviceId) -> f64 {
+        let mut factor = 1.0f64;
+        for (i, kind) in self.armed() {
+            if let FaultKind::Straggler { dev, stretch } = kind {
+                if dev == src || dev == dst {
+                    factor = factor.max(stretch.max(1.0));
+                    self.fire(i, kind);
+                }
+            }
+        }
+        factor
+    }
+
+    /// Drain the fired-fault records accumulated so far.
+    pub fn take_fired(&mut self) -> Vec<FaultRecord> {
+        std::mem::take(&mut self.fired)
+    }
+
+    /// Faults fired so far and not yet drained.
+    pub fn fired_count(&self) -> usize {
+        self.fired.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_event_scope_never_fires() {
+        let mut inj = FaultInjector::new(FaultPlan::single(
+            0,
+            FaultKind::P2pLinkFail { after_legs: 1 },
+        ));
+        assert!(inj.on_leg(0, 1).is_none(), "no scope, no fault");
+        assert_eq!(inj.budget_factor(), 1.0);
+        assert_eq!(inj.fired_count(), 0);
+    }
+
+    #[test]
+    fn p2p_fault_fires_on_the_right_leg_and_event() {
+        let mut inj = FaultInjector::new(FaultPlan::single(
+            1,
+            FaultKind::P2pLinkFail { after_legs: 3 },
+        ));
+        inj.begin_event(); // event 0: not armed
+        for _ in 0..5 {
+            assert!(inj.on_leg(0, 1).is_none());
+        }
+        inj.begin_event(); // event 1: armed
+        assert!(inj.on_leg(0, 1).is_none());
+        assert!(inj.on_leg(0, 1).is_none());
+        let f = inj.on_leg(0, 1).expect("third leg must fail");
+        assert!(f.aborts());
+        assert_eq!(inj.take_fired().len(), 1);
+        assert!(inj.take_fired().is_empty(), "drained");
+    }
+
+    #[test]
+    fn kv_scope_counts_only_kv_legs() {
+        let mut inj = FaultInjector::new(FaultPlan::single(
+            0,
+            FaultKind::KvCopyFail { after_legs: 2 },
+        ));
+        inj.begin_event();
+        // Weight legs never trip a KV-scoped fault.
+        for _ in 0..10 {
+            assert!(inj.on_leg(2, 3).is_none());
+        }
+        assert!(inj.on_kv_leg(2, 3).is_none());
+        assert!(inj.on_kv_leg(2, 3).is_some(), "second KV leg fails");
+    }
+
+    #[test]
+    fn device_loss_hits_legs_and_allocations() {
+        let mut inj = FaultInjector::new(FaultPlan::single(
+            0,
+            FaultKind::DeviceLoss { dev: 4 },
+        ));
+        inj.begin_event();
+        assert!(inj.on_leg(0, 1).is_none());
+        assert!(inj.on_leg(0, 4).is_some(), "leg into the lost device");
+        inj.begin_event();
+        assert!(inj.on_device(3).is_none());
+        assert!(inj.on_device(4).is_none(), "event 1 is not armed");
+    }
+
+    #[test]
+    fn pressure_and_straggler_degrade_without_aborting() {
+        let mut inj = FaultInjector::new(FaultPlan {
+            entries: vec![
+                FaultEntry {
+                    event: 0,
+                    kind: FaultKind::HbmPressure { budget_factor: 0.25 },
+                },
+                FaultEntry {
+                    event: 0,
+                    kind: FaultKind::Straggler { dev: 5, stretch: 4.0 },
+                },
+            ],
+        });
+        inj.begin_event();
+        assert_eq!(inj.budget_factor(), 0.25);
+        assert_eq!(inj.stretch(5, 1), 4.0);
+        assert_eq!(inj.stretch(0, 1), 1.0, "legs off the straggler");
+        assert!(inj.on_leg(5, 1).is_none(), "degrading faults never abort");
+        // Each armed fault fires (is recorded) exactly once per event.
+        assert_eq!(inj.budget_factor(), 0.25);
+        assert_eq!(inj.stretch(5, 1), 4.0);
+        assert_eq!(inj.take_fired().len(), 2);
+    }
+
+    #[test]
+    fn labels_and_abort_classes() {
+        assert!(FaultKind::DeviceLoss { dev: 0 }.aborts());
+        assert!(FaultKind::KvCopyFail { after_legs: 1 }.aborts());
+        assert!(!FaultKind::HbmPressure { budget_factor: 0.5 }.aborts());
+        assert!(!FaultKind::Straggler { dev: 0, stretch: 2.0 }.aborts());
+        assert_eq!(
+            FaultKind::P2pLinkFail { after_legs: 1 }.label(),
+            "p2p-link-fail"
+        );
+    }
+}

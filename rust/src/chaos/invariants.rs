@@ -1,0 +1,498 @@
+//! Pure conformance checkers over a chaos [`Trace`].
+//!
+//! Each checker walks the event log and returns the violations it found;
+//! [`check_all`] runs the full catalog. The checkers assume a *drained*
+//! run (the simulators stop only once every arrival is served), which is
+//! what `repro exp chaos`, the integration suite, and the CI smoke run
+//! provide. The catalog:
+//!
+//! 1. **Block conservation** — every audited plan accounts for each live
+//!    KV block exactly once (remap + copy + freed = snapshot), including
+//!    plans whose event later aborted.
+//! 2. **Byte budget** — KV copy bytes never exceed the effective
+//!    migration budget the plan was drawn under (post HBM-pressure).
+//! 3. **Exactly-once finish / no token loss** — every arrival finishes
+//!    exactly once, no unknown id finishes, and each finished request
+//!    produced exactly the tokens it asked for.
+//! 4. **Bounded intake pause** — every pause resumes exactly once per
+//!    event, and both edges lie inside the event's declared pause window
+//!    (the closing edge may lag by one engine step — see
+//!    [`STEP_SLACK`]).
+//! 5. **Suspend disposition** — every suspended sequence is disposed of
+//!    exactly once: resumed on its origin replica (abort), or adopted /
+//!    restarted at switchover.
+
+use std::collections::BTreeMap;
+
+use super::trace::{Trace, TraceEvent};
+
+/// Slack for floating-point window comparisons.
+const EPS: f64 = 1e-6;
+
+/// Default event-loop granularity allowance on a window's *closing*
+/// edge: the simulators enact pause windows between engine steps, so the
+/// resume lands at the first step boundary at or after the declared end
+/// — up to one (possibly full-prefill-sized) step late. 4 simulated
+/// seconds comfortably bounds one step for the stock experiments
+/// (16 384 prefill tokens on the CloudMatrix cost model); runs with
+/// slower timings or larger models should use
+/// [`check_intake_pause_bounded_with_slack`]. Opening edges get no such
+/// allowance: pausing outside the declared window is a real violation.
+pub const STEP_SLACK: f64 = 4.0;
+
+/// One invariant violation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Violation {
+    /// Which invariant failed (stable slug).
+    pub invariant: &'static str,
+    pub detail: String,
+}
+
+impl Violation {
+    fn new(invariant: &'static str, detail: String) -> Self {
+        Violation { invariant, detail }
+    }
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}", self.invariant, self.detail)
+    }
+}
+
+/// Run the full invariant catalog. Empty result = conformant trace.
+pub fn check_all(trace: &Trace) -> Vec<Violation> {
+    let mut out = Vec::new();
+    out.extend(check_block_conservation(trace));
+    out.extend(check_byte_budget(trace));
+    out.extend(check_exactly_once_finish(trace));
+    out.extend(check_intake_pause_bounded(trace));
+    out.extend(check_suspend_disposition(trace));
+    out
+}
+
+/// Invariant 1: every audited plan conserves KV blocks.
+pub fn check_block_conservation(trace: &Trace) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for ev in &trace.events {
+        if let TraceEvent::PlanAudited { event, audit, .. } = ev {
+            if !audit.blocks_conserved() {
+                out.push(Violation::new(
+                    "block-conservation",
+                    format!(
+                        "event {event}: {} + {} + {} != {} snapshot blocks",
+                        audit.kv_remapped_blocks,
+                        audit.kv_copied_blocks,
+                        audit.kv_freed_blocks,
+                        audit.snapshot_blocks
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Invariant 2: KV copy bytes within the effective migration budget.
+pub fn check_byte_budget(trace: &Trace) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for ev in &trace.events {
+        if let TraceEvent::PlanAudited { event, audit, .. } = ev {
+            if audit.kv_copied_bytes > audit.migration_budget_bytes {
+                out.push(Violation::new(
+                    "byte-budget",
+                    format!(
+                        "event {event}: {} KV copy bytes exceed the {} \
+                         byte budget",
+                        audit.kv_copied_bytes, audit.migration_budget_bytes
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Invariant 3: exactly-once finish per sequence, no token loss.
+pub fn check_exactly_once_finish(trace: &Trace) -> Vec<Violation> {
+    let mut out = Vec::new();
+    // id -> (requested tokens, finish count).
+    let mut ledger: BTreeMap<u64, (usize, usize)> = BTreeMap::new();
+    for ev in &trace.events {
+        match ev {
+            TraceEvent::Arrival { id, tokens, .. } => {
+                if ledger.insert(*id, (*tokens, 0)).is_some() {
+                    out.push(Violation::new(
+                        "exactly-once",
+                        format!("request {id} arrived twice"),
+                    ));
+                }
+            }
+            TraceEvent::Finished { id, tokens, .. } => {
+                match ledger.get_mut(id) {
+                    Some((want, n)) => {
+                        *n += 1;
+                        if *n > 1 {
+                            out.push(Violation::new(
+                                "exactly-once",
+                                format!("request {id} finished {n} times"),
+                            ));
+                        }
+                        if *want != *tokens {
+                            out.push(Violation::new(
+                                "token-loss",
+                                format!(
+                                    "request {id} produced {tokens} of \
+                                     {want} requested tokens"
+                                ),
+                            ));
+                        }
+                    }
+                    None => out.push(Violation::new(
+                        "exactly-once",
+                        format!("request {id} finished without arriving"),
+                    )),
+                }
+            }
+            _ => {}
+        }
+    }
+    for (id, (_, n)) in &ledger {
+        if *n == 0 {
+            out.push(Violation::new(
+                "exactly-once",
+                format!("request {id} never finished (lost)"),
+            ));
+        }
+    }
+    out
+}
+
+/// Invariant 4 with the default [`STEP_SLACK`] resume allowance.
+pub fn check_intake_pause_bounded(trace: &Trace) -> Vec<Violation> {
+    check_intake_pause_bounded_with_slack(trace, STEP_SLACK)
+}
+
+/// Invariant 4: intake pauses always resume, never double-open per
+/// event, and stay inside the owning event's declared pause window.
+/// `resume_slack` is the caller's upper bound on one engine step in
+/// simulated seconds — the closing edge may lag the declared end by
+/// that much, since windows are enacted between steps.
+pub fn check_intake_pause_bounded_with_slack(
+    trace: &Trace,
+    resume_slack: f64,
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    // event -> declared window (absolute).
+    let mut declared: BTreeMap<usize, Option<(f64, f64)>> = BTreeMap::new();
+    for ev in &trace.events {
+        if let TraceEvent::ScaleCommand {
+            event,
+            declared_pause,
+            ..
+        } = ev
+        {
+            declared.insert(*event, *declared_pause);
+        }
+    }
+    let check_edge = |event: usize, t: f64, edge: &str| -> Option<Violation> {
+        // Resumes may lag the declared end by one engine step.
+        let tail = if edge == "resume" { resume_slack } else { EPS };
+        match declared.get(&event) {
+            Some(Some((a, b))) => {
+                if t < a - EPS || t > b + tail {
+                    return Some(Violation::new(
+                        "intake-pause-bounded",
+                        format!(
+                            "event {event}: {edge} at {t:.6} outside the \
+                             declared window [{a:.6}, {b:.6}]"
+                        ),
+                    ));
+                }
+                None
+            }
+            Some(None) => Some(Violation::new(
+                "intake-pause-bounded",
+                format!(
+                    "event {event}: {edge} at {t:.6} but no pause window \
+                     was declared"
+                ),
+            )),
+            None => Some(Violation::new(
+                "intake-pause-bounded",
+                format!("event {event}: {edge} for an unknown event"),
+            )),
+        }
+    };
+    // Pauses are tracked per event: a fleet run can have two replicas'
+    // windows overlapping in (global) trace order, which is fine — what
+    // is not fine is two pauses for the *same* event, a resume without a
+    // pause, or a pause that never resumes.
+    let mut open: BTreeMap<usize, f64> = BTreeMap::new();
+    for ev in &trace.events {
+        match ev {
+            TraceEvent::IntakePaused { t, event } => {
+                if open.insert(*event, *t).is_some() {
+                    out.push(Violation::new(
+                        "intake-pause-bounded",
+                        format!(
+                            "event {event}: pause at {t:.6} while its \
+                             earlier pause is still open"
+                        ),
+                    ));
+                }
+                out.extend(check_edge(*event, *t, "pause"));
+            }
+            TraceEvent::IntakeResumed { t, event } => {
+                match open.remove(event) {
+                    Some(t0) => {
+                        if *t < t0 - EPS {
+                            out.push(Violation::new(
+                                "intake-pause-bounded",
+                                format!(
+                                    "event {event}: resume at {t:.6} before \
+                                     pause at {t0:.6}"
+                                ),
+                            ));
+                        }
+                    }
+                    None => out.push(Violation::new(
+                        "intake-pause-bounded",
+                        format!(
+                            "event {event}: resume at {t:.6} without an \
+                             open pause"
+                        ),
+                    )),
+                }
+                out.extend(check_edge(*event, *t, "resume"));
+            }
+            _ => {}
+        }
+    }
+    for (e, t0) in &open {
+        out.push(Violation::new(
+            "intake-pause-bounded",
+            format!("event {e}: pause opened at {t0:.6} never resumed"),
+        ));
+    }
+    out
+}
+
+/// Invariant 5: every suspended sequence is disposed of exactly once —
+/// resumed (abort), adopted, or restarted.
+pub fn check_suspend_disposition(trace: &Trace) -> Vec<Violation> {
+    let mut out = Vec::new();
+    // (event, id) -> dispositions seen after suspension.
+    let mut suspended: BTreeMap<(usize, u64), usize> = BTreeMap::new();
+    for ev in &trace.events {
+        match ev {
+            TraceEvent::Suspended { event, id, .. } => {
+                if suspended.insert((*event, *id), 0).is_some() {
+                    out.push(Violation::new(
+                        "suspend-disposition",
+                        format!("event {event}: request {id} suspended twice"),
+                    ));
+                }
+            }
+            TraceEvent::Resumed { event, id, .. } => {
+                match suspended.get_mut(&(*event, *id)) {
+                    Some(n) => *n += 1,
+                    None => out.push(Violation::new(
+                        "suspend-disposition",
+                        format!(
+                            "event {event}: request {id} resumed without \
+                             being suspended"
+                        ),
+                    )),
+                }
+            }
+            TraceEvent::Adopted { event, id, .. }
+            | TraceEvent::Restarted { event, id, .. } => {
+                // Only counts as the suspension's disposition when this
+                // sequence was suspended for this event; unsuspended
+                // drained sequences are disposed here too, legitimately.
+                if let Some(n) = suspended.get_mut(&(*event, *id)) {
+                    *n += 1;
+                }
+            }
+            _ => {}
+        }
+    }
+    for ((event, id), n) in &suspended {
+        if *n != 1 {
+            out.push(Violation::new(
+                "suspend-disposition",
+                format!(
+                    "event {event}: request {id} suspended but disposed \
+                     {n} times (want exactly 1)"
+                ),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::trace::PlanAudit;
+
+    fn audit(snapshot: usize, remap: usize, copy: usize, freed: usize) -> PlanAudit {
+        PlanAudit {
+            snapshot_blocks: snapshot,
+            kv_remapped_blocks: remap,
+            kv_copied_blocks: copy,
+            kv_freed_blocks: freed,
+            kv_copied_bytes: 10,
+            migration_budget_bytes: 100,
+            expert_migration_bytes: 0,
+        }
+    }
+
+    fn conformant_trace() -> Trace {
+        let mut tr = Trace::new();
+        tr.push(TraceEvent::Arrival { t: 0.0, id: 1, tokens: 5 });
+        tr.push(TraceEvent::Arrival { t: 0.1, id: 2, tokens: 7 });
+        tr.push(TraceEvent::ScaleCommand {
+            t: 10.0,
+            event: 0,
+            from_devices: 4,
+            to_devices: 6,
+            declared_pause: Some((12.0, 13.0)),
+        });
+        tr.push(TraceEvent::PlanAudited {
+            t: 10.0,
+            event: 0,
+            audit: audit(10, 6, 3, 1),
+        });
+        tr.push(TraceEvent::IntakePaused { t: 12.0, event: 0 });
+        tr.push(TraceEvent::Suspended { t: 12.0, event: 0, id: 2 });
+        tr.push(TraceEvent::IntakeResumed { t: 13.0, event: 0 });
+        tr.push(TraceEvent::Adopted { t: 13.0, event: 0, id: 1, remap: true });
+        tr.push(TraceEvent::Adopted { t: 13.0, event: 0, id: 2, remap: false });
+        tr.push(TraceEvent::ScaleCompleted { t: 13.0, event: 0, devices: 6 });
+        tr.push(TraceEvent::Finished { t: 14.0, id: 1, tokens: 5 });
+        tr.push(TraceEvent::Finished { t: 15.0, id: 2, tokens: 7 });
+        tr
+    }
+
+    #[test]
+    fn conformant_trace_passes_everything() {
+        let v = check_all(&conformant_trace());
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    #[test]
+    fn broken_conservation_is_caught() {
+        let mut tr = conformant_trace();
+        tr.push(TraceEvent::PlanAudited {
+            t: 20.0,
+            event: 1,
+            audit: audit(10, 6, 3, 0), // one block vanished
+        });
+        let v = check_block_conservation(&tr);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].invariant, "block-conservation");
+    }
+
+    #[test]
+    fn budget_overrun_is_caught() {
+        let mut tr = Trace::new();
+        let mut a = audit(4, 0, 4, 0);
+        a.kv_copied_bytes = 200; // budget is 100
+        tr.push(TraceEvent::PlanAudited { t: 1.0, event: 0, audit: a });
+        let v = check_byte_budget(&tr);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].invariant, "byte-budget");
+    }
+
+    #[test]
+    fn double_finish_and_token_loss_are_caught() {
+        let mut tr = conformant_trace();
+        tr.push(TraceEvent::Finished { t: 16.0, id: 1, tokens: 5 });
+        tr.push(TraceEvent::Arrival { t: 16.0, id: 3, tokens: 9 });
+        tr.push(TraceEvent::Finished { t: 17.0, id: 3, tokens: 4 });
+        let v = check_exactly_once_finish(&tr);
+        assert!(v.iter().any(|v| v.invariant == "exactly-once"
+            && v.detail.contains("finished 2 times")));
+        assert!(v.iter().any(|v| v.invariant == "token-loss"));
+    }
+
+    #[test]
+    fn lost_request_is_caught() {
+        let mut tr = Trace::new();
+        tr.push(TraceEvent::Arrival { t: 0.0, id: 9, tokens: 5 });
+        let v = check_exactly_once_finish(&tr);
+        assert!(v.iter().any(|v| v.detail.contains("never finished")));
+    }
+
+    #[test]
+    fn out_of_window_pause_is_caught() {
+        let mut tr = Trace::new();
+        tr.push(TraceEvent::ScaleCommand {
+            t: 10.0,
+            event: 0,
+            from_devices: 4,
+            to_devices: 6,
+            declared_pause: Some((12.0, 13.0)),
+        });
+        tr.push(TraceEvent::IntakePaused { t: 10.5, event: 0 });
+        tr.push(TraceEvent::IntakeResumed { t: 13.0, event: 0 });
+        let v = check_intake_pause_bounded(&tr);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].detail.contains("outside the declared window"));
+    }
+
+    #[test]
+    fn resume_may_lag_one_step_but_not_more() {
+        let command = TraceEvent::ScaleCommand {
+            t: 10.0,
+            event: 0,
+            from_devices: 4,
+            to_devices: 6,
+            declared_pause: Some((12.0, 13.0)),
+        };
+        // Resume one engine step after the declared end: tolerated.
+        let mut tr = Trace::new();
+        tr.push(command.clone());
+        tr.push(TraceEvent::IntakePaused { t: 12.0, event: 0 });
+        tr.push(TraceEvent::IntakeResumed { t: 14.5, event: 0 });
+        assert!(check_intake_pause_bounded(&tr).is_empty());
+        // Far beyond the slack: violation.
+        let mut tr = Trace::new();
+        tr.push(command);
+        tr.push(TraceEvent::IntakePaused { t: 12.0, event: 0 });
+        tr.push(TraceEvent::IntakeResumed { t: 20.0, event: 0 });
+        assert_eq!(check_intake_pause_bounded(&tr).len(), 1);
+    }
+
+    #[test]
+    fn unresumed_pause_is_caught() {
+        let mut tr = Trace::new();
+        tr.push(TraceEvent::ScaleCommand {
+            t: 10.0,
+            event: 0,
+            from_devices: 4,
+            to_devices: 6,
+            declared_pause: Some((12.0, 13.0)),
+        });
+        tr.push(TraceEvent::IntakePaused { t: 12.0, event: 0 });
+        let v = check_intake_pause_bounded(&tr);
+        assert!(v.iter().any(|v| v.detail.contains("never resumed")));
+    }
+
+    #[test]
+    fn dangling_suspension_is_caught() {
+        let mut tr = Trace::new();
+        tr.push(TraceEvent::Suspended { t: 1.0, event: 0, id: 5 });
+        let v = check_suspend_disposition(&tr);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].detail.contains("disposed 0 times"));
+        // A resume settles it.
+        tr.push(TraceEvent::Resumed { t: 2.0, event: 0, id: 5 });
+        assert!(check_suspend_disposition(&tr).is_empty());
+        // A second disposition breaks it again.
+        tr.push(TraceEvent::Restarted { t: 3.0, event: 0, id: 5 });
+        assert_eq!(check_suspend_disposition(&tr).len(), 1);
+    }
+}

@@ -1,0 +1,42 @@
+//! Fault injection and trace conformance (the chaos harness).
+//!
+//! ElasticMoE's headline claim is zero-downtime scaling, but the bursty,
+//! unreliable cloud conditions the paper targets make partial failure the
+//! norm, not the exception. This subsystem turns the repro's correctness
+//! story from happy-path acceptance tests into a conformance suite:
+//!
+//! - [`faults`] — a deterministic, seeded [`FaultPlan`] of injected
+//!   faults (P2P link failure mid-copy-leg, device loss, HBM pressure
+//!   that shrinks the migration byte budget, straggler devices),
+//!   consumed through a [`FaultInjector`] hook that
+//!   [`crate::hmm::HmmControl::execute_plan`] consults at every fabric
+//!   leg and the serving simulators drain into the event trace.
+//! - [`trace`] — a structured [`Trace`] of every serving run (scale
+//!   commands, plan audits, intake-pause edges, suspend/resume,
+//!   per-sequence dispositions, finishes), emitted by
+//!   [`crate::coordinator::ServingSim`] and
+//!   [`crate::coordinator::FleetSim`].
+//! - [`invariants`] — pure checkers over a trace: KV block conservation
+//!   across any event *including aborts*, exactly-once finish per
+//!   sequence with no token loss, migration bytes within the (possibly
+//!   pressure-shrunk) budget, and intake pauses bounded by their
+//!   declared switchover windows.
+//!
+//! Abortability itself lives in the scaling stack: on a fault,
+//! [`crate::hmm::HmmControl::execute_plan`] rolls every applied op back
+//! and [`crate::scaling::ElasticMoE`] returns a
+//! [`crate::scaling::ScalingOutcome`] whose `aborted` field tells the
+//! simulators to keep the old instance and resume suspended sequences on
+//! their origin replica. `repro exp chaos` sweeps a scenario matrix of
+//! method × scale direction × fault type and asserts every invariant in
+//! every cell; see `docs/architecture/05-failure-model.md`.
+
+pub mod faults;
+pub mod invariants;
+pub mod trace;
+
+pub use faults::{
+    FaultEntry, FaultInjector, FaultKind, FaultPlan, FaultRecord,
+};
+pub use invariants::{check_all, Violation};
+pub use trace::{PlanAudit, Trace, TraceEvent};

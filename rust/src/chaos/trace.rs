@@ -1,0 +1,200 @@
+//! Structured event trace of a serving run.
+//!
+//! Both simulators ([`crate::coordinator::ServingSim`],
+//! [`crate::coordinator::FleetSim`]) emit a [`Trace`] alongside their
+//! metrics: every arrival, scale command (with its declared intake-pause
+//! window and plan audit), fault firing, intake-pause edge,
+//! suspend/resume, per-sequence switchover disposition, and finish. The
+//! trace is the machine-checkable record the conformance checkers
+//! ([`super::invariants`]) run over — the point is that correctness
+//! claims ("no token loss", "blocks conserved even across aborts") are
+//! verified against what the run *actually did*, not against what the
+//! scaling method promised.
+
+use super::faults::FaultKind;
+
+/// Plan-level accounting of one scaling event, captured when the command
+/// is issued (rides in [`crate::scaling::ScalingOutcome::plan_audit`]).
+/// Present whenever the plan was drawn against a live KV snapshot.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanAudit {
+    /// Live KV blocks at the snapshot — the conservation baseline.
+    pub snapshot_blocks: usize,
+    /// Blocks that remap in place (zero-copy).
+    pub kv_remapped_blocks: usize,
+    /// Blocks that move over the fabric.
+    pub kv_copied_blocks: usize,
+    /// Blocks freed because their sequence re-prefills.
+    pub kv_freed_blocks: usize,
+    /// Bytes the KV copy legs move (charged against the budget).
+    pub kv_copied_bytes: u64,
+    /// Effective migration-byte budget the plan was drawn under (the
+    /// configured budget after any HBM-pressure shrink).
+    pub migration_budget_bytes: u64,
+    /// Bytes moved by expert migrations (forced moves are budget-exempt;
+    /// reported for the record, not checked against the budget).
+    pub expert_migration_bytes: u64,
+}
+
+impl PlanAudit {
+    /// Conservation invariant: every snapshot block accounted exactly
+    /// once — remapped, copied, or freed.
+    pub fn blocks_conserved(&self) -> bool {
+        self.kv_remapped_blocks + self.kv_copied_blocks + self.kv_freed_blocks
+            == self.snapshot_blocks
+    }
+}
+
+/// One event in a serving run's trace. All times are absolute simulated
+/// seconds; `event` is the run-wide scaling-event ordinal (0-based).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// A request entered the system.
+    Arrival { t: f64, id: u64, tokens: usize },
+    /// A scale command was issued. `declared_pause` is the outcome's
+    /// intake-pause window in absolute time — the bound the pause edges
+    /// must respect.
+    ScaleCommand {
+        t: f64,
+        event: usize,
+        from_devices: usize,
+        to_devices: usize,
+        declared_pause: Option<(f64, f64)>,
+    },
+    /// The event's plan-level accounting (present when a live KV snapshot
+    /// was planned against).
+    PlanAudited {
+        t: f64,
+        event: usize,
+        audit: PlanAudit,
+    },
+    /// An injected fault fired during the event.
+    FaultFired {
+        t: f64,
+        event: usize,
+        fault: FaultKind,
+    },
+    /// The active engine stopped admitting new requests.
+    IntakePaused { t: f64, event: usize },
+    /// Admission reopened (switchover completed or event aborted).
+    IntakeResumed { t: f64, event: usize },
+    /// A running sequence was frozen for the KV handoff window.
+    Suspended { t: f64, event: usize, id: u64 },
+    /// A suspended sequence resumed on its origin replica (event abort).
+    Resumed { t: f64, event: usize, id: u64 },
+    /// A drained sequence was adopted by the successor with its decode
+    /// progress intact (`remap` = blocks stayed put; otherwise copied).
+    Adopted {
+        t: f64,
+        event: usize,
+        id: u64,
+        remap: bool,
+    },
+    /// A drained sequence restarted from scratch on the successor.
+    Restarted { t: f64, event: usize, id: u64 },
+    /// The event completed: the successor serves `devices` devices.
+    ScaleCompleted { t: f64, event: usize, devices: usize },
+    /// The event aborted; `rolled_back` means the cluster returned to its
+    /// pre-plan state and the old instance kept serving.
+    ScaleAborted {
+        t: f64,
+        event: usize,
+        rolled_back: bool,
+        reason: String,
+    },
+    /// A request finished, having produced `tokens` decode tokens.
+    Finished { t: f64, id: u64, tokens: usize },
+}
+
+impl TraceEvent {
+    /// The event's timestamp.
+    pub fn t(&self) -> f64 {
+        match self {
+            TraceEvent::Arrival { t, .. }
+            | TraceEvent::ScaleCommand { t, .. }
+            | TraceEvent::PlanAudited { t, .. }
+            | TraceEvent::FaultFired { t, .. }
+            | TraceEvent::IntakePaused { t, .. }
+            | TraceEvent::IntakeResumed { t, .. }
+            | TraceEvent::Suspended { t, .. }
+            | TraceEvent::Resumed { t, .. }
+            | TraceEvent::Adopted { t, .. }
+            | TraceEvent::Restarted { t, .. }
+            | TraceEvent::ScaleCompleted { t, .. }
+            | TraceEvent::ScaleAborted { t, .. }
+            | TraceEvent::Finished { t, .. } => *t,
+        }
+    }
+}
+
+/// An append-only event log for one simulated run.
+#[derive(Debug, Default)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    pub fn new() -> Self {
+        Trace::default()
+    }
+
+    pub fn push(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Count events matching a predicate.
+    pub fn count(&self, f: impl Fn(&TraceEvent) -> bool) -> usize {
+        self.events.iter().filter(|e| f(e)).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn audit_conservation() {
+        let mut a = PlanAudit {
+            snapshot_blocks: 10,
+            kv_remapped_blocks: 6,
+            kv_copied_blocks: 3,
+            kv_freed_blocks: 1,
+            kv_copied_bytes: 100,
+            migration_budget_bytes: 1000,
+            expert_migration_bytes: 0,
+        };
+        assert!(a.blocks_conserved());
+        a.kv_freed_blocks = 2;
+        assert!(!a.blocks_conserved());
+    }
+
+    #[test]
+    fn trace_collects_and_counts() {
+        let mut tr = Trace::new();
+        assert!(tr.is_empty());
+        tr.push(TraceEvent::Arrival {
+            t: 0.5,
+            id: 1,
+            tokens: 10,
+        });
+        tr.push(TraceEvent::Finished {
+            t: 2.0,
+            id: 1,
+            tokens: 10,
+        });
+        assert_eq!(tr.len(), 2);
+        assert_eq!(
+            tr.count(|e| matches!(e, TraceEvent::Finished { .. })),
+            1
+        );
+        assert_eq!(tr.events[0].t(), 0.5);
+    }
+}

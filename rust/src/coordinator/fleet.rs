@@ -11,10 +11,13 @@
 //! window granularity, each replica advances its own discrete-event clock
 //! to the window boundary, then the policy observes the fleet and acts.
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
+use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
+use crate::chaos::{FaultInjector, Trace, TraceEvent};
 use crate::config::{ParallelConfig, SloConfig};
 use crate::engine::{CostModel, ServeEngine};
 use crate::kvmigrate::{KvHandoffStats, KvSnapshot};
@@ -25,7 +28,8 @@ use crate::workload::Request;
 
 use super::policy::{FleetAction, FleetPolicy, ReplicaLoad};
 use super::serving::{
-    begin_transition_on, build_engine, switchover_engine, PendingScale,
+    begin_transition_on, build_engine, complete_pending, log_command,
+    sync_pause_window, PendingScale,
 };
 
 /// How arrivals are spread across ready replicas.
@@ -153,6 +157,9 @@ pub struct FleetOutput {
     pub truncated: usize,
     /// In-flight KV handoff tally across every replica switchover.
     pub handoff: KvHandoffStats,
+    /// Structured event trace of the run across all replicas (the record
+    /// the [`crate::chaos::invariants`] checkers run over).
+    pub trace: Trace,
 }
 
 impl FleetOutput {
@@ -171,6 +178,10 @@ pub struct FleetSim {
     pub window: f64,
     pub max_batch: usize,
     pub router: Router,
+    /// Chaos hook, shared with the replicas' scaling methods: fired-fault
+    /// records drain into the run trace at each scale command. `None` =
+    /// no fault injection.
+    pub injector: Option<Rc<RefCell<FaultInjector>>>,
 }
 
 impl FleetSim {
@@ -182,6 +193,7 @@ impl FleetSim {
             window: 5.0,
             max_batch: 256,
             router,
+            injector: None,
         }
     }
 
@@ -246,6 +258,15 @@ impl FleetSim {
         }
 
         arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        let mut trace = Trace::new();
+        let mut event_seq = 0usize;
+        for r in &arrivals {
+            trace.push(TraceEvent::Arrival {
+                t: r.arrival,
+                id: r.id,
+                tokens: r.max_new_tokens,
+            });
+        }
         let mut next_arrival = 0usize;
         let mut recorder = MetricsRecorder::new();
         let mut actions: Vec<(f64, FleetAction)> = Vec::new();
@@ -301,6 +322,7 @@ impl FleetSim {
                     &mut recorder,
                     &mut events,
                     &mut handoff,
+                    &mut trace,
                 )?;
             }
 
@@ -379,8 +401,25 @@ impl FleetSim {
                         )?,
                         None => rep.method.scale(&target)?,
                     };
-                    begin_transition_on(&outcome, rep.engine.as_mut());
-                    rep.pending = Some(PendingScale::new(outcome, t_end));
+                    let ev = event_seq;
+                    event_seq += 1;
+                    log_command(
+                        &mut trace,
+                        self.injector.as_ref(),
+                        t_end,
+                        ev,
+                        rep.current.n_devices(),
+                        &outcome,
+                    );
+                    let paused = begin_transition_on(
+                        &outcome,
+                        rep.engine.as_mut(),
+                        &mut trace,
+                        t_end,
+                        ev,
+                    );
+                    rep.pending =
+                        Some(PendingScale::new(outcome, t_end, ev, paused));
                     actions.push((t_end, action));
                 }
                 FleetAction::AddReplica => {
@@ -430,8 +469,26 @@ impl FleetSim {
                     // being re-asked every single window.
                     let rep = &mut replicas[replica];
                     if let Some(outcome) = rep.method.rebalance()? {
-                        begin_transition_on(&outcome, rep.engine.as_mut());
-                        rep.pending = Some(PendingScale::new(outcome, t_end));
+                        let ev = event_seq;
+                        event_seq += 1;
+                        log_command(
+                            &mut trace,
+                            self.injector.as_ref(),
+                            t_end,
+                            ev,
+                            rep.current.n_devices(),
+                            &outcome,
+                        );
+                        let paused = begin_transition_on(
+                            &outcome,
+                            rep.engine.as_mut(),
+                            &mut trace,
+                            t_end,
+                            ev,
+                        );
+                        rep.pending = Some(PendingScale::new(
+                            outcome, t_end, ev, paused,
+                        ));
                         actions.push((t_end, action));
                     }
                 }
@@ -455,6 +512,7 @@ impl FleetSim {
             final_replicas: replicas.iter().filter(|r| !r.retired).count(),
             truncated,
             handoff,
+            trace,
         })
     }
 
@@ -478,6 +536,7 @@ impl FleetSim {
         recorder: &mut MetricsRecorder,
         events: &mut Vec<ScalingOutcome>,
         handoff: &mut KvHandoffStats,
+        trace: &mut Trace,
     ) -> Result<()> {
         if rep.retired {
             rep.clock.advance_to(t_end);
@@ -494,23 +553,27 @@ impl FleetSim {
             }
 
             // Complete a pending transition: switch over to a fresh engine
-            // for the new configuration, migrating in-flight work.
+            // for the new configuration, migrating in-flight work. An
+            // aborted (rolled-back) event instead keeps the old engine:
+            // intake reopens and suspended sequences resume in place.
             if let Some(p) = &rep.pending {
                 if now >= p.started + p.outcome.ready_after {
                     let p = rep.pending.take().unwrap();
-                    let (fresh, ho) = switchover_engine(
+                    if let Some(new_parallel) = complete_pending(
                         &self.cost,
                         self.hbm_per_device,
                         self.max_batch,
-                        &p.outcome,
-                        rep.engine.take(),
+                        p,
+                        &mut rep.engine,
                         rep.kv_factor,
                         rep.batch_factor,
-                    );
-                    handoff.merge(&ho);
-                    rep.engine = Some(fresh);
-                    rep.current = p.outcome.new_parallel.clone();
-                    events.push(p.outcome);
+                        handoff,
+                        events,
+                        trace,
+                        now,
+                    ) {
+                        rep.current = new_parallel;
+                    }
                     continue;
                 }
             }
@@ -529,20 +592,7 @@ impl FleetSim {
 
             if let Some(eng) = rep.engine.as_mut() {
                 if let Some(p) = rep.pending.as_mut() {
-                    if intake_open {
-                        eng.batcher.resume_intake();
-                    } else {
-                        eng.batcher.pause_intake();
-                        // Freeze the KV-handoff plan's copy sequences
-                        // while their blocks are in flight (once per
-                        // event, when the pause window opens).
-                        if !p.suspended_applied {
-                            p.suspended_applied = true;
-                            if let Some(h) = &p.outcome.kv_handoff {
-                                eng.suspend_sequences(h.suspend_ids());
-                            }
-                        }
-                    }
+                    sync_pause_window(p, eng, intake_open, trace, now);
                 }
                 if intake_open && !in_downtime {
                     while rep
@@ -562,6 +612,11 @@ impl FleetSim {
                 if eng.has_work() {
                     let out = eng.step(&rep.clock)?;
                     for r in out.finished {
+                        trace.push(TraceEvent::Finished {
+                            t: rep.clock.now(),
+                            id: r.id,
+                            tokens: r.generated,
+                        });
                         recorder.record(&r);
                     }
                     !matches!(out.kind, crate::engine::StepKind::Idle)

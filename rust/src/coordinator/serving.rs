@@ -2,10 +2,13 @@
 //! into the engine while a scaling method executes transitions beneath it.
 //! Drives Figs 9/10, Table 2 and the SLO experiments.
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
+use std::rc::Rc;
 
 use anyhow::Result;
 
+use crate::chaos::{FaultInjector, Trace, TraceEvent};
 use crate::config::{ParallelConfig, SloConfig};
 use crate::engine::{
     BatcherConfig, CostModel, CostModelBackend, PagedKv, ServeEngine,
@@ -42,6 +45,10 @@ pub struct SimOutput {
     /// What happened to in-flight sequences across every switchover of
     /// the run: adopted (remap/copy) vs restarted, with the token bill.
     pub handoff: KvHandoffStats,
+    /// Structured event trace of the run (arrivals, scale commands, plan
+    /// audits, pause edges, suspend/resume, dispositions, finishes) — the
+    /// record the [`crate::chaos::invariants`] checkers run over.
+    pub trace: Trace,
 }
 
 /// A scaling event in flight: the outcome timeline plus its absolute
@@ -52,14 +59,26 @@ pub(crate) struct PendingScale {
     /// The per-sequence suspend of the KV-handoff window has been applied
     /// (it fires once, when the intake-pause window opens).
     pub(crate) suspended_applied: bool,
+    /// Run-wide scaling-event ordinal (trace correlation).
+    pub(crate) event: usize,
+    /// The intake pause is currently enacted on the engine (tracked so
+    /// the trace records exactly one pause/resume edge pair per event).
+    pub(crate) pause_open: bool,
 }
 
 impl PendingScale {
-    pub(crate) fn new(outcome: ScalingOutcome, started: f64) -> Self {
+    pub(crate) fn new(
+        outcome: ScalingOutcome,
+        started: f64,
+        event: usize,
+        pause_open: bool,
+    ) -> Self {
         PendingScale {
             outcome,
             started,
             suspended_applied: false,
+            event,
+            pause_open,
         }
     }
 }
@@ -112,6 +131,7 @@ pub(crate) fn build_engine(
 /// queued requests transfer as-is. Returns the successor and the handoff
 /// tally. Shared by [`ServingSim`] and [`super::FleetSim`] so switchover
 /// semantics cannot diverge.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn switchover_engine(
     cost: &CostModel,
     hbm_per_device: u64,
@@ -120,6 +140,9 @@ pub(crate) fn switchover_engine(
     old: Option<ServeEngine>,
     kv_factor: f64,
     batch_factor: f64,
+    trace: &mut Trace,
+    now: f64,
+    event: usize,
 ) -> (ServeEngine, KvHandoffStats) {
     let mut fresh = build_engine(
         cost,
@@ -149,6 +172,12 @@ pub(crate) fn switchover_engine(
                 // KV carried across the event: progress kept.
                 fresh.kv.admit(r.id, r.current_len()).ok();
                 r.state = RequestState::Decoding;
+                trace.push(TraceEvent::Adopted {
+                    t: now,
+                    event,
+                    id: r.id,
+                    remap: disposition == HandoffDisposition::Remap,
+                });
                 if blanket {
                     stats.adopted_blanket += 1;
                 } else {
@@ -162,6 +191,7 @@ pub(crate) fn switchover_engine(
             } else {
                 // Restart from scratch (same fields the preemption
                 // restart path preserves: tenant and live-path prompt).
+                trace.push(TraceEvent::Restarted { t: now, event, id: r.id });
                 stats.recomputed += 1;
                 stats.recompute_tokens += r.prompt_len as u64;
                 stats.lost_decode_tokens += r.generated as u64;
@@ -186,19 +216,195 @@ pub(crate) fn switchover_engine(
 /// Enact the instantaneous effects of a freshly issued scaling event on
 /// the active engine: pause intake if the pause window opens at the
 /// command itself (a later window is enacted by the serving loop when it
-/// opens), and derate throughput for the transition.
+/// opens), and derate throughput for the transition. Returns whether the
+/// pause was enacted here (the caller tracks the open edge for the
+/// trace).
 pub(crate) fn begin_transition_on(
     outcome: &ScalingOutcome,
     engine: Option<&mut ServeEngine>,
-) {
+    trace: &mut Trace,
+    now: f64,
+    event: usize,
+) -> bool {
+    let mut paused = false;
     if let Some(eng) = engine {
         if let Some((a, _)) = outcome.intake_pause {
             if a <= 0.0 {
                 eng.batcher.pause_intake();
+                trace.push(TraceEvent::IntakePaused { t: now, event });
+                paused = true;
             }
         }
         if outcome.transition_derate < 1.0 {
             eng.backend.set_derate(outcome.transition_derate);
+        }
+    }
+    paused
+}
+
+/// Complete a pending scaling event against the active engine. On a
+/// successful event, switch over to a fresh engine and return the new
+/// configuration; on an aborted (rolled-back) event, keep the old
+/// engine — reopen intake, clear the transition derate, resume the
+/// suspended sequences in place — and return `None`. Emits the
+/// completion trace events and pushes the outcome into `events`.
+/// Shared by [`ServingSim`] and [`super::FleetSim`] so the
+/// completion/abort choreography cannot diverge.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn complete_pending(
+    cost: &CostModel,
+    hbm_per_device: u64,
+    max_batch_cap: usize,
+    p: PendingScale,
+    engine: &mut Option<ServeEngine>,
+    kv_factor: f64,
+    batch_factor: f64,
+    handoff: &mut KvHandoffStats,
+    events: &mut Vec<ScalingOutcome>,
+    trace: &mut Trace,
+    now: f64,
+) -> Option<ParallelConfig> {
+    if let Some(ab) = &p.outcome.aborted {
+        // Aborted + rolled back: the old engine keeps serving — not a
+        // single in-flight request is dropped.
+        if let Some(eng) = engine.as_mut() {
+            if p.pause_open {
+                eng.batcher.resume_intake();
+                trace.push(TraceEvent::IntakeResumed {
+                    t: now,
+                    event: p.event,
+                });
+            }
+            // The derate dies with the abandoned transition (the kept
+            // engine must not stay throttled forever).
+            eng.backend.set_derate(1.0);
+            for id in eng.resume_suspended() {
+                trace.push(TraceEvent::Resumed {
+                    t: now,
+                    event: p.event,
+                    id,
+                });
+            }
+        }
+        trace.push(TraceEvent::ScaleAborted {
+            t: now,
+            event: p.event,
+            rolled_back: ab.rolled_back,
+            reason: ab.reason.clone(),
+        });
+        events.push(p.outcome);
+        return None;
+    }
+    let (fresh, ho) = switchover_engine(
+        cost,
+        hbm_per_device,
+        max_batch_cap,
+        &p.outcome,
+        engine.take(),
+        kv_factor,
+        batch_factor,
+        trace,
+        now,
+        p.event,
+    );
+    if p.pause_open {
+        trace.push(TraceEvent::IntakeResumed {
+            t: now,
+            event: p.event,
+        });
+    }
+    handoff.merge(&ho);
+    *engine = Some(fresh);
+    let new_parallel = p.outcome.new_parallel.clone();
+    trace.push(TraceEvent::ScaleCompleted {
+        t: now,
+        event: p.event,
+        devices: new_parallel.n_devices(),
+    });
+    events.push(p.outcome);
+    Some(new_parallel)
+}
+
+/// Keep the active engine's admission gate in sync with the pending
+/// event's pause window, suspending the KV-handoff plan's copy
+/// sequences exactly once when the window opens (their blocks are in
+/// flight and must stay byte-stable until switchover or abort). Shared
+/// by [`ServingSim`] and [`super::FleetSim`].
+pub(crate) fn sync_pause_window(
+    p: &mut PendingScale,
+    eng: &mut ServeEngine,
+    intake_open: bool,
+    trace: &mut Trace,
+    now: f64,
+) {
+    if intake_open {
+        if p.pause_open {
+            eng.batcher.resume_intake();
+            trace.push(TraceEvent::IntakeResumed {
+                t: now,
+                event: p.event,
+            });
+            p.pause_open = false;
+        }
+    } else {
+        if !p.pause_open {
+            eng.batcher.pause_intake();
+            trace.push(TraceEvent::IntakePaused {
+                t: now,
+                event: p.event,
+            });
+            p.pause_open = true;
+        }
+        if !p.suspended_applied {
+            p.suspended_applied = true;
+            if let Some(h) = &p.outcome.kv_handoff {
+                for id in eng.suspend_sequences(h.suspend_ids()) {
+                    trace.push(TraceEvent::Suspended {
+                        t: now,
+                        event: p.event,
+                        id,
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// Emit the command-time trace events of a freshly issued scaling event:
+/// the command itself (with its declared pause window in absolute time),
+/// the plan audit, and any chaos faults that fired while the method
+/// executed the plan. Shared by [`ServingSim`] and [`super::FleetSim`].
+pub(crate) fn log_command(
+    trace: &mut Trace,
+    injector: Option<&Rc<RefCell<FaultInjector>>>,
+    now: f64,
+    event: usize,
+    from_devices: usize,
+    outcome: &ScalingOutcome,
+) {
+    trace.push(TraceEvent::ScaleCommand {
+        t: now,
+        event,
+        from_devices,
+        to_devices: outcome.new_parallel.n_devices(),
+        declared_pause: outcome
+            .intake_pause
+            .map(|(a, b)| (now + a, now + b)),
+    });
+    if let Some(audit) = outcome.plan_audit {
+        trace.push(TraceEvent::PlanAudited {
+            t: now,
+            event,
+            audit,
+        });
+    }
+    if let Some(inj) = injector {
+        for rec in inj.borrow_mut().take_fired() {
+            trace.push(TraceEvent::FaultFired {
+                t: now,
+                event,
+                fault: rec.kind,
+            });
         }
     }
 }
@@ -211,6 +417,10 @@ pub struct ServingSim {
     /// Estimator observation window (seconds).
     pub window: f64,
     pub max_batch: usize,
+    /// Chaos hook, shared with the scaling method's HMM: the simulator
+    /// drains its fired-fault records into the run trace at each scale
+    /// command. `None` = no fault injection.
+    pub injector: Option<Rc<RefCell<FaultInjector>>>,
 }
 
 impl ServingSim {
@@ -221,6 +431,7 @@ impl ServingSim {
             hbm_per_device: 64 << 30,
             window: 5.0,
             max_batch: 256,
+            injector: None,
         }
     }
 
@@ -260,8 +471,17 @@ impl ServingSim {
         let mut events: Vec<ScalingOutcome> = Vec::new();
         let mut device_timeline = vec![(0.0, initial.n_devices())];
         let mut handoff = KvHandoffStats::default();
+        let mut trace = Trace::new();
+        let mut event_seq = 0usize;
 
         arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        for r in &arrivals {
+            trace.push(TraceEvent::Arrival {
+                t: r.arrival,
+                id: r.id,
+                tokens: r.max_new_tokens,
+            });
+        }
         let mut arrivals: VecDeque<Request> = arrivals.into();
         let mut inbox: VecDeque<Request> = VecDeque::new();
         let mut pending: Option<PendingScale> = None;
@@ -283,24 +503,28 @@ impl ServingSim {
                 inbox.push_back(arrivals.pop_front().unwrap());
             }
 
-            // 2) Complete a pending scaling event.
+            // 2) Complete a pending scaling event. An aborted event
+            // (fault + rollback) keeps the old engine: intake reopens and
+            // the suspended sequences resume on their origin replica.
             if let Some(p) = &pending {
                 if now >= p.started + p.outcome.ready_after {
                     let p = pending.take().unwrap();
-                    let (fresh, ho) = switchover_engine(
+                    if let Some(new_parallel) = complete_pending(
                         &self.cost,
                         self.hbm_per_device,
                         self.max_batch,
-                        &p.outcome,
-                        engine.take(),
+                        p,
+                        &mut engine,
                         kv_factor,
                         batch_factor,
-                    );
-                    handoff.merge(&ho);
-                    engine = Some(fresh);
-                    current = p.outcome.new_parallel.clone();
-                    device_timeline.push((now, current.n_devices()));
-                    events.push(p.outcome);
+                        &mut handoff,
+                        &mut events,
+                        &mut trace,
+                        now,
+                    ) {
+                        current = new_parallel;
+                        device_timeline.push((now, current.n_devices()));
+                    }
                 }
             }
 
@@ -323,17 +547,7 @@ impl ServingSim {
             // new owner and must stay byte-stable until switchover.
             if let Some(eng) = engine.as_mut() {
                 if let Some(p) = pending.as_mut() {
-                    if intake_open {
-                        eng.batcher.resume_intake();
-                    } else {
-                        eng.batcher.pause_intake();
-                        if !p.suspended_applied {
-                            p.suspended_applied = true;
-                            if let Some(h) = &p.outcome.kv_handoff {
-                                eng.suspend_sequences(h.suspend_ids());
-                            }
-                        }
-                    }
+                    sync_pause_window(p, eng, intake_open, &mut trace, now);
                 }
                 if intake_open && !in_downtime {
                     while let Some(r) = inbox.pop_front() {
@@ -385,8 +599,26 @@ impl ServingSim {
                                 )?,
                                 None => method.scale(&target)?,
                             };
-                            begin_transition_on(&outcome, engine.as_mut());
-                            pending = Some(PendingScale::new(outcome, now));
+                            let ev = event_seq;
+                            event_seq += 1;
+                            log_command(
+                                &mut trace,
+                                self.injector.as_ref(),
+                                now,
+                                ev,
+                                current.n_devices(),
+                                &outcome,
+                            );
+                            let paused = begin_transition_on(
+                                &outcome,
+                                engine.as_mut(),
+                                &mut trace,
+                                now,
+                                ev,
+                            );
+                            pending = Some(PendingScale::new(
+                                outcome, now, ev, paused,
+                            ));
                         }
                     }
                 }
@@ -403,8 +635,26 @@ impl ServingSim {
                                 )?,
                                 None => method.scale(&target)?,
                             };
-                            begin_transition_on(&outcome, engine.as_mut());
-                            pending = Some(PendingScale::new(outcome, now));
+                            let ev = event_seq;
+                            event_seq += 1;
+                            log_command(
+                                &mut trace,
+                                self.injector.as_ref(),
+                                now,
+                                ev,
+                                current.n_devices(),
+                                &outcome,
+                            );
+                            let paused = begin_transition_on(
+                                &outcome,
+                                engine.as_mut(),
+                                &mut trace,
+                                now,
+                                ev,
+                            );
+                            pending = Some(PendingScale::new(
+                                outcome, now, ev, paused,
+                            ));
                         }
                     }
                 }
@@ -417,6 +667,11 @@ impl ServingSim {
                 if eng.has_work() {
                     let out = eng.step(&clock)?;
                     for r in out.finished {
+                        trace.push(TraceEvent::Finished {
+                            t: clock.now(),
+                            id: r.id,
+                            tokens: r.generated,
+                        });
                         recorder.record(&r);
                     }
                     // An Idle step (e.g. intake paused with only queued
@@ -476,6 +731,7 @@ impl ServingSim {
             end_time: clock.now(),
             device_timeline,
             handoff,
+            trace,
         })
     }
 

@@ -165,23 +165,39 @@ impl Batcher {
     /// Freeze decode for the given running sequences while their KV blocks
     /// are handed off across a scaling event. Their KV stays admitted (the
     /// successor adopts it); they simply stop appearing in
-    /// [`Self::next_work`] until drained at switchover. Returns the number
-    /// of sequences actually suspended (ids not in the running batch — or
-    /// already suspended — are ignored).
-    pub fn suspend(&mut self, ids: &[RequestId]) -> usize {
-        let mut n = 0;
+    /// [`Self::next_work`] until drained at switchover — or resumed by
+    /// [`Self::resume_suspended`] when the event aborts. Returns the ids
+    /// actually suspended (ids not in the running batch — or already
+    /// suspended — are ignored).
+    pub fn suspend(&mut self, ids: &[RequestId]) -> Vec<RequestId> {
+        let mut out = Vec::new();
         let mut i = 0;
         while i < self.running.len() {
             if ids.contains(&self.running[i].id) {
                 let mut r = self.running.swap_remove(i);
                 r.state = RequestState::Suspended;
+                out.push(r.id);
                 self.suspended.push(r);
-                n += 1;
             } else {
                 i += 1;
             }
         }
-        n
+        out
+    }
+
+    /// Resume every suspended sequence back into the running batch with
+    /// its decode progress intact — the path taken when a scaling event
+    /// aborts and rolls back: the handoff was abandoned, the blocks never
+    /// left this engine, and decode simply continues on the origin
+    /// replica. Returns the resumed ids.
+    pub fn resume_suspended(&mut self) -> Vec<RequestId> {
+        let mut out = Vec::new();
+        for mut r in std::mem::take(&mut self.suspended) {
+            r.state = RequestState::Decoding;
+            out.push(r.id);
+            self.running.push(r);
+        }
+        out
     }
 
     /// Sequences currently frozen for KV handoff.
@@ -342,7 +358,7 @@ mod tests {
         b.enqueue(req(2, 50, 5));
         b.next_work(&mut kv); // both admitted
         let used = kv.used_blocks();
-        assert_eq!(b.suspend(&[2, 99]), 1); // unknown ids ignored
+        assert_eq!(b.suspend(&[2, 99]), vec![2]); // unknown ids ignored
         assert_eq!(b.suspended_len(), 1);
         assert_eq!(b.suspended()[0].state, RequestState::Suspended);
         // KV stays admitted while suspended.
@@ -359,5 +375,32 @@ mod tests {
         assert_eq!(all.len(), 2);
         assert_eq!(kv.used_blocks(), 0);
         assert!(b.is_idle());
+    }
+
+    #[test]
+    fn resume_suspended_restores_decode_with_progress() {
+        let (mut b, mut kv) = setup(8);
+        b.enqueue(req(1, 50, 5));
+        b.enqueue(req(2, 50, 5));
+        b.next_work(&mut kv); // both admitted (Prefilling)
+        for r in b.running_mut() {
+            r.state = RequestState::Decoding;
+            r.generated = 3;
+        }
+        let used = kv.used_blocks();
+        assert_eq!(b.suspend(&[1, 2]).len(), 2);
+        // Abort path: everything comes back, KV untouched, progress kept.
+        let mut resumed = b.resume_suspended();
+        resumed.sort_unstable();
+        assert_eq!(resumed, vec![1, 2]);
+        assert_eq!(b.suspended_len(), 0);
+        assert_eq!(b.running_len(), 2);
+        assert_eq!(kv.used_blocks(), used);
+        for r in b.running() {
+            assert_eq!(r.state, RequestState::Decoding);
+            assert_eq!(r.generated, 3);
+        }
+        // Nothing left to resume.
+        assert!(b.resume_suspended().is_empty());
     }
 }

@@ -193,11 +193,19 @@ impl ServeEngine {
     }
 
     /// Freeze decode for the given sequences while their KV blocks are
-    /// copied to a new owner (scaling-event handoff). Returns how many
-    /// were actually suspended. They are returned by the next
-    /// [`Self::drain`] alongside the running batch.
-    pub fn suspend_sequences(&mut self, ids: &[u64]) -> usize {
+    /// copied to a new owner (scaling-event handoff). Returns the ids
+    /// actually suspended. They are returned by the next [`Self::drain`]
+    /// alongside the running batch — or restored by
+    /// [`Self::resume_suspended`] if the event aborts.
+    pub fn suspend_sequences(&mut self, ids: &[u64]) -> Vec<u64> {
         self.batcher.suspend(ids)
+    }
+
+    /// Resume every suspended sequence in place (a scaling event aborted
+    /// and rolled back: the blocks never left this engine). Returns the
+    /// resumed ids.
+    pub fn resume_suspended(&mut self) -> Vec<u64> {
+        self.batcher.resume_suspended()
     }
 
     pub fn has_work(&self) -> bool {

@@ -107,8 +107,12 @@ fn summarize(out: &FleetOutput) -> (usize, usize, usize, usize) {
 }
 
 /// The fleet scenario suite: flash crowd (hybrid vs horizontal-only vs
-/// vertical-only), diurnal tracking, and a multi-tenant mix.
-pub fn run(fast: bool) -> Result<String> {
+/// vertical-only), diurnal tracking, and a multi-tenant mix. `seed`
+/// (from `repro exp --seed`) perturbs every workload generator so a
+/// failing run is reproducible from its printed value; `None` keeps the
+/// canonical seeds.
+pub fn run(fast: bool, seed: Option<u64>) -> Result<String> {
+    let base = seed.unwrap_or(0);
     let mut report = String::new();
 
     // Scenario 1 — flash crowd (§2.2's "10x within minutes").
@@ -144,7 +148,7 @@ pub fn run(fast: bool) -> Result<String> {
                 &mut p,
                 &mut cold_factory(),
                 2,
-                workload(burst.clone(), 17, horizon),
+                workload(burst.clone(), 17 ^ base, horizon),
                 horizon,
             )?
         } else {
@@ -152,7 +156,7 @@ pub fn run(fast: bool) -> Result<String> {
                 &mut p,
                 &mut elastic_factory(),
                 2,
-                workload(burst.clone(), 17, horizon),
+                workload(burst.clone(), 17 ^ base, horizon),
                 horizon,
             )?
         };
@@ -189,7 +193,7 @@ pub fn run(fast: bool) -> Result<String> {
         &mut p,
         &mut elastic_factory(),
         2,
-        workload(diurnal, 31, horizon2),
+        workload(diurnal, 31 ^ base, horizon2),
         horizon2,
     )?;
     let att = out.recorder.attainment_by_arrival(0.0, horizon2, &slo);
@@ -228,7 +232,7 @@ pub fn run(fast: bool) -> Result<String> {
                 decode_min: 50,
                 decode_max: 100,
                 profile: RateProfile::Fixed(0.8),
-                seed: 41,
+                seed: 41 ^ base,
             },
             SloConfig::strict(),
         ),
@@ -244,7 +248,7 @@ pub fn run(fast: bool) -> Result<String> {
                     start: horizon3 / 3.0,
                     len: horizon3 / 5.0,
                 },
-                seed: 43,
+                seed: 43 ^ base,
             },
             SloConfig::new(8.0, 2.0),
         ),
@@ -284,7 +288,7 @@ mod tests {
 
     #[test]
     fn fleet_report_renders_all_three_scenarios() {
-        let r = run(true).unwrap();
+        let r = run(true, None).unwrap();
         assert!(r.contains("flash crowd"));
         assert!(r.contains("diurnal"));
         assert!(r.contains("tenant mix"));

@@ -24,7 +24,11 @@
 //! | kvmigrate | live-sequence KV handoff (§4.4 claim): remap / |
 //! |         | p2p-copy / recompute vs drain-and-recompute      |
 //! |         | across DP4→DP6 and DP4→DP3 under long contexts   |
+//! | chaos   | fault-injection conformance: method × direction  |
+//! |         | × fault matrix with machine-checked trace        |
+//! |         | invariants and clean abort/rollback              |
 
+pub mod chaos;
 pub mod common;
 pub mod fig1;
 pub mod fleet;
@@ -45,11 +49,20 @@ use anyhow::{bail, Result};
 pub const ALL: &[&str] = &[
     "fig1a", "fig1b", "fig4a", "fig4b", "fig7", "fig8", "fig9a", "fig9b",
     "fig10", "fig11", "fig12", "table1", "table2", "table3", "fleet",
-    "placement", "kvmigrate",
+    "placement", "kvmigrate", "chaos",
 ];
 
 /// Run one experiment by id, returning the rendered report.
 pub fn run(id: &str, fast: bool) -> Result<String> {
+    run_seeded(id, fast, None)
+}
+
+/// Like [`run`], with an explicit workload/fault seed (`repro exp
+/// --seed N`). Experiments that ignore the seed are bit-identical to
+/// [`run`]; `fleet` perturbs its workload generators with it and `chaos`
+/// derives its fault schedule from it, printing the seed in the report
+/// so any failing cell can be replayed.
+pub fn run_seeded(id: &str, fast: bool, seed: Option<u64>) -> Result<String> {
     let report = match id {
         "fig1a" => fig1::fig1a()?,
         "fig1b" => fig1::fig1b()?,
@@ -65,9 +78,12 @@ pub fn run(id: &str, fast: bool) -> Result<String> {
         "table1" => tables::table1()?,
         "table2" => tables::table2(fast)?,
         "table3" => tables::table3()?,
-        "fleet" => fleet::run(fast)?,
+        "fleet" => fleet::run(fast, seed)?,
         "placement" => placement::run(fast)?,
         "kvmigrate" => kvmigrate::run(fast)?,
+        "chaos" => {
+            chaos::run(fast, seed.unwrap_or(chaos::DEFAULT_SEED))?
+        }
         other => bail!("unknown experiment '{other}' (see `repro exp list`)"),
     };
     // Persist alongside printing.

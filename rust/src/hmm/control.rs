@@ -12,6 +12,7 @@ use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::chaos::{FaultInjector, FaultKind};
 use crate::config::{ModelConfig, ParallelConfig};
 use crate::device::hbm::RegionKind;
 use crate::device::ipc::ProcId;
@@ -71,6 +72,10 @@ pub struct ScaleStats {
     pub kv_init_time: f64,
     /// Non-vpage realloc penalty (ablation only).
     pub realloc_time: f64,
+    /// Time spent undoing applied ops after a fault aborted the plan
+    /// (modelled as one O(1) page-table/control op per undone op). Zero
+    /// on successful executions; included in [`Self::total`].
+    pub rollback_time: f64,
     /// Live-sequence KV handoff: fabric time of the block copies plus the
     /// per-sequence page-table handovers. NOT included in [`Self::total`]:
     /// the weight work runs in the serving-concurrent phase, while KV
@@ -81,6 +86,87 @@ pub struct ScaleStats {
     /// Sum of the serving-concurrent stages (excludes
     /// [`Self::kv_migrate_time`]).
     pub total: f64,
+}
+
+/// Per-op outcome of a plan execution (see
+/// [`HmmControl::execute_plan`]). A successful execution is all
+/// [`StepOutcome::Applied`]; an aborted one has exactly one
+/// [`StepOutcome::Faulted`] op, [`StepOutcome::RolledBack`] before it and
+/// [`StepOutcome::Skipped`] after it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum StepOutcome {
+    /// The op was applied and is in effect.
+    Applied,
+    /// The op was applied, then undone when a later op faulted.
+    RolledBack,
+    /// The op hit an injected fault; the plan aborted here.
+    Faulted(FaultKind),
+    /// The op was never reached (the plan aborted earlier).
+    Skipped,
+}
+
+/// Why and where a plan execution aborted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AbortReport {
+    /// The injected fault that fired.
+    pub fault: FaultKind,
+    /// Index into the plan's ops where it fired.
+    pub op_index: usize,
+    /// Rollback completed: the cluster, virtual-page tables and deferred
+    /// frees are back in their exact pre-plan state.
+    pub rolled_back: bool,
+    /// Human-readable summary for logs and the event trace.
+    pub reason: String,
+}
+
+/// Result of [`HmmControl::execute_plan`]: stage timings, one
+/// [`StepOutcome`] per plan op, and the abort report when an injected
+/// fault cut the plan short (in which case every applied op has been
+/// rolled back and the pre-plan configuration is still current).
+#[derive(Debug, Clone)]
+pub struct PlanExecution {
+    pub stats: ScaleStats,
+    /// One outcome per plan op, in op order.
+    pub steps: Vec<StepOutcome>,
+    /// `Some` when a fault aborted the event.
+    pub aborted: Option<AbortReport>,
+}
+
+/// Undo record for one applied plan op (rollback bookkeeping).
+enum UndoOp {
+    /// A non-expert shard was copied to `dev` and registered under `tag`.
+    AttnRegion {
+        dev: DeviceId,
+        tag: String,
+        region: RegionId,
+    },
+    /// An expert was copied to `dev` and bound into its vpage table.
+    ExpertBound {
+        layer: usize,
+        expert: usize,
+        dev: DeviceId,
+        region: RegionId,
+    },
+    /// An expert was unbound from `dev` (its region queued for deferred
+    /// free).
+    ExpertEvicted {
+        layer: usize,
+        expert: usize,
+        dev: DeviceId,
+        region: RegionId,
+    },
+    /// A departing device's shards and KV were queued for deferred free.
+    ShardReleased {
+        dev: DeviceId,
+        regions: Vec<(String, RegionId)>,
+        kv: Option<RegionId>,
+    },
+    /// A fresh KV cache was allocated on `dev`.
+    KvAllocated {
+        dev: DeviceId,
+        region: RegionId,
+        prev: Option<RegionId>,
+    },
 }
 
 /// The weight/KV references handed to one inference instance: its private
@@ -123,6 +209,9 @@ pub struct HmmControl {
     deferred_frees: Vec<(DeviceId, RegionId)>,
     /// EWMA expert popularity, fed via [`Self::record_routing`].
     load_stats: Option<ExpertLoadStats>,
+    /// Chaos hook: consulted at plan time (budget pressure) and at every
+    /// fabric leg / device touch of [`Self::execute_plan`].
+    injector: Option<Rc<RefCell<FaultInjector>>>,
     kv_bytes_per_device: u64,
     next_proc: ProcId,
 }
@@ -147,6 +236,7 @@ impl HmmControl {
             private_regions: HashMap::new(),
             deferred_frees: Vec::new(),
             load_stats: None,
+            injector: None,
             kv_bytes_per_device: 0,
             next_proc: 1,
         }
@@ -154,6 +244,12 @@ impl HmmControl {
 
     pub fn set_loader(&mut self, loader: PayloadLoader) {
         self.loader = Some(loader);
+    }
+
+    /// Install a chaos fault injector (shared with the serving simulator,
+    /// which drains its fired-fault records into the event trace).
+    pub fn set_fault_injector(&mut self, inj: Rc<RefCell<FaultInjector>>) {
+        self.injector = Some(inj);
     }
 
     pub fn alloc_proc(&mut self) -> ProcId {
@@ -501,8 +597,26 @@ impl HmmControl {
 
         // Experts: migrate only owner changes. The migration-byte budget
         // is split evenly across layers, leftovers carrying forward.
+        // Chaos hook: drawing a plan opens the injector's event scope, and
+        // an armed HBM-pressure fault shrinks the budget for this event
+        // (the KV planner then falls back to recompute verdicts earlier).
+        let budget_factor = self
+            .injector
+            .as_ref()
+            .map(|inj| {
+                let mut inj = inj.borrow_mut();
+                inj.begin_event();
+                inj.budget_factor()
+            })
+            .unwrap_or(1.0);
+        let effective_budget = if budget_factor >= 1.0 {
+            self.placement.migration_budget_bytes
+        } else {
+            (self.placement.migration_budget_bytes as f64 * budget_factor)
+                as u64
+        };
         let n_layers = self.model.n_layers as usize;
-        let mut budget = self.placement.migration_budget_bytes;
+        let mut budget = effective_budget;
         for layer in 0..n_layers {
             let layer_budget = budget / (n_layers - layer) as u64;
             let (new_owners, used) =
@@ -578,6 +692,7 @@ impl HmmControl {
             from_label: from.label(),
             to_label: to.label(),
             ops,
+            migration_budget_bytes: effective_budget,
         })
     }
 
@@ -585,17 +700,35 @@ impl HmmControl {
     /// cluster, bind migrated experts into destination vpage tables, and
     /// queue evicted pages for deferred free. The old configuration stays
     /// fully usable until [`Self::apply_deferred_frees`].
+    ///
+    /// Returns a [`PlanExecution`]: the stage timings plus one
+    /// [`StepOutcome`] per plan op. When a chaos [`FaultInjector`] is
+    /// installed (see [`Self::set_fault_injector`]) and a fault fires
+    /// mid-plan, the event **aborts**: every applied op is undone in
+    /// reverse order — copied regions released, committed vpage remaps
+    /// reverted through the per-device tables, partially copied KV legs
+    /// discarded, deferred frees drained — so the pre-plan configuration
+    /// stays current and byte-identical, and the abort rides back in
+    /// [`PlanExecution::aborted`]. A hard `Err` is reserved for internal
+    /// inconsistencies (missing regions, allocation failures outside
+    /// fault injection): those are bugs, not injected chaos.
     pub fn execute_plan(
         &mut self,
         plan: &ScalePlan,
         to: &ParallelConfig,
-    ) -> Result<ScaleStats> {
+    ) -> Result<PlanExecution> {
         let mut stats = ScaleStats::default();
         let ipc = self.opts.ipc_safe_alloc;
         let to_layout = WeightLayout::compute(&self.model, to);
         for &dev in &to.devices {
             self.workers.entry(dev).or_insert_with(|| Worker::new(dev));
         }
+        let injector = self.injector.clone();
+
+        let mut steps: Vec<StepOutcome> = Vec::with_capacity(plan.ops.len());
+        let mut undo: Vec<UndoOp> = Vec::new();
+        let mut abort: Option<AbortReport> = None;
+        let deferred_base = self.deferred_frees.len();
 
         let mut owner_updates: Vec<(usize, usize, DeviceId)> = Vec::new();
         let mut attn_transfers: Vec<(DeviceId, DeviceId, u64)> = Vec::new();
@@ -611,6 +744,43 @@ impl HmmControl {
         {
             let mut cluster = self.cluster.borrow_mut();
             for op in &plan.ops {
+                // Chaos hook: consult the injector before touching state,
+                // so a faulted op leaves nothing of its own to undo.
+                let fault = match (&injector, op) {
+                    (Some(inj), PlanOp::P2pAttn { src, dst, .. })
+                        if self.opts.use_p2p =>
+                    {
+                        inj.borrow_mut().on_leg(*src, *dst)
+                    }
+                    (Some(inj), PlanOp::MigrateExpert { src, dst, .. })
+                        if self.opts.use_p2p =>
+                    {
+                        inj.borrow_mut().on_leg(*src, *dst)
+                    }
+                    (Some(inj), PlanOp::KvBlockCopy { legs, .. }) => {
+                        let mut inj = inj.borrow_mut();
+                        legs.iter().find_map(|&(s, d, _)| inj.on_kv_leg(s, d))
+                    }
+                    (Some(inj), PlanOp::KvInit { dev, .. }) => {
+                        inj.borrow_mut().on_device(*dev)
+                    }
+                    _ => None,
+                };
+                if let Some(fault) = fault {
+                    abort = Some(AbortReport {
+                        fault,
+                        op_index: steps.len(),
+                        rolled_back: false,
+                        reason: format!(
+                            "{} at plan op {}",
+                            fault.label(),
+                            steps.len()
+                        ),
+                    });
+                    steps.push(StepOutcome::Faulted(fault));
+                    break;
+                }
+
                 match op {
                     PlanOp::ZeroCopyReuse { .. } | PlanOp::KvReuse { .. } => {}
                     PlanOp::P2pAttn {
@@ -639,6 +809,11 @@ impl HmmControl {
                                 .unwrap()
                                 .regions
                                 .insert(tag.clone(), r);
+                            undo.push(UndoOp::AttnRegion {
+                                dev: *dst,
+                                tag: tag.clone(),
+                                region: r,
+                            });
                         } else {
                             // -HCCL ablation: reload from disk.
                             let unit = to_layout
@@ -659,6 +834,11 @@ impl HmmControl {
                                 .unwrap()
                                 .regions
                                 .insert(tag.clone(), r);
+                            undo.push(UndoOp::AttnRegion {
+                                dev: *dst,
+                                tag: tag.clone(),
+                                region: r,
+                            });
                         }
                     }
                     PlanOp::MigrateExpert {
@@ -707,6 +887,12 @@ impl HmmControl {
                             .bind(*layer, *expert, r)?;
                         *remap_ops.entry(*dst).or_default() += 1;
                         owner_updates.push((*layer, *expert, *dst));
+                        undo.push(UndoOp::ExpertBound {
+                            layer: *layer,
+                            expert: *expert,
+                            dev: *dst,
+                            region: r,
+                        });
                     }
                     PlanOp::EvictExpert { layer, expert, dev } => {
                         let region = self
@@ -720,16 +906,31 @@ impl HmmControl {
                         // switchover (deferred free).
                         self.deferred_frees.push((*dev, region));
                         *remap_ops.entry(*dev).or_default() += 1;
+                        undo.push(UndoOp::ExpertEvicted {
+                            layer: *layer,
+                            expert: *expert,
+                            dev: *dev,
+                            region,
+                        });
                     }
                     PlanOp::ReleaseShard { dev } => {
                         if let Some(w) = self.workers.get_mut(dev) {
-                            for (_, region) in std::mem::take(&mut w.regions)
-                            {
+                            let regions: Vec<(String, RegionId)> =
+                                std::mem::take(&mut w.regions)
+                                    .into_iter()
+                                    .collect();
+                            for &(_, region) in &regions {
                                 self.deferred_frees.push((*dev, region));
                             }
-                            if let Some(kv) = w.kv_region.take() {
+                            let kv = w.kv_region.take();
+                            if let Some(kv) = kv {
                                 self.deferred_frees.push((*dev, kv));
                             }
+                            undo.push(UndoOp::ShardReleased {
+                                dev: *dev,
+                                regions,
+                                kv,
+                            });
                         }
                     }
                     PlanOp::KvBlockRemap { .. } => {
@@ -756,26 +957,114 @@ impl HmmControl {
                             ipc,
                             "kv",
                         )?;
-                        self.workers.get_mut(dev).unwrap().kv_region = Some(kv);
+                        let prev = self
+                            .workers
+                            .get_mut(dev)
+                            .unwrap()
+                            .kv_region
+                            .replace(kv);
                         kv_inits.push((*dev, *bytes));
+                        undo.push(UndoOp::KvAllocated {
+                            dev: *dev,
+                            region: kv,
+                            prev,
+                        });
                     }
                 }
+                steps.push(StepOutcome::Applied);
             }
 
-            // Stage timing.
+            // Fault rollback: undo every applied op in reverse order so
+            // the cluster returns to its exact pre-plan state (the old
+            // instance keeps serving from it).
+            if abort.is_some() {
+                let rollback_ops = undo.len();
+                for u in undo.drain(..).rev() {
+                    match u {
+                        UndoOp::AttnRegion { dev, tag, region } => {
+                            if let Some(w) = self.workers.get_mut(&dev) {
+                                w.regions.remove(&tag);
+                            }
+                            cluster.devices[dev].hbm.release(region)?;
+                            self.store.remove(dev, region);
+                        }
+                        UndoOp::ExpertBound {
+                            layer,
+                            expert,
+                            dev,
+                            region,
+                        } => {
+                            self.workers
+                                .get_mut(&dev)
+                                .context("rollback: dst worker missing")?
+                                .vpages
+                                .unbind(layer, expert)?;
+                            cluster.devices[dev].hbm.release(region)?;
+                            self.store.remove(dev, region);
+                        }
+                        UndoOp::ExpertEvicted {
+                            layer,
+                            expert,
+                            dev,
+                            region,
+                        } => {
+                            self.workers
+                                .get_mut(&dev)
+                                .context("rollback: src worker missing")?
+                                .vpages
+                                .bind(layer, expert, region)?;
+                        }
+                        UndoOp::ShardReleased { dev, regions, kv } => {
+                            if let Some(w) = self.workers.get_mut(&dev) {
+                                w.kv_region = kv;
+                                w.regions = regions.into_iter().collect();
+                            }
+                        }
+                        UndoOp::KvAllocated { dev, region, prev } => {
+                            if let Some(w) = self.workers.get_mut(&dev) {
+                                w.kv_region = prev;
+                            }
+                            cluster.devices[dev].hbm.release(region)?;
+                        }
+                    }
+                }
+                // Evictions and shard releases queued deferred frees; the
+                // bindings are restored above, so drop the queued entries.
+                self.deferred_frees.truncate(deferred_base);
+                owner_updates.clear();
+                stats.rollback_time = rollback_ops as f64
+                    * cluster.timings.vpage_remap_per_expert;
+            }
+
+            // Stage timing over what actually ran. A chaos straggler
+            // stretches every fabric leg touching it (modelled as extra
+            // effective bytes on the slow link).
+            let stretched = |legs: &[(DeviceId, DeviceId, u64)]| -> Vec<(DeviceId, DeviceId, u64)> {
+                match &injector {
+                    Some(inj) => {
+                        let mut inj = inj.borrow_mut();
+                        legs.iter()
+                            .map(|&(s, d, b)| {
+                                (s, d, (b as f64 * inj.stretch(s, d)) as u64)
+                            })
+                            .collect()
+                    }
+                    None => legs.to_vec(),
+                }
+            };
             stats.attn_p2p_time = cluster
                 .interconnect
-                .parallel_transfers(&attn_transfers);
+                .parallel_transfers(&stretched(&attn_transfers));
             stats.expert_p2p_time = cluster
                 .interconnect
-                .parallel_transfers(&expert_transfers);
+                .parallel_transfers(&stretched(&expert_transfers));
             let disk_max = disk_time.values().cloned().fold(0.0, f64::max);
             stats.attn_p2p_time += disk_max;
             stats.remap_time = remap_ops
                 .values()
                 .map(|&n| n as f64 * cluster.timings.vpage_remap_per_expert)
                 .fold(0.0, f64::max);
-            if !self.opts.use_vpage {
+            if !self.opts.use_vpage && abort.is_none() {
                 // Realloc path: every device whose expert set changed must
                 // rebuild its contiguous expert buffer (alloc + copy), with
                 // a transient double allocation.
@@ -807,9 +1096,36 @@ impl HmmControl {
                 .fold(0.0, f64::max);
             stats.kv_migrate_time = cluster
                 .interconnect
-                .parallel_transfers(&kv_legs)
+                .parallel_transfers(&stretched(&kv_legs))
                 + kv_seq_handovers as f64
                     * cluster.timings.vpage_remap_per_expert;
+        }
+
+        if let Some(mut report) = abort {
+            report.rolled_back = true;
+            report.reason = format!(
+                "{} ({} applied ops rolled back, configuration stays {})",
+                report.reason, report.op_index, plan.from_label
+            );
+            for s in steps.iter_mut() {
+                if *s == StepOutcome::Applied {
+                    *s = StepOutcome::RolledBack;
+                }
+            }
+            while steps.len() < plan.ops.len() {
+                steps.push(StepOutcome::Skipped);
+            }
+            stats.total = stats.attn_p2p_time
+                + stats.expert_p2p_time
+                + stats.remap_time
+                + stats.realloc_time
+                + stats.kv_init_time
+                + stats.rollback_time;
+            return Ok(PlanExecution {
+                stats,
+                steps,
+                aborted: Some(report),
+            });
         }
 
         // New configuration becomes current; old instance bindings keep
@@ -826,7 +1142,11 @@ impl HmmControl {
             + stats.remap_time
             + stats.realloc_time
             + stats.kv_init_time;
-        Ok(stats)
+        Ok(PlanExecution {
+            stats,
+            steps,
+            aborted: None,
+        })
     }
 
     /// Free pages orphaned by the last scaling event (called after the old
@@ -1084,7 +1404,7 @@ mod tests {
         let used_before: u64 = cluster.borrow().used_over(&[0, 1, 2, 3]);
         let to = par(3, 2, 0..6);
         let plan = hmm.plan_scale(&to).unwrap();
-        let stats = hmm.execute_plan(&plan, &to).unwrap();
+        let stats = hmm.execute_plan(&plan, &to).unwrap().stats;
         assert!(stats.total > 0.0 && stats.total < 10.0, "{stats:?}");
         assert!(stats.expert_p2p_time > 0.0);
         assert!(stats.kv_init_time > 0.0);
@@ -1109,7 +1429,7 @@ mod tests {
                 assert!(*src >= 4 && *dst < 4, "src {src} dst {dst}");
             }
         }
-        let stats = hmm.execute_plan(&plan, &to).unwrap();
+        let stats = hmm.execute_plan(&plan, &to).unwrap().stats;
         assert!(stats.total > 0.0);
         hmm.apply_deferred_frees().unwrap();
         // Devices 4,5 still hold attention (until instance teardown) but no
@@ -1157,7 +1477,7 @@ mod tests {
 
         // Executing the plan times the KV legs into the switchover-side
         // stat, not the concurrent total.
-        let stats = hmm.execute_plan(&plan, &to).unwrap();
+        let stats = hmm.execute_plan(&plan, &to).unwrap().stats;
         assert!(stats.kv_migrate_time > 0.0);
         assert!(
             stats.total > stats.kv_migrate_time,
@@ -1315,6 +1635,126 @@ mod tests {
         hmm.apply_deferred_frees().unwrap();
         let up = hmm.plan_scale(&par(3, 2, 0..6)).unwrap();
         assert!(up.migrations_have_matching_evictions());
+    }
+
+    /// Per-device HBM usage snapshot (rollback equality checks).
+    fn usage(cluster: &Rc<RefCell<Cluster>>, n: usize) -> Vec<u64> {
+        let c = cluster.borrow();
+        (0..n).map(|d| c.devices[d].hbm.used()).collect()
+    }
+
+    #[test]
+    fn faulted_execute_plan_rolls_back_to_pre_plan_state() {
+        use crate::chaos::{FaultInjector, FaultKind, FaultPlan};
+
+        let (cluster, mut hmm) = setup(6);
+        hmm.load_initial(&par(2, 2, 0..4), KV).unwrap();
+        let inj = Rc::new(RefCell::new(FaultInjector::new(
+            FaultPlan::single(0, FaultKind::P2pLinkFail { after_legs: 5 }),
+        )));
+        hmm.set_fault_injector(inj.clone());
+
+        let used_before = usage(&cluster, 6);
+        let owners_before = hmm.expert_owner.clone();
+        let to = par(3, 2, 0..6);
+        let plan = hmm.plan_scale(&to).unwrap();
+        let exec = hmm.execute_plan(&plan, &to).unwrap();
+
+        // Aborted and rolled back: exactly one Faulted step, RolledBack
+        // before it, Skipped after it.
+        let report = exec.aborted.as_ref().expect("fault must abort");
+        assert!(report.rolled_back);
+        assert!(matches!(report.fault, FaultKind::P2pLinkFail { .. }));
+        assert_eq!(exec.steps.len(), plan.ops.len());
+        assert_eq!(
+            exec.steps
+                .iter()
+                .filter(|s| matches!(s, StepOutcome::Faulted(_)))
+                .count(),
+            1
+        );
+        assert!(matches!(
+            exec.steps[report.op_index],
+            StepOutcome::Faulted(_)
+        ));
+        assert!(exec.steps[..report.op_index]
+            .iter()
+            .all(|s| matches!(s, StepOutcome::RolledBack)));
+        assert!(exec.steps[report.op_index + 1..]
+            .iter()
+            .all(|s| *s == StepOutcome::Skipped));
+        assert!(exec.stats.rollback_time > 0.0);
+        assert!(exec.stats.total > 0.0);
+
+        // Cluster state is byte-identical to before the plan; nothing is
+        // queued for deferred free; the configuration is unchanged.
+        assert_eq!(usage(&cluster, 6), used_before);
+        assert_eq!(hmm.deferred_free_count(), 0);
+        assert_eq!(hmm.current_parallel().unwrap().n_devices(), 4);
+        assert_eq!(hmm.expert_owner, owners_before);
+        let total: usize = (0..6)
+            .map(|d| {
+                hmm.worker(d).map(|w| w.vpages.bound_count()).unwrap_or(0)
+            })
+            .sum();
+        assert_eq!(total, (27 * 64) as usize, "partition intact");
+
+        // The next event (no fault armed) succeeds on the same state.
+        let plan2 = hmm.plan_scale(&to).unwrap();
+        let exec2 = hmm.execute_plan(&plan2, &to).unwrap();
+        assert!(exec2.aborted.is_none());
+        assert!(exec2.steps.iter().all(|s| *s == StepOutcome::Applied));
+        hmm.apply_deferred_frees().unwrap();
+        assert_eq!(hmm.current_parallel().unwrap().n_devices(), 6);
+    }
+
+    #[test]
+    fn device_loss_mid_scale_down_rolls_back_shard_release() {
+        use crate::chaos::{FaultInjector, FaultKind, FaultPlan};
+
+        let (cluster, mut hmm) = setup(6);
+        hmm.load_initial(&par(3, 2, 0..6), KV).unwrap();
+        let inj = Rc::new(RefCell::new(FaultInjector::new(
+            FaultPlan::single(0, FaultKind::DeviceLoss { dev: 4 }),
+        )));
+        hmm.set_fault_injector(inj);
+
+        let used_before = usage(&cluster, 6);
+        let to = par(2, 2, 0..4);
+        let plan = hmm.plan_scale(&to).unwrap();
+        // The scale-down releases shards of devices 4/5 and migrates their
+        // experts; the first leg out of device 4 faults after the release.
+        let exec = hmm.execute_plan(&plan, &to).unwrap();
+        assert!(exec.aborted.is_some());
+        assert_eq!(usage(&cluster, 6), used_before);
+        assert_eq!(hmm.deferred_free_count(), 0);
+        // Device 4's worker got its shards and KV back.
+        let w = hmm.worker(4).unwrap();
+        assert!(w.kv_region.is_some(), "KV region restored");
+        assert!(!w.regions.is_empty(), "attention shards restored");
+        assert_eq!(hmm.current_parallel().unwrap().n_devices(), 6);
+    }
+
+    #[test]
+    fn hbm_pressure_shrinks_the_planned_budget() {
+        use crate::chaos::{FaultInjector, FaultKind, FaultPlan};
+
+        let (_c, mut hmm) = setup(6);
+        hmm.placement.migration_budget_bytes = 1 << 30;
+        hmm.load_initial(&par(3, 2, 0..6), KV).unwrap();
+        let inj = Rc::new(RefCell::new(FaultInjector::new(
+            FaultPlan::single(0, FaultKind::HbmPressure {
+                budget_factor: 0.25,
+            }),
+        )));
+        hmm.set_fault_injector(inj.clone());
+        let to = par(2, 2, 0..4);
+        let shrunk = hmm.plan_scale(&to).unwrap();
+        assert_eq!(shrunk.migration_budget_bytes, 1 << 28);
+        assert_eq!(inj.borrow().fired_count(), 1);
+        // The next event is unshrunk.
+        let normal = hmm.plan_scale(&to).unwrap();
+        assert_eq!(normal.migration_budget_bytes, 1 << 30);
     }
 
     #[test]

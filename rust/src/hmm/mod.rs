@@ -21,7 +21,9 @@ pub mod vpage;
 pub mod weights;
 pub mod worker;
 
-pub use control::{HmmControl, HmmOptions};
+pub use control::{
+    AbortReport, HmmControl, HmmOptions, PlanExecution, StepOutcome,
+};
 pub use plan::{PlanOp, ScalePlan};
 pub use store::TensorStore;
 pub use vpage::VpageTable;

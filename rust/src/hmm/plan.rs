@@ -76,6 +76,12 @@ pub struct ScalePlan {
     pub from_label: String,
     pub to_label: String,
     pub ops: Vec<PlanOp>,
+    /// Effective migration-byte budget the plan was drawn under: the
+    /// configured [`crate::placement::PlacementConfig`] budget after any
+    /// chaos HBM-pressure shrink. KV copy legs are charged against its
+    /// leftover, so [`Self::kv_copied_bytes`] never exceeds it — the
+    /// byte-budget trace invariant.
+    pub migration_budget_bytes: u64,
 }
 
 impl ScalePlan {
@@ -114,6 +120,19 @@ impl ScalePlan {
             .iter()
             .filter(|op| matches!(op, PlanOp::EvictExpert { .. }))
             .count()
+    }
+
+    /// Bytes moved by expert migrations alone (excludes attention P2P and
+    /// KV legs). Reported in the chaos plan audit; forced moves are
+    /// budget-exempt, so this is *not* compared against the budget.
+    pub fn expert_migration_bytes(&self) -> u64 {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                PlanOp::MigrateExpert { bytes, .. } => *bytes,
+                _ => 0,
+            })
+            .sum()
     }
 
     /// The P2P transfer list `(src, dst, bytes)` for fabric timing.
@@ -278,6 +297,7 @@ mod tests {
                 PlanOp::KvInit { dev: 4, bytes: 500 },
                 PlanOp::KvReuse { dev: 0 },
             ],
+            ..Default::default()
         }
     }
 
@@ -314,6 +334,7 @@ mod tests {
                 },
                 PlanOp::KvDropRecompute { request: 7, tokens: 40, blocks: 3 },
             ],
+            ..Default::default()
         };
         assert_eq!(p.kv_remapped_blocks(), 12);
         assert_eq!(p.kv_copied_blocks(), 250);
@@ -354,6 +375,7 @@ mod tests {
                 expert: 1,
                 dev: 2,
             }],
+            ..Default::default()
         };
         assert!(p.migrations_have_matching_evictions());
     }
@@ -386,6 +408,7 @@ mod tests {
             from_label: "x".into(),
             to_label: "y".into(),
             ops,
+            ..Default::default()
         };
         assert_eq!(p.migrated_expert_count(), 3);
         assert_eq!(p.evicted_expert_count(), 3);

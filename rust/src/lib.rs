@@ -38,9 +38,13 @@
 //! - `docs/architecture/04-kv-cache-lifecycle.md` — KV block lifecycle and
 //!   the live-sequence handoff (remap / p2p-copy / recompute) across
 //!   scaling events ([`kvmigrate`]).
+//! - `docs/architecture/05-failure-model.md` — the fault taxonomy,
+//!   abort/rollback protocol, and trace-invariant catalog enforced by the
+//!   [`chaos`] harness (`repro exp chaos`).
 //! - `README.md` — quickstart, experiment and bench commands, and the
 //!   repro matrix mapping `repro exp` ids to paper artifacts.
 
+pub mod chaos;
 pub mod config;
 pub mod coordinator;
 pub mod device;

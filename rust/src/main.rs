@@ -42,9 +42,15 @@ fn print_usage() {
         "repro — ElasticMoE reproduction\n\
          \n\
          USAGE:\n\
-         repro exp <id>|all|list [--fast]   regenerate paper tables/figures\n\
+         repro exp <id>|all|list [--fast] [--seed N]\n\
+         \x20                                  regenerate paper tables/figures\n\
          repro serve [options]              run the serving simulator\n\
          repro info                         model and artifact inventory\n\
+         \n\
+         exp options:\n\
+         --fast          smaller scenario set / shorter horizons\n\
+         --seed N        workload + fault-schedule seed (chaos/fleet);\n\
+         \x20               a failing chaos cell prints the seed to replay it\n\
          \n\
          serve options:\n\
          --model dsv2lite|qwen30b|dsv3   (default dsv2lite)\n\
@@ -53,6 +59,7 @@ fn print_usage() {
          --cluster N     total cluster devices (default 2x devices)\n\
          --rps R         request rate (default 2.0)\n\
          --duration S    seconds of traffic (default 120)\n\
+         --seed N        workload seed (default 42)\n\
          --scale-at S    manual scale-up (+2 devices) at time S\n\
          --autoscale     SLO-driven autoscaling instead of manual"
     );
@@ -65,6 +72,10 @@ fn cmd_exp(args: &Args) -> Result<()> {
         .map(|s| s.as_str())
         .unwrap_or("list");
     let fast = args.flag("fast");
+    let seed: Option<u64> = match args.get("seed") {
+        Some(v) => Some(v.parse().context("--seed expects an integer")?),
+        None => None,
+    };
     match id {
         "list" => {
             println!("experiments: {}", experiments::ALL.join(" "));
@@ -73,13 +84,13 @@ fn cmd_exp(args: &Args) -> Result<()> {
         "all" => {
             for id in experiments::ALL {
                 println!("—— {id} ————————————————————————");
-                println!("{}", experiments::run(id, fast)?);
+                println!("{}", experiments::run_seeded(id, fast, seed)?);
             }
             println!("reports written to reports/");
             Ok(())
         }
         id => {
-            println!("{}", experiments::run(id, fast)?);
+            println!("{}", experiments::run_seeded(id, fast, seed)?);
             Ok(())
         }
     }
@@ -94,6 +105,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cluster_n = args.get_usize("cluster", devices * 2);
     let rps = args.get_f64("rps", 2.0);
     let duration = args.get_f64("duration", 120.0);
+    let seed = args.get_u64("seed", 42);
 
     if devices % m.tp != 0 {
         bail!("--devices must be a multiple of TP{}", m.tp);
@@ -110,7 +122,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         decode_min: 200,
         decode_max: 300,
         profile: RateProfile::Fixed(rps),
-        seed: 42,
+        seed,
     });
     let arrivals = gen.arrivals_until(duration);
     let n_arrived = arrivals.len();

@@ -145,6 +145,8 @@ impl ScalingMethod for ColdRestart {
             kv_handoff: None,
             new_parallel: to.clone(),
             peak_devices: to.n_devices(),
+            plan_audit: None,
+            aborted: None,
         })
     }
 
@@ -213,6 +215,8 @@ impl ScalingMethod for Extravagant {
             kv_handoff: None,
             new_parallel: to.clone(),
             peak_devices: union.len(),
+            plan_audit: None,
+            aborted: None,
         })
     }
 
@@ -289,6 +293,8 @@ impl ScalingMethod for Colocated {
             kv_handoff: None,
             new_parallel: to.clone(),
             peak_devices: union.len(),
+            plan_audit: None,
+            aborted: None,
         })
     }
 
@@ -388,6 +394,8 @@ impl ScalingMethod for Horizontal {
             kv_handoff: None,
             new_parallel: agg,
             peak_devices: union.len(),
+            plan_audit: None,
+            aborted: None,
         })
     }
 

@@ -4,6 +4,7 @@
 
 use anyhow::{Context, Result};
 
+use crate::chaos::PlanAudit;
 use crate::config::ParallelConfig;
 use crate::hmm::control::{HmmControl, InstanceBinding};
 use crate::imm::manager::InstanceManager;
@@ -11,7 +12,7 @@ use crate::imm::InstanceState;
 use crate::kvmigrate::{KvHandoff, KvHandoffPolicy, KvSnapshot};
 use crate::metrics::ScalingMetrics;
 
-use super::outcome::{ScalingMethod, ScalingOutcome};
+use super::outcome::{ScaleAbort, ScalingMethod, ScalingOutcome};
 
 /// The ElasticMoE method: owns the HMM and IMM.
 pub struct ElasticMoE {
@@ -128,7 +129,95 @@ impl ElasticMoE {
 
         // 1) HMM reconfigures memory concurrently with serving.
         let plan = self.hmm.plan_scale_with_kv(to, kv)?;
-        let stats = self.hmm.execute_plan(&plan, to)?;
+        let exec = self.hmm.execute_plan(&plan, to)?;
+        let stats = exec.stats.clone();
+
+        // Plan-level accounting for the chaos trace invariants (present
+        // whenever a live snapshot was planned against).
+        let plan_audit = kv.map(|snapshot| PlanAudit {
+            snapshot_blocks: snapshot.total_blocks(),
+            kv_remapped_blocks: plan.kv_remapped_blocks(),
+            kv_copied_blocks: plan.kv_copied_blocks(),
+            kv_freed_blocks: plan.kv_freed_blocks(),
+            kv_copied_bytes: plan.kv_copied_bytes(),
+            migration_budget_bytes: plan.migration_budget_bytes,
+            expert_migration_bytes: plan.expert_migration_bytes(),
+        });
+
+        // Per-sequence dispositions for the coordinator, read back from
+        // the plan's KV legs (rank-survival logic lives in
+        // [`KvHandoff::new`], shared with the planner path). Also derived
+        // for aborted events: the coordinator must know which sequences
+        // it suspended so it can resume exactly those.
+        let derive_handoff = |snapshot: &KvSnapshot| {
+            use crate::hmm::PlanOp;
+            let (mut remap, mut copy, mut recompute) =
+                (Vec::new(), Vec::new(), Vec::new());
+            for op in &plan.ops {
+                match op {
+                    PlanOp::KvBlockRemap { request, .. } => {
+                        remap.push(*request)
+                    }
+                    PlanOp::KvBlockCopy { request, .. } => {
+                        copy.push(*request)
+                    }
+                    PlanOp::KvDropRecompute { request, .. } => {
+                        recompute.push(*request)
+                    }
+                    _ => {}
+                }
+            }
+            KvHandoff::new(remap, copy, recompute, &snapshot.from, to)
+        };
+
+        if let Some(report) = exec.aborted {
+            // The fault fired mid-plan and the HMM already rolled the
+            // cluster back to the pre-command state. No successor is
+            // prepared — the old instance keeps serving — and the
+            // serving-visible cost is the partial concurrent work plus a
+            // short reroute-back barrier, during which the handoff plan's
+            // suspended sequences resume on their origin replica.
+            metrics.stage("hmm_attn_p2p", stats.attn_p2p_time);
+            metrics.stage("hmm_expert_migration", stats.expert_p2p_time);
+            metrics.stage("hmm_vpage_remap", stats.remap_time);
+            metrics.stage("kv_init", stats.kv_init_time);
+            if stats.kv_migrate_time > 0.0 {
+                metrics.stage("kv_handoff", stats.kv_migrate_time);
+            }
+            metrics.stage("rollback", stats.rollback_time);
+            metrics.stage("switchover", t.switchover);
+            let ready_after =
+                stats.total + stats.kv_migrate_time + t.switchover;
+            metrics.scale_latency = ready_after;
+            metrics.downtime = 0.0;
+            metrics.peak_memory = self.hmm.cluster.borrow().peak_over(&union);
+            metrics.peak_devices = union.len();
+            let reason = format!(
+                "scale {} -> {} aborted: {}",
+                from.label(),
+                to.label(),
+                report.reason
+            );
+            return Ok(ScalingOutcome {
+                metrics,
+                ready_after,
+                downtime: None,
+                // Brief pause while the rollback's reroute-back barrier
+                // restores a consistent admission state.
+                intake_pause: Some((stats.total, ready_after)),
+                transition_derate: 1.0,
+                preserves_inflight: true,
+                kv_handoff: kv.map(derive_handoff),
+                new_parallel: from.clone(),
+                peak_devices: union.len(),
+                plan_audit,
+                aborted: Some(ScaleAbort {
+                    fault: report.fault,
+                    rolled_back: report.rolled_back,
+                    reason,
+                }),
+            });
+        }
 
         // 2) IMM prepares the target instance concurrently.
         let proc = self.hmm.alloc_proc();
@@ -164,29 +253,7 @@ impl ElasticMoE {
         // window are already reported as the "kv_handoff" stage.
         metrics.stage("switchover", t.switchover);
 
-        // Per-sequence dispositions for the coordinator, read back from
-        // the plan's KV legs (rank-survival logic lives in
-        // [`KvHandoff::new`], shared with the planner path).
-        let kv_handoff = kv.map(|snapshot| {
-            use crate::hmm::PlanOp;
-            let (mut remap, mut copy, mut recompute) =
-                (Vec::new(), Vec::new(), Vec::new());
-            for op in &plan.ops {
-                match op {
-                    PlanOp::KvBlockRemap { request, .. } => {
-                        remap.push(*request)
-                    }
-                    PlanOp::KvBlockCopy { request, .. } => {
-                        copy.push(*request)
-                    }
-                    PlanOp::KvDropRecompute { request, .. } => {
-                        recompute.push(*request)
-                    }
-                    _ => {}
-                }
-            }
-            KvHandoff::new(remap, copy, recompute, &snapshot.from, to)
-        });
+        let kv_handoff = kv.map(derive_handoff);
 
         // Switchover bookkeeping: drain + retire the old instance, release
         // its references, free orphaned expert pages.
@@ -248,6 +315,8 @@ impl ElasticMoE {
             kv_handoff,
             new_parallel: to.clone(),
             peak_devices: union.len(),
+            plan_audit,
+            aborted: None,
         })
     }
 }

@@ -11,4 +11,4 @@ pub mod outcome;
 
 pub use baselines::{ColdRestart, Colocated, Extravagant, Horizontal};
 pub use elastic::ElasticMoE;
-pub use outcome::{ScalingMethod, ScalingOutcome};
+pub use outcome::{ScaleAbort, ScalingMethod, ScalingOutcome};

@@ -11,9 +11,30 @@
 
 use anyhow::Result;
 
+use crate::chaos::{FaultKind, PlanAudit};
 use crate::config::ParallelConfig;
 use crate::kvmigrate::{KvHandoff, KvSnapshot};
 use crate::metrics::ScalingMetrics;
+
+/// A scaling event that hit an injected fault mid-plan and aborted.
+///
+/// Abort is not failure of the serving system: the HMM rolls every
+/// applied plan op back ([`crate::hmm::HmmControl::execute_plan`]), the
+/// old instance keeps serving, and the simulators — on seeing
+/// [`ScalingOutcome::aborted`] — skip the switchover, reopen intake, and
+/// resume any suspended sequences on their origin replica. Not a single
+/// in-flight request is dropped; the only serving-visible cost is the
+/// brief rollback barrier at the end of the (wasted) transition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScaleAbort {
+    /// The injected fault that fired.
+    pub fault: FaultKind,
+    /// The rollback completed: cluster and configuration are back in
+    /// their exact pre-command state.
+    pub rolled_back: bool,
+    /// Human-readable summary (fault, abort point, restored config).
+    pub reason: String,
+}
 
 /// What a scaling event does to the serving timeline. All times are in
 /// seconds **relative to the scale command** (t = 0); the simulator adds
@@ -69,11 +90,23 @@ pub struct ScalingOutcome {
     /// without a live snapshot): the simulator falls back to the blanket
     /// `preserves_inflight` behaviour.
     pub kv_handoff: Option<KvHandoff>,
-    /// The parallel configuration after the event.
+    /// The parallel configuration after the event. For an aborted event
+    /// this is the *origin* configuration — the rollback restored it.
     pub new_parallel: ParallelConfig,
     /// Total devices occupied at the transition's peak (Extravagant holds
     /// old + new sets simultaneously).
     pub peak_devices: usize,
+    /// Plan-level accounting for the chaos trace invariants (block
+    /// conservation, byte budget). Present when the event planned against
+    /// a live KV snapshot; `None` for the baselines and snapshot-less
+    /// events.
+    pub plan_audit: Option<PlanAudit>,
+    /// `Some` when the event aborted on an injected fault and rolled
+    /// back. The simulators then keep the old engine: intake reopens and
+    /// suspended sequences resume at `ready_after` instead of switching
+    /// over. `None` for every completed event (the baselines never
+    /// abort — their scale paths bypass the HMM's fault hooks).
+    pub aborted: Option<ScaleAbort>,
 }
 
 impl ScalingOutcome {

@@ -169,7 +169,7 @@ fn expert_migration_preserves_numerics() {
     let (plan, stats) = {
         let mut hmm = stack.hmm.borrow_mut();
         let plan = hmm.plan_scale(&to).unwrap();
-        let stats = hmm.execute_plan(&plan, &to).unwrap();
+        let stats = hmm.execute_plan(&plan, &to).unwrap().stats;
         (plan, stats)
     };
     assert!(plan.migrated_expert_count() > 0, "scaling must move experts");
@@ -300,4 +300,131 @@ fn intake_pause_and_suspend_window_compose() {
         + out.handoff.recomputed;
     assert!(inflight <= expected.len());
     assert!(out.handoff.adopted_tokens > 0);
+}
+
+/// Regression for the chaos abort path (companion to
+/// `intake_pause_and_suspend_window_compose`): a P2P fault on the first
+/// live-KV copy leg aborts a scale-down mid-handoff. The rollback must
+/// resume every suspended sequence on its origin replica, conserve KV
+/// blocks (plan audit), leave the configuration untouched, keep every
+/// request finishing exactly once — and leave the HMM consistent enough
+/// that a later scale-down on the same state succeeds.
+#[test]
+fn aborted_mid_copy_scale_down_resumes_suspended_and_conserves_blocks() {
+    use std::collections::HashMap;
+
+    use elastic_moe::chaos::{
+        check_all, FaultInjector, FaultKind, FaultPlan, TraceEvent,
+    };
+    use elastic_moe::config::SloConfig;
+    use elastic_moe::coordinator::{ServingSim, Trigger};
+    use elastic_moe::device::Timings;
+    use elastic_moe::engine::CostModel;
+    use elastic_moe::workload::{RateProfile, WorkloadGen, WorkloadSpec};
+
+    let m = model::dsv2_lite();
+    let mut sim = ServingSim::new(
+        CostModel::new(m.clone(), Timings::cloudmatrix()),
+        SloConfig::new(8.0, 1.5),
+    );
+    // Event 0 (the t=40 scale-down) faults on its first KV copy leg;
+    // event 1 (the t=80 retry) is clean.
+    let inj = Rc::new(RefCell::new(FaultInjector::new(FaultPlan::single(
+        0,
+        FaultKind::KvCopyFail { after_legs: 1 },
+    ))));
+    sim.injector = Some(inj.clone());
+    let mut method = elastic_moe::experiments::common::elastic_with_opts(
+        &m,
+        6,
+        Default::default(),
+        Default::default(),
+    );
+    method.hmm.set_fault_injector(inj);
+
+    // Same long-context traffic as the compose test: ~10 sequences are
+    // mid-decode at the command, covering the departing replica's ids.
+    let mut gen = WorkloadGen::new(WorkloadSpec {
+        prompt_len: 4000,
+        decode_min: 150,
+        decode_max: 250,
+        profile: RateProfile::Fixed(1.2),
+        seed: 31,
+    });
+    let arrivals = gen.arrivals_until(140.0);
+    let expected: HashMap<u64, usize> = arrivals
+        .iter()
+        .map(|r| (r.id, r.max_new_tokens))
+        .collect();
+
+    let par = |n: usize| {
+        ParallelConfig::standard(n / 2, 2, (0..n).collect()).unwrap()
+    };
+    let out = sim
+        .run(
+            &mut method,
+            &par(6),
+            arrivals,
+            Trigger::Manual(vec![(40.0, par(4)), (80.0, par(4))]),
+            140.0,
+        )
+        .unwrap();
+
+    // First event aborted and rolled back; second succeeded.
+    assert_eq!(out.scaling_events.len(), 2);
+    let ev = &out.scaling_events[0];
+    let abort = ev.aborted.as_ref().expect("KV-leg fault must abort");
+    assert!(abort.rolled_back);
+    assert!(matches!(abort.fault, FaultKind::KvCopyFail { .. }));
+    assert_eq!(ev.new_parallel.n_devices(), 6, "origin config restored");
+    assert!(out.scaling_events[1].aborted.is_none());
+    assert_eq!(out.scaling_events[1].new_parallel.n_devices(), 4);
+    assert_eq!(
+        out.device_timeline.iter().map(|&(_, d)| d).collect::<Vec<_>>(),
+        vec![6, 4],
+        "the abort never changes capacity; the retry does"
+    );
+
+    // The aborted event's plan still conserves every live block.
+    let audit = ev.plan_audit.expect("snapshot was planned against");
+    assert!(audit.blocks_conserved(), "{audit:?}");
+    assert!(audit.kv_copied_blocks > 0, "copy legs were planned");
+
+    // Every sequence the abort suspended was resumed on its origin
+    // replica (event 0), none adopted or restarted there.
+    let suspended: Vec<u64> = out
+        .trace
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            TraceEvent::Suspended { event: 0, id, .. } => Some(*id),
+            _ => None,
+        })
+        .collect();
+    assert!(
+        !suspended.is_empty(),
+        "the mid-copy fault must catch suspended sequences"
+    );
+    let resumed: Vec<u64> = out
+        .trace
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            TraceEvent::Resumed { event: 0, id, .. } => Some(*id),
+            _ => None,
+        })
+        .collect();
+    let (mut a, mut b) = (suspended.clone(), resumed);
+    a.sort_unstable();
+    b.sort_unstable();
+    assert_eq!(a, b, "every suspended sequence resumes, exactly those");
+
+    // Exactly-once finish with full token conservation, plus the whole
+    // invariant catalog over the trace.
+    assert_eq!(out.recorder.count(), expected.len());
+    for r in out.recorder.all() {
+        assert_eq!(r.tokens, expected[&r.id], "request {}", r.id);
+    }
+    let violations = check_all(&out.trace);
+    assert!(violations.is_empty(), "{violations:?}");
 }

@@ -494,6 +494,84 @@ fn prop_paged_kv_alloc_free_never_leaks() {
     });
 }
 
+/// Placement-solver conformance under random load stats: every expert is
+/// placed exactly once on a device of the target set (forced movers —
+/// home departed or home over the capacity cap — included), the
+/// per-device capacity holds, discretionary migration bytes never exceed
+/// the budget, the discretionary/forced byte split decomposes the total
+/// exactly, and the solver is deterministic.
+#[test]
+fn prop_placement_solver_places_all_within_budget() {
+    use elastic_moe::placement::{solve_layer, LayerPlacementInput};
+
+    check("placement solver", 120, |rng: &mut Rng| {
+        let d = 2 + rng.below(5) as usize; // 2..=6 devices
+        let devices: Vec<usize> = (0..d).map(|i| i * 3 + 1).collect();
+        let n = d + rng.below(28) as usize; // experts >= devices
+        // Current owners: mostly in the target set, some on departed
+        // devices (their experts become forced movers).
+        let current: Vec<usize> = (0..n)
+            .map(|_| {
+                if rng.bool(0.2) {
+                    100 + rng.below(3) as usize
+                } else {
+                    devices[rng.below(d as u64) as usize]
+                }
+            })
+            .collect();
+        let load: Vec<f64> = (0..n)
+            .map(|_| {
+                if rng.bool(0.3) {
+                    0.0
+                } else {
+                    rng.uniform(0.0, 20.0)
+                }
+            })
+            .collect();
+        let capacity = n.div_ceil(d) + rng.below(3) as usize;
+        let budget_bytes = rng.below(4) * 1000;
+        let bytes_per_expert = 1000u64;
+        let inp = LayerPlacementInput {
+            devices: &devices,
+            current: &current,
+            load: &load,
+            bytes_per_expert,
+            capacity,
+            budget_bytes,
+            uniform_prior: if rng.bool(0.5) { 0.25 } else { 0.0 },
+        };
+        let out = solve_layer(&inp);
+
+        // Every expert placed exactly once, on a target device.
+        assert_eq!(out.owner.len(), n);
+        for (e, &o) in out.owner.iter().enumerate() {
+            assert!(
+                devices.contains(&o),
+                "expert {e} placed on {o}, outside the target set"
+            );
+        }
+        // Capacity respected everywhere (so forced movers fit too).
+        for &dev in &devices {
+            let c = out.owner.iter().filter(|&&o| o == dev).count();
+            assert!(c <= capacity, "device {dev} over capacity: {c}");
+        }
+        // Budget: discretionary bytes within it; forced moves exempt but
+        // the byte split must decompose the migrated total exactly.
+        assert!(
+            out.discretionary_bytes <= budget_bytes,
+            "discretionary {} over budget {budget_bytes}",
+            out.discretionary_bytes
+        );
+        assert_eq!(
+            out.discretionary_bytes + out.forced_bytes,
+            out.migrated as u64 * bytes_per_expert,
+            "byte accounting must decompose into discretionary + forced"
+        );
+        // Deterministic on identical input.
+        assert_eq!(out.owner, solve_layer(&inp).owner);
+    });
+}
+
 /// A freshly sized pool admits what it promised: `from_bytes` either
 /// errors (budget below one block) or yields a pool whose first
 /// admission of up to `block_tokens` tokens succeeds.
