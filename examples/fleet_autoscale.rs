@@ -95,6 +95,12 @@ fn main() -> Result<()> {
             FleetAction::Rebalance { replica } => println!(
                 "  t={t:>6.1}s  replica {replica} expert rebalance (same devices)"
             ),
+            FleetAction::Park { replica } => println!(
+                "  t={t:>6.1}s  replica {replica} parked (weights DRAM-resident)"
+            ),
+            FleetAction::Unpark { replica } => println!(
+                "  t={t:>6.1}s  replica {replica} unparked (DRAM-warm fast boot)"
+            ),
             FleetAction::Hold => {}
         }
     }

@@ -24,6 +24,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::tier::TierLevel;
+
 use super::trace::{Trace, TraceEvent};
 
 /// Slack for floating-point window comparisons.
@@ -68,6 +70,117 @@ pub fn check_all(trace: &Trace) -> Vec<Violation> {
     out.extend(check_exactly_once_finish(trace));
     out.extend(check_intake_pause_bounded(trace));
     out.extend(check_suspend_disposition(trace));
+    out.extend(check_tier_conservation(trace));
+    out
+}
+
+/// Invariant 6: tier residency bytes conserve across every demote /
+/// promote / park / unpark event. Per replica, the checker replays the
+/// journalled [`TraceEvent::TierShift`]s as a per-tag state machine
+/// (a unit can only leave the tier it is in, with the byte size it
+/// entered with) and a running host-DRAM total, and every
+/// [`TraceEvent::TierAudit`] — the *allocator's* independent figure —
+/// must match the replayed total exactly.
+pub fn check_tier_conservation(trace: &Trace) -> Vec<Violation> {
+    let mut out = Vec::new();
+    // replica -> (tag -> (level, bytes), running dram bytes).
+    type TagState = BTreeMap<String, (TierLevel, u64)>;
+    let mut tags: BTreeMap<usize, TagState> = BTreeMap::new();
+    let mut dram: BTreeMap<usize, u64> = BTreeMap::new();
+    for ev in &trace.events {
+        match ev {
+            TraceEvent::TierShift {
+                replica,
+                tag,
+                bytes,
+                from,
+                to,
+                ..
+            } => {
+                if from == to {
+                    out.push(Violation::new(
+                        "tier-conservation",
+                        format!(
+                            "replica {replica}: '{tag}' shifted \
+                             {} -> {} (not a move)",
+                            from.label(),
+                            to.label()
+                        ),
+                    ));
+                    continue;
+                }
+                let state = tags.entry(*replica).or_default();
+                match state.get(tag) {
+                    Some(&(level, prev_bytes)) => {
+                        if level != *from {
+                            out.push(Violation::new(
+                                "tier-conservation",
+                                format!(
+                                    "replica {replica}: '{tag}' shifted \
+                                     from {} but resides in {}",
+                                    from.label(),
+                                    level.label()
+                                ),
+                            ));
+                        }
+                        if prev_bytes != *bytes {
+                            out.push(Violation::new(
+                                "tier-conservation",
+                                format!(
+                                    "replica {replica}: '{tag}' moved \
+                                     {bytes} bytes but entered the tier \
+                                     system with {prev_bytes}"
+                                ),
+                            ));
+                        }
+                    }
+                    // First sighting: accept `from` as the unit's
+                    // origin tier (boot-time HBM/disk residency is not
+                    // journalled).
+                    None => {}
+                }
+                state.insert(tag.clone(), (*to, *bytes));
+                let total = dram.entry(*replica).or_default();
+                if *from == TierLevel::HostDram {
+                    match total.checked_sub(*bytes) {
+                        Some(v) => *total = v,
+                        None => {
+                            out.push(Violation::new(
+                                "tier-conservation",
+                                format!(
+                                    "replica {replica}: '{tag}' left DRAM \
+                                     with {bytes} bytes but only {total} \
+                                     were staged"
+                                ),
+                            ));
+                            *total = 0;
+                        }
+                    }
+                }
+                if *to == TierLevel::HostDram {
+                    *total += *bytes;
+                }
+            }
+            TraceEvent::TierAudit {
+                replica,
+                dram_bytes,
+                ..
+            } => {
+                let replayed = dram.get(replica).copied().unwrap_or(0);
+                if replayed != *dram_bytes {
+                    out.push(Violation::new(
+                        "tier-conservation",
+                        format!(
+                            "replica {replica}: journal replays to \
+                             {replayed} DRAM bytes but the allocator \
+                             audits {dram_bytes}"
+                        ),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
     out
 }
 
@@ -479,6 +592,64 @@ mod tests {
         tr.push(TraceEvent::IntakePaused { t: 12.0, event: 0 });
         let v = check_intake_pause_bounded(&tr);
         assert!(v.iter().any(|v| v.detail.contains("never resumed")));
+    }
+
+    #[test]
+    fn tier_conservation_reconciles_journal_and_audit() {
+        use crate::tier::TierLevel::{Disk, HostDram, Hbm};
+        let shift = |replica, tag: &str, bytes, from, to| {
+            TraceEvent::TierShift {
+                t: 1.0,
+                replica,
+                tag: tag.into(),
+                bytes,
+                from,
+                to,
+            }
+        };
+        let audit = |replica, dram_bytes| TraceEvent::TierAudit {
+            t: 2.0,
+            replica,
+            dram_bytes,
+        };
+
+        // Clean park → unpark cycle on replica 0; a staged prefetch on
+        // replica 1 (per-replica totals are independent).
+        let mut tr = Trace::new();
+        tr.push(shift(0, "w", 100, Hbm, HostDram));
+        tr.push(shift(0, "e", 50, Hbm, HostDram));
+        tr.push(audit(0, 150));
+        tr.push(shift(1, "w", 100, Disk, HostDram));
+        tr.push(audit(1, 100));
+        tr.push(shift(0, "w", 100, HostDram, Hbm));
+        tr.push(shift(0, "e", 50, HostDram, Hbm));
+        tr.push(audit(0, 0));
+        assert!(check_tier_conservation(&tr).is_empty());
+
+        // Audit mismatch: the allocator says 10 bytes leaked.
+        let mut bad = Trace::new();
+        bad.push(shift(0, "w", 100, Hbm, HostDram));
+        bad.push(audit(0, 90));
+        let v = check_tier_conservation(&bad);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].invariant, "tier-conservation");
+
+        // Wrong source tier: the unit never entered DRAM.
+        let mut bad = Trace::new();
+        bad.push(shift(0, "w", 100, Hbm, HostDram));
+        bad.push(shift(0, "w", 100, Disk, Hbm));
+        assert!(!check_tier_conservation(&bad).is_empty());
+
+        // Byte-size drift between entry and exit.
+        let mut bad = Trace::new();
+        bad.push(shift(0, "w", 100, Hbm, HostDram));
+        bad.push(shift(0, "w", 60, HostDram, Hbm));
+        assert!(!check_tier_conservation(&bad).is_empty());
+
+        // A non-move shift is rejected outright.
+        let mut bad = Trace::new();
+        bad.push(shift(0, "w", 100, Hbm, Hbm));
+        assert!(!check_tier_conservation(&bad).is_empty());
     }
 
     #[test]

@@ -38,5 +38,5 @@ pub mod trace;
 pub use faults::{
     FaultEntry, FaultInjector, FaultKind, FaultPlan, FaultRecord,
 };
-pub use invariants::{check_all, Violation};
+pub use invariants::{check_all, check_tier_conservation, Violation};
 pub use trace::{PlanAudit, Trace, TraceEvent};

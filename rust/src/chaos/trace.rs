@@ -11,6 +11,8 @@
 //! verified against what the run *actually did*, not against what the
 //! scaling method promised.
 
+use crate::tier::TierLevel;
+
 use super::faults::FaultKind;
 
 /// Plan-level accounting of one scaling event, captured when the command
@@ -104,6 +106,26 @@ pub enum TraceEvent {
     },
     /// A request finished, having produced `tokens` decode tokens.
     Finished { t: f64, id: u64, tokens: usize },
+    /// One weight unit crossed a residency-tier boundary on `replica`
+    /// (demote, promote, stage, park, unpark — drained from the
+    /// method's [`crate::tier::TieredWeightStore`] journal).
+    TierShift {
+        t: f64,
+        replica: usize,
+        tag: String,
+        bytes: u64,
+        from: TierLevel,
+        to: TierLevel,
+    },
+    /// Independent audit point: `replica`'s host-DRAM *allocator*
+    /// reports `dram_bytes` staged. The conservation invariant replays
+    /// the journal ([`TraceEvent::TierShift`]) and must land exactly
+    /// here — journal and allocator are separate accounting paths.
+    TierAudit {
+        t: f64,
+        replica: usize,
+        dram_bytes: u64,
+    },
 }
 
 impl TraceEvent {
@@ -122,7 +144,9 @@ impl TraceEvent {
             | TraceEvent::Restarted { t, .. }
             | TraceEvent::ScaleCompleted { t, .. }
             | TraceEvent::ScaleAborted { t, .. }
-            | TraceEvent::Finished { t, .. } => *t,
+            | TraceEvent::Finished { t, .. }
+            | TraceEvent::TierShift { t, .. }
+            | TraceEvent::TierAudit { t, .. } => *t,
         }
     }
 }

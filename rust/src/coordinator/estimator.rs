@@ -30,6 +30,10 @@ pub struct LoadEstimator {
     bad_windows: u32,
     good_windows: u32,
     last_action: f64,
+    /// Last window that showed live traffic (finished requests, queued
+    /// work, or meaningful occupancy). Drives the re-burst forecast for
+    /// park-vs-teardown decisions.
+    last_active: f64,
 }
 
 impl LoadEstimator {
@@ -43,6 +47,7 @@ impl LoadEstimator {
             bad_windows: 0,
             good_windows: 0,
             last_action: f64::NEG_INFINITY,
+            last_active: f64::NEG_INFINITY,
         }
     }
 
@@ -54,6 +59,9 @@ impl LoadEstimator {
         occupancy: f64,
         queue_depth: usize,
     ) -> ScaleDecision {
+        if !attainment.is_nan() || queue_depth > 0 || occupancy > 0.05 {
+            self.last_active = now;
+        }
         if now - self.last_action < self.cooldown {
             return ScaleDecision::Hold;
         }
@@ -87,6 +95,16 @@ impl LoadEstimator {
     pub fn reset(&mut self) {
         self.bad_windows = 0;
         self.good_windows = 0;
+    }
+
+    /// Whether traffic is forecast to return within `ttl` seconds of
+    /// `now`: a keep-warm heuristic in the serverless tradition —
+    /// recently active workloads are the ones that re-burst, so a
+    /// replica idled by an on/off trace should park (weights
+    /// DRAM-resident) rather than tear down. Never true before any
+    /// traffic was seen.
+    pub fn forecasts_reburst(&self, now: f64, ttl: f64) -> bool {
+        now - self.last_active <= ttl
     }
 
     /// Undo the state consumption of an `Up`/`Down` decision the caller
@@ -165,6 +183,22 @@ mod tests {
         // despite the long cooldown.
         e.refund(ScaleDecision::Up);
         assert_eq!(e.observe(2.0, 0.5, 0.9, 10), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn reburst_forecast_tracks_recent_traffic() {
+        let mut e = est();
+        // No traffic ever seen: never forecast.
+        assert!(!e.forecasts_reburst(0.0, 1000.0));
+        e.observe(10.0, 0.95, 0.5, 0); // live traffic
+        assert!(e.forecasts_reburst(50.0, 120.0));
+        assert!(!e.forecasts_reburst(200.0, 120.0), "warmth expires");
+        // Idle windows (NaN attainment, nothing queued) don't refresh.
+        e.observe(60.0, f64::NAN, 0.0, 0);
+        assert!(!e.forecasts_reburst(200.0, 120.0));
+        // Queued work alone counts as activity.
+        e.observe(300.0, f64::NAN, 0.0, 3);
+        assert!(e.forecasts_reburst(310.0, 60.0));
     }
 
     #[test]

@@ -26,6 +26,7 @@ use crate::scaling::{ScalingMethod, ScalingOutcome};
 use crate::sim::{Clock, SimClock};
 use crate::workload::Request;
 
+use super::estimator::ScaleDecision;
 use super::policy::{FleetAction, FleetPolicy, ReplicaLoad};
 use super::serving::{
     begin_transition_on, build_engine, complete_pending, log_command,
@@ -87,6 +88,10 @@ struct Replica {
     ready_at: f64,
     draining: bool,
     retired: bool,
+    /// Parked at zero devices (weights DRAM-warm in the method's tier
+    /// store; engine gone, inbox kept so arrivals can queue while the
+    /// policy wakes it).
+    parked: bool,
     kv_factor: f64,
     batch_factor: f64,
 }
@@ -96,7 +101,7 @@ impl Replica {
     /// of its current and pending-target footprint (a transition may
     /// momentarily reserve both).
     fn devices_reserved(&self) -> usize {
-        if self.retired {
+        if self.retired || self.parked {
             return 0;
         }
         let cur = self.current.n_devices();
@@ -145,6 +150,10 @@ pub struct FleetOutput {
     /// Whole-replica cold boots issued (0 = every burst was absorbed
     /// vertically).
     pub cold_boots: usize,
+    /// Unpark boot times, in issue order: (issue time, boot seconds).
+    /// DRAM-warm methods land seconds here; disk-cold park policies pay
+    /// cold-boot-class waits.
+    pub unpark_boots: Vec<(f64, f64)>,
     /// (time, serving devices) timeline across the fleet.
     pub device_timeline: Vec<(f64, usize)>,
     pub end_time: f64,
@@ -166,6 +175,21 @@ impl FleetOutput {
     /// Count of actions matching a predicate (test/report convenience).
     pub fn count_actions(&self, f: impl Fn(&FleetAction) -> bool) -> usize {
         self.actions.iter().filter(|(_, a)| f(a)).count()
+    }
+
+    /// Device-seconds of serving capacity held over the run: the
+    /// integral of the device timeline to `end_time` ("HBM-hours" in
+    /// device-seconds). Park/unpark policies win exactly here — parked
+    /// replicas hold zero devices.
+    pub fn device_seconds(&self) -> f64 {
+        let mut total = 0.0;
+        for w in self.device_timeline.windows(2) {
+            total += (w[1].0 - w[0].0).max(0.0) * w[0].1 as f64;
+        }
+        if let Some(&(t, d)) = self.device_timeline.last() {
+            total += (self.end_time - t).max(0.0) * d as f64;
+        }
+        total
     }
 }
 
@@ -252,6 +276,7 @@ impl FleetSim {
                 ready_at: 0.0,
                 draining: false,
                 retired: false,
+                parked: false,
                 kv_factor,
                 batch_factor,
             });
@@ -273,6 +298,7 @@ impl FleetSim {
         let mut events: Vec<ScalingOutcome> = Vec::new();
         let mut handoff = KvHandoffStats::default();
         let mut cold_boots = 0usize;
+        let mut unpark_boots: Vec<(f64, f64)> = Vec::new();
         let serving0 = initial_replicas * limits.replica_base;
         let mut device_timeline = vec![(0.0, serving0)];
         let mut rr = 0usize;
@@ -299,11 +325,16 @@ impl FleetSim {
                     .map(|rep| (rep.id, rep.backlog()))
                     .collect();
                 let target = if eligible.is_empty() {
-                    // Every replica is booting or draining: fall back to
-                    // any live one (min_replicas keeps this non-empty).
+                    // Every replica is booting, draining, or parked:
+                    // fall back to any live one, else any non-retired
+                    // (a parked replica keeps its inbox — queued
+                    // arrivals are the policy's wake-up signal).
                     replicas
                         .iter()
                         .find(|rep| !rep.retired && rep.engine.is_some())
+                        .or_else(|| {
+                            replicas.iter().find(|rep| !rep.retired)
+                        })
                         .map(|rep| rep.id)
                 } else {
                     Some(self.router.pick(&mut rr, r.tenant, &eligible))
@@ -314,7 +345,10 @@ impl FleetSim {
                 }
             }
 
-            // 2) Advance every replica to the window boundary.
+            // 2) Advance every replica to the window boundary, then
+            // drain each method's cross-tier journal into the trace
+            // (with an allocator audit, so the conservation invariant
+            // has an independent figure to reconcile against).
             for rep in replicas.iter_mut() {
                 self.advance_replica(
                     rep,
@@ -324,6 +358,26 @@ impl FleetSim {
                     &mut handoff,
                     &mut trace,
                 )?;
+            }
+            for rep in replicas.iter_mut() {
+                let shifts = rep.method.drain_tier_shifts();
+                if !shifts.is_empty() {
+                    for s in shifts {
+                        trace.push(TraceEvent::TierShift {
+                            t: t_end,
+                            replica: rep.id,
+                            tag: s.tag,
+                            bytes: s.bytes,
+                            from: s.from,
+                            to: s.to,
+                        });
+                    }
+                    trace.push(TraceEvent::TierAudit {
+                        t: t_end,
+                        replica: rep.id,
+                        dram_bytes: rep.method.dram_resident_bytes(),
+                    });
+                }
             }
 
             // 3) Retire drained replicas and release their devices.
@@ -337,7 +391,7 @@ impl FleetSim {
             // 4) Serving-capacity timeline.
             let serving_devices: usize = replicas
                 .iter()
-                .filter(|r| !r.retired && r.ready_at <= t_end)
+                .filter(|r| !r.retired && !r.parked && r.ready_at <= t_end)
                 .map(|r| r.current.n_devices())
                 .sum();
             if device_timeline
@@ -376,9 +430,11 @@ impl FleetSim {
                         })
                         .unwrap_or(0.0),
                     queue_depth: r.queue_depth(),
-                    busy: r.pending.is_some() || r.ready_at > t_end,
-                    booting: r.ready_at > t_end,
+                    busy: !r.parked
+                        && (r.pending.is_some() || r.ready_at > t_end),
+                    booting: !r.parked && r.ready_at > t_end,
                     draining: r.draining,
+                    parked: r.parked,
                     imbalance: r.method.placement_imbalance(),
                 })
                 .collect();
@@ -422,6 +478,70 @@ impl FleetSim {
                         Some(PendingScale::new(outcome, t_end, ev, paused));
                     actions.push((t_end, action));
                 }
+                FleetAction::Park { replica } => {
+                    // Only an idle replica parks (the policy filters on
+                    // queue/occupancy; in-flight work or a mid-scale
+                    // transition vetoes it here).
+                    let rep = &mut replicas[replica];
+                    let idle = rep.inbox.is_empty()
+                        && rep.pending.is_none()
+                        && rep
+                            .engine
+                            .as_ref()
+                            .map(|e| !e.has_work())
+                            .unwrap_or(false);
+                    let parked_ok = idle
+                        && matches!(rep.method.park()?, Some(_));
+                    if parked_ok {
+                        // d2h staging runs in the background — the
+                        // replica already left the rotation.
+                        rep.engine = None;
+                        rep.parked = true;
+                        actions.push((t_end, action));
+                    } else {
+                        // Vetoed (in-flight work raced the policy's
+                        // snapshot): hand the consumed Down trigger and
+                        // the replica cooldown back so parking retries
+                        // next window instead of waiting out a cycle.
+                        policy.clear_event(replica);
+                        policy.estimator.refund(ScaleDecision::Down);
+                    }
+                }
+                FleetAction::Unpark { replica } => {
+                    // Re-check the exact device footprint against the
+                    // pool: the parked replica's devices went back to
+                    // the budget at park and may have been granted away.
+                    let reserved: usize = replicas
+                        .iter()
+                        .map(|r| r.devices_reserved())
+                        .sum();
+                    let rep = &mut replicas[replica];
+                    let fits = reserved + rep.current.n_devices()
+                        <= limits.pool_devices;
+                    let boot = if rep.parked && fits {
+                        rep.method.unpark()?
+                    } else {
+                        None
+                    };
+                    if let Some(boot_t) = boot {
+                        rep.parked = false;
+                        rep.engine = Some(build_engine(
+                            &self.cost,
+                            self.hbm_per_device,
+                            self.max_batch,
+                            &rep.current,
+                            rep.kv_factor,
+                            rep.batch_factor,
+                        ));
+                        rep.ready_at = t_end + boot_t;
+                        unpark_boots.push((t_end, boot_t));
+                        actions.push((t_end, action));
+                    } else {
+                        // Vetoed (pool exhausted or nothing parked):
+                        // release the cooldown so the wake-up retries.
+                        policy.clear_event(replica);
+                    }
+                }
                 FleetAction::AddReplica => {
                     let id = replicas.len();
                     let mut method = factory(id)?;
@@ -450,6 +570,7 @@ impl FleetSim {
                         ready_at: t_end + boot_t,
                         draining: false,
                         retired: false,
+                        parked: false,
                         kv_factor,
                         batch_factor,
                     });
@@ -507,6 +628,7 @@ impl FleetSim {
             actions,
             scaling_events: events,
             cold_boots,
+            unpark_boots,
             device_timeline,
             end_time,
             final_replicas: replicas.iter().filter(|r| !r.retired).count(),
@@ -538,7 +660,9 @@ impl FleetSim {
         handoff: &mut KvHandoffStats,
         trace: &mut Trace,
     ) -> Result<()> {
-        if rep.retired {
+        if rep.retired || rep.parked {
+            // Parked replicas hold no devices and step nothing; their
+            // inbox queues until the policy unparks them.
             rep.clock.advance_to(t_end);
             return Ok(());
         }

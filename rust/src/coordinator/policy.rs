@@ -33,6 +33,10 @@ pub struct ReplicaLoad {
     pub booting: bool,
     /// The replica is draining out of the fleet.
     pub draining: bool,
+    /// The replica is parked at zero devices (weights DRAM-resident,
+    /// engine gone). It serves nothing until an
+    /// [`FleetAction::Unpark`].
+    pub parked: bool,
     /// Predicted max/mean expert token load across the replica's devices
     /// (1.0 = balanced or unknown; see
     /// [`crate::scaling::ScalingMethod::placement_imbalance`]).
@@ -81,6 +85,15 @@ pub enum FleetAction {
     /// Redistribution-only event on `replica`: same devices, new expert
     /// placement (the answer to popularity skew, not load volume).
     Rebalance { replica: usize },
+    /// Scale `replica` to zero devices, keeping its weights DRAM-warm
+    /// (the tiered store's scale-to-zero). Chosen over
+    /// [`FleetAction::DrainReplica`] when the estimator forecasts a
+    /// re-burst within the park TTL; uniquely, park may take the fleet
+    /// below `min_replicas` — unpark is fast enough to answer a burst.
+    Park { replica: usize },
+    /// Bring a parked replica back (DRAM-warm fast boot). Preferred over
+    /// every other scale-up action: cheapest capacity in the fleet.
+    Unpark { replica: usize },
 }
 
 /// The fleet policy: fleet-wide hysteresis plus action selection.
@@ -100,6 +113,14 @@ pub struct FleetPolicy {
     /// replica earns a redistribution-only event when the fleet is
     /// otherwise holding.
     pub rebalance_threshold: f64,
+    /// Allow park/unpark (scale-to-zero with DRAM-resident weights).
+    /// Off by default: only methods with a tiered weight store can
+    /// enact it, and the always-on baseline must stay measurable.
+    pub park_enabled: bool,
+    /// Re-burst horizon: an idle replica parks (instead of draining)
+    /// when traffic was seen within this many seconds — the serverless
+    /// keep-warm window.
+    pub park_ttl: f64,
     last_event: HashMap<usize, f64>,
 }
 
@@ -112,6 +133,8 @@ impl FleetPolicy {
             replica_cooldown: 20.0,
             pressure_queue: 8,
             rebalance_threshold: 1.5,
+            park_enabled: false,
+            park_ttl: 150.0,
             last_event: HashMap::new(),
         }
     }
@@ -119,6 +142,15 @@ impl FleetPolicy {
     /// Record that `replica` was touched at `now` (starts its cooldown).
     pub fn note_event(&mut self, replica: usize, now: f64) {
         self.last_event.insert(replica, now);
+    }
+
+    /// Give back a replica's cooldown after the simulator vetoed the
+    /// issued action (e.g. a park that raced in-flight work): the next
+    /// window may retry instead of waiting out a full cooldown cycle.
+    /// Pair with [`LoadEstimator::refund`] when an estimator decision
+    /// was consumed.
+    pub fn clear_event(&mut self, replica: usize) {
+        self.last_event.remove(&replica);
     }
 
     fn cooled_down(&self, replica: usize, now: f64) -> bool {
@@ -140,9 +172,30 @@ impl FleetPolicy {
         loads: &[ReplicaLoad],
         free_devices: usize,
     ) -> FleetAction {
-        let serving: Vec<&ReplicaLoad> =
-            loads.iter().filter(|l| !l.draining).collect();
+        let serving: Vec<&ReplicaLoad> = loads
+            .iter()
+            .filter(|l| !l.draining && !l.parked)
+            .collect();
+        let parked: Vec<&ReplicaLoad> =
+            loads.iter().filter(|l| l.parked).collect();
         if serving.is_empty() {
+            // Scale-from-zero: with every replica parked, queued
+            // arrivals are the wake-up signal (there is no attainment to
+            // observe — nothing is finishing).
+            if self.park_enabled && free_devices >= self.limits.replica_base
+            {
+                let queue: usize =
+                    loads.iter().map(|l| l.queue_depth).sum();
+                if queue > 0 {
+                    if let Some(l) = parked
+                        .iter()
+                        .find(|l| self.cooled_down(l.id, now))
+                    {
+                        self.note_event(l.id, now);
+                        return FleetAction::Unpark { replica: l.id };
+                    }
+                }
+            }
             return FleetAction::Hold;
         }
         let occupancy = serving.iter().map(|l| l.occupancy).sum::<f64>()
@@ -156,7 +209,9 @@ impl FleetPolicy {
         let decision =
             self.estimator.observe(now, attainment, occupancy, queue);
         let action = match decision {
-            ScaleDecision::Up => self.scale_up(now, &serving, free_devices),
+            ScaleDecision::Up => {
+                self.scale_up(now, &serving, &parked, free_devices)
+            }
             ScaleDecision::Down => self.scale_down(now, &serving),
             ScaleDecision::Hold => FleetAction::Hold,
         };
@@ -197,8 +252,24 @@ impl FleetPolicy {
         &mut self,
         now: f64,
         serving: &[&ReplicaLoad],
+        parked: &[&ReplicaLoad],
         free_devices: usize,
     ) -> FleetAction {
+        // Cheapest capacity first: a parked replica is a DRAM-warm fast
+        // boot away from serving — under every vertical step's worth of
+        // new provisioning and far under a cold replica add. Its devices
+        // were returned to the pool at park, so re-acquiring them needs
+        // pool budget like any other grant (a parked replica resumes at
+        // its pre-park size, ≥ the base; the simulator re-checks the
+        // exact footprint).
+        if self.park_enabled && free_devices >= self.limits.replica_base {
+            if let Some(l) =
+                parked.iter().find(|l| self.cooled_down(l.id, now))
+            {
+                self.note_event(l.id, now);
+                return FleetAction::Unpark { replica: l.id };
+            }
+        }
         if self.mode != PolicyMode::HorizontalOnly {
             // Vertical first: the most pressured replica that still has
             // headroom, pool budget, and a lapsed cooldown.
@@ -278,6 +349,28 @@ impl FleetPolicy {
                 };
             }
         }
+        // Park over teardown when a re-burst is forecast within the TTL
+        // (serverless keep-warm): the replica's weights stay
+        // DRAM-resident and unpark answers the next burst in seconds.
+        // Park is the one action allowed below the replica floor —
+        // scale-to-zero is its whole point.
+        if self.park_enabled
+            && self.estimator.forecasts_reburst(now, self.park_ttl)
+        {
+            let candidate = serving
+                .iter()
+                .filter(|l| {
+                    !l.busy
+                        && l.queue_depth == 0
+                        && l.occupancy < 0.05
+                        && self.cooled_down(l.id, now)
+                })
+                .min_by(|a, b| a.occupancy.total_cmp(&b.occupancy));
+            if let Some(l) = candidate {
+                self.note_event(l.id, now);
+                return FleetAction::Park { replica: l.id };
+            }
+        }
         // Otherwise drain a whole idle replica, keeping the floor.
         if self.mode != PolicyMode::VerticalOnly
             && serving.len() > self.limits.min_replicas
@@ -332,6 +425,7 @@ mod tests {
             busy: false,
             booting: false,
             draining: false,
+            parked: false,
             imbalance: 1.0,
         }
     }
@@ -505,6 +599,66 @@ mod tests {
                 to_devices: 4
             }
         );
+    }
+
+    #[test]
+    fn idle_replica_parks_when_reburst_is_forecast() {
+        let mut p = policy(PolicyMode::Hybrid);
+        p.park_enabled = true;
+        p.park_ttl = 100.0;
+        p.estimator.down_patience = 1;
+        // Traffic seen at t=10 (non-NaN attainment)...
+        let busy_load = [load(0, 2, 0.6, 0)];
+        assert_eq!(p.decide(10.0, 1.0, &busy_load, 0), FleetAction::Hold);
+        // ...then idle at t=40: park beats drain, even at the floor
+        // (min_replicas = 1, single replica).
+        let idle = [load(0, 2, 0.0, 0)];
+        let a = p.decide(40.0, f64::NAN, &idle, 0);
+        assert_eq!(a, FleetAction::Park { replica: 0 });
+        // Beyond the TTL the forecast expires: drain path (blocked by
+        // the floor here -> Hold).
+        let mut p = policy(PolicyMode::Hybrid);
+        p.park_enabled = true;
+        p.park_ttl = 10.0;
+        p.estimator.down_patience = 1;
+        assert_eq!(p.decide(10.0, 1.0, &busy_load, 0), FleetAction::Hold);
+        assert_eq!(p.decide(200.0, f64::NAN, &idle, 0), FleetAction::Hold);
+    }
+
+    #[test]
+    fn parked_replica_is_the_first_choice_on_pressure() {
+        let mut p = policy(PolicyMode::Hybrid);
+        p.park_enabled = true;
+        let mut parked = load(1, 0, 0.0, 0);
+        parked.parked = true;
+        // A violating window with vertical headroom available: unpark
+        // still wins (cheapest capacity).
+        let loads = [load(0, 2, 1.0, 20), parked];
+        assert_eq!(
+            p.decide(5.0, 0.5, &loads, 8),
+            FleetAction::Unpark { replica: 1 }
+        );
+    }
+
+    #[test]
+    fn all_parked_fleet_wakes_on_queued_arrivals() {
+        let mut p = policy(PolicyMode::Hybrid);
+        p.park_enabled = true;
+        let mut parked = load(0, 0, 0.0, 3); // arrivals queued in inbox
+        parked.parked = true;
+        assert_eq!(
+            p.decide(5.0, f64::NAN, &[parked], 2),
+            FleetAction::Unpark { replica: 0 }
+        );
+        // No queue: stay parked.
+        let mut quiet = load(0, 0, 0.0, 0);
+        quiet.parked = true;
+        assert_eq!(p.decide(10.0, f64::NAN, &[quiet], 2), FleetAction::Hold);
+        // Park disabled: an all-parked fleet (however it got there) holds.
+        let mut p = policy(PolicyMode::Hybrid);
+        let mut parked = load(0, 0, 0.0, 3);
+        parked.parked = true;
+        assert_eq!(p.decide(5.0, f64::NAN, &[parked], 2), FleetAction::Hold);
     }
 
     #[test]

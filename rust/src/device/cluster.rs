@@ -5,11 +5,16 @@
 use anyhow::{bail, Result};
 
 use super::disk::Disk;
+use super::hostmem::HostMem;
 use super::interconnect::Interconnect;
 use super::ipc::IpcRegistry;
 use super::npu::Npu;
 use super::timings::Timings;
 use super::DeviceId;
+
+/// Host DRAM per node, bytes (CloudMatrix-class hosts carry TB-scale
+/// DRAM; 1 TiB leaves generous staging room for every paper model).
+pub const HOST_DRAM_BYTES: u64 = 1 << 40;
 
 /// Simulated CloudMatrix-style cluster.
 #[derive(Debug)]
@@ -17,6 +22,8 @@ pub struct Cluster {
     pub devices: Vec<Npu>,
     pub interconnect: Interconnect,
     pub disk: Disk,
+    /// Host-DRAM staging pool (the middle weight-residency tier).
+    pub host: HostMem,
     pub ipc: IpcRegistry,
     pub timings: Timings,
 }
@@ -32,6 +39,7 @@ impl Cluster {
             devices,
             interconnect: Interconnect::new(timings.clone()),
             disk: Disk::new(timings.clone()),
+            host: HostMem::new(HOST_DRAM_BYTES),
             ipc: IpcRegistry::new(),
             timings,
         }

@@ -1,6 +1,12 @@
 //! Shared-storage model: the NVMe/NFS weight store that cold boots read
 //! from. Tracks per-tensor read dedup (the `disk_copy` primitive loads each
 //! tensor at most once — Appendix D.2).
+//!
+//! Byte accounting contract: every accounted read path —
+//! [`Disk::read`] and [`Disk::read_dedup`] — decomposes its requested
+//! bytes into exactly one of the two counters, so
+//! `total_bytes_read + deduped_bytes == total requested bytes`
+//! ([`Disk::total_requested_bytes`]) at all times.
 
 use std::collections::HashSet;
 
@@ -11,7 +17,9 @@ use super::timings::Timings;
 pub struct Disk {
     timings: Timings,
     reads_seen: HashSet<String>,
+    /// Bytes actually read from the medium (dedup misses + plain reads).
     pub total_bytes_read: u64,
+    /// Bytes requested but served from the dedup cache for free (hits).
     pub deduped_bytes: u64,
 }
 
@@ -25,14 +33,25 @@ impl Disk {
         }
     }
 
-    /// Time to read `bytes` (no dedup bookkeeping).
+    /// Time to read `bytes` — a pure query, no accounting. Use
+    /// [`Self::read`] when the read actually happens.
     pub fn read_time(&self, bytes: u64) -> f64 {
         self.timings.disk_load(bytes)
     }
 
-    /// Deduplicated read: the first read of `tensor_tag` costs disk time,
-    /// repeats are free (served from the already-loaded copy via P2P by the
-    /// caller). Returns the time charged.
+    /// Accounted plain read: `bytes` hit the medium (no dedup — the naive
+    /// per-device loader path). Credits `total_bytes_read` so the
+    /// decomposition invariant covers every loader, not just `disk_copy`.
+    pub fn read(&mut self, bytes: u64) -> f64 {
+        self.total_bytes_read += bytes;
+        self.read_time(bytes)
+    }
+
+    /// Deduplicated read: the first read of `tensor_tag` costs disk time
+    /// and is credited to `total_bytes_read`; repeats are free (served
+    /// from the already-loaded copy via P2P by the caller) and credited
+    /// to `deduped_bytes`. Either way the requested bytes land in exactly
+    /// one counter. Returns the time charged.
     pub fn read_dedup(&mut self, tensor_tag: &str, bytes: u64) -> f64 {
         if self.reads_seen.insert(tensor_tag.to_string()) {
             self.total_bytes_read += bytes;
@@ -43,7 +62,15 @@ impl Disk {
         }
     }
 
+    /// All bytes ever requested through the accounted read paths:
+    /// `total_bytes_read` (hit the medium) + `deduped_bytes` (served
+    /// free). The two fields decompose this total by construction.
+    pub fn total_requested_bytes(&self) -> u64 {
+        self.total_bytes_read + self.deduped_bytes
+    }
+
     /// Forget dedup history (e.g. a fresh cold boot with no warm source).
+    /// Byte counters survive: they are run-cumulative.
     pub fn reset_dedup(&mut self) {
         self.reads_seen.clear();
     }
@@ -64,5 +91,47 @@ mod tests {
         assert_eq!(d.deduped_bytes, 1 << 30);
         d.reset_dedup();
         assert!(d.read_dedup("layer0.wq", 1 << 30) > 0.0);
+    }
+
+    #[test]
+    fn counters_decompose_total_requested_bytes() {
+        // Mixed plain / miss / hit sequence: at every step the two fields
+        // must partition the running total of requested bytes.
+        let mut d = Disk::new(Timings::cloudmatrix());
+        let mut requested = 0u64;
+        let ops: &[(&str, u64, bool)] = &[
+            ("a", 100, true),  // dedup miss
+            ("a", 100, true),  // dedup hit
+            ("b", 250, true),  // dedup miss
+            ("", 500, false),  // plain accounted read
+            ("a", 100, true),  // dedup hit again
+            ("b", 250, true),  // dedup hit
+        ];
+        for &(tag, bytes, dedup) in ops {
+            if dedup {
+                d.read_dedup(tag, bytes);
+            } else {
+                d.read(bytes);
+            }
+            requested += bytes;
+            assert_eq!(
+                d.total_bytes_read + d.deduped_bytes,
+                requested,
+                "decomposition broken after ({tag}, {bytes})"
+            );
+            assert_eq!(d.total_requested_bytes(), requested);
+        }
+        assert_eq!(d.total_bytes_read, 100 + 250 + 500);
+        assert_eq!(d.deduped_bytes, 100 + 100 + 250);
+    }
+
+    #[test]
+    fn plain_read_is_accounted_and_timed_like_read_time() {
+        let mut d = Disk::new(Timings::cloudmatrix());
+        let t_query = d.read_time(1 << 30);
+        let t_read = d.read(1 << 30);
+        assert_eq!(t_query, t_read, "accounting must not change the time");
+        assert_eq!(d.total_bytes_read, 1 << 30);
+        assert_eq!(d.deduped_bytes, 0);
     }
 }

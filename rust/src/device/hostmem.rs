@@ -1,0 +1,130 @@
+//! Host-DRAM staging pool: the middle tier of the weight residency
+//! hierarchy (HBM → host DRAM → shared disk).
+//!
+//! One pool serves the whole node. Weights staged here are an h2d copy
+//! away from serving (tens of GB/s over PCIe) instead of a disk cold
+//! read (~1.5 GB/s effective), which is what makes DRAM-warm standby
+//! instances and park/unpark scale-to-zero cheap. Accounting mirrors
+//! [`super::hbm::Hbm`] (used/peak/capacity), minus pages and refcounts —
+//! host allocations are single-owner malloc-class buffers.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Identifier of a host-DRAM region (unique per pool).
+pub type HostRegionId = u64;
+
+/// One staged buffer.
+#[derive(Debug, Clone)]
+pub struct HostRegion {
+    pub id: HostRegionId,
+    pub bytes: u64,
+    /// Logical tag, e.g. "layer3.expert5" — the residency map's key.
+    pub tag: String,
+}
+
+/// The node's host-DRAM staging pool.
+#[derive(Debug, Clone)]
+pub struct HostMem {
+    capacity: u64,
+    used: u64,
+    peak: u64,
+    next_id: HostRegionId,
+    regions: BTreeMap<HostRegionId, HostRegion>,
+}
+
+impl HostMem {
+    pub fn new(capacity: u64) -> Self {
+        HostMem {
+            capacity,
+            used: 0,
+            peak: 0,
+            next_id: 1,
+            regions: BTreeMap::new(),
+        }
+    }
+
+    /// Allocate a staging buffer; fails when the pool is exhausted (host
+    /// DRAM is big, not infinite — cold-expert offload must budget it).
+    pub fn alloc(&mut self, bytes: u64, tag: impl Into<String>) -> Result<HostRegionId> {
+        if self.used + bytes > self.capacity {
+            bail!(
+                "host DRAM exhausted: need {} + {bytes} > capacity {}",
+                self.used,
+                self.capacity
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        self.regions.insert(
+            id,
+            HostRegion {
+                id,
+                bytes,
+                tag: tag.into(),
+            },
+        );
+        Ok(id)
+    }
+
+    /// Free a staging buffer, returning its byte count.
+    pub fn release(&mut self, id: HostRegionId) -> Result<u64> {
+        let r = self
+            .regions
+            .remove(&id)
+            .ok_or_else(|| anyhow::anyhow!("no such host region {id}"))?;
+        self.used -= r.bytes;
+        Ok(r.bytes)
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+    pub fn free_bytes(&self) -> u64 {
+        self.capacity - self.used
+    }
+    pub fn region(&self, id: HostRegionId) -> Option<&HostRegion> {
+        self.regions.get(&id)
+    }
+    pub fn region_count(&self) -> usize {
+        self.regions.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_release_accounting() {
+        let mut h = HostMem::new(1 << 30);
+        let a = h.alloc(100 << 20, "w").unwrap();
+        let b = h.alloc(50 << 20, "e").unwrap();
+        assert_eq!(h.used(), 150 << 20);
+        assert_eq!(h.peak(), 150 << 20);
+        assert_eq!(h.release(a).unwrap(), 100 << 20);
+        assert_eq!(h.used(), 50 << 20);
+        assert_eq!(h.peak(), 150 << 20, "watermark survives frees");
+        h.release(b).unwrap();
+        assert_eq!(h.used(), 0);
+        assert_eq!(h.region_count(), 0);
+        assert!(h.release(a).is_err(), "double free is an error");
+    }
+
+    #[test]
+    fn exhaustion_is_an_error() {
+        let mut h = HostMem::new(1 << 20);
+        h.alloc(1 << 20, "full").unwrap();
+        assert!(h.alloc(1, "over").is_err());
+        assert_eq!(h.used(), 1 << 20, "failed alloc changes nothing");
+    }
+}

@@ -9,6 +9,7 @@
 pub mod cluster;
 pub mod disk;
 pub mod hbm;
+pub mod hostmem;
 pub mod interconnect;
 pub mod ipc;
 pub mod npu;
@@ -17,6 +18,7 @@ pub mod timings;
 pub use cluster::Cluster;
 pub use disk::Disk;
 pub use hbm::{Hbm, RegionId, RegionKind};
+pub use hostmem::{HostMem, HostRegionId};
 pub use interconnect::Interconnect;
 pub use ipc::IpcRegistry;
 pub use npu::Npu;

@@ -22,6 +22,18 @@ pub struct Timings {
     /// Per-transfer P2P setup latency (stream setup + aclrtMemcpyAsync
     /// launch), seconds.
     pub p2p_setup: f64,
+    /// Host-DRAM -> HBM copy bandwidth per device, bytes/s (PCIe 4.0 x16
+    /// class, pinned host buffers; ~25 GB/s effective). An order of
+    /// magnitude above disk, an order below the UB fabric — the middle
+    /// rung of the weight-residency ladder.
+    pub h2d_bw: f64,
+    /// HBM -> host-DRAM copy bandwidth per device, bytes/s (slightly
+    /// below h2d on real parts; drives cold-expert demotion and park).
+    pub d2h_bw: f64,
+    /// CPU-state restore of a DRAM-warm standby instance (swap the
+    /// pre-initialised engine state back in; comm groups were kept), s.
+    /// Replaces the full `preinit_cpu` on the unpark fast path.
+    pub host_restore: f64,
     /// HBM read bandwidth per device, bytes/s (910C: ~1.6 TB/s class HBM;
     /// we use 1.2 TB/s effective). Drives decode-step roofline.
     pub hbm_bw: f64,
@@ -71,6 +83,9 @@ impl Timings {
             disk_bw: 1.5e9,
             p2p_bw: 150e9,
             p2p_setup: 2e-3,
+            h2d_bw: 25e9,
+            d2h_bw: 22e9,
+            host_restore: 1.5,
             hbm_bw: 1.2e12,
             flops: 120e12,
             zero_copy_per_handle: 50e-6,
@@ -97,6 +112,16 @@ impl Timings {
     /// Time for one P2P transfer of `bytes` between two devices.
     pub fn p2p(&self, bytes: u64) -> f64 {
         self.p2p_setup + bytes as f64 / self.p2p_bw
+    }
+
+    /// Time to copy `bytes` from host DRAM into one device's HBM.
+    pub fn h2d(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.h2d_bw
+    }
+
+    /// Time to copy `bytes` from one device's HBM out to host DRAM.
+    pub fn d2h(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.d2h_bw
     }
 
     /// HCCL communication-group initialisation for `n` devices.
@@ -140,6 +165,19 @@ mod tests {
         let t = Timings::cloudmatrix();
         let gb = 1u64 << 30;
         assert!(t.disk_load(gb) / t.p2p(gb) > 10.0);
+    }
+
+    #[test]
+    fn tier_ladder_orders_bandwidths() {
+        // The residency ladder only pays off if each rung is meaningfully
+        // cheaper to reach than the one below: P2P > h2d > disk.
+        let t = Timings::cloudmatrix();
+        let gb = 1u64 << 30;
+        assert!(t.disk_load(gb) / t.h2d(gb) > 10.0, "h2d must be 10x disk");
+        assert!(t.h2d(gb) / t.p2p(gb) > 2.0, "fabric must beat PCIe");
+        assert!(t.d2h(gb) > t.h2d(gb) * 0.9, "d2h in the same class as h2d");
+        // DRAM-warm restore skips the tens-of-seconds CPU pre-init.
+        assert!(t.host_restore < t.preinit_cpu / 10.0);
     }
 
     #[test]

@@ -322,7 +322,9 @@ fn matrix(fast: bool) -> Vec<(&'static str, Dir, &'static str)> {
 }
 
 /// `repro exp chaos [--seed N]`.
-pub fn run(fast: bool, seed: u64) -> Result<String> {
+pub fn run(opts: &super::common::ExpOptions) -> Result<String> {
+    let fast = opts.fast;
+    let seed = opts.seed_or(DEFAULT_SEED);
     // Never-scaled reference on the scale-up trace: the bound an aborted
     // scale-up must not fall below.
     let reference = run_cell("elastic", Dir::Hold, "none", seed)?;

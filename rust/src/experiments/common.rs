@@ -14,9 +14,53 @@ use crate::scaling::{
     ColdRestart, Colocated, ElasticMoE, Extravagant, Horizontal,
     ScalingMethod,
 };
+use crate::util::cli::Args;
 
 /// Standard per-device KV reservation used by the scaling experiments.
 pub const KV_BYTES: u64 = 8 << 30;
+
+/// The flags every experiment shares, parsed in exactly one place
+/// (`repro`'s `print_usage` documents them once; experiment modules take
+/// an `&ExpOptions` instead of re-declaring `fast`/`seed` parameters).
+///
+/// - `fast`: smaller scenario set / shorter horizons (CI smoke runs).
+/// - `seed`: workload + fault-schedule override. Experiments that
+///   ignore it are bit-identical with or without; `fleet` perturbs its
+///   workload generators with it, `chaos` derives its fault schedule
+///   from it and prints it so any failing cell can be replayed, `tier`
+///   seeds its bursty trace.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExpOptions {
+    pub fast: bool,
+    pub seed: Option<u64>,
+}
+
+impl ExpOptions {
+    /// Parse from a `repro exp` command line.
+    pub fn from_args(args: &Args) -> Result<Self> {
+        use anyhow::Context;
+        let seed = match args.get("seed") {
+            Some(v) => {
+                Some(v.parse().context("--seed expects an integer")?)
+            }
+            None => None,
+        };
+        Ok(ExpOptions {
+            fast: args.flag("fast"),
+            seed,
+        })
+    }
+
+    /// Fast/slow with no seed override.
+    pub fn fast(fast: bool) -> Self {
+        ExpOptions { fast, seed: None }
+    }
+
+    /// The seed to use, falling back to an experiment's canonical one.
+    pub fn seed_or(&self, default: u64) -> u64 {
+        self.seed.unwrap_or(default)
+    }
+}
 
 /// Method names in the paper's order.
 pub const METHODS: &[&str] = &[

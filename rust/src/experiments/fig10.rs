@@ -46,7 +46,8 @@ pub fn slo_at_rps(method: &str, rps: f64, decode_scale: f64) -> Result<f64> {
         .attainment_by_arrival(0.0, HORIZON, &slo))
 }
 
-pub fn run(fast: bool) -> Result<String> {
+pub fn run(opts: &super::common::ExpOptions) -> Result<String> {
+    let fast = opts.fast;
     // Decode lengths are scaled down in fast mode to keep CI quick; the
     // qualitative knee ordering is unchanged.
     let decode_scale = if fast { 0.2 } else { 0.4 };

@@ -20,7 +20,8 @@ fn down_transitions(m: &ModelConfig) -> Vec<(usize, usize)> {
     .collect()
 }
 
-pub fn run(fast: bool) -> Result<String> {
+pub fn run(opts: &super::common::ExpOptions) -> Result<String> {
+    let fast = opts.fast;
     let mut out = String::new();
     let models = paper_models();
     let models = if fast { &models[..1] } else { &models[..] };

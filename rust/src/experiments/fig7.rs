@@ -9,10 +9,11 @@ use crate::util::table::{f, Table};
 
 use super::common::{
     display_name, make_method, par, par_on, paper_models, transitions,
-    METHODS,
+    ExpOptions, METHODS,
 };
 
-pub fn run(fast: bool) -> Result<String> {
+pub fn run(opts: &ExpOptions) -> Result<String> {
+    let fast = opts.fast;
     let mut out = String::new();
     let models = paper_models();
     let models = if fast { &models[..1] } else { &models[..] };

@@ -112,7 +112,8 @@ fn render(
 }
 
 /// Fig 9a: scale-up 4->6 under rising load (TTFT<=5s, TPOT<=1.5s).
-pub fn scale_up(fast: bool) -> Result<String> {
+pub fn scale_up(opts: &super::common::ExpOptions) -> Result<String> {
+    let fast = opts.fast;
     let cap4 = capacity(4);
     // Load jumps at t=0 beyond what 4 devices sustain (but within what 6
     // devices can absorb).
@@ -145,7 +146,8 @@ pub fn scale_up(fast: bool) -> Result<String> {
 }
 
 /// Fig 9b: scale-down 6->4 under reduced load; metric is SLO-per-NPU.
-pub fn scale_down(fast: bool) -> Result<String> {
+pub fn scale_down(opts: &super::common::ExpOptions) -> Result<String> {
+    let fast = opts.fast;
     let cap4 = capacity(4);
     let profile = RateProfile::Step {
         before: cap4 * 0.8,

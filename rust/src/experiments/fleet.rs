@@ -107,12 +107,13 @@ fn summarize(out: &FleetOutput) -> (usize, usize, usize, usize) {
 }
 
 /// The fleet scenario suite: flash crowd (hybrid vs horizontal-only vs
-/// vertical-only), diurnal tracking, and a multi-tenant mix. `seed`
-/// (from `repro exp --seed`) perturbs every workload generator so a
-/// failing run is reproducible from its printed value; `None` keeps the
-/// canonical seeds.
-pub fn run(fast: bool, seed: Option<u64>) -> Result<String> {
-    let base = seed.unwrap_or(0);
+/// vertical-only), diurnal tracking, and a multi-tenant mix. The shared
+/// `--seed` (see [`super::common::ExpOptions`]) perturbs every workload
+/// generator so a failing run is reproducible from its printed value;
+/// unset keeps the canonical seeds.
+pub fn run(opts: &super::common::ExpOptions) -> Result<String> {
+    let fast = opts.fast;
+    let base = opts.seed.unwrap_or(0);
     let mut report = String::new();
 
     // Scenario 1 — flash crowd (§2.2's "10x within minutes").
@@ -288,7 +289,7 @@ mod tests {
 
     #[test]
     fn fleet_report_renders_all_three_scenarios() {
-        let r = run(true, None).unwrap();
+        let r = run(&super::common::ExpOptions::fast(true)).unwrap();
         assert!(r.contains("flash crowd"));
         assert!(r.contains("diurnal"));
         assert!(r.contains("tenant mix"));

@@ -164,7 +164,8 @@ pub fn compare(fast: bool) -> Result<Vec<RunResult>> {
 }
 
 /// `repro exp kvmigrate`.
-pub fn run(fast: bool) -> Result<String> {
+pub fn run(opts: &super::common::ExpOptions) -> Result<String> {
+    let fast = opts.fast;
     let runs = compare(fast)?;
     let mut table = Table::new(
         "KV migration: live-sequence handoff vs drain-and-recompute \

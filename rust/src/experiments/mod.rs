@@ -27,6 +27,10 @@
 //! | chaos   | fault-injection conformance: method × direction  |
 //! |         | × fault matrix with machine-checked trace        |
 //! |         | invariants and clean abort/rollback              |
+//! | tier    | tiered weight store (beyond the paper): DRAM-    |
+//! |         | warm park/unpark vs disk-cold vs always-on on a  |
+//! |         | serverless on/off bursty trace, with the tier    |
+//! |         | byte-conservation invariant checked               |
 
 pub mod chaos;
 pub mod common;
@@ -42,48 +46,55 @@ pub mod fig11;
 pub mod fig12;
 pub mod placement;
 pub mod tables;
+pub mod tier;
 
 use anyhow::{bail, Result};
+
+pub use common::ExpOptions;
 
 /// All experiment ids in paper order.
 pub const ALL: &[&str] = &[
     "fig1a", "fig1b", "fig4a", "fig4b", "fig7", "fig8", "fig9a", "fig9b",
     "fig10", "fig11", "fig12", "table1", "table2", "table3", "fleet",
-    "placement", "kvmigrate", "chaos",
+    "placement", "kvmigrate", "chaos", "tier",
 ];
 
 /// Run one experiment by id, returning the rendered report.
 pub fn run(id: &str, fast: bool) -> Result<String> {
-    run_seeded(id, fast, None)
+    run_with(id, &ExpOptions::fast(fast))
 }
 
 /// Like [`run`], with an explicit workload/fault seed (`repro exp
-/// --seed N`). Experiments that ignore the seed are bit-identical to
-/// [`run`]; `fleet` perturbs its workload generators with it and `chaos`
-/// derives its fault schedule from it, printing the seed in the report
-/// so any failing cell can be replayed.
+/// --seed N`); see [`ExpOptions`].
 pub fn run_seeded(id: &str, fast: bool, seed: Option<u64>) -> Result<String> {
+    run_with(id, &ExpOptions { fast, seed })
+}
+
+/// Run one experiment by id under shared [`ExpOptions`] — the single
+/// dispatch point: flag parsing happens once in
+/// [`ExpOptions::from_args`], and every experiment consumes the same
+/// struct instead of re-declaring its own `fast`/`seed` plumbing.
+pub fn run_with(id: &str, opts: &ExpOptions) -> Result<String> {
     let report = match id {
         "fig1a" => fig1::fig1a()?,
         "fig1b" => fig1::fig1b()?,
         "fig4a" => fig4::fig4a()?,
         "fig4b" => fig4::fig4b()?,
-        "fig7" => fig7::run(fast)?,
+        "fig7" => fig7::run(opts)?,
         "fig8" => fig8::run()?,
-        "fig9a" => fig9::scale_up(fast)?,
-        "fig9b" => fig9::scale_down(fast)?,
-        "fig10" => fig10::run(fast)?,
+        "fig9a" => fig9::scale_up(opts)?,
+        "fig9b" => fig9::scale_down(opts)?,
+        "fig10" => fig10::run(opts)?,
         "fig11" => fig11::run()?,
-        "fig12" => fig12::run(fast)?,
+        "fig12" => fig12::run(opts)?,
         "table1" => tables::table1()?,
-        "table2" => tables::table2(fast)?,
+        "table2" => tables::table2(opts)?,
         "table3" => tables::table3()?,
-        "fleet" => fleet::run(fast, seed)?,
-        "placement" => placement::run(fast)?,
-        "kvmigrate" => kvmigrate::run(fast)?,
-        "chaos" => {
-            chaos::run(fast, seed.unwrap_or(chaos::DEFAULT_SEED))?
-        }
+        "fleet" => fleet::run(opts)?,
+        "placement" => placement::run(opts)?,
+        "kvmigrate" => kvmigrate::run(opts)?,
+        "chaos" => chaos::run(opts)?,
+        "tier" => tier::run(opts)?,
         other => bail!("unknown experiment '{other}' (see `repro exp list`)"),
     };
     // Persist alongside printing.

@@ -210,7 +210,8 @@ pub fn compare(fast: bool) -> Result<PlacementComparison> {
 }
 
 /// Render the `repro exp placement` report.
-pub fn run(fast: bool) -> Result<String> {
+pub fn run(opts: &super::common::ExpOptions) -> Result<String> {
+    let fast = opts.fast;
     let c = compare(fast)?;
     let gb = |b: u64| b as f64 / (1u64 << 30) as f64;
     let mut report = String::new();
@@ -294,7 +295,7 @@ mod tests {
 
     #[test]
     fn placement_report_renders() {
-        let r = run(true).unwrap();
+        let r = run(&super::common::ExpOptions::fast(true)).unwrap();
         assert!(r.contains("round-robin"));
         assert!(r.contains("load-aware"));
         assert!(r.contains("replicate"));

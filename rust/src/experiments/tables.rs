@@ -127,7 +127,8 @@ pub fn table3() -> Result<String> {
 }
 
 /// Table 2: offline throughput before/during/after a 6->8 scale-up.
-pub fn table2(fast: bool) -> Result<String> {
+pub fn table2(opts: &super::common::ExpOptions) -> Result<String> {
+    let fast = opts.fast;
     let m = dsv2_lite();
     // Enough work that the batch outlasts the slowest transition's
     // "during" window (~85 s for cold restart). The paper uses 10000.
@@ -229,7 +230,8 @@ mod tests {
 
     #[test]
     fn table2_fast_shape() {
-        let report = table2(true).unwrap();
+        let report =
+            table2(&super::common::ExpOptions::fast(true)).unwrap();
         assert!(report.contains("Before"));
         // Parse the elastic and cold rows and compare the During columns.
         let get = |name: &str| -> Vec<f64> {

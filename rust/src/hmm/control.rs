@@ -24,6 +24,7 @@ use crate::placement::{
     solve_layer, ExpertLoadStats, LayerPlacementInput, PlacementConfig,
     PlacementMode,
 };
+use crate::tier::TieredWeightStore;
 
 use super::plan::{PlanOp, ScalePlan};
 use super::primitives::{disk_copy, p2p_copy, zero_copy};
@@ -70,6 +71,13 @@ pub struct ScaleStats {
     pub expert_p2p_time: f64,
     pub remap_time: f64,
     pub kv_init_time: f64,
+    /// Host-DRAM → HBM promotion time (tier legs: staged shard loads,
+    /// cold-expert promotions). Max over devices — h2d lanes run in
+    /// parallel. Included in [`Self::total`].
+    pub h2d_time: f64,
+    /// HBM → host-DRAM demotion time (cold-expert offload under HBM
+    /// pressure). Max over devices; included in [`Self::total`].
+    pub d2h_time: f64,
     /// Non-vpage realloc penalty (ablation only).
     pub realloc_time: f64,
     /// Time spent undoing applied ops after a fault aborted the plan
@@ -167,6 +175,30 @@ enum UndoOp {
         region: RegionId,
         prev: Option<RegionId>,
     },
+    /// A staged shard was promoted from host DRAM into HBM on `dev`.
+    HostLoaded {
+        dev: DeviceId,
+        tag: String,
+        region: RegionId,
+        bytes: u64,
+    },
+    /// A cold expert was demoted from `dev` into host DRAM (its HBM
+    /// pages queued for deferred free).
+    ExpertDemoted {
+        layer: usize,
+        expert: usize,
+        dev: DeviceId,
+        region: RegionId,
+        bytes: u64,
+    },
+    /// A demoted expert was promoted from host DRAM back onto `dev`.
+    ExpertPromoted {
+        layer: usize,
+        expert: usize,
+        dev: DeviceId,
+        region: RegionId,
+        bytes: u64,
+    },
 }
 
 /// The weight/KV references handed to one inference instance: its private
@@ -192,6 +224,11 @@ pub struct HmmControl {
     pub opts: HmmOptions,
     /// Expert-placement policy (load-aware solver, migration budget).
     pub placement: PlacementConfig,
+    /// Tiered weight residency: which units are staged in host DRAM
+    /// (plan source selection consults it; park/unpark and cold-expert
+    /// demotion feed it), plus the cross-tier journal the chaos
+    /// conservation invariant replays.
+    pub tier: TieredWeightStore,
     pub store: TensorStore,
     workers: BTreeMap<DeviceId, Worker>,
     loader: Option<PayloadLoader>,
@@ -227,6 +264,7 @@ impl HmmControl {
             model,
             opts,
             placement: PlacementConfig::default(),
+            tier: TieredWeightStore::new(),
             store: TensorStore::new(),
             workers: BTreeMap::new(),
             loader: None,
@@ -562,6 +600,14 @@ impl HmmControl {
             }
             ops.push(PlanOp::KvReuse { dev });
         }
+        // Newcomer shards source from the cheapest reachable tier:
+        // HBM P2P from a rank-matched survivor, else host-DRAM h2d when
+        // the unit is staged, else disk (the P2pAttn op degrades to a
+        // disk reload when the HCCL ablation disables the fabric). A
+        // tag's first HostLoad consumes its staging copy, so same-rank
+        // replicas chain off the freshly loaded device over P2P —
+        // exactly the dedup'd-read discipline of Appendix D.2.
+        let mut host_loaded: HashMap<String, DeviceId> = HashMap::new();
         for &dev in &newcomers {
             let rank = to_layout.tp_rank[&dev];
             // Source: a current device with the same TP rank.
@@ -569,16 +615,45 @@ impl HmmControl {
                 .devices
                 .iter()
                 .copied()
-                .find(|d| from_layout.tp_rank[d] == rank)
-                .context("no TP-rank-matched source for new device")?;
+                .find(|d| from_layout.tp_rank[d] == rank);
             for unit in to_layout.units(dev) {
-                if !unit.is_expert() {
+                if unit.is_expert() {
+                    continue;
+                }
+                let tag = unit.tag(rank);
+                if let (Some(src), true) = (src, self.opts.use_p2p) {
                     ops.push(PlanOp::P2pAttn {
                         src,
                         dst: dev,
-                        tag: unit.tag(rank),
+                        tag,
                         bytes: unit.bytes,
                     });
+                } else if let Some(&staged_on) = host_loaded.get(&tag) {
+                    ops.push(PlanOp::P2pAttn {
+                        src: staged_on,
+                        dst: dev,
+                        tag,
+                        bytes: unit.bytes,
+                    });
+                } else if self.tier.dram_resident(&tag).is_some() {
+                    host_loaded.insert(tag.clone(), dev);
+                    ops.push(PlanOp::HostLoad {
+                        dev,
+                        tag,
+                        bytes: unit.bytes,
+                    });
+                } else if let Some(src) = src {
+                    ops.push(PlanOp::P2pAttn {
+                        src,
+                        dst: dev,
+                        tag,
+                        bytes: unit.bytes,
+                    });
+                } else {
+                    bail!(
+                        "no TP-rank-matched source for new device and \
+                         '{tag}' is not DRAM-staged"
+                    );
                 }
             }
             ops.push(PlanOp::KvInit {
@@ -617,6 +692,22 @@ impl HmmControl {
         };
         let n_layers = self.model.n_layers as usize;
         let mut budget = effective_budget;
+        let mut effective_budget = effective_budget;
+        let under_pressure = budget_factor < 1.0;
+        // Experts currently offloaded to host DRAM: not HBM-resident, so
+        // they can neither P2P-migrate nor zero-copy-reuse. A
+        // pressure-free event promotes them back onto their (possibly
+        // new) owner; while pressure persists they stay DRAM-backed
+        // unless their owner departs the device set.
+        let demoted: std::collections::HashSet<(usize, usize)> = self
+            .tier
+            .demoted_experts()
+            .into_iter()
+            .map(|(l, e, _, _)| (l, e))
+            .collect();
+        // Stay-put survivor experts eligible for cold demotion this event
+        // (collected while walking the placement; ranked below).
+        let mut demotable: Vec<(usize, usize, DeviceId)> = Vec::new();
         for layer in 0..n_layers {
             let layer_budget = budget / (n_layers - layer) as u64;
             let (new_owners, used) =
@@ -625,12 +716,30 @@ impl HmmControl {
             for e in 0..self.model.n_experts as usize {
                 let old_owner = self.expert_owner[layer][e];
                 let new_owner = new_owners[e];
-                if old_owner == new_owner {
+                if demoted.contains(&(layer, e)) {
+                    // DRAM-backed: promote when pressure is off, or when
+                    // the logical owner leaves the target set (the expert
+                    // must land somewhere servable).
+                    if !under_pressure || !to.devices.contains(&old_owner) {
+                        ops.push(PlanOp::PromoteExpert {
+                            layer,
+                            expert: e,
+                            dev: new_owner,
+                            bytes: self.model.expert_bytes(),
+                        });
+                    }
+                } else if old_owner == new_owner {
                     ops.push(PlanOp::ZeroCopyReuse {
                         dev: new_owner,
                         tag: format!("layer{layer}.expert{e}"),
                         bytes: self.model.expert_bytes(),
                     });
+                    if under_pressure
+                        && self.placement.demote_on_pressure
+                        && survivors.contains(&new_owner)
+                    {
+                        demotable.push((layer, e, new_owner));
+                    }
                 } else {
                     ops.push(PlanOp::MigrateExpert {
                         layer,
@@ -645,6 +754,60 @@ impl HmmControl {
                         dev: old_owner,
                     });
                 }
+            }
+        }
+
+        // Cold-expert offload under HBM pressure: instead of letting the
+        // shrunk budget fail (forcing live-KV recompute), demote the
+        // coldest stay-put experts to host DRAM and credit their bytes
+        // back — up to the configured budget, never beyond it.
+        if under_pressure
+            && self.placement.demote_on_pressure
+            && !demotable.is_empty()
+        {
+            let deficit = self
+                .placement
+                .migration_budget_bytes
+                .saturating_sub(effective_budget);
+            if deficit > 0 {
+                demotable.sort_by(|&(la, ea, _), &(lb, eb, _)| {
+                    let load = |l: usize, e: usize| {
+                        self.load_stats
+                            .as_ref()
+                            .map(|s| s.predicted(l)[e])
+                            .unwrap_or(0.0)
+                    };
+                    load(la, ea)
+                        .total_cmp(&load(lb, eb))
+                        .then((la, ea).cmp(&(lb, eb)))
+                });
+                let mut credited = 0u64;
+                for &(layer, e, dev) in demotable
+                    .iter()
+                    .take(self.placement.max_demotions)
+                {
+                    if credited >= deficit {
+                        break;
+                    }
+                    let bytes = self.model.expert_bytes();
+                    ops.push(PlanOp::DemoteExpert {
+                        layer,
+                        expert: e,
+                        dev,
+                        bytes,
+                    });
+                    // The demotion replaces this expert's reuse op.
+                    let tag = format!("layer{layer}.expert{e}");
+                    if let Some(pos) = ops.iter().position(|op| {
+                        matches!(op, PlanOp::ZeroCopyReuse { tag: t, .. } if *t == tag)
+                    }) {
+                        ops.remove(pos);
+                    }
+                    credited += bytes;
+                }
+                let credited = credited.min(deficit);
+                budget += credited;
+                effective_budget += credited;
             }
         }
 
@@ -734,6 +897,8 @@ impl HmmControl {
         let mut attn_transfers: Vec<(DeviceId, DeviceId, u64)> = Vec::new();
         let mut expert_transfers: Vec<(DeviceId, DeviceId, u64)> = Vec::new();
         let mut disk_time: BTreeMap<DeviceId, f64> = BTreeMap::new();
+        let mut h2d_time: BTreeMap<DeviceId, f64> = BTreeMap::new();
+        let mut d2h_time: BTreeMap<DeviceId, f64> = BTreeMap::new();
         let mut remap_ops: BTreeMap<DeviceId, u64> = BTreeMap::new();
         let mut kv_inits: Vec<(DeviceId, u64)> = Vec::new();
         // Live-sequence KV handoff legs (timed into the switchover
@@ -950,6 +1115,126 @@ impl HmmControl {
                         // recompute bill lands on the successor's prefill
                         // path (and in the sequence's TTFT).
                     }
+                    PlanOp::HostLoad { dev, tag, bytes } => {
+                        let (staged, t) = self
+                            .tier
+                            .promote(&mut cluster, tag)?
+                            .with_context(|| {
+                                format!("host-load: '{tag}' not DRAM-staged")
+                            })?;
+                        let r = cluster.devices[*dev].hbm.alloc(
+                            staged.max(*bytes),
+                            RegionKind::AttnWeights,
+                            ipc,
+                            tag,
+                        )?;
+                        // Live path: materialise the tensor payload like
+                        // every other weight-loading leg.
+                        let rank = to_layout.tp_rank[dev];
+                        if let Some(unit) = to_layout
+                            .units(*dev)
+                            .iter()
+                            .find(|u| u.tag(rank) == *tag)
+                        {
+                            if let Some(p) = self.load_payload(unit, rank) {
+                                self.store.put(*dev, r, p);
+                            }
+                        }
+                        *h2d_time.entry(*dev).or_default() += t;
+                        self.workers
+                            .get_mut(dev)
+                            .unwrap()
+                            .regions
+                            .insert(tag.clone(), r);
+                        undo.push(UndoOp::HostLoaded {
+                            dev: *dev,
+                            tag: tag.clone(),
+                            region: r,
+                            bytes: *bytes,
+                        });
+                    }
+                    PlanOp::DemoteExpert {
+                        layer,
+                        expert,
+                        dev,
+                        bytes,
+                    } => {
+                        let tag = format!("layer{layer}.expert{expert}");
+                        let region = self
+                            .workers
+                            .get_mut(dev)
+                            .and_then(|w| w.vpages.unbind(*layer, *expert).ok())
+                            .with_context(|| {
+                                format!("demote: {tag} not resident on dev {dev}")
+                            })?;
+                        let (host_region, t) =
+                            self.tier.demote(&mut cluster, &tag, *bytes)?;
+                        self.tier.note_demoted_expert(
+                            *layer,
+                            *expert,
+                            *dev,
+                            host_region,
+                            *bytes,
+                        );
+                        // The old instance serves this expert until
+                        // switchover: free its HBM pages at drain.
+                        self.deferred_frees.push((*dev, region));
+                        *d2h_time.entry(*dev).or_default() += t;
+                        *remap_ops.entry(*dev).or_default() += 1;
+                        undo.push(UndoOp::ExpertDemoted {
+                            layer: *layer,
+                            expert: *expert,
+                            dev: *dev,
+                            region,
+                            bytes: *bytes,
+                        });
+                    }
+                    PlanOp::PromoteExpert {
+                        layer,
+                        expert,
+                        dev,
+                        bytes,
+                    } => {
+                        let tag = format!("layer{layer}.expert{expert}");
+                        let (staged, t) = self
+                            .tier
+                            .promote(&mut cluster, &tag)?
+                            .with_context(|| {
+                                format!("promote: {tag} not DRAM-staged")
+                            })?;
+                        self.tier.forget_demoted_expert(*layer, *expert);
+                        let r = cluster.devices[*dev].hbm.alloc(
+                            staged.max(*bytes),
+                            RegionKind::ExpertWeights,
+                            ipc,
+                            &tag,
+                        )?;
+                        let unit = WeightUnit {
+                            kind: UnitKind::Expert {
+                                layer: *layer,
+                                expert: *expert,
+                            },
+                            bytes: *bytes,
+                        };
+                        if let Some(p) = self.load_payload(&unit, 0) {
+                            self.store.put(*dev, r, p);
+                        }
+                        self.workers
+                            .get_mut(dev)
+                            .unwrap()
+                            .vpages
+                            .bind(*layer, *expert, r)?;
+                        *h2d_time.entry(*dev).or_default() += t;
+                        *remap_ops.entry(*dev).or_default() += 1;
+                        owner_updates.push((*layer, *expert, *dev));
+                        undo.push(UndoOp::ExpertPromoted {
+                            layer: *layer,
+                            expert: *expert,
+                            dev: *dev,
+                            region: r,
+                            bytes: *bytes,
+                        });
+                    }
                     PlanOp::KvInit { dev, bytes } => {
                         let kv = cluster.devices[*dev].hbm.alloc(
                             *bytes,
@@ -1026,6 +1311,69 @@ impl HmmControl {
                             }
                             cluster.devices[dev].hbm.release(region)?;
                         }
+                        UndoOp::HostLoaded {
+                            dev,
+                            tag,
+                            region,
+                            bytes,
+                        } => {
+                            // Re-stage the shard: the HBM copy dies, the
+                            // DRAM copy returns (a journalled reverse
+                            // shift, so conservation still replays).
+                            if let Some(w) = self.workers.get_mut(&dev) {
+                                w.regions.remove(&tag);
+                            }
+                            cluster.devices[dev].hbm.release(region)?;
+                            self.store.remove(dev, region);
+                            self.tier.demote(&mut cluster, &tag, bytes)?;
+                        }
+                        UndoOp::ExpertDemoted {
+                            layer,
+                            expert,
+                            dev,
+                            region,
+                            bytes: _,
+                        } => {
+                            // Promote the DRAM copy back out of existence
+                            // (reverse-journalled) and rebind the still-
+                            // deferred HBM pages; the global deferred-free
+                            // truncation below drops the queued entry.
+                            let tag = format!("layer{layer}.expert{expert}");
+                            self.tier
+                                .promote(&mut cluster, &tag)?
+                                .context("rollback: demoted copy missing")?;
+                            self.tier.forget_demoted_expert(layer, expert);
+                            self.workers
+                                .get_mut(&dev)
+                                .context("rollback: demote worker missing")?
+                                .vpages
+                                .bind(layer, expert, region)?;
+                        }
+                        UndoOp::ExpertPromoted {
+                            layer,
+                            expert,
+                            dev,
+                            region,
+                            bytes,
+                        } => {
+                            let tag = format!("layer{layer}.expert{expert}");
+                            self.workers
+                                .get_mut(&dev)
+                                .context("rollback: promote worker missing")?
+                                .vpages
+                                .unbind(layer, expert)?;
+                            cluster.devices[dev].hbm.release(region)?;
+                            self.store.remove(dev, region);
+                            let (host_region, _) =
+                                self.tier.demote(&mut cluster, &tag, bytes)?;
+                            self.tier.note_demoted_expert(
+                                layer,
+                                expert,
+                                dev,
+                                host_region,
+                                bytes,
+                            );
+                        }
                     }
                 }
                 // Evictions and shard releases queued deferred frees; the
@@ -1060,6 +1408,8 @@ impl HmmControl {
                 .parallel_transfers(&stretched(&expert_transfers));
             let disk_max = disk_time.values().cloned().fold(0.0, f64::max);
             stats.attn_p2p_time += disk_max;
+            stats.h2d_time = h2d_time.values().cloned().fold(0.0, f64::max);
+            stats.d2h_time = d2h_time.values().cloned().fold(0.0, f64::max);
             stats.remap_time = remap_ops
                 .values()
                 .map(|&n| n as f64 * cluster.timings.vpage_remap_per_expert)
@@ -1120,6 +1470,8 @@ impl HmmControl {
                 + stats.remap_time
                 + stats.realloc_time
                 + stats.kv_init_time
+                + stats.h2d_time
+                + stats.d2h_time
                 + stats.rollback_time;
             return Ok(PlanExecution {
                 stats,
@@ -1141,7 +1493,9 @@ impl HmmControl {
             + stats.expert_p2p_time
             + stats.remap_time
             + stats.realloc_time
-            + stats.kv_init_time;
+            + stats.kv_init_time
+            + stats.h2d_time
+            + stats.d2h_time;
         Ok(PlanExecution {
             stats,
             steps,
@@ -1327,10 +1681,187 @@ impl HmmControl {
         Ok(())
     }
 
+    /// ---- park / unpark (scale-to-zero) ------------------------------------
+
+    /// Park the current configuration: demote every weight unit into
+    /// host DRAM (one staged copy per tag — TP-shard replicas dedup,
+    /// Appendix D.2), release all HBM (weights and KV), and forget the
+    /// layout. The caller must have detached every instance first; KV
+    /// is dropped rather than staged (a parked replica has no live
+    /// sequences). The d2h staging runs after the replica left the
+    /// serving rotation, so the returned time is background cost, not
+    /// serving-visible latency.
+    pub fn park_to_host(&mut self) -> Result<ParkStats> {
+        self.layout
+            .take()
+            .context("HMM not initialised (nothing to park)")?;
+        let mut cluster = self.cluster.borrow_mut();
+        // Orphaned pages from the last event die with the parked
+        // instance.
+        for (dev, region) in self.deferred_frees.drain(..) {
+            cluster.devices[dev].hbm.release(region)?;
+        }
+        let mut stats = ParkStats::default();
+        let mut per_dev: BTreeMap<DeviceId, f64> = BTreeMap::new();
+        let mut staged: std::collections::HashSet<String> =
+            std::collections::HashSet::new();
+        for (dev, worker) in std::mem::take(&mut self.workers) {
+            for (tag, &region) in &worker.regions {
+                let bytes = cluster.devices[dev]
+                    .hbm
+                    .region(region)
+                    .with_context(|| format!("park: region '{tag}' missing"))?
+                    .bytes;
+                if staged.insert(tag.clone()) {
+                    let (_, t) = self.tier.demote(&mut cluster, tag, bytes)?;
+                    *per_dev.entry(dev).or_default() += t;
+                    stats.dram_bytes += bytes;
+                }
+                cluster.devices[dev].hbm.release(region)?;
+                self.store.remove(dev, region);
+                stats.hbm_freed += bytes;
+            }
+            for (layer, expert, region) in worker.vpages.all_bindings() {
+                let tag = format!("layer{layer}.expert{expert}");
+                let bytes = cluster.devices[dev]
+                    .hbm
+                    .region(region)
+                    .with_context(|| format!("park: region '{tag}' missing"))?
+                    .bytes;
+                let (_, t) = self.tier.demote(&mut cluster, &tag, bytes)?;
+                *per_dev.entry(dev).or_default() += t;
+                stats.dram_bytes += bytes;
+                cluster.devices[dev].hbm.release(region)?;
+                self.store.remove(dev, region);
+                stats.hbm_freed += bytes;
+            }
+            if let Some(kv) = worker.kv_region {
+                cluster.devices[dev].hbm.release(kv)?;
+            }
+        }
+        stats.d2h_time = per_dev.values().cloned().fold(0.0, f64::max);
+        Ok(stats)
+    }
+
+    /// Unpark into `parallel`: rebuild the worker state by promoting
+    /// each staged unit's first copy over h2d and fanning TP-shard
+    /// replicas out over P2P, falling back to disk for anything not
+    /// staged. Allocates fresh KV caches. Returns the weight-path time
+    /// (max over devices — the h2d lanes run in parallel), i.e. the
+    /// DRAM-warm counterpart of [`Self::load_initial`].
+    pub fn unpark_from_host(
+        &mut self,
+        parallel: &ParallelConfig,
+        kv_bytes_per_device: u64,
+    ) -> Result<f64> {
+        if self.layout.is_some() {
+            bail!("unpark: a configuration is already loaded");
+        }
+        parallel.check_model(&self.model)?;
+        let layout = WeightLayout::compute(&self.model, parallel);
+        let mut cluster = self.cluster.borrow_mut();
+        let ipc = self.opts.ipc_safe_alloc;
+        let mut first_copy: HashMap<String, (DeviceId, RegionId)> =
+            HashMap::new();
+        let mut busy: BTreeMap<DeviceId, f64> = BTreeMap::new();
+        for &dev in &parallel.devices {
+            self.workers.entry(dev).or_insert_with(|| Worker::new(dev));
+        }
+        for &dev in &parallel.devices {
+            let rank = layout.tp_rank[&dev];
+            for unit in layout.units(dev) {
+                let tag = unit.tag(rank);
+                let kind = if unit.is_expert() {
+                    RegionKind::ExpertWeights
+                } else {
+                    RegionKind::AttnWeights
+                };
+                let (region, t) = if let Some(&(src_dev, src_region)) =
+                    first_copy.get(&tag)
+                {
+                    if self.opts.use_p2p {
+                        let (r, t) = p2p_copy(
+                            &mut cluster, &mut self.store, src_dev,
+                            src_region, dev, &tag, kind, ipc,
+                        )?;
+                        *busy.entry(src_dev).or_default() += t;
+                        (r, t)
+                    } else {
+                        let payload = self.load_payload(unit, rank);
+                        disk_copy(
+                            &mut cluster, &mut self.store, dev,
+                            &format!("{tag}#{dev}"), unit.bytes, kind, ipc,
+                            payload,
+                        )?
+                    }
+                } else if let Some((bytes, t)) =
+                    self.tier.promote(&mut cluster, &tag)?
+                {
+                    let r = cluster.devices[dev]
+                        .hbm
+                        .alloc(bytes, kind, ipc, &tag)?;
+                    if let UnitKind::Expert { layer, expert } = unit.kind {
+                        self.tier.forget_demoted_expert(layer, expert);
+                    }
+                    let payload = self.load_payload(unit, rank);
+                    if let Some(p) = payload {
+                        self.store.put(dev, r, p);
+                    }
+                    first_copy.insert(tag.clone(), (dev, r));
+                    (r, t)
+                } else {
+                    let payload = self.load_payload(unit, rank);
+                    let (r, t) = disk_copy(
+                        &mut cluster, &mut self.store, dev, &tag, unit.bytes,
+                        kind, ipc, payload,
+                    )?;
+                    first_copy.insert(tag.clone(), (dev, r));
+                    (r, t)
+                };
+                *busy.entry(dev).or_default() += t;
+                let worker = self.workers.get_mut(&dev).unwrap();
+                match unit.kind {
+                    UnitKind::Expert { layer, expert } => {
+                        worker.vpages.bind(layer, expert, region)?;
+                    }
+                    _ => {
+                        worker.regions.insert(tag, region);
+                    }
+                }
+            }
+            let kv = cluster.devices[dev].hbm.alloc(
+                kv_bytes_per_device,
+                RegionKind::KvCache,
+                ipc,
+                "kv",
+            )?;
+            *busy.entry(dev).or_default() +=
+                cluster.timings.kv_alloc(kv_bytes_per_device);
+            self.workers.get_mut(&dev).unwrap().kv_region = Some(kv);
+        }
+        self.kv_bytes_per_device = kv_bytes_per_device;
+        self.expert_owner = layout.expert_owner.clone();
+        self.layout = Some((parallel.clone(), layout));
+        Ok(busy.values().cloned().fold(0.0, f64::max))
+    }
+
     /// Payload lookup for the live engine.
     pub fn payload(&self, dev: DeviceId, region: RegionId) -> Option<Payload> {
         self.store.get(dev, region)
     }
+}
+
+/// Outcome of [`HmmControl::park_to_host`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ParkStats {
+    /// d2h staging time, max over devices (background cost: the replica
+    /// already left the serving rotation).
+    pub d2h_time: f64,
+    /// Weight bytes now staged in host DRAM (dedup'd, one copy per tag).
+    pub dram_bytes: u64,
+    /// HBM bytes released across the parked devices (weights; KV rides
+    /// separately).
+    pub hbm_freed: u64,
 }
 
 fn parse_expert_tag(tag: &str) -> Option<(usize, usize)> {
@@ -1755,6 +2286,133 @@ mod tests {
         // The next event is unshrunk.
         let normal = hmm.plan_scale(&to).unwrap();
         assert_eq!(normal.migration_budget_bytes, 1 << 30);
+    }
+
+    #[test]
+    fn park_unpark_round_trip_is_dram_fast_and_conserves_state() {
+        let (cluster, mut hmm) = setup(4);
+        let p = par(2, 2, 0..4);
+        let cold = hmm.load_initial(&p, KV).unwrap();
+        let used_loaded = usage(&cluster, 4);
+        let bound_before: usize = (0..4)
+            .map(|d| hmm.worker(d).unwrap().vpages.bound_count())
+            .sum();
+
+        let park = hmm.park_to_host().unwrap();
+        assert!(park.dram_bytes > 0);
+        assert!(park.hbm_freed >= park.dram_bytes, "replicas dedup to one staged copy");
+        assert!(park.d2h_time > 0.0);
+        {
+            let c = cluster.borrow();
+            assert_eq!(c.host.used(), park.dram_bytes, "allocator agrees");
+            for d in 0..4 {
+                assert_eq!(c.devices[d].hbm.used(), 0, "device {d} drained");
+            }
+        }
+        assert!(hmm.current_parallel().is_none());
+
+        let warm = hmm.unpark_from_host(&p, KV).unwrap();
+        assert!(warm > 0.0);
+        assert!(
+            warm < cold / 5.0,
+            "DRAM-warm unpark {warm} must be far under cold load {cold}"
+        );
+        assert_eq!(cluster.borrow().host.used(), 0, "promotion drains DRAM");
+        assert_eq!(usage(&cluster, 4), used_loaded, "HBM layout restored");
+        let bound_after: usize = (0..4)
+            .map(|d| hmm.worker(d).unwrap().vpages.bound_count())
+            .sum();
+        assert_eq!(bound_after, bound_before, "expert partition restored");
+        // The journal recorded one demote + one promote per staged tag.
+        let journal = hmm.tier.drain_journal();
+        assert!(!journal.is_empty());
+        let demotes = journal
+            .iter()
+            .filter(|s| s.to == crate::tier::TierLevel::HostDram)
+            .count();
+        let promotes = journal
+            .iter()
+            .filter(|s| s.from == crate::tier::TierLevel::HostDram)
+            .count();
+        assert_eq!(demotes, promotes);
+    }
+
+    #[test]
+    fn pressure_demotes_cold_experts_and_credits_the_budget() {
+        use crate::chaos::{FaultInjector, FaultKind, FaultPlan};
+
+        let (cluster, mut hmm) = setup(6);
+        hmm.placement.migration_budget_bytes = 8 * hmm.model.expert_bytes();
+        hmm.placement.demote_on_pressure = true;
+        hmm.load_initial(&par(3, 2, 0..6), KV).unwrap();
+        // Mark a handful of experts hot so the coldest are well-defined.
+        feed_skewed(&mut hmm, &[1, 2, 3, 4], 5);
+        let inj = Rc::new(RefCell::new(FaultInjector::new(FaultPlan::single(
+            0,
+            FaultKind::HbmPressure { budget_factor: 0.0 },
+        ))));
+        hmm.set_fault_injector(inj);
+
+        let to = par(2, 2, 0..4);
+        let plan = hmm.plan_scale(&to).unwrap();
+        let demoted = plan.demoted_expert_count();
+        assert!(demoted > 0, "pressure must demote cold experts");
+        assert!(demoted <= hmm.placement.max_demotions);
+        // The demoted bytes are credited back, capped by the configured
+        // budget.
+        assert_eq!(
+            plan.migration_budget_bytes,
+            plan.demoted_bytes().min(hmm.placement.migration_budget_bytes)
+        );
+        // Hot experts (high EWMA) are never demotion victims.
+        for op in &plan.ops {
+            if let PlanOp::DemoteExpert { layer: 0, expert, .. } = op {
+                assert!(
+                    ![1usize, 2, 3, 4].contains(expert),
+                    "hot expert {expert} demoted"
+                );
+            }
+        }
+
+        let exec = hmm.execute_plan(&plan, &to).unwrap();
+        assert!(exec.aborted.is_none());
+        assert!(exec.stats.d2h_time > 0.0, "demotion pays d2h");
+        hmm.apply_deferred_frees().unwrap();
+        assert_eq!(hmm.tier.demoted_expert_count(), demoted);
+        assert_eq!(
+            cluster.borrow().host.used(),
+            plan.demoted_bytes(),
+            "allocator and plan agree on staged bytes"
+        );
+
+        // The next (pressure-free) event promotes every expert back.
+        let plan2 = hmm.plan_scale(&par(3, 2, 0..6)).unwrap();
+        assert_eq!(plan2.promoted_expert_count(), demoted);
+        let exec2 = hmm.execute_plan(&plan2, &par(3, 2, 0..6)).unwrap();
+        assert!(exec2.aborted.is_none());
+        assert!(exec2.stats.h2d_time > 0.0, "promotion pays h2d");
+        hmm.apply_deferred_frees().unwrap();
+        assert_eq!(hmm.tier.demoted_expert_count(), 0);
+        assert_eq!(cluster.borrow().host.used(), 0);
+        // Partition restored across the grown configuration.
+        let total: usize = (0..6)
+            .map(|d| hmm.worker(d).unwrap().vpages.bound_count())
+            .sum();
+        assert_eq!(total, (27 * 64) as usize);
+    }
+
+    #[test]
+    fn unpark_without_staging_falls_back_to_disk() {
+        let (cluster, mut hmm) = setup(4);
+        let p = par(2, 2, 0..4);
+        hmm.load_initial(&p, KV).unwrap();
+        // Cold park: drop everything, no staging.
+        hmm.teardown_all().unwrap();
+        cluster.borrow_mut().disk.reset_dedup();
+        let t = hmm.unpark_from_host(&p, KV).unwrap();
+        // With nothing staged, unpark degenerates to a disk load.
+        assert!(t > 1.0, "disk fallback must be disk-speed: {t}");
+        assert_eq!(cluster.borrow().host.used(), 0);
     }
 
     #[test]

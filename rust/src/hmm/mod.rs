@@ -22,7 +22,8 @@ pub mod weights;
 pub mod worker;
 
 pub use control::{
-    AbortReport, HmmControl, HmmOptions, PlanExecution, StepOutcome,
+    AbortReport, HmmControl, HmmOptions, ParkStats, PlanExecution,
+    StepOutcome,
 };
 pub use plan::{PlanOp, ScalePlan};
 pub use store::TensorStore;

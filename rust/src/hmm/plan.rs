@@ -68,6 +68,33 @@ pub enum PlanOp {
     /// Release a departing device's non-expert shards and KV cache
     /// (deferred until the old instance drains).
     ReleaseShard { dev: DeviceId },
+    /// Load a non-expert shard from the host-DRAM staging tier over the
+    /// h2d link (the middle rung of the residency ladder: planned when no
+    /// P2P source exists but the unit is DRAM-staged — cheaper than disk
+    /// by an order of magnitude).
+    HostLoad {
+        dev: DeviceId,
+        tag: String,
+        bytes: u64,
+    },
+    /// Demote a cold expert (lowest popularity EWMA) out of HBM into host
+    /// DRAM under HBM pressure, reclaiming its bytes for the migration
+    /// budget instead of failing it. The expert stays logically placed on
+    /// `dev` (DRAM-backed) until a later event promotes it back.
+    DemoteExpert {
+        layer: usize,
+        expert: usize,
+        dev: DeviceId,
+        bytes: u64,
+    },
+    /// Promote a previously demoted expert from host DRAM back into HBM
+    /// on `dev` (planned on the first pressure-free event).
+    PromoteExpert {
+        layer: usize,
+        expert: usize,
+        dev: DeviceId,
+        bytes: u64,
+    },
 }
 
 /// A full scaling plan.
@@ -168,6 +195,46 @@ impl ScalePlan {
             }),
             _ => true,
         })
+    }
+
+    /// ---- tier legs --------------------------------------------------------
+
+    /// Bytes sourced from the host-DRAM tier over the h2d link (shard
+    /// loads + expert promotions).
+    pub fn h2d_bytes(&self) -> u64 {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                PlanOp::HostLoad { bytes, .. }
+                | PlanOp::PromoteExpert { bytes, .. } => *bytes,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Bytes demoted out of HBM into host DRAM (cold-expert offload).
+    pub fn demoted_bytes(&self) -> u64 {
+        self.ops
+            .iter()
+            .map(|op| match op {
+                PlanOp::DemoteExpert { bytes, .. } => *bytes,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    pub fn demoted_expert_count(&self) -> usize {
+        self.ops
+            .iter()
+            .filter(|op| matches!(op, PlanOp::DemoteExpert { .. }))
+            .count()
+    }
+
+    pub fn promoted_expert_count(&self) -> usize {
+        self.ops
+            .iter()
+            .filter(|op| matches!(op, PlanOp::PromoteExpert { .. }))
+            .count()
     }
 
     /// ---- live-KV migration legs ------------------------------------------
@@ -345,6 +412,48 @@ mod tests {
         assert!(p.kv_blocks_conserved(265));
         assert!(!p.kv_blocks_conserved(264));
         // KV legs are invisible to the weight-migration accounting.
+        assert_eq!(p.p2p_bytes(), 0);
+        assert_eq!(p.transfers(), Vec::new());
+        assert!(p.migrations_have_matching_evictions());
+    }
+
+    #[test]
+    fn tier_leg_accounting() {
+        let p = ScalePlan {
+            from_label: "a".into(),
+            to_label: "b".into(),
+            ops: vec![
+                PlanOp::HostLoad {
+                    dev: 4,
+                    tag: "layer0.attn.tp0".into(),
+                    bytes: 200,
+                },
+                PlanOp::DemoteExpert {
+                    layer: 1,
+                    expert: 7,
+                    dev: 0,
+                    bytes: 30,
+                },
+                PlanOp::DemoteExpert {
+                    layer: 2,
+                    expert: 9,
+                    dev: 1,
+                    bytes: 30,
+                },
+                PlanOp::PromoteExpert {
+                    layer: 0,
+                    expert: 2,
+                    dev: 0,
+                    bytes: 30,
+                },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(p.h2d_bytes(), 230);
+        assert_eq!(p.demoted_bytes(), 60);
+        assert_eq!(p.demoted_expert_count(), 2);
+        assert_eq!(p.promoted_expert_count(), 1);
+        // Tier legs are invisible to fabric and dedup accounting.
         assert_eq!(p.p2p_bytes(), 0);
         assert_eq!(p.transfers(), Vec::new());
         assert!(p.migrations_have_matching_evictions());

@@ -45,7 +45,7 @@ pub fn disk_loader_boot(
             format!("diskloader:{proc}"),
         )?;
         regions.push((dev, r));
-        t += cluster.disk.read_time(weight_bytes);
+        t += cluster.disk.read(weight_bytes);
         let kv = cluster.devices[dev].hbm.alloc(
             kv_bytes_per_device,
             RegionKind::KvCache,

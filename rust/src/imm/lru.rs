@@ -1,13 +1,22 @@
 //! LRU cache of standby instances (§4.5: "idle instances ... tracked in an
 //! LRU cache and remain ready to attach").
+//!
+//! Generalised for the tiered weight store: eviction no longer has to
+//! mean *dropping* — [`crate::imm::InstanceManager`] chains two of these
+//! (hot standby → DRAM-warm) so an entry evicted from the hot level
+//! demotes a tier instead of dying, and entries mid-activation can be
+//! [`LruCache::pin`]ned so churn can never evict the instance a scaling
+//! event is about to attach.
 
 use std::collections::VecDeque;
 
-/// A small ordered LRU: most-recently-used at the back.
+/// A small ordered LRU: most-recently-used at the back. Pinned entries
+/// are skipped when choosing an eviction victim.
 #[derive(Debug, Clone)]
 pub struct LruCache<K: PartialEq + Clone, V> {
     cap: usize,
-    entries: VecDeque<(K, V)>,
+    /// (key, value, pinned), LRU order front→back.
+    entries: VecDeque<(K, V, bool)>,
 }
 
 impl<K: PartialEq + Clone, V> LruCache<K, V> {
@@ -19,34 +28,54 @@ impl<K: PartialEq + Clone, V> LruCache<K, V> {
         }
     }
 
-    /// Insert (or replace) a value; evicts the least-recently-used entry if
-    /// over capacity, returning it.
+    /// Insert (or replace) a value; evicts the least-recently-used
+    /// *unpinned* entry if over capacity, returning it. Replacing a
+    /// pinned key keeps its pin (re-preparing a protected shape must not
+    /// silently unprotect it). When every candidate is pinned the cache
+    /// temporarily exceeds its capacity rather than evict an in-use
+    /// instance (the pin is a correctness guarantee, the capacity a
+    /// performance target).
     pub fn insert(&mut self, key: K, value: V) -> Option<(K, V)> {
-        if let Some(pos) = self.entries.iter().position(|(k, _)| *k == key) {
-            self.entries.remove(pos);
+        let mut pinned = false;
+        if let Some(pos) = self.entries.iter().position(|(k, _, _)| *k == key) {
+            pinned = self
+                .entries
+                .remove(pos)
+                .map(|(_, _, p)| p)
+                .unwrap_or(false);
         }
-        self.entries.push_back((key, value));
+        self.entries.push_back((key, value, pinned));
         if self.entries.len() > self.cap {
-            self.entries.pop_front()
-        } else {
-            None
+            // The newcomer is never its own victim: candidates are the
+            // pre-existing entries, LRU first.
+            let candidates = self.entries.len() - 1;
+            if let Some(victim) = self
+                .entries
+                .iter()
+                .take(candidates)
+                .position(|(_, _, pinned)| !pinned)
+            {
+                return self.entries.remove(victim).map(|(k, v, _)| (k, v));
+            }
         }
+        None
     }
 
     /// Remove and return the value for `key`, if cached (a standby hit).
+    /// Clears any pin — the entry leaves the cache entirely.
     pub fn take(&mut self, key: &K) -> Option<V> {
-        let pos = self.entries.iter().position(|(k, _)| k == key)?;
-        self.entries.remove(pos).map(|(_, v)| v)
+        let pos = self.entries.iter().position(|(k, _, _)| k == key)?;
+        self.entries.remove(pos).map(|(_, v, _)| v)
     }
 
     /// Peek without affecting recency.
     pub fn contains(&self, key: &K) -> bool {
-        self.entries.iter().any(|(k, _)| k == key)
+        self.entries.iter().any(|(k, _, _)| k == key)
     }
 
     /// Touch an entry, marking it most-recently-used.
     pub fn touch(&mut self, key: &K) -> bool {
-        if let Some(pos) = self.entries.iter().position(|(k, _)| k == key) {
+        if let Some(pos) = self.entries.iter().position(|(k, _, _)| k == key) {
             if let Some(e) = self.entries.remove(pos) {
                 self.entries.push_back(e);
                 return true;
@@ -55,14 +84,46 @@ impl<K: PartialEq + Clone, V> LruCache<K, V> {
         false
     }
 
+    /// Pin `key`: it will never be chosen as an eviction victim until
+    /// unpinned or taken. Returns false when absent.
+    pub fn pin(&mut self, key: &K) -> bool {
+        match self.entries.iter_mut().find(|(k, _, _)| k == key) {
+            Some(e) => {
+                e.2 = true;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Clear a pin. Returns false when absent.
+    pub fn unpin(&mut self, key: &K) -> bool {
+        match self.entries.iter_mut().find(|(k, _, _)| k == key) {
+            Some(e) => {
+                e.2 = false;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn is_pinned(&self, key: &K) -> bool {
+        self.entries
+            .iter()
+            .any(|(k, _, pinned)| k == key && *pinned)
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
     pub fn keys(&self) -> impl Iterator<Item = &K> {
-        self.entries.iter().map(|(k, _)| k)
+        self.entries.iter().map(|(k, _, _)| k)
     }
 }
 
@@ -106,5 +167,56 @@ mod tests {
         c.insert("a", 9);
         assert_eq!(c.len(), 1);
         assert_eq!(c.take(&"a"), Some(9));
+    }
+
+    #[test]
+    fn pinned_entries_are_never_victims() {
+        let mut c = LruCache::new(2);
+        c.insert("a", 1);
+        c.insert("b", 2);
+        assert!(c.pin(&"a"));
+        // "a" is the LRU but pinned: "b" goes instead.
+        let evicted = c.insert("c", 3).unwrap();
+        assert_eq!(evicted.0, "b");
+        assert!(c.contains(&"a"));
+        // Unpin restores normal victim selection.
+        assert!(c.unpin(&"a"));
+        let evicted = c.insert("d", 4).unwrap();
+        assert_eq!(evicted.0, "a");
+    }
+
+    #[test]
+    fn all_pinned_exceeds_capacity_instead_of_evicting() {
+        let mut c = LruCache::new(2);
+        c.insert("a", 1);
+        c.insert("b", 2);
+        c.pin(&"a");
+        c.pin(&"b");
+        assert!(c.insert("c", 3).is_none(), "no unpinned victim");
+        assert_eq!(c.len(), 3, "temporarily over capacity");
+        // Taking a pinned entry clears it out entirely.
+        assert_eq!(c.take(&"a"), Some(1));
+        assert!(!c.is_pinned(&"a"));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn reinsert_keeps_the_pin() {
+        let mut c = LruCache::new(2);
+        c.insert("a", 1);
+        c.pin(&"a");
+        c.insert("a", 2); // re-prepare the protected shape
+        assert!(c.is_pinned(&"a"), "replacement must not unprotect");
+        c.insert("b", 3);
+        let evicted = c.insert("c", 4).unwrap();
+        assert_eq!(evicted.0, "b", "pinned 'a' still protected");
+    }
+
+    #[test]
+    fn pin_absent_key_is_false() {
+        let mut c: LruCache<&str, i32> = LruCache::new(2);
+        assert!(!c.pin(&"ghost"));
+        assert!(!c.unpin(&"ghost"));
+        assert!(!c.is_pinned(&"ghost"));
     }
 }

@@ -18,8 +18,15 @@ pub struct ImmOptions {
     /// Keep pre-initialised standby instances (the `-PreInit` ablation
     /// disables this: every acquisition pays full CPU pre-init).
     pub pre_init: bool,
-    /// Standby cache capacity.
+    /// Hot standby cache capacity (fully pre-initialised, free to
+    /// acquire).
     pub lru_cap: usize,
+    /// DRAM-warm second-level capacity: instances evicted from the hot
+    /// level demote here (engine state swapped to host memory, comm
+    /// groups kept) instead of dropping; acquiring one pays only
+    /// [`Timings::host_restore`] instead of full CPU pre-init. 0
+    /// disables the level (hot evictions drop, the pre-tier behaviour).
+    pub dram_cap: usize,
 }
 
 impl Default for ImmOptions {
@@ -29,6 +36,7 @@ impl Default for ImmOptions {
             // One slot per anticipated configuration (ElasticMoE prepares
             // standbys for deltas -1/+1/+2/+4 and the current shape).
             lru_cap: 5,
+            dram_cap: 8,
         }
     }
 }
@@ -38,7 +46,10 @@ pub struct InstanceManager {
     pub opts: ImmOptions,
     timings: Timings,
     next_id: InstanceId,
+    /// Hot standby level: fully pre-initialised, free to acquire.
     standby: LruCache<String, Instance>,
+    /// DRAM-warm level: evictees of the hot level, one host-restore away.
+    dram_warm: Option<LruCache<String, Instance>>,
     pub instances: BTreeMap<InstanceId, Instance>,
     pub active: Option<InstanceId>,
 }
@@ -50,8 +61,23 @@ impl InstanceManager {
             timings,
             next_id: 1,
             standby: LruCache::new(opts.lru_cap.max(1)),
+            dram_warm: (opts.dram_cap > 0)
+                .then(|| LruCache::new(opts.dram_cap)),
             instances: BTreeMap::new(),
             active: None,
+        }
+    }
+
+    /// Insert into the hot standby level; a hot eviction demotes into the
+    /// DRAM-warm level (HBM → DRAM → gone, never straight to gone while
+    /// the second level has room).
+    fn insert_standby(&mut self, label: String, inst: Instance) {
+        if let Some((demoted_label, demoted)) = self.standby.insert(label, inst)
+        {
+            if let Some(warm) = self.dram_warm.as_mut() {
+                // A second-level eviction is the true drop (back to disk).
+                warm.insert(demoted_label, demoted);
+            }
         }
     }
 
@@ -70,18 +96,43 @@ impl InstanceManager {
     ) -> InstanceId {
         let id = self.next_id();
         let inst = Instance::standby(id, proc, parallel.clone());
-        self.standby.insert(parallel.label(), inst);
+        self.insert_standby(parallel.label(), inst);
         id
     }
 
-    /// Whether a standby instance exists for the configuration.
+    /// Whether a hot standby instance exists for the configuration.
     pub fn has_standby(&self, parallel: &ParallelConfig) -> bool {
         self.standby.contains(&parallel.label())
     }
 
-    /// Acquire an instance for `parallel`: an LRU hit costs nothing (the
-    /// instance is pre-initialised, comm groups ready); a miss pays CPU
-    /// pre-init + communication-group setup. Returns (instance, prep_time).
+    /// Whether a DRAM-warm (second-level) standby exists for the
+    /// configuration.
+    pub fn has_dram_warm(&self, parallel: &ParallelConfig) -> bool {
+        self.dram_warm
+            .as_ref()
+            .map(|w| w.contains(&parallel.label()))
+            .unwrap_or(false)
+    }
+
+    /// Pin the hot standby for `parallel` — the shape the next
+    /// activation is most likely to need (the current configuration:
+    /// redistribution-only events and park/unpark reacquire it) — so
+    /// background anticipation churn cannot evict it. One shape is
+    /// protected at a time: any previous pin is cleared. Returns false
+    /// when the shape has no hot standby.
+    pub fn pin_standby(&mut self, parallel: &ParallelConfig) -> bool {
+        let keys: Vec<String> = self.standby.keys().cloned().collect();
+        for k in &keys {
+            self.standby.unpin(k);
+        }
+        self.standby.pin(&parallel.label())
+    }
+
+    /// Acquire an instance for `parallel`. Cost by warmth: a hot standby
+    /// hit is free (pre-initialised, comm groups ready); a DRAM-warm hit
+    /// pays only the host-memory state restore; a miss pays full CPU
+    /// pre-init + communication-group setup. Returns (instance,
+    /// prep_time).
     pub fn acquire(
         &mut self,
         parallel: &ParallelConfig,
@@ -91,6 +142,14 @@ impl InstanceManager {
             if let Some(mut inst) = self.standby.take(&parallel.label()) {
                 inst.proc = proc;
                 return (inst, 0.0);
+            }
+            if let Some(mut inst) = self
+                .dram_warm
+                .as_mut()
+                .and_then(|w| w.take(&parallel.label()))
+            {
+                inst.proc = proc;
+                return (inst, self.timings.host_restore);
             }
         }
         let id = self.next_id();
@@ -155,7 +214,7 @@ impl InstanceManager {
                 inst.parallel.clone(),
             );
             standby.boot = inst.boot;
-            self.standby.insert(inst.parallel.label(), standby);
+            self.insert_standby(inst.parallel.label(), standby);
         }
         Ok(inst)
     }
@@ -166,6 +225,10 @@ impl InstanceManager {
 
     pub fn standby_count(&self) -> usize {
         self.standby.len()
+    }
+
+    pub fn dram_warm_count(&self) -> usize {
+        self.dram_warm.as_ref().map(|w| w.len()).unwrap_or(0)
     }
 }
 
@@ -205,12 +268,82 @@ mod tests {
             ImmOptions {
                 pre_init: false,
                 lru_cap: 4,
+                dram_cap: 4,
             },
             Timings::cloudmatrix(),
         );
         m.prepare_standby(par(4), 1);
         let (_, t) = m.acquire(&par(4), 2);
         assert!(t > 30.0);
+    }
+
+    #[test]
+    fn hot_eviction_demotes_to_dram_warm_instead_of_dropping() {
+        let mut m = InstanceManager::new(
+            ImmOptions {
+                pre_init: true,
+                lru_cap: 2,
+                dram_cap: 2,
+            },
+            Timings::cloudmatrix(),
+        );
+        m.prepare_standby(par(2), 1);
+        m.prepare_standby(par(4), 2);
+        m.prepare_standby(par(6), 3); // evicts par(2) hot -> DRAM-warm
+        assert!(!m.has_standby(&par(2)));
+        assert!(m.has_dram_warm(&par(2)));
+        assert_eq!(m.standby_count(), 2);
+        assert_eq!(m.dram_warm_count(), 1);
+
+        // A DRAM-warm acquire pays the host restore: cheap but not free,
+        // and far under a cold pre-init miss.
+        let (inst, t) = m.acquire(&par(2), 9);
+        assert_eq!(inst.parallel, par(2));
+        let restore = Timings::cloudmatrix().host_restore;
+        assert_eq!(t, restore);
+        assert!(t > 0.0 && t < 5.0);
+        let (_, t_miss) = m.acquire(&par(8), 10);
+        assert!(t_miss > t * 10.0, "miss {t_miss} vs warm {t}");
+        assert_eq!(m.dram_warm_count(), 0);
+    }
+
+    #[test]
+    fn dram_warm_disabled_drops_hot_evictions() {
+        let mut m = InstanceManager::new(
+            ImmOptions {
+                pre_init: true,
+                lru_cap: 1,
+                dram_cap: 0,
+            },
+            Timings::cloudmatrix(),
+        );
+        m.prepare_standby(par(2), 1);
+        m.prepare_standby(par(4), 2); // evicts par(2): gone
+        assert!(!m.has_standby(&par(2)));
+        assert!(!m.has_dram_warm(&par(2)));
+        let (_, t) = m.acquire(&par(2), 3);
+        assert!(t > 30.0, "dropped evictee cold-misses: {t}");
+    }
+
+    #[test]
+    fn pinned_standby_survives_anticipation_churn() {
+        let mut m = InstanceManager::new(
+            ImmOptions {
+                pre_init: true,
+                lru_cap: 2,
+                dram_cap: 0,
+            },
+            Timings::cloudmatrix(),
+        );
+        m.prepare_standby(par(6), 1);
+        assert!(m.pin_standby(&par(6)));
+        // Churn through more shapes than the cache holds.
+        m.prepare_standby(par(2), 2);
+        m.prepare_standby(par(4), 3);
+        m.prepare_standby(par(8), 4);
+        assert!(m.has_standby(&par(6)), "pinned shape must survive");
+        let (_, t) = m.acquire(&par(6), 9);
+        assert_eq!(t, 0.0);
     }
 
     #[test]

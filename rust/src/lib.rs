@@ -41,6 +41,10 @@
 //! - `docs/architecture/05-failure-model.md` — the fault taxonomy,
 //!   abort/rollback protocol, and trace-invariant catalog enforced by the
 //!   [`chaos`] harness (`repro exp chaos`).
+//! - `docs/architecture/06-tiered-memory.md` — the tiered weight store
+//!   ([`tier`]): host-DRAM staging, cold-expert offload, DRAM-warm
+//!   standby instances, and park/unpark scale-to-zero
+//!   (`repro exp tier`).
 //! - `README.md` — quickstart, experiment and bench commands, and the
 //!   repro matrix mapping `repro exp` ids to paper artifacts.
 
@@ -58,5 +62,6 @@ pub mod placement;
 pub mod runtime;
 pub mod scaling;
 pub mod sim;
+pub mod tier;
 pub mod util;
 pub mod workload;

@@ -5,6 +5,9 @@
 //! - `serve [--model M] [--devices N] [--rps R] [--duration S]
 //!   [--method elastic|cold|extravagant|colocated] [--autoscale]` — run the
 //!   serving simulator and print SLO/throughput stats.
+//! - `bench [--json] [--fast]` — machine-readable perf trajectory
+//!   (steady-state tok/s, TTFT p99, scale-up latency per method);
+//!   `--json` writes `BENCH_serve.json` for CI to archive.
 //! - `info` — models, artifact manifest, cluster defaults.
 
 use anyhow::{bail, Context, Result};
@@ -14,8 +17,9 @@ use elastic_moe::config::SloConfig;
 use elastic_moe::coordinator::{LoadEstimator, ServingSim, Trigger};
 use elastic_moe::device::Timings;
 use elastic_moe::engine::CostModel;
-use elastic_moe::experiments;
+use elastic_moe::experiments::{self, ExpOptions};
 use elastic_moe::util::cli::Args;
+use elastic_moe::util::json::Json;
 use elastic_moe::util::{fmt_bytes, logging};
 use elastic_moe::workload::{RateProfile, WorkloadGen, WorkloadSpec};
 
@@ -25,6 +29,7 @@ fn main() {
     let result = match args.subcommand() {
         Some("exp") => cmd_exp(&args),
         Some("serve") => cmd_serve(&args),
+        Some("bench") => cmd_bench(&args),
         Some("info") => cmd_info(),
         _ => {
             print_usage();
@@ -45,11 +50,15 @@ fn print_usage() {
          repro exp <id>|all|list [--fast] [--seed N]\n\
          \x20                                  regenerate paper tables/figures\n\
          repro serve [options]              run the serving simulator\n\
+         repro bench [--json] [--fast]      perf trajectory (steady tok/s,\n\
+         \x20                                  TTFT p99, scale-up latency per\n\
+         \x20                                  method); --json writes\n\
+         \x20                                  BENCH_serve.json\n\
          repro info                         model and artifact inventory\n\
          \n\
-         exp options:\n\
+         exp options (parsed once, shared by every experiment):\n\
          --fast          smaller scenario set / shorter horizons\n\
-         --seed N        workload + fault-schedule seed (chaos/fleet);\n\
+         --seed N        workload + fault-schedule seed (chaos/fleet/tier);\n\
          \x20               a failing chaos cell prints the seed to replay it\n\
          \n\
          serve options:\n\
@@ -71,11 +80,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         .get(1)
         .map(|s| s.as_str())
         .unwrap_or("list");
-    let fast = args.flag("fast");
-    let seed: Option<u64> = match args.get("seed") {
-        Some(v) => Some(v.parse().context("--seed expects an integer")?),
-        None => None,
-    };
+    let opts = ExpOptions::from_args(args)?;
     match id {
         "list" => {
             println!("experiments: {}", experiments::ALL.join(" "));
@@ -84,16 +89,111 @@ fn cmd_exp(args: &Args) -> Result<()> {
         "all" => {
             for id in experiments::ALL {
                 println!("—— {id} ————————————————————————");
-                println!("{}", experiments::run_seeded(id, fast, seed)?);
+                println!("{}", experiments::run_with(id, &opts)?);
             }
             println!("reports written to reports/");
             Ok(())
         }
         id => {
-            println!("{}", experiments::run_seeded(id, fast, seed)?);
+            println!("{}", experiments::run_with(id, &opts)?);
             Ok(())
         }
     }
+}
+
+/// `repro bench [--json] [--fast]`: the machine-readable perf
+/// trajectory future PRs regress against — steady-state decode
+/// throughput and TTFT p99 on a fixed serving run, plus scale-up
+/// latency per method on the canonical 4→6 transition. `--json` writes
+/// `BENCH_serve.json` (CI archives it as an artifact).
+fn cmd_bench(args: &Args) -> Result<()> {
+    use elastic_moe::experiments::common::{make_method, par, par_on};
+    use elastic_moe::scaling::ScalingMethod as _;
+
+    let fast = args.flag("fast");
+    let m = model::dsv2_lite();
+    let slo = SloConfig::strict();
+
+    // Steady-state serving: 4 devices, fixed 2 rps.
+    let duration = if fast { 60.0 } else { 120.0 };
+    let sim = ServingSim::new(
+        CostModel::new(m.clone(), Timings::cloudmatrix()),
+        slo,
+    );
+    let mut gen = WorkloadGen::new(WorkloadSpec {
+        prompt_len: 2000,
+        decode_min: 200,
+        decode_max: 300,
+        profile: RateProfile::Fixed(2.0),
+        seed: 42,
+    });
+    let arrivals = gen.arrivals_until(duration);
+    let mut method = make_method("elastic", &m, 4)?;
+    let initial = par(&m, 4)?;
+    let out = sim.run(
+        method.as_mut(),
+        &initial,
+        arrivals,
+        Trigger::Manual(vec![]),
+        duration,
+    )?;
+    let w = out.recorder.window(0.0, out.end_time + 1e-6, &slo);
+    println!(
+        "steady (dsv2lite, 4 devices, 2 rps, {duration}s): \
+         {:.0} tok/s, TTFT p99 {:.3}s, SLO {:.1}%",
+        w.tokens_per_sec,
+        w.p99_ttft,
+        w.slo_attainment * 100.0
+    );
+
+    // Scale-up latency per method, canonical 4→6 transition (Horizontal
+    // adds a same-size replica; Extravagant needs fresh devices).
+    let mut scale_rows: Vec<(&str, f64)> = Vec::new();
+    for name in ["elastic", "cold", "extravagant", "colocated", "horizontal"]
+    {
+        let mut meth = make_method(name, &m, 12)?;
+        meth.boot(&par(&m, 4)?)?;
+        let target = match name {
+            // Fresh 6-device set (old 4 + new 6 both held at peak).
+            "extravagant" => par_on(&m, 4..10)?,
+            // Horizontal adds a whole replica of the base size.
+            "horizontal" => par_on(&m, 4..8)?,
+            _ => par(&m, 6)?,
+        };
+        let ev = meth.scale(&target)?;
+        println!("scale-up {name:<12} {:.2}s", ev.ready_after);
+        scale_rows.push((name, ev.ready_after));
+    }
+
+    if args.flag("json") {
+        let doc = Json::obj(vec![
+            ("model", Json::str(m.name)),
+            ("fast", Json::Bool(fast)),
+            (
+                "steady",
+                Json::obj(vec![
+                    ("devices", Json::num(4.0)),
+                    ("rps", Json::num(2.0)),
+                    ("duration_s", Json::num(duration)),
+                    ("tokens_per_sec", Json::num(w.tokens_per_sec)),
+                    ("ttft_p99_s", Json::num(w.p99_ttft)),
+                    ("slo_attainment", Json::num(w.slo_attainment)),
+                ]),
+            ),
+            (
+                "scale_up_latency_s",
+                Json::Obj(
+                    scale_rows
+                        .iter()
+                        .map(|&(n, t)| (n.to_string(), Json::num(t)))
+                        .collect(),
+                ),
+            ),
+        ]);
+        std::fs::write("BENCH_serve.json", format!("{doc}\n"))?;
+        println!("wrote BENCH_serve.json");
+    }
+    Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {

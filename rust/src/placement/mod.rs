@@ -66,6 +66,15 @@ pub struct PlacementConfig {
     pub uniform_prior: f64,
     /// EWMA weight of the newest routing observation.
     pub ewma_alpha: f64,
+    /// Under a chaos HBM-pressure fault, demote the coldest experts
+    /// (lowest EWMA) to host DRAM and credit their bytes back into the
+    /// migration budget, instead of letting the shrunk budget force
+    /// live-KV recompute. Off by default: the pre-tier pressure
+    /// behaviour (budget fails, movers re-prefill) stays the measurable
+    /// baseline for `repro exp chaos`.
+    pub demote_on_pressure: bool,
+    /// Cap on experts demoted per scaling event.
+    pub max_demotions: usize,
 }
 
 impl Default for PlacementConfig {
@@ -76,6 +85,8 @@ impl Default for PlacementConfig {
             capacity_slack: 2,
             uniform_prior: 0.25,
             ewma_alpha: 0.2,
+            demote_on_pressure: false,
+            max_demotions: 8,
         }
     }
 }

@@ -171,4 +171,5 @@ mod tests {
     fn zero_alpha_rejected() {
         ExpertLoadStats::new(1, 1, 0.0);
     }
+
 }

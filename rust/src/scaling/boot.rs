@@ -1,11 +1,14 @@
-//! Shared cold-boot sequence for the vLLM-style baselines (and Fig 4a's
-//! initialisation-latency breakdown): container start, engine
-//! pre-initialisation, communication-group setup, disk weight load, KV
-//! allocation, warmup.
+//! Boot sequences: the shared disk cold boot for the vLLM-style baselines
+//! (and Fig 4a's initialisation-latency breakdown) — container start,
+//! engine pre-initialisation, communication-group setup, disk weight
+//! load, KV allocation, warmup — plus the DRAM-warm fast boot that skips
+//! the container and reads weights from the host staging tier over h2d
+//! instead of from disk (the unpark path of the tiered weight store).
 
 use anyhow::Result;
 
 use crate::config::{ModelConfig, ParallelConfig};
+use crate::device::hbm::RegionKind;
 use crate::device::{Cluster, DeviceId, RegionId};
 use crate::imm::instance::BootBreakdown;
 use crate::imm::loader::disk_loader_boot;
@@ -35,10 +38,83 @@ pub fn cold_boot(
     Ok((regions, breakdown))
 }
 
+/// DRAM-warm boot: the instance's weights are already staged in host
+/// DRAM (a parked replica, or a prefetched standby), its process alive
+/// and comm groups kept. The breakdown therefore drops the container
+/// start, replaces CPU pre-init with the host-state restore, and pays
+/// h2d bandwidth instead of disk for the weight load — activation costs
+/// h2d + attach, not a cold read. Returns the instance's private regions
+/// and the per-stage breakdown, directly comparable to [`cold_boot`].
+pub fn dram_warm_boot(
+    cluster: &mut Cluster,
+    model: &ModelConfig,
+    parallel: &ParallelConfig,
+    kv_bytes_per_device: u64,
+    proc: u32,
+) -> Result<(Vec<(DeviceId, RegionId)>, BootBreakdown)> {
+    use crate::hmm::weights::WeightLayout;
+
+    let t = cluster.timings.clone();
+    let layout = WeightLayout::compute(model, parallel);
+    let mut regions = Vec::new();
+    let mut worst: f64 = 0.0;
+    for &dev in &parallel.devices {
+        let weight_bytes = layout.device_bytes(dev);
+        let r = cluster.devices[dev].hbm.alloc(
+            weight_bytes,
+            RegionKind::AttnWeights,
+            false,
+            format!("dramwarm:{proc}"),
+        )?;
+        regions.push((dev, r));
+        let kv = cluster.devices[dev].hbm.alloc(
+            kv_bytes_per_device,
+            RegionKind::KvCache,
+            false,
+            format!("dramwarm-kv:{proc}"),
+        )?;
+        regions.push((dev, kv));
+        // h2d lanes run per device in parallel.
+        worst = worst.max(t.h2d(weight_bytes) + t.kv_alloc(kv_bytes_per_device));
+    }
+    let kv_alloc = t.kv_alloc(kv_bytes_per_device);
+    let breakdown = BootBreakdown {
+        container: 0.0,
+        preinit: t.host_restore,
+        comm_init: 0.0,
+        weight_load: worst - kv_alloc,
+        kv_alloc,
+        attach: t.zero_copy_per_handle,
+        warmup: t.warmup_for(model.n_layers),
+    };
+    Ok((regions, breakdown))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::model::dsv2_lite;
+
+    #[test]
+    fn dram_warm_boot_is_an_order_of_magnitude_under_cold() {
+        let m = dsv2_lite();
+        let p = ParallelConfig::standard(2, 2, (0..4).collect()).unwrap();
+        let mut c1 = Cluster::cloudmatrix(4);
+        let (_, cold) = cold_boot(&mut c1, &m, &p, 8 << 30, 1).unwrap();
+        let mut c2 = Cluster::cloudmatrix(4);
+        let (regions, warm) = dram_warm_boot(&mut c2, &m, &p, 8 << 30, 2).unwrap();
+        assert!(!regions.is_empty());
+        assert!(
+            warm.total() * 5.0 < cold.total(),
+            "warm {} vs cold {}",
+            warm.total(),
+            cold.total()
+        );
+        assert_eq!(warm.container, 0.0, "parked process stays alive");
+        assert!(warm.preinit < cold.preinit / 10.0);
+        assert!(warm.weight_load < cold.weight_load / 5.0, "h2d beats disk");
+        assert_eq!(warm.warmup, cold.warmup, "warmup is unavoidable");
+    }
 
     #[test]
     fn cold_boot_breakdown_is_dominated_by_fixed_costs_and_load() {

@@ -31,6 +31,13 @@ pub struct ElasticMoE {
     /// drain-and-recompute switchover (the `repro exp kvmigrate`
     /// baseline).
     pub kv_policy: KvHandoffPolicy,
+    /// Park keeps weights DRAM-resident (true, the tiered fast path:
+    /// unpark pays host-restore + h2d + attach + warmup) or drops them
+    /// to disk (false: unpark is a full cold boot — the `repro exp tier`
+    /// baseline).
+    pub park_warm: bool,
+    /// Configuration a parked replica returns to on unpark.
+    parked: Option<ParallelConfig>,
 }
 
 impl ElasticMoE {
@@ -52,6 +59,8 @@ impl ElasticMoE {
             // also skip pre-init.
             anticipate_steps: vec![-1, 1, 2, 4, 0],
             kv_policy: KvHandoffPolicy::default(),
+            park_warm: true,
+            parked: None,
         }
     }
 
@@ -77,6 +86,10 @@ impl ElasticMoE {
                 }
             }
         }
+        // The current shape's standby (delta 0, prepared above) is the
+        // one redistribution-only events and park/unpark reacquire: pin
+        // it so anticipation churn can never evict it mid-activation.
+        self.imm.pin_standby(around);
     }
 }
 
@@ -180,6 +193,12 @@ impl ElasticMoE {
             metrics.stage("hmm_attn_p2p", stats.attn_p2p_time);
             metrics.stage("hmm_expert_migration", stats.expert_p2p_time);
             metrics.stage("hmm_vpage_remap", stats.remap_time);
+            if stats.h2d_time > 0.0 {
+                metrics.stage("tier_h2d", stats.h2d_time);
+            }
+            if stats.d2h_time > 0.0 {
+                metrics.stage("tier_d2h", stats.d2h_time);
+            }
             metrics.stage("kv_init", stats.kv_init_time);
             if stats.kv_migrate_time > 0.0 {
                 metrics.stage("kv_handoff", stats.kv_migrate_time);
@@ -239,6 +258,12 @@ impl ElasticMoE {
         metrics.stage("hmm_attn_p2p", stats.attn_p2p_time);
         metrics.stage("hmm_expert_migration", stats.expert_p2p_time);
         metrics.stage("hmm_vpage_remap", stats.remap_time);
+        if stats.h2d_time > 0.0 {
+            metrics.stage("tier_h2d", stats.h2d_time);
+        }
+        if stats.d2h_time > 0.0 {
+            metrics.stage("tier_d2h", stats.d2h_time);
+        }
         if stats.realloc_time > 0.0 {
             metrics.stage("hmm_realloc(no-vpage)", stats.realloc_time);
         }
@@ -390,6 +415,81 @@ impl ScalingMethod for ElasticMoE {
             return Ok(None);
         }
         Ok(Some(self.scale(&cur)?))
+    }
+
+    /// Park to zero devices. Warm (`park_warm`, default): every weight
+    /// unit demotes to host DRAM through the tier store (dedup'd, one
+    /// staged copy per tag), the process and comm groups stay alive, and
+    /// the current shape's CPU state goes back to the standby cache — so
+    /// unpark pays host-restore + h2d + attach + warmup. Cold: the full
+    /// teardown, weights drop to disk (dedup history reset: the next
+    /// boot really re-reads), and unpark is a cold boot.
+    fn park(&mut self) -> Result<Option<f64>> {
+        let Some(cur) = self.current.take() else {
+            return Ok(None); // not booted (or already parked)
+        };
+        // Retire the active instance and release its references before
+        // touching HBM: park requires refcounts back at the HMM's own.
+        if let Some(old_id) = self.imm.drain_active()? {
+            // Warm park keeps the instance's CPU state standby (the
+            // process survives); cold park loses it with the process.
+            self.imm.retire(old_id, self.park_warm)?;
+        }
+        if let Some(proc) = self.active_proc.take() {
+            self.hmm.detach_instance(proc)?;
+        }
+        let t = if self.park_warm {
+            let stats = self.hmm.park_to_host()?;
+            stats.d2h_time
+        } else {
+            self.hmm.apply_deferred_frees()?;
+            self.hmm.teardown_all()?;
+            // Cold park forfeits the dedup'd-read history: the next boot
+            // pays full disk reads again.
+            self.hmm.cluster.borrow_mut().disk.reset_dedup();
+            0.0
+        };
+        self.parked = Some(cur);
+        Ok(Some(t))
+    }
+
+    /// Unpark back to the pre-park configuration. Returns the boot time
+    /// the caller must wait out before routing traffic.
+    fn unpark(&mut self) -> Result<Option<f64>> {
+        let Some(target) = self.parked.take() else {
+            return Ok(None);
+        };
+        if !self.park_warm {
+            // Disk-cold restart: the full boot path (container, pre-init
+            // or standby, disk load, attach, warmup).
+            return Ok(Some(self.boot(&target)?));
+        }
+        let t = self.hmm.cluster.borrow().timings.clone();
+        let load = self
+            .hmm
+            .unpark_from_host(&target, self.kv_bytes_per_device)?;
+        let proc = self.hmm.alloc_proc();
+        // The parked process kept its comm groups; its CPU state restores
+        // from the standby cache (host_restore on a warm hit, full
+        // pre-init only if park churn evicted it).
+        let (inst, prep) = self.imm.acquire(&target, proc);
+        let prep = if prep == 0.0 { t.host_restore } else { prep };
+        let (binding, attach) = self.hmm.attach_instance(proc)?;
+        let id = self.imm.register_ready(inst, 0.0)?;
+        self.imm.activate(id)?;
+        self.active_proc = Some(proc);
+        self.current = Some(target.clone());
+        self.last_binding = Some(binding);
+        self.anticipate(&target);
+        Ok(Some(prep + load + attach + t.warmup_for(self.hmm.model.n_layers)))
+    }
+
+    fn drain_tier_shifts(&mut self) -> Vec<crate::tier::TierShift> {
+        self.hmm.tier.drain_journal()
+    }
+
+    fn dram_resident_bytes(&self) -> u64 {
+        self.hmm.cluster.borrow().host.used()
     }
 }
 
@@ -653,6 +753,77 @@ mod tests {
         assert!(out.kv_handoff.is_none(), "no per-sequence plan");
         assert!(!out.preserves_inflight, "in-flight work restarts");
         assert!(out.downtime.is_none(), "weights still zero-copy");
+    }
+
+    #[test]
+    fn warm_park_unpark_strictly_beats_disk_cold() {
+        // DRAM-warm path.
+        let mut warm = elastic(4);
+        warm.boot(&par(4)).unwrap();
+        let park_t = warm.park().unwrap().expect("booted method parks");
+        assert!(park_t > 0.0, "d2h staging is background but nonzero");
+        {
+            let c = warm.hmm.cluster.borrow();
+            assert!(c.host.used() > 0, "weights DRAM-resident while parked");
+            for d in 0..4 {
+                assert_eq!(c.devices[d].hbm.used(), 0, "HBM fully released");
+            }
+        }
+        assert!(warm.current().is_none());
+        assert!(warm.park().unwrap().is_none(), "double park is a no-op");
+        let warm_t = warm.unpark().unwrap().expect("parked method unparks");
+        assert!(warm.current().is_some());
+        assert_eq!(warm.hmm.cluster.borrow().host.used(), 0);
+        assert!(warm.unpark().unwrap().is_none(), "double unpark no-op");
+
+        // Disk-cold park baseline on an identical method.
+        let mut cold = elastic(4);
+        cold.park_warm = false;
+        cold.boot(&par(4)).unwrap();
+        cold.park().unwrap().expect("cold park works");
+        assert_eq!(
+            cold.hmm.cluster.borrow().host.used(),
+            0,
+            "cold park stages nothing"
+        );
+        let cold_t = cold.unpark().unwrap().expect("cold unpark works");
+
+        // ISSUE acceptance: DRAM-warm unpark strictly faster than disk
+        // cold boot on the same config — by a wide margin, not epsilon.
+        assert!(
+            warm_t * 3.0 < cold_t,
+            "warm unpark {warm_t} vs cold {cold_t}"
+        );
+        // And the unparked replica is live again: a same-shape scaling
+        // event runs the full choreography without error.
+        let out = warm.scale(&par(4)).unwrap();
+        assert_eq!(out.new_parallel.n_devices(), 4);
+    }
+
+    #[test]
+    fn park_journal_reconciles_with_the_host_allocator() {
+        let mut e = elastic(4);
+        e.boot(&par(4)).unwrap();
+        e.drain_tier_shifts(); // drop any boot-time noise (none expected)
+        e.park().unwrap().unwrap();
+        let staged = e.dram_resident_bytes();
+        assert!(staged > 0);
+        let shifts = e.drain_tier_shifts();
+        let journalled: u64 = shifts
+            .iter()
+            .filter(|s| s.to == crate::tier::TierLevel::HostDram)
+            .map(|s| s.bytes)
+            .sum();
+        assert_eq!(journalled, staged, "journal must match the allocator");
+        e.unpark().unwrap().unwrap();
+        let back: u64 = e
+            .drain_tier_shifts()
+            .iter()
+            .filter(|s| s.from == crate::tier::TierLevel::HostDram)
+            .map(|s| s.bytes)
+            .sum();
+        assert_eq!(back, journalled, "every staged byte promoted back");
+        assert_eq!(e.dram_resident_bytes(), 0);
     }
 
     #[test]

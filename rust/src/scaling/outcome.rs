@@ -15,6 +15,7 @@ use crate::chaos::{FaultKind, PlanAudit};
 use crate::config::ParallelConfig;
 use crate::kvmigrate::{KvHandoff, KvSnapshot};
 use crate::metrics::ScalingMetrics;
+use crate::tier::TierShift;
 
 /// A scaling event that hit an injected fault mid-plan and aborted.
 ///
@@ -189,5 +190,40 @@ pub trait ScalingMethod {
     /// routing stats exist.
     fn rebalance(&mut self) -> Result<Option<ScalingOutcome>> {
         Ok(None)
+    }
+
+    /// Park the replica to zero devices, keeping its weights warm (host
+    /// DRAM for [`crate::scaling::ElasticMoE`] with the tier enabled;
+    /// disk-only otherwise). Returns the background teardown/staging
+    /// time, or `Ok(None)` when the method cannot park — the default for
+    /// every baseline. A parked method serves nothing until
+    /// [`unpark`](Self::unpark).
+    fn park(&mut self) -> Result<Option<f64>> {
+        Ok(None)
+    }
+
+    /// Bring a parked replica back to its pre-park configuration.
+    /// Returns the boot time the serving simulator must wait out before
+    /// routing traffic (DRAM-warm: host restore + h2d + attach + warmup;
+    /// disk-cold: a full cold boot), or `Ok(None)` when nothing is
+    /// parked / the method cannot park.
+    fn unpark(&mut self) -> Result<Option<f64>> {
+        Ok(None)
+    }
+
+    /// Drain the method's cross-tier journal (weight bytes moving
+    /// between HBM, host DRAM, and disk) since the last drain. The
+    /// simulators feed these into the run trace as
+    /// [`crate::chaos::TraceEvent::TierShift`] events for the
+    /// conservation invariant. Default: no tier, empty journal.
+    fn drain_tier_shifts(&mut self) -> Vec<TierShift> {
+        Vec::new()
+    }
+
+    /// Bytes currently staged in host DRAM, as reported by the method's
+    /// *allocator* (not its journal — the conservation invariant
+    /// cross-checks the two). Default 0.
+    fn dram_resident_bytes(&self) -> u64 {
+        0
     }
 }

@@ -1,0 +1,81 @@
+//! Tiered weight residency (beyond the paper): HBM → host DRAM → shared
+//! disk.
+//!
+//! ElasticMoE's fast scaling rests on weights already being resident
+//! somewhere cheap to reach (HBM reuse, P2P, dedup'd disk reads — §4.5,
+//! Appendix D.2), but the base memory model is two-level: a weight is
+//! either in HBM or a full disk cold read away. Serverless MoE serving
+//! (MoEless, arXiv 2603.06350) and the MoE inference survey
+//! (arXiv 2412.14219) both identify a **host-memory tier with per-expert
+//! granularity** as the lever that closes the gap: standby capacity can
+//! be parked an h2d copy (~25 GB/s) away from serving instead of a disk
+//! boot (~1.5 GB/s) away, and cold experts can be demoted out of HBM
+//! without losing their warmth.
+//!
+//! The subsystem in three parts:
+//!
+//! 1. **Residency map + journal** — [`TieredWeightStore`]: which weight
+//!    units are staged in host DRAM (per tag, per-expert granularity),
+//!    every cross-tier move recorded as a [`TierShift`]. The journal is
+//!    what the chaos invariant
+//!    [`crate::chaos::invariants::check_tier_conservation`] replays:
+//!    DRAM bytes must reconcile exactly against the
+//!    [`crate::device::HostMem`] allocator at every audit point.
+//! 2. **Prefetch pipeline** — [`prefetch`]: a bandwidth-modeled two-stage
+//!    pipeline (disk→DRAM staging in the background, DRAM→HBM on the
+//!    critical path) for pre-warming a configuration concurrently with
+//!    serving, per the paper's concurrent-with-serving principle.
+//! 3. **Stack integration** — [`crate::hmm::HmmControl`] consults the
+//!    residency map when planning scale-up legs (HBM P2P > DRAM h2d >
+//!    disk), demotes cold experts under HBM pressure instead of failing
+//!    the migration budget, and implements park/unpark (scale-to-zero
+//!    with DRAM-resident weights); [`crate::imm::InstanceManager`] keeps
+//!    a DRAM-warm second standby level; [`crate::coordinator::FleetPolicy`]
+//!    chooses park over teardown when a re-burst is forecast within a
+//!    TTL. `repro exp tier` measures the whole loop on a serverless-style
+//!    on/off trace.
+//!
+//! See `docs/architecture/06-tiered-memory.md` for the tier diagram,
+//! residency state machine, and park/unpark choreography.
+
+pub mod prefetch;
+pub mod store;
+
+pub use prefetch::{
+    pipelined_promote_time, sequential_stage_time, warm_promote_time,
+};
+pub use store::{TierShift, TieredWeightStore};
+
+/// Where a weight unit currently lives. `Disk` is the backstop: every
+/// unit is always reconstructible from the shared store.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TierLevel {
+    /// Resident in device HBM (servable now).
+    Hbm,
+    /// Staged in host DRAM (an h2d copy away).
+    HostDram,
+    /// Only on shared disk (a cold read away).
+    Disk,
+}
+
+impl TierLevel {
+    pub fn label(self) -> &'static str {
+        match self {
+            TierLevel::Hbm => "hbm",
+            TierLevel::HostDram => "dram",
+            TierLevel::Disk => "disk",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels() {
+        assert_eq!(TierLevel::Hbm.label(), "hbm");
+        assert_eq!(TierLevel::HostDram.label(), "dram");
+        assert_eq!(TierLevel::Disk.label(), "disk");
+    }
+}

@@ -1,0 +1,251 @@
+//! The residency map: which weight units are staged in host DRAM, plus
+//! the journal of every cross-tier move.
+//!
+//! The store owns the *DRAM* tier's bookkeeping (keyed by weight tag,
+//! per-expert granularity for demoted experts); HBM residency stays where
+//! it always was — the HMM workers' region maps and vpage tables — and
+//! disk is the unbounded backstop. Every byte that crosses a tier
+//! boundary is journalled as a [`TierShift`]; the chaos checker
+//! ([`crate::chaos::invariants::check_tier_conservation`]) replays the
+//! journal against independent [`crate::device::HostMem`] audits, so a
+//! demote that forgets its journal entry (or a journal entry that forgets
+//! its bytes) is a machine-caught violation, not a silent leak.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::device::hostmem::HostRegionId;
+use crate::device::{Cluster, DeviceId};
+
+use super::TierLevel;
+
+/// One cross-tier move of one weight unit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierShift {
+    /// Weight-unit tag (e.g. `layer3.expert5`, `layer0.attn.tp1`).
+    pub tag: String,
+    pub bytes: u64,
+    pub from: TierLevel,
+    pub to: TierLevel,
+}
+
+/// The tiered weight store: DRAM residency map + journal.
+#[derive(Debug, Default)]
+pub struct TieredWeightStore {
+    /// tag -> (host region, bytes) of units staged in host DRAM.
+    dram: BTreeMap<String, (HostRegionId, u64)>,
+    /// Demoted cold experts: `(layer, expert) -> (logical owner device,
+    /// host region, bytes)`. A demoted expert stays logically placed on
+    /// its owner (DRAM-backed serving; see
+    /// `docs/architecture/06-tiered-memory.md`) until the next scaling
+    /// event promotes it back.
+    dram_experts: BTreeMap<(usize, usize), (DeviceId, HostRegionId, u64)>,
+    journal: Vec<TierShift>,
+}
+
+impl TieredWeightStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// ---- generic tagged units ------------------------------------------
+
+    /// Stage `tag` from disk into host DRAM (background prefetch path).
+    /// Returns the disk read time charged.
+    pub fn stage_from_disk(
+        &mut self,
+        cluster: &mut Cluster,
+        tag: &str,
+        bytes: u64,
+    ) -> Result<f64> {
+        if self.dram.contains_key(tag) {
+            anyhow::bail!("stage: '{tag}' is already DRAM-staged");
+        }
+        let region = cluster.host.alloc(bytes, tag)?;
+        self.dram.insert(tag.to_string(), (region, bytes));
+        self.journal.push(TierShift {
+            tag: tag.to_string(),
+            bytes,
+            from: TierLevel::Disk,
+            to: TierLevel::HostDram,
+        });
+        Ok(cluster.disk.read(bytes))
+    }
+
+    /// Demote `tag` out of HBM into host DRAM (the caller releases the
+    /// HBM region). Returns the host region and the d2h time charged.
+    pub fn demote(
+        &mut self,
+        cluster: &mut Cluster,
+        tag: &str,
+        bytes: u64,
+    ) -> Result<(HostRegionId, f64)> {
+        if self.dram.contains_key(tag) {
+            // Double-staging would leak the first host region and break
+            // the conservation audit: a programming error, not a state.
+            anyhow::bail!("demote: '{tag}' is already DRAM-staged");
+        }
+        let region = cluster.host.alloc(bytes, tag)?;
+        self.dram.insert(tag.to_string(), (region, bytes));
+        self.journal.push(TierShift {
+            tag: tag.to_string(),
+            bytes,
+            from: TierLevel::Hbm,
+            to: TierLevel::HostDram,
+        });
+        Ok((region, cluster.timings.d2h(bytes)))
+    }
+
+    /// Promote `tag` out of host DRAM (the caller allocates the HBM side).
+    /// The DRAM copy is freed — tier transitions are moves, which is what
+    /// keeps the byte-conservation invariant checkable. Returns the unit's
+    /// bytes and the h2d time charged; `None` when `tag` is not staged.
+    pub fn promote(
+        &mut self,
+        cluster: &mut Cluster,
+        tag: &str,
+    ) -> Result<Option<(u64, f64)>> {
+        let Some((region, bytes)) = self.dram.remove(tag) else {
+            return Ok(None);
+        };
+        cluster.host.release(region).context("promote: host region")?;
+        self.journal.push(TierShift {
+            tag: tag.to_string(),
+            bytes,
+            from: TierLevel::HostDram,
+            to: TierLevel::Hbm,
+        });
+        Ok(Some((bytes, cluster.timings.h2d(bytes))))
+    }
+
+    /// Drop `tag` from host DRAM back to disk-only (staging-cache
+    /// eviction / warmth expiry).
+    pub fn drop_to_disk(&mut self, cluster: &mut Cluster, tag: &str) -> Result<bool> {
+        let Some((region, bytes)) = self.dram.remove(tag) else {
+            return Ok(false);
+        };
+        cluster.host.release(region)?;
+        self.journal.push(TierShift {
+            tag: tag.to_string(),
+            bytes,
+            from: TierLevel::HostDram,
+            to: TierLevel::Disk,
+        });
+        Ok(true)
+    }
+
+    /// Bytes of `tag` staged in DRAM, if any.
+    pub fn dram_resident(&self, tag: &str) -> Option<u64> {
+        self.dram.get(tag).map(|&(_, b)| b)
+    }
+
+    /// ---- demoted experts ------------------------------------------------
+
+    /// Record a demoted cold expert (tag bookkeeping is the caller's —
+    /// use [`Self::demote`] with the expert tag first).
+    pub fn note_demoted_expert(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        owner: DeviceId,
+        region: HostRegionId,
+        bytes: u64,
+    ) {
+        self.dram_experts.insert((layer, expert), (owner, region, bytes));
+    }
+
+    /// Demoted experts awaiting promotion, in (layer, expert) order.
+    pub fn demoted_experts(&self) -> Vec<(usize, usize, DeviceId, u64)> {
+        self.dram_experts
+            .iter()
+            .map(|(&(l, e), &(d, _, b))| (l, e, d, b))
+            .collect()
+    }
+
+    pub fn forget_demoted_expert(&mut self, layer: usize, expert: usize) {
+        self.dram_experts.remove(&(layer, expert));
+    }
+
+    pub fn demoted_expert_count(&self) -> usize {
+        self.dram_experts.len()
+    }
+
+    /// ---- accounting -----------------------------------------------------
+
+    /// Total bytes the residency map believes are staged in DRAM. The
+    /// conservation invariant cross-checks this derived figure against
+    /// the [`crate::device::HostMem`] allocator's `used()`.
+    pub fn dram_bytes(&self) -> u64 {
+        self.dram.values().map(|&(_, b)| b).sum()
+    }
+
+    pub fn dram_unit_count(&self) -> usize {
+        self.dram.len()
+    }
+
+    /// Drain the journal (the simulators feed it into the run trace).
+    pub fn drain_journal(&mut self) -> Vec<TierShift> {
+        std::mem::take(&mut self.journal)
+    }
+
+    pub fn journal_len(&self) -> usize {
+        self.journal.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cluster() -> Cluster {
+        Cluster::cloudmatrix(2)
+    }
+
+    #[test]
+    fn stage_promote_cycle_moves_bytes_and_journals() {
+        let mut c = cluster();
+        let mut t = TieredWeightStore::new();
+        let stage_t = t.stage_from_disk(&mut c, "w", 1 << 30).unwrap();
+        assert!(stage_t > 0.5, "disk staging is disk-speed: {stage_t}");
+        assert_eq!(t.dram_resident("w"), Some(1 << 30));
+        assert_eq!(c.host.used(), 1 << 30);
+        assert_eq!(t.dram_bytes(), c.host.used());
+
+        let (bytes, h2d_t) = t.promote(&mut c, "w").unwrap().unwrap();
+        assert_eq!(bytes, 1 << 30);
+        assert!(h2d_t < stage_t / 10.0, "h2d must be 10x disk: {h2d_t}");
+        assert_eq!(c.host.used(), 0, "promotion is a move, not a copy");
+        assert!(t.dram_resident("w").is_none());
+        assert!(t.promote(&mut c, "w").unwrap().is_none());
+
+        let journal = t.drain_journal();
+        assert_eq!(journal.len(), 2);
+        assert_eq!(journal[0].from, TierLevel::Disk);
+        assert_eq!(journal[0].to, TierLevel::HostDram);
+        assert_eq!(journal[1].from, TierLevel::HostDram);
+        assert_eq!(journal[1].to, TierLevel::Hbm);
+        assert_eq!(t.journal_len(), 0);
+    }
+
+    #[test]
+    fn demote_and_drop_account_dram() {
+        let mut c = cluster();
+        let mut t = TieredWeightStore::new();
+        let (region, d2h_t) = t.demote(&mut c, "layer0.expert3", 64 << 20).unwrap();
+        assert!(d2h_t > 0.0);
+        t.note_demoted_expert(0, 3, 1, region, 64 << 20);
+        assert_eq!(t.demoted_expert_count(), 1);
+        assert_eq!(t.demoted_experts(), vec![(0, 3, 1, 64 << 20)]);
+        assert_eq!(c.host.used(), 64 << 20);
+
+        assert!(t.drop_to_disk(&mut c, "layer0.expert3").unwrap());
+        t.forget_demoted_expert(0, 3);
+        assert_eq!(c.host.used(), 0);
+        assert_eq!(t.demoted_expert_count(), 0);
+        assert!(!t.drop_to_disk(&mut c, "layer0.expert3").unwrap());
+        let journal = t.drain_journal();
+        assert_eq!(journal.len(), 2);
+        assert_eq!(journal[1].to, TierLevel::Disk);
+    }
+}

@@ -598,3 +598,106 @@ fn prop_paged_kv_from_bytes_is_usable_or_errors() {
         }
     });
 }
+
+/// Model-based LRU conformance: against a naive Vec model, the standby
+/// cache's capacity holds (absent pins), hits refresh recency, pinned
+/// entries are never evicted, and eviction order matches the model.
+#[test]
+fn prop_lru_cache_matches_model_and_pins_protect() {
+    use elastic_moe::imm::LruCache;
+
+    check("lru model equivalence", 200, |rng: &mut Rng| {
+        let cap = 1 + rng.below(6) as usize;
+        let mut cache: LruCache<u64, u64> = LruCache::new(cap);
+        // Model: (key, value, pinned), LRU order front -> back.
+        let mut model: Vec<(u64, u64, bool)> = Vec::new();
+        let pos = |m: &Vec<(u64, u64, bool)>, k: u64| {
+            m.iter().position(|&(mk, _, _)| mk == k)
+        };
+        for step in 0..rng.range(5, 60) {
+            let key = rng.below(10);
+            match rng.below(5) {
+                // insert (or replace): evict the LRU unpinned entry when
+                // over capacity; replacing a key keeps its pin.
+                0 | 1 => {
+                    let val = step;
+                    let evicted = cache.insert(key, val);
+                    let pin = pos(&model, key)
+                        .map(|p| model.remove(p).2)
+                        .unwrap_or(false);
+                    model.push((key, val, pin));
+                    let expect = if model.len() > cap {
+                        // Victim: LRU unpinned among pre-existing
+                        // entries (never the newcomer itself).
+                        let candidates = model.len() - 1;
+                        model
+                            .iter()
+                            .take(candidates)
+                            .position(|&(_, _, pinned)| !pinned)
+                            .map(|p| model.remove(p))
+                    } else {
+                        None
+                    };
+                    assert_eq!(
+                        evicted,
+                        expect.map(|(k, v, _)| (k, v)),
+                        "eviction mismatch at step {step}"
+                    );
+                }
+                // take: a hit leaves the cache entirely.
+                2 => {
+                    let got = cache.take(&key);
+                    let expect = pos(&model, key)
+                        .map(|p| model.remove(p))
+                        .map(|(_, v, _)| v);
+                    assert_eq!(got, expect);
+                }
+                // touch: refresh recency.
+                3 => {
+                    let hit = cache.touch(&key);
+                    let expect = pos(&model, key).map(|p| model.remove(p));
+                    assert_eq!(hit, expect.is_some());
+                    if let Some(e) = expect {
+                        model.push(e);
+                    }
+                }
+                // pin / unpin: the active instance must survive churn.
+                _ => {
+                    if rng.bool(0.5) {
+                        let ok = cache.pin(&key);
+                        assert_eq!(ok, pos(&model, key).is_some());
+                        if let Some(p) = pos(&model, key) {
+                            model[p].2 = true;
+                        }
+                    } else {
+                        let ok = cache.unpin(&key);
+                        assert_eq!(ok, pos(&model, key).is_some());
+                        if let Some(p) = pos(&model, key) {
+                            model[p].2 = false;
+                        }
+                    }
+                }
+            }
+            // Invariants after every step.
+            assert_eq!(cache.len(), model.len());
+            let pinned = model.iter().filter(|&&(_, _, p)| p).count();
+            assert!(
+                cache.len() <= cap.max(pinned + 1),
+                "cache exceeded its pin allowance: len {} cap {cap} \
+                 pinned {pinned}",
+                cache.len()
+            );
+            if pinned == 0 {
+                assert!(
+                    cache.len() <= cap,
+                    "capacity exceeded with no pins: {} > {cap}",
+                    cache.len()
+                );
+            }
+            for &(k, _, p) in &model {
+                assert!(cache.contains(&k), "model key {k} missing");
+                assert_eq!(cache.is_pinned(&k), p);
+            }
+        }
+    });
+}
