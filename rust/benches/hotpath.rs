@@ -105,6 +105,32 @@ fn bench_event_queue(b: &Bench) {
     });
 }
 
+fn bench_core_comparison() {
+    // The `repro bench --json` comparison, surfaced here too so `cargo
+    // bench --bench hotpath` shows the event core against the retained
+    // windowed reference without a CLI round-trip.
+    let cmp = elastic_moe::coordinator::compare_cores(true).unwrap();
+    println!(
+        "event core vs windowed reference (sparse trace, dt={}s):",
+        cmp.dt
+    );
+    println!(
+        "  event core  {:>12.0} events/sec  ({} iterations)",
+        cmp.event_events_per_sec(),
+        cmp.event.iterations
+    );
+    println!(
+        "  windowed    {:>12.0} events/sec  ({} iterations)",
+        cmp.windowed_events_per_sec(),
+        cmp.windowed.iterations
+    );
+    println!(
+        "  -> {:.2}x speedup, outputs match: {}",
+        cmp.speedup(),
+        cmp.outputs_match()
+    );
+}
+
 fn bench_pjrt_decode(b: &Bench) {
     use elastic_moe::runtime::{Manifest, Pjrt};
     let dir = std::path::Path::new("artifacts");
@@ -181,6 +207,7 @@ fn main() {
     bench_scaling_plan(&b);
     bench_vpage_remap(&b);
     bench_event_queue(&b);
+    bench_core_comparison();
     let b_slow = Bench::from_env(2, 10);
     bench_pjrt_decode(&b_slow);
 }

@@ -11,7 +11,9 @@
 //! verified against what the run *actually did*, not against what the
 //! scaling method promised.
 
+use crate::sim::StateHash;
 use crate::tier::TierLevel;
+use crate::util::json::Json;
 
 use super::faults::FaultKind;
 
@@ -151,10 +153,382 @@ impl TraceEvent {
     }
 }
 
+impl TraceEvent {
+    /// Fold this event into an incremental digest. Every field of every
+    /// variant participates, each variant under a distinct discriminant
+    /// tag, so a trace's digest pins the exact event sequence bit-for-bit.
+    /// Allocation-free: called on the simulators' hot path via
+    /// [`Trace::push`].
+    fn fold_into(&self, h: &mut StateHash) {
+        match self {
+            TraceEvent::Arrival { t, id, tokens } => {
+                h.fold_u64(0);
+                h.fold_f64(*t);
+                h.fold_u64(*id);
+                h.fold_usize(*tokens);
+            }
+            TraceEvent::ScaleCommand {
+                t,
+                event,
+                from_devices,
+                to_devices,
+                declared_pause,
+            } => {
+                h.fold_u64(1);
+                h.fold_f64(*t);
+                h.fold_usize(*event);
+                h.fold_usize(*from_devices);
+                h.fold_usize(*to_devices);
+                match declared_pause {
+                    Some((a, b)) => {
+                        h.fold_bool(true);
+                        h.fold_f64(*a);
+                        h.fold_f64(*b);
+                    }
+                    None => h.fold_bool(false),
+                }
+            }
+            TraceEvent::PlanAudited { t, event, audit } => {
+                h.fold_u64(2);
+                h.fold_f64(*t);
+                h.fold_usize(*event);
+                h.fold_usize(audit.snapshot_blocks);
+                h.fold_usize(audit.kv_remapped_blocks);
+                h.fold_usize(audit.kv_copied_blocks);
+                h.fold_usize(audit.kv_freed_blocks);
+                h.fold_u64(audit.kv_copied_bytes);
+                h.fold_u64(audit.migration_budget_bytes);
+                h.fold_u64(audit.expert_migration_bytes);
+            }
+            TraceEvent::FaultFired { t, event, fault } => {
+                h.fold_u64(3);
+                h.fold_f64(*t);
+                h.fold_usize(*event);
+                match fault {
+                    FaultKind::P2pLinkFail { after_legs } => {
+                        h.fold_u64(0);
+                        h.fold_usize(*after_legs);
+                    }
+                    FaultKind::KvCopyFail { after_legs } => {
+                        h.fold_u64(1);
+                        h.fold_usize(*after_legs);
+                    }
+                    FaultKind::DeviceLoss { dev } => {
+                        h.fold_u64(2);
+                        h.fold_usize(*dev);
+                    }
+                    FaultKind::HbmPressure { budget_factor } => {
+                        h.fold_u64(3);
+                        h.fold_f64(*budget_factor);
+                    }
+                    FaultKind::Straggler { dev, stretch } => {
+                        h.fold_u64(4);
+                        h.fold_usize(*dev);
+                        h.fold_f64(*stretch);
+                    }
+                }
+            }
+            TraceEvent::IntakePaused { t, event } => {
+                h.fold_u64(4);
+                h.fold_f64(*t);
+                h.fold_usize(*event);
+            }
+            TraceEvent::IntakeResumed { t, event } => {
+                h.fold_u64(5);
+                h.fold_f64(*t);
+                h.fold_usize(*event);
+            }
+            TraceEvent::Suspended { t, event, id } => {
+                h.fold_u64(6);
+                h.fold_f64(*t);
+                h.fold_usize(*event);
+                h.fold_u64(*id);
+            }
+            TraceEvent::Resumed { t, event, id } => {
+                h.fold_u64(7);
+                h.fold_f64(*t);
+                h.fold_usize(*event);
+                h.fold_u64(*id);
+            }
+            TraceEvent::Adopted {
+                t,
+                event,
+                id,
+                remap,
+            } => {
+                h.fold_u64(8);
+                h.fold_f64(*t);
+                h.fold_usize(*event);
+                h.fold_u64(*id);
+                h.fold_bool(*remap);
+            }
+            TraceEvent::Restarted { t, event, id } => {
+                h.fold_u64(9);
+                h.fold_f64(*t);
+                h.fold_usize(*event);
+                h.fold_u64(*id);
+            }
+            TraceEvent::ScaleCompleted { t, event, devices } => {
+                h.fold_u64(10);
+                h.fold_f64(*t);
+                h.fold_usize(*event);
+                h.fold_usize(*devices);
+            }
+            TraceEvent::ScaleAborted {
+                t,
+                event,
+                rolled_back,
+                reason,
+            } => {
+                h.fold_u64(11);
+                h.fold_f64(*t);
+                h.fold_usize(*event);
+                h.fold_bool(*rolled_back);
+                h.fold_str(reason);
+            }
+            TraceEvent::Finished { t, id, tokens } => {
+                h.fold_u64(12);
+                h.fold_f64(*t);
+                h.fold_u64(*id);
+                h.fold_usize(*tokens);
+            }
+            TraceEvent::TierShift {
+                t,
+                replica,
+                tag,
+                bytes,
+                from,
+                to,
+            } => {
+                h.fold_u64(13);
+                h.fold_f64(*t);
+                h.fold_usize(*replica);
+                h.fold_str(tag);
+                h.fold_u64(*bytes);
+                h.fold_str(from.label());
+                h.fold_str(to.label());
+            }
+            TraceEvent::TierAudit {
+                t,
+                replica,
+                dram_bytes,
+            } => {
+                h.fold_u64(14);
+                h.fold_f64(*t);
+                h.fold_usize(*replica);
+                h.fold_u64(*dram_bytes);
+            }
+        }
+    }
+
+    /// JSON rendering of one event: `{"ev": "<kind>", ...fields}`. Keys
+    /// come out alphabetically sorted and compact via [`Json`]'s
+    /// `Display`, which is what makes the golden-trace file byte-stable.
+    pub fn to_json(&self) -> Json {
+        match self {
+            TraceEvent::Arrival { t, id, tokens } => Json::obj(vec![
+                ("ev", Json::str("arrival")),
+                ("t", Json::num(*t)),
+                ("id", Json::num(*id as f64)),
+                ("tokens", Json::num(*tokens as f64)),
+            ]),
+            TraceEvent::ScaleCommand {
+                t,
+                event,
+                from_devices,
+                to_devices,
+                declared_pause,
+            } => Json::obj(vec![
+                ("ev", Json::str("scale_command")),
+                ("t", Json::num(*t)),
+                ("event", Json::num(*event as f64)),
+                ("from_devices", Json::num(*from_devices as f64)),
+                ("to_devices", Json::num(*to_devices as f64)),
+                (
+                    "declared_pause",
+                    match declared_pause {
+                        Some((a, b)) => {
+                            Json::arr([Json::num(*a), Json::num(*b)])
+                        }
+                        None => Json::Null,
+                    },
+                ),
+            ]),
+            TraceEvent::PlanAudited { t, event, audit } => Json::obj(vec![
+                ("ev", Json::str("plan_audited")),
+                ("t", Json::num(*t)),
+                ("event", Json::num(*event as f64)),
+                (
+                    "audit",
+                    Json::obj(vec![
+                        (
+                            "snapshot_blocks",
+                            Json::num(audit.snapshot_blocks as f64),
+                        ),
+                        (
+                            "kv_remapped_blocks",
+                            Json::num(audit.kv_remapped_blocks as f64),
+                        ),
+                        (
+                            "kv_copied_blocks",
+                            Json::num(audit.kv_copied_blocks as f64),
+                        ),
+                        (
+                            "kv_freed_blocks",
+                            Json::num(audit.kv_freed_blocks as f64),
+                        ),
+                        (
+                            "kv_copied_bytes",
+                            Json::num(audit.kv_copied_bytes as f64),
+                        ),
+                        (
+                            "migration_budget_bytes",
+                            Json::num(audit.migration_budget_bytes as f64),
+                        ),
+                        (
+                            "expert_migration_bytes",
+                            Json::num(audit.expert_migration_bytes as f64),
+                        ),
+                    ]),
+                ),
+            ]),
+            TraceEvent::FaultFired { t, event, fault } => {
+                let mut pairs = vec![
+                    ("ev", Json::str("fault_fired")),
+                    ("t", Json::num(*t)),
+                    ("event", Json::num(*event as f64)),
+                    ("fault", Json::str(fault.label())),
+                ];
+                match fault {
+                    FaultKind::P2pLinkFail { after_legs }
+                    | FaultKind::KvCopyFail { after_legs } => {
+                        pairs.push((
+                            "after_legs",
+                            Json::num(*after_legs as f64),
+                        ));
+                    }
+                    FaultKind::DeviceLoss { dev } => {
+                        pairs.push(("dev", Json::num(*dev as f64)));
+                    }
+                    FaultKind::HbmPressure { budget_factor } => {
+                        pairs.push((
+                            "budget_factor",
+                            Json::num(*budget_factor),
+                        ));
+                    }
+                    FaultKind::Straggler { dev, stretch } => {
+                        pairs.push(("dev", Json::num(*dev as f64)));
+                        pairs.push(("stretch", Json::num(*stretch)));
+                    }
+                }
+                Json::obj(pairs)
+            }
+            TraceEvent::IntakePaused { t, event } => Json::obj(vec![
+                ("ev", Json::str("intake_paused")),
+                ("t", Json::num(*t)),
+                ("event", Json::num(*event as f64)),
+            ]),
+            TraceEvent::IntakeResumed { t, event } => Json::obj(vec![
+                ("ev", Json::str("intake_resumed")),
+                ("t", Json::num(*t)),
+                ("event", Json::num(*event as f64)),
+            ]),
+            TraceEvent::Suspended { t, event, id } => Json::obj(vec![
+                ("ev", Json::str("suspended")),
+                ("t", Json::num(*t)),
+                ("event", Json::num(*event as f64)),
+                ("id", Json::num(*id as f64)),
+            ]),
+            TraceEvent::Resumed { t, event, id } => Json::obj(vec![
+                ("ev", Json::str("resumed")),
+                ("t", Json::num(*t)),
+                ("event", Json::num(*event as f64)),
+                ("id", Json::num(*id as f64)),
+            ]),
+            TraceEvent::Adopted {
+                t,
+                event,
+                id,
+                remap,
+            } => Json::obj(vec![
+                ("ev", Json::str("adopted")),
+                ("t", Json::num(*t)),
+                ("event", Json::num(*event as f64)),
+                ("id", Json::num(*id as f64)),
+                ("remap", Json::Bool(*remap)),
+            ]),
+            TraceEvent::Restarted { t, event, id } => Json::obj(vec![
+                ("ev", Json::str("restarted")),
+                ("t", Json::num(*t)),
+                ("event", Json::num(*event as f64)),
+                ("id", Json::num(*id as f64)),
+            ]),
+            TraceEvent::ScaleCompleted { t, event, devices } => {
+                Json::obj(vec![
+                    ("ev", Json::str("scale_completed")),
+                    ("t", Json::num(*t)),
+                    ("event", Json::num(*event as f64)),
+                    ("devices", Json::num(*devices as f64)),
+                ])
+            }
+            TraceEvent::ScaleAborted {
+                t,
+                event,
+                rolled_back,
+                reason,
+            } => Json::obj(vec![
+                ("ev", Json::str("scale_aborted")),
+                ("t", Json::num(*t)),
+                ("event", Json::num(*event as f64)),
+                ("rolled_back", Json::Bool(*rolled_back)),
+                ("reason", Json::str(reason.clone())),
+            ]),
+            TraceEvent::Finished { t, id, tokens } => Json::obj(vec![
+                ("ev", Json::str("finished")),
+                ("t", Json::num(*t)),
+                ("id", Json::num(*id as f64)),
+                ("tokens", Json::num(*tokens as f64)),
+            ]),
+            TraceEvent::TierShift {
+                t,
+                replica,
+                tag,
+                bytes,
+                from,
+                to,
+            } => Json::obj(vec![
+                ("ev", Json::str("tier_shift")),
+                ("t", Json::num(*t)),
+                ("replica", Json::num(*replica as f64)),
+                ("tag", Json::str(tag.clone())),
+                ("bytes", Json::num(*bytes as f64)),
+                ("from", Json::str(from.label())),
+                ("to", Json::str(to.label())),
+            ]),
+            TraceEvent::TierAudit {
+                t,
+                replica,
+                dram_bytes,
+            } => Json::obj(vec![
+                ("ev", Json::str("tier_audit")),
+                ("t", Json::num(*t)),
+                ("replica", Json::num(*replica as f64)),
+                ("dram_bytes", Json::num(*dram_bytes as f64)),
+            ]),
+        }
+    }
+}
+
 /// An append-only event log for one simulated run.
+///
+/// Every [`push`](Trace::push) also folds the event into an incremental
+/// [`StateHash`], so [`Trace::state_hash`] pins the full event sequence —
+/// two runs with equal digests logged bit-identical traces, without
+/// re-walking the event vector.
 #[derive(Debug, Default)]
 pub struct Trace {
     pub events: Vec<TraceEvent>,
+    hash: StateHash,
 }
 
 impl Trace {
@@ -163,6 +537,7 @@ impl Trace {
     }
 
     pub fn push(&mut self, ev: TraceEvent) {
+        ev.fold_into(&mut self.hash);
         self.events.push(ev);
     }
 
@@ -174,9 +549,31 @@ impl Trace {
         self.events.is_empty()
     }
 
+    /// FNV-1a digest over every event pushed so far (variant tags plus
+    /// all fields; floats by bit pattern).
+    pub fn state_hash(&self) -> u64 {
+        self.hash.value()
+    }
+
     /// Count events matching a predicate.
     pub fn count(&self, f: impl Fn(&TraceEvent) -> bool) -> usize {
         self.events.iter().filter(|e| f(e)).count()
+    }
+
+    /// JSON rendering of the whole trace:
+    /// `{"events":[...],"state_hash":"<hex>"}`. The digest rides along as
+    /// a hex string (JSON numbers are f64 — a u64 would lose bits).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "events",
+                Json::arr(self.events.iter().map(|e| e.to_json())),
+            ),
+            (
+                "state_hash",
+                Json::str(format!("{:016x}", self.state_hash())),
+            ),
+        ])
     }
 }
 
@@ -220,5 +617,111 @@ mod tests {
             1
         );
         assert_eq!(tr.events[0].t(), 0.5);
+    }
+
+    #[test]
+    fn hash_is_incremental_and_order_sensitive() {
+        let a = TraceEvent::Arrival {
+            t: 0.5,
+            id: 1,
+            tokens: 10,
+        };
+        let f = TraceEvent::Finished {
+            t: 2.0,
+            id: 1,
+            tokens: 10,
+        };
+        let mut t1 = Trace::new();
+        let mut t2 = Trace::new();
+        assert_eq!(t1.state_hash(), t2.state_hash(), "empty traces agree");
+        t1.push(a.clone());
+        t1.push(f.clone());
+        t2.push(a.clone());
+        t2.push(f.clone());
+        assert_eq!(t1.state_hash(), t2.state_hash(), "same events, same hash");
+        let mut t3 = Trace::new();
+        t3.push(f);
+        t3.push(a);
+        assert_ne!(t1.state_hash(), t3.state_hash(), "order matters");
+    }
+
+    #[test]
+    fn json_rendering_is_compact_and_sorted() {
+        let mut tr = Trace::new();
+        tr.push(TraceEvent::Arrival {
+            t: 0.5,
+            id: 1,
+            tokens: 10,
+        });
+        let j = tr.to_json().to_string();
+        assert!(j.starts_with(r#"{"events":[{"ev":"arrival","#));
+        assert!(j.contains(r#""state_hash":""#));
+        // Keys within an event come out alphabetically sorted.
+        assert!(j.contains(r#"{"ev":"arrival","id":1,"t":0.5,"tokens":10}"#));
+    }
+
+    #[test]
+    fn every_variant_serializes() {
+        let audit = PlanAudit {
+            snapshot_blocks: 4,
+            kv_remapped_blocks: 2,
+            kv_copied_blocks: 1,
+            kv_freed_blocks: 1,
+            kv_copied_bytes: 64,
+            migration_budget_bytes: 128,
+            expert_migration_bytes: 0,
+        };
+        let events = vec![
+            TraceEvent::Arrival { t: 0.0, id: 1, tokens: 8 },
+            TraceEvent::ScaleCommand {
+                t: 1.0,
+                event: 0,
+                from_devices: 4,
+                to_devices: 8,
+                declared_pause: Some((1.5, 2.0)),
+            },
+            TraceEvent::PlanAudited { t: 1.0, event: 0, audit },
+            TraceEvent::FaultFired {
+                t: 1.25,
+                event: 0,
+                fault: FaultKind::Straggler { dev: 3, stretch: 2.5 },
+            },
+            TraceEvent::IntakePaused { t: 1.5, event: 0 },
+            TraceEvent::Suspended { t: 1.5, event: 0, id: 1 },
+            TraceEvent::Resumed { t: 1.75, event: 0, id: 1 },
+            TraceEvent::Adopted { t: 2.0, event: 0, id: 1, remap: true },
+            TraceEvent::Restarted { t: 2.0, event: 0, id: 2 },
+            TraceEvent::IntakeResumed { t: 2.0, event: 0 },
+            TraceEvent::ScaleCompleted { t: 2.0, event: 0, devices: 8 },
+            TraceEvent::ScaleAborted {
+                t: 3.0,
+                event: 1,
+                rolled_back: true,
+                reason: "p2p-link-fail".to_string(),
+            },
+            TraceEvent::TierShift {
+                t: 3.5,
+                replica: 0,
+                tag: "expert-7".to_string(),
+                bytes: 1024,
+                from: TierLevel::Hbm,
+                to: TierLevel::HostDram,
+            },
+            TraceEvent::TierAudit { t: 3.5, replica: 0, dram_bytes: 1024 },
+            TraceEvent::Finished { t: 4.0, id: 1, tokens: 8 },
+        ];
+        let mut tr = Trace::new();
+        let mut hashes = vec![tr.state_hash()];
+        for e in events {
+            tr.push(e);
+            // Every variant must perturb the digest.
+            let h = tr.state_hash();
+            assert!(!hashes.contains(&h));
+            hashes.push(h);
+        }
+        let j = tr.to_json().to_string();
+        // Round-trips through the parser (structurally valid JSON).
+        let parsed = crate::util::json::parse(&j).unwrap();
+        assert_eq!(parsed.get("events").as_arr().unwrap().len(), 15);
     }
 }

@@ -7,9 +7,22 @@
 //! experiments; `FleetSim` composes many of those instances the way a real
 //! deployment would, so ElasticMoE's seconds-scale vertical steps can be
 //! measured against replica-granular horizontal provisioning on the same
-//! trace. Simulation is windowed co-simulation: arrivals are routed at
-//! window granularity, each replica advances its own discrete-event clock
-//! to the window boundary, then the policy observes the fleet and acts.
+//! trace.
+//!
+//! # Event-driven co-simulation
+//!
+//! The fleet loop runs on a [`crate::sim::EventQueue`] of typed
+//! [`FleetEvent`]s: each arrival is a `Route` event dispatched to a
+//! replica inbox at its arrival instant, and the self-rescheduling
+//! `PolicyTick` advances every replica's discrete-event clock to the tick
+//! time, drains tier journals, retires drained replicas, and lets the
+//! [`FleetPolicy`] observe and act. Replica-internal stage boundaries
+//! (switchover readiness, pause windows, downtime, boot/unpark
+//! `ready_at`) live on each replica's own timeline inside
+//! [`FleetSim::advance_replica`], which jumps replica clocks
+//! event-to-event rather than polling. Every transition folds into a
+//! [`StateHash`] exposed as [`FleetOutput::state_hash`]; see
+//! `docs/architecture/07-event-core.md`.
 
 use std::cell::RefCell;
 use std::collections::VecDeque;
@@ -19,11 +32,11 @@ use anyhow::{bail, Result};
 
 use crate::chaos::{FaultInjector, Trace, TraceEvent};
 use crate::config::{ParallelConfig, SloConfig};
-use crate::engine::{CostModel, ServeEngine};
+use crate::engine::{CostModel, ServeEngine, StepKind};
 use crate::kvmigrate::{KvHandoffStats, KvSnapshot};
 use crate::metrics::MetricsRecorder;
 use crate::scaling::{ScalingMethod, ScalingOutcome};
-use crate::sim::{Clock, SimClock};
+use crate::sim::{Clock, EventQueue, SimClock, StateHash};
 use crate::workload::Request;
 
 use super::estimator::ScaleDecision;
@@ -32,6 +45,18 @@ use super::serving::{
     begin_transition_on, build_engine, complete_pending, log_command,
     sync_pause_window, PendingScale,
 };
+
+/// Typed event on the fleet simulator's queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FleetEvent {
+    /// A request reaches the fleet router (one marker per arrival; the
+    /// handler routes every not-yet-routed arrival due at the marker's
+    /// timestamp into a replica inbox).
+    Route,
+    /// Fleet policy boundary: advance all replicas to the tick, observe,
+    /// act. Self-reschedules every `window` until the trace is served.
+    PolicyTick,
+}
 
 /// How arrivals are spread across ready replicas.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -169,6 +194,11 @@ pub struct FleetOutput {
     /// Structured event trace of the run across all replicas (the record
     /// the [`crate::chaos::invariants`] checkers run over).
     pub trace: Trace,
+    /// FNV-1a digest folded incrementally over every state transition of
+    /// the run (engine steps, policy ticks, fleet actions, the full event
+    /// trace). Two runs with the same seed and configuration must produce
+    /// the same digest — `rust/tests/determinism.rs` enforces this.
+    pub state_hash: u64,
 }
 
 impl FleetOutput {
@@ -293,7 +323,7 @@ impl FleetSim {
             });
         }
         let mut next_arrival = 0usize;
-        let mut recorder = MetricsRecorder::new();
+        let mut recorder = MetricsRecorder::with_capacity(arrivals.len());
         let mut actions: Vec<(f64, FleetAction)> = Vec::new();
         let mut events: Vec<ScalingOutcome> = Vec::new();
         let mut handoff = KvHandoffStats::default();
@@ -303,49 +333,47 @@ impl FleetSim {
         let mut device_timeline = vec![(0.0, serving0)];
         let mut rr = 0usize;
         let hard_stop = horizon * 2.0 + 600.0;
+        let mut shash = StateHash::new();
 
-        let mut t_end = self.window;
-        loop {
-            let t_start = t_end - self.window;
+        // Seed the event spine: one `Route` marker per arrival plus the
+        // first self-rescheduling `PolicyTick`. Route markers are seeded
+        // before any tick, so an arrival landing exactly on a tick
+        // boundary routes before the policy observes it.
+        let mut queue = EventQueue::with_capacity(arrivals.len() + 1);
+        for r in &arrivals {
+            queue.push(r.arrival, FleetEvent::Route);
+        }
+        queue.push(self.window, FleetEvent::PolicyTick);
 
-            // 1) Route this window's arrivals into replica inboxes.
-            while next_arrival < arrivals.len()
-                && arrivals[next_arrival].arrival < t_end
-            {
-                let r = arrivals[next_arrival].clone();
-                next_arrival += 1;
-                let eligible: Vec<(usize, usize)> = replicas
-                    .iter()
-                    .filter(|rep| {
-                        !rep.retired
-                            && !rep.draining
-                            && rep.engine.is_some()
-                            && rep.ready_at <= r.arrival
-                    })
-                    .map(|rep| (rep.id, rep.backlog()))
-                    .collect();
-                let target = if eligible.is_empty() {
-                    // Every replica is booting, draining, or parked:
-                    // fall back to any live one, else any non-retired
-                    // (a parked replica keeps its inbox — queued
-                    // arrivals are the policy's wake-up signal).
-                    replicas
-                        .iter()
-                        .find(|rep| !rep.retired && rep.engine.is_some())
-                        .or_else(|| {
-                            replicas.iter().find(|rep| !rep.retired)
-                        })
-                        .map(|rep| rep.id)
-                } else {
-                    Some(self.router.pick(&mut rr, r.tenant, &eligible))
-                };
-                match target {
-                    Some(id) => replicas[id].inbox.push_back(r),
-                    None => bail!("no live replica to route to"),
-                }
+        // Routing / policy scratch, reused across events so the hot path
+        // stays allocation-free after warm-up.
+        let mut eligible: Vec<(usize, usize)> = Vec::new();
+        let mut loads: Vec<ReplicaLoad> = Vec::new();
+
+        'sim: while let Some(ev) = queue.pop() {
+            if ev.payload == FleetEvent::Route {
+                // 1) Route every arrival due by this marker into a
+                // replica inbox. Replica state only changes at
+                // `PolicyTick`, so per-arrival routing here sees exactly
+                // the state the old windowed loop saw at its boundary.
+                self.route_due(
+                    ev.at,
+                    &arrivals,
+                    &mut next_arrival,
+                    &mut replicas,
+                    &mut rr,
+                    &mut eligible,
+                )?;
+                continue;
             }
 
-            // 2) Advance every replica to the window boundary, then
+            // `PolicyTick`: advance the fleet to the tick boundary and
+            // let the policy act on the window that just ended.
+            let t_end = ev.at;
+            let t_start = t_end - self.window;
+            shash.fold_f64(t_end);
+
+            // 2) Advance every replica to the tick boundary, then
             // drain each method's cross-tier journal into the trace
             // (with an allocator audit, so the conservation invariant
             // has an independent figure to reconcile against).
@@ -357,6 +385,7 @@ impl FleetSim {
                     &mut events,
                     &mut handoff,
                     &mut trace,
+                    &mut shash,
                 )?;
             }
             for rep in replicas.iter_mut() {
@@ -406,42 +435,85 @@ impl FleetSim {
             if next_arrival >= arrivals.len()
                 && replicas.iter().all(|r| r.retired || r.is_idle())
             {
-                break;
+                break 'sim;
             }
             if t_end >= hard_stop {
-                break;
+                break 'sim;
             }
 
             // 6) Policy tick over the window that just ended.
             let attainment =
                 recorder.attainment_by_arrival(t_start, t_end, &self.slo);
-            let loads: Vec<ReplicaLoad> = replicas
-                .iter()
-                .filter(|r| !r.retired)
-                .map(|r| ReplicaLoad {
-                    id: r.id,
-                    devices: r.devices_reserved(),
-                    occupancy: r
-                        .engine
-                        .as_ref()
-                        .map(|e| {
-                            e.batcher.running_len() as f64
-                                / e.batcher.cfg.max_batch.max(1) as f64
-                        })
-                        .unwrap_or(0.0),
-                    queue_depth: r.queue_depth(),
-                    busy: !r.parked
-                        && (r.pending.is_some() || r.ready_at > t_end),
-                    booting: !r.parked && r.ready_at > t_end,
-                    draining: r.draining,
-                    parked: r.parked,
-                    imbalance: r.method.placement_imbalance(),
-                })
-                .collect();
+            loads.clear();
+            loads.extend(
+                replicas
+                    .iter()
+                    .filter(|r| !r.retired)
+                    .map(|r| ReplicaLoad {
+                        id: r.id,
+                        devices: r.devices_reserved(),
+                        occupancy: r
+                            .engine
+                            .as_ref()
+                            .map(|e| {
+                                e.batcher.running_len() as f64
+                                    / e.batcher.cfg.max_batch.max(1) as f64
+                            })
+                            .unwrap_or(0.0),
+                        queue_depth: r.queue_depth(),
+                        busy: !r.parked
+                            && (r.pending.is_some() || r.ready_at > t_end),
+                        booting: !r.parked && r.ready_at > t_end,
+                        draining: r.draining,
+                        parked: r.parked,
+                        imbalance: r.method.placement_imbalance(),
+                    }),
+            );
+            for l in &loads {
+                shash.fold_usize(l.id);
+                shash.fold_usize(l.devices);
+                shash.fold_f64(l.occupancy);
+                shash.fold_usize(l.queue_depth);
+                shash.fold_bool(l.busy);
+                shash.fold_bool(l.booting);
+                shash.fold_bool(l.draining);
+                shash.fold_bool(l.parked);
+                shash.fold_f64(l.imbalance);
+            }
             let reserved: usize =
                 replicas.iter().map(|r| r.devices_reserved()).sum();
             let free = limits.pool_devices.saturating_sub(reserved);
             let action = policy.decide(t_end, attainment, &loads, free);
+            match action {
+                FleetAction::Hold => shash.fold_usize(0),
+                FleetAction::VerticalUp { replica, to_devices } => {
+                    shash.fold_usize(1);
+                    shash.fold_usize(replica);
+                    shash.fold_usize(to_devices);
+                }
+                FleetAction::VerticalDown { replica, to_devices } => {
+                    shash.fold_usize(2);
+                    shash.fold_usize(replica);
+                    shash.fold_usize(to_devices);
+                }
+                FleetAction::Park { replica } => {
+                    shash.fold_usize(3);
+                    shash.fold_usize(replica);
+                }
+                FleetAction::Unpark { replica } => {
+                    shash.fold_usize(4);
+                    shash.fold_usize(replica);
+                }
+                FleetAction::AddReplica => shash.fold_usize(5),
+                FleetAction::DrainReplica { replica } => {
+                    shash.fold_usize(6);
+                    shash.fold_usize(replica);
+                }
+                FleetAction::Rebalance { replica } => {
+                    shash.fold_usize(7);
+                    shash.fold_usize(replica);
+                }
+            }
             match action {
                 FleetAction::Hold => {}
                 FleetAction::VerticalUp { replica, to_devices }
@@ -615,7 +687,7 @@ impl FleetSim {
                 }
             }
 
-            t_end += self.window;
+            queue.push(t_end + self.window, FleetEvent::PolicyTick);
         }
 
         let end_time = replicas
@@ -623,6 +695,8 @@ impl FleetSim {
             .map(|r| r.clock.now())
             .fold(0.0f64, f64::max);
         let truncated = arrivals.len().saturating_sub(recorder.count());
+        shash.fold_u64(trace.state_hash());
+        shash.fold_usize(recorder.count());
         Ok(FleetOutput {
             recorder,
             actions,
@@ -635,7 +709,58 @@ impl FleetSim {
             truncated,
             handoff,
             trace,
+            state_hash: shash.value(),
         })
+    }
+
+    /// Route every not-yet-routed arrival due by `due` into a replica
+    /// inbox (the `Route` event handler). `eligible` is caller-owned
+    /// scratch, reused across calls so routing allocates nothing.
+    fn route_due(
+        &self,
+        due: f64,
+        arrivals: &[Request],
+        next_arrival: &mut usize,
+        replicas: &mut [Replica],
+        rr: &mut usize,
+        eligible: &mut Vec<(usize, usize)>,
+    ) -> Result<()> {
+        while *next_arrival < arrivals.len()
+            && arrivals[*next_arrival].arrival <= due
+        {
+            let r = arrivals[*next_arrival].clone();
+            *next_arrival += 1;
+            eligible.clear();
+            eligible.extend(
+                replicas
+                    .iter()
+                    .filter(|rep| {
+                        !rep.retired
+                            && !rep.draining
+                            && rep.engine.is_some()
+                            && rep.ready_at <= r.arrival
+                    })
+                    .map(|rep| (rep.id, rep.backlog())),
+            );
+            let target = if eligible.is_empty() {
+                // Every replica is booting, draining, or parked: fall
+                // back to any live one, else any non-retired (a parked
+                // replica keeps its inbox — queued arrivals are the
+                // policy's wake-up signal).
+                replicas
+                    .iter()
+                    .find(|rep| !rep.retired && rep.engine.is_some())
+                    .or_else(|| replicas.iter().find(|rep| !rep.retired))
+                    .map(|rep| rep.id)
+            } else {
+                Some(self.router.pick(rr, r.tenant, eligible))
+            };
+            match target {
+                Some(id) => replicas[id].inbox.push_back(r),
+                None => bail!("no live replica to route to"),
+            }
+        }
+        Ok(())
     }
 
     /// Standard layout over `n` local devices of one replica's cluster.
@@ -650,7 +775,9 @@ impl FleetSim {
     /// Advance one replica's discrete-event loop to `t_end`, completing
     /// any pending transition, enforcing downtime/intake windows, and
     /// recording finished requests. Mirrors [`super::ServingSim::run`]'s
-    /// inner loop at per-replica scope.
+    /// inner loop at per-replica scope. Every executed engine step folds
+    /// into `shash` so the fleet digest covers per-replica trajectories.
+    #[allow(clippy::too_many_arguments)]
     fn advance_replica(
         &self,
         rep: &mut Replica,
@@ -659,6 +786,7 @@ impl FleetSim {
         events: &mut Vec<ScalingOutcome>,
         handoff: &mut KvHandoffStats,
         trace: &mut Trace,
+        shash: &mut StateHash,
     ) -> Result<()> {
         if rep.retired || rep.parked {
             // Parked replicas hold no devices and step nothing; their
@@ -735,6 +863,17 @@ impl FleetSim {
             } else if let Some(eng) = rep.engine.as_mut() {
                 if eng.has_work() {
                     let out = eng.step(&rep.clock)?;
+                    shash.fold_usize(rep.id);
+                    shash.fold_usize(match out.kind {
+                        StepKind::Prefill => 0,
+                        StepKind::Decode => 1,
+                        StepKind::Idle => 2,
+                    });
+                    shash.fold_f64(out.duration);
+                    shash.fold_usize(out.preempted);
+                    shash.fold_usize(eng.kv.used_blocks());
+                    shash.fold_usize(eng.batcher.running_len());
+                    shash.fold_usize(eng.batcher.queue_len());
                     for r in out.finished {
                         trace.push(TraceEvent::Finished {
                             t: rep.clock.now(),
@@ -743,7 +882,7 @@ impl FleetSim {
                         });
                         recorder.record(&r);
                     }
-                    !matches!(out.kind, crate::engine::StepKind::Idle)
+                    !matches!(out.kind, StepKind::Idle)
                 } else {
                     false
                 }

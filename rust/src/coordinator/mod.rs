@@ -9,10 +9,12 @@
 pub mod estimator;
 pub mod fleet;
 pub mod policy;
+pub mod reference;
 pub mod serving;
 
 pub use estimator::{LoadEstimator, ScaleDecision};
 pub use fleet::{FleetOutput, FleetSim, Router};
+pub use reference::{compare_cores, CoreComparison};
 pub use policy::{
     FleetAction, FleetLimits, FleetPolicy, PolicyMode, ReplicaLoad,
 };

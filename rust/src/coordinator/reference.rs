@@ -1,0 +1,312 @@
+//! Retained fixed-window reference serving core.
+//!
+//! [`super::ServingSim`] and [`super::FleetSim`] run on the typed
+//! [`crate::sim::EventQueue`]; this module keeps the shape they replaced —
+//! a fixed-`dt` polling loop — alive at minimal scope, for two jobs:
+//!
+//! 1. **Perf baseline.** `repro bench --json` runs [`compare_cores`] and
+//!    writes `BENCH_hotpath.json`, so CI tracks events/sec of the event
+//!    core against the windowed reference on the same trace. The event
+//!    core must never lose: it executes the same engine steps and skips
+//!    the idle polls.
+//! 2. **Semantic cross-check.** Both cores must complete the same
+//!    requests and emit the same tokens on the same trace (asserted in
+//!    this module's tests); a divergence means the event refactor changed
+//!    serving semantics, not just pacing.
+//!
+//! The reference intentionally stays serve-only (no scaling): the point
+//! of comparison is the core loop discipline, and keeping a second full
+//! scaling choreography alive would let the two drift apart.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::config::model::dsv2_lite;
+use crate::config::ParallelConfig;
+use crate::device::Timings;
+use crate::engine::{CostModel, StepKind};
+use crate::sim::{Clock, EventQueue, SimClock};
+use crate::util::bench::time_fn;
+use crate::util::json::Json;
+use crate::workload::{RateProfile, Request, WorkloadGen, WorkloadSpec};
+
+use super::serving::build_engine;
+
+/// What one core did with a trace.
+#[derive(Debug, Clone, Copy)]
+pub struct CoreRun {
+    /// Requests run to completion.
+    pub completed: usize,
+    /// Total tokens emitted (prefill first tokens + decode).
+    pub tokens: u64,
+    /// Engine steps executed (the work both cores share).
+    pub steps: u64,
+    /// Loop turns taken. For the windowed reference this includes every
+    /// idle poll; for the event core it is steps plus event-queue jumps.
+    pub iterations: u64,
+}
+
+/// Timed comparison of the event core against the windowed reference on
+/// one canonical sparse trace (see [`compare_cores`]).
+#[derive(Debug, Clone, Copy)]
+pub struct CoreComparison {
+    /// Arrivals in the trace.
+    pub arrivals: usize,
+    /// Poll interval of the windowed reference (seconds).
+    pub dt: f64,
+    pub event: CoreRun,
+    pub event_wall_s: f64,
+    pub windowed: CoreRun,
+    pub windowed_wall_s: f64,
+}
+
+impl CoreComparison {
+    /// Simulation events (engine steps + arrivals) per wall-clock second
+    /// for a run. Both cores process the same event set; the windowed
+    /// reference just burns extra wall time polling between them.
+    fn events_per_sec(&self, run: &CoreRun, wall_s: f64) -> f64 {
+        (run.steps + self.arrivals as u64) as f64 / wall_s.max(1e-12)
+    }
+
+    pub fn event_events_per_sec(&self) -> f64 {
+        self.events_per_sec(&self.event, self.event_wall_s)
+    }
+
+    pub fn windowed_events_per_sec(&self) -> f64 {
+        self.events_per_sec(&self.windowed, self.windowed_wall_s)
+    }
+
+    /// Event-core speedup over the windowed reference (>1 = faster).
+    pub fn speedup(&self) -> f64 {
+        self.windowed_wall_s / self.event_wall_s.max(1e-12)
+    }
+
+    /// Both cores completed the same requests with the same token count.
+    pub fn outputs_match(&self) -> bool {
+        self.event.completed == self.windowed.completed
+            && self.event.tokens == self.windowed.tokens
+    }
+
+    /// The `BENCH_hotpath.json` document body.
+    pub fn to_json(&self) -> Json {
+        let core = |run: &CoreRun, wall: f64, eps: f64| {
+            Json::obj(vec![
+                ("completed", Json::num(run.completed as f64)),
+                ("events_per_sec", Json::num(eps)),
+                ("iterations", Json::num(run.iterations as f64)),
+                ("steps", Json::num(run.steps as f64)),
+                ("wall_s", Json::num(wall)),
+            ])
+        };
+        Json::obj(vec![
+            ("arrivals", Json::num(self.arrivals as f64)),
+            ("dt_s", Json::num(self.dt)),
+            (
+                "event_core",
+                core(
+                    &self.event,
+                    self.event_wall_s,
+                    self.event_events_per_sec(),
+                ),
+            ),
+            ("outputs_match", Json::Bool(self.outputs_match())),
+            ("speedup", Json::num(self.speedup())),
+            (
+                "windowed_reference",
+                core(
+                    &self.windowed,
+                    self.windowed_wall_s,
+                    self.windowed_events_per_sec(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Serve `arrivals` with the fixed-window reference loop: poll every
+/// `dt` simulated seconds, delivering due arrivals and stepping the
+/// engine when it has work.
+pub fn run_windowed(
+    cost: &CostModel,
+    parallel: &ParallelConfig,
+    arrivals: &[Request],
+    dt: f64,
+) -> Result<CoreRun> {
+    let mut eng = build_engine(cost, 64 << 30, 256, parallel, 1.0, 1.0);
+    let clock = SimClock::new();
+    let mut pending: VecDeque<Request> = arrivals.iter().cloned().collect();
+    let mut completed = 0usize;
+    let mut steps = 0u64;
+    let mut iterations = 0u64;
+    loop {
+        iterations += 1;
+        let now = clock.now();
+        while pending
+            .front()
+            .map(|r| r.arrival <= now)
+            .unwrap_or(false)
+        {
+            eng.submit(pending.pop_front().unwrap());
+        }
+        if eng.has_work() {
+            let out = eng.step(&clock)?;
+            steps += 1;
+            completed += out.finished.len();
+            if matches!(out.kind, StepKind::Idle) {
+                clock.advance(dt);
+            }
+        } else if pending.is_empty() {
+            break;
+        } else {
+            // The poll the event core never pays: nothing due, advance
+            // one fixed window and look again.
+            clock.advance(dt);
+        }
+    }
+    Ok(CoreRun {
+        completed,
+        tokens: eng.tokens_emitted,
+        steps,
+        iterations,
+    })
+}
+
+/// Serve `arrivals` with the event-queue core: identical engine and
+/// trace, but idle time is skipped by jumping the clock to the next
+/// queued arrival.
+pub fn run_event(
+    cost: &CostModel,
+    parallel: &ParallelConfig,
+    arrivals: &[Request],
+) -> Result<CoreRun> {
+    let mut eng = build_engine(cost, 64 << 30, 256, parallel, 1.0, 1.0);
+    let clock = SimClock::new();
+    let mut queue = EventQueue::with_capacity(arrivals.len());
+    for r in arrivals {
+        queue.push(r.arrival, ());
+    }
+    let mut pending: VecDeque<Request> = arrivals.iter().cloned().collect();
+    let mut completed = 0usize;
+    let mut steps = 0u64;
+    let mut iterations = 0u64;
+    loop {
+        iterations += 1;
+        let now = clock.now();
+        while queue.peek_time().map(|t| t <= now).unwrap_or(false) {
+            queue.pop();
+        }
+        while pending
+            .front()
+            .map(|r| r.arrival <= now)
+            .unwrap_or(false)
+        {
+            eng.submit(pending.pop_front().unwrap());
+        }
+        if eng.has_work() {
+            let out = eng.step(&clock)?;
+            steps += 1;
+            completed += out.finished.len();
+            if matches!(out.kind, StepKind::Idle) {
+                // Engine refused the work (e.g. KV pressure): jump to
+                // the next arrival instead of spinning a frozen clock.
+                match queue.peek_time() {
+                    Some(next) => clock.advance_to(next + 1e-9),
+                    None => break,
+                }
+            }
+        } else {
+            let Some(next) = queue.peek_time() else {
+                break;
+            };
+            clock.advance_to(next + 1e-9);
+        }
+    }
+    Ok(CoreRun {
+        completed,
+        tokens: eng.tokens_emitted,
+        steps,
+        iterations,
+    })
+}
+
+/// Run both cores on the canonical sparse trace and time them.
+///
+/// The trace is deliberately sparse (long idle gaps between requests)
+/// with a fine poll interval: that is exactly the regime where a
+/// fixed-window loop wastes its iterations and an event core does not.
+/// `fast` shortens the horizon for CI.
+pub fn compare_cores(fast: bool) -> Result<CoreComparison> {
+    let cost = CostModel::new(dsv2_lite(), Timings::cloudmatrix());
+    let parallel = ParallelConfig::standard(2, 2, (0..4).collect())?;
+    let horizon = if fast { 240.0 } else { 600.0 };
+    let dt = 0.001;
+    let mut g = WorkloadGen::new(WorkloadSpec {
+        prompt_len: 1000,
+        decode_min: 50,
+        decode_max: 100,
+        profile: RateProfile::Fixed(0.25),
+        seed: 42,
+    });
+    let arrivals = g.arrivals_until(horizon);
+    let (windowed_wall_s, windowed) =
+        time_fn(|| run_windowed(&cost, &parallel, &arrivals, dt));
+    let windowed = windowed?;
+    let (event_wall_s, event) =
+        time_fn(|| run_event(&cost, &parallel, &arrivals));
+    let event = event?;
+    Ok(CoreComparison {
+        arrivals: arrivals.len(),
+        dt,
+        event,
+        event_wall_s,
+        windowed,
+        windowed_wall_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_trace() -> Vec<Request> {
+        let mut g = WorkloadGen::new(WorkloadSpec {
+            prompt_len: 500,
+            decode_min: 10,
+            decode_max: 20,
+            profile: RateProfile::Fixed(0.5),
+            seed: 7,
+        });
+        g.arrivals_until(30.0)
+    }
+
+    #[test]
+    fn cores_agree_on_completions_and_tokens() {
+        let cost = CostModel::new(dsv2_lite(), Timings::cloudmatrix());
+        let par = ParallelConfig::standard(2, 2, (0..4).collect()).unwrap();
+        let trace = tiny_trace();
+        let w = run_windowed(&cost, &par, &trace, 0.01).unwrap();
+        let e = run_event(&cost, &par, &trace).unwrap();
+        assert_eq!(w.completed, trace.len());
+        assert_eq!(e.completed, w.completed);
+        assert_eq!(e.tokens, w.tokens);
+        // The whole point of the event core: far fewer loop turns on a
+        // sparse trace.
+        assert!(
+            e.iterations < w.iterations,
+            "event {} vs windowed {}",
+            e.iterations,
+            w.iterations
+        );
+    }
+
+    #[test]
+    fn comparison_json_has_both_cores() {
+        let cmp = compare_cores(true).unwrap();
+        assert!(cmp.outputs_match(), "{cmp:?}");
+        let doc = cmp.to_json().to_string();
+        assert!(doc.contains("\"event_core\""), "{doc}");
+        assert!(doc.contains("\"windowed_reference\""), "{doc}");
+        assert!(doc.contains("\"events_per_sec\""), "{doc}");
+    }
+}

@@ -1,6 +1,20 @@
 //! The serving simulation loop: a Coordinator routing a request stream
 //! into the engine while a scaling method executes transitions beneath it.
 //! Drives Figs 9/10, Table 2 and the SLO experiments.
+//!
+//! # Event-driven core
+//!
+//! The loop runs on a [`crate::sim::EventQueue`] of typed [`SimEvent`]
+//! wake markers — arrivals, estimator window ticks, manual command
+//! times, and every stage boundary of the pending scaling event (pause
+//! open/close, downtime end, switchover readiness). Engine step
+//! completions are the implicit continuation: a step advances the shared
+//! [`SimClock`] by its duration and control returns synchronously, so
+//! the "step done" event is the loop's next turn at the post-step clock.
+//! When the engine is idle the clock jumps straight to the next queued
+//! event instead of polling fixed windows. Every state transition folds
+//! into a [`StateHash`] exposed as [`SimOutput::state_hash`]; see
+//! `docs/architecture/07-event-core.md` for the determinism contract.
 
 use std::cell::RefCell;
 use std::collections::VecDeque;
@@ -12,14 +26,58 @@ use crate::chaos::{FaultInjector, Trace, TraceEvent};
 use crate::config::{ParallelConfig, SloConfig};
 use crate::engine::{
     BatcherConfig, CostModel, CostModelBackend, PagedKv, ServeEngine,
+    StepKind,
 };
 use crate::kvmigrate::{HandoffDisposition, KvHandoffStats, KvSnapshot};
 use crate::metrics::MetricsRecorder;
 use crate::scaling::{ScalingMethod, ScalingOutcome};
-use crate::sim::{Clock, SimClock};
+use crate::sim::{Clock, EventQueue, SimClock, StateHash};
 use crate::workload::{Request, RequestState};
 
 use super::estimator::{LoadEstimator, ScaleDecision};
+
+/// Typed wake marker on the serving simulator's event queue. The marker
+/// names the state transition due at its timestamp; the loop applies
+/// transitions with condition-based handlers at the current clock, so a
+/// marker firing late (because an engine step overshot it) is handled at
+/// the post-step clock — exactly where a synchronous serving system
+/// would observe it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SimEvent {
+    /// A request reaches the coordinator inbox.
+    Arrival,
+    /// Estimator observation boundary; self-reschedules every `window`.
+    WindowTick,
+    /// A manually scheduled scale command becomes due.
+    Command,
+    /// The pending scaling event's switchover becomes ready.
+    ScaleReady,
+    /// The pending event's declared intake-pause window opens.
+    PauseOpen,
+    /// The pending event's declared intake-pause window closes.
+    PauseClose,
+    /// The pending event's downtime window ends (cold restart path).
+    DowntimeEnd,
+}
+
+/// Schedule wake markers for every stage boundary of a freshly issued
+/// scaling event.
+fn schedule_transition(
+    queue: &mut EventQueue<SimEvent>,
+    now: f64,
+    outcome: &ScalingOutcome,
+) {
+    queue.push(now + outcome.ready_after, SimEvent::ScaleReady);
+    if let Some((a, b)) = outcome.intake_pause {
+        if a > 0.0 {
+            queue.push(now + a, SimEvent::PauseOpen);
+        }
+        queue.push(now + b, SimEvent::PauseClose);
+    }
+    if let Some((_, b)) = outcome.downtime {
+        queue.push(now + b, SimEvent::DowntimeEnd);
+    }
+}
 
 /// When scaling happens.
 pub enum Trigger {
@@ -49,6 +107,13 @@ pub struct SimOutput {
     /// audits, pause edges, suspend/resume, dispositions, finishes) — the
     /// record the [`crate::chaos::invariants`] checkers run over.
     pub trace: Trace,
+    /// FNV-1a digest folded incrementally over every state transition of
+    /// the run: each engine step's kind, duration, KV block occupancy,
+    /// batch/queue lengths and preemptions, plus the full event trace.
+    /// Two runs from the same seed must produce equal digests
+    /// (`rust/tests/determinism.rs`); any divergence bisects to the first
+    /// mismatching transition.
+    pub state_hash: u64,
 }
 
 /// A scaling event in flight: the outcome timeline plus its absolute
@@ -467,31 +532,58 @@ impl ServingSim {
         let batch_factor = method.steady_batch_factor();
         let mut engine = Some(self.make_engine(initial, kv_factor, batch_factor));
         let mut current = initial.clone();
-        let mut recorder = MetricsRecorder::new();
+        let mut recorder = MetricsRecorder::with_capacity(arrivals.len());
         let mut events: Vec<ScalingOutcome> = Vec::new();
         let mut device_timeline = vec![(0.0, initial.n_devices())];
         let mut handoff = KvHandoffStats::default();
         let mut trace = Trace::new();
+        let mut shash = StateHash::new();
         let mut event_seq = 0usize;
 
         arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
+        // Seed the event spine: one marker per arrival, the first
+        // estimator tick, and every manual command time. Scaling stage
+        // boundaries join the queue when their command is issued.
+        let mut queue: EventQueue<SimEvent> =
+            EventQueue::with_capacity(arrivals.len() + 8);
         for r in &arrivals {
             trace.push(TraceEvent::Arrival {
                 t: r.arrival,
                 id: r.id,
                 tokens: r.max_new_tokens,
             });
+            queue.push(r.arrival, SimEvent::Arrival);
+        }
+        queue.push(self.window, SimEvent::WindowTick);
+        if let Trigger::Manual(list) = &trigger {
+            for (t, _) in list {
+                queue.push(*t, SimEvent::Command);
+            }
         }
         let mut arrivals: VecDeque<Request> = arrivals.into();
         let mut inbox: VecDeque<Request> = VecDeque::new();
         let mut pending: Option<PendingScale> = None;
-        let mut next_window = self.window;
         let hard_stop = horizon * 2.0 + 300.0;
 
         loop {
             let now = clock.now();
             if now >= hard_stop {
                 break;
+            }
+
+            // 0) Consume every wake marker that is due. Markers carry no
+            // state — the transitions they announce are applied by the
+            // condition-based handlers below at the current clock — so an
+            // engine step overshooting a marker is handled at the
+            // post-step clock, never replayed into the past. Overdue
+            // window ticks coalesce into one estimator observation.
+            let mut window_tick = false;
+            while queue.peek_time().map(|t| t <= now).unwrap_or(false) {
+                let ev = queue.pop().unwrap();
+                if ev.payload == SimEvent::WindowTick {
+                    window_tick = true;
+                    queue.push(ev.at + self.window, SimEvent::WindowTick);
+                }
             }
 
             // 1) Deliver arrivals up to `now` into the coordinator inbox.
@@ -556,9 +648,9 @@ impl ServingSim {
                 }
             }
 
-            // 4) Estimator tick.
-            if now >= next_window {
-                next_window += self.window;
+            // 4) Estimator tick (woken by the self-rescheduling
+            // `WindowTick` marker).
+            if window_tick {
                 if let Trigger::Auto {
                     estimator,
                     up,
@@ -616,6 +708,7 @@ impl ServingSim {
                                 now,
                                 ev,
                             );
+                            schedule_transition(&mut queue, now, &outcome);
                             pending = Some(PendingScale::new(
                                 outcome, now, ev, paused,
                             ));
@@ -652,6 +745,7 @@ impl ServingSim {
                                 now,
                                 ev,
                             );
+                            schedule_transition(&mut queue, now, &outcome);
                             pending = Some(PendingScale::new(
                                 outcome, now, ev, paused,
                             ));
@@ -666,6 +760,18 @@ impl ServingSim {
             } else if let Some(eng) = engine.as_mut() {
                 if eng.has_work() {
                     let out = eng.step(&clock)?;
+                    // Fold the step completion — the implicit
+                    // continuation event — into the run digest.
+                    shash.fold_u64(match out.kind {
+                        StepKind::Prefill => 0,
+                        StepKind::Decode => 1,
+                        StepKind::Idle => 2,
+                    });
+                    shash.fold_f64(out.duration);
+                    shash.fold_usize(eng.kv.used_blocks());
+                    shash.fold_usize(eng.batcher.running_len());
+                    shash.fold_usize(eng.batcher.queue_len());
+                    shash.fold_usize(out.preempted);
                     for r in out.finished {
                         trace.push(TraceEvent::Finished {
                             t: clock.now(),
@@ -677,7 +783,7 @@ impl ServingSim {
                     // An Idle step (e.g. intake paused with only queued
                     // work) advances nothing: fall through to the event
                     // jump below or the loop would spin at a frozen clock.
-                    !matches!(out.kind, crate::engine::StepKind::Idle)
+                    !matches!(out.kind, StepKind::Idle)
                 } else {
                     false
                 }
@@ -685,26 +791,8 @@ impl ServingSim {
                 false
             };
 
-            // 6) Idle: advance to the next event.
+            // 6) Idle: jump the clock to the next queued event.
             if !stepped {
-                let mut next = f64::INFINITY;
-                if let Some(r) = arrivals.front() {
-                    next = next.min(r.arrival);
-                }
-                if let Some(p) = &pending {
-                    next = next.min(p.started + p.outcome.ready_after);
-                    if let Some((_, b)) = p.outcome.downtime {
-                        next = next.min(p.started + b);
-                    }
-                }
-                if !inbox.is_empty() && engine.is_some() {
-                    // Inbox blocked by intake pause: wake at pause end.
-                    if let Some(p) = &pending {
-                        if let Some((_, b)) = p.outcome.intake_pause {
-                            next = next.min(p.started + b);
-                        }
-                    }
-                }
                 // All drained: stop regardless of the horizon (offline
                 // runs use an effectively infinite horizon).
                 if arrivals.is_empty()
@@ -717,14 +805,17 @@ impl ServingSim {
                 {
                     break;
                 }
-                next = next.min(next_window);
-                if next.is_infinite() {
+                let Some(next) = queue.peek_time() else {
                     break; // nothing left anywhere
-                }
+                };
                 clock.advance_to(next + 1e-9);
             }
         }
 
+        // Seal the digest with the full event trace (arrivals, commands,
+        // plan audits, pause edges, dispositions, finishes).
+        shash.fold_u64(trace.state_hash());
+        shash.fold_usize(recorder.count());
         Ok(SimOutput {
             recorder,
             scaling_events: events,
@@ -732,9 +823,9 @@ impl ServingSim {
             device_timeline,
             handoff,
             trace,
+            state_hash: shash.value(),
         })
     }
-
 }
 
 impl ServeEngine {

@@ -53,8 +53,11 @@ impl Default for BatcherConfig {
 pub enum NextWork {
     /// Prefill these newly admitted requests.
     Prefill(Vec<RequestId>),
-    /// Run one decode step over the running batch.
-    Decode(Vec<RequestId>),
+    /// Run one decode step over the running batch of `batch` sequences.
+    /// Carries only the batch size — the engine iterates the running set
+    /// in place, so the scheduling hot path stays allocation-free (the
+    /// old form cloned every running id into a fresh `Vec` per step).
+    Decode { batch: usize },
     /// Nothing runnable.
     Idle,
 }
@@ -129,9 +132,9 @@ impl Batcher {
             return NextWork::Prefill(ids);
         }
         if !self.running.is_empty() {
-            return NextWork::Decode(
-                self.running.iter().map(|r| r.id).collect(),
-            );
+            return NextWork::Decode {
+                batch: self.running.len(),
+            };
         }
         NextWork::Idle
     }
@@ -286,7 +289,7 @@ mod tests {
         assert_eq!(b.queue_len(), 1);
         // Next iteration decodes the running batch (no capacity to admit).
         match b.next_work(&mut kv) {
-            NextWork::Decode(ids) => assert_eq!(ids, vec![1, 2]),
+            NextWork::Decode { batch } => assert_eq!(batch, 2),
             w => panic!("expected decode, got {w:?}"),
         }
     }
@@ -312,7 +315,7 @@ mod tests {
         assert!(matches!(b.next_work(&mut kv), NextWork::Prefill(_)));
         b.enqueue(req(2, 50, 5));
         b.pause_intake();
-        assert!(matches!(b.next_work(&mut kv), NextWork::Decode(_)));
+        assert!(matches!(b.next_work(&mut kv), NextWork::Decode { .. }));
         b.resume_intake();
         assert!(matches!(b.next_work(&mut kv), NextWork::Prefill(_)));
     }
@@ -365,7 +368,10 @@ mod tests {
         assert_eq!(kv.used_blocks(), used);
         // Suspended sequences are invisible to scheduling...
         match b.next_work(&mut kv) {
-            NextWork::Decode(ids) => assert_eq!(ids, vec![1]),
+            NextWork::Decode { batch } => {
+                assert_eq!(batch, 1);
+                assert_eq!(b.running()[0].id, 1);
+            }
             w => panic!("{w:?}"),
         }
         // ...but count as live work.

@@ -83,7 +83,7 @@ impl ServeEngine {
                 let dt = self.backend.prefill(self.batcher.running_mut())?;
                 (StepKind::Prefill, dt)
             }
-            NextWork::Decode(_) => {
+            NextWork::Decode { .. } => {
                 let dt = self.backend.decode(self.batcher.running_mut())?;
                 (StepKind::Decode, dt)
             }
@@ -115,28 +115,29 @@ impl ServeEngine {
                     let _ = self.kv.append_token(*id);
                 }
             }
-            NextWork::Decode(ids) => {
-                let mut to_preempt = Vec::new();
-                for id in &ids {
-                    // Grow KV; preempt on pool exhaustion.
-                    if self.kv.append_token(*id).is_err() {
-                        to_preempt.push(*id);
-                    }
-                }
+            NextWork::Decode { .. } => {
+                // Single pass over the running batch: grow KV (preempt on
+                // pool exhaustion) and advance decode state in place. The
+                // preempt list stays empty — and unallocated — on the
+                // common path.
+                let mut to_preempt: Vec<u64> = Vec::new();
+                let mut emitted = 0u64;
                 for r in self.batcher.running_mut() {
+                    if self.kv.append_token(r.id).is_err() {
+                        to_preempt.push(r.id);
+                        continue;
+                    }
                     if r.state != RequestState::Decoding {
                         continue;
                     }
-                    if to_preempt.contains(&r.id) {
-                        continue;
-                    }
                     r.generated += 1;
-                    self.tokens_emitted += 1;
+                    emitted += 1;
                     if r.generated >= r.max_new_tokens {
                         r.state = RequestState::Finished;
                         r.finished_at = Some(now);
                     }
                 }
+                self.tokens_emitted += emitted;
                 preempted = self.preempt(&to_preempt);
             }
             NextWork::Idle => {}

@@ -148,6 +148,7 @@ struct CellResult {
     scale_latency: f64,
     handoff: KvHandoffStats,
     devices_final: usize,
+    state_hash: u64,
 }
 
 /// Run one (method, direction, fault) cell on the seeded workload.
@@ -237,7 +238,48 @@ fn run_cell(
             .last()
             .map(|&(_, d)| d)
             .unwrap_or(0),
+        state_hash: out.state_hash,
     })
+}
+
+/// One cell of [`conformance`]: the fields the determinism sweep
+/// (`rust/tests/determinism.rs`) compares across seeds and re-runs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConformanceCell {
+    pub method: &'static str,
+    pub direction: &'static str,
+    pub fault: &'static str,
+    pub arrived: usize,
+    pub completed: usize,
+    pub aborted: bool,
+    pub rolled_back: bool,
+    /// Invariant violations found by [`check_all`] (must be zero).
+    pub violations: usize,
+    /// The run's [`crate::coordinator::SimOutput::state_hash`] — equal
+    /// across same-seed re-runs.
+    pub state_hash: u64,
+}
+
+/// Run the fast chaos matrix end to end for one seed and return every
+/// cell's invariant/violation summary plus its run digest. Entry point
+/// for the seed-sweep determinism suite.
+pub fn conformance(seed: u64) -> Result<Vec<ConformanceCell>> {
+    let mut cells = Vec::new();
+    for (method, dir, fault) in matrix(true) {
+        let r = run_cell(method, dir, fault, seed)?;
+        cells.push(ConformanceCell {
+            method,
+            direction: dir.label(),
+            fault,
+            arrived: r.arrived,
+            completed: r.completed,
+            aborted: r.aborted,
+            rolled_back: r.rolled_back,
+            violations: r.violations.len(),
+            state_hash: r.state_hash,
+        });
+    }
+    Ok(cells)
 }
 
 /// Per-cell acceptance: invariants hold, injected-fault cells roll back

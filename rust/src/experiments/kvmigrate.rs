@@ -22,6 +22,7 @@
 
 use anyhow::Result;
 
+use crate::chaos::check_all;
 use crate::config::model::dsv2_lite;
 use crate::config::{ParallelConfig, SloConfig};
 use crate::coordinator::{ServingSim, Trigger};
@@ -55,15 +56,19 @@ fn capacity(n: usize) -> f64 {
     )
 }
 
-fn workload(rps: f64) -> Vec<Request> {
+fn workload_seeded(rps: f64, seed: u64, until: f64) -> Vec<Request> {
     let mut g = WorkloadGen::new(WorkloadSpec {
         prompt_len: PROMPT,
         decode_min: 150,
         decode_max: 250,
         profile: RateProfile::Fixed(rps),
-        seed: 23,
+        seed,
     });
-    g.arrivals_until(HORIZON)
+    g.arrivals_until(until)
+}
+
+fn workload(rps: f64) -> Vec<Request> {
+    workload_seeded(rps, 23, HORIZON)
 }
 
 fn method(policy: KvHandoffPolicy, cluster_n: usize) -> ElasticMoE {
@@ -125,6 +130,44 @@ pub fn run_one(
         ttft_p99_window,
         attainment: w.slo_attainment,
         completed: w.completed,
+    })
+}
+
+/// One seeded conformance run's summary: the live-handoff invariant
+/// checkers' verdict plus the run digest.
+pub struct ConformanceRun {
+    pub completed: usize,
+    pub handoff: KvHandoffStats,
+    /// Invariant violations found by [`check_all`] (must be zero).
+    pub violations: usize,
+    /// The run's [`crate::coordinator::SimOutput::state_hash`] — equal
+    /// across same-seed re-runs.
+    pub state_hash: u64,
+}
+
+/// Run the canonical migrating scale-up (DP4→DP6 at 55% of the source
+/// shape's capacity, command at t=40) for one seed, on a shortened
+/// horizon, and return the invariant/violation summary plus the run
+/// digest. Entry point for the seed-sweep determinism suite.
+pub fn conformance_run(seed: u64) -> Result<ConformanceRun> {
+    const CONFORMANCE_HORIZON: f64 = 100.0;
+    let rps = capacity(8) * 0.55;
+    let slo = SloConfig::new(8.0, 1.5);
+    let sim = ServingSim::new(cost(), slo);
+    let mut m = method(KvHandoffPolicy::Migrate, 12);
+    let out = sim.run(
+        &mut m,
+        &par(8)?,
+        workload_seeded(rps, seed, CONFORMANCE_HORIZON),
+        Trigger::Manual(vec![(COMMAND_AT, par(12)?)]),
+        CONFORMANCE_HORIZON,
+    )?;
+    let w = out.recorder.window(0.0, out.end_time + 1.0, &slo);
+    Ok(ConformanceRun {
+        completed: w.completed,
+        handoff: out.handoff,
+        violations: check_all(&out.trace).len(),
+        state_hash: out.state_hash,
     })
 }
 

@@ -6,8 +6,9 @@
 //!   [--method elastic|cold|extravagant|colocated] [--autoscale]` — run the
 //!   serving simulator and print SLO/throughput stats.
 //! - `bench [--json] [--fast]` — machine-readable perf trajectory
-//!   (steady-state tok/s, TTFT p99, scale-up latency per method);
-//!   `--json` writes `BENCH_serve.json` for CI to archive.
+//!   (steady-state tok/s, TTFT p99, scale-up latency per method, event
+//!   core vs windowed reference); `--json` writes `BENCH_serve.json` and
+//!   `BENCH_hotpath.json` for CI to archive.
 //! - `info` — models, artifact manifest, cluster defaults.
 
 use anyhow::{bail, Context, Result};
@@ -52,8 +53,10 @@ fn print_usage() {
          repro serve [options]              run the serving simulator\n\
          repro bench [--json] [--fast]      perf trajectory (steady tok/s,\n\
          \x20                                  TTFT p99, scale-up latency per\n\
-         \x20                                  method); --json writes\n\
-         \x20                                  BENCH_serve.json\n\
+         \x20                                  method, event core vs windowed\n\
+         \x20                                  reference); --json writes\n\
+         \x20                                  BENCH_serve.json and\n\
+         \x20                                  BENCH_hotpath.json\n\
          repro info                         model and artifact inventory\n\
          \n\
          exp options (parsed once, shared by every experiment):\n\
@@ -103,9 +106,10 @@ fn cmd_exp(args: &Args) -> Result<()> {
 
 /// `repro bench [--json] [--fast]`: the machine-readable perf
 /// trajectory future PRs regress against — steady-state decode
-/// throughput and TTFT p99 on a fixed serving run, plus scale-up
-/// latency per method on the canonical 4→6 transition. `--json` writes
-/// `BENCH_serve.json` (CI archives it as an artifact).
+/// throughput and TTFT p99 on a fixed serving run, scale-up latency per
+/// method on the canonical 4→6 transition, and the event core vs the
+/// retained windowed reference. `--json` writes `BENCH_serve.json` and
+/// `BENCH_hotpath.json` (CI archives both as artifacts).
 fn cmd_bench(args: &Args) -> Result<()> {
     use elastic_moe::experiments::common::{make_method, par, par_on};
     use elastic_moe::scaling::ScalingMethod as _;
@@ -165,6 +169,18 @@ fn cmd_bench(args: &Args) -> Result<()> {
         scale_rows.push((name, ev.ready_after));
     }
 
+    // Event core vs the retained windowed reference on the same sparse
+    // trace (events/sec; the event core must not lose).
+    let cores = elastic_moe::coordinator::compare_cores(fast)?;
+    println!(
+        "core loop: event {:.0} ev/s vs windowed {:.0} ev/s \
+         ({:.2}x, outputs match: {})",
+        cores.event_events_per_sec(),
+        cores.windowed_events_per_sec(),
+        cores.speedup(),
+        cores.outputs_match()
+    );
+
     if args.flag("json") {
         let doc = Json::obj(vec![
             ("model", Json::str(m.name)),
@@ -192,6 +208,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
         ]);
         std::fs::write("BENCH_serve.json", format!("{doc}\n"))?;
         println!("wrote BENCH_serve.json");
+        let hot = cores.to_json();
+        std::fs::write("BENCH_hotpath.json", format!("{hot}\n"))?;
+        println!("wrote BENCH_hotpath.json");
     }
     Ok(())
 }

@@ -44,6 +44,15 @@ impl MetricsRecorder {
         Self::default()
     }
 
+    /// A recorder pre-sized for `n` finished requests. The simulators know
+    /// their workload size up front, so sizing here keeps the record path
+    /// free of reallocation.
+    pub fn with_capacity(n: usize) -> Self {
+        MetricsRecorder {
+            finished: Vec::with_capacity(n),
+        }
+    }
+
     /// Record a finished (or dropped) request.
     pub fn record(&mut self, r: &Request) {
         let dropped =

@@ -1,5 +1,16 @@
-//! Discrete-event queue for the serving simulator (arrivals, step
-//! completions, scaling stage completions).
+//! Discrete-event queue: the spine of both simulators.
+//!
+//! [`crate::coordinator::ServingSim`] and [`crate::coordinator::FleetSim`]
+//! schedule every future state transition — arrivals, estimator window
+//! ticks, scaling stage boundaries (pause open/close, downtime end,
+//! switchover readiness), manual command times — as typed events on an
+//! [`EventQueue`], and advance the clock by popping the earliest one
+//! instead of polling fixed windows. Determinism contract: events pop in
+//! strict `(at, seq)` order, where `seq` is the insertion ordinal — ties
+//! in time are FIFO, so two runs that push the same events in the same
+//! order pop them in the same order (property-tested in
+//! `rust/tests/properties.rs`, hashed end-to-end by
+//! [`crate::sim::StateHash`]).
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -7,10 +18,12 @@ use std::collections::BinaryHeap;
 /// A scheduled event carrying a payload `T`.
 #[derive(Debug, Clone)]
 pub struct Event<T> {
+    /// Absolute simulated time the event is due.
     pub at: f64,
     /// Monotonic sequence number: ties in `at` are processed FIFO, keeping
     /// the simulation deterministic.
     pub seq: u64,
+    /// The caller's event payload.
     pub payload: T,
 }
 
@@ -24,10 +37,13 @@ impl<T> Eq for Event<T> {}
 impl<T> Ord for Event<T> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reverse for min-heap semantics on BinaryHeap (max-heap).
+        // `total_cmp` (not `partial_cmp`) so the order is total even for
+        // pathological floats: a NaN would otherwise compare Equal to
+        // everything and silently scramble the heap. NaN is additionally
+        // rejected at `push`, so it can never enter the queue.
         other
             .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.at)
             .then_with(|| other.seq.cmp(&self.seq))
     }
 }
@@ -54,28 +70,52 @@ impl<T> Default for EventQueue<T> {
 }
 
 impl<T> EventQueue<T> {
+    /// An empty queue.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// An empty queue pre-sized for `cap` events (the simulators seed one
+    /// event per arrival up front; pre-sizing avoids rehashing the heap's
+    /// backing buffer on the hot path).
+    pub fn with_capacity(cap: usize) -> Self {
+        EventQueue {
+            heap: BinaryHeap::with_capacity(cap),
+            next_seq: 0,
+        }
+    }
+
+    /// Schedule `payload` at absolute time `at`.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `at` is NaN: a NaN timestamp has no place in the time
+    /// order and would make pop order depend on heap internals — the
+    /// simulators' determinism guarantee (same seed ⇒ same
+    /// [`crate::sim::StateHash`]) forbids it.
     pub fn push(&mut self, at: f64, payload: T) {
+        assert!(!at.is_nan(), "event scheduled at NaN");
         let seq = self.next_seq;
         self.next_seq += 1;
         self.heap.push(Event { at, seq, payload });
     }
 
+    /// Remove and return the earliest event (FIFO among ties).
     pub fn pop(&mut self) -> Option<Event<T>> {
         self.heap.pop()
     }
 
+    /// The earliest scheduled time, without removing the event.
     pub fn peek_time(&self) -> Option<f64> {
         self.heap.peek().map(|e| e.at)
     }
 
+    /// Number of scheduled events.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// Whether no events are scheduled.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
@@ -107,5 +147,36 @@ mod tests {
         q.push(3.0, 1u32);
         assert_eq!(q.peek_time(), Some(3.0));
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn orders_infinities_and_zeroes_totally() {
+        let mut q = EventQueue::new();
+        q.push(f64::INFINITY, "inf");
+        q.push(0.0, "zero");
+        q.push(-0.0, "negzero");
+        q.push(f64::NEG_INFINITY, "neginf");
+        assert_eq!(q.pop().unwrap().payload, "neginf");
+        // total_cmp orders -0.0 before 0.0; both before any positive.
+        assert_eq!(q.pop().unwrap().payload, "negzero");
+        assert_eq!(q.pop().unwrap().payload, "zero");
+        assert_eq!(q.pop().unwrap().payload, "inf");
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN")]
+    fn rejects_nan_timestamps() {
+        let mut q = EventQueue::new();
+        q.push(f64::NAN, ());
+    }
+
+    #[test]
+    fn with_capacity_behaves_like_new() {
+        let mut q = EventQueue::with_capacity(8);
+        q.push(1.0, 1u32);
+        q.push(0.5, 2u32);
+        assert_eq!(q.pop().unwrap().payload, 2);
+        assert_eq!(q.pop().unwrap().payload, 1);
+        assert!(q.is_empty());
     }
 }

@@ -1,0 +1,157 @@
+//! Incremental state hashing for determinism checks.
+//!
+//! [`StateHash`] is a 64-bit FNV-1a accumulator folded over every state
+//! transition a simulator makes: engine step outcomes, queue occupancy,
+//! KV block ownership, tier residency shifts, scaling plan/undo entries,
+//! and the full chaos [`crate::chaos::Trace`]. Two runs from the same
+//! seed must produce the same final digest — exposed as
+//! `SimOutput::state_hash` / `FleetOutput::state_hash` — so determinism
+//! is a testable property (`rust/tests/determinism.rs`), and any
+//! divergence bisects to the first transition whose fold differs.
+//!
+//! FNV-1a was chosen over a cryptographic hash because the digest guards
+//! against *accidental* nondeterminism (HashMap iteration order, float
+//! environment differences, reordered events), not adversaries, and the
+//! crate takes no new dependencies. Floats are folded via
+//! [`f64::to_bits`], so the digest is exactly as strict as bit equality.
+
+/// 64-bit FNV-1a offset basis.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// 64-bit FNV-1a prime.
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incrementally-folded FNV-1a digest over a simulation's state
+/// transitions.
+///
+/// ```
+/// use elastic_moe::sim::StateHash;
+/// let mut a = StateHash::new();
+/// let mut b = StateHash::new();
+/// for h in [&mut a, &mut b] {
+///     h.fold_u64(7);
+///     h.fold_f64(0.25);
+///     h.fold_bytes(b"switchover");
+/// }
+/// assert_eq!(a.value(), b.value());
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StateHash {
+    state: u64,
+}
+
+impl Default for StateHash {
+    fn default() -> Self {
+        StateHash { state: FNV_OFFSET }
+    }
+}
+
+impl StateHash {
+    /// A fresh digest at the FNV offset basis.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold raw bytes.
+    pub fn fold_bytes(&mut self, bytes: &[u8]) {
+        let mut h = self.state;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.state = h;
+    }
+
+    /// Fold a `u64` (little-endian bytes).
+    pub fn fold_u64(&mut self, v: u64) {
+        self.fold_bytes(&v.to_le_bytes());
+    }
+
+    /// Fold a `usize` (widened to `u64` so the digest is
+    /// pointer-width-independent).
+    pub fn fold_usize(&mut self, v: usize) {
+        self.fold_u64(v as u64);
+    }
+
+    /// Fold an `f64` by its IEEE-754 bit pattern. Bit-exact: `0.1 + 0.2`
+    /// and `0.3` fold differently, which is the point — the digest
+    /// certifies bit-identical trajectories, not approximate ones.
+    pub fn fold_f64(&mut self, v: f64) {
+        self.fold_u64(v.to_bits());
+    }
+
+    /// Fold a bool as a single byte.
+    pub fn fold_bool(&mut self, v: bool) {
+        self.fold_bytes(&[v as u8]);
+    }
+
+    /// Fold a string's UTF-8 bytes, length-prefixed so `("ab","c")` and
+    /// `("a","bc")` fold differently.
+    pub fn fold_str(&mut self, s: &str) {
+        self.fold_usize(s.len());
+        self.fold_bytes(s.as_bytes());
+    }
+
+    /// The current digest.
+    pub fn value(&self) -> u64 {
+        self.state
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_reference_fnv1a_vectors() {
+        // Classic FNV-1a 64 test vectors.
+        let mut h = StateHash::new();
+        assert_eq!(h.value(), 0xcbf29ce484222325); // empty input
+        h.fold_bytes(b"a");
+        assert_eq!(h.value(), 0xaf63dc4c8601ec8c);
+        let mut h2 = StateHash::new();
+        h2.fold_bytes(b"foobar");
+        assert_eq!(h2.value(), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn same_folds_same_digest() {
+        let mut a = StateHash::new();
+        let mut b = StateHash::new();
+        for h in [&mut a, &mut b] {
+            h.fold_u64(42);
+            h.fold_f64(1.5);
+            h.fold_bool(true);
+            h.fold_str("pause");
+            h.fold_usize(9);
+        }
+        assert_eq!(a.value(), b.value());
+    }
+
+    #[test]
+    fn order_and_content_sensitive() {
+        let mut a = StateHash::new();
+        a.fold_u64(1);
+        a.fold_u64(2);
+        let mut b = StateHash::new();
+        b.fold_u64(2);
+        b.fold_u64(1);
+        assert_ne!(a.value(), b.value());
+
+        let mut c = StateHash::new();
+        c.fold_f64(0.1 + 0.2);
+        let mut d = StateHash::new();
+        d.fold_f64(0.3);
+        assert_ne!(c.value(), d.value(), "digest must be bit-exact");
+    }
+
+    #[test]
+    fn length_prefix_disambiguates_strings() {
+        let mut a = StateHash::new();
+        a.fold_str("ab");
+        a.fold_str("c");
+        let mut b = StateHash::new();
+        b.fold_str("a");
+        b.fold_str("bc");
+        assert_ne!(a.value(), b.value());
+    }
+}

@@ -5,6 +5,8 @@
 
 pub mod clock;
 pub mod events;
+pub mod hash;
 
 pub use clock::{Clock, RealClock, SimClock};
 pub use events::{Event, EventQueue};
+pub use hash::StateHash;

@@ -1,0 +1,283 @@
+//! Seed-sweep determinism and golden-trace regression suite.
+//!
+//! Two contracts are pinned here, both riding on the event-driven
+//! simulator core (`docs/architecture/07-event-core.md`):
+//!
+//! 1. **Determinism** — same seed ⇒ same run, bit for bit. Every
+//!    conformance scenario (the chaos fault matrix and the live KV
+//!    handoff) is run twice per seed across a sweep of seeds; the two
+//!    runs must agree on `state_hash` (the FNV-1a digest folded over
+//!    every state transition) and the trace invariant checkers must find
+//!    zero violations at every seed, not just the experiments' default.
+//! 2. **Golden trace** — the [`Trace`] JSON rendering is byte-stable. A
+//!    hand-built canonical trace covering every [`TraceEvent`] variant is
+//!    compared byte-for-byte against `tests/golden/trace.json`. When an
+//!    intentional format change lands, regenerate the golden file with
+//!    `GOLDEN_BLESS=1 cargo test --test determinism golden` and commit
+//!    the diff.
+//!
+//! The seed sweeps are split low/high so `cargo test` runs them on two
+//! threads.
+
+use elastic_moe::chaos::{FaultKind, PlanAudit, Trace, TraceEvent};
+use elastic_moe::experiments::{chaos, kvmigrate};
+use elastic_moe::tier::TierLevel;
+
+/// Run the chaos conformance matrix twice per seed: zero invariant
+/// violations everywhere, and the re-run reproduces every cell exactly —
+/// `state_hash` first (the sensitive digest), then the full summary.
+fn chaos_sweep(seeds: &[u64]) {
+    for &seed in seeds {
+        let a = chaos::conformance(seed).unwrap();
+        let b = chaos::conformance(seed).unwrap();
+        assert!(!a.is_empty(), "conformance matrix must be non-empty");
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                x.violations, 0,
+                "seed {seed}: cell [{} × {} × {}] violated invariants \
+                 (replay with `repro exp chaos --seed {seed}`)",
+                x.method, x.direction, x.fault
+            );
+            assert_eq!(
+                x.state_hash, y.state_hash,
+                "seed {seed}: cell [{} × {} × {}] is nondeterministic — \
+                 same-seed re-run changed the state hash",
+                x.method, x.direction, x.fault
+            );
+            assert_eq!(x, y, "seed {seed}: re-run diverged beyond the hash");
+        }
+    }
+}
+
+/// Run the live KV-handoff conformance scenario (scale-up under the
+/// migrating policy) twice per seed: deterministic digest, zero
+/// violations, and the §4.4 zero-recompute claim at every seed.
+fn kvmigrate_sweep(seeds: &[u64]) {
+    for &seed in seeds {
+        let a = kvmigrate::conformance_run(seed).unwrap();
+        let b = kvmigrate::conformance_run(seed).unwrap();
+        assert_eq!(
+            a.violations, 0,
+            "seed {seed}: live-handoff run violated trace invariants \
+             (replay with `repro exp kvmigrate --seed {seed}`)"
+        );
+        assert_eq!(
+            a.state_hash, b.state_hash,
+            "seed {seed}: same-seed re-run changed the state hash"
+        );
+        assert_eq!(
+            a.completed, b.completed,
+            "seed {seed}: completion count diverged across re-runs"
+        );
+        assert!(a.completed > 0, "seed {seed}: nothing completed");
+        // Scale-up under the migrating handoff is zero-recompute at
+        // *every* seed: all device groups survive, so adoption is pure
+        // remap.
+        assert_eq!(a.handoff.recomputed, 0, "seed {seed}: restarts");
+        assert_eq!(
+            a.handoff.recompute_tokens, 0,
+            "seed {seed}: recompute bill"
+        );
+    }
+}
+
+#[test]
+fn chaos_conformance_is_deterministic_across_seeds_low() {
+    chaos_sweep(&[5, 7, 11, 23]);
+}
+
+#[test]
+fn chaos_conformance_is_deterministic_across_seeds_high() {
+    chaos_sweep(&[42, 101, 137, 9001]);
+}
+
+#[test]
+fn kvmigrate_conformance_is_deterministic_across_seeds_low() {
+    kvmigrate_sweep(&[5, 7, 11, 23]);
+}
+
+#[test]
+fn kvmigrate_conformance_is_deterministic_across_seeds_high() {
+    kvmigrate_sweep(&[42, 101, 137, 9001]);
+}
+
+/// The canonical golden trace: one small, hand-built run exercising every
+/// [`TraceEvent`] variant — an aborted-and-rolled-back first event, a
+/// completed second event with one remap adoption and one restart, a tier
+/// shift with its audit point, and two finishes. Timestamps are halves so
+/// the JSON number rendering is trivially stable.
+fn canonical_trace() -> Trace {
+    let mut tr = Trace::new();
+    tr.push(TraceEvent::Arrival {
+        t: 0.5,
+        id: 1,
+        tokens: 5000,
+    });
+    tr.push(TraceEvent::Arrival {
+        t: 1.0,
+        id: 2,
+        tokens: 4000,
+    });
+    tr.push(TraceEvent::ScaleCommand {
+        t: 2.0,
+        event: 0,
+        from_devices: 8,
+        to_devices: 12,
+        declared_pause: Some((2.5, 3.0)),
+    });
+    tr.push(TraceEvent::PlanAudited {
+        t: 2.0,
+        event: 0,
+        audit: PlanAudit {
+            snapshot_blocks: 10,
+            kv_remapped_blocks: 6,
+            kv_copied_blocks: 3,
+            kv_freed_blocks: 1,
+            kv_copied_bytes: 4096,
+            migration_budget_bytes: 65536,
+            expert_migration_bytes: 32768,
+        },
+    });
+    tr.push(TraceEvent::IntakePaused { t: 2.5, event: 0 });
+    tr.push(TraceEvent::Suspended {
+        t: 2.5,
+        event: 0,
+        id: 1,
+    });
+    tr.push(TraceEvent::FaultFired {
+        t: 2.5,
+        event: 0,
+        fault: FaultKind::P2pLinkFail { after_legs: 2 },
+    });
+    tr.push(TraceEvent::Resumed {
+        t: 3.0,
+        event: 0,
+        id: 1,
+    });
+    tr.push(TraceEvent::ScaleAborted {
+        t: 3.0,
+        event: 0,
+        rolled_back: true,
+        reason: "p2p link failed on leg 2".to_string(),
+    });
+    tr.push(TraceEvent::IntakeResumed { t: 3.0, event: 0 });
+    tr.push(TraceEvent::ScaleCommand {
+        t: 4.0,
+        event: 1,
+        from_devices: 8,
+        to_devices: 12,
+        declared_pause: None,
+    });
+    tr.push(TraceEvent::Suspended {
+        t: 4.5,
+        event: 1,
+        id: 2,
+    });
+    tr.push(TraceEvent::Adopted {
+        t: 5.0,
+        event: 1,
+        id: 1,
+        remap: true,
+    });
+    tr.push(TraceEvent::Restarted {
+        t: 5.0,
+        event: 1,
+        id: 2,
+    });
+    tr.push(TraceEvent::ScaleCompleted {
+        t: 5.5,
+        event: 1,
+        devices: 12,
+    });
+    tr.push(TraceEvent::TierShift {
+        t: 6.0,
+        replica: 0,
+        tag: "layer0.experts".to_string(),
+        bytes: 1048576,
+        from: TierLevel::Hbm,
+        to: TierLevel::HostDram,
+    });
+    tr.push(TraceEvent::TierAudit {
+        t: 6.5,
+        replica: 0,
+        dram_bytes: 1048576,
+    });
+    tr.push(TraceEvent::Finished {
+        t: 7.0,
+        id: 1,
+        tokens: 200,
+    });
+    tr.push(TraceEvent::Finished {
+        t: 7.5,
+        id: 2,
+        tokens: 150,
+    });
+    tr
+}
+
+/// Byte-for-byte regression against the committed golden file. Bless a
+/// deliberate format change with
+/// `GOLDEN_BLESS=1 cargo test --test determinism golden`.
+#[test]
+fn golden_trace_file_is_byte_stable() {
+    let rendered = format!("{}\n", canonical_trace().to_json());
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden/trace.json");
+    if std::env::var_os("GOLDEN_BLESS").is_some() {
+        std::fs::write(&path, rendered.as_bytes()).unwrap();
+        return;
+    }
+    let golden = std::fs::read(&path).unwrap_or_else(|e| {
+        panic!(
+            "missing golden file {}: {e} — regenerate with \
+             `GOLDEN_BLESS=1 cargo test --test determinism golden`",
+            path.display()
+        )
+    });
+    assert!(
+        rendered.as_bytes() == golden.as_slice(),
+        "golden trace drifted from {}; if the serialization change is \
+         intentional, regenerate with `GOLDEN_BLESS=1 cargo test --test \
+         determinism golden` and commit the diff",
+        path.display()
+    );
+}
+
+/// The golden rendering parses back, carries one object per event, covers
+/// the full event taxonomy, and embeds the trace's own digest as the hex
+/// `state_hash` field.
+#[test]
+fn golden_trace_roundtrips_and_embeds_its_digest() {
+    let tr = canonical_trace();
+    let text = tr.to_json().to_string();
+    let parsed = elastic_moe::util::json::parse(&text).unwrap();
+    let events = parsed.get("events").as_arr().unwrap();
+    assert_eq!(events.len(), tr.len());
+    assert_eq!(
+        parsed.get("state_hash").as_str().unwrap(),
+        format!("{:016x}", tr.state_hash())
+    );
+    for kind in [
+        "arrival",
+        "scale_command",
+        "plan_audited",
+        "fault_fired",
+        "intake_paused",
+        "intake_resumed",
+        "suspended",
+        "resumed",
+        "adopted",
+        "restarted",
+        "scale_completed",
+        "scale_aborted",
+        "finished",
+        "tier_shift",
+        "tier_audit",
+    ] {
+        assert!(
+            events.iter().any(|e| e.get("ev").as_str() == Some(kind)),
+            "canonical trace must cover TraceEvent kind '{kind}'"
+        );
+    }
+}

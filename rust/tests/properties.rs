@@ -599,6 +599,57 @@ fn prop_paged_kv_from_bytes_is_usable_or_errors() {
     });
 }
 
+/// The event queue is the simulators' determinism spine: random pushes —
+/// with heavy timestamp ties and the full non-NaN float range including
+/// infinities and signed zero — pop in strict `(at, seq)` order, i.e.
+/// sorted by `total_cmp` on time with FIFO insertion order breaking
+/// ties, and nothing is lost or duplicated.
+#[test]
+fn prop_event_queue_pops_in_time_then_insertion_order() {
+    use elastic_moe::sim::EventQueue;
+
+    check("event queue ordering", 200, |rng: &mut Rng| {
+        let mut q = EventQueue::new();
+        let n = rng.range(1, 200) as usize;
+        for i in 0..n {
+            // Coarse grid forces plenty of exact ties; occasionally throw
+            // in the pathological floats the ordering must still total.
+            let mut at = rng.below(16) as f64 * 0.25;
+            if rng.bool(0.05) {
+                at = f64::INFINITY;
+            }
+            if rng.bool(0.1) {
+                at = -at;
+            }
+            q.push(at, i);
+        }
+        assert_eq!(q.len(), n);
+        let mut prev: Option<(f64, usize)> = None;
+        let mut popped = 0usize;
+        while let Some(ev) = q.pop() {
+            if let Some((pt, pi)) = prev {
+                let ord = pt.total_cmp(&ev.at);
+                assert!(
+                    ord.is_le(),
+                    "time went backwards: {pt} popped before {}",
+                    ev.at
+                );
+                if ord.is_eq() {
+                    assert!(
+                        pi < ev.payload,
+                        "tie at t={pt} must pop FIFO: {pi} then {}",
+                        ev.payload
+                    );
+                }
+            }
+            prev = Some((ev.at, ev.payload));
+            popped += 1;
+        }
+        assert_eq!(popped, n, "events lost or duplicated");
+        assert!(q.is_empty());
+    });
+}
+
 /// Model-based LRU conformance: against a naive Vec model, the standby
 /// cache's capacity holds (absent pins), hits refresh recency, pinned
 /// entries are never evicted, and eviction order matches the model.
