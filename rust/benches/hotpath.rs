@@ -131,6 +131,22 @@ fn bench_core_comparison() {
     );
 }
 
+fn bench_telemetry_overhead() {
+    // Telemetry must stay within the <5% events/sec budget
+    // (docs/architecture/08-observability.md): identical runs with the
+    // registry off and on — the event sets match, so the wall ratio is
+    // the events/sec ratio.
+    let o = elastic_moe::coordinator::telemetry_overhead(true).unwrap();
+    println!("telemetry overhead (same run, registry off vs on):");
+    println!(
+        "  off {:.3}s  on {:.3}s  -> {:+.2}% wall, neutral: {}",
+        o.off_wall_s,
+        o.on_wall_s,
+        100.0 * o.overhead_frac(),
+        o.neutral()
+    );
+}
+
 fn bench_pjrt_decode(b: &Bench) {
     use elastic_moe::runtime::{Manifest, Pjrt};
     let dir = std::path::Path::new("artifacts");
@@ -208,6 +224,7 @@ fn main() {
     bench_vpage_remap(&b);
     bench_event_queue(&b);
     bench_core_comparison();
+    bench_telemetry_overhead();
     let b_slow = Bench::from_env(2, 10);
     bench_pjrt_decode(&b_slow);
 }

@@ -35,6 +35,8 @@ use crate::config::{ParallelConfig, SloConfig};
 use crate::engine::{CostModel, ServeEngine, StepKind};
 use crate::kvmigrate::{KvHandoffStats, KvSnapshot};
 use crate::metrics::MetricsRecorder;
+use crate::obs::spans::CAT_LIFECYCLE;
+use crate::obs::Telemetry;
 use crate::scaling::{ScalingMethod, ScalingOutcome};
 use crate::sim::{Clock, EventQueue, SimClock, StateHash};
 use crate::workload::Request;
@@ -43,7 +45,7 @@ use super::estimator::ScaleDecision;
 use super::policy::{FleetAction, FleetPolicy, ReplicaLoad};
 use super::serving::{
     begin_transition_on, build_engine, complete_pending, log_command,
-    sync_pause_window, PendingScale,
+    replica_gauges, sync_pause_window, PendingScale,
 };
 
 /// Typed event on the fleet simulator's queue.
@@ -199,6 +201,11 @@ pub struct FleetOutput {
     /// trace). Two runs with the same seed and configuration must produce
     /// the same digest — `rust/tests/determinism.rs` enforces this.
     pub state_hash: u64,
+    /// Telemetry registry for the run (time series sampled at every
+    /// policy tick, scaling-event span timelines, counters/histograms).
+    /// `Some` only when [`FleetSim::obs`] was set; never folded into
+    /// `state_hash`.
+    pub telemetry: Option<Telemetry>,
 }
 
 impl FleetOutput {
@@ -236,6 +243,12 @@ pub struct FleetSim {
     /// records drain into the run trace at each scale command. `None` =
     /// no fault injection.
     pub injector: Option<Rc<RefCell<FaultInjector>>>,
+    /// Collect telemetry (per-replica gauge series at every policy tick,
+    /// scaling-event spans, counters/histograms) into
+    /// [`FleetOutput::telemetry`]. Determinism-neutral: sampling
+    /// piggybacks on existing `PolicyTick` events and never folds into
+    /// the state hash.
+    pub obs: bool,
 }
 
 impl FleetSim {
@@ -248,6 +261,7 @@ impl FleetSim {
             max_batch: 256,
             router,
             injector: None,
+            obs: false,
         }
     }
 
@@ -334,6 +348,11 @@ impl FleetSim {
         let mut rr = 0usize;
         let hard_stop = horizon * 2.0 + 600.0;
         let mut shash = StateHash::new();
+        let mut tel: Option<Telemetry> = if self.obs {
+            Some(Telemetry::new())
+        } else {
+            None
+        };
 
         // Seed the event spine: one `Route` marker per arrival plus the
         // first self-rescheduling `PolicyTick`. Route markers are seeded
@@ -386,6 +405,7 @@ impl FleetSim {
                     &mut handoff,
                     &mut trace,
                     &mut shash,
+                    tel.as_mut(),
                 )?;
             }
             for rep in replicas.iter_mut() {
@@ -429,6 +449,44 @@ impl FleetSim {
                 .unwrap_or(true)
             {
                 device_timeline.push((t_end, serving_devices));
+            }
+
+            // Telemetry snapshot at the tick boundary: per-replica gauge
+            // series plus fleet-wide pool occupancy. Read-only over state
+            // the tick already computed — nothing here feeds `shash`.
+            if let Some(t) = tel.as_mut() {
+                for rep in replicas.iter() {
+                    if rep.retired {
+                        continue;
+                    }
+                    let s = replica_gauges(
+                        rep.engine.as_ref(),
+                        rep.method.as_ref(),
+                        rep.devices_reserved(),
+                        rep.inbox.len(),
+                        rep.parked,
+                    );
+                    t.sample_replica(t_end, rep.id, &s);
+                }
+                let live = replicas.iter().filter(|r| !r.retired).count();
+                let reserved: usize =
+                    replicas.iter().map(|r| r.devices_reserved()).sum();
+                t.record_series("fleet/replicas_live", t_end, live as f64);
+                t.record_series(
+                    "fleet/devices_serving",
+                    t_end,
+                    serving_devices as f64,
+                );
+                t.record_series(
+                    "pool/devices_reserved",
+                    t_end,
+                    reserved as f64,
+                );
+                t.record_series(
+                    "pool/devices_free",
+                    t_end,
+                    limits.pool_devices.saturating_sub(reserved) as f64,
+                );
             }
 
             // 5) Stop once the trace is fully served.
@@ -533,6 +591,8 @@ impl FleetSim {
                     event_seq += 1;
                     log_command(
                         &mut trace,
+                        tel.as_mut(),
+                        replica,
                         self.injector.as_ref(),
                         t_end,
                         ev,
@@ -569,6 +629,10 @@ impl FleetSim {
                         // replica already left the rotation.
                         rep.engine = None;
                         rep.parked = true;
+                        if let Some(t) = tel.as_mut() {
+                            t.inc("parks", 1);
+                            t.spans.begin(replica, "parked", t_end);
+                        }
                         actions.push((t_end, action));
                     } else {
                         // Vetoed (in-flight work raced the policy's
@@ -607,6 +671,18 @@ impl FleetSim {
                         ));
                         rep.ready_at = t_end + boot_t;
                         unpark_boots.push((t_end, boot_t));
+                        if let Some(t) = tel.as_mut() {
+                            t.inc("unparks", 1);
+                            t.spans.end(replica, "parked", t_end);
+                            t.spans.span(
+                                replica,
+                                None,
+                                "unpark_boot",
+                                CAT_LIFECYCLE,
+                                t_end,
+                                t_end + boot_t,
+                            );
+                        }
                         actions.push((t_end, action));
                     } else {
                         // Vetoed (pool exhausted or nothing parked):
@@ -647,10 +723,25 @@ impl FleetSim {
                         batch_factor,
                     });
                     policy.note_event(id, t_end);
+                    if let Some(t) = tel.as_mut() {
+                        t.inc("cold_boots", 1);
+                        t.spans.span(
+                            id,
+                            None,
+                            "cold_boot",
+                            CAT_LIFECYCLE,
+                            t_end,
+                            t_end + boot_t,
+                        );
+                    }
                     actions.push((t_end, action));
                 }
                 FleetAction::DrainReplica { replica } => {
                     replicas[replica].draining = true;
+                    if let Some(t) = tel.as_mut() {
+                        t.inc("drains", 1);
+                        t.spans.instant(replica, "drain", t_end);
+                    }
                     actions.push((t_end, action));
                 }
                 FleetAction::Rebalance { replica } => {
@@ -666,6 +757,8 @@ impl FleetSim {
                         event_seq += 1;
                         log_command(
                             &mut trace,
+                            tel.as_mut(),
+                            replica,
                             self.injector.as_ref(),
                             t_end,
                             ev,
@@ -697,6 +790,15 @@ impl FleetSim {
         let truncated = arrivals.len().saturating_sub(recorder.count());
         shash.fold_u64(trace.state_hash());
         shash.fold_usize(recorder.count());
+        if let Some(t) = tel.as_mut() {
+            t.spans.finish(end_time);
+            t.set_gauge("end_time_s", end_time);
+            t.set_gauge("requests_completed", recorder.count() as f64);
+            t.set_gauge(
+                "replicas_final",
+                replicas.iter().filter(|r| !r.retired).count() as f64,
+            );
+        }
         Ok(FleetOutput {
             recorder,
             actions,
@@ -710,6 +812,7 @@ impl FleetSim {
             handoff,
             trace,
             state_hash: shash.value(),
+            telemetry: tel,
         })
     }
 
@@ -787,6 +890,7 @@ impl FleetSim {
         handoff: &mut KvHandoffStats,
         trace: &mut Trace,
         shash: &mut StateHash,
+        mut tel: Option<&mut Telemetry>,
     ) -> Result<()> {
         if rep.retired || rep.parked {
             // Parked replicas hold no devices and step nothing; their
@@ -811,6 +915,13 @@ impl FleetSim {
             if let Some(p) = &rep.pending {
                 if now >= p.started + p.outcome.ready_after {
                     let p = rep.pending.take().unwrap();
+                    if let Some(t) = tel.as_deref_mut() {
+                        if p.outcome.aborted.is_some() {
+                            t.inc("scale_rollbacks", 1);
+                        } else {
+                            t.inc("scale_completions", 1);
+                        }
+                    }
                     if let Some(new_parallel) = complete_pending(
                         &self.cost,
                         self.hbm_per_device,
@@ -880,6 +991,16 @@ impl FleetSim {
                             id: r.id,
                             tokens: r.generated,
                         });
+                        if let Some(t) = tel.as_deref_mut() {
+                            t.inc("requests_finished", 1);
+                            t.inc("tokens_generated", r.generated as u64);
+                            if let Some(v) = r.ttft() {
+                                t.observe("ttft_s", v);
+                            }
+                            if let Some(v) = r.tpot() {
+                                t.observe("tpot_s", v);
+                            }
+                        }
                         recorder.record(&r);
                     }
                     !matches!(out.kind, StepKind::Idle)
@@ -1041,6 +1162,64 @@ mod tests {
         assert_eq!(out.recorder.count(), n);
         let att = out.recorder.attainment_by_arrival(0.0, 90.0, &sim.slo);
         assert!(att > 0.9, "steady fleet attainment {att}");
+    }
+
+    /// Telemetry is determinism-neutral at fleet scope: enabling it
+    /// leaves the state hash bit-identical, and the registry carries
+    /// per-replica gauge series, pool series, and span timelines for the
+    /// burst's vertical scaling events.
+    #[test]
+    fn fleet_telemetry_is_determinism_neutral() {
+        let horizon = 240.0;
+        let run = |obs: bool| {
+            let mut sim = fleet(Router::JoinShortestQueue);
+            sim.obs = obs;
+            let mut policy = fast_policy(PolicyMode::Hybrid, 8);
+            sim.run(
+                &mut policy,
+                &mut elastic_factory(8),
+                2,
+                burst_trace(horizon),
+                horizon,
+            )
+            .unwrap()
+        };
+        let off = run(false);
+        let on = run(true);
+        assert_eq!(
+            off.state_hash, on.state_hash,
+            "telemetry must not perturb the simulation"
+        );
+        assert!(off.telemetry.is_none());
+        let tel = on.telemetry.unwrap();
+        assert!(tel.counter("scale_commands") >= 1);
+        assert_eq!(
+            tel.counter("scale_completions"),
+            tel.counter("scale_commands"),
+            "every commanded event completes on this trace"
+        );
+        assert_eq!(
+            tel.counter("requests_finished"),
+            on.recorder.count() as u64
+        );
+        assert!(tel.histogram("ttft_s").map(|h| h.count()).unwrap_or(0) > 0);
+        for r in 0..2 {
+            for g in ["queue_depth", "hbm_used_bytes", "devices_active"] {
+                let name = format!("replica{r}/{g}");
+                assert!(
+                    tel.series(&name).is_some(),
+                    "missing series {name}"
+                );
+            }
+        }
+        assert!(tel.series("fleet/devices_serving").is_some());
+        assert!(tel.series("pool/devices_free").is_some());
+        // The vertical events carry phase timelines.
+        assert!(tel
+            .spans
+            .spans()
+            .iter()
+            .any(|s| s.name.contains("intake_pause")));
     }
 
     /// Acceptance: under a flash crowd (Burst x10), the hybrid policy with

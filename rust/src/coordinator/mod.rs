@@ -14,8 +14,10 @@ pub mod serving;
 
 pub use estimator::{LoadEstimator, ScaleDecision};
 pub use fleet::{FleetOutput, FleetSim, Router};
-pub use reference::{compare_cores, CoreComparison};
 pub use policy::{
     FleetAction, FleetLimits, FleetPolicy, PolicyMode, ReplicaLoad,
+};
+pub use reference::{
+    compare_cores, telemetry_overhead, CoreComparison, TelemetryOverhead,
 };
 pub use serving::{ServingSim, SimOutput, Trigger};

@@ -17,21 +17,32 @@
 //! The reference intentionally stays serve-only (no scaling): the point
 //! of comparison is the core loop discipline, and keeping a second full
 //! scaling choreography alive would let the two drift apart.
+//!
+//! The module also hosts [`telemetry_overhead`]: the same timed-pair
+//! shape applied to the full [`ServingSim`] with the telemetry registry
+//! off vs on, so `BENCH_hotpath.json` tracks the observability tax and
+//! CI can hold it under the 5% events/sec budget.
 
+use std::cell::RefCell;
 use std::collections::VecDeque;
+use std::rc::Rc;
 
 use anyhow::Result;
 
 use crate::config::model::dsv2_lite;
-use crate::config::ParallelConfig;
-use crate::device::Timings;
+use crate::config::{ParallelConfig, SloConfig};
+use crate::device::{Cluster, Timings};
 use crate::engine::{CostModel, StepKind};
+use crate::hmm::control::{HmmControl, HmmOptions};
+use crate::imm::manager::{ImmOptions, InstanceManager};
+use crate::scaling::ElasticMoE;
 use crate::sim::{Clock, EventQueue, SimClock};
 use crate::util::bench::time_fn;
 use crate::util::json::Json;
 use crate::workload::{RateProfile, Request, WorkloadGen, WorkloadSpec};
 
 use super::serving::build_engine;
+use super::{ServingSim, SimOutput, Trigger};
 
 /// What one core did with a trace.
 #[derive(Debug, Clone, Copy)]
@@ -265,6 +276,100 @@ pub fn compare_cores(fast: bool) -> Result<CoreComparison> {
     })
 }
 
+/// Timed cost of the telemetry subsystem on the full serving simulator:
+/// the identical seed/trace/scale-command run with the registry off and
+/// on. The two runs must produce bit-identical state hashes — the
+/// determinism-neutrality contract of [`crate::obs`].
+#[derive(Debug, Clone, Copy)]
+pub struct TelemetryOverhead {
+    /// Requests completed (identical in both runs).
+    pub completed: usize,
+    pub off_wall_s: f64,
+    pub on_wall_s: f64,
+    /// State hashes of the two runs — equal iff telemetry is neutral.
+    pub off_hash: u64,
+    pub on_hash: u64,
+}
+
+impl TelemetryOverhead {
+    /// Fractional wall-time cost of enabling telemetry (0.03 = 3%).
+    /// Negative values (noise on a fast run) mean "free".
+    pub fn overhead_frac(&self) -> f64 {
+        (self.on_wall_s - self.off_wall_s) / self.off_wall_s.max(1e-12)
+    }
+
+    /// The determinism-neutrality contract held.
+    pub fn neutral(&self) -> bool {
+        self.off_hash == self.on_hash
+    }
+
+    /// The `telemetry_overhead` section of `BENCH_hotpath.json`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("completed", Json::num(self.completed as f64)),
+            ("neutral", Json::Bool(self.neutral())),
+            ("off_wall_s", Json::num(self.off_wall_s)),
+            ("on_wall_s", Json::num(self.on_wall_s)),
+            ("overhead_frac", Json::num(self.overhead_frac())),
+        ])
+    }
+}
+
+/// One canonical ServingSim run for the overhead pair: ElasticMoE on a
+/// six-device cluster, one vertical 4→6 event a quarter into the trace.
+fn overhead_run(obs: bool, horizon: f64) -> Result<SimOutput> {
+    let mut sim = ServingSim::new(
+        CostModel::new(dsv2_lite(), Timings::cloudmatrix()),
+        SloConfig::new(5.0, 1.5),
+    );
+    sim.obs = obs;
+    let cluster = Rc::new(RefCell::new(Cluster::cloudmatrix(6)));
+    let mut m = ElasticMoE::new(
+        HmmControl::new(cluster, dsv2_lite(), HmmOptions::default()),
+        InstanceManager::new(ImmOptions::default(), Timings::cloudmatrix()),
+        8 << 30,
+    );
+    let mut g = WorkloadGen::new(WorkloadSpec {
+        prompt_len: 2000,
+        decode_min: 100,
+        decode_max: 150,
+        profile: RateProfile::Fixed(2.0),
+        seed: 11,
+    });
+    let par4 = ParallelConfig::standard(2, 2, (0..4).collect())?;
+    let par6 = ParallelConfig::standard(3, 2, (0..6).collect())?;
+    sim.run(
+        &mut m,
+        &par4,
+        g.arrivals_until(horizon),
+        Trigger::Manual(vec![(horizon * 0.25, par6)]),
+        horizon,
+    )
+}
+
+/// Measure the telemetry tax on the event core: one warm-up pass, then
+/// the off/on pair timed back to back on the identical trace. `fast`
+/// shortens the horizon for CI. The acceptance budget is a < 5%
+/// events/sec regression; [`TelemetryOverhead::overhead_frac`] is that
+/// figure (the event set is identical in both runs, so the wall-time
+/// ratio is the events/sec ratio).
+pub fn telemetry_overhead(fast: bool) -> Result<TelemetryOverhead> {
+    let horizon = if fast { 120.0 } else { 480.0 };
+    // Warm-up pass evens out allocator state before the timed pair.
+    let _ = overhead_run(false, horizon)?;
+    let (off_wall_s, off) = time_fn(|| overhead_run(false, horizon));
+    let off = off?;
+    let (on_wall_s, on) = time_fn(|| overhead_run(true, horizon));
+    let on = on?;
+    Ok(TelemetryOverhead {
+        completed: off.recorder.count(),
+        off_wall_s,
+        on_wall_s,
+        off_hash: off.state_hash,
+        on_hash: on.state_hash,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,6 +403,16 @@ mod tests {
             e.iterations,
             w.iterations
         );
+    }
+
+    #[test]
+    fn telemetry_overhead_is_neutral() {
+        let o = telemetry_overhead(true).unwrap();
+        assert!(o.neutral(), "telemetry changed the state hash");
+        assert!(o.completed > 0);
+        let doc = o.to_json().to_string();
+        assert!(doc.contains("\"overhead_frac\""), "{doc}");
+        assert!(doc.contains("\"neutral\":true"), "{doc}");
     }
 
     #[test]

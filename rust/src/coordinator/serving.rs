@@ -30,6 +30,7 @@ use crate::engine::{
 };
 use crate::kvmigrate::{HandoffDisposition, KvHandoffStats, KvSnapshot};
 use crate::metrics::MetricsRecorder;
+use crate::obs::{ReplicaSample, Telemetry};
 use crate::scaling::{ScalingMethod, ScalingOutcome};
 use crate::sim::{Clock, EventQueue, SimClock, StateHash};
 use crate::workload::{Request, RequestState};
@@ -114,6 +115,11 @@ pub struct SimOutput {
     /// (`rust/tests/determinism.rs`); any divergence bisects to the first
     /// mismatching transition.
     pub state_hash: u64,
+    /// Telemetry registry of the run (gauges, histograms, time series,
+    /// scaling-event span timelines). `Some` iff [`ServingSim::obs`] was
+    /// set; never feeds back into simulation state, so `state_hash` is
+    /// bit-identical either way.
+    pub telemetry: Option<Telemetry>,
 }
 
 /// A scaling event in flight: the outcome timeline plus its absolute
@@ -438,9 +444,15 @@ pub(crate) fn sync_pause_window(
 /// Emit the command-time trace events of a freshly issued scaling event:
 /// the command itself (with its declared pause window in absolute time),
 /// the plan audit, and any chaos faults that fired while the method
-/// executed the plan. Shared by [`ServingSim`] and [`super::FleetSim`].
+/// executed the plan. When telemetry is on, also derive the event's span
+/// timeline and fault instants — the outcome is fully resolved at the
+/// command, so this adds no simulator events. Shared by [`ServingSim`]
+/// and [`super::FleetSim`].
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn log_command(
     trace: &mut Trace,
+    tel: Option<&mut Telemetry>,
+    replica: usize,
     injector: Option<&Rc<RefCell<FaultInjector>>>,
     now: f64,
     event: usize,
@@ -463,6 +475,15 @@ pub(crate) fn log_command(
             audit,
         });
     }
+    let mut tel = tel;
+    if let Some(t) = tel.as_deref_mut() {
+        t.inc("scale_commands", 1);
+        if outcome.aborted.is_some() {
+            t.inc("scale_aborts", 1);
+        }
+        t.observe("scale_latency_s", outcome.ready_after);
+        t.spans.scaling_event(replica, event, now, outcome);
+    }
     if let Some(inj) = injector {
         for rec in inj.borrow_mut().take_fired() {
             trace.push(TraceEvent::FaultFired {
@@ -470,8 +491,45 @@ pub(crate) fn log_command(
                 event,
                 fault: rec.kind,
             });
+            if let Some(t) = tel.as_deref_mut() {
+                t.inc("faults_fired", 1);
+                t.spans.instant(
+                    replica,
+                    format!("scale{event}/fault: {:?}", rec.kind),
+                    now,
+                );
+            }
         }
     }
+}
+
+/// Snapshot the active engine + scaling-method state into a telemetry
+/// gauge sample. Shared by [`ServingSim`] (replica 0) and
+/// [`super::FleetSim`] (one call per live replica on each policy tick).
+pub(crate) fn replica_gauges(
+    engine: Option<&ServeEngine>,
+    method: &dyn ScalingMethod,
+    devices: usize,
+    coordinator_queue: usize,
+    parked: bool,
+) -> ReplicaSample {
+    let mut s = ReplicaSample {
+        queue_depth: coordinator_queue,
+        devices,
+        hbm_used: method.hbm_used_bytes(),
+        hbm_peak: method.hbm_peak_bytes(),
+        dram_used: method.dram_resident_bytes(),
+        parked,
+        ..Default::default()
+    };
+    if let Some(e) = engine {
+        s.queue_depth += e.batcher.queue_len();
+        s.running = e.batcher.running_len();
+        s.suspended = e.batcher.suspended_len();
+        s.kv_blocks = e.kv.used_blocks();
+        s.intake_paused = e.batcher.intake_paused();
+    }
+    s
 }
 
 /// The coordinator-driven serving simulator.
@@ -486,6 +544,11 @@ pub struct ServingSim {
     /// drains its fired-fault records into the run trace at each scale
     /// command. `None` = no fault injection.
     pub injector: Option<Rc<RefCell<FaultInjector>>>,
+    /// Collect telemetry into [`SimOutput::telemetry`]. Off by default;
+    /// determinism-neutral when on (sampling piggybacks on window ticks
+    /// the event core already schedules, and nothing telemetry-side
+    /// feeds back into simulation state or the run digest).
+    pub obs: bool,
 }
 
 impl ServingSim {
@@ -497,6 +560,7 @@ impl ServingSim {
             window: 5.0,
             max_batch: 256,
             injector: None,
+            obs: false,
         }
     }
 
@@ -539,6 +603,11 @@ impl ServingSim {
         let mut trace = Trace::new();
         let mut shash = StateHash::new();
         let mut event_seq = 0usize;
+        let mut tel: Option<Telemetry> = if self.obs {
+            Some(Telemetry::new())
+        } else {
+            None
+        };
 
         arrivals.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).unwrap());
         // Seed the event spine: one marker per arrival, the first
@@ -601,6 +670,16 @@ impl ServingSim {
             if let Some(p) = &pending {
                 if now >= p.started + p.outcome.ready_after {
                     let p = pending.take().unwrap();
+                    if let Some(t) = tel.as_mut() {
+                        t.inc(
+                            if p.outcome.aborted.is_some() {
+                                "scale_rollbacks"
+                            } else {
+                                "scale_completions"
+                            },
+                            1,
+                        );
+                    }
                     if let Some(new_parallel) = complete_pending(
                         &self.cost,
                         self.hbm_per_device,
@@ -649,8 +728,20 @@ impl ServingSim {
             }
 
             // 4) Estimator tick (woken by the self-rescheduling
-            // `WindowTick` marker).
+            // `WindowTick` marker). Telemetry samples on the same wakeup
+            // — the tick was already scheduled, so sampling adds no
+            // queue entries.
             if window_tick {
+                if let Some(t) = tel.as_mut() {
+                    let s = replica_gauges(
+                        engine.as_ref(),
+                        &*method,
+                        current.n_devices(),
+                        inbox.len(),
+                        false,
+                    );
+                    t.sample_replica(now, 0, &s);
+                }
                 if let Trigger::Auto {
                     estimator,
                     up,
@@ -695,6 +786,8 @@ impl ServingSim {
                             event_seq += 1;
                             log_command(
                                 &mut trace,
+                                tel.as_mut(),
+                                0,
                                 self.injector.as_ref(),
                                 now,
                                 ev,
@@ -732,6 +825,8 @@ impl ServingSim {
                             event_seq += 1;
                             log_command(
                                 &mut trace,
+                                tel.as_mut(),
+                                0,
                                 self.injector.as_ref(),
                                 now,
                                 ev,
@@ -778,6 +873,16 @@ impl ServingSim {
                             id: r.id,
                             tokens: r.generated,
                         });
+                        if let Some(t) = tel.as_mut() {
+                            t.inc("requests_finished", 1);
+                            t.inc("tokens_generated", r.generated as u64);
+                            if let Some(ttft) = r.ttft() {
+                                t.observe("ttft_s", ttft);
+                            }
+                            if let Some(tpot) = r.tpot() {
+                                t.observe("tpot_s", tpot);
+                            }
+                        }
                         recorder.record(&r);
                     }
                     // An Idle step (e.g. intake paused with only queued
@@ -813,9 +918,16 @@ impl ServingSim {
         }
 
         // Seal the digest with the full event trace (arrivals, commands,
-        // plan audits, pause edges, dispositions, finishes).
+        // plan audits, pause edges, dispositions, finishes). Telemetry
+        // is deliberately NOT folded in — the digest must be identical
+        // with observability on or off.
         shash.fold_u64(trace.state_hash());
         shash.fold_usize(recorder.count());
+        if let Some(t) = tel.as_mut() {
+            t.spans.finish(clock.now());
+            t.set_gauge("end_time_s", clock.now());
+            t.set_gauge("requests_completed", recorder.count() as f64);
+        }
         Ok(SimOutput {
             recorder,
             scaling_events: events,
@@ -824,6 +936,7 @@ impl ServingSim {
             handoff,
             trace,
             state_hash: shash.value(),
+            telemetry: tel,
         })
     }
 }
@@ -945,6 +1058,71 @@ mod tests {
         assert_eq!(out.handoff.recompute_tokens, 0);
         assert_eq!(out.handoff.lost_decode_tokens, 0);
         assert!(out.handoff.adopted_tokens > 0);
+    }
+
+    #[test]
+    fn telemetry_is_determinism_neutral_and_classifies_spans() {
+        use crate::obs::spans::{CAT_CONCURRENT, CAT_SWITCHOVER};
+
+        let run = |obs: bool| {
+            let mut s = sim();
+            s.obs = obs;
+            let mut m = elastic(6);
+            s.run(
+                &mut m,
+                &par(4),
+                workload(2.0, 120.0),
+                Trigger::Manual(vec![(30.0, par(6))]),
+                120.0,
+            )
+            .unwrap()
+        };
+        let off = run(false);
+        let on = run(true);
+        // The determinism-neutrality contract: bit-identical digest.
+        assert_eq!(off.state_hash, on.state_hash);
+        assert!(off.telemetry.is_none());
+
+        let tel = on.telemetry.as_ref().unwrap();
+        assert_eq!(tel.counter("scale_commands"), 1);
+        assert_eq!(tel.counter("scale_completions"), 1);
+        assert_eq!(
+            tel.counter("requests_finished") as usize,
+            on.recorder.count()
+        );
+        assert!(tel.histogram("ttft_s").unwrap().count() > 0);
+        assert!(tel.series("replica0/queue_depth").is_some());
+        assert!(tel.series("replica0/hbm_used_bytes").is_some());
+
+        // The §5.2 choreography, visible in the span timeline: the
+        // concurrent phases (p2p, remap, kv_init, prep, warmup) all end
+        // by the declared pause start; only the switchover-window phases
+        // (kv handoff legs + reroute) sit inside the pause.
+        let spans = tel.spans.for_event(0);
+        let pause = spans
+            .iter()
+            .find(|s| s.name == "scale0/intake_pause")
+            .expect("pause window span");
+        let conc: Vec<_> =
+            spans.iter().filter(|s| s.cat == CAT_CONCURRENT).collect();
+        let sw: Vec<_> =
+            spans.iter().filter(|s| s.cat == CAT_SWITCHOVER).collect();
+        assert!(!conc.is_empty(), "no concurrent phases recorded");
+        assert!(!sw.is_empty(), "no switchover-window phases recorded");
+        for s in &conc {
+            assert!(
+                s.end <= pause.start + 1e-6,
+                "{} overlaps the pause window",
+                s.name
+            );
+        }
+        for s in &sw {
+            assert!(
+                s.start >= pause.start - 1e-6 && s.end <= pause.end + 1e-6,
+                "{} escapes the pause window",
+                s.name
+            );
+        }
     }
 
     #[test]

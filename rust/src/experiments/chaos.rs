@@ -149,6 +149,7 @@ struct CellResult {
     handoff: KvHandoffStats,
     devices_final: usize,
     state_hash: u64,
+    telemetry: Option<crate::obs::Telemetry>,
 }
 
 /// Run one (method, direction, fault) cell on the seeded workload.
@@ -158,8 +159,22 @@ fn run_cell(
     fault_name: &'static str,
     seed: u64,
 ) -> Result<CellResult> {
+    run_cell_obs(method, dir, fault_name, seed, false)
+}
+
+/// [`run_cell`] with the telemetry registry optionally enabled — the
+/// determinism sweep flips it to prove the digest is unchanged, and
+/// `--trace-out`/`--metrics-out` export from an obs cell.
+fn run_cell_obs(
+    method: &'static str,
+    dir: Dir,
+    fault_name: &'static str,
+    seed: u64,
+    obs: bool,
+) -> Result<CellResult> {
     let slo = SloConfig::new(8.0, 1.5);
     let mut sim = ServingSim::new(cost(), slo);
+    sim.obs = obs;
     let fault = fault_kind(fault_name, dir, seed);
     let inj = Rc::new(RefCell::new(FaultInjector::new(match fault {
         Some(kind) => FaultPlan::single(0, kind),
@@ -239,6 +254,7 @@ fn run_cell(
             .map(|&(_, d)| d)
             .unwrap_or(0),
         state_hash: out.state_hash,
+        telemetry: out.telemetry,
     })
 }
 
@@ -264,9 +280,19 @@ pub struct ConformanceCell {
 /// cell's invariant/violation summary plus its run digest. Entry point
 /// for the seed-sweep determinism suite.
 pub fn conformance(seed: u64) -> Result<Vec<ConformanceCell>> {
+    conformance_with_obs(seed, false)
+}
+
+/// [`conformance`] with the telemetry registry on or off: the
+/// determinism suite runs each cell both ways and asserts the digests
+/// are bit-identical (telemetry must be a pure observer).
+pub fn conformance_with_obs(
+    seed: u64,
+    obs: bool,
+) -> Result<Vec<ConformanceCell>> {
     let mut cells = Vec::new();
     for (method, dir, fault) in matrix(true) {
-        let r = run_cell(method, dir, fault, seed)?;
+        let r = run_cell_obs(method, dir, fault, seed, obs)?;
         cells.push(ConformanceCell {
             method,
             direction: dir.label(),
@@ -373,8 +399,14 @@ pub fn run(opts: &super::common::ExpOptions) -> Result<String> {
     assert_cell(&reference, seed)?;
 
     let mut results = Vec::new();
-    for (method, dir, fault) in matrix(fast) {
-        let r = run_cell(method, dir, fault, seed)?;
+    for (i, (method, dir, fault)) in matrix(fast).into_iter().enumerate() {
+        // Telemetry exports come from the first cell (fault-free
+        // elastic scale-up) when requested.
+        let obs = i == 0 && opts.wants_obs();
+        let r = run_cell_obs(method, dir, fault, seed, obs)?;
+        if obs {
+            opts.export_telemetry(r.telemetry.as_ref())?;
+        }
         assert_cell(&r, seed)?;
         results.push(r);
     }

@@ -29,10 +29,16 @@ pub const KV_BYTES: u64 = 8 << 30;
 ///   workload generators with it, `chaos` derives its fault schedule
 ///   from it and prints it so any failing cell can be replayed, `tier`
 ///   seeds its bursty trace.
-#[derive(Debug, Clone, Copy, Default)]
+/// - `trace_out` / `metrics_out`: telemetry export paths. Experiments
+///   that run a serving simulator (`chaos`, `kvmigrate`) turn the
+///   registry on and write a Chrome trace-event JSON / Prometheus
+///   exposition of their *first* simulated run; the others ignore them.
+#[derive(Debug, Clone, Default)]
 pub struct ExpOptions {
     pub fast: bool,
     pub seed: Option<u64>,
+    pub trace_out: Option<String>,
+    pub metrics_out: Option<String>,
 }
 
 impl ExpOptions {
@@ -48,17 +54,44 @@ impl ExpOptions {
         Ok(ExpOptions {
             fast: args.flag("fast"),
             seed,
+            trace_out: args.get("trace-out").map(str::to_string),
+            metrics_out: args.get("metrics-out").map(str::to_string),
         })
     }
 
     /// Fast/slow with no seed override.
     pub fn fast(fast: bool) -> Self {
-        ExpOptions { fast, seed: None }
+        ExpOptions {
+            fast,
+            ..Default::default()
+        }
     }
 
     /// The seed to use, falling back to an experiment's canonical one.
     pub fn seed_or(&self, default: u64) -> u64 {
         self.seed.unwrap_or(default)
+    }
+
+    /// Whether any telemetry export was requested.
+    pub fn wants_obs(&self) -> bool {
+        self.trace_out.is_some() || self.metrics_out.is_some()
+    }
+
+    /// Write the requested telemetry exports for a finished run.
+    pub fn export_telemetry(
+        &self,
+        tel: Option<&crate::obs::Telemetry>,
+    ) -> Result<()> {
+        let Some(tel) = tel else {
+            return Ok(());
+        };
+        if let Some(path) = &self.trace_out {
+            crate::obs::export::write_trace(tel, path)?;
+        }
+        if let Some(path) = &self.metrics_out {
+            crate::obs::export::write_metrics(tel, path)?;
+        }
+        Ok(())
     }
 }
 

@@ -150,10 +150,18 @@ pub struct ConformanceRun {
 /// horizon, and return the invariant/violation summary plus the run
 /// digest. Entry point for the seed-sweep determinism suite.
 pub fn conformance_run(seed: u64) -> Result<ConformanceRun> {
+    conformance_run_obs(seed, false)
+}
+
+/// [`conformance_run`] with the telemetry registry on or off: the
+/// determinism suite runs both ways and asserts the digests are
+/// bit-identical (telemetry must be a pure observer).
+pub fn conformance_run_obs(seed: u64, obs: bool) -> Result<ConformanceRun> {
     const CONFORMANCE_HORIZON: f64 = 100.0;
     let rps = capacity(8) * 0.55;
     let slo = SloConfig::new(8.0, 1.5);
-    let sim = ServingSim::new(cost(), slo);
+    let mut sim = ServingSim::new(cost(), slo);
+    sim.obs = obs;
     let mut m = method(KvHandoffPolicy::Migrate, 12);
     let out = sim.run(
         &mut m,
@@ -209,6 +217,23 @@ pub fn compare(fast: bool) -> Result<Vec<RunResult>> {
 /// `repro exp kvmigrate`.
 pub fn run(opts: &super::common::ExpOptions) -> Result<String> {
     let fast = opts.fast;
+    // `--trace-out`/`--metrics-out`: export telemetry from the canonical
+    // migrating scale-up (the run whose span timeline shows the remap /
+    // copy / switchover choreography).
+    if opts.wants_obs() {
+        let slo = SloConfig::new(8.0, 1.5);
+        let mut sim = ServingSim::new(cost(), slo);
+        sim.obs = true;
+        let mut m = method(KvHandoffPolicy::Migrate, 12);
+        let o = sim.run(
+            &mut m,
+            &par(8)?,
+            workload(capacity(8) * 0.55),
+            Trigger::Manual(vec![(COMMAND_AT, par(12)?)]),
+            HORIZON,
+        )?;
+        opts.export_telemetry(o.telemetry.as_ref())?;
+    }
     let runs = compare(fast)?;
     let mut table = Table::new(
         "KV migration: live-sequence handoff vs drain-and-recompute \

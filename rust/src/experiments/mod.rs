@@ -67,7 +67,14 @@ pub fn run(id: &str, fast: bool) -> Result<String> {
 /// Like [`run`], with an explicit workload/fault seed (`repro exp
 /// --seed N`); see [`ExpOptions`].
 pub fn run_seeded(id: &str, fast: bool, seed: Option<u64>) -> Result<String> {
-    run_with(id, &ExpOptions { fast, seed })
+    run_with(
+        id,
+        &ExpOptions {
+            fast,
+            seed,
+            ..Default::default()
+        },
+    )
 }
 
 /// Run one experiment by id under shared [`ExpOptions`] — the single

@@ -94,6 +94,38 @@ pub struct ScaleStats {
     /// Sum of the serving-concurrent stages (excludes
     /// [`Self::kv_migrate_time`]).
     pub total: f64,
+    /// Stage placement for the span timeline
+    /// (`docs/architecture/08-observability.md`): `(name, start, end)`
+    /// offsets in seconds relative to the transfer start, laid in
+    /// execution order over the components of [`Self::total`].
+    /// Zero-duration stages are omitted, so the marks sum to `total`.
+    pub stage_marks: Vec<(&'static str, f64, f64)>,
+}
+
+impl ScaleStats {
+    /// Rebuild [`Self::stage_marks`] from the component times, in the
+    /// order `execute_plan` runs them. Called at both exits (success and
+    /// abort) once the component times are final.
+    fn mark_stages(&mut self) {
+        let chain = [
+            ("hmm_attn_p2p", self.attn_p2p_time),
+            ("hmm_expert_migration", self.expert_p2p_time),
+            ("hmm_vpage_remap", self.remap_time),
+            ("tier_h2d", self.h2d_time),
+            ("tier_d2h", self.d2h_time),
+            ("hmm_realloc", self.realloc_time),
+            ("kv_init", self.kv_init_time),
+            ("rollback", self.rollback_time),
+        ];
+        let mut t = 0.0;
+        self.stage_marks.clear();
+        for (name, dur) in chain {
+            if dur > 0.0 {
+                self.stage_marks.push((name, t, t + dur));
+                t += dur;
+            }
+        }
+    }
 }
 
 /// Per-op outcome of a plan execution (see
@@ -1473,6 +1505,7 @@ impl HmmControl {
                 + stats.h2d_time
                 + stats.d2h_time
                 + stats.rollback_time;
+            stats.mark_stages();
             return Ok(PlanExecution {
                 stats,
                 steps,
@@ -1496,6 +1529,7 @@ impl HmmControl {
             + stats.kv_init_time
             + stats.h2d_time
             + stats.d2h_time;
+        stats.mark_stages();
         Ok(PlanExecution {
             stats,
             steps,

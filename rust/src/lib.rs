@@ -45,6 +45,10 @@
 //!   ([`tier`]): host-DRAM staging, cold-expert offload, DRAM-warm
 //!   standby instances, and park/unpark scale-to-zero
 //!   (`repro exp tier`).
+//! - `docs/architecture/08-observability.md` — the [`obs`] telemetry
+//!   subsystem: metric catalog, scaling-event span taxonomy, Chrome
+//!   trace / Prometheus exporters, and the determinism-neutrality
+//!   contract (`--trace-out` / `--metrics-out`).
 //! - `README.md` — quickstart, experiment and bench commands, and the
 //!   repro matrix mapping `repro exp` ids to paper artifacts.
 
@@ -58,6 +62,7 @@ pub mod hmm;
 pub mod imm;
 pub mod kvmigrate;
 pub mod metrics;
+pub mod obs;
 pub mod placement;
 pub mod runtime;
 pub mod scaling;

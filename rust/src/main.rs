@@ -73,7 +73,11 @@ fn print_usage() {
          --duration S    seconds of traffic (default 120)\n\
          --seed N        workload seed (default 42)\n\
          --scale-at S    manual scale-up (+2 devices) at time S\n\
-         --autoscale     SLO-driven autoscaling instead of manual"
+         --autoscale     SLO-driven autoscaling instead of manual\n\
+         --fast          short 30s run (CI smoke preset)\n\
+         --trace-out F   write a Chrome trace-event JSON of the run\n\
+         \x20               (load in Perfetto / chrome://tracing)\n\
+         --metrics-out F write Prometheus-style text exposition"
     );
 }
 
@@ -181,6 +185,15 @@ fn cmd_bench(args: &Args) -> Result<()> {
         cores.outputs_match()
     );
 
+    // Telemetry tax: the same serving run with the registry off vs on
+    // (must be determinism-neutral; budget is < 5% events/sec).
+    let overhead = elastic_moe::coordinator::telemetry_overhead(fast)?;
+    println!(
+        "telemetry: {:+.1}% wall overhead (neutral: {})",
+        overhead.overhead_frac() * 100.0,
+        overhead.neutral()
+    );
+
     if args.flag("json") {
         let doc = Json::obj(vec![
             ("model", Json::str(m.name)),
@@ -208,7 +221,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
         ]);
         std::fs::write("BENCH_serve.json", format!("{doc}\n"))?;
         println!("wrote BENCH_serve.json");
-        let hot = cores.to_json();
+        let mut hot = cores.to_json();
+        if let Json::Obj(map) = &mut hot {
+            map.insert("telemetry_overhead".to_string(), overhead.to_json());
+        }
         std::fs::write("BENCH_hotpath.json", format!("{hot}\n"))?;
         println!("wrote BENCH_hotpath.json");
     }
@@ -223,8 +239,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let devices = args.get_usize("devices", 4);
     let cluster_n = args.get_usize("cluster", devices * 2);
     let rps = args.get_f64("rps", 2.0);
-    let duration = args.get_f64("duration", 120.0);
+    let fast = args.flag("fast");
+    let duration =
+        args.get_f64("duration", if fast { 30.0 } else { 120.0 });
     let seed = args.get_u64("seed", 42);
+    let trace_out = args.get("trace-out").map(str::to_string);
+    let metrics_out = args.get("metrics-out").map(str::to_string);
 
     if devices % m.tp != 0 {
         bail!("--devices must be a multiple of TP{}", m.tp);
@@ -232,10 +252,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let mut method =
         elastic_moe::experiments::common::make_method(method_name, &m, cluster_n)?;
     let slo = SloConfig::strict();
-    let sim = ServingSim::new(
+    let mut sim = ServingSim::new(
         CostModel::new(m.clone(), Timings::cloudmatrix()),
         slo,
     );
+    sim.obs = trace_out.is_some() || metrics_out.is_some();
     let mut gen = WorkloadGen::new(WorkloadSpec {
         prompt_len: 2000,
         decode_min: 200,
@@ -307,6 +328,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     println!("device timeline: {:?}", out.device_timeline);
+    if let Some(tel) = &out.telemetry {
+        if let Some(path) = &trace_out {
+            elastic_moe::obs::export::write_trace(tel, path)?;
+            println!("wrote {path} (Chrome trace-event JSON)");
+        }
+        if let Some(path) = &metrics_out {
+            elastic_moe::obs::export::write_metrics(tel, path)?;
+            println!("wrote {path} (Prometheus exposition)");
+        }
+    }
     Ok(())
 }
 

@@ -1,5 +1,7 @@
 //! Request-level metric recording and windowed aggregation.
 
+use std::cell::{Cell, RefCell};
+
 use crate::config::SloConfig;
 use crate::workload::Request;
 
@@ -33,10 +35,28 @@ pub struct WindowStats {
     pub mean_tpot: f64,
 }
 
+/// Key identifying one aggregation pass: records seen, window bounds
+/// (bit-exact), and whether the window selects by arrival or finish time.
+type SortKey = (usize, u64, u64, bool);
+
+/// Sorted non-dropped TTFTs of the most recent aggregation window.
+#[derive(Debug)]
+struct SortedTtfts {
+    key: SortKey,
+    ttfts: Vec<f64>,
+}
+
 /// Collects per-request metrics across a run.
 #[derive(Debug, Default)]
 pub struct MetricsRecorder {
     finished: Vec<RequestMetrics>,
+    /// One-entry cache so the percentile helpers sort once per
+    /// aggregation pass instead of clone-and-sorting on every query.
+    /// Keyed on `finished.len()`, so `record` invalidates it implicitly.
+    sorted: RefCell<Option<SortedTtfts>>,
+    /// Sorts performed (regression probe: repeated queries over an
+    /// unchanged window must not re-sort).
+    sorts: Cell<u64>,
 }
 
 impl MetricsRecorder {
@@ -50,6 +70,7 @@ impl MetricsRecorder {
     pub fn with_capacity(n: usize) -> Self {
         MetricsRecorder {
             finished: Vec::with_capacity(n),
+            ..Default::default()
         }
     }
 
@@ -77,6 +98,37 @@ impl MetricsRecorder {
         &self.finished
     }
 
+    /// Sorted TTFTs of non-dropped requests whose arrival (or finish,
+    /// per `by_arrival`) falls in `[t0, t1)`. Sorted at most once per
+    /// aggregation pass; repeat queries over the same window reuse the
+    /// cached order.
+    fn with_sorted_ttfts<R>(
+        &self,
+        t0: f64,
+        t1: f64,
+        by_arrival: bool,
+        f: impl FnOnce(&[f64]) -> R,
+    ) -> R {
+        let key: SortKey =
+            (self.finished.len(), t0.to_bits(), t1.to_bits(), by_arrival);
+        let mut cache = self.sorted.borrow_mut();
+        if cache.as_ref().map(|c| c.key) != Some(key) {
+            let mut ttfts: Vec<f64> = self
+                .finished
+                .iter()
+                .filter(|m| {
+                    let t = if by_arrival { m.arrival } else { m.finished };
+                    t >= t0 && t < t1 && !m.dropped
+                })
+                .map(|m| m.ttft)
+                .collect();
+            ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorts.set(self.sorts.get() + 1);
+            *cache = Some(SortedTtfts { key, ttfts });
+        }
+        f(&cache.as_ref().unwrap().ttfts)
+    }
+
     /// Stats over requests that *finished* within `[t0, t1)`.
     pub fn window(&self, t0: f64, t1: f64, slo: &SloConfig) -> WindowStats {
         let in_window: Vec<&RequestMetrics> = self
@@ -95,8 +147,14 @@ impl MetricsRecorder {
             .iter()
             .filter(|m| !m.dropped && slo.met(m.ttft, m.tpot))
             .count();
-        let ttfts: Vec<f64> = completed.iter().map(|m| m.ttft).collect();
         let tpots: Vec<f64> = completed.iter().map(|m| m.tpot).collect();
+        let (mean_ttft, p99_ttft) =
+            self.with_sorted_ttfts(t0, t1, false, |s| {
+                (
+                    crate::util::stats::mean(s),
+                    crate::util::stats::percentile_sorted(s, 99.0),
+                )
+            });
         WindowStats {
             completed: completed.len(),
             dropped,
@@ -105,8 +163,8 @@ impl MetricsRecorder {
                 as f64
                 / dur,
             slo_attainment: met as f64 / in_window.len() as f64,
-            mean_ttft: crate::util::stats::mean(&ttfts),
-            p99_ttft: crate::util::stats::percentile(&ttfts, 99.0),
+            mean_ttft,
+            p99_ttft,
             mean_tpot: crate::util::stats::mean(&tpots),
         }
     }
@@ -145,16 +203,9 @@ impl MetricsRecorder {
         t1: f64,
         pct: f64,
     ) -> f64 {
-        let ttfts: Vec<f64> = self
-            .finished
-            .iter()
-            .filter(|m| m.arrival >= t0 && m.arrival < t1 && !m.dropped)
-            .map(|m| m.ttft)
-            .collect();
-        if ttfts.is_empty() {
-            return f64::NAN;
-        }
-        crate::util::stats::percentile(&ttfts, pct)
+        self.with_sorted_ttfts(t0, t1, true, |s| {
+            crate::util::stats::percentile_sorted(s, pct)
+        })
     }
 
     /// SLO attainment for one tenant over the whole run, judged against
@@ -249,6 +300,31 @@ mod tests {
         assert!(rec.ttft_percentile_by_arrival(30.0, 40.0, 99.0).is_nan());
         // Ids ride along for uniqueness checks.
         assert_eq!(rec.all()[0].id, 1);
+    }
+
+    #[test]
+    fn repeated_window_queries_do_not_resort() {
+        let slo = SloConfig::new(1.0, 0.5);
+        let mut rec = MetricsRecorder::new();
+        for i in 0..32 {
+            rec.record(&finished_req(i, i as f64 * 0.1, 0.5, 0.1, 5));
+        }
+        let first = rec.window(0.0, 100.0, &slo);
+        let sorts = rec.sorts.get();
+        assert_eq!(sorts, 1);
+        for _ in 0..10 {
+            let again = rec.window(0.0, 100.0, &slo);
+            assert_eq!(again.p99_ttft, first.p99_ttft);
+            assert_eq!(again.mean_ttft, first.mean_ttft);
+        }
+        assert_eq!(rec.sorts.get(), sorts, "repeat queries re-sorted");
+        // A different window (or selection mode) is a new pass.
+        let _ = rec.ttft_percentile_by_arrival(0.0, 100.0, 99.0);
+        assert_eq!(rec.sorts.get(), sorts + 1);
+        // Recording invalidates the cache via the length key.
+        rec.record(&finished_req(99, 0.0, 0.5, 0.1, 5));
+        let _ = rec.window(0.0, 100.0, &slo);
+        assert_eq!(rec.sorts.get(), sorts + 2);
     }
 
     #[test]

@@ -18,6 +18,13 @@ pub struct ScalingMetrics {
     pub peak_devices: usize,
     /// Stage breakdown (name, seconds) for Fig 11.
     pub stages: Vec<(String, f64)>,
+    /// Measured stage *placement*: `(name, start, end)` offsets in
+    /// seconds relative to the scale command. Populated by methods whose
+    /// stages genuinely overlap serving (ElasticMoE, from the HMM's
+    /// `ScaleStats`); empty for the serial baselines, whose `stages`
+    /// list laid end-to-end is already the true timeline. Consumed by
+    /// [`crate::obs::SpanTracker::scaling_event`].
+    pub stage_marks: Vec<(String, f64, f64)>,
 }
 
 impl ScalingMetrics {
@@ -32,6 +39,12 @@ impl ScalingMetrics {
 
     pub fn stage(&mut self, name: &str, secs: f64) {
         self.stages.push((name.to_string(), secs));
+    }
+
+    /// Record a stage's measured `[start, end]` placement relative to
+    /// the scale command (seconds).
+    pub fn stage_mark(&mut self, name: &str, start: f64, end: f64) {
+        self.stage_marks.push((name.to_string(), start, end));
     }
 
     pub fn stage_total(&self) -> f64 {

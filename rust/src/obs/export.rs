@@ -1,0 +1,298 @@
+//! Telemetry exporters: Chrome trace-event JSON and Prometheus text.
+//!
+//! [`chrome_trace`] renders the full [`Telemetry`] — spans, instants,
+//! and time series — as a Chrome trace-event JSON object loadable in
+//! Perfetto or `chrome://tracing`. Track layout:
+//!
+//! - **pid 0** (`cluster`) — fleet-wide series (device pool occupancy,
+//!   replica counts) and any span with no replica prefix.
+//! - **pid N+1** (`replica N`) — that replica's spans and its
+//!   `replica{N}/...` gauge series, with one thread row per span
+//!   category so concurrent phases visually overlap the serving
+//!   timeline while switchover-window phases sit on their own row.
+//!
+//! Trace `ts`/`dur` are microseconds; the simulator's second-valued
+//! clocks are scaled by 1e6. [`prometheus`] renders final
+//! counter/gauge/histogram state in the Prometheus text exposition
+//! format (`# TYPE` comments, cumulative `_bucket{le=...}` histogram
+//! series). Both renderings are deterministic byte-for-byte: maps are
+//! `BTreeMap`-ordered and spans keep insertion order (pinned by the
+//! golden file under `tests/golden/chrome_trace.json`).
+
+use std::collections::BTreeSet;
+
+use crate::obs::registry::Telemetry;
+use crate::obs::spans::{CAT_CONCURRENT, CAT_LIFECYCLE, CAT_MARK, CAT_SWITCHOVER, CAT_WINDOW};
+use crate::util::json::Json;
+
+/// Microseconds per simulated second (trace-event time unit).
+const US: f64 = 1e6;
+
+/// Thread-row id for a span category — stable small ints so Perfetto
+/// groups phases of the same kind onto one row per replica.
+fn tid_for(cat: &str) -> u64 {
+    match cat {
+        CAT_CONCURRENT => 1,
+        CAT_SWITCHOVER => 2,
+        CAT_WINDOW => 3,
+        CAT_LIFECYCLE => 4,
+        CAT_MARK => 5,
+        _ => 6,
+    }
+}
+
+/// Process id for a series name: `replica{N}/...` maps to pid `N + 1`,
+/// everything else to the cluster track (pid 0). Returns the pid and
+/// the name with the replica prefix stripped.
+fn series_track(name: &str) -> (u64, &str) {
+    if let Some(rest) = name.strip_prefix("replica") {
+        if let Some(slash) = rest.find('/') {
+            if let Ok(n) = rest[..slash].parse::<u64>() {
+                return (n + 1, &rest[slash + 1..]);
+            }
+        }
+    }
+    (0, name)
+}
+
+fn meta_process(pid: u64, name: String) -> Json {
+    Json::obj(vec![
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+        ("name", Json::str("process_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid as f64)),
+    ])
+}
+
+fn meta_thread(pid: u64, tid: u64, name: &str) -> Json {
+    Json::obj(vec![
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+        ("name", Json::str("thread_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(tid as f64)),
+    ])
+}
+
+/// Render the telemetry as a Chrome trace-event JSON document.
+pub fn chrome_trace(t: &Telemetry) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+
+    // Process/thread metadata first: every pid touched by a span,
+    // instant, or series, in sorted order.
+    let mut pids: BTreeSet<u64> = BTreeSet::new();
+    let mut threads: BTreeSet<(u64, u64)> = BTreeSet::new();
+    for s in t.spans.spans() {
+        let pid = s.replica as u64 + 1;
+        pids.insert(pid);
+        threads.insert((pid, tid_for(s.cat)));
+    }
+    for i in t.spans.instants() {
+        let pid = i.replica as u64 + 1;
+        pids.insert(pid);
+        threads.insert((pid, tid_for(CAT_MARK)));
+    }
+    for name in t.all_series().keys() {
+        pids.insert(series_track(name).0);
+    }
+    for &pid in &pids {
+        let name = if pid == 0 {
+            "cluster".to_string()
+        } else {
+            format!("replica {}", pid - 1)
+        };
+        events.push(meta_process(pid, name));
+    }
+    for &(pid, tid) in &threads {
+        let name = match tid {
+            1 => CAT_CONCURRENT,
+            2 => CAT_SWITCHOVER,
+            3 => CAT_WINDOW,
+            4 => CAT_LIFECYCLE,
+            5 => CAT_MARK,
+            _ => "other",
+        };
+        events.push(meta_thread(pid, tid, name));
+    }
+
+    // Spans as complete ("X") events, insertion order.
+    for s in t.spans.spans() {
+        let mut args = vec![("cat", Json::str(s.cat))];
+        if let Some(e) = s.event {
+            args.push(("event", Json::num(e as f64)));
+        }
+        events.push(Json::obj(vec![
+            ("args", Json::obj(args)),
+            ("cat", Json::str(s.cat)),
+            ("dur", Json::num((s.end - s.start) * US)),
+            ("name", Json::str(s.name.clone())),
+            ("ph", Json::str("X")),
+            ("pid", Json::num(s.replica as f64 + 1.0)),
+            ("tid", Json::num(tid_for(s.cat) as f64)),
+            ("ts", Json::num(s.start * US)),
+        ]));
+    }
+
+    // Instants ("i"), insertion order.
+    for i in t.spans.instants() {
+        events.push(Json::obj(vec![
+            ("name", Json::str(i.name.clone())),
+            ("ph", Json::str("i")),
+            ("pid", Json::num(i.replica as f64 + 1.0)),
+            ("s", Json::str("t")),
+            ("tid", Json::num(tid_for(CAT_MARK) as f64)),
+            ("ts", Json::num(i.t * US)),
+        ]));
+    }
+
+    // Time series as counter ("C") events, name-sorted then time order.
+    for (name, series) in t.all_series() {
+        let (pid, metric) = series_track(name);
+        for &(ts, v) in series.points() {
+            events.push(Json::obj(vec![
+                ("args", Json::obj(vec![("value", Json::num(v))])),
+                ("name", Json::str(metric)),
+                ("ph", Json::str("C")),
+                ("pid", Json::num(pid as f64)),
+                ("ts", Json::num(ts * US)),
+            ]));
+        }
+    }
+
+    Json::obj(vec![
+        ("displayTimeUnit", Json::str("ms")),
+        ("traceEvents", Json::arr(events)),
+    ])
+}
+
+/// Sanitize a telemetry name into a Prometheus metric name.
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 8);
+    out.push_str("elastic_");
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() || c == '_' || c == ':' {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+fn prom_num(v: f64) -> String {
+    if !v.is_infinite() {
+        format!("{v}")
+    } else if v > 0.0 {
+        "+Inf".into()
+    } else {
+        "-Inf".into()
+    }
+}
+
+/// Render final counter/gauge/histogram state in the Prometheus text
+/// exposition format. Time series are summarized as `_max` gauges (the
+/// full curves live in the Chrome trace).
+pub fn prometheus(t: &Telemetry) -> String {
+    let mut out = String::new();
+    for (name, &v) in t.counters() {
+        let n = prom_name(name);
+        out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+    }
+    for (name, &v) in t.gauges() {
+        let n = prom_name(name);
+        out.push_str(&format!("# TYPE {n} gauge\n{n} {}\n", prom_num(v)));
+    }
+    for (name, series) in t.all_series() {
+        if series.points().is_empty() {
+            continue;
+        }
+        let n = prom_name(&format!("{name}_max"));
+        out.push_str(&format!(
+            "# TYPE {n} gauge\n{n} {}\n",
+            prom_num(series.max_value())
+        ));
+    }
+    for (name, h) in t.histograms() {
+        let n = prom_name(name);
+        out.push_str(&format!("# TYPE {n} histogram\n"));
+        for (edge, count) in h.cumulative() {
+            out.push_str(&format!(
+                "{n}_bucket{{le=\"{}\"}} {count}\n",
+                prom_num(edge)
+            ));
+        }
+        out.push_str(&format!("{n}_sum {}\n", prom_num(h.sum())));
+        out.push_str(&format!("{n}_count {}\n", h.count()));
+    }
+    out
+}
+
+/// Write the Chrome trace JSON (newline-terminated) to `path`.
+pub fn write_trace(t: &Telemetry, path: &str) -> std::io::Result<()> {
+    std::fs::write(path, format!("{}\n", chrome_trace(t)))
+}
+
+/// Write the Prometheus exposition to `path`.
+pub fn write_metrics(t: &Telemetry, path: &str) -> std::io::Result<()> {
+    std::fs::write(path, prometheus(t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Telemetry {
+        let mut t = Telemetry::new();
+        t.inc("scale_commands", 2);
+        t.set_gauge("replicas", 1.0);
+        t.observe("ttft_s", 0.25);
+        t.record_series("replica0/queue_depth", 0.0, 3.0);
+        t.record_series("replica0/queue_depth", 5.0, 7.0);
+        t.record_series("pool/devices_free", 0.0, 4.0);
+        t.spans
+            .span(0, Some(0), "scale0/warmup", CAT_CONCURRENT, 1.0, 2.5);
+        t.spans.instant(0, "fault", 2.0);
+        t
+    }
+
+    #[test]
+    fn chrome_trace_parses_back_and_maps_tracks() {
+        let tr = chrome_trace(&sample());
+        let parsed =
+            crate::util::json::parse(&tr.to_string()).expect("self-parse");
+        let events = parsed.get("traceEvents").as_arr().unwrap();
+        // span: pid 1 (replica 0), ts scaled to µs
+        let span = events
+            .iter()
+            .find(|e| e.get("ph").as_str() == Some("X"))
+            .unwrap();
+        assert_eq!(span.get("pid").as_f64(), Some(1.0));
+        assert_eq!(span.get("ts").as_f64(), Some(1_000_000.0));
+        assert_eq!(span.get("dur").as_f64(), Some(1_500_000.0));
+        // counter series: replica prefix stripped, pool series on pid 0
+        assert!(events.iter().any(|e| e.get("ph").as_str() == Some("C")
+            && e.get("name").as_str() == Some("queue_depth")
+            && e.get("pid").as_f64() == Some(1.0)));
+        assert!(events.iter().any(|e| e.get("ph").as_str() == Some("C")
+            && e.get("name").as_str() == Some("pool/devices_free")
+            && e.get("pid").as_f64() == Some(0.0)));
+        // metadata names both processes
+        assert!(events.iter().any(|e| e.get("ph").as_str() == Some("M")
+            && e.get("args").get("name").as_str() == Some("cluster")));
+        assert!(events.iter().any(|e| e.get("ph").as_str() == Some("M")
+            && e.get("args").get("name").as_str() == Some("replica 0")));
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let text = prometheus(&sample());
+        assert!(text.contains("# TYPE elastic_scale_commands counter\n"));
+        assert!(text.contains("elastic_scale_commands 2\n"));
+        assert!(text.contains("# TYPE elastic_replicas gauge\n"));
+        assert!(text.contains("# TYPE elastic_ttft_s histogram\n"));
+        assert!(text.contains("elastic_ttft_s_count 1\n"));
+        assert!(text.contains("le=\"+Inf\"} 1\n"));
+        // series summarized with sanitized name
+        assert!(text.contains("elastic_replica0_queue_depth_max 7\n"));
+    }
+}

@@ -1,0 +1,27 @@
+//! Observability: time-series metrics, scaling-event span timelines,
+//! and trace/metrics exporters.
+//!
+//! The paper's headline claims — 9x lower scale-up latency, 2x
+//! throughput *during* scaling, zero downtime — are statements about
+//! what happens over time inside a scaling event. This subsystem makes
+//! those time-resolved curves first-class: the simulators thread a
+//! [`Telemetry`] registry (counters, gauges, log-bucket histograms,
+//! per-replica time series) through their event cores, a [`SpanTracker`]
+//! turns every scaling event into a phase timeline, and
+//! [`export`] renders Chrome trace-event JSON (Perfetto /
+//! `chrome://tracing`) plus a Prometheus-style text exposition.
+//!
+//! The contract that makes this safe to leave on: telemetry is
+//! **determinism-neutral**. Samples piggyback on event-core wakeups the
+//! simulator was already scheduled for (no new queue entries), nothing
+//! telemetry-side feeds back into simulation state, and `state_hash` is
+//! bit-identical with telemetry enabled or disabled —
+//! `tests/determinism.rs` sweeps every conformance cell both ways. See
+//! `docs/architecture/08-observability.md`.
+
+pub mod export;
+pub mod registry;
+pub mod spans;
+
+pub use registry::{LogHistogram, ReplicaSample, Series, Telemetry};
+pub use spans::{Instant, Span, SpanTracker};

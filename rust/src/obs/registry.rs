@@ -1,0 +1,455 @@
+//! The telemetry registry: named counters, gauges, log-bucket
+//! histograms, and in-memory time series.
+//!
+//! [`Telemetry`] is the single observability sink threaded through the
+//! simulators ([`crate::coordinator::ServingSim`],
+//! [`crate::coordinator::FleetSim`]). Everything here is plain in-memory
+//! state with no clocks, no I/O, and no randomness of its own — samples
+//! are pushed by the event core at instants it was already awake for, so
+//! enabling telemetry never adds queue entries and never perturbs the
+//! simulation (`state_hash` is bit-identical either way; pinned by
+//! `tests/determinism.rs`).
+//!
+//! Naming convention: per-replica series are keyed
+//! `replica{N}/{metric}`; cluster-wide series use a bare metric name (or
+//! a `fleet/` / `pool/` prefix). The exporters in
+//! [`crate::obs::export`] parse the prefix to pick a Chrome-trace
+//! process track.
+
+use std::collections::BTreeMap;
+
+use crate::obs::spans::SpanTracker;
+
+/// Fixed-bucket log-scale histogram.
+///
+/// Bucket `i` (1-based) covers `[lo·g^(i-1), lo·g^i)`; index 0 is the
+/// underflow bucket `[0, lo)` and the last index is the unbounded
+/// overflow bucket. With the [`latency`](Self::latency) defaults
+/// (`lo = 1e-4`, `growth = 2`, 40 buckets) the covered range is 0.1 ms
+/// to ~1.1e8 s, plenty for any simulated latency.
+///
+/// The percentile estimate returns the **upper edge** of the bucket
+/// holding the nearest-rank sample, so it is always `>=` the exact
+/// sorted percentile and within one bucket width of it (pinned by a
+/// property test in `tests/properties.rs`).
+#[derive(Debug, Clone)]
+pub struct LogHistogram {
+    lo: f64,
+    growth: f64,
+    /// Index 0 = underflow, `1..=n` = log buckets, `n + 1` = overflow.
+    counts: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl LogHistogram {
+    pub fn new(lo: f64, growth: f64, buckets: usize) -> Self {
+        assert!(lo > 0.0, "bucket floor must be positive");
+        assert!(growth > 1.0, "bucket growth must exceed 1");
+        assert!(buckets > 0, "need at least one log bucket");
+        LogHistogram {
+            lo,
+            growth,
+            counts: vec![0; buckets + 2],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// Default shape for latency-like quantities (seconds).
+    pub fn latency() -> Self {
+        LogHistogram::new(1e-4, 2.0, 40)
+    }
+
+    /// Number of log-scale buckets (excluding underflow/overflow).
+    fn n(&self) -> usize {
+        self.counts.len() - 2
+    }
+
+    fn bucket_index(&self, x: f64) -> usize {
+        if !(x >= self.lo) {
+            // Underflow; also catches NaN and negatives.
+            return 0;
+        }
+        let i = ((x / self.lo).ln() / self.growth.ln()).floor();
+        if i >= self.n() as f64 {
+            self.n() + 1
+        } else {
+            1 + i as usize
+        }
+    }
+
+    /// Upper value edge of bucket `idx` (the percentile estimate for
+    /// samples landing there). Overflow reports the observed max.
+    fn upper_edge(&self, idx: usize) -> f64 {
+        if idx == 0 {
+            self.lo
+        } else if idx == self.n() + 1 {
+            self.max
+        } else {
+            self.lo * self.growth.powi(idx as i32)
+        }
+    }
+
+    /// `[start, end)` value range of the bucket `x` falls in. The
+    /// underflow bucket spans `[0, lo)`; overflow is unbounded above.
+    pub fn bucket_span(&self, x: f64) -> (f64, f64) {
+        let idx = self.bucket_index(x);
+        if idx == 0 {
+            (0.0, self.lo)
+        } else if idx == self.n() + 1 {
+            (self.lo * self.growth.powi(self.n() as i32), f64::INFINITY)
+        } else {
+            let b = self.lo * self.growth.powi((idx - 1) as i32);
+            (b, b * self.growth)
+        }
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let idx = self.bucket_index(x);
+        self.counts[idx] += 1;
+        self.count += 1;
+        self.sum += x;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Nearest-rank percentile estimate — the same rank rule as
+    /// [`crate::util::stats::percentile`], resolved to the upper edge of
+    /// the bucket holding the rank sample.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank =
+            ((p / 100.0).clamp(0.0, 1.0) * (self.count - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for idx in 0..self.counts.len() {
+            seen += self.counts[idx];
+            if seen > rank {
+                return self.upper_edge(idx);
+            }
+        }
+        self.max
+    }
+
+    /// Cumulative `(upper_edge, count)` pairs over the non-empty prefix,
+    /// ending with the `+Inf` total — the Prometheus `_bucket` series.
+    /// Empty trailing buckets are collapsed into the final pair.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut seen = 0u64;
+        for idx in 0..self.counts.len() - 1 {
+            seen += self.counts[idx];
+            if self.counts[idx] > 0 {
+                let edge = if idx == 0 {
+                    self.lo
+                } else {
+                    self.lo * self.growth.powi(idx as i32)
+                };
+                out.push((edge, seen));
+            }
+        }
+        out.push((f64::INFINITY, self.count));
+        out
+    }
+}
+
+/// One in-memory time series: `(t, value)` points in sample order.
+/// Consecutive duplicate values are collapsed (the exporters render
+/// step functions, so repeats carry no information) to bound memory on
+/// long runs.
+#[derive(Debug, Clone, Default)]
+pub struct Series {
+    points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn push(&mut self, t: f64, v: f64) {
+        if let Some(&(_, last)) = self.points.last() {
+            if last == v {
+                return;
+            }
+        }
+        self.points.push((t, v));
+    }
+
+    pub fn points(&self) -> &[(f64, f64)] {
+        &self.points
+    }
+
+    pub fn last(&self) -> Option<(f64, f64)> {
+        self.points.last().copied()
+    }
+
+    /// Maximum value observed across the whole series.
+    pub fn max_value(&self) -> f64 {
+        self.points
+            .iter()
+            .map(|&(_, v)| v)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// Per-replica gauge snapshot taken by the event core on ticks it was
+/// already awake for (window ticks / policy ticks).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplicaSample {
+    pub queue_depth: usize,
+    pub running: usize,
+    pub suspended: usize,
+    pub kv_blocks: usize,
+    pub hbm_used: u64,
+    pub hbm_peak: u64,
+    pub dram_used: u64,
+    pub devices: usize,
+    pub intake_paused: bool,
+    pub parked: bool,
+}
+
+/// The telemetry registry: counters, gauges, histograms, time series,
+/// and the scaling-event [`SpanTracker`]. All maps are `BTreeMap` so
+/// iteration — and therefore every export — is deterministic.
+#[derive(Debug, Clone, Default)]
+pub struct Telemetry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, LogHistogram>,
+    series: BTreeMap<String, Series>,
+    pub spans: SpanTracker,
+}
+
+impl Telemetry {
+    pub fn new() -> Self {
+        Telemetry::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        self.gauges.insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// Record into a histogram, creating it with the
+    /// [`LogHistogram::latency`] shape on first touch.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.histograms
+            .entry(name.to_string())
+            .or_insert_with(LogHistogram::latency)
+            .record(v);
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&LogHistogram> {
+        self.histograms.get(name)
+    }
+
+    /// Append a `(t, v)` point to the named time series.
+    pub fn record_series(&mut self, name: &str, t: f64, v: f64) {
+        self.series.entry(name.to_string()).or_default().push(t, v);
+    }
+
+    pub fn series(&self, name: &str) -> Option<&Series> {
+        self.series.get(name)
+    }
+
+    pub fn counters(&self) -> &BTreeMap<String, u64> {
+        &self.counters
+    }
+
+    pub fn gauges(&self) -> &BTreeMap<String, f64> {
+        &self.gauges
+    }
+
+    pub fn histograms(&self) -> &BTreeMap<String, LogHistogram> {
+        &self.histograms
+    }
+
+    pub fn all_series(&self) -> &BTreeMap<String, Series> {
+        &self.series
+    }
+
+    /// Snapshot one replica's gauges into its `replica{N}/...` series.
+    /// Called from event-core wake handlers only — no new queue entries.
+    pub fn sample_replica(
+        &mut self,
+        now: f64,
+        replica: usize,
+        s: &ReplicaSample,
+    ) {
+        let base = format!("replica{replica}");
+        self.record_series(
+            &format!("{base}/queue_depth"),
+            now,
+            s.queue_depth as f64,
+        );
+        self.record_series(&format!("{base}/running"), now, s.running as f64);
+        self.record_series(
+            &format!("{base}/suspended"),
+            now,
+            s.suspended as f64,
+        );
+        self.record_series(
+            &format!("{base}/kv_blocks"),
+            now,
+            s.kv_blocks as f64,
+        );
+        self.record_series(
+            &format!("{base}/hbm_used_bytes"),
+            now,
+            s.hbm_used as f64,
+        );
+        self.record_series(
+            &format!("{base}/hbm_peak_bytes"),
+            now,
+            s.hbm_peak as f64,
+        );
+        self.record_series(
+            &format!("{base}/dram_used_bytes"),
+            now,
+            s.dram_used as f64,
+        );
+        self.record_series(
+            &format!("{base}/devices_active"),
+            now,
+            s.devices as f64,
+        );
+        self.record_series(
+            &format!("{base}/intake_paused"),
+            now,
+            if s.intake_paused { 1.0 } else { 0.0 },
+        );
+        self.record_series(
+            &format!("{base}/parked"),
+            now,
+            if s.parked { 1.0 } else { 0.0 },
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_edges() {
+        let mut h = LogHistogram::new(1.0, 2.0, 4);
+        // underflow, bucket [1,2), [2,4), [4,8), [8,16), overflow
+        for x in [0.5, 1.5, 3.0, 3.5, 20.0, 100.0] {
+            h.record(x);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.bucket_span(0.5), (0.0, 1.0));
+        assert_eq!(h.bucket_span(3.0), (2.0, 4.0));
+        assert_eq!(h.bucket_span(100.0), (16.0, f64::INFINITY));
+        assert_eq!(h.max(), 100.0);
+        assert_eq!(h.min(), 0.5);
+        // p0 = rank 0 → underflow bucket → upper edge 1.0
+        assert_eq!(h.percentile(0.0), 1.0);
+        // p100 → overflow → observed max
+        assert_eq!(h.percentile(100.0), 100.0);
+        // median (rank 2.5 → 3) is 3.5, in [2,4) → edge 4
+        assert_eq!(h.percentile(50.0), 4.0);
+    }
+
+    #[test]
+    fn histogram_cumulative_ends_at_total() {
+        let mut h = LogHistogram::latency();
+        for x in [0.001, 0.002, 0.004, 1.0] {
+            h.record(x);
+        }
+        let cum = h.cumulative();
+        let (edge, total) = *cum.last().unwrap();
+        assert!(edge.is_infinite());
+        assert_eq!(total, 4);
+        // cumulative counts are monotone
+        for w in cum.windows(2) {
+            assert!(w[0].1 <= w[1].1);
+            assert!(w[0].0 < w[1].0);
+        }
+    }
+
+    #[test]
+    fn series_collapses_duplicates() {
+        let mut s = Series::default();
+        s.push(0.0, 1.0);
+        s.push(1.0, 1.0);
+        s.push(2.0, 2.0);
+        s.push(3.0, 2.0);
+        assert_eq!(s.points(), &[(0.0, 1.0), (2.0, 2.0)]);
+        assert_eq!(s.max_value(), 2.0);
+    }
+
+    #[test]
+    fn registry_roundtrip() {
+        let mut t = Telemetry::new();
+        t.inc("scale_commands", 1);
+        t.inc("scale_commands", 2);
+        t.set_gauge("replicas", 3.0);
+        t.observe("ttft", 0.25);
+        t.sample_replica(
+            5.0,
+            0,
+            &ReplicaSample {
+                queue_depth: 4,
+                ..Default::default()
+            },
+        );
+        assert_eq!(t.counter("scale_commands"), 3);
+        assert_eq!(t.gauge("replicas"), Some(3.0));
+        assert_eq!(t.histogram("ttft").unwrap().count(), 1);
+        assert_eq!(
+            t.series("replica0/queue_depth").unwrap().points(),
+            &[(5.0, 4.0)]
+        );
+    }
+}

@@ -1,0 +1,317 @@
+//! Scaling-event span timelines.
+//!
+//! [`SpanTracker`] turns every scaling event into a phase timeline —
+//! plan/p2p/remap/tier/kv/switchover/warmup/rollback spans — plus window
+//! spans for intake pauses and downtime, lifecycle spans (replica boots,
+//! park intervals), and instants (fault firings, aborts). The timeline
+//! is derived at command-issue time from the [`ScalingOutcome`] the
+//! method already returned: the outcome is fully resolved then, so the
+//! derivation is deterministic and consumes no extra simulator events.
+//!
+//! Span categories classify each phase against the outcome's declared
+//! pause window:
+//!
+//! - [`CAT_CONCURRENT`] — runs while the old instance keeps serving
+//!   (the HMM/IMM prep chain of the paper's §5: expert p2p, vPage remap,
+//!   tier h2d/d2h, KV init, warmup).
+//! - [`CAT_SWITCHOVER`] — falls inside the declared intake-pause window
+//!   (final drain + reroute, and the migrating-KV handoff legs).
+//!
+//! The classification is geometric — a span is `switchover_window` iff
+//! its midpoint lies at or past the pause start — so it holds for every
+//! scaling method, not just ElasticMoE. The acceptance check in
+//! `coordinator/serving.rs` tests asserts that for the zero-copy path
+//! only the switchover-window phases land inside the pause.
+
+use crate::scaling::ScalingOutcome;
+
+/// Phase overlapped with live serving on the old instance.
+pub const CAT_CONCURRENT: &str = "concurrent";
+/// Phase inside the declared intake-pause (switchover) window.
+pub const CAT_SWITCHOVER: &str = "switchover_window";
+/// Declared window itself (intake pause, downtime).
+pub const CAT_WINDOW: &str = "window";
+/// Replica lifecycle (boot, park, drain).
+pub const CAT_LIFECYCLE: &str = "lifecycle";
+/// Zero-duration marks (faults, aborts).
+pub const CAT_MARK: &str = "mark";
+
+/// One named interval on a replica's timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub replica: usize,
+    /// Scaling-event ordinal this span belongs to, if any.
+    pub event: Option<usize>,
+    pub name: String,
+    pub cat: &'static str,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// A zero-duration mark (fault fired, scale aborted, ...).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Instant {
+    pub replica: usize,
+    pub name: String,
+    pub t: f64,
+}
+
+/// Collects spans and instants in deterministic (insertion) order.
+#[derive(Debug, Clone, Default)]
+pub struct SpanTracker {
+    spans: Vec<Span>,
+    instants: Vec<Instant>,
+    /// Open intervals keyed `(replica, name)`, closed by [`Self::end`].
+    open: Vec<(usize, String, f64)>,
+}
+
+impl SpanTracker {
+    pub fn span(
+        &mut self,
+        replica: usize,
+        event: Option<usize>,
+        name: impl Into<String>,
+        cat: &'static str,
+        start: f64,
+        end: f64,
+    ) {
+        self.spans.push(Span {
+            replica,
+            event,
+            name: name.into(),
+            cat,
+            start,
+            end: end.max(start),
+        });
+    }
+
+    pub fn instant(&mut self, replica: usize, name: impl Into<String>, t: f64) {
+        self.instants.push(Instant {
+            replica,
+            name: name.into(),
+            t,
+        });
+    }
+
+    /// Open a lifecycle interval (e.g. `park`); closed by [`Self::end`]
+    /// with the same name, or by [`Self::finish`] at end of run.
+    pub fn begin(&mut self, replica: usize, name: impl Into<String>, t: f64) {
+        self.open.push((replica, name.into(), t));
+    }
+
+    /// Close the most recent open interval matching `(replica, name)`.
+    pub fn end(&mut self, replica: usize, name: &str, t: f64) {
+        if let Some(pos) = self
+            .open
+            .iter()
+            .rposition(|(r, n, _)| *r == replica && n == name)
+        {
+            let (r, n, start) = self.open.remove(pos);
+            self.span(r, None, n, CAT_LIFECYCLE, start, t);
+        }
+    }
+
+    /// Close every still-open interval at the end-of-run timestamp.
+    pub fn finish(&mut self, t: f64) {
+        let open = std::mem::take(&mut self.open);
+        for (r, n, start) in open {
+            self.span(r, None, n, CAT_LIFECYCLE, start, t.max(start));
+        }
+    }
+
+    /// Derive the full phase timeline for a scaling event commanded at
+    /// absolute time `started` on `replica`.
+    ///
+    /// Phase placement prefers the measured `(start, end)` offsets in
+    /// [`ScalingMetrics::stage_marks`](crate::metrics::ScalingMetrics)
+    /// (populated by ElasticMoE from the HMM's `ScaleStats`); methods
+    /// without marks fall back to laying their sequential `stages` list
+    /// end-to-end from the command time — faithful for the serial
+    /// baselines, whose phases genuinely are back-to-back.
+    pub fn scaling_event(
+        &mut self,
+        replica: usize,
+        event: usize,
+        started: f64,
+        outcome: &ScalingOutcome,
+    ) {
+        let m = &outcome.metrics;
+        let pause = outcome
+            .intake_pause
+            .map(|(a, b)| (started + a, started + b));
+        let marks: Vec<(String, f64, f64)> = if !m.stage_marks.is_empty() {
+            m.stage_marks.clone()
+        } else {
+            let mut t = 0.0;
+            m.stages
+                .iter()
+                .map(|(name, dur)| {
+                    let s = t;
+                    t += dur;
+                    (name.clone(), s, t)
+                })
+                .collect()
+        };
+        for (name, s0, s1) in marks {
+            let (a, b) = (started + s0, started + s1);
+            let cat = match pause {
+                Some((p0, _)) if (a + b) / 2.0 >= p0 => CAT_SWITCHOVER,
+                _ => CAT_CONCURRENT,
+            };
+            self.span(
+                replica,
+                Some(event),
+                format!("scale{event}/{name}"),
+                cat,
+                a,
+                b,
+            );
+        }
+        if let Some((p0, p1)) = pause {
+            self.span(
+                replica,
+                Some(event),
+                format!("scale{event}/intake_pause"),
+                CAT_WINDOW,
+                p0,
+                p1,
+            );
+        }
+        if let Some((d0, d1)) = outcome.downtime {
+            self.span(
+                replica,
+                Some(event),
+                format!("scale{event}/downtime"),
+                CAT_WINDOW,
+                started + d0,
+                started + d1,
+            );
+        }
+        if let Some(abort) = &outcome.aborted {
+            self.instant(
+                replica,
+                format!("scale{event}/aborted: {}", abort.reason),
+                started + outcome.ready_after,
+            );
+        }
+    }
+
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    pub fn instants(&self) -> &[Instant] {
+        &self.instants
+    }
+
+    /// Spans belonging to one scaling event, in insertion order.
+    pub fn for_event(&self, event: usize) -> Vec<&Span> {
+        self.spans
+            .iter()
+            .filter(|s| s.event == Some(event))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ParallelConfig;
+    use crate::metrics::ScalingMetrics;
+
+    fn outcome_with(
+        stages: Vec<(&str, f64)>,
+        marks: Vec<(&str, f64, f64)>,
+        pause: Option<(f64, f64)>,
+        ready_after: f64,
+    ) -> ScalingOutcome {
+        let mut m = ScalingMetrics::default();
+        for (n, d) in stages {
+            m.stage(n, d);
+        }
+        for (n, a, b) in marks {
+            m.stage_mark(n, a, b);
+        }
+        ScalingOutcome {
+            metrics: m,
+            ready_after,
+            downtime: None,
+            intake_pause: pause,
+            transition_derate: 1.0,
+            preserves_inflight: true,
+            kv_handoff: None,
+            new_parallel: ParallelConfig::standard(2, 2, (0..4).collect())
+                .unwrap(),
+            peak_devices: 0,
+            plan_audit: None,
+            aborted: None,
+        }
+    }
+
+    #[test]
+    fn marks_classify_against_pause_window() {
+        // Concurrent chain [0, 8], switchover [8, 10], pause (8, 10).
+        let o = outcome_with(
+            vec![],
+            vec![
+                ("hmm_expert_migration", 0.0, 6.0),
+                ("warmup", 6.0, 8.0),
+                ("switchover", 8.0, 10.0),
+            ],
+            Some((8.0, 10.0)),
+            10.0,
+        );
+        let mut tr = SpanTracker::default();
+        tr.scaling_event(0, 0, 100.0, &o);
+        let spans = tr.for_event(0);
+        assert_eq!(spans.len(), 4); // 3 phases + pause window
+        assert_eq!(spans[0].cat, CAT_CONCURRENT);
+        assert_eq!(spans[0].start, 100.0);
+        assert_eq!(spans[0].end, 106.0);
+        assert_eq!(spans[1].cat, CAT_CONCURRENT);
+        assert_eq!(spans[2].cat, CAT_SWITCHOVER);
+        assert_eq!(spans[2].start, 108.0);
+        assert_eq!(spans[3].cat, CAT_WINDOW);
+        assert_eq!((spans[3].start, spans[3].end), (108.0, 110.0));
+    }
+
+    #[test]
+    fn sequential_fallback_lays_stages_end_to_end() {
+        // No marks: stages laid back-to-back; pause covers the whole
+        // transition, so every phase is in the switchover window.
+        let o = outcome_with(
+            vec![("teardown", 2.0), ("reload", 3.0)],
+            vec![],
+            Some((0.0, 5.0)),
+            5.0,
+        );
+        let mut tr = SpanTracker::default();
+        tr.scaling_event(1, 3, 10.0, &o);
+        let spans = tr.for_event(3);
+        assert_eq!(spans[0].name, "scale3/teardown");
+        assert_eq!((spans[0].start, spans[0].end), (10.0, 12.0));
+        assert_eq!((spans[1].start, spans[1].end), (12.0, 15.0));
+        assert_eq!(spans[0].cat, CAT_SWITCHOVER);
+        assert_eq!(spans[1].cat, CAT_SWITCHOVER);
+    }
+
+    #[test]
+    fn open_intervals_close_or_finish() {
+        let mut tr = SpanTracker::default();
+        tr.begin(2, "park", 1.0);
+        tr.begin(3, "park", 2.0);
+        tr.end(2, "park", 4.0);
+        tr.finish(9.0);
+        let spans = tr.spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(
+            (spans[0].replica, spans[0].start, spans[0].end),
+            (2, 1.0, 4.0)
+        );
+        assert_eq!(
+            (spans[1].replica, spans[1].start, spans[1].end),
+            (3, 2.0, 9.0)
+        );
+        assert!(spans.iter().all(|s| s.cat == CAT_LIFECYCLE));
+    }
+}

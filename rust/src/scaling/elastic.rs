@@ -207,6 +207,24 @@ impl ElasticMoE {
             metrics.stage("switchover", t.switchover);
             let ready_after =
                 stats.total + stats.kv_migrate_time + t.switchover;
+            // Measured placement for the span timeline: the partial
+            // concurrent chain (rollback included) runs [0, total], then
+            // the KV legs and the reroute-back barrier fill the pause.
+            for &(name, s0, s1) in &stats.stage_marks {
+                metrics.stage_mark(name, s0, s1);
+            }
+            if stats.kv_migrate_time > 0.0 {
+                metrics.stage_mark(
+                    "kv_handoff",
+                    stats.total,
+                    stats.total + stats.kv_migrate_time,
+                );
+            }
+            metrics.stage_mark(
+                "switchover",
+                stats.total + stats.kv_migrate_time,
+                ready_after,
+            );
             metrics.scale_latency = ready_after;
             metrics.downtime = 0.0;
             metrics.peak_memory = self.hmm.cluster.borrow().peak_over(&union);
@@ -277,6 +295,40 @@ impl ElasticMoE {
         // The reroute cost alone: the KV copy legs that stretch the
         // window are already reported as the "kv_handoff" stage.
         metrics.stage("switchover", t.switchover);
+
+        // Measured placement for the span timeline: the HMM chain and
+        // IMM prep overlap serving from t=0, attach+warmup follow the
+        // slower of the two, and only the final window — KV copy legs
+        // plus the reroute — sits inside the declared intake pause.
+        for &(name, s0, s1) in &stats.stage_marks {
+            metrics.stage_mark(name, s0, s1);
+        }
+        if prep_time > 0.0 {
+            metrics.stage_mark("imm_prep", 0.0, prep_time);
+        }
+        metrics.stage_mark(
+            "zero_copy_attach",
+            concurrent,
+            concurrent + attach_time,
+        );
+        metrics.stage_mark(
+            "warmup",
+            concurrent + attach_time,
+            concurrent + attach_time + warmup,
+        );
+        let window_start = ready_after - switchover;
+        if stats.kv_migrate_time > 0.0 {
+            metrics.stage_mark(
+                "kv_handoff",
+                window_start,
+                window_start + stats.kv_migrate_time,
+            );
+        }
+        metrics.stage_mark(
+            "switchover",
+            window_start + stats.kv_migrate_time,
+            ready_after,
+        );
 
         let kv_handoff = kv.map(derive_handoff);
 
@@ -490,6 +542,20 @@ impl ScalingMethod for ElasticMoE {
 
     fn dram_resident_bytes(&self) -> u64 {
         self.hmm.cluster.borrow().host.used()
+    }
+
+    fn hbm_used_bytes(&self) -> u64 {
+        match &self.current {
+            Some(p) => self.hmm.cluster.borrow().used_over(&p.devices),
+            None => 0,
+        }
+    }
+
+    fn hbm_peak_bytes(&self) -> u64 {
+        match &self.current {
+            Some(p) => self.hmm.cluster.borrow().peak_over(&p.devices),
+            None => 0,
+        }
     }
 }
 

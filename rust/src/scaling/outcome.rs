@@ -226,4 +226,18 @@ pub trait ScalingMethod {
     fn dram_resident_bytes(&self) -> u64 {
         0
     }
+
+    /// HBM bytes currently allocated across the replica's device set —
+    /// a telemetry gauge sampled by the simulators into the
+    /// `replica{N}/hbm_used_bytes` series. Default 0 for methods that
+    /// don't own a simulated cluster.
+    fn hbm_used_bytes(&self) -> u64 {
+        0
+    }
+
+    /// Peak HBM watermark across the replica's device set (survives
+    /// frees). Default 0.
+    fn hbm_peak_bytes(&self) -> u64 {
+        0
+    }
 }

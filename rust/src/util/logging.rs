@@ -1,7 +1,9 @@
 //! Stderr logger backend for the `log` facade (env_logger is unavailable).
 //!
 //! Level is controlled by the `ELASTIC_LOG` environment variable
-//! (`error|warn|info|debug|trace`, default `info`).
+//! (`error|warn|info|debug|trace|off`, default `info`; `off` silences
+//! the logger entirely). An unrecognized value falls back to `info` and
+//! warns once, naming the bad value and the accepted set.
 
 use std::io::Write;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -42,16 +44,29 @@ pub fn init() {
     if INSTALLED.swap(true, Ordering::SeqCst) {
         return;
     }
-    let level = match std::env::var("ELASTIC_LOG").as_deref() {
+    let var = std::env::var("ELASTIC_LOG");
+    let mut unknown: Option<&str> = None;
+    let level = match var.as_deref() {
         Ok("error") => LevelFilter::Error,
         Ok("warn") => LevelFilter::Warn,
+        Ok("info") => LevelFilter::Info,
         Ok("debug") => LevelFilter::Debug,
         Ok("trace") => LevelFilter::Trace,
         Ok("off") => LevelFilter::Off,
-        _ => LevelFilter::Info,
+        Ok(other) => {
+            unknown = Some(other);
+            LevelFilter::Info
+        }
+        Err(_) => LevelFilter::Info,
     };
     let _ = log::set_logger(&LOGGER);
     log::set_max_level(level);
+    if let Some(bad) = unknown {
+        log::warn!(
+            "unknown ELASTIC_LOG value '{bad}', using 'info' \
+             (accepted: error|warn|info|debug|trace|off)"
+        );
+    }
 }
 
 #[cfg(test)]

@@ -58,15 +58,24 @@ impl Running {
     }
 }
 
-/// Percentile over a sample set (nearest-rank on a sorted copy).
+/// Percentile over a sample set (nearest-rank on a sorted copy). Callers
+/// that query several percentiles of the same sample set should sort once
+/// and use [`percentile_sorted`] instead.
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
-    if samples.is_empty() {
-        return f64::NAN;
-    }
     let mut v: Vec<f64> = samples.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
-    v[rank.min(v.len() - 1)]
+    percentile_sorted(&v, p)
+}
+
+/// Nearest-rank percentile over an **already ascending-sorted** sample
+/// set. NaN when empty.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let rank =
+        ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
 }
 
 pub fn mean(samples: &[f64]) -> f64 {
@@ -156,6 +165,17 @@ mod tests {
         let p50 = percentile(&xs, 50.0);
         assert!((50.0..=51.0).contains(&p50));
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn percentile_sorted_matches_percentile() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [0.0, 25.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&xs, p), percentile_sorted(&sorted, p));
+        }
+        assert!(percentile_sorted(&[], 50.0).is_nan());
     }
 
     #[test]

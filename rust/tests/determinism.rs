@@ -1,6 +1,6 @@
 //! Seed-sweep determinism and golden-trace regression suite.
 //!
-//! Two contracts are pinned here, both riding on the event-driven
+//! Three contracts are pinned here, all riding on the event-driven
 //! simulator core (`docs/architecture/07-event-core.md`):
 //!
 //! 1. **Determinism** — same seed ⇒ same run, bit for bit. Every
@@ -9,10 +9,14 @@
 //!    runs must agree on `state_hash` (the FNV-1a digest folded over
 //!    every state transition) and the trace invariant checkers must find
 //!    zero violations at every seed, not just the experiments' default.
-//! 2. **Golden trace** — the [`Trace`] JSON rendering is byte-stable. A
-//!    hand-built canonical trace covering every [`TraceEvent`] variant is
-//!    compared byte-for-byte against `tests/golden/trace.json`. When an
-//!    intentional format change lands, regenerate the golden file with
+//! 2. **Telemetry neutrality** — enabling the observability registry
+//!    (`docs/architecture/08-observability.md`) adds no queue events and
+//!    feeds nothing back into simulation state, so each conformance cell
+//!    produces a bit-identical `state_hash` with telemetry on and off.
+//! 3. **Golden renderings** — the [`Trace`] JSON and the Chrome
+//!    trace-event export are byte-stable. Hand-built canonical inputs
+//!    are compared byte-for-byte against `rust/tests/golden/`. When an
+//!    intentional format change lands, regenerate the golden files with
 //!    `GOLDEN_BLESS=1 cargo test --test determinism golden` and commit
 //!    the diff.
 //!
@@ -21,6 +25,11 @@
 
 use elastic_moe::chaos::{FaultKind, PlanAudit, Trace, TraceEvent};
 use elastic_moe::experiments::{chaos, kvmigrate};
+use elastic_moe::obs::export::chrome_trace;
+use elastic_moe::obs::spans::{
+    CAT_CONCURRENT, CAT_LIFECYCLE, CAT_SWITCHOVER,
+};
+use elastic_moe::obs::Telemetry;
 use elastic_moe::tier::TierLevel;
 
 /// Run the chaos conformance matrix twice per seed: zero invariant
@@ -100,6 +109,43 @@ fn kvmigrate_conformance_is_deterministic_across_seeds_low() {
 #[test]
 fn kvmigrate_conformance_is_deterministic_across_seeds_high() {
     kvmigrate_sweep(&[42, 101, 137, 9001]);
+}
+
+/// Telemetry neutrality across the chaos matrix: every conformance cell
+/// hashes bit-identically with the registry enabled and disabled, at
+/// every swept seed — enabling observability never changes a run.
+#[test]
+fn chaos_conformance_is_telemetry_neutral_across_seeds() {
+    for seed in [7, 23, 9001] {
+        let off = chaos::conformance_with_obs(seed, false).unwrap();
+        let on = chaos::conformance_with_obs(seed, true).unwrap();
+        assert_eq!(off.len(), on.len());
+        for (x, y) in off.iter().zip(&on) {
+            assert_eq!(
+                x.state_hash, y.state_hash,
+                "seed {seed}: cell [{} × {} × {}] changed its state hash \
+                 when telemetry was enabled",
+                x.method, x.direction, x.fault
+            );
+            assert_eq!(x, y, "seed {seed}: telemetry perturbed a cell");
+        }
+    }
+}
+
+/// Telemetry neutrality for the live KV-handoff scenario.
+#[test]
+fn kvmigrate_conformance_is_telemetry_neutral_across_seeds() {
+    for seed in [7, 9001] {
+        let off = kvmigrate::conformance_run_obs(seed, false).unwrap();
+        let on = kvmigrate::conformance_run_obs(seed, true).unwrap();
+        assert_eq!(
+            off.state_hash, on.state_hash,
+            "seed {seed}: live-handoff state hash changed when telemetry \
+             was enabled"
+        );
+        assert_eq!(off.completed, on.completed);
+        assert_eq!(off.violations, on.violations);
+    }
 }
 
 /// The canonical golden trace: one small, hand-built run exercising every
@@ -223,7 +269,7 @@ fn canonical_trace() -> Trace {
 fn golden_trace_file_is_byte_stable() {
     let rendered = format!("{}\n", canonical_trace().to_json());
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
-        .join("tests/golden/trace.json");
+        .join("rust/tests/golden/trace.json");
     if std::env::var_os("GOLDEN_BLESS").is_some() {
         std::fs::write(&path, rendered.as_bytes()).unwrap();
         return;
@@ -238,6 +284,59 @@ fn golden_trace_file_is_byte_stable() {
     assert!(
         rendered.as_bytes() == golden.as_slice(),
         "golden trace drifted from {}; if the serialization change is \
+         intentional, regenerate with `GOLDEN_BLESS=1 cargo test --test \
+         determinism golden` and commit the diff",
+        path.display()
+    );
+}
+
+/// Canonical telemetry for the Chrome-trace golden: two replicas, a
+/// concurrent + switchover span pair on one scaling event, a lifecycle
+/// boot, one instant mark, and a cluster plus a per-replica counter
+/// series. Timestamps are halves so the µs scaling renders integral.
+fn canonical_telemetry() -> Telemetry {
+    let mut t = Telemetry::new();
+    t.record_series("pool/devices_free", 0.0, 6.0);
+    t.record_series("pool/devices_free", 4.0, 2.0);
+    t.record_series("replica0/queue_depth", 0.0, 2.0);
+    t.record_series("replica0/queue_depth", 1.0, 4.0);
+    t.spans
+        .span(0, Some(0), "scale0/warmup", CAT_CONCURRENT, 1.0, 2.5);
+    t.spans.span(
+        0,
+        Some(0),
+        "scale0/switchover",
+        CAT_SWITCHOVER,
+        2.5,
+        3.0,
+    );
+    t.spans.span(1, None, "cold_boot", CAT_LIFECYCLE, 0.5, 1.5);
+    t.spans.instant(0, "fault", 2.0);
+    t
+}
+
+/// Byte-for-byte regression of the Chrome trace-event export against
+/// `rust/tests/golden/chrome_trace.json`. Bless a deliberate exporter
+/// change with `GOLDEN_BLESS=1 cargo test --test determinism golden`.
+#[test]
+fn golden_chrome_trace_is_byte_stable() {
+    let rendered = format!("{}\n", chrome_trace(&canonical_telemetry()));
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden/chrome_trace.json");
+    if std::env::var_os("GOLDEN_BLESS").is_some() {
+        std::fs::write(&path, rendered.as_bytes()).unwrap();
+        return;
+    }
+    let golden = std::fs::read(&path).unwrap_or_else(|e| {
+        panic!(
+            "missing golden file {}: {e} — regenerate with \
+             `GOLDEN_BLESS=1 cargo test --test determinism golden`",
+            path.display()
+        )
+    });
+    assert!(
+        rendered.as_bytes() == golden.as_slice(),
+        "golden Chrome trace drifted from {}; if the exporter change is \
          intentional, regenerate with `GOLDEN_BLESS=1 cargo test --test \
          determinism golden` and commit the diff",
         path.display()

@@ -10,9 +10,11 @@ use elastic_moe::coordinator::{ServingSim, Trigger};
 use elastic_moe::device::{Cluster, Timings};
 use elastic_moe::engine::{CostModel, PagedKv};
 use elastic_moe::hmm::control::{HmmControl, HmmOptions};
+use elastic_moe::obs::LogHistogram;
 use elastic_moe::util::json::{self, Json};
 use elastic_moe::util::proplite::check;
 use elastic_moe::util::rng::Rng;
+use elastic_moe::util::stats;
 use elastic_moe::workload::{RateProfile, WorkloadGen, WorkloadSpec};
 
 fn par(n: usize) -> ParallelConfig {
@@ -647,6 +649,45 @@ fn prop_event_queue_pops_in_time_then_insertion_order() {
         }
         assert_eq!(popped, n, "events lost or duplicated");
         assert!(q.is_empty());
+    });
+}
+
+/// The telemetry log-histogram's percentile estimate is accurate to one
+/// bucket: for any sample set and percentile, the estimate is at least
+/// the exact nearest-rank percentile of the sorted samples (it reports
+/// the upper edge of the rank sample's bucket) and exceeds it by at most
+/// that bucket's width.
+#[test]
+fn prop_log_histogram_percentile_within_one_bucket() {
+    check("histogram percentile accuracy", 150, |rng: &mut Rng| {
+        let mut h = LogHistogram::latency();
+        let n = rng.range(1, 200) as usize;
+        let mut samples = Vec::with_capacity(n);
+        for _ in 0..n {
+            // Log-uniform over ~1e-5..100 s: spans underflow, many log
+            // buckets, and (rarely) overflow of the latency shape.
+            let x = 1e-4 * 2.0f64.powf(rng.uniform(-3.0, 20.0));
+            h.record(x);
+            samples.push(x);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut ps = vec![0.0, 50.0, 90.0, 99.0, 100.0];
+        ps.push(rng.uniform(0.0, 100.0));
+        for p in ps {
+            let exact = stats::percentile_sorted(&samples, p);
+            let est = h.percentile(p);
+            let (lo, hi) = h.bucket_span(exact);
+            let width = if hi.is_finite() { hi - lo } else { h.max() - lo };
+            assert!(
+                est >= exact - 1e-12,
+                "p{p}: estimate {est} below exact {exact}"
+            );
+            assert!(
+                est - exact <= width + 1e-12,
+                "p{p}: estimate {est} more than one bucket ({width}) \
+                 above exact {exact}"
+            );
+        }
     });
 }
 
