@@ -15,10 +15,19 @@
 //! - **Degrading** ([`FaultKind::HbmPressure`], [`FaultKind::Straggler`])
 //!   — the event completes, but with a shrunken migration budget (more
 //!   recompute verdicts) or stretched fabric legs (longer windows).
+//! - **Control-plane** ([`FaultKind::HeartbeatLoss`],
+//!   [`FaultKind::StaleObservedState`], [`FaultKind::DuplicateCommand`])
+//!   — the data plane is untouched; instead the fleet reconciler's
+//!   inputs (heartbeats, observed-state snapshots) or outputs (step
+//!   enactment) are corrupted. These faults are scoped by their own
+//!   counters — heartbeat index per replica, reconcile-round index —
+//!   not by [`FaultInjector::begin_event`]'s scaling-event scope, and
+//!   the reconciler must converge back to spec after they stop firing
+//!   (`chaos::invariants::check_reconcile_convergence`).
 //!
 //! The trace invariants ([`super::invariants`]) must hold either way.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::device::DeviceId;
 
@@ -53,6 +62,23 @@ pub enum FaultKind {
     /// `stretch`× its nominal time. Degrades (longer concurrent phase and
     /// switchover window), never aborts.
     Straggler { dev: DeviceId, stretch: f64 },
+    /// Control plane: `replica`'s heartbeats are suppressed for `beats`
+    /// consecutive beats, starting at that replica's `event`-th beat
+    /// (0-based — the [`FaultEntry::event`] field indexes beats here,
+    /// not scaling events). Once staleness passes the reconciler's
+    /// deadline the replica is marked suspect and evicted, and its spec
+    /// slot is re-planned. Never aborts a scaling event.
+    HeartbeatLoss { replica: usize, beats: usize },
+    /// Control plane: for `ticks` reconcile rounds starting at the
+    /// `event`-th round (0-based round index), the reconciler plans
+    /// against the *previous* round's observed snapshot. Idempotent
+    /// planning must turn the resulting stale steps into checked
+    /// no-ops. Never aborts.
+    StaleObservedState { ticks: usize },
+    /// Control plane: the step batch of the `event`-th reconcile round
+    /// (0-based round index) is enacted twice. The second enactment
+    /// must be a checked no-op. Never aborts.
+    DuplicateCommand,
 }
 
 impl FaultKind {
@@ -64,6 +90,9 @@ impl FaultKind {
             FaultKind::DeviceLoss { .. } => "device-loss",
             FaultKind::HbmPressure { .. } => "hbm-pressure",
             FaultKind::Straggler { .. } => "straggler",
+            FaultKind::HeartbeatLoss { .. } => "heartbeat-loss",
+            FaultKind::StaleObservedState { .. } => "stale-observed-state",
+            FaultKind::DuplicateCommand => "duplicate-command",
         }
     }
 
@@ -113,9 +142,23 @@ impl FaultPlan {
 /// A fault that actually fired.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FaultRecord {
-    /// Scaling-event index the fault fired in.
+    /// Index the fault fired at: the scaling-event ordinal for
+    /// data-plane faults, the heartbeat-beat or reconcile-round index
+    /// for control-plane faults.
     pub event: usize,
     pub kind: FaultKind,
+}
+
+/// Control-plane directives for one reconcile round, returned by
+/// [`FaultInjector::begin_round`].
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct RoundFaults {
+    /// The reconciler must plan against the previous round's observed
+    /// snapshot ([`FaultKind::StaleObservedState`]).
+    pub stale: bool,
+    /// The planned step batch is enacted twice
+    /// ([`FaultKind::DuplicateCommand`]).
+    pub duplicate: bool,
 }
 
 /// Consumes a [`FaultPlan`] across a run's scaling events.
@@ -139,6 +182,14 @@ pub struct FaultInjector {
     kv_legs: usize,
     /// Plan-entry indices that already fired in the current event.
     fired_entries: BTreeSet<usize>,
+    /// Control-plane scope: heartbeat beats consulted so far, per
+    /// replica (independent of the scaling-event scope).
+    beats: BTreeMap<usize, usize>,
+    /// Control-plane scope: reconcile rounds opened so far.
+    rounds: usize,
+    /// Plan-entry indices of control-plane faults already recorded
+    /// (never reset — a loss window is one fault, not one per beat).
+    fired_cp: BTreeSet<usize>,
     fired: Vec<FaultRecord>,
 }
 
@@ -267,6 +318,76 @@ impl FaultInjector {
         factor
     }
 
+    /// Record a control-plane fault as fired at `at` (a beat or round
+    /// index), once per plan entry across the whole run.
+    fn fire_cp(&mut self, entry: usize, at: usize, kind: FaultKind) {
+        if self.fired_cp.insert(entry) {
+            self.fired.push(FaultRecord { event: at, kind });
+        }
+    }
+
+    /// Consult at one heartbeat of `replica` (control-plane scope —
+    /// beats are counted per replica, independent of
+    /// [`Self::begin_event`]). Returns `true` when this beat is lost:
+    /// an armed [`FaultKind::HeartbeatLoss`] window `[event, event +
+    /// beats)` covers the replica's current beat index.
+    pub fn on_heartbeat(&mut self, replica: usize) -> bool {
+        let beat = {
+            let b = self.beats.entry(replica).or_insert(0);
+            let cur = *b;
+            *b += 1;
+            cur
+        };
+        let hits: Vec<(usize, usize, FaultKind)> = self
+            .plan
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| {
+                matches!(e.kind, FaultKind::HeartbeatLoss { replica: r, beats }
+                    if r == replica && beat >= e.event && beat < e.event + beats)
+            })
+            .map(|(i, e)| (i, e.event, e.kind))
+            .collect();
+        let lost = !hits.is_empty();
+        for (i, at, kind) in hits {
+            self.fire_cp(i, at, kind);
+        }
+        lost
+    }
+
+    /// Open the next reconcile round (control-plane scope) and return
+    /// the round's directives: whether the reconciler sees a stale
+    /// observed snapshot, and whether its step batch is enacted twice.
+    pub fn begin_round(&mut self) -> RoundFaults {
+        let round = self.rounds;
+        self.rounds += 1;
+        let mut out = RoundFaults::default();
+        let hits: Vec<(usize, usize, FaultKind)> = self
+            .plan
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| match e.kind {
+                FaultKind::StaleObservedState { ticks } => {
+                    round >= e.event && round < e.event + ticks
+                }
+                FaultKind::DuplicateCommand => round == e.event,
+                _ => false,
+            })
+            .map(|(i, e)| (i, e.event, e.kind))
+            .collect();
+        for (i, at, kind) in hits {
+            match kind {
+                FaultKind::StaleObservedState { .. } => out.stale = true,
+                FaultKind::DuplicateCommand => out.duplicate = true,
+                _ => unreachable!(),
+            }
+            self.fire_cp(i, at, kind);
+        }
+        out
+    }
+
     /// Drain the fired-fault records accumulated so far.
     pub fn take_fired(&mut self) -> Vec<FaultRecord> {
         std::mem::take(&mut self.fired)
@@ -376,5 +497,69 @@ mod tests {
             FaultKind::P2pLinkFail { after_legs: 1 }.label(),
             "p2p-link-fail"
         );
+        // Control-plane faults never abort a scaling event.
+        assert!(!FaultKind::HeartbeatLoss { replica: 0, beats: 3 }.aborts());
+        assert!(!FaultKind::StaleObservedState { ticks: 2 }.aborts());
+        assert!(!FaultKind::DuplicateCommand.aborts());
+        assert_eq!(
+            FaultKind::StaleObservedState { ticks: 2 }.label(),
+            "stale-observed-state"
+        );
+    }
+
+    #[test]
+    fn heartbeat_loss_covers_its_window_per_replica() {
+        let mut inj = FaultInjector::new(FaultPlan::single(
+            2,
+            FaultKind::HeartbeatLoss { replica: 1, beats: 3 },
+        ));
+        // Replica 0 is never armed.
+        for _ in 0..6 {
+            assert!(!inj.on_heartbeat(0));
+        }
+        // Replica 1 loses exactly beats 2, 3 and 4.
+        let lost: Vec<bool> = (0..7).map(|_| inj.on_heartbeat(1)).collect();
+        assert_eq!(lost, [false, false, true, true, true, false, false]);
+        // One loss window = one fired record, stamped with the first
+        // suppressed beat index.
+        let fired = inj.take_fired();
+        assert_eq!(fired.len(), 1);
+        assert_eq!(fired[0].event, 2);
+    }
+
+    #[test]
+    fn round_faults_hit_their_round_windows() {
+        let mut inj = FaultInjector::new(FaultPlan {
+            entries: vec![
+                FaultEntry {
+                    event: 1,
+                    kind: FaultKind::StaleObservedState { ticks: 2 },
+                },
+                FaultEntry { event: 2, kind: FaultKind::DuplicateCommand },
+            ],
+        });
+        let rounds: Vec<RoundFaults> =
+            (0..4).map(|_| inj.begin_round()).collect();
+        assert!(!rounds[0].stale && !rounds[0].duplicate);
+        assert!(rounds[1].stale && !rounds[1].duplicate);
+        assert!(rounds[2].stale && rounds[2].duplicate);
+        assert!(!rounds[3].stale && !rounds[3].duplicate);
+        // Each armed entry records exactly once across its window.
+        assert_eq!(inj.take_fired().len(), 2);
+    }
+
+    #[test]
+    fn control_plane_scope_is_independent_of_event_scope() {
+        let mut inj = FaultInjector::new(FaultPlan::single(
+            0,
+            FaultKind::HeartbeatLoss { replica: 0, beats: 1 },
+        ));
+        // No begin_event needed: control-plane consults have their own
+        // counters, and data-plane consults ignore control-plane kinds.
+        assert!(inj.on_heartbeat(0));
+        inj.begin_event();
+        assert!(inj.on_leg(0, 1).is_none());
+        assert!(inj.on_device(0).is_none());
+        assert_eq!(inj.budget_factor(), 1.0);
     }
 }

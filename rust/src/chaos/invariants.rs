@@ -21,6 +21,13 @@
 //! 5. **Suspend disposition** — every suspended sequence is disposed of
 //!    exactly once: resumed on its origin replica (abort), or adopted /
 //!    restarted at switchover.
+//! 6. **Tier conservation** — tier residency bytes conserve across every
+//!    demote / promote / park / unpark journal entry, and every
+//!    allocator audit matches the journal replay.
+//! 7. **Reconcile convergence** — once faults stop firing, the fleet's
+//!    spec drift cannot stay positive for [`CONVERGENCE_ROUNDS`]
+//!    consecutive reconcile rounds: the reconciler must converge on the
+//!    declared spec instead of chasing it forever.
 
 use std::collections::BTreeMap;
 
@@ -71,6 +78,60 @@ pub fn check_all(trace: &Trace) -> Vec<Violation> {
     out.extend(check_intake_pause_bounded(trace));
     out.extend(check_suspend_disposition(trace));
     out.extend(check_tier_conservation(trace));
+    out.extend(check_reconcile_convergence(trace));
+    out
+}
+
+/// Bound on consecutive drifting reconcile rounds after the last fault.
+/// A healthy reconciler clears any single disruption in one or two
+/// rounds (plan → enact → observe); eight covers multi-step recoveries
+/// (evict + re-add + resize) with margin while still catching a loop
+/// that chases its spec forever.
+pub const CONVERGENCE_ROUNDS: usize = 8;
+
+/// Invariant 7: bounded reconcile convergence. After the last
+/// [`TraceEvent::FaultFired`], no [`CONVERGENCE_ROUNDS`] *consecutive*
+/// [`TraceEvent::SpecDeclared`] rounds may all carry positive drift —
+/// the reconciler must reach (or at least touch) the declared spec.
+/// A trailing drifting round or two is fine: fleet runs stop as soon as
+/// every arrival is served, which can truncate the final enactment.
+/// Traces with no `SpecDeclared` events (single-instance runs) pass
+/// vacuously.
+pub fn check_reconcile_convergence(trace: &Trace) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let last_fault = trace
+        .events
+        .iter()
+        .rposition(|ev| matches!(ev, TraceEvent::FaultFired { .. }));
+    let mut streak = 0usize;
+    let mut streak_start = 0.0f64;
+    for (i, ev) in trace.events.iter().enumerate() {
+        if let TraceEvent::SpecDeclared { t, drift, .. } = ev {
+            if last_fault.is_some_and(|f| i < f) {
+                // Rounds while faults are still firing are excused.
+                streak = 0;
+                continue;
+            }
+            if *drift > 0 {
+                if streak == 0 {
+                    streak_start = *t;
+                }
+                streak += 1;
+                if streak == CONVERGENCE_ROUNDS {
+                    out.push(Violation::new(
+                        "reconcile-convergence",
+                        format!(
+                            "spec drift stayed positive for \
+                             {CONVERGENCE_ROUNDS} consecutive rounds \
+                             after faults stopped (since t={streak_start:.6})"
+                        ),
+                    ));
+                }
+            } else {
+                streak = 0;
+            }
+        }
+    }
     out
 }
 
@@ -650,6 +711,55 @@ mod tests {
         let mut bad = Trace::new();
         bad.push(shift(0, "w", 100, Hbm, Hbm));
         assert!(!check_tier_conservation(&bad).is_empty());
+    }
+
+    #[test]
+    fn convergence_bounds_post_fault_drift() {
+        let declared = |t: f64, drift: usize| TraceEvent::SpecDeclared {
+            t,
+            replicas: 2,
+            devices: 6,
+            parked: 0,
+            drift,
+        };
+        // A fleet that settles: drift clears well inside the bound.
+        let mut tr = Trace::new();
+        tr.push(TraceEvent::FaultFired {
+            t: 5.0,
+            event: 0,
+            fault: crate::chaos::FaultKind::DuplicateCommand,
+        });
+        tr.push(declared(10.0, 2));
+        tr.push(declared(15.0, 1));
+        tr.push(declared(20.0, 0));
+        assert!(check_reconcile_convergence(&tr).is_empty());
+
+        // Drift held for CONVERGENCE_ROUNDS rounds after the fault:
+        // violation.
+        let mut tr = Trace::new();
+        tr.push(TraceEvent::FaultFired {
+            t: 5.0,
+            event: 0,
+            fault: crate::chaos::FaultKind::DuplicateCommand,
+        });
+        for i in 0..CONVERGENCE_ROUNDS {
+            tr.push(declared(10.0 + i as f64, 1));
+        }
+        let v = check_reconcile_convergence(&tr);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].invariant, "reconcile-convergence");
+
+        // The same drifting streak *before* the last fault is excused.
+        tr.push(TraceEvent::FaultFired {
+            t: 50.0,
+            event: 1,
+            fault: crate::chaos::FaultKind::DuplicateCommand,
+        });
+        tr.push(declared(55.0, 0));
+        assert!(check_reconcile_convergence(&tr).is_empty());
+
+        // No SpecDeclared events at all (single-instance runs): vacuous.
+        assert!(check_reconcile_convergence(&conformant_trace()).is_empty());
     }
 
     #[test]

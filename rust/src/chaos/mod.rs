@@ -7,7 +7,10 @@
 //!
 //! - [`faults`] — a deterministic, seeded [`FaultPlan`] of injected
 //!   faults (P2P link failure mid-copy-leg, device loss, HBM pressure
-//!   that shrinks the migration byte budget, straggler devices),
+//!   that shrinks the migration byte budget, straggler devices) plus
+//!   control-plane faults (heartbeat loss, stale observed snapshots,
+//!   duplicate command enactment — see
+//!   `docs/architecture/09-control-plane.md`),
 //!   consumed through a [`FaultInjector`] hook that
 //!   [`crate::hmm::HmmControl::execute_plan`] consults at every fabric
 //!   leg and the serving simulators drain into the event trace.
@@ -37,6 +40,10 @@ pub mod trace;
 
 pub use faults::{
     FaultEntry, FaultInjector, FaultKind, FaultPlan, FaultRecord,
+    RoundFaults,
 };
-pub use invariants::{check_all, check_tier_conservation, Violation};
+pub use invariants::{
+    check_all, check_reconcile_convergence, check_tier_conservation,
+    Violation, CONVERGENCE_ROUNDS,
+};
 pub use trace::{PlanAudit, Trace, TraceEvent};

@@ -128,6 +128,38 @@ pub enum TraceEvent {
         replica: usize,
         dram_bytes: u64,
     },
+    /// The fleet policy declared its desired state for one reconcile
+    /// round: `replicas` spec slots holding `devices` total, `parked` of
+    /// them parked. `drift` is the number of reconcile steps planned to
+    /// converge the observed fleet onto the spec (0 = converged).
+    SpecDeclared {
+        t: f64,
+        replicas: usize,
+        devices: usize,
+        parked: usize,
+        drift: usize,
+    },
+    /// One reconcile step was enacted against `replica` (`step` is the
+    /// step's stable description, e.g. `"resize->4"`). `applied` is
+    /// false when enactment found the observed state already satisfied
+    /// (or vetoed) the step and made it a checked no-op — the mark that
+    /// distinguishes idempotent re-derivation from silent mutation.
+    ReconcileStep {
+        t: f64,
+        replica: usize,
+        step: String,
+        applied: bool,
+    },
+    /// A live replica's heartbeat failed to arrive at its beat time.
+    HeartbeatMissed { t: f64, replica: usize },
+    /// `replica` exceeded the heartbeat staleness deadline and was
+    /// evicted from the fleet; `requeued` of its requests were re-homed
+    /// onto surviving replicas.
+    ReplicaEvicted {
+        t: f64,
+        replica: usize,
+        requeued: usize,
+    },
 }
 
 impl TraceEvent {
@@ -148,7 +180,11 @@ impl TraceEvent {
             | TraceEvent::ScaleAborted { t, .. }
             | TraceEvent::Finished { t, .. }
             | TraceEvent::TierShift { t, .. }
-            | TraceEvent::TierAudit { t, .. } => *t,
+            | TraceEvent::TierAudit { t, .. }
+            | TraceEvent::SpecDeclared { t, .. }
+            | TraceEvent::ReconcileStep { t, .. }
+            | TraceEvent::HeartbeatMissed { t, .. }
+            | TraceEvent::ReplicaEvicted { t, .. } => *t,
         }
     }
 }
@@ -226,6 +262,16 @@ impl TraceEvent {
                         h.fold_usize(*dev);
                         h.fold_f64(*stretch);
                     }
+                    FaultKind::HeartbeatLoss { replica, beats } => {
+                        h.fold_u64(5);
+                        h.fold_usize(*replica);
+                        h.fold_usize(*beats);
+                    }
+                    FaultKind::StaleObservedState { ticks } => {
+                        h.fold_u64(6);
+                        h.fold_usize(*ticks);
+                    }
+                    FaultKind::DuplicateCommand => h.fold_u64(7),
                 }
             }
             TraceEvent::IntakePaused { t, event } => {
@@ -317,6 +363,47 @@ impl TraceEvent {
                 h.fold_f64(*t);
                 h.fold_usize(*replica);
                 h.fold_u64(*dram_bytes);
+            }
+            TraceEvent::SpecDeclared {
+                t,
+                replicas,
+                devices,
+                parked,
+                drift,
+            } => {
+                h.fold_u64(15);
+                h.fold_f64(*t);
+                h.fold_usize(*replicas);
+                h.fold_usize(*devices);
+                h.fold_usize(*parked);
+                h.fold_usize(*drift);
+            }
+            TraceEvent::ReconcileStep {
+                t,
+                replica,
+                step,
+                applied,
+            } => {
+                h.fold_u64(16);
+                h.fold_f64(*t);
+                h.fold_usize(*replica);
+                h.fold_str(step);
+                h.fold_bool(*applied);
+            }
+            TraceEvent::HeartbeatMissed { t, replica } => {
+                h.fold_u64(17);
+                h.fold_f64(*t);
+                h.fold_usize(*replica);
+            }
+            TraceEvent::ReplicaEvicted {
+                t,
+                replica,
+                requeued,
+            } => {
+                h.fold_u64(18);
+                h.fold_f64(*t);
+                h.fold_usize(*replica);
+                h.fold_usize(*requeued);
             }
         }
     }
@@ -420,6 +507,14 @@ impl TraceEvent {
                         pairs.push(("dev", Json::num(*dev as f64)));
                         pairs.push(("stretch", Json::num(*stretch)));
                     }
+                    FaultKind::HeartbeatLoss { replica, beats } => {
+                        pairs.push(("replica", Json::num(*replica as f64)));
+                        pairs.push(("beats", Json::num(*beats as f64)));
+                    }
+                    FaultKind::StaleObservedState { ticks } => {
+                        pairs.push(("ticks", Json::num(*ticks as f64)));
+                    }
+                    FaultKind::DuplicateCommand => {}
                 }
                 Json::obj(pairs)
             }
@@ -514,6 +609,47 @@ impl TraceEvent {
                 ("t", Json::num(*t)),
                 ("replica", Json::num(*replica as f64)),
                 ("dram_bytes", Json::num(*dram_bytes as f64)),
+            ]),
+            TraceEvent::SpecDeclared {
+                t,
+                replicas,
+                devices,
+                parked,
+                drift,
+            } => Json::obj(vec![
+                ("ev", Json::str("spec_declared")),
+                ("t", Json::num(*t)),
+                ("replicas", Json::num(*replicas as f64)),
+                ("devices", Json::num(*devices as f64)),
+                ("parked", Json::num(*parked as f64)),
+                ("drift", Json::num(*drift as f64)),
+            ]),
+            TraceEvent::ReconcileStep {
+                t,
+                replica,
+                step,
+                applied,
+            } => Json::obj(vec![
+                ("ev", Json::str("reconcile_step")),
+                ("t", Json::num(*t)),
+                ("replica", Json::num(*replica as f64)),
+                ("step", Json::str(step.clone())),
+                ("applied", Json::Bool(*applied)),
+            ]),
+            TraceEvent::HeartbeatMissed { t, replica } => Json::obj(vec![
+                ("ev", Json::str("heartbeat_missed")),
+                ("t", Json::num(*t)),
+                ("replica", Json::num(*replica as f64)),
+            ]),
+            TraceEvent::ReplicaEvicted {
+                t,
+                replica,
+                requeued,
+            } => Json::obj(vec![
+                ("ev", Json::str("replica_evicted")),
+                ("t", Json::num(*t)),
+                ("replica", Json::num(*replica as f64)),
+                ("requeued", Json::num(*requeued as f64)),
             ]),
         }
     }
@@ -709,6 +845,21 @@ mod tests {
             },
             TraceEvent::TierAudit { t: 3.5, replica: 0, dram_bytes: 1024 },
             TraceEvent::Finished { t: 4.0, id: 1, tokens: 8 },
+            TraceEvent::SpecDeclared {
+                t: 4.5,
+                replicas: 2,
+                devices: 6,
+                parked: 0,
+                drift: 1,
+            },
+            TraceEvent::ReconcileStep {
+                t: 4.5,
+                replica: 1,
+                step: "resize->4".to_string(),
+                applied: true,
+            },
+            TraceEvent::HeartbeatMissed { t: 5.0, replica: 1 },
+            TraceEvent::ReplicaEvicted { t: 5.5, replica: 1, requeued: 3 },
         ];
         let mut tr = Trace::new();
         let mut hashes = vec![tr.state_hash()];
@@ -722,6 +873,6 @@ mod tests {
         let j = tr.to_json().to_string();
         // Round-trips through the parser (structurally valid JSON).
         let parsed = crate::util::json::parse(&j).unwrap();
-        assert_eq!(parsed.get("events").as_arr().unwrap().len(), 15);
+        assert_eq!(parsed.get("events").as_arr().unwrap().len(), 19);
     }
 }

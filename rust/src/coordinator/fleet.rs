@@ -13,16 +13,25 @@
 //!
 //! The fleet loop runs on a [`crate::sim::EventQueue`] of typed
 //! [`FleetEvent`]s: each arrival is a `Route` event dispatched to a
-//! replica inbox at its arrival instant, and the self-rescheduling
-//! `PolicyTick` advances every replica's discrete-event clock to the tick
-//! time, drains tier journals, retires drained replicas, and lets the
-//! [`FleetPolicy`] observe and act. Replica-internal stage boundaries
-//! (switchover readiness, pause windows, downtime, boot/unpark
-//! `ready_at`) live on each replica's own timeline inside
+//! replica inbox at its arrival instant, the self-rescheduling
+//! `Heartbeat` stamps every serving replica's liveness, and the
+//! self-rescheduling `PolicyTick` advances every replica's
+//! discrete-event clock to the tick time, drains tier journals, retires
+//! drained replicas, and runs one **reconcile round**: the
+//! [`FleetPolicy`] declares a desired [`FleetSpec`], the
+//! [`Reconciler`] diffs it against the observed loads into idempotent
+//! [`ReconcileStep`]s, and each step is enacted behind a precondition
+//! guard — a stale or duplicate step is a checked no-op traced with
+//! `applied: false`, never a silent mutation. Steps are re-derived from
+//! observed state every round, so an interrupted or aborted transition
+//! resumes by re-planning, not by replaying a log. Replica-internal
+//! stage boundaries (switchover readiness, pause windows, downtime,
+//! boot/unpark `ready_at`) live on each replica's own timeline inside
 //! [`FleetSim::advance_replica`], which jumps replica clocks
 //! event-to-event rather than polling. Every transition folds into a
 //! [`StateHash`] exposed as [`FleetOutput::state_hash`]; see
-//! `docs/architecture/07-event-core.md`.
+//! `docs/architecture/07-event-core.md` and
+//! `docs/architecture/09-control-plane.md`.
 
 use std::cell::RefCell;
 use std::collections::VecDeque;
@@ -43,6 +52,7 @@ use crate::workload::Request;
 
 use super::estimator::ScaleDecision;
 use super::policy::{FleetAction, FleetPolicy, ReplicaLoad};
+use super::reconciler::{ReconcileStep, Reconciler};
 use super::serving::{
     begin_transition_on, build_engine, complete_pending, log_command,
     replica_gauges, sync_pause_window, PendingScale,
@@ -56,8 +66,13 @@ enum FleetEvent {
     /// timestamp into a replica inbox).
     Route,
     /// Fleet policy boundary: advance all replicas to the tick, observe,
-    /// act. Self-reschedules every `window` until the trace is served.
+    /// reconcile. Self-reschedules every `window` until the trace is
+    /// served.
     PolicyTick,
+    /// Liveness beat: every serving replica stamps `last_heartbeat`
+    /// (unless the fault injector swallows the beat). Self-reschedules
+    /// every [`FleetSim::heartbeat_period`].
+    Heartbeat,
 }
 
 /// How arrivals are spread across ready replicas.
@@ -119,6 +134,11 @@ struct Replica {
     /// store; engine gone, inbox kept so arrivals can queue while the
     /// policy wakes it).
     parked: bool,
+    /// Last liveness beat this replica landed (absolute time). The
+    /// reconciler evicts a serving replica whose staleness passes
+    /// [`FleetSim::heartbeat_deadline`]; parked and booting replicas are
+    /// exempt.
+    last_heartbeat: f64,
     kv_factor: f64,
     batch_factor: f64,
 }
@@ -249,6 +269,13 @@ pub struct FleetSim {
     /// piggybacks on existing `PolicyTick` events and never folds into
     /// the state hash.
     pub obs: bool,
+    /// Liveness beat period (seconds) for the self-rescheduling
+    /// `Heartbeat` event.
+    pub heartbeat_period: f64,
+    /// Staleness past which a serving replica is suspect and evicted by
+    /// the reconciler. Several beat periods wide, so a single swallowed
+    /// beat never evicts.
+    pub heartbeat_deadline: f64,
 }
 
 impl FleetSim {
@@ -262,6 +289,8 @@ impl FleetSim {
             router,
             injector: None,
             obs: false,
+            heartbeat_period: 2.5,
+            heartbeat_deadline: 12.0,
         }
     }
 
@@ -321,6 +350,7 @@ impl FleetSim {
                 draining: false,
                 retired: false,
                 parked: false,
+                last_heartbeat: 0.0,
                 kv_factor,
                 batch_factor,
             });
@@ -363,11 +393,16 @@ impl FleetSim {
             queue.push(r.arrival, FleetEvent::Route);
         }
         queue.push(self.window, FleetEvent::PolicyTick);
+        queue.push(self.heartbeat_period, FleetEvent::Heartbeat);
+        let reconciler = Reconciler::new(self.heartbeat_deadline);
 
         // Routing / policy scratch, reused across events so the hot path
-        // stays allocation-free after warm-up.
+        // stays allocation-free after warm-up. `prev_loads` keeps the
+        // previous round's observation so a `StaleObservedState` fault
+        // can hand the reconciler an old snapshot.
         let mut eligible: Vec<(usize, usize)> = Vec::new();
         let mut loads: Vec<ReplicaLoad> = Vec::new();
+        let mut prev_loads: Vec<ReplicaLoad> = Vec::new();
 
         'sim: while let Some(ev) = queue.pop() {
             if ev.payload == FleetEvent::Route {
@@ -383,6 +418,43 @@ impl FleetSim {
                     &mut rr,
                     &mut eligible,
                 )?;
+                continue;
+            }
+            if ev.payload == FleetEvent::Heartbeat {
+                // Liveness beats: every serving replica stamps its
+                // `last_heartbeat`, unless the injector swallows the
+                // beat (`HeartbeatLoss`). Parked and still-booting
+                // replicas beat nothing — the reconciler exempts them.
+                for rep in replicas.iter_mut() {
+                    if rep.retired || rep.parked || rep.ready_at > ev.at {
+                        continue;
+                    }
+                    let lost = self
+                        .injector
+                        .as_ref()
+                        .map(|i| i.borrow_mut().on_heartbeat(rep.id))
+                        .unwrap_or(false);
+                    if lost {
+                        trace.push(TraceEvent::HeartbeatMissed {
+                            t: ev.at,
+                            replica: rep.id,
+                        });
+                        if let Some(t) = tel.as_mut() {
+                            t.inc("heartbeats_missed", 1);
+                            t.spans.instant(
+                                rep.id,
+                                "heartbeat_missed",
+                                ev.at,
+                            );
+                        }
+                    } else {
+                        rep.last_heartbeat = ev.at;
+                    }
+                }
+                queue.push(
+                    ev.at + self.heartbeat_period,
+                    FleetEvent::Heartbeat,
+                );
                 continue;
             }
 
@@ -499,7 +571,11 @@ impl FleetSim {
                 break 'sim;
             }
 
-            // 6) Policy tick over the window that just ended.
+            // 6) Reconcile round over the window that just ended: the
+            // policy declares the desired spec, the reconciler diffs it
+            // against the observed loads into idempotent steps, and
+            // every step enacts behind a precondition guard (stale or
+            // duplicate steps become traced no-ops).
             let attainment =
                 recorder.attainment_by_arrival(t_start, t_end, &self.slo);
             loads.clear();
@@ -525,6 +601,11 @@ impl FleetSim {
                         draining: r.draining,
                         parked: r.parked,
                         imbalance: r.method.placement_imbalance(),
+                        // Boot completion counts as an implicit beat: a
+                        // replica cannot have beaten before it was
+                        // ready, and must not be evicted for that
+                        // silence.
+                        last_heartbeat: r.last_heartbeat.max(r.ready_at),
                     }),
             );
             for l in &loads {
@@ -537,248 +618,544 @@ impl FleetSim {
                 shash.fold_bool(l.draining);
                 shash.fold_bool(l.parked);
                 shash.fold_f64(l.imbalance);
+                shash.fold_f64(l.last_heartbeat);
             }
             let reserved: usize =
                 replicas.iter().map(|r| r.devices_reserved()).sum();
             let free = limits.pool_devices.saturating_sub(reserved);
-            let action = policy.decide(t_end, attainment, &loads, free);
-            match action {
-                FleetAction::Hold => shash.fold_usize(0),
-                FleetAction::VerticalUp { replica, to_devices } => {
-                    shash.fold_usize(1);
-                    shash.fold_usize(replica);
-                    shash.fold_usize(to_devices);
-                }
-                FleetAction::VerticalDown { replica, to_devices } => {
-                    shash.fold_usize(2);
-                    shash.fold_usize(replica);
-                    shash.fold_usize(to_devices);
-                }
-                FleetAction::Park { replica } => {
-                    shash.fold_usize(3);
-                    shash.fold_usize(replica);
-                }
-                FleetAction::Unpark { replica } => {
-                    shash.fold_usize(4);
-                    shash.fold_usize(replica);
-                }
-                FleetAction::AddReplica => shash.fold_usize(5),
-                FleetAction::DrainReplica { replica } => {
-                    shash.fold_usize(6);
-                    shash.fold_usize(replica);
-                }
-                FleetAction::Rebalance { replica } => {
-                    shash.fold_usize(7);
-                    shash.fold_usize(replica);
+            let spec = policy.decide(t_end, attainment, &loads, free);
+            shash.fold_usize(spec.replicas.len());
+            for s in &spec.replicas {
+                shash.fold_usize(s.id);
+                shash.fold_usize(s.devices);
+                shash.fold_bool(s.parked);
+            }
+            shash.fold_bool(spec.rebalance.is_some());
+            shash.fold_usize(spec.rebalance.unwrap_or(0));
+
+            // Control-plane fault directives for this round; fault
+            // records fired outside a scale command (swallowed beats,
+            // the round directives themselves) drain into the trace
+            // here so the convergence invariant can anchor on the last
+            // fired fault.
+            let round = self
+                .injector
+                .as_ref()
+                .map(|i| i.borrow_mut().begin_round())
+                .unwrap_or_default();
+            if let Some(inj) = self.injector.as_ref() {
+                for rec in inj.borrow_mut().take_fired() {
+                    trace.push(TraceEvent::FaultFired {
+                        t: t_end,
+                        event: rec.event,
+                        fault: rec.kind,
+                    });
                 }
             }
-            match action {
-                FleetAction::Hold => {}
-                FleetAction::VerticalUp { replica, to_devices }
-                | FleetAction::VerticalDown { replica, to_devices } => {
-                    let target = self.par(to_devices)?;
-                    let rep = &mut replicas[replica];
-                    // Hand the replica's live block tables to the method
-                    // so its KV-migration planner can carry them.
-                    let outcome = match rep.engine.as_ref() {
-                        Some(e) => rep.method.scale_with_kv(
-                            &target,
-                            &KvSnapshot::capture(&e.kv, &rep.current),
-                        )?,
-                        None => rep.method.scale(&target)?,
-                    };
-                    let ev = event_seq;
-                    event_seq += 1;
-                    log_command(
-                        &mut trace,
-                        tel.as_mut(),
-                        replica,
-                        self.injector.as_ref(),
-                        t_end,
-                        ev,
-                        rep.current.n_devices(),
-                        &outcome,
-                    );
-                    let paused = begin_transition_on(
-                        &outcome,
-                        rep.engine.as_mut(),
-                        &mut trace,
-                        t_end,
-                        ev,
-                    );
-                    rep.pending =
-                        Some(PendingScale::new(outcome, t_end, ev, paused));
-                    actions.push((t_end, action));
-                }
-                FleetAction::Park { replica } => {
-                    // Only an idle replica parks (the policy filters on
-                    // queue/occupancy; in-flight work or a mid-scale
-                    // transition vetoes it here).
-                    let rep = &mut replicas[replica];
-                    let idle = rep.inbox.is_empty()
-                        && rep.pending.is_none()
-                        && rep
-                            .engine
-                            .as_ref()
-                            .map(|e| !e.has_work())
-                            .unwrap_or(false);
-                    let parked_ok = idle
-                        && matches!(rep.method.park()?, Some(_));
-                    if parked_ok {
-                        // d2h staging runs in the background — the
-                        // replica already left the rotation.
-                        rep.engine = None;
-                        rep.parked = true;
-                        if let Some(t) = tel.as_mut() {
-                            t.inc("parks", 1);
-                            t.spans.begin(replica, "parked", t_end);
-                        }
-                        actions.push((t_end, action));
-                    } else {
-                        // Vetoed (in-flight work raced the policy's
-                        // snapshot): hand the consumed Down trigger and
-                        // the replica cooldown back so parking retries
-                        // next window instead of waiting out a cycle.
-                        policy.clear_event(replica);
-                        policy.estimator.refund(ScaleDecision::Down);
+            shash.fold_bool(round.stale);
+            shash.fold_bool(round.duplicate);
+
+            // A `StaleObservedState` round reconciles against the
+            // previous round's snapshot; the enactment guards keep the
+            // resulting steps safe.
+            let observed: &[ReplicaLoad] =
+                if round.stale && !prev_loads.is_empty() {
+                    &prev_loads
+                } else {
+                    &loads
+                };
+            let steps = reconciler.plan(&spec, observed, t_end);
+            trace.push(TraceEvent::SpecDeclared {
+                t: t_end,
+                replicas: spec.replicas.len(),
+                devices: spec.devices_total(),
+                parked: spec.parked_count(),
+                drift: steps.len(),
+            });
+            if let Some(t) = tel.as_mut() {
+                t.record_series(
+                    "fleet/spec_drift",
+                    t_end,
+                    steps.len() as f64,
+                );
+            }
+            shash.fold_usize(steps.len());
+            for s in &steps {
+                match *s {
+                    ReconcileStep::Resize { replica, to_devices } => {
+                        shash.fold_usize(0);
+                        shash.fold_usize(replica);
+                        shash.fold_usize(to_devices);
+                    }
+                    ReconcileStep::Park { replica } => {
+                        shash.fold_usize(1);
+                        shash.fold_usize(replica);
+                    }
+                    ReconcileStep::Unpark { replica } => {
+                        shash.fold_usize(2);
+                        shash.fold_usize(replica);
+                    }
+                    ReconcileStep::Add { slot, devices } => {
+                        shash.fold_usize(3);
+                        shash.fold_usize(slot);
+                        shash.fold_usize(devices);
+                    }
+                    ReconcileStep::Drain { replica } => {
+                        shash.fold_usize(4);
+                        shash.fold_usize(replica);
+                    }
+                    ReconcileStep::Rebalance { replica } => {
+                        shash.fold_usize(5);
+                        shash.fold_usize(replica);
+                    }
+                    ReconcileStep::Evict { replica } => {
+                        shash.fold_usize(6);
+                        shash.fold_usize(replica);
                     }
                 }
-                FleetAction::Unpark { replica } => {
-                    // Re-check the exact device footprint against the
-                    // pool: the parked replica's devices went back to
-                    // the budget at park and may have been granted away.
-                    let reserved: usize = replicas
-                        .iter()
-                        .map(|r| r.devices_reserved())
-                        .sum();
-                    let rep = &mut replicas[replica];
-                    let fits = reserved + rep.current.n_devices()
-                        <= limits.pool_devices;
-                    let boot = if rep.parked && fits {
-                        rep.method.unpark()?
-                    } else {
-                        None
+            }
+
+            // Enact. A `DuplicateCommand` round replays the whole step
+            // batch a second time — the guards turn the replay into
+            // traced no-ops, which is exactly what the fault tests.
+            let passes = if round.duplicate { 2 } else { 1 };
+            let mut added_slots: Vec<usize> = Vec::new();
+            for pass in 0..passes {
+                for step in &steps {
+                    let applied = match *step {
+                        ReconcileStep::Resize { replica, to_devices } => {
+                            let to = to_devices;
+                            let ok = replica < replicas.len() && {
+                                let others: usize = replicas
+                                    .iter()
+                                    .filter(|r| r.id != replica)
+                                    .map(|r| r.devices_reserved())
+                                    .sum();
+                                let rep = &replicas[replica];
+                                !rep.retired
+                                    && !rep.draining
+                                    && !rep.parked
+                                    && rep.pending.is_none()
+                                    && rep.ready_at <= t_end
+                                    && rep.current.n_devices() != to
+                                    && others + rep.current.n_devices().max(to)
+                                        <= limits.pool_devices
+                            };
+                            if ok {
+                                let target = self.par(to)?;
+                                let rep = &mut replicas[replica];
+                                let from = rep.current.n_devices();
+                                // Hand the replica's live block tables to
+                                // the method so its KV-migration planner
+                                // can carry them.
+                                let outcome = match rep.engine.as_ref() {
+                                    Some(e) => rep.method.scale_with_kv(
+                                        &target,
+                                        &KvSnapshot::capture(
+                                            &e.kv,
+                                            &rep.current,
+                                        ),
+                                    )?,
+                                    None => rep.method.scale(&target)?,
+                                };
+                                let evn = event_seq;
+                                event_seq += 1;
+                                log_command(
+                                    &mut trace,
+                                    tel.as_mut(),
+                                    replica,
+                                    self.injector.as_ref(),
+                                    t_end,
+                                    evn,
+                                    from,
+                                    &outcome,
+                                );
+                                let paused = begin_transition_on(
+                                    &outcome,
+                                    rep.engine.as_mut(),
+                                    &mut trace,
+                                    t_end,
+                                    evn,
+                                );
+                                rep.pending = Some(PendingScale::new(
+                                    outcome, t_end, evn, paused,
+                                ));
+                                let act = if to > from {
+                                    FleetAction::VerticalUp {
+                                        replica,
+                                        to_devices: to,
+                                    }
+                                } else {
+                                    FleetAction::VerticalDown {
+                                        replica,
+                                        to_devices: to,
+                                    }
+                                };
+                                actions.push((t_end, act));
+                            }
+                            ok
+                        }
+                        ReconcileStep::Park { replica } => {
+                            let mut ok = false;
+                            if replica < replicas.len()
+                                && !replicas[replica].retired
+                                && !replicas[replica].draining
+                                && !replicas[replica].parked
+                            {
+                                // Only an idle replica parks (in-flight
+                                // work or a mid-scale transition vetoes
+                                // it here).
+                                let rep = &mut replicas[replica];
+                                let idle = rep.inbox.is_empty()
+                                    && rep.pending.is_none()
+                                    && rep
+                                        .engine
+                                        .as_ref()
+                                        .map(|e| !e.has_work())
+                                        .unwrap_or(false);
+                                if idle
+                                    && matches!(rep.method.park()?, Some(_))
+                                {
+                                    // d2h staging runs in the background —
+                                    // the replica already left the
+                                    // rotation.
+                                    rep.engine = None;
+                                    rep.parked = true;
+                                    if let Some(t) = tel.as_mut() {
+                                        t.inc("parks", 1);
+                                        t.spans.begin(
+                                            replica, "parked", t_end,
+                                        );
+                                    }
+                                    actions.push((
+                                        t_end,
+                                        FleetAction::Park { replica },
+                                    ));
+                                    ok = true;
+                                } else if pass == 0 {
+                                    // Vetoed (in-flight work raced the
+                                    // policy's snapshot): hand the
+                                    // consumed Down trigger and the
+                                    // replica cooldown back so parking
+                                    // retries next window.
+                                    policy.clear_event(replica);
+                                    policy
+                                        .estimator
+                                        .refund(ScaleDecision::Down);
+                                }
+                            }
+                            ok
+                        }
+                        ReconcileStep::Unpark { replica } => {
+                            let mut ok = false;
+                            if replica < replicas.len() {
+                                // Re-check the exact device footprint
+                                // against the pool: the parked replica's
+                                // devices went back to the budget at park
+                                // and may have been granted away.
+                                let reserved: usize = replicas
+                                    .iter()
+                                    .map(|r| r.devices_reserved())
+                                    .sum();
+                                let rep = &mut replicas[replica];
+                                let fits = reserved
+                                    + rep.current.n_devices()
+                                    <= limits.pool_devices;
+                                let was_parked = rep.parked;
+                                let boot = if was_parked && fits {
+                                    rep.method.unpark()?
+                                } else {
+                                    None
+                                };
+                                if let Some(boot_t) = boot {
+                                    rep.parked = false;
+                                    rep.engine = Some(build_engine(
+                                        &self.cost,
+                                        self.hbm_per_device,
+                                        self.max_batch,
+                                        &rep.current,
+                                        rep.kv_factor,
+                                        rep.batch_factor,
+                                    ));
+                                    rep.ready_at = t_end + boot_t;
+                                    unpark_boots.push((t_end, boot_t));
+                                    if let Some(t) = tel.as_mut() {
+                                        t.inc("unparks", 1);
+                                        t.spans.end(
+                                            replica, "parked", t_end,
+                                        );
+                                        t.spans.span(
+                                            replica,
+                                            None,
+                                            "unpark_boot",
+                                            CAT_LIFECYCLE,
+                                            t_end,
+                                            t_end + boot_t,
+                                        );
+                                    }
+                                    actions.push((
+                                        t_end,
+                                        FleetAction::Unpark { replica },
+                                    ));
+                                    ok = true;
+                                } else if pass == 0 && was_parked {
+                                    // Vetoed (pool exhausted): release
+                                    // the cooldown so the wake-up
+                                    // retries.
+                                    policy.clear_event(replica);
+                                }
+                            }
+                            ok
+                        }
+                        ReconcileStep::Add { slot, devices } => {
+                            let reserved: usize = replicas
+                                .iter()
+                                .map(|r| r.devices_reserved())
+                                .sum();
+                            // `added_slots` makes a duplicated Add a
+                            // no-op: the booted replica's id differs
+                            // from the spec's placeholder slot, so the
+                            // slot itself is the only reliable witness
+                            // within the round.
+                            let ok = !added_slots.contains(&slot)
+                                && devices > 0
+                                && reserved + devices
+                                    <= limits.pool_devices;
+                            if ok {
+                                added_slots.push(slot);
+                                let id = replicas.len();
+                                let mut method = factory(id)?;
+                                let par = self.par(devices)?;
+                                let boot_t = method.boot(&par)?;
+                                cold_boots += 1;
+                                let kv_factor = method.steady_kv_factor();
+                                let batch_factor =
+                                    method.steady_batch_factor();
+                                let engine = build_engine(
+                                    &self.cost,
+                                    self.hbm_per_device,
+                                    self.max_batch,
+                                    &par,
+                                    kv_factor,
+                                    batch_factor,
+                                );
+                                let clock = SimClock::new();
+                                clock.advance_to(t_end);
+                                replicas.push(Replica {
+                                    id,
+                                    method,
+                                    engine: Some(engine),
+                                    clock,
+                                    current: par.clone(),
+                                    inbox: VecDeque::new(),
+                                    pending: None,
+                                    ready_at: t_end + boot_t,
+                                    draining: false,
+                                    retired: false,
+                                    parked: false,
+                                    last_heartbeat: t_end,
+                                    kv_factor,
+                                    batch_factor,
+                                });
+                                policy.note_event(id, t_end);
+                                if let Some(t) = tel.as_mut() {
+                                    t.inc("cold_boots", 1);
+                                    t.spans.span(
+                                        id,
+                                        None,
+                                        "cold_boot",
+                                        CAT_LIFECYCLE,
+                                        t_end,
+                                        t_end + boot_t,
+                                    );
+                                }
+                                actions
+                                    .push((t_end, FleetAction::AddReplica));
+                            }
+                            ok
+                        }
+                        ReconcileStep::Drain { replica } => {
+                            // Checked no-op on an already-draining (or
+                            // retired, or parked) replica — draining was
+                            // previously set unconditionally, silently
+                            // re-draining under stale or duplicated
+                            // commands.
+                            let ok = replica < replicas.len() && {
+                                let rep = &replicas[replica];
+                                !rep.retired
+                                    && !rep.draining
+                                    && !rep.parked
+                            };
+                            if ok {
+                                replicas[replica].draining = true;
+                                if let Some(t) = tel.as_mut() {
+                                    t.inc("drains", 1);
+                                    t.spans.instant(
+                                        replica, "drain", t_end,
+                                    );
+                                }
+                                actions.push((
+                                    t_end,
+                                    FleetAction::DrainReplica { replica },
+                                ));
+                            }
+                            ok
+                        }
+                        ReconcileStep::Rebalance { replica } => {
+                            // Redistribution-only event: same devices,
+                            // new expert placement. Methods without
+                            // load-aware placement decline (None) and
+                            // the step is a no-op; the replica's
+                            // cooldown was still charged by the policy,
+                            // which keeps a persistently declining
+                            // method from being re-asked every window.
+                            let mut ok = false;
+                            if replica < replicas.len()
+                                && !replicas[replica].retired
+                                && !replicas[replica].draining
+                                && !replicas[replica].parked
+                                && replicas[replica].pending.is_none()
+                                && replicas[replica].ready_at <= t_end
+                            {
+                                let rep = &mut replicas[replica];
+                                if let Some(outcome) =
+                                    rep.method.rebalance()?
+                                {
+                                    let evn = event_seq;
+                                    event_seq += 1;
+                                    log_command(
+                                        &mut trace,
+                                        tel.as_mut(),
+                                        replica,
+                                        self.injector.as_ref(),
+                                        t_end,
+                                        evn,
+                                        rep.current.n_devices(),
+                                        &outcome,
+                                    );
+                                    let paused = begin_transition_on(
+                                        &outcome,
+                                        rep.engine.as_mut(),
+                                        &mut trace,
+                                        t_end,
+                                        evn,
+                                    );
+                                    rep.pending = Some(PendingScale::new(
+                                        outcome, t_end, evn, paused,
+                                    ));
+                                    actions.push((
+                                        t_end,
+                                        FleetAction::Rebalance { replica },
+                                    ));
+                                    ok = true;
+                                }
+                            }
+                            ok
+                        }
+                        ReconcileStep::Evict { replica } => {
+                            let ok = replica < replicas.len()
+                                && {
+                                    let rep = &replicas[replica];
+                                    !rep.retired
+                                        && !rep.parked
+                                        && rep.pending.is_none()
+                                }
+                                && replicas.iter().any(|r| {
+                                    r.id != replica
+                                        && !r.retired
+                                        && !r.draining
+                                        && !r.parked
+                                        && r.engine.is_some()
+                                });
+                            if ok {
+                                let mut orphans: Vec<Request> = Vec::new();
+                                {
+                                    let rep = &mut replicas[replica];
+                                    while let Some(r) =
+                                        rep.inbox.pop_front()
+                                    {
+                                        orphans.push(r);
+                                    }
+                                    if let Some(mut eng) = rep.engine.take()
+                                    {
+                                        let (running, waiting) =
+                                            eng.drain();
+                                        orphans.extend(running);
+                                        orphans.extend(waiting);
+                                    }
+                                    rep.draining = false;
+                                    rep.retired = true;
+                                }
+                                let requeued = orphans.len();
+                                for r in orphans {
+                                    // Restart-from-scratch re-homing:
+                                    // the fresh request re-prefills and
+                                    // generates its full budget, so
+                                    // exactly-once finish and token
+                                    // conservation survive the eviction.
+                                    let mut fresh = Request::new(
+                                        r.id,
+                                        r.arrival,
+                                        r.prompt_len,
+                                        r.max_new_tokens,
+                                    )
+                                    .with_tenant(r.tenant);
+                                    fresh.prompt_ids = r.prompt_ids;
+                                    let target = replicas
+                                        .iter()
+                                        .filter(|c| {
+                                            c.id != replica
+                                                && !c.retired
+                                                && !c.draining
+                                                && !c.parked
+                                                && c.engine.is_some()
+                                        })
+                                        .min_by_key(|c| {
+                                            (c.backlog(), c.id)
+                                        })
+                                        .map(|c| c.id)
+                                        .unwrap();
+                                    replicas[target]
+                                        .inbox
+                                        .push_back(fresh);
+                                }
+                                trace.push(TraceEvent::ReplicaEvicted {
+                                    t: t_end,
+                                    replica,
+                                    requeued,
+                                });
+                                if let Some(t) = tel.as_mut() {
+                                    t.inc("evictions", 1);
+                                    t.spans.instant(
+                                        replica, "evicted", t_end,
+                                    );
+                                }
+                            }
+                            ok
+                        }
                     };
-                    if let Some(boot_t) = boot {
-                        rep.parked = false;
-                        rep.engine = Some(build_engine(
-                            &self.cost,
-                            self.hbm_per_device,
-                            self.max_batch,
-                            &rep.current,
-                            rep.kv_factor,
-                            rep.batch_factor,
-                        ));
-                        rep.ready_at = t_end + boot_t;
-                        unpark_boots.push((t_end, boot_t));
-                        if let Some(t) = tel.as_mut() {
-                            t.inc("unparks", 1);
-                            t.spans.end(replica, "parked", t_end);
-                            t.spans.span(
-                                replica,
-                                None,
-                                "unpark_boot",
-                                CAT_LIFECYCLE,
+                    trace.push(TraceEvent::ReconcileStep {
+                        t: t_end,
+                        replica: step.replica(),
+                        step: step.describe(),
+                        applied,
+                    });
+                    shash.fold_bool(applied);
+                    if let Some(t) = tel.as_mut() {
+                        t.inc("reconcile_steps", 1);
+                        if !applied {
+                            t.inc("reconcile_noops", 1);
+                            t.spans.instant(
+                                step.replica(),
+                                "reconcile_noop",
                                 t_end,
-                                t_end + boot_t,
                             );
                         }
-                        actions.push((t_end, action));
-                    } else {
-                        // Vetoed (pool exhausted or nothing parked):
-                        // release the cooldown so the wake-up retries.
-                        policy.clear_event(replica);
-                    }
-                }
-                FleetAction::AddReplica => {
-                    let id = replicas.len();
-                    let mut method = factory(id)?;
-                    let boot_t = method.boot(&base_par)?;
-                    cold_boots += 1;
-                    let kv_factor = method.steady_kv_factor();
-                    let batch_factor = method.steady_batch_factor();
-                    let engine = build_engine(
-                        &self.cost,
-                        self.hbm_per_device,
-                        self.max_batch,
-                        &base_par,
-                        kv_factor,
-                        batch_factor,
-                    );
-                    let clock = SimClock::new();
-                    clock.advance_to(t_end);
-                    replicas.push(Replica {
-                        id,
-                        method,
-                        engine: Some(engine),
-                        clock,
-                        current: base_par.clone(),
-                        inbox: VecDeque::new(),
-                        pending: None,
-                        ready_at: t_end + boot_t,
-                        draining: false,
-                        retired: false,
-                        parked: false,
-                        kv_factor,
-                        batch_factor,
-                    });
-                    policy.note_event(id, t_end);
-                    if let Some(t) = tel.as_mut() {
-                        t.inc("cold_boots", 1);
-                        t.spans.span(
-                            id,
-                            None,
-                            "cold_boot",
-                            CAT_LIFECYCLE,
-                            t_end,
-                            t_end + boot_t,
-                        );
-                    }
-                    actions.push((t_end, action));
-                }
-                FleetAction::DrainReplica { replica } => {
-                    replicas[replica].draining = true;
-                    if let Some(t) = tel.as_mut() {
-                        t.inc("drains", 1);
-                        t.spans.instant(replica, "drain", t_end);
-                    }
-                    actions.push((t_end, action));
-                }
-                FleetAction::Rebalance { replica } => {
-                    // Redistribution-only event: same devices, new expert
-                    // placement. Methods without load-aware placement
-                    // decline (None) and the window is a no-op; the
-                    // replica's cooldown was still charged by the policy,
-                    // which keeps a persistently declining method from
-                    // being re-asked every single window.
-                    let rep = &mut replicas[replica];
-                    if let Some(outcome) = rep.method.rebalance()? {
-                        let ev = event_seq;
-                        event_seq += 1;
-                        log_command(
-                            &mut trace,
-                            tel.as_mut(),
-                            replica,
-                            self.injector.as_ref(),
-                            t_end,
-                            ev,
-                            rep.current.n_devices(),
-                            &outcome,
-                        );
-                        let paused = begin_transition_on(
-                            &outcome,
-                            rep.engine.as_mut(),
-                            &mut trace,
-                            t_end,
-                            ev,
-                        );
-                        rep.pending = Some(PendingScale::new(
-                            outcome, t_end, ev, paused,
-                        ));
-                        actions.push((t_end, action));
                     }
                 }
             }
+            prev_loads.clear();
+            prev_loads.extend_from_slice(&loads);
 
             queue.push(t_end + self.window, FleetEvent::PolicyTick);
         }
@@ -1042,6 +1419,7 @@ impl FleetSim {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::chaos::{check_all, FaultEntry, FaultKind, FaultPlan};
     use crate::config::model::dsv2_lite;
     use crate::config::SloConfig;
     use crate::coordinator::policy::{FleetLimits, PolicyMode};
@@ -1381,6 +1759,167 @@ mod tests {
         }
         assert_eq!(out.cold_boots, 0);
         assert_eq!(out.recorder.count(), n, "trace fully served");
+    }
+
+    /// Regression for the stale/duplicate-enactment bugfix: a
+    /// `DuplicateCommand` round replays the whole step batch, and every
+    /// replayed step (resize on a mid-transition replica, park on a
+    /// parked one, drain on an already-draining one, ...) must be a
+    /// checked no-op with an `applied: false` trace mark — never a
+    /// silent second mutation.
+    #[test]
+    fn duplicate_command_replay_is_a_checked_noop() {
+        let horizon = 240.0;
+        let run = |dup: bool| {
+            let mut sim = fleet(Router::JoinShortestQueue);
+            if dup {
+                // Duplicate every reachable round.
+                let plan = FaultPlan {
+                    entries: (0..200)
+                        .map(|r| FaultEntry {
+                            event: r,
+                            kind: FaultKind::DuplicateCommand,
+                        })
+                        .collect(),
+                };
+                sim.injector =
+                    Some(Rc::new(RefCell::new(FaultInjector::new(plan))));
+            }
+            let mut policy = fast_policy(PolicyMode::Hybrid, 8);
+            sim.run(
+                &mut policy,
+                &mut elastic_factory(8),
+                2,
+                burst_trace(horizon),
+                horizon,
+            )
+            .unwrap()
+        };
+        let baseline = run(false);
+        let out = run(true);
+        // The replay changed nothing the first pass had not already
+        // done: the applied-action log matches the fault-free run.
+        assert_eq!(out.actions, baseline.actions);
+        assert_eq!(out.recorder.count(), baseline.recorder.count());
+        let count = |want: bool, tr: &Trace| {
+            tr.events
+                .iter()
+                .filter(|e| {
+                    matches!(
+                        e,
+                        TraceEvent::ReconcileStep { applied, .. }
+                            if *applied == want
+                    )
+                })
+                .count()
+        };
+        let applied = count(true, &out.trace);
+        let noops = count(false, &out.trace);
+        assert!(applied >= 1, "burst must plan real steps");
+        assert!(
+            noops >= applied,
+            "every applied step must replay as a checked no-op \
+             ({applied} applied, {noops} no-ops)"
+        );
+        assert_eq!(count(false, &baseline.trace), 0);
+        let v = check_all(&out.trace);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    /// Heartbeat loss past the staleness deadline evicts the (false-)
+    /// suspect replica, re-homes its queued and in-flight work, and
+    /// re-plans the spec slot — with every request still finishing
+    /// exactly once on its full token budget.
+    #[test]
+    fn heartbeat_loss_evicts_and_rehomes_exactly_once() {
+        // Replica 0 goes silent from its 4th beat: 12 swallowed beats
+        // (t = 12.5 .. 40) push staleness past the 12 s deadline while
+        // the replica keeps serving.
+        let plan = FaultPlan::single(
+            4,
+            FaultKind::HeartbeatLoss { replica: 0, beats: 12 },
+        );
+        let mut sim = fleet(Router::JoinShortestQueue);
+        sim.injector =
+            Some(Rc::new(RefCell::new(FaultInjector::new(plan))));
+        let mut policy = fast_policy(PolicyMode::Hybrid, 8);
+        let mut g = WorkloadGen::new(WorkloadSpec {
+            prompt_len: 2000,
+            decode_min: 100,
+            decode_max: 150,
+            profile: RateProfile::Fixed(0.8),
+            seed: 5,
+        });
+        let arrivals = g.arrivals_until(90.0);
+        let n = arrivals.len();
+        let out = sim
+            .run(&mut policy, &mut elastic_factory(8), 2, arrivals, 90.0)
+            .unwrap();
+        let missed = out
+            .trace
+            .events
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e,
+                    TraceEvent::HeartbeatMissed { replica: 0, .. }
+                )
+            })
+            .count();
+        assert!(missed >= 1, "beats must be lost");
+        let evictions = out
+            .trace
+            .events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::ReplicaEvicted { .. }))
+            .count();
+        assert_eq!(evictions, 1, "exactly one eviction");
+        // The evicted slot was re-planned as a replacement boot.
+        assert!(out.cold_boots >= 1, "slot must be re-planned");
+        assert_eq!(out.recorder.count(), n, "trace fully served");
+        let v = check_all(&out.trace);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    /// A reconciler fed a stale snapshot every round still converges:
+    /// the guards turn snapshot-lag steps (resize against an old
+    /// footprint, unpark on a no-longer-parked replica) into traced
+    /// no-ops and the run serves everything with zero violations.
+    #[test]
+    fn stale_observed_state_converges_through_guards() {
+        let horizon = 240.0;
+        let plan = FaultPlan::single(
+            1,
+            FaultKind::StaleObservedState { ticks: 200 },
+        );
+        let mut sim = fleet(Router::JoinShortestQueue);
+        sim.injector =
+            Some(Rc::new(RefCell::new(FaultInjector::new(plan))));
+        let mut policy = fast_policy(PolicyMode::Hybrid, 8);
+        let out = sim
+            .run(
+                &mut policy,
+                &mut elastic_factory(8),
+                2,
+                burst_trace(horizon),
+                horizon,
+            )
+            .unwrap();
+        assert_eq!(out.truncated, 0, "stale rounds must not lose work");
+        let noops = out
+            .trace
+            .events
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e,
+                    TraceEvent::ReconcileStep { applied: false, .. }
+                )
+            })
+            .count();
+        assert!(noops >= 1, "snapshot lag must surface as checked no-ops");
+        let v = check_all(&out.trace);
+        assert!(v.is_empty(), "{v:?}");
     }
 
     #[test]

@@ -9,14 +9,17 @@
 pub mod estimator;
 pub mod fleet;
 pub mod policy;
+pub mod reconciler;
 pub mod reference;
 pub mod serving;
 
 pub use estimator::{LoadEstimator, ScaleDecision};
 pub use fleet::{FleetOutput, FleetSim, Router};
 pub use policy::{
-    FleetAction, FleetLimits, FleetPolicy, PolicyMode, ReplicaLoad,
+    FleetAction, FleetLimits, FleetPolicy, FleetSpec, PolicyMode,
+    ReplicaLoad, ReplicaSpec,
 };
+pub use reconciler::{ReconcileStep, Reconciler};
 pub use reference::{
     compare_cores, telemetry_overhead, CoreComparison, TelemetryOverhead,
 };

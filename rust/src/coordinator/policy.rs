@@ -8,6 +8,13 @@
 //! shared device-pool budget, the per-replica vertical envelope, and
 //! per-replica cooldowns (so one hot replica cannot absorb every event
 //! while others starve).
+//!
+//! The policy's public contract is declarative: [`FleetPolicy::decide`]
+//! projects the chosen action onto the observed loads and returns a
+//! [`FleetSpec`] — the desired fleet state — which the
+//! [`super::reconciler::Reconciler`] diffs against observed state each
+//! tick into idempotent steps. [`FleetPolicy::decide_action`] remains
+//! the imperative kernel underneath (and the unit-test surface).
 
 use std::collections::HashMap;
 
@@ -41,6 +48,11 @@ pub struct ReplicaLoad {
     /// (1.0 = balanced or unknown; see
     /// [`crate::scaling::ScalingMethod::placement_imbalance`]).
     pub imbalance: f64,
+    /// Absolute time of the replica's last received heartbeat. The
+    /// reconciler marks a live replica suspect (and evicts it) once
+    /// `now - last_heartbeat` passes its staleness deadline; parked and
+    /// booting replicas are exempt.
+    pub last_heartbeat: f64,
 }
 
 /// Fleet sizing envelope and the shared device-pool budget.
@@ -94,6 +106,55 @@ pub enum FleetAction {
     /// Bring a parked replica back (DRAM-warm fast boot). Preferred over
     /// every other scale-up action: cheapest capacity in the fleet.
     Unpark { replica: usize },
+}
+
+/// Desired state of one replica slot in a [`FleetSpec`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplicaSpec {
+    /// Replica id the slot binds to. Slots for not-yet-booted replicas
+    /// carry a placeholder id (max observed + 1); the simulator assigns
+    /// the real id at boot and the next round's projection re-binds.
+    pub id: usize,
+    /// Devices the slot should hold while serving. `0` on a non-parked
+    /// slot means "keep the replica's current footprint" — used when
+    /// unparking, where the pre-park size is simulator state the policy
+    /// cannot observe. Parked slots always carry 0.
+    pub devices: usize,
+    /// The slot is parked at zero devices (weights DRAM-warm).
+    pub parked: bool,
+}
+
+/// The policy's declared desired fleet state for one reconcile round:
+/// one slot per replica that should exist. Observed replicas absent
+/// from the spec are drained out of the fleet; spec slots with no
+/// observed counterpart are booted. The
+/// [`super::reconciler::Reconciler`] diffs this against observed state
+/// into idempotent [`super::reconciler::ReconcileStep`]s.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FleetSpec {
+    pub replicas: Vec<ReplicaSpec>,
+    /// Redistribution-only request on one replica this round (same
+    /// devices, new expert placement). Not part of the persistent
+    /// desired state: a rebalance is a one-shot event, not a condition
+    /// to converge on.
+    pub rebalance: Option<usize>,
+}
+
+impl FleetSpec {
+    /// The slot for replica `id`, if the spec wants it to exist.
+    pub fn slot(&self, id: usize) -> Option<&ReplicaSpec> {
+        self.replicas.iter().find(|s| s.id == id)
+    }
+
+    /// Devices the spec asks for across all slots.
+    pub fn devices_total(&self) -> usize {
+        self.replicas.iter().map(|s| s.devices).sum()
+    }
+
+    /// Parked slots in the spec.
+    pub fn parked_count(&self) -> usize {
+        self.replicas.iter().filter(|s| s.parked).count()
+    }
 }
 
 /// The fleet policy: fleet-wide hysteresis plus action selection.
@@ -160,12 +221,90 @@ impl FleetPolicy {
             .unwrap_or(true)
     }
 
+    /// Declare the desired fleet state for the window ending at `now`:
+    /// observe the fleet exactly as [`Self::decide_action`] does, then
+    /// project the chosen action onto the observed loads as a
+    /// [`FleetSpec`] for the reconciler to converge on.
+    pub fn decide(
+        &mut self,
+        now: f64,
+        attainment: f64,
+        loads: &[ReplicaLoad],
+        free_devices: usize,
+    ) -> FleetSpec {
+        let action = self.decide_action(now, attainment, loads, free_devices);
+        self.project(action, loads)
+    }
+
+    /// Project one imperative action onto the observed loads: the
+    /// identity spec (every non-draining replica keeps its footprint)
+    /// with the action's one-slot delta applied.
+    pub fn project(
+        &self,
+        action: FleetAction,
+        loads: &[ReplicaLoad],
+    ) -> FleetSpec {
+        let mut spec = FleetSpec {
+            replicas: loads
+                .iter()
+                .filter(|l| !l.draining)
+                .map(|l| ReplicaSpec {
+                    id: l.id,
+                    devices: l.devices,
+                    parked: l.parked,
+                })
+                .collect(),
+            rebalance: None,
+        };
+        let slot = |spec: &mut FleetSpec, id: usize| {
+            spec.replicas.iter_mut().find(|s| s.id == id)
+        };
+        match action {
+            FleetAction::Hold => {}
+            FleetAction::VerticalUp { replica, to_devices }
+            | FleetAction::VerticalDown { replica, to_devices } => {
+                if let Some(s) = slot(&mut spec, replica) {
+                    s.devices = to_devices;
+                }
+            }
+            FleetAction::Park { replica } => {
+                if let Some(s) = slot(&mut spec, replica) {
+                    s.parked = true;
+                    s.devices = 0;
+                }
+            }
+            FleetAction::Unpark { replica } => {
+                // devices stays 0: the replica resumes at its pre-park
+                // size, which only the simulator knows.
+                if let Some(s) = slot(&mut spec, replica) {
+                    s.parked = false;
+                }
+            }
+            FleetAction::AddReplica => {
+                let id =
+                    loads.iter().map(|l| l.id + 1).max().unwrap_or(0);
+                spec.replicas.push(ReplicaSpec {
+                    id,
+                    devices: self.limits.replica_base,
+                    parked: false,
+                });
+            }
+            FleetAction::DrainReplica { replica } => {
+                spec.replicas.retain(|s| s.id != replica);
+            }
+            FleetAction::Rebalance { replica } => {
+                spec.rebalance = Some(replica);
+            }
+        }
+        spec
+    }
+
     /// Decide the fleet action for the window ending at `now`.
     ///
     /// `attainment` is the fleet-wide windowed SLO attainment (NaN when no
     /// traffic finished), `loads` the per-replica snapshots, and
     /// `free_devices` what remains of the shared pool budget.
-    pub fn decide(
+    pub fn decide_action(
         &mut self,
         now: f64,
         attainment: f64,
@@ -427,6 +566,7 @@ mod tests {
             draining: false,
             parked: false,
             imbalance: 1.0,
+            last_heartbeat: 0.0,
         }
     }
 
@@ -434,7 +574,7 @@ mod tests {
     fn hybrid_prefers_vertical_on_the_hottest_replica() {
         let mut p = policy(PolicyMode::Hybrid);
         let loads = [load(0, 2, 0.9, 3), load(1, 2, 1.0, 20)];
-        let a = p.decide(5.0, 0.5, &loads, 8);
+        let a = p.decide_action(5.0, 0.5, &loads, 8);
         assert_eq!(
             a,
             FleetAction::VerticalUp {
@@ -449,7 +589,7 @@ mod tests {
         let mut p = policy(PolicyMode::Hybrid);
         // Both replicas at the vertical ceiling.
         let loads = [load(0, 6, 1.0, 10), load(1, 6, 1.0, 10)];
-        let a = p.decide(5.0, 0.5, &loads, 4);
+        let a = p.decide_action(5.0, 0.5, &loads, 4);
         assert_eq!(a, FleetAction::AddReplica);
     }
 
@@ -463,7 +603,7 @@ mod tests {
         let mut busy = load(0, 4, 1.0, 20);
         busy.busy = true;
         let loads = [busy, load(1, 2, 1.0, 15)];
-        assert_eq!(p.decide(5.0, 0.5, &loads, 6), FleetAction::Hold);
+        assert_eq!(p.decide_action(5.0, 0.5, &loads, 6), FleetAction::Hold);
     }
 
     #[test]
@@ -476,7 +616,7 @@ mod tests {
         boot.busy = true;
         boot.booting = true;
         let loads = [load(0, 6, 1.0, 20), load(1, 6, 1.0, 20), boot];
-        assert_eq!(p.decide(5.0, 0.5, &loads, 10), FleetAction::AddReplica);
+        assert_eq!(p.decide_action(5.0, 0.5, &loads, 10), FleetAction::AddReplica);
     }
 
     #[test]
@@ -487,12 +627,12 @@ mod tests {
         // Trigger fires but the only replica is mid-scale: Hold + refund.
         let mut busy = load(0, 2, 1.0, 20);
         busy.busy = true;
-        assert_eq!(p.decide(5.0, 0.5, &[busy], 6), FleetAction::Hold);
+        assert_eq!(p.decide_action(5.0, 0.5, &[busy], 6), FleetAction::Hold);
         // Next window the replica is free: despite the 100 s estimator
         // cooldown, the refunded trigger acts immediately.
         let loads = [load(0, 2, 1.0, 20)];
         assert_eq!(
-            p.decide(10.0, 0.5, &loads, 6),
+            p.decide_action(10.0, 0.5, &loads, 6),
             FleetAction::VerticalUp {
                 replica: 0,
                 to_devices: 4
@@ -504,14 +644,14 @@ mod tests {
     fn pool_budget_blocks_everything() {
         let mut p = policy(PolicyMode::Hybrid);
         let loads = [load(0, 6, 1.0, 10)];
-        assert_eq!(p.decide(5.0, 0.5, &loads, 1), FleetAction::Hold);
+        assert_eq!(p.decide_action(5.0, 0.5, &loads, 1), FleetAction::Hold);
     }
 
     #[test]
     fn horizontal_only_never_scales_vertically() {
         let mut p = policy(PolicyMode::HorizontalOnly);
         let loads = [load(0, 2, 1.0, 10)];
-        assert_eq!(p.decide(5.0, 0.5, &loads, 8), FleetAction::AddReplica);
+        assert_eq!(p.decide_action(5.0, 0.5, &loads, 8), FleetAction::AddReplica);
     }
 
     #[test]
@@ -519,7 +659,7 @@ mod tests {
         let mut p = policy(PolicyMode::Hybrid);
         // Grown replica present: shrink it first.
         let loads = [load(0, 4, 0.1, 0), load(1, 2, 0.1, 0)];
-        let a = p.decide(5.0, 1.0, &loads, 0);
+        let a = p.decide_action(5.0, 1.0, &loads, 0);
         assert_eq!(
             a,
             FleetAction::VerticalDown {
@@ -530,7 +670,7 @@ mod tests {
         // All at base: drain the idler one (floor permitting).
         let mut p = policy(PolicyMode::Hybrid);
         let loads = [load(0, 2, 0.3, 0), load(1, 2, 0.05, 0)];
-        let a = p.decide(5.0, 1.0, &loads, 0);
+        let a = p.decide_action(5.0, 1.0, &loads, 0);
         assert_eq!(a, FleetAction::DrainReplica { replica: 1 });
     }
 
@@ -538,7 +678,7 @@ mod tests {
     fn min_replicas_floor_holds() {
         let mut p = policy(PolicyMode::Hybrid);
         let loads = [load(0, 2, 0.05, 0)];
-        assert_eq!(p.decide(5.0, 1.0, &loads, 0), FleetAction::Hold);
+        assert_eq!(p.decide_action(5.0, 1.0, &loads, 0), FleetAction::Hold);
     }
 
     #[test]
@@ -550,7 +690,7 @@ mod tests {
         skew.imbalance = 2.0;
         let loads = [load(0, 4, 0.5, 0), skew];
         assert_eq!(
-            p.decide(5.0, 1.0, &loads, 4),
+            p.decide_action(5.0, 1.0, &loads, 4),
             FleetAction::Rebalance { replica: 1 }
         );
         // The event starts the replica's cooldown.
@@ -560,10 +700,10 @@ mod tests {
         skew.imbalance = 2.0;
         let loads = [load(0, 4, 0.5, 0), skew];
         assert_eq!(
-            p.decide(5.0, 1.0, &loads, 4),
+            p.decide_action(5.0, 1.0, &loads, 4),
             FleetAction::Rebalance { replica: 1 }
         );
-        assert_eq!(p.decide(10.0, 1.0, &loads, 4), FleetAction::Hold);
+        assert_eq!(p.decide_action(10.0, 1.0, &loads, 4), FleetAction::Hold);
     }
 
     #[test]
@@ -572,17 +712,17 @@ mod tests {
         // Below threshold: hold.
         let mut mild = load(0, 4, 0.5, 0);
         mild.imbalance = 1.2;
-        assert_eq!(p.decide(5.0, 1.0, &[mild], 4), FleetAction::Hold);
+        assert_eq!(p.decide_action(5.0, 1.0, &[mild], 4), FleetAction::Hold);
         // Above threshold but mid-transition: hold.
         let mut busy = load(0, 4, 0.5, 0);
         busy.imbalance = 3.0;
         busy.busy = true;
-        assert_eq!(p.decide(10.0, 1.0, &[busy], 4), FleetAction::Hold);
+        assert_eq!(p.decide_action(10.0, 1.0, &[busy], 4), FleetAction::Hold);
         // Horizontal-only fleets cannot remap experts.
         let mut p = policy(PolicyMode::HorizontalOnly);
         let mut skew = load(0, 4, 0.5, 0);
         skew.imbalance = 3.0;
-        assert_eq!(p.decide(5.0, 1.0, &[skew], 4), FleetAction::Hold);
+        assert_eq!(p.decide_action(5.0, 1.0, &[skew], 4), FleetAction::Hold);
     }
 
     #[test]
@@ -593,7 +733,7 @@ mod tests {
         let mut skew = load(0, 2, 1.0, 20);
         skew.imbalance = 3.0;
         assert_eq!(
-            p.decide(5.0, 0.5, &[skew], 8),
+            p.decide_action(5.0, 0.5, &[skew], 8),
             FleetAction::VerticalUp {
                 replica: 0,
                 to_devices: 4
@@ -609,11 +749,11 @@ mod tests {
         p.estimator.down_patience = 1;
         // Traffic seen at t=10 (non-NaN attainment)...
         let busy_load = [load(0, 2, 0.6, 0)];
-        assert_eq!(p.decide(10.0, 1.0, &busy_load, 0), FleetAction::Hold);
+        assert_eq!(p.decide_action(10.0, 1.0, &busy_load, 0), FleetAction::Hold);
         // ...then idle at t=40: park beats drain, even at the floor
         // (min_replicas = 1, single replica).
         let idle = [load(0, 2, 0.0, 0)];
-        let a = p.decide(40.0, f64::NAN, &idle, 0);
+        let a = p.decide_action(40.0, f64::NAN, &idle, 0);
         assert_eq!(a, FleetAction::Park { replica: 0 });
         // Beyond the TTL the forecast expires: drain path (blocked by
         // the floor here -> Hold).
@@ -621,8 +761,8 @@ mod tests {
         p.park_enabled = true;
         p.park_ttl = 10.0;
         p.estimator.down_patience = 1;
-        assert_eq!(p.decide(10.0, 1.0, &busy_load, 0), FleetAction::Hold);
-        assert_eq!(p.decide(200.0, f64::NAN, &idle, 0), FleetAction::Hold);
+        assert_eq!(p.decide_action(10.0, 1.0, &busy_load, 0), FleetAction::Hold);
+        assert_eq!(p.decide_action(200.0, f64::NAN, &idle, 0), FleetAction::Hold);
     }
 
     #[test]
@@ -635,7 +775,7 @@ mod tests {
         // still wins (cheapest capacity).
         let loads = [load(0, 2, 1.0, 20), parked];
         assert_eq!(
-            p.decide(5.0, 0.5, &loads, 8),
+            p.decide_action(5.0, 0.5, &loads, 8),
             FleetAction::Unpark { replica: 1 }
         );
     }
@@ -647,18 +787,18 @@ mod tests {
         let mut parked = load(0, 0, 0.0, 3); // arrivals queued in inbox
         parked.parked = true;
         assert_eq!(
-            p.decide(5.0, f64::NAN, &[parked], 2),
+            p.decide_action(5.0, f64::NAN, &[parked], 2),
             FleetAction::Unpark { replica: 0 }
         );
         // No queue: stay parked.
         let mut quiet = load(0, 0, 0.0, 0);
         quiet.parked = true;
-        assert_eq!(p.decide(10.0, f64::NAN, &[quiet], 2), FleetAction::Hold);
+        assert_eq!(p.decide_action(10.0, f64::NAN, &[quiet], 2), FleetAction::Hold);
         // Park disabled: an all-parked fleet (however it got there) holds.
         let mut p = policy(PolicyMode::Hybrid);
         let mut parked = load(0, 0, 0.0, 3);
         parked.parked = true;
-        assert_eq!(p.decide(5.0, f64::NAN, &[parked], 2), FleetAction::Hold);
+        assert_eq!(p.decide_action(5.0, f64::NAN, &[parked], 2), FleetAction::Hold);
     }
 
     #[test]
@@ -666,7 +806,7 @@ mod tests {
         let mut p = policy(PolicyMode::Hybrid);
         p.replica_cooldown = 100.0;
         let loads = [load(0, 2, 1.0, 20), load(1, 2, 0.9, 5)];
-        let a = p.decide(5.0, 0.5, &loads, 8);
+        let a = p.decide_action(5.0, 0.5, &loads, 8);
         assert_eq!(
             a,
             FleetAction::VerticalUp {
@@ -676,7 +816,7 @@ mod tests {
         );
         // Replica 0 is cooling down: the next event lands on replica 1.
         let loads = [load(0, 4, 1.0, 20), load(1, 2, 0.9, 5)];
-        let a = p.decide(10.0, 0.5, &loads, 6);
+        let a = p.decide_action(10.0, 0.5, &loads, 6);
         assert_eq!(
             a,
             FleetAction::VerticalUp {
@@ -684,5 +824,81 @@ mod tests {
                 to_devices: 4
             }
         );
+    }
+
+    #[test]
+    fn hold_projects_to_the_identity_spec() {
+        let p = policy(PolicyMode::Hybrid);
+        let mut draining = load(2, 2, 0.0, 0);
+        draining.draining = true;
+        let loads = [load(0, 4, 0.5, 0), load(1, 2, 0.5, 0), draining];
+        let spec = p.project(FleetAction::Hold, &loads);
+        // Draining replicas are already leaving: no slot for them.
+        assert_eq!(spec.replicas.len(), 2);
+        assert_eq!(spec.slot(0).unwrap().devices, 4);
+        assert_eq!(spec.slot(1).unwrap().devices, 2);
+        assert!(spec.slot(2).is_none());
+        assert_eq!(spec.devices_total(), 6);
+        assert_eq!(spec.parked_count(), 0);
+        assert_eq!(spec.rebalance, None);
+    }
+
+    #[test]
+    fn actions_project_as_one_slot_deltas() {
+        let p = policy(PolicyMode::Hybrid);
+        let loads = [load(0, 4, 0.5, 0), load(1, 2, 0.5, 0)];
+
+        let up = p.project(
+            FleetAction::VerticalUp { replica: 1, to_devices: 4 },
+            &loads,
+        );
+        assert_eq!(up.slot(1).unwrap().devices, 4);
+        assert_eq!(up.slot(0).unwrap().devices, 4, "other slots untouched");
+
+        let drain =
+            p.project(FleetAction::DrainReplica { replica: 0 }, &loads);
+        assert!(drain.slot(0).is_none());
+        assert_eq!(drain.replicas.len(), 1);
+
+        let add = p.project(FleetAction::AddReplica, &loads);
+        assert_eq!(add.replicas.len(), 3);
+        let new = add.slot(2).unwrap();
+        assert_eq!(new.devices, p.limits.replica_base);
+        assert!(!new.parked);
+
+        let park = p.project(FleetAction::Park { replica: 1 }, &loads);
+        let s = park.slot(1).unwrap();
+        assert!(s.parked);
+        assert_eq!(s.devices, 0);
+        assert_eq!(park.parked_count(), 1);
+
+        let reb =
+            p.project(FleetAction::Rebalance { replica: 0 }, &loads);
+        assert_eq!(reb.rebalance, Some(0));
+        assert_eq!(reb.replicas.len(), 2, "rebalance keeps the identity");
+    }
+
+    #[test]
+    fn unpark_projects_to_an_unparked_slot_at_unknown_size() {
+        let p = policy(PolicyMode::Hybrid);
+        let mut parked = load(1, 0, 0.0, 2);
+        parked.parked = true;
+        let loads = [load(0, 2, 0.5, 0), parked];
+        let spec =
+            p.project(FleetAction::Unpark { replica: 1 }, &loads);
+        let s = spec.slot(1).unwrap();
+        assert!(!s.parked);
+        // devices 0 = "resume at the simulator-known pre-park size".
+        assert_eq!(s.devices, 0);
+    }
+
+    #[test]
+    fn decide_returns_the_projected_spec() {
+        let mut p = policy(PolicyMode::Hybrid);
+        let loads = [load(0, 2, 0.9, 3), load(1, 2, 1.0, 20)];
+        let spec = p.decide(5.0, 0.5, &loads, 8);
+        // Same observation as decide_action: VerticalUp on replica 1.
+        assert_eq!(spec.slot(1).unwrap().devices, 4);
+        assert_eq!(spec.slot(0).unwrap().devices, 2);
     }
 }

@@ -1,0 +1,339 @@
+//! Declared-spec vs observed-state reconciler for the fleet control
+//! plane.
+//!
+//! Each `PolicyTick`, [`crate::coordinator::FleetPolicy::decide`]
+//! declares a [`FleetSpec`] and [`Reconciler::plan`] diffs it against
+//! the observed [`ReplicaLoad`]s into a batch of idempotent
+//! [`ReconcileStep`]s. The planner is **pure and stateless**: a step
+//! interrupted by a crash or an aborted scale is simply re-derived from
+//! observed state on the next tick — never replayed from a log — so
+//! duplicate or stale enactment converges instead of compounding.
+//!
+//! The diff also owns the heartbeat/eviction lifecycle: a live,
+//! non-parked replica whose `last_heartbeat` is staler than
+//! [`Reconciler::heartbeat_deadline`] is suspect and gets an
+//! [`ReconcileStep::Evict`]; its spec slot (now with no healthy
+//! observed counterpart) is re-planned as an [`ReconcileStep::Add`] in
+//! the same round.
+//!
+//! A round's *spec drift* is its planned step count — the distance
+//! between declared and observed state. Replicas mid-transition
+//! (`busy`) are converging, not drifted, and are skipped. See
+//! `docs/architecture/09-control-plane.md`.
+
+use super::policy::{FleetSpec, ReplicaLoad};
+
+/// One idempotent reconcile step. Enactment must be guarded: a step
+/// whose precondition no longer holds in observed state (already
+/// applied, replica busy, pool exhausted) is a checked no-op, traced
+/// with `applied: false`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReconcileStep {
+    /// Scale `replica` vertically to `to_devices`.
+    Resize { replica: usize, to_devices: usize },
+    /// Park `replica` at zero devices (DRAM-warm scale-to-zero).
+    Park { replica: usize },
+    /// Wake parked `replica` at its pre-park footprint.
+    Unpark { replica: usize },
+    /// Boot a fresh replica for spec slot `slot` with `devices`
+    /// devices (the simulator assigns the real replica id at boot).
+    Add { slot: usize, devices: usize },
+    /// Stop routing to `replica`; release its devices once drained.
+    Drain { replica: usize },
+    /// Redistribution-only event on `replica` (same devices, new
+    /// expert placement).
+    Rebalance { replica: usize },
+    /// `replica`'s heartbeat staleness passed the deadline: retire it
+    /// and re-home its queued/in-flight requests.
+    Evict { replica: usize },
+}
+
+impl ReconcileStep {
+    /// The replica (or spec slot) the step targets.
+    pub fn replica(&self) -> usize {
+        match self {
+            ReconcileStep::Resize { replica, .. }
+            | ReconcileStep::Park { replica }
+            | ReconcileStep::Unpark { replica }
+            | ReconcileStep::Drain { replica }
+            | ReconcileStep::Rebalance { replica }
+            | ReconcileStep::Evict { replica } => *replica,
+            ReconcileStep::Add { slot, .. } => *slot,
+        }
+    }
+
+    /// Stable description for trace rendering (the
+    /// [`crate::chaos::TraceEvent::ReconcileStep`] `step` field).
+    pub fn describe(&self) -> String {
+        match self {
+            ReconcileStep::Resize { to_devices, .. } => {
+                format!("resize->{to_devices}")
+            }
+            ReconcileStep::Park { .. } => "park".to_string(),
+            ReconcileStep::Unpark { .. } => "unpark".to_string(),
+            ReconcileStep::Add { devices, .. } => {
+                format!("add@{devices}")
+            }
+            ReconcileStep::Drain { .. } => "drain".to_string(),
+            ReconcileStep::Rebalance { .. } => "rebalance".to_string(),
+            ReconcileStep::Evict { .. } => "evict".to_string(),
+        }
+    }
+}
+
+/// Diffs a declared [`FleetSpec`] against observed [`ReplicaLoad`]s.
+#[derive(Debug, Clone, Copy)]
+pub struct Reconciler {
+    /// Seconds without a heartbeat before a live, non-parked,
+    /// already-booted replica is suspect and evicted.
+    pub heartbeat_deadline: f64,
+}
+
+impl Reconciler {
+    pub fn new(heartbeat_deadline: f64) -> Self {
+        Reconciler { heartbeat_deadline }
+    }
+
+    /// Plan the steps that converge `observed` onto `spec` at `now`.
+    ///
+    /// Deterministic and pure: same inputs, same step batch, in a
+    /// stable order (evictions first, then per-slot convergence in spec
+    /// order, then drains in observed order, then the rebalance
+    /// passthrough). The batch length is the round's spec drift.
+    pub fn plan(
+        &self,
+        spec: &FleetSpec,
+        observed: &[ReplicaLoad],
+        now: f64,
+    ) -> Vec<ReconcileStep> {
+        let mut steps = Vec::new();
+
+        // 1) Heartbeat staleness: evict suspects. Parked replicas beat
+        // nothing by design; busy replicas (mid-scale or booting) are
+        // left to finish their transition and re-checked next round.
+        let mut evicted = Vec::new();
+        for l in observed {
+            if !l.parked
+                && !l.draining
+                && !l.busy
+                && now - l.last_heartbeat > self.heartbeat_deadline
+            {
+                steps.push(ReconcileStep::Evict { replica: l.id });
+                evicted.push(l.id);
+            }
+        }
+        let healthy = |id: usize| -> Option<&ReplicaLoad> {
+            if evicted.contains(&id) {
+                return None;
+            }
+            observed.iter().find(|l| l.id == id && !l.draining)
+        };
+
+        // 2) Per-slot convergence, in spec order.
+        for s in &spec.replicas {
+            match healthy(s.id) {
+                Some(l) => {
+                    if l.busy {
+                        // Converging, not drifted: a transition or boot
+                        // is in flight toward (or away from) the spec.
+                        continue;
+                    }
+                    if l.parked && !s.parked {
+                        steps.push(ReconcileStep::Unpark { replica: s.id });
+                    } else if !l.parked && s.parked {
+                        steps.push(ReconcileStep::Park { replica: s.id });
+                    } else if !l.parked
+                        && s.devices > 0
+                        && l.devices != s.devices
+                    {
+                        steps.push(ReconcileStep::Resize {
+                            replica: s.id,
+                            to_devices: s.devices,
+                        });
+                    }
+                }
+                // No healthy observed counterpart: boot the slot. A
+                // parked or size-unspecified slot has nothing concrete
+                // to boot and waits for the next projection.
+                None => {
+                    if !s.parked && s.devices > 0 {
+                        steps.push(ReconcileStep::Add {
+                            slot: s.id,
+                            devices: s.devices,
+                        });
+                    }
+                }
+            }
+        }
+
+        // 3) Observed replicas absent from the spec drain out.
+        for l in observed {
+            if !l.draining
+                && !evicted.contains(&l.id)
+                && spec.slot(l.id).is_none()
+            {
+                steps.push(ReconcileStep::Drain { replica: l.id });
+            }
+        }
+
+        // 4) One-shot rebalance passthrough.
+        if let Some(r) = spec.rebalance {
+            if let Some(l) = healthy(r) {
+                if !l.busy && !l.parked {
+                    steps.push(ReconcileStep::Rebalance { replica: r });
+                }
+            }
+        }
+
+        steps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::ReplicaSpec;
+
+    fn obs(id: usize, devices: usize, hb: f64) -> ReplicaLoad {
+        ReplicaLoad {
+            id,
+            devices,
+            occupancy: 0.5,
+            queue_depth: 0,
+            busy: false,
+            booting: false,
+            draining: false,
+            parked: false,
+            imbalance: 1.0,
+            last_heartbeat: hb,
+        }
+    }
+
+    fn slot(id: usize, devices: usize, parked: bool) -> ReplicaSpec {
+        ReplicaSpec { id, devices, parked }
+    }
+
+    fn spec(slots: Vec<ReplicaSpec>) -> FleetSpec {
+        FleetSpec { replicas: slots, rebalance: None }
+    }
+
+    fn rec() -> Reconciler {
+        Reconciler::new(10.0)
+    }
+
+    #[test]
+    fn converged_fleet_plans_nothing() {
+        let s = spec(vec![slot(0, 4, false), slot(1, 2, false)]);
+        let o = [obs(0, 4, 20.0), obs(1, 2, 20.0)];
+        assert!(rec().plan(&s, &o, 21.0).is_empty());
+    }
+
+    #[test]
+    fn device_mismatch_plans_a_resize() {
+        let s = spec(vec![slot(0, 6, false)]);
+        let o = [obs(0, 4, 20.0)];
+        assert_eq!(
+            rec().plan(&s, &o, 21.0),
+            vec![ReconcileStep::Resize { replica: 0, to_devices: 6 }]
+        );
+    }
+
+    #[test]
+    fn busy_replicas_are_converging_not_drifted() {
+        let s = spec(vec![slot(0, 6, false)]);
+        let mut l = obs(0, 4, 20.0);
+        l.busy = true;
+        assert!(rec().plan(&s, &[l], 21.0).is_empty());
+    }
+
+    #[test]
+    fn missing_slot_adds_and_extra_replica_drains() {
+        let s = spec(vec![slot(0, 4, false), slot(2, 2, false)]);
+        let o = [obs(0, 4, 20.0), obs(1, 2, 20.0)];
+        assert_eq!(
+            rec().plan(&s, &o, 21.0),
+            vec![
+                ReconcileStep::Add { slot: 2, devices: 2 },
+                ReconcileStep::Drain { replica: 1 },
+            ]
+        );
+        // An already-draining replica is not re-drained.
+        let mut draining = obs(1, 2, 20.0);
+        draining.draining = true;
+        let o = [obs(0, 4, 20.0), draining];
+        assert_eq!(
+            rec().plan(&s, &o, 21.0),
+            vec![ReconcileStep::Add { slot: 2, devices: 2 }]
+        );
+    }
+
+    #[test]
+    fn park_mismatches_plan_park_and_unpark() {
+        let s = spec(vec![slot(0, 0, true)]);
+        let o = [obs(0, 2, 20.0)];
+        assert_eq!(
+            rec().plan(&s, &o, 21.0),
+            vec![ReconcileStep::Park { replica: 0 }]
+        );
+        let s = spec(vec![slot(0, 0, false)]);
+        let mut parked = obs(0, 0, 0.0); // parked replicas beat nothing
+        parked.parked = true;
+        assert_eq!(
+            rec().plan(&s, &[parked], 100.0),
+            vec![ReconcileStep::Unpark { replica: 0 }],
+            "parked replicas are heartbeat-exempt and wake on demand"
+        );
+    }
+
+    #[test]
+    fn stale_heartbeat_evicts_and_replans_the_slot() {
+        let s = spec(vec![slot(0, 4, false), slot(1, 2, false)]);
+        let o = [obs(0, 4, 20.0), obs(1, 2, 5.0)]; // 1 is 16 s stale
+        assert_eq!(
+            rec().plan(&s, &o, 21.0),
+            vec![
+                ReconcileStep::Evict { replica: 1 },
+                ReconcileStep::Add { slot: 1, devices: 2 },
+            ]
+        );
+    }
+
+    #[test]
+    fn plan_is_idempotent_on_the_converged_state() {
+        // Applying the planned steps (modelled) yields a state the
+        // planner has nothing left to say about.
+        let s = spec(vec![slot(0, 6, false)]);
+        let o = [obs(0, 4, 20.0)];
+        let steps = rec().plan(&s, &o, 21.0);
+        assert_eq!(steps.len(), 1);
+        let after = [obs(0, 6, 20.0)]; // resize applied
+        assert!(rec().plan(&s, &after, 21.0).is_empty());
+    }
+
+    #[test]
+    fn rebalance_passes_through_only_when_enactable() {
+        let mut s = spec(vec![slot(0, 4, false)]);
+        s.rebalance = Some(0);
+        assert_eq!(
+            rec().plan(&s, &[obs(0, 4, 20.0)], 21.0),
+            vec![ReconcileStep::Rebalance { replica: 0 }]
+        );
+        let mut busy = obs(0, 4, 20.0);
+        busy.busy = true;
+        assert!(rec().plan(&s, &[busy], 21.0).is_empty());
+    }
+
+    #[test]
+    fn steps_describe_stably() {
+        assert_eq!(
+            ReconcileStep::Resize { replica: 1, to_devices: 4 }.describe(),
+            "resize->4"
+        );
+        assert_eq!(
+            ReconcileStep::Add { slot: 2, devices: 2 }.describe(),
+            "add@2"
+        );
+        assert_eq!(ReconcileStep::Evict { replica: 0 }.describe(), "evict");
+        assert_eq!(ReconcileStep::Evict { replica: 3 }.replica(), 3);
+    }
+}

@@ -31,6 +31,10 @@
 //! |         | warm park/unpark vs disk-cold vs always-on on a  |
 //! |         | serverless on/off bursty trace, with the tier    |
 //! |         | byte-conservation invariant checked               |
+//! | reconcile | control-plane reconciler conformance: the      |
+//! |         | heartbeat-loss / stale-snapshot / duplicate-     |
+//! |         | command fault matrix with the bounded-convergence|
+//! |         | invariant checked per cell                       |
 
 pub mod chaos;
 pub mod common;
@@ -45,6 +49,7 @@ pub mod fig10;
 pub mod fig11;
 pub mod fig12;
 pub mod placement;
+pub mod reconcile;
 pub mod tables;
 pub mod tier;
 
@@ -56,7 +61,7 @@ pub use common::ExpOptions;
 pub const ALL: &[&str] = &[
     "fig1a", "fig1b", "fig4a", "fig4b", "fig7", "fig8", "fig9a", "fig9b",
     "fig10", "fig11", "fig12", "table1", "table2", "table3", "fleet",
-    "placement", "kvmigrate", "chaos", "tier",
+    "placement", "kvmigrate", "chaos", "tier", "reconcile",
 ];
 
 /// Run one experiment by id, returning the rendered report.
@@ -102,6 +107,7 @@ pub fn run_with(id: &str, opts: &ExpOptions) -> Result<String> {
         "kvmigrate" => kvmigrate::run(opts)?,
         "chaos" => chaos::run(opts)?,
         "tier" => tier::run(opts)?,
+        "reconcile" => reconcile::run(opts)?,
         other => bail!("unknown experiment '{other}' (see `repro exp list`)"),
     };
     // Persist alongside printing.

@@ -61,8 +61,9 @@ fn print_usage() {
          \n\
          exp options (parsed once, shared by every experiment):\n\
          --fast          smaller scenario set / shorter horizons\n\
-         --seed N        workload + fault-schedule seed (chaos/fleet/tier);\n\
-         \x20               a failing chaos cell prints the seed to replay it\n\
+         --seed N        workload + fault-schedule seed (chaos/fleet/\n\
+         \x20               tier/reconcile); a failing chaos or reconcile\n\
+         \x20               cell prints the seed to replay it\n\
          \n\
          serve options:\n\
          --model dsv2lite|qwen30b|dsv3   (default dsv2lite)\n\

@@ -24,7 +24,7 @@
 //! threads.
 
 use elastic_moe::chaos::{FaultKind, PlanAudit, Trace, TraceEvent};
-use elastic_moe::experiments::{chaos, kvmigrate};
+use elastic_moe::experiments::{chaos, kvmigrate, reconcile};
 use elastic_moe::obs::export::chrome_trace;
 use elastic_moe::obs::spans::{
     CAT_CONCURRENT, CAT_LIFECYCLE, CAT_SWITCHOVER,
@@ -91,6 +91,39 @@ fn kvmigrate_sweep(seeds: &[u64]) {
     }
 }
 
+/// Run the control-plane reconcile matrix (fault-free plus heartbeat
+/// loss, stale observed snapshot, duplicate command enactment) twice per
+/// seed: zero violations — including the bounded-convergence invariant —
+/// and a bit-identical `state_hash` on the re-run of every cell.
+fn reconcile_sweep(seeds: &[u64]) {
+    for &seed in seeds {
+        let a = reconcile::conformance(seed).unwrap();
+        let b = reconcile::conformance(seed).unwrap();
+        assert!(!a.is_empty(), "reconcile matrix must be non-empty");
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                x.violations, 0,
+                "seed {seed}: cell [{}] violated invariants (replay with \
+                 `repro exp reconcile --seed {seed}`)",
+                x.fault
+            );
+            assert_eq!(
+                x.completed, x.arrived,
+                "seed {seed}: cell [{}] lost requests",
+                x.fault
+            );
+            assert_eq!(
+                x.state_hash, y.state_hash,
+                "seed {seed}: cell [{}] is nondeterministic — same-seed \
+                 re-run changed the state hash",
+                x.fault
+            );
+            assert_eq!(x, y, "seed {seed}: re-run diverged beyond the hash");
+        }
+    }
+}
+
 #[test]
 fn chaos_conformance_is_deterministic_across_seeds_low() {
     chaos_sweep(&[5, 7, 11, 23]);
@@ -99,6 +132,16 @@ fn chaos_conformance_is_deterministic_across_seeds_low() {
 #[test]
 fn chaos_conformance_is_deterministic_across_seeds_high() {
     chaos_sweep(&[42, 101, 137, 9001]);
+}
+
+#[test]
+fn reconcile_conformance_is_deterministic_across_seeds_low() {
+    reconcile_sweep(&[5, 7, 11, 23]);
+}
+
+#[test]
+fn reconcile_conformance_is_deterministic_across_seeds_high() {
+    reconcile_sweep(&[42, 101, 137, 9001]);
 }
 
 #[test]
@@ -126,6 +169,26 @@ fn chaos_conformance_is_telemetry_neutral_across_seeds() {
                 "seed {seed}: cell [{} × {} × {}] changed its state hash \
                  when telemetry was enabled",
                 x.method, x.direction, x.fault
+            );
+            assert_eq!(x, y, "seed {seed}: telemetry perturbed a cell");
+        }
+    }
+}
+
+/// Telemetry neutrality for the reconcile matrix: the reconciler spans
+/// and the `fleet/spec_drift` series must be pure observers.
+#[test]
+fn reconcile_conformance_is_telemetry_neutral_across_seeds() {
+    for seed in [7, 23] {
+        let off = reconcile::conformance_with_obs(seed, false).unwrap();
+        let on = reconcile::conformance_with_obs(seed, true).unwrap();
+        assert_eq!(off.len(), on.len());
+        for (x, y) in off.iter().zip(&on) {
+            assert_eq!(
+                x.state_hash, y.state_hash,
+                "seed {seed}: cell [{}] changed its state hash when \
+                 telemetry was enabled",
+                x.fault
             );
             assert_eq!(x, y, "seed {seed}: telemetry perturbed a cell");
         }
@@ -259,6 +322,25 @@ fn canonical_trace() -> Trace {
         id: 2,
         tokens: 150,
     });
+    tr.push(TraceEvent::SpecDeclared {
+        t: 8.0,
+        replicas: 2,
+        devices: 6,
+        parked: 0,
+        drift: 1,
+    });
+    tr.push(TraceEvent::ReconcileStep {
+        t: 8.0,
+        replica: 1,
+        step: "resize->4".to_string(),
+        applied: true,
+    });
+    tr.push(TraceEvent::HeartbeatMissed { t: 8.5, replica: 1 });
+    tr.push(TraceEvent::ReplicaEvicted {
+        t: 9.0,
+        replica: 1,
+        requeued: 3,
+    });
     tr
 }
 
@@ -373,6 +455,10 @@ fn golden_trace_roundtrips_and_embeds_its_digest() {
         "finished",
         "tier_shift",
         "tier_audit",
+        "spec_declared",
+        "reconcile_step",
+        "heartbeat_missed",
+        "replica_evicted",
     ] {
         assert!(
             events.iter().any(|e| e.get("ev").as_str() == Some(kind)),

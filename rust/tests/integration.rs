@@ -428,3 +428,168 @@ fn aborted_mid_copy_scale_down_resumes_suspended_and_conserves_blocks() {
     let violations = check_all(&out.trace);
     assert!(violations.is_empty(), "{violations:?}");
 }
+
+/// The reconciler is "killed" mid-scale: a KV copy-leg fault aborts the
+/// fleet's first scale-down after its step was already enacted. Because
+/// the planner re-derives steps from observed state each round — never
+/// from a replay log — the same resize is simply planned again on a
+/// later tick, the retry completes, and the fleet converges to the
+/// originally declared spec with every request finishing exactly once
+/// and zero duplicated migrations.
+#[test]
+fn aborted_reconcile_step_is_rederived_from_observed_state() {
+    use std::collections::HashMap;
+
+    use elastic_moe::chaos::{
+        check_all, FaultInjector, FaultKind, FaultPlan, TraceEvent,
+    };
+    use elastic_moe::config::SloConfig;
+    use elastic_moe::coordinator::{
+        FleetLimits, FleetPolicy, FleetSim, PolicyMode, Router,
+    };
+    use elastic_moe::device::Timings;
+    use elastic_moe::engine::CostModel;
+    use elastic_moe::scaling::ScalingMethod;
+    use elastic_moe::workload::{RateProfile, WorkloadGen, WorkloadSpec};
+
+    let m = model::dsv2_lite();
+    let mut sim = FleetSim::new(
+        CostModel::new(m.clone(), Timings::cloudmatrix()),
+        SloConfig::scale_up_demo(),
+        Router::JoinShortestQueue,
+    );
+    // One replica, vertical only, rebalances disabled: scale event 0 is
+    // the burst's 2->4 step (pure remap, the armed fault cannot fire),
+    // event 1 the post-burst 4->2 step whose departing device group
+    // forces live-KV copies — its first copy leg faults and the event
+    // aborts after rollback. The event-2 retry is clean.
+    let inj = Rc::new(RefCell::new(FaultInjector::new(FaultPlan::single(
+        1,
+        FaultKind::KvCopyFail { after_legs: 1 },
+    ))));
+    sim.injector = Some(inj.clone());
+
+    let limits = FleetLimits {
+        pool_devices: 4,
+        replica_base: 2,
+        replica_max: 4,
+        step: 2,
+        min_replicas: 1,
+    };
+    let mut policy = FleetPolicy::new(
+        PolicyMode::VerticalOnly,
+        limits,
+        SloConfig::scale_up_demo(),
+    );
+    policy.estimator.up_patience = 1;
+    policy.estimator.cooldown = 10.0;
+    policy.replica_cooldown = 10.0;
+    policy.rebalance_threshold = f64::INFINITY;
+
+    let inj2 = inj.clone();
+    let mut factory =
+        move |_i: usize| -> anyhow::Result<Box<dyn ScalingMethod>> {
+            let mut e =
+                elastic_moe::experiments::common::elastic_with_opts(
+                    &model::dsv2_lite(),
+                    4,
+                    Default::default(),
+                    Default::default(),
+                );
+            e.hmm.set_fault_injector(inj2.clone());
+            Ok(Box::new(e))
+        };
+
+    let horizon = 140.0;
+    let mut gen = WorkloadGen::new(WorkloadSpec {
+        prompt_len: 2000,
+        decode_min: 150,
+        decode_max: 250,
+        profile: RateProfile::Burst {
+            base: 0.8,
+            factor: 6.0,
+            start: 10.0,
+            len: 30.0,
+        },
+        seed: 17,
+    });
+    let arrivals = gen.arrivals_until(horizon);
+    let expected: HashMap<u64, usize> = arrivals
+        .iter()
+        .map(|r| (r.id, r.max_new_tokens))
+        .collect();
+
+    let out = sim
+        .run(&mut policy, &mut factory, 1, arrivals, horizon)
+        .unwrap();
+
+    // Exactly one event aborted, on the armed KV-copy fault, and a
+    // later scale-down completed: the interrupted step was re-derived
+    // and retried, not replayed.
+    let aborted: Vec<_> = out
+        .scaling_events
+        .iter()
+        .filter_map(|e| e.aborted.as_ref())
+        .collect();
+    assert_eq!(aborted.len(), 1, "exactly one abort");
+    assert!(aborted[0].rolled_back);
+    assert!(matches!(aborted[0].fault, FaultKind::KvCopyFail { .. }));
+    assert!(
+        out.scaling_events
+            .iter()
+            .any(|e| e.aborted.is_none() && e.new_parallel.n_devices() == 2),
+        "the re-derived scale-down must complete"
+    );
+
+    // The same step was planned and enacted (applied, not no-op'd) at
+    // least twice: once before the abort, once as the re-derivation.
+    let down_steps = out
+        .trace
+        .events
+        .iter()
+        .filter(|e| {
+            matches!(
+                e,
+                TraceEvent::ReconcileStep {
+                    replica: 0,
+                    step,
+                    applied: true,
+                    ..
+                } if step == "resize->2"
+            )
+        })
+        .count();
+    assert!(
+        down_steps >= 2,
+        "abort must force a re-derived retry ({down_steps} enactments)"
+    );
+
+    // Converged back onto the declared spec: the fleet ends at the
+    // post-burst footprint with zero drift in the final round.
+    assert_eq!(
+        out.device_timeline.last().map(|&(_, d)| d),
+        Some(2),
+        "fleet must end at the declared 2-device footprint"
+    );
+    let last_drift = out
+        .trace
+        .events
+        .iter()
+        .rev()
+        .find_map(|e| match e {
+            TraceEvent::SpecDeclared { drift, .. } => Some(*drift),
+            _ => None,
+        })
+        .expect("reconcile rounds were declared");
+    assert_eq!(last_drift, 0, "final round must be converged");
+
+    // No duplicated migrations anywhere: every request finished exactly
+    // once with its full token budget, and the whole invariant catalog
+    // (KV conservation across the abort included) holds.
+    assert_eq!(out.recorder.count(), expected.len());
+    for r in out.recorder.all() {
+        assert_eq!(r.tokens, expected[&r.id], "request {}", r.id);
+    }
+    let violations = check_all(&out.trace);
+    assert!(violations.is_empty(), "{violations:?}");
+}

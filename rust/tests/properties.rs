@@ -793,3 +793,188 @@ fn prop_lru_cache_matches_model_and_pins_protect() {
         }
     });
 }
+
+/// Reconciler planner algebra under random observed states and specs:
+/// the planned step batch is **idempotent** (guard-applying it twice
+/// lands on exactly the state of applying it once) and the reconcile
+/// loop is **monotone** — re-planning after each application never grows
+/// the spec drift, and drift reaches zero within the convergence bound.
+///
+/// The model applies steps with the same guards the fleet simulator
+/// enacts (a step whose precondition no longer holds is a no-op), with
+/// spec slot ids standing in for booted replica ids.
+#[test]
+fn prop_reconciler_plan_is_idempotent_and_monotone() {
+    use elastic_moe::chaos::CONVERGENCE_ROUNDS;
+    use elastic_moe::coordinator::{
+        FleetSpec, ReconcileStep, Reconciler, ReplicaLoad, ReplicaSpec,
+    };
+
+    const NOW: f64 = 100.0;
+
+    fn load(id: usize, rng: &mut Rng) -> ReplicaLoad {
+        ReplicaLoad {
+            id,
+            devices: 2 * (1 + rng.below(3) as usize),
+            occupancy: rng.uniform(0.0, 1.0),
+            queue_depth: rng.below(10) as usize,
+            busy: rng.bool(0.2),
+            booting: false,
+            draining: rng.bool(0.15),
+            parked: rng.bool(0.2),
+            imbalance: 1.0,
+            last_heartbeat: if rng.bool(0.2) {
+                NOW - 30.0 // stale past the deadline: eviction due
+            } else {
+                NOW - 1.0
+            },
+        }
+    }
+
+    fn random_state(rng: &mut Rng) -> (Vec<ReplicaLoad>, FleetSpec) {
+        let n = 1 + rng.below(5) as usize;
+        let loads: Vec<ReplicaLoad> =
+            (0..n).map(|id| load(id, rng)).collect();
+        let mut slots = Vec::new();
+        for l in &loads {
+            // A draining replica never reappears in a projected spec.
+            if l.draining || rng.bool(0.2) {
+                continue;
+            }
+            let parked = rng.bool(0.2);
+            slots.push(ReplicaSpec {
+                id: l.id,
+                devices: if parked {
+                    0
+                } else {
+                    2 * (1 + rng.below(3) as usize)
+                },
+                parked,
+            });
+        }
+        if rng.bool(0.3) {
+            // A brand-new slot the reconciler must boot.
+            slots.push(ReplicaSpec { id: n + 5, devices: 2, parked: false });
+        }
+        (loads, FleetSpec { replicas: slots, rebalance: None })
+    }
+
+    /// Guarded model application — mirrors the simulator's checked
+    /// no-op enactment.
+    fn apply(steps: &[ReconcileStep], loads: &mut Vec<ReplicaLoad>) {
+        for s in steps {
+            match *s {
+                ReconcileStep::Resize { replica, to_devices } => {
+                    if let Some(l) = loads.iter_mut().find(|l| {
+                        l.id == replica
+                            && !l.parked
+                            && !l.draining
+                            && !l.busy
+                            && l.devices != to_devices
+                    }) {
+                        l.devices = to_devices;
+                    }
+                }
+                ReconcileStep::Park { replica } => {
+                    if let Some(l) = loads.iter_mut().find(|l| {
+                        l.id == replica && !l.parked && !l.busy
+                    }) {
+                        l.parked = true;
+                    }
+                }
+                ReconcileStep::Unpark { replica } => {
+                    if let Some(l) = loads
+                        .iter_mut()
+                        .find(|l| l.id == replica && l.parked)
+                    {
+                        l.parked = false;
+                        // Boot completion counts as a heartbeat in the
+                        // simulator; without it a stale parked replica
+                        // would unpark straight into an eviction.
+                        l.last_heartbeat = NOW;
+                    }
+                }
+                ReconcileStep::Add { slot, devices } => {
+                    if !loads.iter().any(|l| l.id == slot) {
+                        loads.push(ReplicaLoad {
+                            id: slot,
+                            devices,
+                            occupancy: 0.0,
+                            queue_depth: 0,
+                            busy: false,
+                            booting: false,
+                            draining: false,
+                            parked: false,
+                            imbalance: 1.0,
+                            last_heartbeat: NOW,
+                        });
+                    }
+                }
+                ReconcileStep::Drain { replica } => {
+                    if let Some(l) = loads
+                        .iter_mut()
+                        .find(|l| l.id == replica && !l.draining)
+                    {
+                        l.draining = true;
+                    }
+                }
+                ReconcileStep::Rebalance { .. } => {}
+                ReconcileStep::Evict { replica } => {
+                    loads.retain(|l| l.id != replica);
+                }
+            }
+        }
+    }
+
+    fn digest(loads: &[ReplicaLoad]) -> Vec<(usize, usize, bool, bool)> {
+        let mut d: Vec<_> = loads
+            .iter()
+            .map(|l| (l.id, l.devices, l.parked, l.draining))
+            .collect();
+        d.sort_unstable();
+        d
+    }
+
+    let rec = Reconciler::new(10.0);
+    check("reconciler idempotent+monotone", 200, |rng: &mut Rng| {
+        let (loads, spec) = random_state(rng);
+
+        // Idempotence: the batch applied twice is the batch applied
+        // once — every second application is all no-ops.
+        let steps = rec.plan(&spec, &loads, NOW);
+        let mut once = loads.clone();
+        apply(&steps, &mut once);
+        let mut twice = once.clone();
+        apply(&steps, &mut twice);
+        assert_eq!(
+            digest(&once),
+            digest(&twice),
+            "replaying a step batch must not move the state"
+        );
+
+        // Monotonicity + bounded convergence: re-planning after each
+        // application never grows drift, and drift hits zero within
+        // the convergence bound.
+        let mut state = loads;
+        let mut prev = usize::MAX;
+        for round in 0..CONVERGENCE_ROUNDS {
+            let steps = rec.plan(&spec, &state, NOW);
+            assert!(
+                steps.len() <= prev,
+                "round {round} drift grew: {} -> {} ({steps:?})",
+                prev,
+                steps.len()
+            );
+            prev = steps.len();
+            if steps.is_empty() {
+                return;
+            }
+            apply(&steps, &mut state);
+        }
+        let residual = rec.plan(&spec, &state, NOW);
+        assert!(
+            residual.is_empty(),
+            "not converged within {CONVERGENCE_ROUNDS} rounds: {residual:?}"
+        );
+    });
+}
