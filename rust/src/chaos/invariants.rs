@@ -28,6 +28,10 @@
 //!    spec drift cannot stay positive for [`CONVERGENCE_ROUNDS`]
 //!    consecutive reconcile rounds: the reconciler must converge on the
 //!    declared spec instead of chasing it forever.
+//! 8. **Handoff disposition** — every planned prefill→decode KV
+//!    handoff is dispositioned exactly once on its decode replica
+//!    (adopted, or recomputed after an aborted transfer), never twice
+//!    and never dropped. Vacuous for unified fleets.
 
 use std::collections::BTreeMap;
 
@@ -79,6 +83,7 @@ pub fn check_all(trace: &Trace) -> Vec<Violation> {
     out.extend(check_suspend_disposition(trace));
     out.extend(check_tier_conservation(trace));
     out.extend(check_reconcile_convergence(trace));
+    out.extend(check_handoff_disposition(trace));
     out
 }
 
@@ -506,6 +511,52 @@ pub fn check_suspend_disposition(trace: &Trace) -> Vec<Violation> {
     out
 }
 
+/// Invariant 8: exactly-once handoff disposition. Every
+/// [`TraceEvent::HandoffPlanned`] is answered by exactly one
+/// [`TraceEvent::HandoffDone`] for the same sequence — the decode
+/// replica either adopted the transferred KV or fell back to recompute,
+/// but never both and never neither. A sequence may hand off more than
+/// once over its life (an eviction can send it back through prefill);
+/// each planned leg still needs its own disposition. Traces with no
+/// handoffs (unified fleets, single-instance runs) pass vacuously.
+pub fn check_handoff_disposition(trace: &Trace) -> Vec<Violation> {
+    let mut out = Vec::new();
+    // id -> handoffs planned but not yet dispositioned.
+    let mut open: BTreeMap<u64, usize> = BTreeMap::new();
+    for ev in &trace.events {
+        match ev {
+            TraceEvent::HandoffPlanned { id, .. } => {
+                *open.entry(*id).or_default() += 1;
+            }
+            TraceEvent::HandoffDone { id, .. } => {
+                match open.get_mut(id) {
+                    Some(n) if *n > 0 => *n -= 1,
+                    _ => out.push(Violation::new(
+                        "handoff-disposition",
+                        format!(
+                            "request {id} dispositioned a handoff that \
+                             was never planned"
+                        ),
+                    )),
+                }
+            }
+            _ => {}
+        }
+    }
+    for (id, n) in &open {
+        if *n > 0 {
+            out.push(Violation::new(
+                "handoff-disposition",
+                format!(
+                    "request {id}: {n} planned handoff(s) never \
+                     dispositioned"
+                ),
+            ));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -760,6 +811,58 @@ mod tests {
 
         // No SpecDeclared events at all (single-instance runs): vacuous.
         assert!(check_reconcile_convergence(&conformant_trace()).is_empty());
+    }
+
+    #[test]
+    fn handoff_disposition_is_exactly_once() {
+        let planned = |t: f64, id: u64| TraceEvent::HandoffPlanned {
+            t,
+            id,
+            from_replica: 0,
+            to_replica: 1,
+            bytes: 2048,
+            legs: 2,
+        };
+        let done = |t: f64, id: u64, recompute| TraceEvent::HandoffDone {
+            t,
+            id,
+            to_replica: 1,
+            recompute,
+        };
+        // Happy path: one adoption and one recompute fallback, each
+        // dispositioned exactly once.
+        let mut tr = Trace::new();
+        tr.push(planned(1.0, 7));
+        tr.push(planned(1.0, 8));
+        tr.push(done(2.0, 7, false));
+        tr.push(done(2.5, 8, true));
+        assert!(check_handoff_disposition(&tr).is_empty());
+
+        // A sequence may hand off twice (eviction sent it back through
+        // prefill) as long as both legs disposition.
+        tr.push(planned(3.0, 7));
+        tr.push(done(4.0, 7, true));
+        assert!(check_handoff_disposition(&tr).is_empty());
+
+        // Dropped handoff: planned, never dispositioned.
+        let mut bad = Trace::new();
+        bad.push(planned(1.0, 9));
+        let v = check_handoff_disposition(&bad);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].invariant, "handoff-disposition");
+        assert!(v[0].detail.contains("never dispositioned"));
+
+        // Double disposition of a single planned handoff.
+        let mut bad = Trace::new();
+        bad.push(planned(1.0, 9));
+        bad.push(done(2.0, 9, false));
+        bad.push(done(2.1, 9, true));
+        let v = check_handoff_disposition(&bad);
+        assert_eq!(v.len(), 1);
+        assert!(v[0].detail.contains("never planned"));
+
+        // Unified fleets (no handoff events at all): vacuous pass.
+        assert!(check_handoff_disposition(&conformant_trace()).is_empty());
     }
 
     #[test]

@@ -43,7 +43,7 @@ pub use faults::{
     RoundFaults,
 };
 pub use invariants::{
-    check_all, check_reconcile_convergence, check_tier_conservation,
-    Violation, CONVERGENCE_ROUNDS,
+    check_all, check_handoff_disposition, check_reconcile_convergence,
+    check_tier_conservation, Violation, CONVERGENCE_ROUNDS,
 };
 pub use trace::{PlanAudit, Trace, TraceEvent};

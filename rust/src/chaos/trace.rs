@@ -160,6 +160,28 @@ pub enum TraceEvent {
         replica: usize,
         requeued: usize,
     },
+    /// Sequence `id` finished its prefill on `from_replica` and a KV
+    /// transfer leg toward decode pool member `to_replica` was planned:
+    /// `bytes` over `legs` fabric legs (disaggregated fleets only).
+    HandoffPlanned {
+        t: f64,
+        id: u64,
+        from_replica: usize,
+        to_replica: usize,
+        bytes: u64,
+        legs: usize,
+    },
+    /// The prefill→decode handoff of sequence `id` was dispositioned on
+    /// `to_replica`: adopted with its KV intact, or (`recompute`) its
+    /// transfer was aborted/rejected and the decode replica re-prefills
+    /// from scratch. Every [`TraceEvent::HandoffPlanned`] must be
+    /// followed by exactly one `HandoffDone` for the same sequence.
+    HandoffDone {
+        t: f64,
+        id: u64,
+        to_replica: usize,
+        recompute: bool,
+    },
 }
 
 impl TraceEvent {
@@ -184,7 +206,9 @@ impl TraceEvent {
             | TraceEvent::SpecDeclared { t, .. }
             | TraceEvent::ReconcileStep { t, .. }
             | TraceEvent::HeartbeatMissed { t, .. }
-            | TraceEvent::ReplicaEvicted { t, .. } => *t,
+            | TraceEvent::ReplicaEvicted { t, .. }
+            | TraceEvent::HandoffPlanned { t, .. }
+            | TraceEvent::HandoffDone { t, .. } => *t,
         }
     }
 }
@@ -404,6 +428,34 @@ impl TraceEvent {
                 h.fold_f64(*t);
                 h.fold_usize(*replica);
                 h.fold_usize(*requeued);
+            }
+            TraceEvent::HandoffPlanned {
+                t,
+                id,
+                from_replica,
+                to_replica,
+                bytes,
+                legs,
+            } => {
+                h.fold_u64(19);
+                h.fold_f64(*t);
+                h.fold_u64(*id);
+                h.fold_usize(*from_replica);
+                h.fold_usize(*to_replica);
+                h.fold_u64(*bytes);
+                h.fold_usize(*legs);
+            }
+            TraceEvent::HandoffDone {
+                t,
+                id,
+                to_replica,
+                recompute,
+            } => {
+                h.fold_u64(20);
+                h.fold_f64(*t);
+                h.fold_u64(*id);
+                h.fold_usize(*to_replica);
+                h.fold_bool(*recompute);
             }
         }
     }
@@ -651,6 +703,34 @@ impl TraceEvent {
                 ("replica", Json::num(*replica as f64)),
                 ("requeued", Json::num(*requeued as f64)),
             ]),
+            TraceEvent::HandoffPlanned {
+                t,
+                id,
+                from_replica,
+                to_replica,
+                bytes,
+                legs,
+            } => Json::obj(vec![
+                ("ev", Json::str("handoff_planned")),
+                ("t", Json::num(*t)),
+                ("id", Json::num(*id as f64)),
+                ("from_replica", Json::num(*from_replica as f64)),
+                ("to_replica", Json::num(*to_replica as f64)),
+                ("bytes", Json::num(*bytes as f64)),
+                ("legs", Json::num(*legs as f64)),
+            ]),
+            TraceEvent::HandoffDone {
+                t,
+                id,
+                to_replica,
+                recompute,
+            } => Json::obj(vec![
+                ("ev", Json::str("handoff_done")),
+                ("t", Json::num(*t)),
+                ("id", Json::num(*id as f64)),
+                ("to_replica", Json::num(*to_replica as f64)),
+                ("recompute", Json::Bool(*recompute)),
+            ]),
         }
     }
 }
@@ -860,6 +940,20 @@ mod tests {
             },
             TraceEvent::HeartbeatMissed { t: 5.0, replica: 1 },
             TraceEvent::ReplicaEvicted { t: 5.5, replica: 1, requeued: 3 },
+            TraceEvent::HandoffPlanned {
+                t: 6.0,
+                id: 3,
+                from_replica: 0,
+                to_replica: 2,
+                bytes: 4096,
+                legs: 2,
+            },
+            TraceEvent::HandoffDone {
+                t: 6.5,
+                id: 3,
+                to_replica: 2,
+                recompute: false,
+            },
         ];
         let mut tr = Trace::new();
         let mut hashes = vec![tr.state_hash()];
@@ -873,6 +967,6 @@ mod tests {
         let j = tr.to_json().to_string();
         // Round-trips through the parser (structurally valid JSON).
         let parsed = crate::util::json::parse(&j).unwrap();
-        assert_eq!(parsed.get("events").as_arr().unwrap().len(), 19);
+        assert_eq!(parsed.get("events").as_arr().unwrap().len(), 21);
     }
 }

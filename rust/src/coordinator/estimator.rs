@@ -34,6 +34,10 @@ pub struct LoadEstimator {
     /// work, or meaningful occupancy). Drives the re-burst forecast for
     /// park-vs-teardown decisions.
     last_active: f64,
+    /// Direction re-armed by [`Self::refund`]: that direction (and only
+    /// that direction) may fire through the still-running cooldown. The
+    /// opposite direction keeps its full debounce.
+    rearmed: Option<ScaleDecision>,
 }
 
 impl LoadEstimator {
@@ -48,6 +52,7 @@ impl LoadEstimator {
             good_windows: 0,
             last_action: f64::NEG_INFINITY,
             last_active: f64::NEG_INFINITY,
+            rearmed: None,
         }
     }
 
@@ -62,8 +67,12 @@ impl LoadEstimator {
         if !attainment.is_nan() || queue_depth > 0 || occupancy > 0.05 {
             self.last_active = now;
         }
-        if now - self.last_action < self.cooldown {
+        let cooling = now - self.last_action < self.cooldown;
+        if cooling && self.rearmed.is_none() {
             return ScaleDecision::Hold;
+        }
+        if !cooling {
+            self.rearmed = None;
         }
         let violating = !attainment.is_nan()
             && attainment < self.slo.target_attainment;
@@ -75,18 +84,23 @@ impl LoadEstimator {
             self.good_windows += 1;
             self.bad_windows = 0;
         }
-        if self.bad_windows >= self.up_patience {
+        if self.bad_windows >= self.up_patience
+            && (!cooling || self.rearmed == Some(ScaleDecision::Up))
+        {
             self.bad_windows = 0;
             self.good_windows = 0;
             self.last_action = now;
+            self.rearmed = None;
             return ScaleDecision::Up;
         }
         if self.good_windows >= self.down_patience
             && occupancy < self.down_occupancy
             && queue_depth == 0
+            && (!cooling || self.rearmed == Some(ScaleDecision::Down))
         {
             self.good_windows = 0;
             self.last_action = now;
+            self.rearmed = None;
             return ScaleDecision::Down;
         }
         ScaleDecision::Hold
@@ -95,6 +109,7 @@ impl LoadEstimator {
     pub fn reset(&mut self) {
         self.bad_windows = 0;
         self.good_windows = 0;
+        self.rearmed = None;
     }
 
     /// Whether traffic is forecast to return within `ttl` seconds of
@@ -108,18 +123,22 @@ impl LoadEstimator {
     }
 
     /// Undo the state consumption of an `Up`/`Down` decision the caller
-    /// could not act on (no eligible replica, pool exhausted): clears the
-    /// cooldown and re-arms the patience counter so one more matching
-    /// window re-fires immediately, instead of waiting out a full
-    /// cooldown + patience cycle while the condition persists.
+    /// could not act on (no eligible replica, pool exhausted): re-arms
+    /// the patience counter so one more matching window re-fires that
+    /// same direction through the cooldown, instead of waiting out a
+    /// full cooldown + patience cycle while the condition persists. Only
+    /// the refunded direction is re-armed — the cooldown stamp stays
+    /// put, so the *opposite* direction keeps its full debounce (a dead
+    /// `Up` must not let a `Down` fire one window later).
     pub fn refund(&mut self, decision: ScaleDecision) {
-        self.last_action = f64::NEG_INFINITY;
         match decision {
             ScaleDecision::Up => {
                 self.bad_windows = self.up_patience.saturating_sub(1);
+                self.rearmed = Some(ScaleDecision::Up);
             }
             ScaleDecision::Down => {
                 self.good_windows = self.down_patience.saturating_sub(1);
+                self.rearmed = Some(ScaleDecision::Down);
             }
             ScaleDecision::Hold => {}
         }
@@ -183,6 +202,28 @@ mod tests {
         // despite the long cooldown.
         e.refund(ScaleDecision::Up);
         assert_eq!(e.observe(2.0, 0.5, 0.9, 10), ScaleDecision::Up);
+    }
+
+    #[test]
+    fn up_refund_does_not_disarm_the_down_cooldown() {
+        let mut e = LoadEstimator::new(SloConfig::strict());
+        e.cooldown = 100.0;
+        e.up_patience = 1;
+        e.down_patience = 1;
+        assert_eq!(e.observe(0.0, 0.5, 0.9, 10), ScaleDecision::Up);
+        e.refund(ScaleDecision::Up);
+        // One comfortable window inside the cooldown: the old refund
+        // wiped `last_action`, letting this fire an undebounced Down.
+        assert_eq!(
+            e.observe(1.0, 1.0, 0.1, 0),
+            ScaleDecision::Hold,
+            "a refunded Up must not unlock the opposite direction"
+        );
+        // The refunded direction itself still re-fires through the
+        // cooldown on the next matching window.
+        assert_eq!(e.observe(2.0, 0.5, 0.9, 10), ScaleDecision::Up);
+        // And after firing, the cooldown debounces normally again.
+        assert_eq!(e.observe(3.0, 0.5, 0.9, 10), ScaleDecision::Hold);
     }
 
     #[test]

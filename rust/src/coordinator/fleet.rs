@@ -39,10 +39,12 @@ use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
-use crate::chaos::{FaultInjector, Trace, TraceEvent};
+use crate::chaos::{FaultInjector, PlanAudit, Trace, TraceEvent};
 use crate::config::{ParallelConfig, SloConfig};
 use crate::engine::{CostModel, ServeEngine, StepKind};
-use crate::kvmigrate::{KvHandoffStats, KvSnapshot};
+use crate::kvmigrate::{
+    home_rank, plan_kv_migration, KvHandoffStats, KvSeq, KvSnapshot,
+};
 use crate::metrics::MetricsRecorder;
 use crate::obs::spans::CAT_LIFECYCLE;
 use crate::obs::Telemetry;
@@ -51,7 +53,7 @@ use crate::sim::{Clock, EventQueue, SimClock, StateHash};
 use crate::workload::Request;
 
 use super::estimator::ScaleDecision;
-use super::policy::{FleetAction, FleetPolicy, ReplicaLoad};
+use super::policy::{FleetAction, FleetPolicy, PoolRole, ReplicaLoad};
 use super::reconciler::{ReconcileStep, Reconciler};
 use super::serving::{
     begin_transition_on, build_engine, complete_pending, log_command,
@@ -141,6 +143,23 @@ struct Replica {
     last_heartbeat: f64,
     kv_factor: f64,
     batch_factor: f64,
+    /// Which serving phase this replica is dedicated to. `Unified`
+    /// everywhere unless [`FleetSim::initial_roles`] declares a
+    /// disaggregated fleet; a replica keeps its role for life (it
+    /// drains out rather than migrating pools).
+    role: PoolRole,
+    /// Prefill→decode handoffs in flight toward this (decode) replica:
+    /// `(delivery time, request)`. The sequence's KV bytes are on the
+    /// fabric until the delivery time, when the replica admits them and
+    /// adopts the request with its decode progress intact (or falls
+    /// back to recompute if its pool is full).
+    adopt_inbox: VecDeque<(f64, Request)>,
+    /// Sequences that completed prefill on this (prefill) replica and
+    /// were pulled out of its running batch mid-window:
+    /// `(prefill-done time, request)`. Handoff legs are planned for the
+    /// whole stage at the next policy tick — the transfer clock still
+    /// starts at the prefill-done time, the tick only does bookkeeping.
+    stage: Vec<(f64, Request)>,
 }
 
 impl Replica {
@@ -164,7 +183,8 @@ impl Replica {
             .as_ref()
             .map(|e| e.batcher.queue_len() + e.batcher.running_len())
             .unwrap_or(0);
-        self.inbox.len() + engine_q
+        self.inbox.len() + self.adopt_inbox.len() + self.stage.len()
+            + engine_q
     }
 
     fn queue_depth(&self) -> usize {
@@ -173,11 +193,14 @@ impl Replica {
             .as_ref()
             .map(|e| e.batcher.queue_len())
             .unwrap_or(0);
-        self.inbox.len() + engine_q
+        self.inbox.len() + self.adopt_inbox.len() + self.stage.len()
+            + engine_q
     }
 
     fn is_idle(&self) -> bool {
         self.inbox.is_empty()
+            && self.adopt_inbox.is_empty()
+            && self.stage.is_empty()
             && self.pending.is_none()
             && self
                 .engine
@@ -213,6 +236,11 @@ pub struct FleetOutput {
     pub truncated: usize,
     /// In-flight KV handoff tally across every replica switchover.
     pub handoff: KvHandoffStats,
+    /// Prefill→decode pool handoff tally (disaggregated fleets only;
+    /// all-zero for unified fleets). `recompute_tokens == 0` is the
+    /// zero-recompute happy path: every handed-off sequence's KV
+    /// crossed the fabric instead of being re-prefilled.
+    pub pool_handoff: KvHandoffStats,
     /// Structured event trace of the run across all replicas (the record
     /// the [`crate::chaos::invariants`] checkers run over).
     pub trace: Trace,
@@ -276,6 +304,16 @@ pub struct FleetSim {
     /// the reconciler. Several beat periods wide, so a single swallowed
     /// beat never evicts.
     pub heartbeat_deadline: f64,
+    /// Pool role of each initial replica by boot index; missing entries
+    /// default to [`PoolRole::Unified`]. Any non-unified role turns the
+    /// run into a prefill/decode disaggregated deployment: arrivals
+    /// route to the prefill pool, and every freshly prefilled sequence
+    /// hands its KV to a decode replica over a planned transfer leg.
+    pub initial_roles: Vec<PoolRole>,
+    /// Migration-byte budget each prefill→decode handoff plan is drawn
+    /// under. An exhausted budget (like an injected `KvCopyFail`) falls
+    /// back to recompute-on-decode — the request is never lost.
+    pub handoff_budget_bytes: u64,
 }
 
 impl FleetSim {
@@ -291,6 +329,8 @@ impl FleetSim {
             obs: false,
             heartbeat_period: 2.5,
             heartbeat_deadline: 12.0,
+            initial_roles: Vec::new(),
+            handoff_budget_bytes: 8 << 30,
         }
     }
 
@@ -353,6 +393,13 @@ impl FleetSim {
                 last_heartbeat: 0.0,
                 kv_factor,
                 batch_factor,
+                role: self
+                    .initial_roles
+                    .get(i)
+                    .copied()
+                    .unwrap_or_default(),
+                adopt_inbox: VecDeque::new(),
+                stage: Vec::new(),
             });
         }
 
@@ -371,6 +418,7 @@ impl FleetSim {
         let mut actions: Vec<(f64, FleetAction)> = Vec::new();
         let mut events: Vec<ScalingOutcome> = Vec::new();
         let mut handoff = KvHandoffStats::default();
+        let mut pool_handoff = KvHandoffStats::default();
         let mut cold_boots = 0usize;
         let mut unpark_boots: Vec<(f64, f64)> = Vec::new();
         let serving0 = initial_replicas * limits.replica_base;
@@ -467,14 +515,52 @@ impl FleetSim {
             // 2) Advance every replica to the tick boundary, then
             // drain each method's cross-tier journal into the trace
             // (with an allocator audit, so the conservation invariant
-            // has an independent figure to reconcile against).
+            // has an independent figure to reconcile against). A
+            // disaggregated fleet advances its prefill pool first and
+            // plans the window's prefill→decode handoff legs before the
+            // decode pool steps, so a transfer that lands mid-window is
+            // adopted inside the same tick.
+            let disagg = replicas
+                .iter()
+                .any(|r| !r.retired && r.role == PoolRole::Prefill);
+            if disagg {
+                for rep in replicas.iter_mut() {
+                    if rep.role != PoolRole::Prefill {
+                        continue;
+                    }
+                    self.advance_replica(
+                        rep,
+                        t_end,
+                        &mut recorder,
+                        &mut events,
+                        &mut handoff,
+                        &mut pool_handoff,
+                        &mut trace,
+                        &mut shash,
+                        tel.as_mut(),
+                    )?;
+                }
+                self.plan_handoffs(
+                    t_end,
+                    &mut replicas,
+                    &mut pool_handoff,
+                    &mut trace,
+                    &mut event_seq,
+                    &mut shash,
+                    tel.as_mut(),
+                )?;
+            }
             for rep in replicas.iter_mut() {
+                if disagg && rep.role == PoolRole::Prefill {
+                    continue;
+                }
                 self.advance_replica(
                     rep,
                     t_end,
                     &mut recorder,
                     &mut events,
                     &mut handoff,
+                    &mut pool_handoff,
                     &mut trace,
                     &mut shash,
                     tel.as_mut(),
@@ -585,6 +671,7 @@ impl FleetSim {
                     .filter(|r| !r.retired)
                     .map(|r| ReplicaLoad {
                         id: r.id,
+                        role: r.role,
                         devices: r.devices_reserved(),
                         occupancy: r
                             .engine
@@ -610,6 +697,7 @@ impl FleetSim {
             );
             for l in &loads {
                 shash.fold_usize(l.id);
+                shash.fold_usize(l.role as usize);
                 shash.fold_usize(l.devices);
                 shash.fold_f64(l.occupancy);
                 shash.fold_usize(l.queue_depth);
@@ -627,6 +715,7 @@ impl FleetSim {
             shash.fold_usize(spec.replicas.len());
             for s in &spec.replicas {
                 shash.fold_usize(s.id);
+                shash.fold_usize(s.role as usize);
                 shash.fold_usize(s.devices);
                 shash.fold_bool(s.parked);
             }
@@ -807,6 +896,8 @@ impl FleetSim {
                                 // it here).
                                 let rep = &mut replicas[replica];
                                 let idle = rep.inbox.is_empty()
+                                    && rep.adopt_inbox.is_empty()
+                                    && rep.stage.is_empty()
                                     && rep.pending.is_none()
                                     && rep
                                         .engine
@@ -956,6 +1047,12 @@ impl FleetSim {
                                     last_heartbeat: t_end,
                                     kv_factor,
                                     batch_factor,
+                                    role: spec
+                                        .slot(slot)
+                                        .map(|s| s.role)
+                                        .unwrap_or_default(),
+                                    adopt_inbox: VecDeque::new(),
+                                    stage: Vec::new(),
                                 });
                                 policy.note_event(id, t_end);
                                 if let Some(t) = tel.as_mut() {
@@ -1076,6 +1173,35 @@ impl FleetSim {
                                     {
                                         orphans.push(r);
                                     }
+                                    // An in-flight handoff toward this
+                                    // replica dies with it: disposition
+                                    // it as a recompute so the planned
+                                    // leg is never left dangling, then
+                                    // re-home the request like any other
+                                    // orphan. Staged (not-yet-planned)
+                                    // prefill output just re-homes.
+                                    while let Some((_, r)) =
+                                        rep.adopt_inbox.pop_front()
+                                    {
+                                        trace.push(
+                                            TraceEvent::HandoffDone {
+                                                t: t_end,
+                                                id: r.id,
+                                                to_replica: replica,
+                                                recompute: true,
+                                            },
+                                        );
+                                        pool_handoff.recomputed += 1;
+                                        pool_handoff.recompute_tokens +=
+                                            r.prompt_len as u64;
+                                        pool_handoff
+                                            .lost_decode_tokens +=
+                                            r.generated as u64;
+                                        orphans.push(r);
+                                    }
+                                    for (_, r) in rep.stage.drain(..) {
+                                        orphans.push(r);
+                                    }
                                     if let Some(mut eng) = rep.engine.take()
                                     {
                                         let (running, waiting) =
@@ -1111,7 +1237,17 @@ impl FleetSim {
                                                 && c.engine.is_some()
                                         })
                                         .min_by_key(|c| {
-                                            (c.backlog(), c.id)
+                                            // Orphans restart from the
+                                            // prompt, so in a disagg
+                                            // fleet they re-home to a
+                                            // prefill-capable replica
+                                            // first.
+                                            (
+                                                c.role
+                                                    == PoolRole::Decode,
+                                                c.backlog(),
+                                                c.id,
+                                            )
                                         })
                                         .map(|c| c.id)
                                         .unwrap();
@@ -1187,6 +1323,7 @@ impl FleetSim {
             final_replicas: replicas.iter().filter(|r| !r.retired).count(),
             truncated,
             handoff,
+            pool_handoff,
             trace,
             state_hash: shash.value(),
             telemetry: tel,
@@ -1205,6 +1342,12 @@ impl FleetSim {
         rr: &mut usize,
         eligible: &mut Vec<(usize, usize)>,
     ) -> Result<()> {
+        // In a disaggregated fleet, fresh arrivals only ever route to
+        // prefill-capable replicas — the decode pool receives work via
+        // KV handoff, not the front door.
+        let disagg = replicas
+            .iter()
+            .any(|r| !r.retired && r.role == PoolRole::Prefill);
         while *next_arrival < arrivals.len()
             && arrivals[*next_arrival].arrival <= due
         {
@@ -1219,6 +1362,8 @@ impl FleetSim {
                             && !rep.draining
                             && rep.engine.is_some()
                             && rep.ready_at <= r.arrival
+                            && (!disagg
+                                || rep.role != PoolRole::Decode)
                     })
                     .map(|rep| (rep.id, rep.backlog())),
             );
@@ -1229,7 +1374,17 @@ impl FleetSim {
                 // policy's wake-up signal).
                 replicas
                     .iter()
-                    .find(|rep| !rep.retired && rep.engine.is_some())
+                    .find(|rep| {
+                        !rep.retired
+                            && rep.engine.is_some()
+                            && (!disagg
+                                || rep.role != PoolRole::Decode)
+                    })
+                    .or_else(|| {
+                        replicas
+                            .iter()
+                            .find(|rep| !rep.retired && rep.engine.is_some())
+                    })
                     .or_else(|| replicas.iter().find(|rep| !rep.retired))
                     .map(|rep| rep.id)
             } else {
@@ -1238,6 +1393,192 @@ impl FleetSim {
             match target {
                 Some(id) => replicas[id].inbox.push_back(r),
                 None => bail!("no live replica to route to"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Plan this window's prefill→decode KV handoff legs (tick-time
+    /// bookkeeping of a disaggregated fleet). Every sequence staged by a
+    /// prefill replica is assigned a decode replica, its transfer is
+    /// planned through the same KV-migration planner the vertical path
+    /// uses (audited for block conservation and byte budget), and the
+    /// request is posted to the target's adoption inbox with a delivery
+    /// time that started at prefill completion. A `KvCopyFail` on any
+    /// fabric leg, or a planner verdict of `Recompute` (budget
+    /// exhaustion), aborts the transfer: the request restarts on the
+    /// decode replica from its prompt — dispositioned immediately, never
+    /// lost.
+    #[allow(clippy::too_many_arguments)]
+    fn plan_handoffs(
+        &self,
+        t_end: f64,
+        replicas: &mut [Replica],
+        pool_handoff: &mut KvHandoffStats,
+        trace: &mut Trace,
+        event_seq: &mut usize,
+        shash: &mut StateHash,
+        mut tel: Option<&mut Telemetry>,
+    ) -> Result<()> {
+        // Planning-only device-id namespace: each replica numbers its
+        // local devices from 0, so a decode replica's ids collide with
+        // the prefill replica's and `surviving_ranks` would see phantom
+        // survivors (turning a cross-replica copy into a free remap).
+        // Offsetting the destination ids guarantees disjoint namespaces;
+        // transfer *time* always uses the real destination config.
+        const DISAGG_NS: usize = 1 << 20;
+
+        let mut staged: Vec<(usize, ParallelConfig, usize, f64, Request)> =
+            Vec::new();
+        for rep in replicas.iter_mut() {
+            if rep.role != PoolRole::Prefill || rep.stage.is_empty() {
+                continue;
+            }
+            let bt = rep
+                .engine
+                .as_ref()
+                .map(|e| e.kv.block_tokens())
+                .unwrap_or(16);
+            for (t_done, r) in rep.stage.drain(..) {
+                staged.push((rep.id, rep.current.clone(), bt, t_done, r));
+            }
+        }
+
+        for (src, src_par, bt, t_done, r) in staged {
+            // Least-loaded live decode replica; with no decode pool left
+            // the sequence re-adopts where it prefilled (a self-handoff:
+            // every block remaps in place, zero bytes cross the fabric).
+            let dst = replicas
+                .iter()
+                .filter(|c| {
+                    c.role == PoolRole::Decode
+                        && !c.retired
+                        && !c.draining
+                        && !c.parked
+                        && c.engine.is_some()
+                })
+                .min_by_key(|c| (c.backlog(), c.id))
+                .map(|c| c.id)
+                .unwrap_or(src);
+            let to_real = replicas[dst].current.clone();
+            let to_plan = if dst == src {
+                src_par.clone()
+            } else {
+                ParallelConfig::standard(
+                    to_real.dp,
+                    to_real.tp,
+                    to_real
+                        .devices
+                        .iter()
+                        .map(|d| d + (dst + 1) * DISAGG_NS)
+                        .collect(),
+                )?
+            };
+            let len = r.current_len();
+            let snap = KvSnapshot {
+                block_tokens: bt,
+                seqs: vec![KvSeq {
+                    id: r.id,
+                    len,
+                    blocks: len.div_ceil(bt),
+                    home_rank: home_rank(r.id, src_par.dp),
+                }],
+                from: src_par,
+            };
+            let (plan, _) = plan_kv_migration(
+                &snap,
+                &to_plan,
+                &self.cost,
+                self.handoff_budget_bytes,
+            );
+            let legs = plan.transfers();
+
+            // Every fabric leg consults the injector; a fired
+            // `KvCopyFail` aborts the whole transfer (the partial copy
+            // is dropped — the planner's audit still balances, the
+            // request falls back to recompute).
+            let mut aborted = false;
+            if let Some(inj) = self.injector.as_ref() {
+                let mut inj = inj.borrow_mut();
+                inj.begin_event();
+                for &(s, d, _) in &legs {
+                    if inj.on_kv_leg(s, d).is_some() {
+                        aborted = true;
+                        break;
+                    }
+                }
+            }
+
+            let evn = *event_seq;
+            *event_seq += 1;
+            trace.push(TraceEvent::HandoffPlanned {
+                t: t_end,
+                id: r.id,
+                from_replica: src,
+                to_replica: dst,
+                bytes: plan.copied_bytes(),
+                legs: legs.len(),
+            });
+            trace.push(TraceEvent::PlanAudited {
+                t: t_end,
+                event: evn,
+                audit: PlanAudit {
+                    snapshot_blocks: snap.total_blocks(),
+                    kv_remapped_blocks: plan.remapped_blocks(),
+                    kv_copied_blocks: plan.copied_blocks(),
+                    kv_freed_blocks: plan.freed_blocks(),
+                    kv_copied_bytes: plan.copied_bytes(),
+                    migration_budget_bytes: self.handoff_budget_bytes,
+                    expert_migration_bytes: 0,
+                },
+            });
+            shash.fold_u64(r.id);
+            shash.fold_usize(src);
+            shash.fold_usize(dst);
+            shash.fold_u64(plan.copied_bytes());
+            shash.fold_usize(legs.len());
+            shash.fold_bool(aborted);
+            if let Some(t) = tel.as_deref_mut() {
+                t.inc("handoffs_planned", 1);
+                t.inc("handoff_bytes", plan.copied_bytes());
+            }
+
+            let transferable = !aborted && plan.recompute_tokens() == 0;
+            if transferable {
+                // KV lands after the P2P time for this sequence's bytes
+                // (clock started at prefill completion, not at the
+                // tick); the decode replica admits and adopts at the
+                // delivery time. A zero-byte self-handoff lands at once.
+                let due = if plan.copied_bytes() == 0 {
+                    t_done
+                } else {
+                    t_done + self.cost.kv_transfer_time(&to_real, len)
+                };
+                replicas[dst].adopt_inbox.push_back((due, r));
+            } else {
+                // Recompute-on-decode: disposition now, restart the
+                // request from its prompt on the decode replica.
+                trace.push(TraceEvent::HandoffDone {
+                    t: t_end,
+                    id: r.id,
+                    to_replica: dst,
+                    recompute: true,
+                });
+                pool_handoff.recomputed += 1;
+                pool_handoff.recompute_tokens += r.prompt_len as u64;
+                pool_handoff.lost_decode_tokens += r.generated as u64;
+                if let Some(t) = tel.as_deref_mut() {
+                    t.inc("handoff_recomputes", 1);
+                }
+                let mut fresh = Request::new(
+                    r.id,
+                    r.arrival,
+                    r.prompt_len,
+                    r.max_new_tokens,
+                )
+                .with_tenant(r.tenant);
+                fresh.prompt_ids = r.prompt_ids;
+                replicas[dst].inbox.push_back(fresh);
             }
         }
         Ok(())
@@ -1265,6 +1606,7 @@ impl FleetSim {
         recorder: &mut MetricsRecorder,
         events: &mut Vec<ScalingOutcome>,
         handoff: &mut KvHandoffStats,
+        pool_handoff: &mut KvHandoffStats,
         trace: &mut Trace,
         shash: &mut StateHash,
         mut tel: Option<&mut Telemetry>,
@@ -1343,6 +1685,60 @@ impl FleetSim {
                     {
                         eng.submit(rep.inbox.pop_front().unwrap());
                     }
+                    // Deliver due prefill→decode handoffs: admit the
+                    // transferred KV and adopt the request with its
+                    // decode progress intact, or disposition it as a
+                    // recompute (fresh re-prefill here) when the pool
+                    // cannot take the sequence.
+                    let mut i = 0;
+                    while i < rep.adopt_inbox.len() {
+                        if rep.adopt_inbox[i].0 > now {
+                            i += 1;
+                            continue;
+                        }
+                        let (_, r) = rep.adopt_inbox.remove(i).unwrap();
+                        if eng.kv.can_admit(r.total_tokens())
+                            && eng.kv.admit(r.id, r.current_len()).is_ok()
+                        {
+                            trace.push(TraceEvent::HandoffDone {
+                                t: now,
+                                id: r.id,
+                                to_replica: rep.id,
+                                recompute: false,
+                            });
+                            pool_handoff.copied += 1;
+                            pool_handoff.adopted_tokens +=
+                                r.generated as u64;
+                            if let Some(t) = tel.as_deref_mut() {
+                                t.inc("handoff_adoptions", 1);
+                            }
+                            eng.batcher_adopt(r);
+                        } else {
+                            trace.push(TraceEvent::HandoffDone {
+                                t: now,
+                                id: r.id,
+                                to_replica: rep.id,
+                                recompute: true,
+                            });
+                            pool_handoff.recomputed += 1;
+                            pool_handoff.recompute_tokens +=
+                                r.prompt_len as u64;
+                            pool_handoff.lost_decode_tokens +=
+                                r.generated as u64;
+                            if let Some(t) = tel.as_deref_mut() {
+                                t.inc("handoff_recomputes", 1);
+                            }
+                            let mut fresh = Request::new(
+                                r.id,
+                                r.arrival,
+                                r.prompt_len,
+                                r.max_new_tokens,
+                            )
+                            .with_tenant(r.tenant);
+                            fresh.prompt_ids = r.prompt_ids;
+                            eng.submit(fresh);
+                        }
+                    }
                 }
             }
 
@@ -1380,6 +1776,18 @@ impl FleetSim {
                         }
                         recorder.record(&r);
                     }
+                    // A prefill replica never decodes: pull every
+                    // sequence that just produced its first token out of
+                    // the running batch (KV released here) and stage it
+                    // for handoff planning at the tick.
+                    if rep.role == PoolRole::Prefill {
+                        let now2 = rep.clock.now();
+                        for r in
+                            eng.batcher.take_decoding(&mut eng.kv)
+                        {
+                            rep.stage.push((now2, r));
+                        }
+                    }
                     !matches!(out.kind, StepKind::Idle)
                 } else {
                     false
@@ -1408,6 +1816,9 @@ impl FleetSim {
                 }
                 if let Some(r) = rep.inbox.front() {
                     consider(r.arrival);
+                }
+                for (due, _) in &rep.adopt_inbox {
+                    consider(*due);
                 }
                 rep.clock.advance_to(next + 1e-9);
             }
@@ -1949,5 +2360,101 @@ mod tests {
                 out.recorder.attainment_for_tenant(i as u32, &t.slo);
             assert!(!att.is_nan(), "tenant {i} must have traffic");
         }
+    }
+
+    /// A prefill/decode disaggregated fleet serves a long-prompt trace
+    /// end-to-end: every sequence prefills in the prefill pool, crosses
+    /// the fabric as a planned KV copy, and decodes to completion in the
+    /// decode pool — zero recompute tokens on the happy path, full
+    /// invariant conformance (including handoff disposition).
+    #[test]
+    fn disaggregated_fleet_hands_off_without_recompute() {
+        let mut sim = fleet(Router::JoinShortestQueue);
+        sim.initial_roles = vec![
+            PoolRole::Prefill,
+            PoolRole::Decode,
+            PoolRole::Prefill,
+            PoolRole::Decode,
+        ];
+        let mut policy = fast_policy(PolicyMode::Hybrid, 8);
+        let mut g = WorkloadGen::new(WorkloadSpec {
+            prompt_len: 4096,
+            decode_min: 50,
+            decode_max: 100,
+            profile: RateProfile::Fixed(0.4),
+            seed: 9,
+        });
+        let arrivals = g.arrivals_until(90.0);
+        let n = arrivals.len();
+        let out = sim
+            .run(&mut policy, &mut elastic_factory(8), 4, arrivals, 90.0)
+            .unwrap();
+        assert_eq!(out.recorder.count(), n, "trace fully served");
+        let planned = out
+            .trace
+            .events
+            .iter()
+            .filter(|e| matches!(e, TraceEvent::HandoffPlanned { .. }))
+            .count();
+        assert!(planned >= n, "every request hands off at least once");
+        assert!(
+            out.pool_handoff.copied >= n,
+            "handoffs must adopt via KV copy ({} < {n})",
+            out.pool_handoff.copied
+        );
+        assert_eq!(
+            out.pool_handoff.recompute_tokens, 0,
+            "happy-path handoff must re-prefill nothing"
+        );
+        assert!(out.pool_handoff.adopted_tokens >= n as u64);
+        let v = check_all(&out.trace);
+        assert!(v.is_empty(), "{v:?}");
+    }
+
+    /// A `KvCopyFail` on the first handoff's first fabric leg aborts the
+    /// transfer: the sequence is dispositioned as recompute-on-decode —
+    /// re-prefilled in the decode pool — and still finishes exactly
+    /// once. The remaining handoffs copy normally.
+    #[test]
+    fn kv_copy_fail_mid_handoff_falls_back_to_recompute() {
+        let plan = FaultPlan::single(
+            0,
+            FaultKind::KvCopyFail { after_legs: 1 },
+        );
+        let mut sim = fleet(Router::JoinShortestQueue);
+        sim.injector =
+            Some(Rc::new(RefCell::new(FaultInjector::new(plan))));
+        sim.initial_roles = vec![PoolRole::Prefill, PoolRole::Decode];
+        let mut policy = fast_policy(PolicyMode::Hybrid, 8);
+        let mut g = WorkloadGen::new(WorkloadSpec {
+            prompt_len: 4096,
+            decode_min: 50,
+            decode_max: 100,
+            profile: RateProfile::Fixed(0.3),
+            seed: 11,
+        });
+        let arrivals = g.arrivals_until(60.0);
+        let n = arrivals.len();
+        let out = sim
+            .run(&mut policy, &mut elastic_factory(8), 2, arrivals, 60.0)
+            .unwrap();
+        assert_eq!(out.recorder.count(), n, "no request may be lost");
+        assert_eq!(
+            out.pool_handoff.recomputed, 1,
+            "exactly the faulted handoff recomputes"
+        );
+        assert!(
+            out.pool_handoff.recompute_tokens >= 4096,
+            "the aborted transfer re-prefills its prompt"
+        );
+        assert!(
+            out.trace.events.iter().any(|e| matches!(
+                e,
+                TraceEvent::HandoffDone { recompute: true, .. }
+            )),
+            "the abort must surface as a recompute disposition"
+        );
+        let v = check_all(&out.trace);
+        assert!(v.is_empty(), "{v:?}");
     }
 }

@@ -17,7 +17,7 @@ pub use estimator::{LoadEstimator, ScaleDecision};
 pub use fleet::{FleetOutput, FleetSim, Router};
 pub use policy::{
     FleetAction, FleetLimits, FleetPolicy, FleetSpec, PolicyMode,
-    ReplicaLoad, ReplicaSpec,
+    PoolRole, ReplicaLoad, ReplicaSpec,
 };
 pub use reconciler::{ReconcileStep, Reconciler};
 pub use reference::{

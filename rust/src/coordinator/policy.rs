@@ -22,6 +22,33 @@ use crate::config::SloConfig;
 
 use super::estimator::{LoadEstimator, ScaleDecision};
 
+/// Which serving phase a replica is dedicated to (prefill/decode
+/// disaggregation). `Unified` replicas run both phases — the classic
+/// single-pool fleet, and the default everywhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PoolRole {
+    /// Prompt-processing pool: requests prefill here, then hand their
+    /// KV to a decode replica over a planned fabric leg.
+    Prefill,
+    /// Token-generation pool: adopts prefilled requests via KV handoff
+    /// (or re-prefills them when the handoff leg aborts).
+    Decode,
+    /// Both phases on one replica (no disaggregation).
+    #[default]
+    Unified,
+}
+
+impl PoolRole {
+    /// Short stable label for telemetry series and reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            PoolRole::Prefill => "prefill",
+            PoolRole::Decode => "decode",
+            PoolRole::Unified => "unified",
+        }
+    }
+}
+
 /// A point-in-time load snapshot of one replica, as seen by the policy.
 #[derive(Debug, Clone, Copy)]
 pub struct ReplicaLoad {
@@ -53,6 +80,9 @@ pub struct ReplicaLoad {
     /// `now - last_heartbeat` passes its staleness deadline; parked and
     /// booting replicas are exempt.
     pub last_heartbeat: f64,
+    /// The pool this replica serves in ([`PoolRole::Unified`] on
+    /// non-disaggregated fleets).
+    pub role: PoolRole,
 }
 
 /// Fleet sizing envelope and the shared device-pool budget.
@@ -122,6 +152,10 @@ pub struct ReplicaSpec {
     pub devices: usize,
     /// The slot is parked at zero devices (weights DRAM-warm).
     pub parked: bool,
+    /// The pool the slot belongs to. A replica booted for this slot
+    /// inherits the role; the reconciler treats role as immutable (a
+    /// replica never migrates between pools — it drains out instead).
+    pub role: PoolRole,
 }
 
 /// The policy's declared desired fleet state for one reconcile round:
@@ -157,6 +191,24 @@ impl FleetSpec {
     }
 }
 
+/// The identity spec over observed loads: every non-draining replica
+/// keeps its footprint, park state and pool role.
+fn identity_spec(loads: &[ReplicaLoad]) -> FleetSpec {
+    FleetSpec {
+        replicas: loads
+            .iter()
+            .filter(|l| !l.draining)
+            .map(|l| ReplicaSpec {
+                id: l.id,
+                devices: l.devices,
+                parked: l.parked,
+                role: l.role,
+            })
+            .collect(),
+        rebalance: None,
+    }
+}
+
 /// The fleet policy: fleet-wide hysteresis plus action selection.
 pub struct FleetPolicy {
     pub mode: PolicyMode,
@@ -182,6 +234,13 @@ pub struct FleetPolicy {
     /// when traffic was seen within this many seconds — the serverless
     /// keep-warm window.
     pub park_ttl: f64,
+    /// Per-pool direction debouncing for disaggregated fleets: when the
+    /// observed loads carry [`PoolRole::Prefill`] / [`PoolRole::Decode`]
+    /// roles, each pool's windows feed its own estimator (swapped into
+    /// the shared decision kernel per pool), so a long-prompt burst
+    /// scales prefill without burning the decode pool's hysteresis.
+    pub prefill_estimator: LoadEstimator,
+    pub decode_estimator: LoadEstimator,
     last_event: HashMap<usize, f64>,
 }
 
@@ -196,6 +255,8 @@ impl FleetPolicy {
             rebalance_threshold: 1.5,
             park_enabled: false,
             park_ttl: 150.0,
+            prefill_estimator: LoadEstimator::new(slo),
+            decode_estimator: LoadEstimator::new(slo),
             last_event: HashMap::new(),
         }
     }
@@ -224,7 +285,9 @@ impl FleetPolicy {
     /// Declare the desired fleet state for the window ending at `now`:
     /// observe the fleet exactly as [`Self::decide_action`] does, then
     /// project the chosen action onto the observed loads as a
-    /// [`FleetSpec`] for the reconciler to converge on.
+    /// [`FleetSpec`] for the reconciler to converge on. Disaggregated
+    /// fleets (any non-[`PoolRole::Unified`] load) converge each pool
+    /// independently via [`Self::decide_pools`].
     pub fn decide(
         &mut self,
         now: f64,
@@ -232,8 +295,100 @@ impl FleetPolicy {
         loads: &[ReplicaLoad],
         free_devices: usize,
     ) -> FleetSpec {
+        if loads.iter().any(|l| l.role != PoolRole::Unified) {
+            return self.decide_pools(now, attainment, loads, free_devices);
+        }
         let action = self.decide_action(now, attainment, loads, free_devices);
         self.project(action, loads)
+    }
+
+    /// Per-pool projection for disaggregated fleets: each role subset is
+    /// observed through its own estimator (swapped into the shared
+    /// decision kernel), contributes at most one slot delta to the joint
+    /// spec, and draws from the shared pool budget in role order. The
+    /// fleet-wide attainment is attributed only to pools showing
+    /// pressure (queued work or near-saturated batches) — an unloaded
+    /// pool observes a healthy window instead of scaling on the other
+    /// pool's pain, which is what lets long-prompt bursts grow prefill
+    /// while decode holds (and vice versa for long-generation traffic).
+    fn decide_pools(
+        &mut self,
+        now: f64,
+        attainment: f64,
+        loads: &[ReplicaLoad],
+        free_devices: usize,
+    ) -> FleetSpec {
+        let mut spec = identity_spec(loads);
+        let mut free = free_devices;
+        let next_id = loads.iter().map(|l| l.id + 1).max().unwrap_or(0);
+        for role in [PoolRole::Prefill, PoolRole::Decode, PoolRole::Unified]
+        {
+            let pool: Vec<ReplicaLoad> = loads
+                .iter()
+                .filter(|l| l.role == role)
+                .copied()
+                .collect();
+            if pool.is_empty() {
+                continue;
+            }
+            let serving: Vec<&ReplicaLoad> = pool
+                .iter()
+                .filter(|l| !l.draining && !l.parked)
+                .collect();
+            let queue: usize =
+                serving.iter().map(|l| l.queue_depth).sum();
+            let occ = if serving.is_empty() {
+                0.0
+            } else {
+                serving.iter().map(|l| l.occupancy).sum::<f64>()
+                    / serving.len() as f64
+            };
+            let pressured = queue > 0 || occ > 0.85;
+            let att = if pressured || attainment.is_nan() {
+                attainment
+            } else {
+                1.0
+            };
+            self.swap_pool_estimator(role);
+            let action = self.decide_action(now, att, &pool, free);
+            self.swap_pool_estimator(role);
+            // Account the action's draw against the shared budget before
+            // the next pool decides (freed devices return only after the
+            // simulator enacts the step, not within this round).
+            let drawn = match action {
+                FleetAction::VerticalUp { replica, to_devices } => {
+                    to_devices.saturating_sub(
+                        pool.iter()
+                            .find(|l| l.id == replica)
+                            .map(|l| l.devices)
+                            .unwrap_or(0),
+                    )
+                }
+                FleetAction::AddReplica => self.limits.replica_base,
+                FleetAction::Unpark { .. } => self.limits.replica_base,
+                _ => 0,
+            };
+            free = free.saturating_sub(drawn);
+            self.apply_action(&mut spec, action, next_id, role);
+        }
+        spec
+    }
+
+    /// Swap the given pool's estimator into the shared kernel slot
+    /// (self-inverse; [`PoolRole::Unified`] uses the shared estimator
+    /// directly).
+    fn swap_pool_estimator(&mut self, role: PoolRole) {
+        match role {
+            PoolRole::Prefill => std::mem::swap(
+                &mut self.estimator,
+                &mut self.prefill_estimator,
+            ),
+            PoolRole::Decode => std::mem::swap(
+                &mut self.estimator,
+                &mut self.decode_estimator,
+            ),
+            PoolRole::Unified => {}
+        }
     }
 
     /// Project one imperative action onto the observed loads: the
@@ -244,18 +399,23 @@ impl FleetPolicy {
         action: FleetAction,
         loads: &[ReplicaLoad],
     ) -> FleetSpec {
-        let mut spec = FleetSpec {
-            replicas: loads
-                .iter()
-                .filter(|l| !l.draining)
-                .map(|l| ReplicaSpec {
-                    id: l.id,
-                    devices: l.devices,
-                    parked: l.parked,
-                })
-                .collect(),
-            rebalance: None,
-        };
+        let mut spec = identity_spec(loads);
+        let next_id = loads.iter().map(|l| l.id + 1).max().unwrap_or(0);
+        self.apply_action(&mut spec, action, next_id, PoolRole::Unified);
+        spec
+    }
+
+    /// Apply one action's slot delta to `spec`. `next_id` is the id a
+    /// freshly added slot binds to (global max + 1 — pool subsets must
+    /// not reuse a live id from another pool); `new_role` is the pool
+    /// the added slot serves in.
+    fn apply_action(
+        &self,
+        spec: &mut FleetSpec,
+        action: FleetAction,
+        next_id: usize,
+        new_role: PoolRole,
+    ) {
         let slot = |spec: &mut FleetSpec, id: usize| {
             spec.replicas.iter_mut().find(|s| s.id == id)
         };
@@ -263,12 +423,12 @@ impl FleetPolicy {
             FleetAction::Hold => {}
             FleetAction::VerticalUp { replica, to_devices }
             | FleetAction::VerticalDown { replica, to_devices } => {
-                if let Some(s) = slot(&mut spec, replica) {
+                if let Some(s) = slot(spec, replica) {
                     s.devices = to_devices;
                 }
             }
             FleetAction::Park { replica } => {
-                if let Some(s) = slot(&mut spec, replica) {
+                if let Some(s) = slot(spec, replica) {
                     s.parked = true;
                     s.devices = 0;
                 }
@@ -276,17 +436,16 @@ impl FleetPolicy {
             FleetAction::Unpark { replica } => {
                 // devices stays 0: the replica resumes at its pre-park
                 // size, which only the simulator knows.
-                if let Some(s) = slot(&mut spec, replica) {
+                if let Some(s) = slot(spec, replica) {
                     s.parked = false;
                 }
             }
             FleetAction::AddReplica => {
-                let id =
-                    loads.iter().map(|l| l.id + 1).max().unwrap_or(0);
                 spec.replicas.push(ReplicaSpec {
-                    id,
+                    id: next_id,
                     devices: self.limits.replica_base,
                     parked: false,
+                    role: new_role,
                 });
             }
             FleetAction::DrainReplica { replica } => {
@@ -296,7 +455,6 @@ impl FleetPolicy {
                 spec.rebalance = Some(replica);
             }
         }
-        spec
     }
 
     /// Decide the fleet action for the window ending at `now`.
@@ -567,7 +725,20 @@ mod tests {
             parked: false,
             imbalance: 1.0,
             last_heartbeat: 0.0,
+            role: PoolRole::Unified,
         }
+    }
+
+    fn pool_load(
+        id: usize,
+        role: PoolRole,
+        devices: usize,
+        occ: f64,
+        queue: usize,
+    ) -> ReplicaLoad {
+        let mut l = load(id, devices, occ, queue);
+        l.role = role;
+        l
     }
 
     #[test]
@@ -900,5 +1071,100 @@ mod tests {
         // Same observation as decide_action: VerticalUp on replica 1.
         assert_eq!(spec.slot(1).unwrap().devices, 4);
         assert_eq!(spec.slot(0).unwrap().devices, 2);
+    }
+
+    fn tune_pool_estimators(p: &mut FleetPolicy) {
+        for e in [&mut p.prefill_estimator, &mut p.decode_estimator] {
+            e.up_patience = 1;
+            e.down_patience = 1;
+            e.cooldown = 0.0;
+        }
+    }
+
+    #[test]
+    fn long_prompt_pressure_scales_only_the_prefill_pool() {
+        let mut p = policy(PolicyMode::Hybrid);
+        tune_pool_estimators(&mut p);
+        // Prefill pool drowning in queued prompts; decode pool relaxed.
+        let loads = [
+            pool_load(0, PoolRole::Prefill, 2, 1.0, 20),
+            pool_load(1, PoolRole::Decode, 2, 0.3, 0),
+        ];
+        let spec = p.decide(5.0, 0.5, &loads, 8);
+        assert_eq!(spec.slot(0).unwrap().devices, 4, "prefill grew");
+        assert_eq!(
+            spec.slot(0).unwrap().role,
+            PoolRole::Prefill,
+            "role survives projection"
+        );
+        assert_eq!(
+            spec.slot(1).unwrap().devices,
+            2,
+            "unpressured decode pool must not ride the violation"
+        );
+    }
+
+    #[test]
+    fn decode_saturation_scales_only_the_decode_pool() {
+        let mut p = policy(PolicyMode::Hybrid);
+        tune_pool_estimators(&mut p);
+        // Decode batches saturated (long generations); prefill idle.
+        let loads = [
+            pool_load(0, PoolRole::Prefill, 2, 0.2, 0),
+            pool_load(1, PoolRole::Decode, 2, 1.0, 12),
+        ];
+        let spec = p.decide(5.0, 0.5, &loads, 8);
+        assert_eq!(spec.slot(0).unwrap().devices, 2, "prefill holds");
+        assert_eq!(spec.slot(1).unwrap().devices, 4, "decode grew");
+    }
+
+    #[test]
+    fn pool_add_replica_inherits_the_pool_role_and_a_global_id() {
+        let mut p = policy(PolicyMode::Hybrid);
+        tune_pool_estimators(&mut p);
+        // Prefill replica 0 is at the vertical ceiling: the pool falls
+        // back to a horizontal add. The fresh slot must carry the pool's
+        // role and an id above every live replica (including decode's).
+        let loads = [
+            pool_load(0, PoolRole::Prefill, 6, 1.0, 20),
+            pool_load(7, PoolRole::Decode, 2, 0.3, 0),
+        ];
+        let spec = p.decide(5.0, 0.5, &loads, 6);
+        let fresh = spec.slot(8).expect("new slot at global max id + 1");
+        assert_eq!(fresh.role, PoolRole::Prefill);
+        assert_eq!(fresh.devices, p.limits.replica_base);
+    }
+
+    #[test]
+    fn idle_pool_shrinks_while_the_other_pool_is_violating() {
+        let mut p = policy(PolicyMode::Hybrid);
+        tune_pool_estimators(&mut p);
+        p.limits.min_replicas = 1;
+        // Decode grew to 4 devices earlier, now idle; prefill pressured.
+        // Fleet attainment is violating, but the idle decode pool must
+        // observe healthy windows and give its vertical step back.
+        let loads = [
+            pool_load(0, PoolRole::Prefill, 2, 1.0, 20),
+            pool_load(1, PoolRole::Decode, 4, 0.1, 0),
+        ];
+        let spec = p.decide(5.0, 0.5, &loads, 2);
+        assert_eq!(spec.slot(0).unwrap().devices, 4, "prefill grew");
+        assert_eq!(spec.slot(1).unwrap().devices, 2, "idle decode shrank");
+    }
+
+    #[test]
+    fn pool_budget_is_shared_across_pools_in_role_order() {
+        let mut p = policy(PolicyMode::Hybrid);
+        tune_pool_estimators(&mut p);
+        // Both pools pressured but only one step of budget: prefill
+        // (decided first) takes it; decode's trigger is refunded.
+        let loads = [
+            pool_load(0, PoolRole::Prefill, 2, 1.0, 20),
+            pool_load(1, PoolRole::Decode, 2, 1.0, 15),
+        ];
+        let spec = p.decide(5.0, 0.5, &loads, 2);
+        assert_eq!(spec.slot(0).unwrap().devices, 4);
+        assert_eq!(spec.slot(1).unwrap().devices, 2);
+        assert_eq!(spec.devices_total(), 6);
     }
 }

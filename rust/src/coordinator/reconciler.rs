@@ -192,7 +192,7 @@ impl Reconciler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::policy::ReplicaSpec;
+    use crate::coordinator::policy::{PoolRole, ReplicaSpec};
 
     fn obs(id: usize, devices: usize, hb: f64) -> ReplicaLoad {
         ReplicaLoad {
@@ -206,11 +206,12 @@ mod tests {
             parked: false,
             imbalance: 1.0,
             last_heartbeat: hb,
+            role: PoolRole::Unified,
         }
     }
 
     fn slot(id: usize, devices: usize, parked: bool) -> ReplicaSpec {
-        ReplicaSpec { id, devices, parked }
+        ReplicaSpec { id, devices, parked, role: PoolRole::Unified }
     }
 
     fn spec(slots: Vec<ReplicaSpec>) -> FleetSpec {

@@ -232,6 +232,31 @@ impl Batcher {
         self.waiting.drain(..).collect()
     }
 
+    /// Extract every freshly decoded sequence from the running batch,
+    /// releasing its KV here — the prefill→decode handoff of a
+    /// disaggregated fleet: a prefill replica keeps nothing past the
+    /// first token, and the decode replica re-admits each sequence's KV
+    /// when the transfer leg delivers (see
+    /// [`crate::coordinator::fleet`]). Prefilling sequences stay put
+    /// (their handoff point is the end of their prefill step).
+    pub fn take_decoding(&mut self, kv: &mut PagedKv) -> Vec<Request> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < self.running.len() {
+            if self.running[i].state == RequestState::Decoding {
+                let r = self.running.swap_remove(i);
+                kv.release(r.id);
+                out.push(r);
+            } else {
+                i += 1;
+            }
+        }
+        // The extraction order must not depend on swap_remove's
+        // permutation: downstream handoff planning iterates this list.
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
     /// Adopt an in-flight request directly into the running batch with its
     /// decode progress intact (switchover with zero-copy KV reuse). The
     /// caller must have admitted its KV already.

@@ -138,7 +138,7 @@ impl ServeEngine {
                     }
                 }
                 self.tokens_emitted += emitted;
-                preempted = self.preempt(&to_preempt);
+                preempted = self.preempt(&to_preempt, now);
             }
             NextWork::Idle => {}
         }
@@ -154,7 +154,7 @@ impl ServeEngine {
 
     /// Preempt requests back to the waiting queue (restart-from-scratch
     /// recompute policy, vLLM's default preemption).
-    fn preempt(&mut self, ids: &[u64]) -> usize {
+    fn preempt(&mut self, ids: &[u64], now: f64) -> usize {
         if ids.is_empty() {
             return 0;
         }
@@ -173,6 +173,7 @@ impl ServeEngine {
                 fresh.prompt_ids = r.prompt_ids.clone();
                 moved.push(fresh);
                 r.state = RequestState::Dropped; // reaped below, re-queued
+                r.finished_at = Some(now); // drop time, not arrival
                 n += 1;
             }
         }

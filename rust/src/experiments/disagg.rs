@@ -1,0 +1,536 @@
+//! Prefill/decode disaggregation A/B (the pool-role tentpole): the
+//! same mixed long-prompt/long-generation trace served by a unified
+//! fleet and by a prefill/decode disaggregated fleet of identical size,
+//! plus a fault cell that severs a KV handoff leg mid-copy.
+//!
+//! Both fleets are pinned at four 2-device replicas with no scaling
+//! headroom, so the comparison isolates pool topology at equal
+//! device-seconds. The mixed trace interleaves a long-generation tenant
+//! ("gen": 4k prompts, 400-560 decode steps) with a long-prompt,
+//! TTFT-sensitive tenant ("doc": 8k prompts, short answers). On the
+//! unified fleet every replica's batch slots silt up with long-lived
+//! decoders, so fresh prompts stall in admission behind them and TTFT
+//! p99 inflates by seconds. The disaggregated fleet extracts each
+//! sequence from its prefill replica the moment prefill completes and
+//! hands its KV to the decode pool over a planned fabric leg
+//! ([`crate::kvmigrate::plan_kv_migration`]), so prefill slots never
+//! silt and admission is immediate.
+//!
+//! Acceptance, machine-checked per run: the disaggregated fleet
+//! *strictly* beats unified on TTFT p99 at device-seconds within 10%;
+//! the happy-path cell hands off every sequence with **zero** recompute
+//! tokens; the `KvCopyFail` cell falls back to recompute-on-decode
+//! without losing a request; and every cell passes the full invariant
+//! catalog ([`crate::chaos::check_all`]) including block conservation
+//! and exactly-once handoff disposition over the new legs. See
+//! `docs/architecture/10-disaggregation.md`.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::chaos::{
+    check_all, FaultInjector, FaultKind, FaultPlan, TraceEvent,
+    Violation,
+};
+use crate::config::model::dsv2_lite;
+use crate::config::SloConfig;
+use crate::coordinator::{
+    FleetLimits, FleetOutput, FleetPolicy, FleetSim, PolicyMode,
+    PoolRole, Router,
+};
+use crate::device::Timings;
+use crate::engine::CostModel;
+use crate::hmm::control::HmmOptions;
+use crate::imm::manager::ImmOptions;
+use crate::scaling::ScalingMethod;
+use crate::util::table::Table;
+use crate::workload::{
+    MultiTenantGen, RateProfile, Request, TenantSpec, WorkloadSpec,
+};
+
+use super::common::elastic_with_opts;
+
+/// Default seed when `--seed` is not given.
+pub const DEFAULT_SEED: u64 = 23;
+
+/// Fleet shape shared by every cell: replica count and devices each.
+const REPLICAS: usize = 4;
+const DEVICES_PER_REPLICA: usize = 2;
+
+/// Per-replica concurrent-sequence cap. Small enough that the unified
+/// baseline's slots saturate with long-lived decoders under the mixed
+/// trace (the contention the paper's disaggregation removes), while the
+/// decode pool adopts past it and stays weight-read-bound.
+const MAX_BATCH: usize = 16;
+
+/// No headroom in any direction: the pool is exactly the boot
+/// footprint, vertical max equals base, and `min_replicas` pins the
+/// count — both cells hold the same devices for the whole run.
+fn limits() -> FleetLimits {
+    FleetLimits {
+        pool_devices: REPLICAS * DEVICES_PER_REPLICA,
+        replica_base: DEVICES_PER_REPLICA,
+        replica_max: DEVICES_PER_REPLICA,
+        step: DEVICES_PER_REPLICA,
+        min_replicas: REPLICAS,
+    }
+}
+
+fn policy() -> FleetPolicy {
+    let mut p = FleetPolicy::new(
+        PolicyMode::Hybrid,
+        limits(),
+        SloConfig::scale_up_demo(),
+    );
+    // Capacity is pinned by `limits()`; infinite patience keeps the
+    // estimator from even proposing actions, so the A/B never pays a
+    // switchover window.
+    p.estimator.up_patience = u32::MAX;
+    p.estimator.down_patience = u32::MAX;
+    p
+}
+
+fn elastic_factory(
+) -> impl FnMut(usize) -> Result<Box<dyn ScalingMethod>> {
+    move |_| {
+        Ok(Box::new(elastic_with_opts(
+            &dsv2_lite(),
+            DEVICES_PER_REPLICA,
+            HmmOptions::default(),
+            ImmOptions::default(),
+        )) as Box<dyn ScalingMethod>)
+    }
+}
+
+fn horizon(fast: bool) -> f64 {
+    if fast {
+        120.0
+    } else {
+        180.0
+    }
+}
+
+/// The mixed trace both fleets serve: tenant 0 ("gen") holds batch
+/// slots for hundreds of decode steps per request; tenant 1 ("doc")
+/// sends the long prompts whose TTFT the contention punishes. Both
+/// prompt lengths sit above the copy/recompute break-even, so every
+/// happy-path handoff plans as a fabric copy.
+fn workload(seed: u64, fast: bool) -> Vec<Request> {
+    let slo = SloConfig::scale_up_demo();
+    MultiTenantGen::new(vec![
+        TenantSpec::new(
+            "gen",
+            WorkloadSpec {
+                prompt_len: 4096,
+                decode_min: 400,
+                decode_max: 560,
+                profile: RateProfile::Fixed(7.0),
+                seed,
+            },
+            slo,
+        ),
+        TenantSpec::new(
+            "doc",
+            WorkloadSpec {
+                prompt_len: 8192,
+                decode_min: 16,
+                decode_max: 32,
+                profile: RateProfile::Fixed(2.0),
+                seed: seed ^ 0x9e37_79b9,
+            },
+            slo,
+        ),
+    ])
+    .arrivals_until(horizon(fast))
+}
+
+/// Boot roles per cell. An empty vec is the unified control (every
+/// replica defaults to [`PoolRole::Unified`]).
+fn roles(cell: &str) -> Vec<PoolRole> {
+    match cell {
+        "unified" => Vec::new(),
+        _ => vec![
+            PoolRole::Prefill,
+            PoolRole::Decode,
+            PoolRole::Prefill,
+            PoolRole::Decode,
+        ],
+    }
+}
+
+/// The kvfail cell severs the very first handoff's fabric copy one leg
+/// in (capacity is pinned, so handoffs are the only injector events):
+/// the plan must abort cleanly and the sequence re-prefill on its
+/// decode replica instead of being lost.
+fn fault_plan(cell: &str) -> FaultPlan {
+    match cell {
+        "disagg-kvfail" => FaultPlan::single(
+            0,
+            FaultKind::KvCopyFail { after_legs: 1 },
+        ),
+        _ => FaultPlan::none(),
+    }
+}
+
+/// One cell's measurements.
+struct CellResult {
+    cell: &'static str,
+    arrived: usize,
+    completed: usize,
+    ttft_p99: f64,
+    device_seconds: f64,
+    handoffs: usize,
+    adopted: usize,
+    recomputed: usize,
+    recompute_tokens: u64,
+    fault_fired: bool,
+    violations: Vec<Violation>,
+    state_hash: u64,
+    telemetry: Option<crate::obs::Telemetry>,
+}
+
+fn count(out: &FleetOutput, pred: impl Fn(&TraceEvent) -> bool) -> usize {
+    out.trace.events.iter().filter(|e| pred(e)).count()
+}
+
+/// Run one cell on the seeded mixed trace.
+fn run_cell(
+    cell: &'static str,
+    seed: u64,
+    fast: bool,
+) -> Result<CellResult> {
+    run_cell_obs(cell, seed, fast, false)
+}
+
+/// [`run_cell`] with the telemetry registry optionally enabled (exports
+/// the `handoffs_planned`/`handoff_bytes`/`handoff_adoptions` counters
+/// alongside the standard fleet series).
+fn run_cell_obs(
+    cell: &'static str,
+    seed: u64,
+    fast: bool,
+    obs: bool,
+) -> Result<CellResult> {
+    let mut sim = FleetSim::new(
+        CostModel::new(dsv2_lite(), Timings::cloudmatrix()),
+        SloConfig::scale_up_demo(),
+        Router::JoinShortestQueue,
+    );
+    sim.obs = obs;
+    sim.max_batch = MAX_BATCH;
+    // Short routing/handoff window: staged sequences wait at most half
+    // a second between finishing prefill and having their KV leg
+    // planned.
+    sim.window = 0.5;
+    sim.initial_roles = roles(cell);
+    sim.injector = Some(Rc::new(RefCell::new(FaultInjector::new(
+        fault_plan(cell),
+    ))));
+    let mut policy = policy();
+    let arrivals = workload(seed, fast);
+    let arrived = arrivals.len();
+    let out = sim.run(
+        &mut policy,
+        &mut elastic_factory(),
+        REPLICAS,
+        arrivals,
+        horizon(fast),
+    )?;
+
+    let violations = check_all(&out.trace);
+    Ok(CellResult {
+        cell,
+        arrived,
+        completed: out.recorder.count(),
+        ttft_p99: out.recorder.ttft_percentile_by_arrival(
+            0.0,
+            f64::INFINITY,
+            99.0,
+        ),
+        device_seconds: out.device_seconds(),
+        handoffs: count(&out, |e| {
+            matches!(e, TraceEvent::HandoffPlanned { .. })
+        }),
+        adopted: out.pool_handoff.copied,
+        recomputed: out.pool_handoff.recomputed,
+        recompute_tokens: out.pool_handoff.recompute_tokens,
+        fault_fired: count(&out, |e| {
+            matches!(e, TraceEvent::FaultFired { .. })
+        }) > 0,
+        violations,
+        state_hash: out.state_hash,
+        telemetry: out.telemetry,
+    })
+}
+
+/// One cell of [`conformance`]: the fields the determinism sweep
+/// (`rust/tests/determinism.rs`) compares across seeds and re-runs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConformanceCell {
+    pub cell: &'static str,
+    pub arrived: usize,
+    pub completed: usize,
+    /// `HandoffPlanned` legs across the run.
+    pub handoffs: usize,
+    /// Sequences adopted with their KV intact on a decode replica.
+    pub adopted: usize,
+    /// Sequences that fell back to recompute-on-decode.
+    pub recomputed: usize,
+    /// Invariant violations found by [`check_all`] (must be zero).
+    pub violations: usize,
+    /// The run's [`FleetOutput::state_hash`] — equal across same-seed
+    /// re-runs.
+    pub state_hash: u64,
+}
+
+/// Run the pool matrix for one seed and return every cell's conformance
+/// summary plus its run digest. Entry point for the seed-sweep
+/// determinism suite.
+pub fn conformance(seed: u64) -> Result<Vec<ConformanceCell>> {
+    conformance_with_obs(seed, false)
+}
+
+/// [`conformance`] with the telemetry registry on or off: the
+/// determinism suite runs each cell both ways and asserts the digests
+/// are bit-identical (telemetry must be a pure observer).
+pub fn conformance_with_obs(
+    seed: u64,
+    obs: bool,
+) -> Result<Vec<ConformanceCell>> {
+    let mut cells = Vec::new();
+    for cell in matrix() {
+        let r = run_cell_obs(cell, seed, true, obs)?;
+        cells.push(ConformanceCell {
+            cell: r.cell,
+            arrived: r.arrived,
+            completed: r.completed,
+            handoffs: r.handoffs,
+            adopted: r.adopted,
+            recomputed: r.recomputed,
+            violations: r.violations.len(),
+            state_hash: r.state_hash,
+        });
+    }
+    Ok(cells)
+}
+
+/// The pool matrix: unified control, disaggregated happy path, and the
+/// severed-handoff-leg fault cell, all on the identical trace.
+fn matrix() -> [&'static str; 3] {
+    ["unified", "disagg", "disagg-kvfail"]
+}
+
+/// Per-cell acceptance: zero invariant violations, everything served
+/// exactly once, and the cell's handoff tally matches its topology.
+fn assert_cell(r: &CellResult, seed: u64) -> Result<()> {
+    if !r.violations.is_empty() {
+        bail!(
+            "cell [{}] violated {} invariant(s) (replay with \
+             `repro exp disagg --seed {seed}`): {}",
+            r.cell,
+            r.violations.len(),
+            r.violations
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("; ")
+        );
+    }
+    if r.completed != r.arrived {
+        bail!(
+            "cell [{}]: {} of {} requests completed (seed {seed})",
+            r.cell,
+            r.completed,
+            r.arrived
+        );
+    }
+    match r.cell {
+        "unified" => {
+            if r.handoffs != 0 || r.adopted != 0 || r.recomputed != 0 {
+                bail!(
+                    "cell [unified] must not hand off: planned {}, \
+                     adopted {}, recomputed {} (seed {seed})",
+                    r.handoffs,
+                    r.adopted,
+                    r.recomputed
+                );
+            }
+        }
+        "disagg" => {
+            // The zero-recompute happy path: every sequence's KV
+            // crossed the fabric and was adopted mid-stream.
+            if r.recomputed != 0 || r.recompute_tokens != 0 {
+                bail!(
+                    "cell [disagg]: happy path recomputed {} seqs / \
+                     {} tokens (seed {seed})",
+                    r.recomputed,
+                    r.recompute_tokens
+                );
+            }
+            if r.adopted != r.arrived {
+                bail!(
+                    "cell [disagg]: {} of {} sequences adopted by the \
+                     decode pool (seed {seed})",
+                    r.adopted,
+                    r.arrived
+                );
+            }
+        }
+        "disagg-kvfail" => {
+            if !r.fault_fired {
+                bail!(
+                    "cell [disagg-kvfail]: fault never fired (seed \
+                     {seed})"
+                );
+            }
+            if r.recomputed == 0 {
+                bail!(
+                    "cell [disagg-kvfail]: severed leg must surface \
+                     as recompute-on-decode (seed {seed})"
+                );
+            }
+            if r.adopted + r.recomputed != r.arrived {
+                bail!(
+                    "cell [disagg-kvfail]: {} adopted + {} recomputed \
+                     != {} arrived (seed {seed})",
+                    r.adopted,
+                    r.recomputed,
+                    r.arrived
+                );
+            }
+        }
+        other => bail!("unknown cell '{other}'"),
+    }
+    Ok(())
+}
+
+/// Cross-cell acceptance: the headline claim. Disaggregation must
+/// *strictly* beat the unified control on TTFT p99 while holding the
+/// same device-seconds (within 10% — the pinned fleets differ only in
+/// drain-tail length).
+fn assert_headline(
+    unified: &CellResult,
+    disagg: &CellResult,
+    seed: u64,
+) -> Result<()> {
+    if !(disagg.ttft_p99 < unified.ttft_p99) {
+        bail!(
+            "disagg TTFT p99 {:.3}s must strictly beat unified {:.3}s \
+             (seed {seed})",
+            disagg.ttft_p99,
+            unified.ttft_p99
+        );
+    }
+    let drift = (disagg.device_seconds - unified.device_seconds).abs()
+        / unified.device_seconds;
+    if drift > 0.10 {
+        bail!(
+            "device-seconds diverged {:.1}% (unified {:.0}, disagg \
+             {:.0}, seed {seed}) — not an equal-budget comparison",
+            drift * 100.0,
+            unified.device_seconds,
+            disagg.device_seconds
+        );
+    }
+    Ok(())
+}
+
+/// `repro exp disagg [--fast] [--seed N]`.
+pub fn run(opts: &super::common::ExpOptions) -> Result<String> {
+    let fast = opts.fast;
+    let seed = opts.seed_or(DEFAULT_SEED);
+    let mut results = Vec::new();
+    for cell in matrix() {
+        let obs = cell == "disagg" && opts.wants_obs();
+        let r = run_cell_obs(cell, seed, fast, obs)?;
+        if obs {
+            opts.export_telemetry(r.telemetry.as_ref())?;
+        }
+        assert_cell(&r, seed)?;
+        results.push(r);
+    }
+    let unified = &results[0];
+    let disagg = &results[1];
+    assert_headline(unified, disagg, seed)?;
+
+    let mut table = Table::new(
+        "Prefill/decode disaggregation vs unified pools: one mixed \
+         long-prompt/long-generation trace, equal device-seconds",
+    )
+    .header([
+        "cell",
+        "done",
+        "ttft p99 (s)",
+        "device-s",
+        "handoffs",
+        "adopted",
+        "recomputed",
+        "violations",
+    ]);
+    for r in &results {
+        table.row([
+            r.cell.to_string(),
+            format!("{}/{}", r.completed, r.arrived),
+            format!("{:.3}", r.ttft_p99),
+            format!("{:.0}", r.device_seconds),
+            r.handoffs.to_string(),
+            r.adopted.to_string(),
+            r.recomputed.to_string(),
+            r.violations.len().to_string(),
+        ]);
+    }
+    let mut out = table.render();
+    out.push_str(&format!(
+        "\nseed {seed} — disaggregation cut TTFT p99 {:.1}x (unified \
+         {:.3}s -> {:.3}s) at device-seconds within {:.1}%, with zero \
+         recompute tokens on the happy path; the severed-leg cell \
+         recomputed {} sequence(s) on its decode replica and still \
+         served its full trace. Replay with `repro exp disagg --seed \
+         {seed}`.\n",
+        unified.ttft_p99 / disagg.ttft_p99,
+        unified.ttft_p99,
+        disagg.ttft_p99,
+        (disagg.device_seconds - unified.device_seconds).abs()
+            / unified.device_seconds
+            * 100.0,
+        results[2].recomputed,
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// ISSUE acceptance: disaggregation strictly beats unified on TTFT
+    /// p99 at equal device-seconds, the happy path hands off with zero
+    /// recompute tokens, the severed-leg cell falls back to
+    /// recompute-on-decode, and every cell passes the invariant
+    /// catalog.
+    #[test]
+    fn disagg_beats_unified_and_survives_kv_copy_fail() {
+        let unified = run_cell("unified", DEFAULT_SEED, true).unwrap();
+        let disagg = run_cell("disagg", DEFAULT_SEED, true).unwrap();
+        let kvfail =
+            run_cell("disagg-kvfail", DEFAULT_SEED, true).unwrap();
+        assert_cell(&unified, DEFAULT_SEED).unwrap();
+        assert_cell(&disagg, DEFAULT_SEED).unwrap();
+        assert_cell(&kvfail, DEFAULT_SEED).unwrap();
+        assert_headline(&unified, &disagg, DEFAULT_SEED).unwrap();
+    }
+
+    /// The conformance summary is bit-reproducible across re-runs of
+    /// the same seed (the determinism suite sweeps more seeds).
+    #[test]
+    fn conformance_is_reproducible() {
+        let a = conformance(DEFAULT_SEED).unwrap();
+        for cell in &a {
+            assert_eq!(cell.violations, 0, "{cell:?}");
+            assert_eq!(cell.completed, cell.arrived, "{cell:?}");
+        }
+        let b = conformance(DEFAULT_SEED).unwrap();
+        assert_eq!(a, b, "conformance summary must be reproducible");
+    }
+}

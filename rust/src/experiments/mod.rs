@@ -35,9 +35,14 @@
 //! |         | heartbeat-loss / stale-snapshot / duplicate-     |
 //! |         | command fault matrix with the bounded-convergence|
 //! |         | invariant checked per cell                       |
+//! | disagg  | prefill/decode disaggregation (beyond the paper):|
+//! |         | unified vs pool-typed fleets on one mixed trace  |
+//! |         | at equal device-seconds, with KV handoff legs    |
+//! |         | planned per sequence and a severed-leg fault cell|
 
 pub mod chaos;
 pub mod common;
+pub mod disagg;
 pub mod fig1;
 pub mod fleet;
 pub mod kvmigrate;
@@ -61,7 +66,7 @@ pub use common::ExpOptions;
 pub const ALL: &[&str] = &[
     "fig1a", "fig1b", "fig4a", "fig4b", "fig7", "fig8", "fig9a", "fig9b",
     "fig10", "fig11", "fig12", "table1", "table2", "table3", "fleet",
-    "placement", "kvmigrate", "chaos", "tier", "reconcile",
+    "placement", "kvmigrate", "chaos", "tier", "reconcile", "disagg",
 ];
 
 /// Run one experiment by id, returning the rendered report.
@@ -108,6 +113,7 @@ pub fn run_with(id: &str, opts: &ExpOptions) -> Result<String> {
         "chaos" => chaos::run(opts)?,
         "tier" => tier::run(opts)?,
         "reconcile" => reconcile::run(opts)?,
+        "disagg" => disagg::run(opts)?,
         other => bail!("unknown experiment '{other}' (see `repro exp list`)"),
     };
     // Persist alongside printing.

@@ -94,20 +94,39 @@ impl KvMigrationPlan {
     }
 
     /// Per-device fabric legs `(src, dst, bytes)` of one copy verdict:
-    /// each TP shard's KV slice moves between the pairwise shard devices
+    /// each TP shard's KV slice moves between the paired shard devices
     /// of the old and new owner replicas. Empty for remap/recompute.
     /// Single source of truth for the shard-pair split — the HMM embeds
     /// these legs in its [`crate::hmm::PlanOp::KvBlockCopy`] ops.
+    ///
+    /// When the two configurations shard differently (`from.tp !=
+    /// to.tp`) the copy reshards: one leg per shard of the *finer* side,
+    /// fanned in/out against the coarser side's devices
+    /// (`legs = max(from.tp, to.tp)`, shard `i` of the finer side pairs
+    /// with shard `i * coarse/fine` of the coarser). The integer-division
+    /// remainder of the byte split is charged to the last leg, so the
+    /// legs always sum to exactly `len * bytes_per_token` — fabric
+    /// accounting matches [`Self::copied_bytes`] byte-for-byte.
     pub fn fabric_legs(&self, leg: &KvLeg) -> Vec<(DeviceId, DeviceId, u64)> {
         let KvVerdict::Copy { src_rank, dst_rank } = leg.verdict else {
             return Vec::new();
         };
-        let tp = self.from.tp.max(1);
-        let bytes = leg.len as u64 * self.bytes_per_token;
+        let total = leg.len as u64 * self.bytes_per_token;
         let src = rank_devices(&self.from, src_rank);
         let dst = rank_devices(&self.to, dst_rank);
-        (0..tp)
-            .map(|t| (src[t], dst[t], bytes / tp as u64))
+        let n = src.len().max(dst.len()).max(1);
+        let per = total / n as u64;
+        (0..n)
+            .map(|i| {
+                let s = src[i * src.len() / n];
+                let d = dst[i * dst.len() / n];
+                let bytes = if i == n - 1 {
+                    total - per * (n as u64 - 1)
+                } else {
+                    per
+                };
+                (s, d, bytes)
+            })
             .collect()
     }
 
@@ -337,6 +356,92 @@ mod tests {
         ));
         assert_eq!(plan.freed_blocks() + plan.copied_blocks(), snap.total_blocks());
         assert!(plan.blocks_conserved(snap.total_blocks()));
+    }
+
+    /// Hand-built single-copy plan between arbitrary configs, with a
+    /// bytes-per-token chosen by the test (so byte splits can be made
+    /// deliberately indivisible).
+    fn copy_plan(
+        from: ParallelConfig,
+        to: ParallelConfig,
+        len: usize,
+        bytes_per_token: u64,
+    ) -> (KvMigrationPlan, KvLeg) {
+        let leg = KvLeg {
+            id: 1,
+            len,
+            blocks: 1,
+            verdict: KvVerdict::Copy { src_rank: 0, dst_rank: 0 },
+        };
+        let plan = KvMigrationPlan {
+            legs: vec![leg],
+            bytes_per_token,
+            from,
+            to,
+        };
+        (plan, leg)
+    }
+
+    #[test]
+    fn fabric_leg_remainder_goes_to_the_last_leg() {
+        // 3 tokens x 7 B/token = 21 bytes over tp=2: 10 + 11, never
+        // 10 + 10 (the old integer split lost the remainder byte).
+        let (plan, leg) = copy_plan(par(1), par(1), 3, 7);
+        let legs = plan.fabric_legs(&leg);
+        assert_eq!(legs.len(), 2);
+        assert_eq!(legs[0].2, 10);
+        assert_eq!(legs[1].2, 11);
+        let total: u64 = legs.iter().map(|l| l.2).sum();
+        assert_eq!(total, plan.copied_bytes());
+    }
+
+    #[test]
+    fn resharding_fan_in_pairs_shards_without_panic() {
+        // tp 4 -> tp 2: one leg per *source* shard, fanned into the
+        // coarser destination pairwise (the old code indexed dst[t] for
+        // t in 0..from.tp and panicked out of bounds here).
+        let from = ParallelConfig::standard(1, 4, vec![0, 1, 2, 3]).unwrap();
+        let to = ParallelConfig::standard(1, 2, vec![10, 11]).unwrap();
+        let (plan, leg) = copy_plan(from, to, 5, 9); // 45 B, indivisible
+        let legs = plan.fabric_legs(&leg);
+        assert_eq!(
+            legs,
+            vec![(0, 10, 11), (1, 10, 11), (2, 11, 11), (3, 11, 12)]
+        );
+        let total: u64 = legs.iter().map(|l| l.2).sum();
+        assert_eq!(total, 45);
+        assert_eq!(total, plan.copied_bytes());
+    }
+
+    #[test]
+    fn resharding_fan_out_pairs_shards_without_mispair() {
+        // tp 2 -> tp 4: one leg per *destination* shard, each sourced
+        // from the coarser shard that owns its slice (the old code
+        // emitted only from.tp legs and mispaired the rest).
+        let from = ParallelConfig::standard(1, 2, vec![0, 1]).unwrap();
+        let to = ParallelConfig::standard(1, 4, vec![4, 5, 6, 7]).unwrap();
+        let (plan, leg) = copy_plan(from, to, 5, 9);
+        let legs = plan.fabric_legs(&leg);
+        assert_eq!(
+            legs,
+            vec![(0, 4, 11), (0, 5, 11), (1, 6, 11), (1, 7, 12)]
+        );
+        let total: u64 = legs.iter().map(|l| l.2).sum();
+        assert_eq!(total, 45);
+    }
+
+    #[test]
+    fn transfers_bytes_sum_matches_copied_bytes_exactly() {
+        // Planner-produced copies (departing rank under DP shrink):
+        // fabric accounting must equal the plan's charged bytes exactly,
+        // not just approximately.
+        let from = par(4);
+        let snap = snapshot(&[1, 2, 3, 4, 6, 7, 11, 15], &from);
+        let (plan, used) =
+            plan_kv_migration(&snap, &par(3), &cost(), u64::MAX);
+        let fabric: u64 = plan.transfers().iter().map(|l| l.2).sum();
+        assert_eq!(fabric, plan.copied_bytes());
+        assert_eq!(fabric, used);
     }
 
     #[test]

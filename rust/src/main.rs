@@ -62,8 +62,9 @@ fn print_usage() {
          exp options (parsed once, shared by every experiment):\n\
          --fast          smaller scenario set / shorter horizons\n\
          --seed N        workload + fault-schedule seed (chaos/fleet/\n\
-         \x20               tier/reconcile); a failing chaos or reconcile\n\
-         \x20               cell prints the seed to replay it\n\
+         \x20               tier/reconcile/disagg); a failing chaos,\n\
+         \x20               reconcile or disagg cell prints the seed to\n\
+         \x20               replay it\n\
          \n\
          serve options:\n\
          --model dsv2lite|qwen30b|dsv3   (default dsv2lite)\n\

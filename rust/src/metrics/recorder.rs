@@ -74,10 +74,19 @@ impl MetricsRecorder {
         }
     }
 
-    /// Record a finished (or dropped) request.
+    /// Record a finished (or dropped) request. A dropped request is
+    /// attributed to its stamped drop time (the engine stamps
+    /// `finished_at` at the drop site); the arrival fallback exists only
+    /// for unstamped records — prefer [`Self::record_dropped`] with the
+    /// actual drop time, since back-dating a drop to its arrival puts it
+    /// in a window that can be arbitrarily earlier under a long queue.
     pub fn record(&mut self, r: &Request) {
         let dropped =
             matches!(r.state, crate::workload::RequestState::Dropped);
+        if dropped {
+            self.record_dropped(r, r.finished_at.unwrap_or(r.arrival));
+            return;
+        }
         self.finished.push(RequestMetrics {
             id: r.id,
             arrival: r.arrival,
@@ -86,6 +95,21 @@ impl MetricsRecorder {
             tpot: r.tpot().unwrap_or(f64::INFINITY),
             tokens: r.generated,
             dropped,
+            tenant: r.tenant,
+        });
+    }
+
+    /// Record a request dropped at `at`: finish-time-windowed stats
+    /// count the drop in the window it actually happened in.
+    pub fn record_dropped(&mut self, r: &Request, at: f64) {
+        self.finished.push(RequestMetrics {
+            id: r.id,
+            arrival: r.arrival,
+            finished: at,
+            ttft: r.ttft().unwrap_or(f64::INFINITY),
+            tpot: r.tpot().unwrap_or(f64::INFINITY),
+            tokens: r.generated,
+            dropped: true,
             tenant: r.tenant,
         });
     }
@@ -268,6 +292,26 @@ mod tests {
         assert_eq!(w.dropped, 1);
         assert!((w.slo_attainment - 1.0 / 3.0).abs() < 1e-9);
         assert!(w.tokens_per_sec > 0.0);
+    }
+
+    #[test]
+    fn windowed_drop_lands_in_its_drop_window() {
+        // A request that queued from t=2 and was shed at t=50 is a drop
+        // of the [40, 60) window — the old `finished = arrival` fallback
+        // misattributed it to [0, 10).
+        let slo = SloConfig::new(1.0, 0.5);
+        let mut rec = MetricsRecorder::new();
+        let queued = Request::new(7, 2.0, 100, 10);
+        rec.record_dropped(&queued, 50.0);
+        assert_eq!(rec.window(0.0, 10.0, &slo).dropped, 0);
+        assert_eq!(rec.window(40.0, 60.0, &slo).dropped, 1);
+        // `record` routes a stamped Dropped request the same way.
+        let mut stamped = Request::new(8, 2.0, 100, 10);
+        stamped.state = RequestState::Dropped;
+        stamped.finished_at = Some(55.0);
+        rec.record(&stamped);
+        assert_eq!(rec.window(0.0, 10.0, &slo).dropped, 0);
+        assert_eq!(rec.window(40.0, 60.0, &slo).dropped, 2);
     }
 
     #[test]

@@ -24,7 +24,7 @@
 //! threads.
 
 use elastic_moe::chaos::{FaultKind, PlanAudit, Trace, TraceEvent};
-use elastic_moe::experiments::{chaos, kvmigrate, reconcile};
+use elastic_moe::experiments::{chaos, disagg, kvmigrate, reconcile};
 use elastic_moe::obs::export::chrome_trace;
 use elastic_moe::obs::spans::{
     CAT_CONCURRENT, CAT_LIFECYCLE, CAT_SWITCHOVER,
@@ -124,6 +124,50 @@ fn reconcile_sweep(seeds: &[u64]) {
     }
 }
 
+/// Run the prefill/decode disaggregation matrix (unified control,
+/// happy-path handoff, severed-leg fault) twice per seed: zero
+/// violations — including exactly-once handoff disposition over the new
+/// legs — a zero-recompute happy path at every seed, and a
+/// bit-identical `state_hash` on the re-run of every cell.
+fn disagg_sweep(seeds: &[u64]) {
+    for &seed in seeds {
+        let a = disagg::conformance(seed).unwrap();
+        let b = disagg::conformance(seed).unwrap();
+        assert!(!a.is_empty(), "disagg matrix must be non-empty");
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                x.violations, 0,
+                "seed {seed}: cell [{}] violated invariants (replay with \
+                 `repro exp disagg --seed {seed}`)",
+                x.cell
+            );
+            assert_eq!(
+                x.completed, x.arrived,
+                "seed {seed}: cell [{}] lost requests",
+                x.cell
+            );
+            if x.cell == "disagg" {
+                assert_eq!(
+                    x.recomputed, 0,
+                    "seed {seed}: happy-path handoff recomputed"
+                );
+                assert_eq!(
+                    x.adopted, x.arrived,
+                    "seed {seed}: not every sequence was adopted"
+                );
+            }
+            assert_eq!(
+                x.state_hash, y.state_hash,
+                "seed {seed}: cell [{}] is nondeterministic — same-seed \
+                 re-run changed the state hash",
+                x.cell
+            );
+            assert_eq!(x, y, "seed {seed}: re-run diverged beyond the hash");
+        }
+    }
+}
+
 #[test]
 fn chaos_conformance_is_deterministic_across_seeds_low() {
     chaos_sweep(&[5, 7, 11, 23]);
@@ -142,6 +186,16 @@ fn reconcile_conformance_is_deterministic_across_seeds_low() {
 #[test]
 fn reconcile_conformance_is_deterministic_across_seeds_high() {
     reconcile_sweep(&[42, 101, 137, 9001]);
+}
+
+#[test]
+fn disagg_conformance_is_deterministic_across_seeds_low() {
+    disagg_sweep(&[5, 7, 11, 23]);
+}
+
+#[test]
+fn disagg_conformance_is_deterministic_across_seeds_high() {
+    disagg_sweep(&[42, 101, 137, 9001]);
 }
 
 #[test]
@@ -189,6 +243,28 @@ fn reconcile_conformance_is_telemetry_neutral_across_seeds() {
                 "seed {seed}: cell [{}] changed its state hash when \
                  telemetry was enabled",
                 x.fault
+            );
+            assert_eq!(x, y, "seed {seed}: telemetry perturbed a cell");
+        }
+    }
+}
+
+/// Telemetry neutrality for the disaggregation matrix: the handoff
+/// counters (`handoffs_planned`, `handoff_bytes`, `handoff_adoptions`,
+/// `handoff_recomputes`) must be pure observers of the pool handoff
+/// path.
+#[test]
+fn disagg_conformance_is_telemetry_neutral_across_seeds() {
+    for seed in [7, 23] {
+        let off = disagg::conformance_with_obs(seed, false).unwrap();
+        let on = disagg::conformance_with_obs(seed, true).unwrap();
+        assert_eq!(off.len(), on.len());
+        for (x, y) in off.iter().zip(&on) {
+            assert_eq!(
+                x.state_hash, y.state_hash,
+                "seed {seed}: cell [{}] changed its state hash when \
+                 telemetry was enabled",
+                x.cell
             );
             assert_eq!(x, y, "seed {seed}: telemetry perturbed a cell");
         }

@@ -807,7 +807,8 @@ fn prop_lru_cache_matches_model_and_pins_protect() {
 fn prop_reconciler_plan_is_idempotent_and_monotone() {
     use elastic_moe::chaos::CONVERGENCE_ROUNDS;
     use elastic_moe::coordinator::{
-        FleetSpec, ReconcileStep, Reconciler, ReplicaLoad, ReplicaSpec,
+        FleetSpec, PoolRole, ReconcileStep, Reconciler, ReplicaLoad,
+        ReplicaSpec,
     };
 
     const NOW: f64 = 100.0;
@@ -828,6 +829,7 @@ fn prop_reconciler_plan_is_idempotent_and_monotone() {
             } else {
                 NOW - 1.0
             },
+            role: PoolRole::Unified,
         }
     }
 
@@ -850,11 +852,17 @@ fn prop_reconciler_plan_is_idempotent_and_monotone() {
                     2 * (1 + rng.below(3) as usize)
                 },
                 parked,
+                role: PoolRole::Unified,
             });
         }
         if rng.bool(0.3) {
             // A brand-new slot the reconciler must boot.
-            slots.push(ReplicaSpec { id: n + 5, devices: 2, parked: false });
+            slots.push(ReplicaSpec {
+                id: n + 5,
+                devices: 2,
+                parked: false,
+                role: PoolRole::Unified,
+            });
         }
         (loads, FleetSpec { replicas: slots, rebalance: None })
     }
@@ -907,6 +915,7 @@ fn prop_reconciler_plan_is_idempotent_and_monotone() {
                             parked: false,
                             imbalance: 1.0,
                             last_heartbeat: NOW,
+                            role: PoolRole::Unified,
                         });
                     }
                 }
@@ -976,5 +985,127 @@ fn prop_reconciler_plan_is_idempotent_and_monotone() {
             residual.is_empty(),
             "not converged within {CONVERGENCE_ROUNDS} rounds: {residual:?}"
         );
+    });
+}
+
+/// For any random `(from.tp, from.dp)` x `(to.tp, to.dp)` pairing, the
+/// KV migration planner's per-leg fabric splits sum *exactly* to the
+/// leg's bytes (the byte-remainder regression), pair a device of the
+/// source rank's TP group with one of the destination rank's group,
+/// disposition every snapshot sequence exactly once, and never charge
+/// more copy bytes than the budget allows.
+#[test]
+fn prop_kv_migration_fabric_legs_conserve_bytes_across_tp() {
+    use elastic_moe::kvmigrate::{
+        home_rank, plan_kv_migration, rank_devices, KvSeq, KvSnapshot,
+        KvVerdict,
+    };
+    check("kv fabric legs", 150, |rng: &mut Rng| {
+        let cost = CostModel::new(dsv2_lite(), Timings::cloudmatrix());
+        let tps = [1usize, 2, 3, 4, 8];
+        let from_tp = tps[rng.below(tps.len() as u64) as usize];
+        let to_tp = tps[rng.below(tps.len() as u64) as usize];
+        let from_dp = 1 + rng.below(3) as usize;
+        let to_dp = 1 + rng.below(3) as usize;
+        let from = ParallelConfig::standard(
+            from_dp,
+            from_tp,
+            (0..from_dp * from_tp).collect(),
+        )
+        .unwrap();
+        // Either a disjoint device pool (every sequence moves) or the
+        // same pool (prefix groups may survive and remap in place).
+        let base = if rng.bool(0.5) { 0 } else { 1000 };
+        let to = ParallelConfig::standard(
+            to_dp,
+            to_tp,
+            (base..base + to_dp * to_tp).collect(),
+        )
+        .unwrap();
+        let block_tokens = 16;
+        let n = 1 + rng.below(12) as usize;
+        let seqs: Vec<KvSeq> = (0..n as u64)
+            .map(|id| {
+                let len = 64 + rng.below(6000) as usize;
+                KvSeq {
+                    id,
+                    len,
+                    blocks: len.div_ceil(block_tokens),
+                    home_rank: home_rank(id, from_dp),
+                }
+            })
+            .collect();
+        let snap = KvSnapshot {
+            block_tokens,
+            seqs: seqs.clone(),
+            from: from.clone(),
+        };
+        // Half the cases get an effectively unlimited budget, half a
+        // tight one that forces recompute verdicts into the mix.
+        let budget = if rng.bool(0.5) {
+            16 << 30
+        } else {
+            rng.below(300) * (1 << 20)
+        };
+        let (plan, used) = plan_kv_migration(&snap, &to, &cost, budget);
+
+        assert_eq!(
+            plan.legs.len(),
+            seqs.len(),
+            "every sequence dispositioned exactly once"
+        );
+        assert!(
+            plan.blocks_conserved(snap.total_blocks()),
+            "block conservation at TP {from_tp}->{to_tp}"
+        );
+        assert!(used <= budget, "budget exceeded: {used} > {budget}");
+        assert_eq!(used, plan.copied_bytes());
+
+        let mut fabric_total = 0u64;
+        for leg in &plan.legs {
+            let splits = plan.fabric_legs(leg);
+            match leg.verdict {
+                KvVerdict::Copy { src_rank, dst_rank } => {
+                    let bytes = leg.len as u64 * plan.bytes_per_token;
+                    let sum: u64 =
+                        splits.iter().map(|&(_, _, b)| b).sum();
+                    assert_eq!(
+                        sum, bytes,
+                        "fabric split lost bytes at TP \
+                         {from_tp}->{to_tp} (len {})",
+                        leg.len
+                    );
+                    let srcs = rank_devices(&plan.from, src_rank);
+                    let dsts = rank_devices(&plan.to, dst_rank);
+                    assert_eq!(
+                        splits.len(),
+                        srcs.len().max(dsts.len()),
+                        "one split per TP shard pair"
+                    );
+                    for &(s, d, b) in &splits {
+                        assert!(
+                            srcs.contains(&s),
+                            "src device {s} outside source rank \
+                             {src_rank} group {srcs:?}"
+                        );
+                        assert!(
+                            dsts.contains(&d),
+                            "dst device {d} outside target rank \
+                             {dst_rank} group {dsts:?}"
+                        );
+                        assert!(b > 0, "zero-byte fabric leg");
+                    }
+                    fabric_total += sum;
+                }
+                _ => assert!(
+                    splits.is_empty(),
+                    "non-copy verdicts have no fabric legs"
+                ),
+            }
+        }
+        let transfer_total: u64 =
+            plan.transfers().iter().map(|t| t.2).sum();
+        assert_eq!(fabric_total, transfer_total);
+        assert_eq!(fabric_total, plan.copied_bytes());
     });
 }
