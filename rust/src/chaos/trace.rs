@@ -182,6 +182,33 @@ pub enum TraceEvent {
         to_replica: usize,
         recompute: bool,
     },
+    /// One autoscaling decision, explained: what the policy kernel
+    /// observed for `pool` at the tick ending at `t`, where its
+    /// hysteresis counters stood after the window was folded in, which
+    /// direction the estimator chose, and the concrete action projected
+    /// from it. `vetoed` marks a fired trigger that no guard-passing
+    /// candidate could absorb (busy/cooling replicas, exhausted pool,
+    /// replica floor) — the decision was refunded and the spec holds.
+    /// `attainment` is the value fed to the estimator (queue-pressure
+    /// clamped; `-1` encodes a no-traffic window whose attainment is
+    /// undefined). Emitted on every policy tick whether or not the
+    /// fleet moves, so the trace carries the full decision ledger.
+    DecisionExplain {
+        t: f64,
+        pool: &'static str,
+        serving: usize,
+        attainment: f64,
+        occupancy: f64,
+        queue: usize,
+        bad_windows: usize,
+        good_windows: usize,
+        cooling: bool,
+        rearmed: bool,
+        reburst: bool,
+        decision: &'static str,
+        action: String,
+        vetoed: bool,
+    },
 }
 
 impl TraceEvent {
@@ -208,7 +235,8 @@ impl TraceEvent {
             | TraceEvent::HeartbeatMissed { t, .. }
             | TraceEvent::ReplicaEvicted { t, .. }
             | TraceEvent::HandoffPlanned { t, .. }
-            | TraceEvent::HandoffDone { t, .. } => *t,
+            | TraceEvent::HandoffDone { t, .. }
+            | TraceEvent::DecisionExplain { t, .. } => *t,
         }
     }
 }
@@ -456,6 +484,38 @@ impl TraceEvent {
                 h.fold_u64(*id);
                 h.fold_usize(*to_replica);
                 h.fold_bool(*recompute);
+            }
+            TraceEvent::DecisionExplain {
+                t,
+                pool,
+                serving,
+                attainment,
+                occupancy,
+                queue,
+                bad_windows,
+                good_windows,
+                cooling,
+                rearmed,
+                reburst,
+                decision,
+                action,
+                vetoed,
+            } => {
+                h.fold_u64(21);
+                h.fold_f64(*t);
+                h.fold_str(pool);
+                h.fold_usize(*serving);
+                h.fold_f64(*attainment);
+                h.fold_f64(*occupancy);
+                h.fold_usize(*queue);
+                h.fold_usize(*bad_windows);
+                h.fold_usize(*good_windows);
+                h.fold_bool(*cooling);
+                h.fold_bool(*rearmed);
+                h.fold_bool(*reburst);
+                h.fold_str(decision);
+                h.fold_str(action);
+                h.fold_bool(*vetoed);
             }
         }
     }
@@ -731,6 +791,38 @@ impl TraceEvent {
                 ("to_replica", Json::num(*to_replica as f64)),
                 ("recompute", Json::Bool(*recompute)),
             ]),
+            TraceEvent::DecisionExplain {
+                t,
+                pool,
+                serving,
+                attainment,
+                occupancy,
+                queue,
+                bad_windows,
+                good_windows,
+                cooling,
+                rearmed,
+                reburst,
+                decision,
+                action,
+                vetoed,
+            } => Json::obj(vec![
+                ("ev", Json::str("decision_explain")),
+                ("t", Json::num(*t)),
+                ("pool", Json::str(*pool)),
+                ("serving", Json::num(*serving as f64)),
+                ("attainment", Json::num(*attainment)),
+                ("occupancy", Json::num(*occupancy)),
+                ("queue", Json::num(*queue as f64)),
+                ("bad_windows", Json::num(*bad_windows as f64)),
+                ("good_windows", Json::num(*good_windows as f64)),
+                ("cooling", Json::Bool(*cooling)),
+                ("rearmed", Json::Bool(*rearmed)),
+                ("reburst", Json::Bool(*reburst)),
+                ("decision", Json::str(*decision)),
+                ("action", Json::str(action.clone())),
+                ("vetoed", Json::Bool(*vetoed)),
+            ]),
         }
     }
 }
@@ -954,6 +1046,22 @@ mod tests {
                 to_replica: 2,
                 recompute: false,
             },
+            TraceEvent::DecisionExplain {
+                t: 7.0,
+                pool: "unified",
+                serving: 2,
+                attainment: 0.75,
+                occupancy: 0.9,
+                queue: 4,
+                bad_windows: 1,
+                good_windows: 0,
+                cooling: false,
+                rearmed: false,
+                reburst: false,
+                decision: "up",
+                action: "grow 4->6".to_string(),
+                vetoed: false,
+            },
         ];
         let mut tr = Trace::new();
         let mut hashes = vec![tr.state_hash()];
@@ -967,6 +1075,6 @@ mod tests {
         let j = tr.to_json().to_string();
         // Round-trips through the parser (structurally valid JSON).
         let parsed = crate::util::json::parse(&j).unwrap();
-        assert_eq!(parsed.get("events").as_arr().unwrap().len(), 21);
+        assert_eq!(parsed.get("events").as_arr().unwrap().len(), 22);
     }
 }

@@ -112,6 +112,26 @@ impl LoadEstimator {
         self.rearmed = None;
     }
 
+    /// Consecutive violating windows accumulated toward `up_patience`.
+    pub fn bad_windows(&self) -> u32 {
+        self.bad_windows
+    }
+
+    /// Consecutive comfortable windows accumulated toward `down_patience`.
+    pub fn good_windows(&self) -> u32 {
+        self.good_windows
+    }
+
+    /// Whether the post-action cooldown is still running at `now`.
+    pub fn is_cooling(&self, now: f64) -> bool {
+        now - self.last_action < self.cooldown
+    }
+
+    /// Direction re-armed by [`Self::refund`], if any.
+    pub fn rearmed(&self) -> Option<ScaleDecision> {
+        self.rearmed
+    }
+
     /// Whether traffic is forecast to return within `ttl` seconds of
     /// `now`: a keep-warm heuristic in the serverless tradition —
     /// recently active workloads are the ones that re-burst, so a

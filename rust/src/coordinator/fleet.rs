@@ -712,6 +712,28 @@ impl FleetSim {
                 replicas.iter().map(|r| r.devices_reserved()).sum();
             let free = limits.pool_devices.saturating_sub(reserved);
             let spec = policy.decide(t_end, attainment, &loads, free);
+            // Fold every explained decision into the trace (and thereby
+            // the state hash). Unconditional — never gated on telemetry —
+            // so the determinism-neutrality contract holds by
+            // construction.
+            for ex in policy.take_explains() {
+                trace.push(TraceEvent::DecisionExplain {
+                    t: ex.t,
+                    pool: ex.pool,
+                    serving: ex.serving,
+                    attainment: ex.attainment,
+                    occupancy: ex.occupancy,
+                    queue: ex.queue,
+                    bad_windows: ex.bad_windows,
+                    good_windows: ex.good_windows,
+                    cooling: ex.cooling,
+                    rearmed: ex.rearmed,
+                    reburst: ex.reburst,
+                    decision: ex.decision,
+                    action: ex.action,
+                    vetoed: ex.vetoed,
+                });
+            }
             shash.fold_usize(spec.replicas.len());
             for s in &spec.replicas {
                 shash.fold_usize(s.id);

@@ -16,8 +16,8 @@ pub mod serving;
 pub use estimator::{LoadEstimator, ScaleDecision};
 pub use fleet::{FleetOutput, FleetSim, Router};
 pub use policy::{
-    FleetAction, FleetLimits, FleetPolicy, FleetSpec, PolicyMode,
-    PoolRole, ReplicaLoad, ReplicaSpec,
+    DecisionExplain, FleetAction, FleetLimits, FleetPolicy, FleetSpec,
+    PolicyMode, PoolRole, ReplicaLoad, ReplicaSpec,
 };
 pub use reconciler::{ReconcileStep, Reconciler};
 pub use reference::{

@@ -138,6 +138,75 @@ pub enum FleetAction {
     Unpark { replica: usize },
 }
 
+impl FleetAction {
+    /// Short stable description for the decision ledger and trace.
+    pub fn describe(&self) -> String {
+        match self {
+            FleetAction::Hold => "hold".to_string(),
+            FleetAction::VerticalUp { replica, to_devices } => {
+                format!("grow r{replica}->{to_devices}dev")
+            }
+            FleetAction::VerticalDown { replica, to_devices } => {
+                format!("shrink r{replica}->{to_devices}dev")
+            }
+            FleetAction::AddReplica => "add-replica".to_string(),
+            FleetAction::DrainReplica { replica } => {
+                format!("drain r{replica}")
+            }
+            FleetAction::Rebalance { replica } => {
+                format!("rebalance r{replica}")
+            }
+            FleetAction::Park { replica } => format!("park r{replica}"),
+            FleetAction::Unpark { replica } => format!("unpark r{replica}"),
+        }
+    }
+}
+
+/// One explained policy decision: everything [`FleetPolicy::decide_action`]
+/// observed and concluded for a single window, in trace-foldable form.
+/// Buffered on the policy and drained by the fleet simulator into the
+/// event trace as [`crate::chaos::trace::TraceEvent::DecisionExplain`]
+/// (state-hash folded, emitted unconditionally so the PR 7
+/// determinism-neutrality contract holds by construction).
+///
+/// `attainment` is the estimator-fed value (after the queue-pressure
+/// clamp), with NaN (no traffic finished this window) encoded as `-1.0`
+/// so the record survives JSON. `vetoed` marks a window where the
+/// hysteresis fired but no action was enactable (candidates busy or
+/// cooling, pool budget exhausted, replica floor) — the estimator was
+/// refunded and will retry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DecisionExplain {
+    pub t: f64,
+    /// Pool the decision was made for ([`PoolRole::label`]).
+    pub pool: &'static str,
+    /// Serving (non-draining, non-parked) replicas observed.
+    pub serving: usize,
+    /// Estimator-fed windowed attainment; `-1.0` encodes NaN.
+    pub attainment: f64,
+    /// Mean batch occupancy across serving replicas.
+    pub occupancy: f64,
+    /// Total queued requests across serving replicas.
+    pub queue: usize,
+    /// Estimator violation streak after this window.
+    pub bad_windows: usize,
+    /// Estimator comfortable streak after this window.
+    pub good_windows: usize,
+    /// The estimator's post-action cooldown was still running.
+    pub cooling: bool,
+    /// A refunded direction was armed to re-fire through the cooldown.
+    pub rearmed: bool,
+    /// The re-burst forecast (park-vs-teardown horizon) was warm.
+    pub reburst: bool,
+    /// Hysteresis verdict: `"up"`, `"down"`, `"hold"`, or `"wake"`
+    /// (scale-from-zero path, no estimator consulted).
+    pub decision: &'static str,
+    /// The concrete action chosen ([`FleetAction::describe`]).
+    pub action: String,
+    /// The verdict fired but nothing was enactable (trigger refunded).
+    pub vetoed: bool,
+}
+
 /// Desired state of one replica slot in a [`FleetSpec`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ReplicaSpec {
@@ -242,6 +311,12 @@ pub struct FleetPolicy {
     pub prefill_estimator: LoadEstimator,
     pub decode_estimator: LoadEstimator,
     last_event: HashMap<usize, f64>,
+    /// One [`DecisionExplain`] per [`Self::decide_action`] call since the
+    /// last [`Self::take_explains`] drain.
+    explains: Vec<DecisionExplain>,
+    /// Pool context the next `decide_action` call explains under (set by
+    /// [`Self::decide_pools`] around each per-pool kernel invocation).
+    explain_pool: PoolRole,
 }
 
 impl FleetPolicy {
@@ -258,7 +333,15 @@ impl FleetPolicy {
             prefill_estimator: LoadEstimator::new(slo),
             decode_estimator: LoadEstimator::new(slo),
             last_event: HashMap::new(),
+            explains: Vec::new(),
+            explain_pool: PoolRole::Unified,
         }
+    }
+
+    /// Drain the decision explanations buffered since the last call (one
+    /// per [`Self::decide_action`] invocation, in decision order).
+    pub fn take_explains(&mut self) -> Vec<DecisionExplain> {
+        std::mem::take(&mut self.explains)
     }
 
     /// Record that `replica` was touched at `now` (starts its cooldown).
@@ -350,7 +433,9 @@ impl FleetPolicy {
                 1.0
             };
             self.swap_pool_estimator(role);
+            self.explain_pool = role;
             let action = self.decide_action(now, att, &pool, free);
+            self.explain_pool = PoolRole::Unified;
             self.swap_pool_estimator(role);
             // Account the action's draw against the shared budget before
             // the next pool decides (freed devices return only after the
@@ -479,21 +564,42 @@ impl FleetPolicy {
             // Scale-from-zero: with every replica parked, queued
             // arrivals are the wake-up signal (there is no attainment to
             // observe — nothing is finishing).
-            if self.park_enabled && free_devices >= self.limits.replica_base
+            let queue: usize = loads.iter().map(|l| l.queue_depth).sum();
+            let mut action = FleetAction::Hold;
+            if self.park_enabled
+                && free_devices >= self.limits.replica_base
+                && queue > 0
             {
-                let queue: usize =
-                    loads.iter().map(|l| l.queue_depth).sum();
-                if queue > 0 {
-                    if let Some(l) = parked
-                        .iter()
-                        .find(|l| self.cooled_down(l.id, now))
-                    {
-                        self.note_event(l.id, now);
-                        return FleetAction::Unpark { replica: l.id };
-                    }
+                if let Some(l) =
+                    parked.iter().find(|l| self.cooled_down(l.id, now))
+                {
+                    self.note_event(l.id, now);
+                    action = FleetAction::Unpark { replica: l.id };
                 }
             }
-            return FleetAction::Hold;
+            self.explains.push(DecisionExplain {
+                t: now,
+                pool: self.explain_pool.label(),
+                serving: 0,
+                attainment: if attainment.is_nan() { -1.0 } else { attainment },
+                occupancy: 0.0,
+                queue,
+                bad_windows: self.estimator.bad_windows() as usize,
+                good_windows: self.estimator.good_windows() as usize,
+                cooling: self.estimator.is_cooling(now),
+                rearmed: self.estimator.rearmed().is_some(),
+                reburst: self
+                    .estimator
+                    .forecasts_reburst(now, self.park_ttl),
+                decision: if action == FleetAction::Hold {
+                    "hold"
+                } else {
+                    "wake"
+                },
+                action: action.describe(),
+                vetoed: false,
+            });
+            return action;
         }
         let occupancy = serving.iter().map(|l| l.occupancy).sum::<f64>()
             / serving.len() as f64;
@@ -503,16 +609,22 @@ impl FleetPolicy {
         } else {
             attainment
         };
+        // Pre-observe estimator state: this is what the verdict was
+        // judged under (observe may consume the counters or the re-arm).
+        let cooling = self.estimator.is_cooling(now);
+        let rearmed = self.estimator.rearmed().is_some();
         let decision =
             self.estimator.observe(now, attainment, occupancy, queue);
-        let action = match decision {
+        let mut action = match decision {
             ScaleDecision::Up => {
                 self.scale_up(now, &serving, &parked, free_devices)
             }
             ScaleDecision::Down => self.scale_down(now, &serving),
             ScaleDecision::Hold => FleetAction::Hold,
         };
-        if action == FleetAction::Hold && decision != ScaleDecision::Hold {
+        let vetoed =
+            action == FleetAction::Hold && decision != ScaleDecision::Hold;
+        if vetoed {
             // The trigger fired but no action was possible (candidates
             // busy/cooling, pool exhausted, floor reached): re-arm the
             // estimator so it retries at the next window instead of
@@ -539,9 +651,29 @@ impl FleetPolicy {
                 });
             if let Some(l) = candidate {
                 self.note_event(l.id, now);
-                return FleetAction::Rebalance { replica: l.id };
+                action = FleetAction::Rebalance { replica: l.id };
             }
         }
+        self.explains.push(DecisionExplain {
+            t: now,
+            pool: self.explain_pool.label(),
+            serving: serving.len(),
+            attainment: if attainment.is_nan() { -1.0 } else { attainment },
+            occupancy,
+            queue,
+            bad_windows: self.estimator.bad_windows() as usize,
+            good_windows: self.estimator.good_windows() as usize,
+            cooling,
+            rearmed,
+            reburst: self.estimator.forecasts_reburst(now, self.park_ttl),
+            decision: match decision {
+                ScaleDecision::Up => "up",
+                ScaleDecision::Down => "down",
+                ScaleDecision::Hold => "hold",
+            },
+            action: action.describe(),
+            vetoed,
+        });
         action
     }
 
@@ -1071,6 +1203,62 @@ mod tests {
         // Same observation as decide_action: VerticalUp on replica 1.
         assert_eq!(spec.slot(1).unwrap().devices, 4);
         assert_eq!(spec.slot(0).unwrap().devices, 2);
+    }
+
+    #[test]
+    fn decisions_are_explained_and_drained() {
+        let mut p = policy(PolicyMode::Hybrid);
+        let loads = [load(0, 2, 1.0, 20)];
+        let a = p.decide_action(5.0, 0.5, &loads, 8);
+        assert!(matches!(a, FleetAction::VerticalUp { .. }));
+        let ex = p.take_explains();
+        assert_eq!(ex.len(), 1);
+        assert_eq!(ex[0].decision, "up");
+        assert_eq!(ex[0].pool, "unified");
+        assert_eq!(ex[0].action, "grow r0->4dev");
+        assert_eq!(ex[0].serving, 1);
+        assert_eq!(ex[0].queue, 20);
+        // queue >= pressure_queue clamps the fed attainment to 0.
+        assert_eq!(ex[0].attainment, 0.0);
+        assert!(!ex[0].vetoed);
+        assert!(p.take_explains().is_empty(), "drain empties the buffer");
+    }
+
+    #[test]
+    fn refused_trigger_is_marked_vetoed() {
+        let mut p = policy(PolicyMode::Hybrid);
+        let mut busy = load(0, 2, 1.0, 20);
+        busy.busy = true;
+        assert_eq!(p.decide_action(5.0, 0.5, &[busy], 6), FleetAction::Hold);
+        let ex = p.take_explains();
+        assert_eq!(ex.len(), 1);
+        assert_eq!(ex[0].decision, "up");
+        assert!(ex[0].vetoed);
+        assert_eq!(ex[0].action, "hold");
+    }
+
+    #[test]
+    fn nan_attainment_is_encoded_for_json() {
+        let mut p = policy(PolicyMode::Hybrid);
+        let loads = [load(0, 2, 0.1, 0)];
+        p.decide_action(5.0, f64::NAN, &loads, 4);
+        let ex = p.take_explains();
+        assert_eq!(ex[0].attainment, -1.0);
+    }
+
+    #[test]
+    fn pool_decisions_carry_the_pool_label() {
+        let mut p = policy(PolicyMode::Hybrid);
+        tune_pool_estimators(&mut p);
+        let loads = [
+            pool_load(0, PoolRole::Prefill, 2, 1.0, 20),
+            pool_load(1, PoolRole::Decode, 2, 0.3, 0),
+        ];
+        p.decide(5.0, 0.5, &loads, 8);
+        let ex = p.take_explains();
+        assert_eq!(ex.len(), 2, "one explain per pool kernel call");
+        assert_eq!(ex[0].pool, "prefill");
+        assert_eq!(ex[1].pool, "decode");
     }
 
     fn tune_pool_estimators(p: &mut FleetPolicy) {

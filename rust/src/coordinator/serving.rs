@@ -765,13 +765,49 @@ impl ServingSim {
                                 )
                             })
                             .unwrap_or((1.0, inbox.len()));
-                        let target = match estimator
-                            .observe(now, att, occ, depth)
-                        {
+                        // Pre-observe estimator state, for the explain
+                        // record (observe may consume either).
+                        let cooling = estimator.is_cooling(now);
+                        let rearmed = estimator.rearmed().is_some();
+                        let decision =
+                            estimator.observe(now, att, occ, depth);
+                        let target = match decision {
                             ScaleDecision::Up => up(&current),
                             ScaleDecision::Down => down(&current),
                             ScaleDecision::Hold => None,
                         };
+                        // Explain the window's verdict in the trace
+                        // (unconditional — never telemetry-gated — so
+                        // state hashes stay obs-neutral). `vetoed`: the
+                        // hysteresis fired but the vertical envelope had
+                        // no step to give.
+                        trace.push(TraceEvent::DecisionExplain {
+                            t: now,
+                            pool: "unified",
+                            serving: 1,
+                            attainment: if att.is_nan() { -1.0 } else { att },
+                            occupancy: occ,
+                            queue: depth,
+                            bad_windows: estimator.bad_windows() as usize,
+                            good_windows: estimator.good_windows()
+                                as usize,
+                            cooling,
+                            rearmed,
+                            reburst: false,
+                            decision: match decision {
+                                ScaleDecision::Up => "up",
+                                ScaleDecision::Down => "down",
+                                ScaleDecision::Hold => "hold",
+                            },
+                            action: match &target {
+                                Some(t) => {
+                                    format!("scale->{}dev", t.n_devices())
+                                }
+                                None => "hold".to_string(),
+                            },
+                            vetoed: decision != ScaleDecision::Hold
+                                && target.is_none(),
+                        });
                         if let Some(target) = target {
                             // The live block tables become the ownership
                             // snapshot the KV-migration planner works on.

@@ -105,6 +105,15 @@ impl Dir {
             Dir::Hold => FROM_N,
         }
     }
+
+    /// ASCII cell-name fragment for report filenames and headings.
+    fn slug(self) -> &'static str {
+        match self {
+            Dir::Up => "up",
+            Dir::Down => "down",
+            Dir::Hold => "hold",
+        }
+    }
 }
 
 /// Map a fault name to the concrete fault for this direction and seed.
@@ -172,7 +181,60 @@ fn run_cell_obs(
     seed: u64,
     obs: bool,
 ) -> Result<CellResult> {
-    let slo = SloConfig::new(8.0, 1.5);
+    let (out, arrived) = run_cell_raw(method, dir, fault_name, seed, obs)?;
+    let slo = report_slo();
+    let violations = check_all(&out.trace);
+    let ev = out.scaling_events.first();
+    let w = out.recorder.window(0.0, out.end_time + 1.0, &slo);
+    Ok(CellResult {
+        method,
+        dir,
+        fault: fault_name,
+        arrived,
+        completed: out.recorder.count(),
+        aborted: ev.map(|e| e.aborted.is_some()).unwrap_or(false),
+        rolled_back: ev
+            .and_then(|e| e.aborted.as_ref())
+            .map(|a| a.rolled_back)
+            .unwrap_or(false),
+        fault_fired: out
+            .trace
+            .count(|e| matches!(e, TraceEvent::FaultFired { .. }))
+            > 0,
+        violations,
+        end_time: out.end_time,
+        attainment: w.slo_attainment,
+        scale_latency: ev.map(|e| e.metrics.scale_latency).unwrap_or(0.0),
+        handoff: out.handoff,
+        devices_final: out
+            .device_timeline
+            .last()
+            .map(|&(_, d)| d)
+            .unwrap_or(0),
+        state_hash: out.state_hash,
+        telemetry: out.telemetry,
+    })
+}
+
+/// The SLO every chaos cell is judged against (shared with
+/// [`crate::report`], which re-derives attainment timelines from the
+/// raw recorder).
+pub fn report_slo() -> SloConfig {
+    SloConfig::new(8.0, 1.5)
+}
+
+/// Run one cell and hand back the complete [`SimOutput`] — trace,
+/// recorder, telemetry — instead of the summarized [`CellResult`].
+/// `repro report` consumes this to price scaling events and render the
+/// attainment timeline.
+fn run_cell_raw(
+    method: &'static str,
+    dir: Dir,
+    fault_name: &'static str,
+    seed: u64,
+    obs: bool,
+) -> Result<(crate::coordinator::SimOutput, usize)> {
+    let slo = report_slo();
     let mut sim = ServingSim::new(cost(), slo);
     sim.obs = obs;
     let fault = fault_kind(fault_name, dir, seed);
@@ -224,38 +286,35 @@ fn run_cell_obs(
         trigger,
         HORIZON,
     )?;
+    Ok((out, arrived))
+}
 
-    let violations = check_all(&out.trace);
-    let ev = out.scaling_events.first();
-    let w = out.recorder.window(0.0, out.end_time + 1.0, &slo);
-    Ok(CellResult {
-        method,
-        dir,
-        fault: fault_name,
-        arrived,
-        completed: out.recorder.count(),
-        aborted: ev.map(|e| e.aborted.is_some()).unwrap_or(false),
-        rolled_back: ev
-            .and_then(|e| e.aborted.as_ref())
-            .map(|a| a.rolled_back)
-            .unwrap_or(false),
-        fault_fired: out
-            .trace
-            .count(|e| matches!(e, TraceEvent::FaultFired { .. }))
-            > 0,
-        violations,
-        end_time: out.end_time,
-        attainment: w.slo_attainment,
-        scale_latency: ev.map(|e| e.metrics.scale_latency).unwrap_or(0.0),
-        handoff: out.handoff,
-        devices_final: out
-            .device_timeline
-            .last()
-            .map(|&(_, d)| d)
-            .unwrap_or(0),
-        state_hash: out.state_hash,
-        telemetry: out.telemetry,
-    })
+/// One fully-instrumented chaos cell for `repro report`: the complete
+/// run output (trace, recorder, device timeline, telemetry spans) plus
+/// the invariant verdict. Telemetry is always on — the report's
+/// concurrent-vs-switchover split reads the span timeline.
+pub struct ReportCell {
+    /// `method/direction/fault`, e.g. `elastic/up/p2p-link`.
+    pub name: String,
+    pub arrived: usize,
+    pub out: crate::coordinator::SimOutput,
+    pub violations: Vec<Violation>,
+}
+
+/// Run the chaos matrix with full instrumentation for `repro report`.
+pub fn report_cells(seed: u64, fast: bool) -> Result<Vec<ReportCell>> {
+    let mut cells = Vec::new();
+    for (method, dir, fault) in matrix(fast) {
+        let (out, arrived) = run_cell_raw(method, dir, fault, seed, true)?;
+        let violations = check_all(&out.trace);
+        cells.push(ReportCell {
+            name: format!("{method}/{}/{fault}", dir.slug()),
+            arrived,
+            out,
+            violations,
+        });
+    }
+    Ok(cells)
 }
 
 /// One cell of [`conformance`]: the fields the determinism sweep

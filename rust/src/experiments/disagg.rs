@@ -213,6 +213,72 @@ fn run_cell_obs(
     fast: bool,
     obs: bool,
 ) -> Result<CellResult> {
+    let (out, arrived) = run_cell_raw(cell, seed, fast, obs)?;
+    let violations = check_all(&out.trace);
+    Ok(CellResult {
+        cell,
+        arrived,
+        completed: out.recorder.count(),
+        ttft_p99: out.recorder.ttft_percentile_by_arrival(
+            0.0,
+            f64::INFINITY,
+            99.0,
+        ),
+        device_seconds: out.device_seconds(),
+        handoffs: count(&out, |e| {
+            matches!(e, TraceEvent::HandoffPlanned { .. })
+        }),
+        adopted: out.pool_handoff.copied,
+        recomputed: out.pool_handoff.recomputed,
+        recompute_tokens: out.pool_handoff.recompute_tokens,
+        fault_fired: count(&out, |e| {
+            matches!(e, TraceEvent::FaultFired { .. })
+        }) > 0,
+        violations,
+        state_hash: out.state_hash,
+        telemetry: out.telemetry,
+    })
+}
+
+/// The SLO every disagg cell is judged against (shared with
+/// [`crate::report`]).
+pub fn report_slo() -> SloConfig {
+    SloConfig::scale_up_demo()
+}
+
+/// One fully-instrumented disagg cell for `repro report`: the complete
+/// [`FleetOutput`] plus the invariant verdict.
+pub struct ReportCell {
+    pub name: String,
+    pub arrived: usize,
+    pub out: FleetOutput,
+    pub violations: Vec<Violation>,
+}
+
+/// Run the pool matrix with full instrumentation for `repro report`.
+pub fn report_cells(seed: u64, fast: bool) -> Result<Vec<ReportCell>> {
+    let mut cells = Vec::new();
+    for cell in matrix() {
+        let (out, arrived) = run_cell_raw(cell, seed, fast, true)?;
+        let violations = check_all(&out.trace);
+        cells.push(ReportCell {
+            name: cell.to_string(),
+            arrived,
+            out,
+            violations,
+        });
+    }
+    Ok(cells)
+}
+
+/// Run one cell and hand back the complete [`FleetOutput`] instead of
+/// the summarized [`CellResult`].
+fn run_cell_raw(
+    cell: &'static str,
+    seed: u64,
+    fast: bool,
+    obs: bool,
+) -> Result<(FleetOutput, usize)> {
     let mut sim = FleetSim::new(
         CostModel::new(dsv2_lite(), Timings::cloudmatrix()),
         SloConfig::scale_up_demo(),
@@ -238,31 +304,7 @@ fn run_cell_obs(
         arrivals,
         horizon(fast),
     )?;
-
-    let violations = check_all(&out.trace);
-    Ok(CellResult {
-        cell,
-        arrived,
-        completed: out.recorder.count(),
-        ttft_p99: out.recorder.ttft_percentile_by_arrival(
-            0.0,
-            f64::INFINITY,
-            99.0,
-        ),
-        device_seconds: out.device_seconds(),
-        handoffs: count(&out, |e| {
-            matches!(e, TraceEvent::HandoffPlanned { .. })
-        }),
-        adopted: out.pool_handoff.copied,
-        recomputed: out.pool_handoff.recomputed,
-        recompute_tokens: out.pool_handoff.recompute_tokens,
-        fault_fired: count(&out, |e| {
-            matches!(e, TraceEvent::FaultFired { .. })
-        }) > 0,
-        violations,
-        state_hash: out.state_hash,
-        telemetry: out.telemetry,
-    })
+    Ok((out, arrived))
 }
 
 /// One cell of [`conformance`]: the fields the determinism sweep

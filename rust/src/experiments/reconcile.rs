@@ -238,6 +238,59 @@ fn run_cell_obs(
     })
 }
 
+/// The decision-ledger leg for `repro report`: the duplicate-command
+/// cell run with full instrumentation. This cell is the one place in
+/// the repo where the estimator, the reconciler guards and the fault
+/// injector all fire on one trace — its [`FleetOutput`] carries
+/// `DecisionExplain` records from every policy tick *and* checked
+/// no-op `ReconcileStep { applied: false }` marks (guaranteed `>= 1`
+/// by the reconcile experiment's own acceptance), so the rendered
+/// ledger always shows at least one guard-vetoed entry.
+pub fn ledger_run(
+    seed: u64,
+    fast: bool,
+) -> Result<(FleetOutput, Vec<Violation>)> {
+    ledger_run_obs(seed, fast, true)
+}
+
+/// [`ledger_run`] with the telemetry registry switchable — the
+/// determinism suite runs it both ways to pin that `DecisionExplain`
+/// emission is unconditional and the `state_hash` telemetry-neutral.
+pub fn ledger_run_obs(
+    seed: u64,
+    fast: bool,
+    obs: bool,
+) -> Result<(FleetOutput, Vec<Violation>)> {
+    let mut sim = FleetSim::new(
+        CostModel::new(dsv2_lite(), Timings::cloudmatrix()),
+        SloConfig::scale_up_demo(),
+        Router::JoinShortestQueue,
+    );
+    sim.obs = obs;
+    let inj = Rc::new(RefCell::new(FaultInjector::new(fault_plan(
+        "duplicate-command",
+        seed,
+    ))));
+    sim.injector = Some(inj);
+    let mut policy = policy();
+    let arrivals = workload(seed, fast);
+    let out = sim.run(
+        &mut policy,
+        &mut elastic_factory(),
+        2,
+        arrivals,
+        horizon(fast),
+    )?;
+    let violations = check_all(&out.trace);
+    Ok((out, violations))
+}
+
+/// The SLO the ledger leg is judged against (shared with
+/// [`crate::report`]).
+pub fn report_slo() -> SloConfig {
+    SloConfig::scale_up_demo()
+}
+
 /// One cell of [`conformance`]: the fields the determinism sweep
 /// (`rust/tests/determinism.rs`) compares across seeds and re-runs.
 #[derive(Debug, Clone, PartialEq, Eq)]

@@ -49,6 +49,9 @@
 //!   subsystem: metric catalog, scaling-event span taxonomy, Chrome
 //!   trace / Prometheus exporters, and the determinism-neutrality
 //!   contract (`--trace-out` / `--metrics-out`).
+//! - `docs/architecture/11-reporting.md` — SLO attainment accounting
+//!   ([`obs::attain`]), the scaling-decision ledger, and the
+//!   `repro report` postmortem generator ([`report`]).
 //! - `README.md` — quickstart, experiment and bench commands, and the
 //!   repro matrix mapping `repro exp` ids to paper artifacts.
 
@@ -64,6 +67,7 @@ pub mod kvmigrate;
 pub mod metrics;
 pub mod obs;
 pub mod placement;
+pub mod report;
 pub mod runtime;
 pub mod scaling;
 pub mod sim;

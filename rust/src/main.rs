@@ -9,7 +9,15 @@
 //!   (steady-state tok/s, TTFT p99, scale-up latency per method, event
 //!   core vs windowed reference); `--json` writes `BENCH_serve.json` and
 //!   `BENCH_hotpath.json` for CI to archive.
+//! - `report <id>` — run an experiment fully instrumented and render
+//!   the byte-deterministic postmortem markdown (attainment timelines,
+//!   scaling-event cost split, decision ledger, replay bundles); or
+//!   `report ingest --trace F` to render from exported artifacts
+//!   (`docs/architecture/11-reporting.md`).
 //! - `info` — models, artifact manifest, cluster defaults.
+//!
+//! Unknown `--options` are rejected with the accepted set — a typo'd
+//! `--sede 7` silently running the default seed would poison replays.
 
 use anyhow::{bail, Context, Result};
 
@@ -31,7 +39,8 @@ fn main() {
         Some("exp") => cmd_exp(&args),
         Some("serve") => cmd_serve(&args),
         Some("bench") => cmd_bench(&args),
-        Some("info") => cmd_info(),
+        Some("report") => cmd_report(&args),
+        Some("info") => cmd_info(&args),
         _ => {
             print_usage();
             Ok(())
@@ -57,7 +66,17 @@ fn print_usage() {
          \x20                                  reference); --json writes\n\
          \x20                                  BENCH_serve.json and\n\
          \x20                                  BENCH_hotpath.json\n\
+         repro report <id> [options]        postmortem markdown for an\n\
+         \x20                                  instrumented run: attainment\n\
+         \x20                                  timelines + burn rate, scaling\n\
+         \x20                                  cost split, decision ledger,\n\
+         \x20                                  replay bundles (ids: chaos,\n\
+         \x20                                  disagg, reconcile)\n\
+         repro report ingest --trace F      same, from exported artifacts\n\
          repro info                         model and artifact inventory\n\
+         \n\
+         Unknown --options are errors; each subcommand prints its\n\
+         accepted set.\n\
          \n\
          exp options (parsed once, shared by every experiment):\n\
          --fast          smaller scenario set / shorter horizons\n\
@@ -65,6 +84,11 @@ fn print_usage() {
          \x20               tier/reconcile/disagg); a failing chaos,\n\
          \x20               reconcile or disagg cell prints the seed to\n\
          \x20               replay it\n\
+         --trace-out F   write a Chrome trace-event JSON of the first\n\
+         \x20               simulated run (experiments that run a serving\n\
+         \x20               simulator; others ignore it)\n\
+         --metrics-out F write Prometheus-style text exposition of the\n\
+         \x20               first simulated run\n\
          \n\
          serve options:\n\
          --model dsv2lite|qwen30b|dsv3   (default dsv2lite)\n\
@@ -79,11 +103,50 @@ fn print_usage() {
          --fast          short 30s run (CI smoke preset)\n\
          --trace-out F   write a Chrome trace-event JSON of the run\n\
          \x20               (load in Perfetto / chrome://tracing)\n\
-         --metrics-out F write Prometheus-style text exposition"
+         --metrics-out F write Prometheus-style text exposition\n\
+         \n\
+         report options:\n\
+         --fast          run the experiment's fast matrix\n\
+         --seed N        run seed (default 23, the canonical one)\n\
+         --out F         write the markdown to F instead of stdout\n\
+         --trace F       (ingest) a --trace-out artifact or raw trace JSON\n\
+         --metrics F     (ingest) a --metrics-out Prometheus exposition"
     );
 }
 
+/// Reject option/flag names the subcommand does not accept.
+fn reject_unknown(args: &Args, cmd: &str, accepted: &[&str]) -> Result<()> {
+    let bad = args.unexpected(accepted);
+    if bad.is_empty() {
+        return Ok(());
+    }
+    let list = |names: &[String]| {
+        names
+            .iter()
+            .map(|n| format!("--{n}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
+    let accepted: Vec<String> =
+        accepted.iter().map(|a| a.to_string()).collect();
+    bail!(
+        "unknown option{} for `repro {cmd}`: {}; accepted: {}",
+        if bad.len() == 1 { "" } else { "s" },
+        list(&bad),
+        if accepted.is_empty() {
+            "(none)".to_string()
+        } else {
+            list(&accepted)
+        }
+    )
+}
+
 fn cmd_exp(args: &Args) -> Result<()> {
+    reject_unknown(
+        args,
+        "exp",
+        &["fast", "seed", "trace-out", "metrics-out"],
+    )?;
     let id = args
         .positional
         .get(1)
@@ -120,6 +183,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
     use elastic_moe::experiments::common::{make_method, par, par_on};
     use elastic_moe::scaling::ScalingMethod as _;
 
+    reject_unknown(args, "bench", &["json", "fast"])?;
     let fast = args.flag("fast");
     let m = model::dsv2_lite();
     let slo = SloConfig::strict();
@@ -234,6 +298,24 @@ fn cmd_bench(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    reject_unknown(
+        args,
+        "serve",
+        &[
+            "model",
+            "method",
+            "devices",
+            "cluster",
+            "rps",
+            "duration",
+            "seed",
+            "scale-at",
+            "autoscale",
+            "fast",
+            "trace-out",
+            "metrics-out",
+        ],
+    )?;
     let model_name = args.get_or("model", "dsv2lite");
     let m = model::by_name(model_name)
         .with_context(|| format!("unknown model '{model_name}'"))?;
@@ -343,7 +425,63 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_info() -> Result<()> {
+/// `repro report <id> [--fast] [--seed N] [--out F]`, or
+/// `repro report ingest --trace F [--metrics F] [--out F]`: render the
+/// postmortem markdown (see `docs/architecture/11-reporting.md`). The
+/// output is byte-deterministic for a given seed — two runs diff clean.
+fn cmd_report(args: &Args) -> Result<()> {
+    reject_unknown(
+        args,
+        "report",
+        &["fast", "seed", "out", "trace", "metrics"],
+    )?;
+    let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    let text = if id == "ingest" {
+        let trace_path = args.get("trace").ok_or_else(|| {
+            anyhow::anyhow!(
+                "`repro report ingest` needs --trace <file> (a \
+                 --trace-out artifact or a raw trace JSON)"
+            )
+        })?;
+        let trace_text = std::fs::read_to_string(trace_path)
+            .with_context(|| format!("reading {trace_path}"))?;
+        let metrics_text = match args.get("metrics") {
+            Some(p) => Some(
+                std::fs::read_to_string(p)
+                    .with_context(|| format!("reading {p}"))?,
+            ),
+            None => None,
+        };
+        let input = elastic_moe::report::ingest(
+            trace_path,
+            &trace_text,
+            metrics_text.as_deref(),
+        )?;
+        elastic_moe::report::render(&input)
+    } else if id.is_empty() {
+        bail!(
+            "usage: repro report <chaos|disagg|reconcile> [--fast] \
+             [--seed N] [--out FILE]  |  repro report ingest --trace \
+             FILE [--metrics FILE] [--out FILE]"
+        );
+    } else {
+        let fast = args.flag("fast");
+        let seed = args.get_u64("seed", 23);
+        elastic_moe::report::generate(id, seed, fast)?
+    };
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text)
+                .with_context(|| format!("writing {path}"))?;
+            println!("wrote {path}");
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    reject_unknown(args, "info", &[])?;
     println!("== models ==");
     for name in model::MODELS {
         if let Some(m) = model::by_name(name) {

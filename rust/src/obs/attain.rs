@@ -1,0 +1,406 @@
+//! SLO attainment accounting: windowed attainment time series, burn
+//! rate over a rolling horizon, and device-second cost attribution per
+//! scaling event.
+//!
+//! This is the interpretation layer over [`crate::metrics::recorder`]:
+//! the recorder stores raw per-request facts; this module buckets them
+//! into conservation-checked windows (attained + violated + in-flight
+//! == arrived, per window, per tenant, per pool) and prices scaling
+//! decisions in device-seconds so the attainment-vs-cost tradeoff the
+//! paper optimizes becomes a first-class, reportable quantity.
+//!
+//! Everything here is a pure function of already-recorded data — no
+//! simulator state is read or written, so the PR 7 determinism-
+//! neutrality contract is untouched by construction.
+
+use std::collections::BTreeMap;
+
+use crate::config::SloConfig;
+use crate::metrics::recorder::RequestMetrics;
+
+/// One attainment window `[t0, t1)`, bucketed by *arrival* (the paper's
+/// timeline plots bucket by arrival). A request counts as *resolved* in
+/// this window once its finish (or drop) time is `<= t1`; unresolved
+/// arrivals are *in-flight*. The three buckets partition the arrivals,
+/// so `attained + violated + in_flight == arrived` holds by
+/// construction — [`WindowAttainment::conserves`] re-checks it as the
+/// property-test surface.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowAttainment {
+    pub t0: f64,
+    pub t1: f64,
+    /// Requests that arrived in `[t0, t1)`.
+    pub arrived: usize,
+    /// Resolved within the window horizon and met their SLO.
+    pub attained: usize,
+    /// Resolved but dropped or SLO-missed.
+    pub violated: usize,
+    /// Arrived in the window but still running at `t1`.
+    pub in_flight: usize,
+}
+
+impl WindowAttainment {
+    /// Attainment over *resolved* requests (NaN when none resolved yet
+    /// — an all-in-flight window has no verdict, matching the
+    /// estimator's NaN-means-no-traffic convention).
+    pub fn attainment(&self) -> f64 {
+        let resolved = self.attained + self.violated;
+        if resolved == 0 {
+            return f64::NAN;
+        }
+        self.attained as f64 / resolved as f64
+    }
+
+    /// The conservation law: every arrival is in exactly one bucket.
+    pub fn conserves(&self) -> bool {
+        self.attained + self.violated + self.in_flight == self.arrived
+    }
+}
+
+/// Bucket `reqs` into consecutive `width`-second windows covering
+/// `[0, end)` (the last window is clipped to `end`). Windows with no
+/// arrivals still appear — a flat timeline renders gaps honestly.
+pub fn windows(
+    reqs: &[RequestMetrics],
+    slo: &SloConfig,
+    width: f64,
+    end: f64,
+) -> Vec<WindowAttainment> {
+    assert!(width > 0.0, "window width must be positive");
+    let mut out = Vec::new();
+    let mut t0 = 0.0;
+    while t0 < end {
+        let t1 = (t0 + width).min(end);
+        let mut w = WindowAttainment {
+            t0,
+            t1,
+            arrived: 0,
+            attained: 0,
+            violated: 0,
+            in_flight: 0,
+        };
+        for m in reqs.iter().filter(|m| m.arrival >= t0 && m.arrival < t1)
+        {
+            w.arrived += 1;
+            if m.finished <= t1 {
+                if !m.dropped && slo.met(m.ttft, m.tpot) {
+                    w.attained += 1;
+                } else {
+                    w.violated += 1;
+                }
+            } else {
+                w.in_flight += 1;
+            }
+        }
+        out.push(w);
+        t0 = t1;
+    }
+    out
+}
+
+/// Windowed series per group, keyed by an arbitrary partition of the
+/// requests (`None` keys are skipped). Per-tenant and per-pool series
+/// are both instances: [`per_tenant`] keys by the tenant tag; a
+/// disaggregated report keys by handoff membership.
+pub fn windows_by(
+    reqs: &[RequestMetrics],
+    slo: &SloConfig,
+    width: f64,
+    end: f64,
+    key: impl Fn(&RequestMetrics) -> Option<String>,
+) -> BTreeMap<String, Vec<WindowAttainment>> {
+    let mut groups: BTreeMap<String, Vec<RequestMetrics>> = BTreeMap::new();
+    for m in reqs {
+        if let Some(k) = key(m) {
+            groups.entry(k).or_default().push(*m);
+        }
+    }
+    groups
+        .into_iter()
+        .map(|(k, g)| (k, windows(&g, slo, width, end)))
+        .collect()
+}
+
+/// Per-tenant attainment series (keys `"tenant:<id>"`, sorted).
+pub fn per_tenant(
+    reqs: &[RequestMetrics],
+    slo: &SloConfig,
+    width: f64,
+    end: f64,
+) -> BTreeMap<String, Vec<WindowAttainment>> {
+    windows_by(reqs, slo, width, end, |m| {
+        Some(format!("tenant:{}", m.tenant))
+    })
+}
+
+/// Error-budget burn rate at time `t` over the trailing `horizon`
+/// seconds: the violation rate among resolved requests in windows
+/// ending in `(t - horizon, t]`, divided by the SLO's error budget
+/// `1 - target_attainment`. Burn 1.0 = consuming budget exactly as
+/// provisioned; > 1.0 = on track to exhaust it (page someone); 0.0 when
+/// nothing resolved in the horizon.
+pub fn burn_rate(
+    windows: &[WindowAttainment],
+    target_attainment: f64,
+    horizon: f64,
+    t: f64,
+) -> f64 {
+    let (mut violated, mut resolved) = (0usize, 0usize);
+    for w in windows {
+        if w.t1 <= t && w.t1 > t - horizon {
+            violated += w.violated;
+            resolved += w.attained + w.violated;
+        }
+    }
+    if resolved == 0 {
+        return 0.0;
+    }
+    let budget = (1.0 - target_attainment).max(1e-9);
+    (violated as f64 / resolved as f64) / budget
+}
+
+/// Integral of a device-count step timeline over `[a, b]`. `timeline`
+/// is `(t, devices)` change points (each value holds until the next
+/// entry); `run_end` clips the final segment.
+pub fn device_seconds_between(
+    timeline: &[(f64, usize)],
+    a: f64,
+    b: f64,
+    run_end: f64,
+) -> f64 {
+    let b = b.min(run_end);
+    if b <= a || timeline.is_empty() {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    for (i, &(t0, d)) in timeline.iter().enumerate() {
+        let t1 = timeline.get(i + 1).map(|&(t, _)| t).unwrap_or(run_end);
+        let lo = t0.max(a);
+        let hi = t1.min(b);
+        if hi > lo {
+            total += (hi - lo) * d as f64;
+        }
+    }
+    total
+}
+
+/// One scaling event priced in device-seconds and bracketed by the
+/// attainment it interrupted: `attainment_before` is the window ending
+/// at the command, `attainment_after` the window starting at readiness
+/// (NaN when no traffic resolved in the bracket). `device_seconds` is
+/// the capacity held *during* the transition — what the scaling
+/// decision cost while it was in flight.
+#[derive(Debug, Clone, Copy)]
+pub struct EventCost {
+    pub event: usize,
+    /// Scale-command time.
+    pub start: f64,
+    /// Readiness (new instance serving / rollback complete).
+    pub done: f64,
+    /// Device-seconds held over `[start, done]`.
+    pub device_seconds: f64,
+    pub attainment_before: f64,
+    pub attainment_after: f64,
+}
+
+/// Price each scaling event (`(event_id, start, done)`) against the
+/// device timeline and bracket it with `width`-second attainment
+/// windows on both sides.
+pub fn event_costs(
+    reqs: &[RequestMetrics],
+    slo: &SloConfig,
+    timeline: &[(f64, usize)],
+    events: &[(usize, f64, f64)],
+    width: f64,
+    run_end: f64,
+) -> Vec<EventCost> {
+    events
+        .iter()
+        .map(|&(event, start, done)| {
+            let before =
+                one_window(reqs, slo, (start - width).max(0.0), start);
+            let after =
+                one_window(reqs, slo, done, (done + width).min(run_end));
+            EventCost {
+                event,
+                start,
+                done,
+                device_seconds: device_seconds_between(
+                    timeline, start, done, run_end,
+                ),
+                attainment_before: before.attainment(),
+                attainment_after: after.attainment(),
+            }
+        })
+        .collect()
+}
+
+/// A single ad-hoc window `[t0, t1)` (no grid alignment).
+pub fn one_window(
+    reqs: &[RequestMetrics],
+    slo: &SloConfig,
+    t0: f64,
+    t1: f64,
+) -> WindowAttainment {
+    let mut w = WindowAttainment {
+        t0,
+        t1,
+        arrived: 0,
+        attained: 0,
+        violated: 0,
+        in_flight: 0,
+    };
+    for m in reqs.iter().filter(|m| m.arrival >= t0 && m.arrival < t1) {
+        w.arrived += 1;
+        if m.finished <= t1 {
+            if !m.dropped && slo.met(m.ttft, m.tpot) {
+                w.attained += 1;
+            } else {
+                w.violated += 1;
+            }
+        } else {
+            w.in_flight += 1;
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(
+        id: u64,
+        arrival: f64,
+        finished: f64,
+        ttft: f64,
+        dropped: bool,
+        tenant: u32,
+    ) -> RequestMetrics {
+        RequestMetrics {
+            id,
+            arrival,
+            finished,
+            ttft,
+            tpot: 0.1,
+            tokens: 8,
+            dropped,
+            tenant,
+        }
+    }
+
+    fn slo() -> SloConfig {
+        SloConfig::new(1.0, 0.5)
+    }
+
+    #[test]
+    fn windows_bucket_and_conserve() {
+        let reqs = [
+            req(1, 0.5, 2.0, 0.2, false, 0),  // attained in [0,10)
+            req(2, 1.0, 3.0, 5.0, false, 0),  // ttft violation
+            req(3, 2.0, 50.0, 0.2, false, 0), // in-flight at t=10
+            req(4, 12.0, 13.0, 0.2, true, 1), // dropped -> violated
+        ];
+        let ws = windows(&reqs, &slo(), 10.0, 20.0);
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0].arrived, 3);
+        assert_eq!(ws[0].attained, 1);
+        assert_eq!(ws[0].violated, 1);
+        assert_eq!(ws[0].in_flight, 1);
+        assert!(ws[0].conserves());
+        assert_eq!(ws[1].arrived, 1);
+        assert_eq!(ws[1].violated, 1);
+        assert!(ws[1].conserves());
+        assert!((ws[0].attainment() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_window_has_nan_attainment() {
+        let ws = windows(&[], &slo(), 5.0, 10.0);
+        assert_eq!(ws.len(), 2);
+        assert_eq!(ws[0].arrived, 0);
+        assert!(ws[0].attainment().is_nan());
+        assert!(ws[0].conserves());
+    }
+
+    #[test]
+    fn per_tenant_partitions() {
+        let reqs = [
+            req(1, 0.5, 1.0, 0.2, false, 0),
+            req(2, 0.6, 1.0, 0.2, false, 1),
+            req(3, 0.7, 1.0, 9.0, false, 1),
+        ];
+        let by = per_tenant(&reqs, &slo(), 10.0, 10.0);
+        assert_eq!(by.len(), 2);
+        assert_eq!(by["tenant:0"][0].arrived, 1);
+        assert_eq!(by["tenant:1"][0].arrived, 2);
+        assert_eq!(by["tenant:1"][0].violated, 1);
+        let total: usize =
+            by.values().map(|ws| ws[0].arrived).sum();
+        assert_eq!(total, reqs.len(), "partition covers every request");
+    }
+
+    #[test]
+    fn burn_rate_scales_with_the_error_budget() {
+        // 10% violations against a 90% target = burning the budget at
+        // exactly the provisioned rate.
+        let reqs: Vec<RequestMetrics> = (0..10)
+            .map(|i| {
+                req(i, 1.0, 2.0, if i == 0 { 9.0 } else { 0.2 }, false, 0)
+            })
+            .collect();
+        let ws = windows(&reqs, &SloConfig::new(1.0, 0.5), 10.0, 10.0);
+        let b = burn_rate(&ws, 0.9, 100.0, 10.0);
+        assert!((b - 1.0).abs() < 1e-9, "{b}");
+        // A stricter 99% target makes the same violations burn 10x.
+        let b99 = burn_rate(&ws, 0.99, 100.0, 10.0);
+        assert!((b99 - 10.0).abs() < 1e-6, "{b99}");
+        // Outside the horizon: nothing resolved, zero burn.
+        assert_eq!(burn_rate(&ws, 0.9, 5.0, 100.0), 0.0);
+    }
+
+    #[test]
+    fn device_seconds_integrates_the_step_timeline() {
+        let tl = [(0.0, 4), (10.0, 6), (20.0, 2)];
+        // [5, 15]: 5s @ 4 + 5s @ 6 = 50.
+        let ds = device_seconds_between(&tl, 5.0, 15.0, 30.0);
+        assert!((ds - 50.0).abs() < 1e-9, "{ds}");
+        // Clipped by run end.
+        let tail = device_seconds_between(&tl, 25.0, 99.0, 30.0);
+        assert!((tail - 10.0).abs() < 1e-9, "{tail}");
+        assert_eq!(device_seconds_between(&tl, 5.0, 5.0, 30.0), 0.0);
+        assert_eq!(device_seconds_between(&[], 0.0, 10.0, 30.0), 0.0);
+    }
+
+    #[test]
+    fn event_costs_bracket_attainment() {
+        let reqs = [
+            req(1, 8.0, 9.0, 0.2, false, 0),   // before: attained
+            req(2, 9.0, 9.5, 9.0, false, 0),   // before: violated
+            req(3, 21.0, 22.0, 0.2, false, 0), // after: attained
+        ];
+        let tl = [(0.0, 4), (10.0, 8)];
+        let costs = events_fixture(&reqs, &tl);
+        assert_eq!(costs.len(), 1);
+        let c = &costs[0];
+        assert_eq!(c.event, 0);
+        // [10, 20] at 8 devices.
+        assert!((c.device_seconds - 80.0).abs() < 1e-9);
+        assert!((c.attainment_before - 0.5).abs() < 1e-9);
+        assert!((c.attainment_after - 1.0).abs() < 1e-9);
+    }
+
+    fn events_fixture(
+        reqs: &[RequestMetrics],
+        tl: &[(f64, usize)],
+    ) -> Vec<EventCost> {
+        event_costs(
+            reqs,
+            &slo(),
+            tl,
+            &[(0, 10.0, 20.0)],
+            10.0,
+            40.0,
+        )
+    }
+}

@@ -19,9 +19,11 @@
 //! `tests/determinism.rs` sweeps every conformance cell both ways. See
 //! `docs/architecture/08-observability.md`.
 
+pub mod attain;
 pub mod export;
 pub mod registry;
 pub mod spans;
 
+pub use attain::{EventCost, WindowAttainment};
 pub use registry::{LogHistogram, ReplicaSample, Series, Telemetry};
 pub use spans::{Instant, Span, SpanTracker};

@@ -1,0 +1,1624 @@
+//! `repro report` — the postmortem generator.
+//!
+//! Turns an instrumented experiment run into one byte-deterministic
+//! markdown document answering the three questions an on-call engineer
+//! asks after an autoscaling incident:
+//!
+//! 1. **What did scaling cost?** Per scaling event: the
+//!    concurrent-phase vs switchover-window time split (the paper's
+//!    central claim is that the first dwarfs the second), the
+//!    device-seconds held while the transition was in flight, and the
+//!    SLO attainment immediately before and after
+//!    ([`crate::obs::attain`]).
+//! 2. **Why did the policy act?** The decision ledger: every
+//!    [`TraceEvent::DecisionExplain`] record the estimator/policy
+//!    emitted — observed load, hysteresis counters, cooldown state,
+//!    the chosen action, and whether a capacity guard vetoed it — plus
+//!    the reconciler's checked no-ops (steps refused as duplicate or
+//!    already satisfied).
+//! 3. **Can I reproduce it?** Any cell that tripped an invariant or
+//!    absorbed an injected fault gets a postmortem section with a
+//!    replay bundle: seed, exact replay command, expected `state_hash`
+//!    and the trailing trace window, as one JSON object. Running the
+//!    embedded command reproduces the identical hash (determinism
+//!    contract, `rust/tests/determinism.rs`).
+//!
+//! The renderer is a pure function of [`ReportInput`] — no clocks, no
+//! maps with nondeterministic order — so the same seed yields the same
+//! bytes, pinned by the golden file `rust/tests/golden/report.md` and
+//! the determinism suite. See `docs/architecture/11-reporting.md`.
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Result};
+
+use crate::chaos::{Trace, TraceEvent, Violation};
+use crate::config::SloConfig;
+use crate::experiments::{
+    chaos as chaos_exp, disagg as disagg_exp, reconcile as reconcile_exp,
+};
+use crate::metrics::recorder::RequestMetrics;
+use crate::obs::spans::{CAT_CONCURRENT, CAT_SWITCHOVER};
+use crate::obs::{attain, Telemetry};
+use crate::util::json::{self, Json};
+
+/// Attainment-timeline window width, seconds.
+pub const WINDOW: f64 = 20.0;
+/// Burn-rate horizon, seconds.
+pub const BURN_HORIZON: f64 = 60.0;
+/// Trace events kept in a replay bundle's trailing window.
+pub const TRAIL: usize = 12;
+/// Decision-ledger rows rendered before eliding steady-state holds.
+const LEDGER_CAP: usize = 40;
+/// Leading ledger rows always shown (context before the first action).
+const SHOW_HEAD: usize = 6;
+/// Reconciler no-op rows rendered before eliding.
+const NOOP_CAP: usize = 20;
+
+/// Everything the renderer needs; building one of these is the side
+/// that runs simulations, rendering is pure.
+#[derive(Debug, Clone)]
+pub struct ReportInput {
+    pub experiment: String,
+    pub seed: u64,
+    pub fast: bool,
+    /// The command line that (re)generates this report.
+    pub invocation: String,
+    pub slo: SloConfig,
+    pub cells: Vec<CellReport>,
+    pub ledger: Option<LedgerReport>,
+    /// Ingested Prometheus exposition lines (`name value`), verbatim.
+    pub metrics: Vec<String>,
+}
+
+/// One experiment cell (method × direction × fault, or pool layout).
+#[derive(Debug, Clone)]
+pub struct CellReport {
+    pub name: String,
+    /// 16-hex-digit run digest.
+    pub state_hash: String,
+    pub end_time: f64,
+    pub arrived: usize,
+    /// Requests with a recorded disposition (finished or dropped).
+    pub completed: usize,
+    /// Timeline window width used for this cell, seconds.
+    pub window: f64,
+    /// Caveats (e.g. ingested artifact without per-request latency).
+    pub notes: Vec<String>,
+    pub events: Vec<EventReport>,
+    pub timeline: Vec<TimelineRow>,
+    pub violations: Vec<String>,
+    pub postmortem: Option<Postmortem>,
+}
+
+/// One scaling event: time split, cost, attainment bracket.
+#[derive(Debug, Clone)]
+pub struct EventReport {
+    pub event: usize,
+    pub start: f64,
+    pub done: f64,
+    /// Seconds spent in concurrent-phase spans (NaN = no telemetry).
+    pub concurrent_s: f64,
+    /// Seconds spent inside the switchover window (NaN = no telemetry).
+    pub switchover_s: f64,
+    /// Device-seconds held over `[start, done]`.
+    pub device_seconds: f64,
+    pub attainment_before: f64,
+    pub attainment_after: f64,
+    /// `completed`, `aborted+rolled-back`, or `aborted`.
+    pub outcome: String,
+}
+
+/// One attainment series (a tenant or a pool partition).
+#[derive(Debug, Clone)]
+pub struct TimelineRow {
+    pub key: String,
+    pub windows: Vec<attain::WindowAttainment>,
+    /// Burn rate at the end of the run over [`BURN_HORIZON`].
+    pub burn: f64,
+}
+
+/// One policy tick from a [`TraceEvent::DecisionExplain`] record.
+#[derive(Debug, Clone)]
+pub struct LedgerEntry {
+    pub t: f64,
+    pub pool: String,
+    pub serving: usize,
+    /// Estimator-fed attainment; `-1` encodes NaN (no traffic).
+    pub attainment: f64,
+    pub occupancy: f64,
+    pub queue: usize,
+    pub bad: usize,
+    pub good: usize,
+    pub cooling: bool,
+    pub rearmed: bool,
+    pub reburst: bool,
+    pub decision: String,
+    pub action: String,
+    pub vetoed: bool,
+}
+
+impl LedgerEntry {
+    /// Anything other than a steady-state hold.
+    fn acting(&self) -> bool {
+        self.vetoed || self.decision != "hold" || self.action != "hold"
+    }
+}
+
+/// A reconcile step enacted as a checked no-op (`applied: false`).
+#[derive(Debug, Clone)]
+pub struct NoopStep {
+    pub t: f64,
+    pub replica: usize,
+    pub step: String,
+}
+
+/// The decision-ledger section: policy ticks plus reconciler guards.
+#[derive(Debug, Clone)]
+pub struct LedgerReport {
+    pub source: String,
+    pub replay: String,
+    pub state_hash: String,
+    pub entries: Vec<LedgerEntry>,
+    pub noops: Vec<NoopStep>,
+    pub violations: Vec<String>,
+}
+
+/// The replayable incident bundle.
+#[derive(Debug, Clone)]
+pub struct Postmortem {
+    pub verdict: String,
+    pub replay: String,
+    pub state_hash: String,
+    pub violations: Vec<String>,
+    /// One-line JSON: seed, replay command, expected hash, trailing
+    /// trace window, violations.
+    pub bundle: String,
+}
+
+// ---------------------------------------------------------------------
+// Formatting helpers (fixed precision keeps the bytes deterministic).
+
+fn ft(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Attainment-style value: NaN and the `-1` no-traffic encoding render
+/// as `n/a`.
+fn fa3(x: f64) -> String {
+    if x.is_nan() || x < 0.0 {
+        "n/a".to_string()
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+fn fd(x: f64) -> String {
+    if x.is_nan() {
+        "n/a".to_string()
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+fn hex16(h: u64) -> String {
+    format!("{h:016x}")
+}
+
+/// The command that replays an experiment run.
+pub fn replay_command(experiment: &str, seed: u64, fast: bool) -> String {
+    format!(
+        "repro exp {experiment} --seed {seed}{}",
+        if fast { " --fast" } else { "" }
+    )
+}
+
+fn invocation(experiment: &str, seed: u64, fast: bool) -> String {
+    format!(
+        "repro report {experiment} --seed {seed}{}",
+        if fast { " --fast" } else { "" }
+    )
+}
+
+/// Serialize a replay bundle as one JSON line (keys BTreeMap-sorted by
+/// [`Json`], so the bytes are stable).
+pub fn replay_bundle(
+    experiment: &str,
+    cell: &str,
+    seed: u64,
+    fast: bool,
+    state_hash: &str,
+    trail: &[Json],
+    violations: &[String],
+) -> String {
+    Json::obj(vec![
+        ("cell", Json::str(cell)),
+        ("experiment", Json::str(experiment)),
+        ("fast", Json::Bool(fast)),
+        ("replay", Json::str(replay_command(experiment, seed, fast))),
+        ("seed", Json::num(seed as f64)),
+        ("state_hash", Json::str(state_hash)),
+        ("trail", Json::arr(trail.iter().cloned())),
+        ("violations", Json::arr(violations.iter().map(|v| Json::str(v.as_str())))),
+    ])
+    .to_string()
+}
+
+// ---------------------------------------------------------------------
+// Builders: trace/recorder -> report structs.
+
+/// Scaling events paired from the trace: `(event, start, done, outcome)`.
+/// An event with a command but no terminal record (run truncated
+/// mid-transition) is skipped — it has no cost bracket to report.
+fn scaling_events(trace: &Trace) -> Vec<(usize, f64, f64, String)> {
+    let mut starts: Vec<(usize, f64)> = Vec::new();
+    let mut out = Vec::new();
+    for ev in &trace.events {
+        match ev {
+            TraceEvent::ScaleCommand { t, event, .. } => {
+                starts.push((*event, *t));
+            }
+            TraceEvent::ScaleCompleted { t, event, .. } => {
+                if let Some(&(_, s)) =
+                    starts.iter().find(|&&(e, _)| e == *event)
+                {
+                    out.push((*event, s, *t, "completed".to_string()));
+                }
+            }
+            TraceEvent::ScaleAborted {
+                t,
+                event,
+                rolled_back,
+                ..
+            } => {
+                if let Some(&(_, s)) =
+                    starts.iter().find(|&&(e, _)| e == *event)
+                {
+                    let outcome = if *rolled_back {
+                        "aborted+rolled-back"
+                    } else {
+                        "aborted"
+                    };
+                    out.push((*event, s, *t, outcome.to_string()));
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Borrowed view over one run's outputs — the bridge from
+/// [`crate::coordinator::SimOutput`] / [`crate::coordinator::FleetOutput`]
+/// (which share these fields but not a trait) into [`cell_report`].
+pub struct CellSource<'a> {
+    pub name: &'a str,
+    pub arrived: usize,
+    pub reqs: &'a [RequestMetrics],
+    pub trace: &'a Trace,
+    pub state_hash: u64,
+    pub end_time: f64,
+    pub device_timeline: &'a [(f64, usize)],
+    pub telemetry: Option<&'a Telemetry>,
+    pub violations: &'a [Violation],
+}
+
+/// Build one cell's report: event costs, attainment timelines (per
+/// tenant, plus per pool when the trace shows prefill→decode handoffs),
+/// and — when an invariant tripped or a fault fired — the postmortem
+/// replay bundle.
+pub fn cell_report(
+    src: &CellSource,
+    slo: &SloConfig,
+    experiment: &str,
+    seed: u64,
+    fast: bool,
+) -> CellReport {
+    let triples = scaling_events(src.trace);
+    let spans: Vec<(usize, f64, f64)> =
+        triples.iter().map(|&(e, s, d, _)| (e, s, d)).collect();
+    let costs = attain::event_costs(
+        src.reqs,
+        slo,
+        src.device_timeline,
+        &spans,
+        WINDOW,
+        src.end_time,
+    );
+    let events: Vec<EventReport> = triples
+        .iter()
+        .zip(costs.iter())
+        .map(|(&(event, start, done, ref outcome), c)| {
+            let (mut concurrent_s, mut switchover_s) = (f64::NAN, f64::NAN);
+            if let Some(tel) = src.telemetry {
+                let evs = tel.spans.for_event(event);
+                concurrent_s = evs
+                    .iter()
+                    .filter(|s| s.cat == CAT_CONCURRENT)
+                    .map(|s| s.end - s.start)
+                    .sum();
+                switchover_s = evs
+                    .iter()
+                    .filter(|s| s.cat == CAT_SWITCHOVER)
+                    .map(|s| s.end - s.start)
+                    .sum();
+            }
+            EventReport {
+                event,
+                start,
+                done,
+                concurrent_s,
+                switchover_s,
+                device_seconds: c.device_seconds,
+                attainment_before: c.attainment_before,
+                attainment_after: c.attainment_after,
+                outcome: outcome.clone(),
+            }
+        })
+        .collect();
+
+    let mut timeline: Vec<TimelineRow> = Vec::new();
+    for (key, ws) in attain::per_tenant(src.reqs, slo, WINDOW, src.end_time)
+    {
+        let burn = attain::burn_rate(
+            &ws,
+            slo.target_attainment,
+            BURN_HORIZON,
+            src.end_time,
+        );
+        timeline.push(TimelineRow { key, windows: ws, burn });
+    }
+    // Pool partition: requests whose KV crossed prefill→decode vs those
+    // served where they prefilled (only meaningful when handoffs exist).
+    let handoff: BTreeSet<u64> = src
+        .trace
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            TraceEvent::HandoffPlanned { id, .. } => Some(*id),
+            _ => None,
+        })
+        .collect();
+    if !handoff.is_empty() {
+        for (key, ws) in
+            attain::windows_by(src.reqs, slo, WINDOW, src.end_time, |m| {
+                Some(if handoff.contains(&m.id) {
+                    "pool:prefill>decode".to_string()
+                } else {
+                    "pool:local".to_string()
+                })
+            })
+        {
+            let burn = attain::burn_rate(
+                &ws,
+                slo.target_attainment,
+                BURN_HORIZON,
+                src.end_time,
+            );
+            timeline.push(TimelineRow { key, windows: ws, burn });
+        }
+    }
+
+    let violations: Vec<String> =
+        src.violations.iter().map(|v| v.to_string()).collect();
+    let fault_fired = src
+        .trace
+        .count(|e| matches!(e, TraceEvent::FaultFired { .. }))
+        > 0;
+    let aborted = events.iter().any(|e| e.outcome.starts_with("aborted"));
+    let postmortem = if !violations.is_empty() || fault_fired || aborted {
+        let hash = hex16(src.state_hash);
+        let tail_from = src.trace.events.len().saturating_sub(TRAIL);
+        let trail: Vec<Json> = src.trace.events[tail_from..]
+            .iter()
+            .map(|e| e.to_json())
+            .collect();
+        Some(Postmortem {
+            verdict: if violations.is_empty() {
+                "fault injected and recovered; no invariant violations \
+                 (bundle kept for replay)"
+                    .to_string()
+            } else {
+                "invariant violations — replay the bundle to reproduce"
+                    .to_string()
+            },
+            replay: replay_command(experiment, seed, fast),
+            state_hash: hash.clone(),
+            violations: violations.clone(),
+            bundle: replay_bundle(
+                experiment, src.name, seed, fast, &hash, &trail, &violations,
+            ),
+        })
+    } else {
+        None
+    };
+
+    CellReport {
+        name: src.name.to_string(),
+        state_hash: hex16(src.state_hash),
+        end_time: src.end_time,
+        arrived: src.arrived,
+        completed: src.reqs.len(),
+        window: WINDOW,
+        notes: Vec::new(),
+        events,
+        timeline,
+        violations,
+        postmortem,
+    }
+}
+
+/// Harvest the decision ledger from a trace: every
+/// [`TraceEvent::DecisionExplain`] tick plus the reconciler's checked
+/// no-ops.
+pub fn ledger_from_trace(
+    source: &str,
+    replay: &str,
+    trace: &Trace,
+    state_hash: u64,
+    violations: &[Violation],
+) -> LedgerReport {
+    let mut entries = Vec::new();
+    let mut noops = Vec::new();
+    for ev in &trace.events {
+        match ev {
+            TraceEvent::DecisionExplain {
+                t,
+                pool,
+                serving,
+                attainment,
+                occupancy,
+                queue,
+                bad_windows,
+                good_windows,
+                cooling,
+                rearmed,
+                reburst,
+                decision,
+                action,
+                vetoed,
+            } => entries.push(LedgerEntry {
+                t: *t,
+                pool: pool.to_string(),
+                serving: *serving,
+                attainment: *attainment,
+                occupancy: *occupancy,
+                queue: *queue,
+                bad: *bad_windows,
+                good: *good_windows,
+                cooling: *cooling,
+                rearmed: *rearmed,
+                reburst: *reburst,
+                decision: decision.to_string(),
+                action: action.clone(),
+                vetoed: *vetoed,
+            }),
+            TraceEvent::ReconcileStep {
+                t,
+                replica,
+                step,
+                applied: false,
+            } => noops.push(NoopStep {
+                t: *t,
+                replica: *replica,
+                step: step.clone(),
+            }),
+            _ => {}
+        }
+    }
+    LedgerReport {
+        source: source.to_string(),
+        replay: replay.to_string(),
+        state_hash: hex16(state_hash),
+        entries,
+        noops,
+        violations: violations.iter().map(|v| v.to_string()).collect(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Experiment entry points.
+
+/// Run `experiment` fully instrumented and build its report input.
+pub fn build(experiment: &str, seed: u64, fast: bool) -> Result<ReportInput> {
+    match experiment {
+        "chaos" => build_chaos(seed, fast),
+        "disagg" => build_disagg(seed, fast),
+        "reconcile" => build_reconcile(seed, fast),
+        other => bail!(
+            "`repro report` runs for: chaos, disagg, reconcile \
+             (got '{other}'); any run's exported artifacts can be \
+             ingested instead via `repro report ingest --trace <file> \
+             [--metrics <file>]`"
+        ),
+    }
+}
+
+/// Run `experiment` and render the finished markdown.
+pub fn generate(experiment: &str, seed: u64, fast: bool) -> Result<String> {
+    Ok(render(&build(experiment, seed, fast)?))
+}
+
+fn build_chaos(seed: u64, fast: bool) -> Result<ReportInput> {
+    let slo = chaos_exp::report_slo();
+    let raw = chaos_exp::report_cells(seed, fast)?;
+    let cells = raw
+        .iter()
+        .map(|c| {
+            cell_report(
+                &CellSource {
+                    name: &c.name,
+                    arrived: c.arrived,
+                    reqs: c.out.recorder.all(),
+                    trace: &c.out.trace,
+                    state_hash: c.out.state_hash,
+                    end_time: c.out.end_time,
+                    device_timeline: &c.out.device_timeline,
+                    telemetry: c.out.telemetry.as_ref(),
+                    violations: &c.violations,
+                },
+                &slo,
+                "chaos",
+                seed,
+                fast,
+            )
+        })
+        .collect();
+    // The chaos matrix scales on a manual trigger, so the decision
+    // ledger rides on the reconcile experiment's duplicate-command leg
+    // — the one run where the estimator, the policy guards and the
+    // reconciler's no-op marks all land on a single trace.
+    let (lo, lv) = reconcile_exp::ledger_run(seed, fast)?;
+    let ledger = ledger_from_trace(
+        "reconcile duplicate-command leg",
+        &replay_command("reconcile", seed, fast),
+        &lo.trace,
+        lo.state_hash,
+        &lv,
+    );
+    Ok(ReportInput {
+        experiment: "chaos".to_string(),
+        seed,
+        fast,
+        invocation: invocation("chaos", seed, fast),
+        slo,
+        cells,
+        ledger: Some(ledger),
+        metrics: Vec::new(),
+    })
+}
+
+fn build_disagg(seed: u64, fast: bool) -> Result<ReportInput> {
+    let slo = disagg_exp::report_slo();
+    let raw = disagg_exp::report_cells(seed, fast)?;
+    let cells: Vec<CellReport> = raw
+        .iter()
+        .map(|c| {
+            cell_report(
+                &CellSource {
+                    name: &c.name,
+                    arrived: c.arrived,
+                    reqs: c.out.recorder.all(),
+                    trace: &c.out.trace,
+                    state_hash: c.out.state_hash,
+                    end_time: c.out.end_time,
+                    device_timeline: &c.out.device_timeline,
+                    telemetry: c.out.telemetry.as_ref(),
+                    violations: &c.violations,
+                },
+                &slo,
+                "disagg",
+                seed,
+                fast,
+            )
+        })
+        .collect();
+    // The disagg fleet is pinned (the policy holds every tick), so its
+    // own per-pool explains are the ledger.
+    let ledger = raw
+        .iter()
+        .find(|c| {
+            c.out
+                .trace
+                .count(|e| matches!(e, TraceEvent::DecisionExplain { .. }))
+                > 0
+        })
+        .map(|c| {
+            ledger_from_trace(
+                &format!("disagg fleet policy (cell `{}`)", c.name),
+                &replay_command("disagg", seed, fast),
+                &c.out.trace,
+                c.out.state_hash,
+                &c.violations,
+            )
+        });
+    Ok(ReportInput {
+        experiment: "disagg".to_string(),
+        seed,
+        fast,
+        invocation: invocation("disagg", seed, fast),
+        slo,
+        cells,
+        ledger,
+        metrics: Vec::new(),
+    })
+}
+
+fn build_reconcile(seed: u64, fast: bool) -> Result<ReportInput> {
+    let slo = reconcile_exp::report_slo();
+    let (out, violations) = reconcile_exp::ledger_run(seed, fast)?;
+    let arrived = out
+        .trace
+        .count(|e| matches!(e, TraceEvent::Arrival { .. }));
+    let cell = cell_report(
+        &CellSource {
+            name: "elastic/duplicate-command",
+            arrived,
+            reqs: out.recorder.all(),
+            trace: &out.trace,
+            state_hash: out.state_hash,
+            end_time: out.end_time,
+            device_timeline: &out.device_timeline,
+            telemetry: out.telemetry.as_ref(),
+            violations: &violations,
+        },
+        &slo,
+        "reconcile",
+        seed,
+        fast,
+    );
+    let ledger = ledger_from_trace(
+        "reconcile duplicate-command leg",
+        &replay_command("reconcile", seed, fast),
+        &out.trace,
+        out.state_hash,
+        &violations,
+    );
+    Ok(ReportInput {
+        experiment: "reconcile".to_string(),
+        seed,
+        fast,
+        invocation: invocation("reconcile", seed, fast),
+        slo,
+        cells: vec![cell],
+        ledger: Some(ledger),
+        metrics: Vec::new(),
+    })
+}
+
+// ---------------------------------------------------------------------
+// Artifact ingestion (`--trace-out` / `--metrics-out` products).
+
+/// Build a report from previously exported artifacts instead of a live
+/// run. `trace_text` accepts either rendering the repo produces: the
+/// raw [`Trace`] JSON (`{"events": [...], "state_hash": "..."}`) or
+/// the Chrome trace-event export (`{"traceEvents": [...]}`).
+/// `metrics_text` is the Prometheus exposition, included verbatim.
+pub fn ingest(
+    label: &str,
+    trace_text: &str,
+    metrics_text: Option<&str>,
+) -> Result<ReportInput> {
+    let doc = json::parse(trace_text)?;
+    let (cell, ledger) = if doc.get("events").as_arr().is_some() {
+        ingest_raw_trace(label, &doc)
+    } else if doc.get("traceEvents").as_arr().is_some() {
+        ingest_chrome_trace(label, &doc)
+    } else {
+        bail!(
+            "unrecognized trace artifact: expected a raw trace \
+             ({{\"events\": ...}}) or a Chrome trace-event export \
+             ({{\"traceEvents\": ...}})"
+        );
+    };
+    let metrics = metrics_text
+        .map(|t| {
+            t.lines()
+                .filter(|l| !l.is_empty() && !l.starts_with('#'))
+                .map(str::to_string)
+                .collect()
+        })
+        .unwrap_or_default();
+    Ok(ReportInput {
+        experiment: format!("ingest:{label}"),
+        seed: 0,
+        fast: false,
+        invocation: format!("repro report ingest --trace {label}"),
+        slo: SloConfig::new(f64::NAN, f64::NAN),
+        cells: vec![cell],
+        ledger,
+        metrics,
+    })
+}
+
+/// Raw trace JSON: rebuild the event table from
+/// `scale_command`/`scale_completed`/`scale_aborted` records (the
+/// declared pause window stands in for the switchover split) and the
+/// ledger from `decision_explain` records.
+fn ingest_raw_trace(
+    label: &str,
+    doc: &Json,
+) -> (CellReport, Option<LedgerReport>) {
+    let events_json = doc.get("events").as_arr().unwrap_or(&[]);
+    let state_hash = doc
+        .get("state_hash")
+        .as_str()
+        .unwrap_or("unknown")
+        .to_string();
+    let mut end_time: f64 = 0.0;
+    let mut starts: Vec<(usize, f64, f64)> = Vec::new(); // (event, t, pause)
+    let mut events: Vec<EventReport> = Vec::new();
+    let mut entries: Vec<LedgerEntry> = Vec::new();
+    let mut noops: Vec<NoopStep> = Vec::new();
+    let mut arrived = 0usize;
+    for e in events_json {
+        let t = e.get("t").as_f64().unwrap_or(0.0);
+        end_time = end_time.max(t);
+        match e.get("ev").as_str().unwrap_or("") {
+            "arrival" => arrived += 1,
+            "scale_command" => {
+                let ev = e.get("event").as_usize().unwrap_or(0);
+                let pause = match e.get("declared_pause").as_arr() {
+                    Some(p) if p.len() == 2 => {
+                        p[1].as_f64().unwrap_or(0.0)
+                            - p[0].as_f64().unwrap_or(0.0)
+                    }
+                    _ => f64::NAN,
+                };
+                starts.push((ev, t, pause));
+            }
+            kind @ ("scale_completed" | "scale_aborted") => {
+                let ev = e.get("event").as_usize().unwrap_or(0);
+                if let Some(&(_, s, pause)) =
+                    starts.iter().find(|&&(id, _, _)| id == ev)
+                {
+                    let outcome = if kind == "scale_completed" {
+                        "completed".to_string()
+                    } else if e.get("rolled_back").as_bool() == Some(true) {
+                        "aborted+rolled-back".to_string()
+                    } else {
+                        "aborted".to_string()
+                    };
+                    let switchover_s = pause;
+                    let concurrent_s = if pause.is_nan() {
+                        f64::NAN
+                    } else {
+                        (t - s - pause).max(0.0)
+                    };
+                    events.push(EventReport {
+                        event: ev,
+                        start: s,
+                        done: t,
+                        concurrent_s,
+                        switchover_s,
+                        device_seconds: f64::NAN,
+                        attainment_before: f64::NAN,
+                        attainment_after: f64::NAN,
+                        outcome,
+                    });
+                }
+            }
+            "decision_explain" => entries.push(LedgerEntry {
+                t,
+                pool: e.get("pool").as_str().unwrap_or("?").to_string(),
+                serving: e.get("serving").as_usize().unwrap_or(0),
+                attainment: e.get("attainment").as_f64().unwrap_or(-1.0),
+                occupancy: e.get("occupancy").as_f64().unwrap_or(0.0),
+                queue: e.get("queue").as_usize().unwrap_or(0),
+                bad: e.get("bad_windows").as_usize().unwrap_or(0),
+                good: e.get("good_windows").as_usize().unwrap_or(0),
+                cooling: e.get("cooling").as_bool().unwrap_or(false),
+                rearmed: e.get("rearmed").as_bool().unwrap_or(false),
+                reburst: e.get("reburst").as_bool().unwrap_or(false),
+                decision: e
+                    .get("decision")
+                    .as_str()
+                    .unwrap_or("?")
+                    .to_string(),
+                action: e.get("action").as_str().unwrap_or("?").to_string(),
+                vetoed: e.get("vetoed").as_bool().unwrap_or(false),
+            }),
+            "reconcile_step" => {
+                if e.get("applied").as_bool() == Some(false) {
+                    noops.push(NoopStep {
+                        t,
+                        replica: e.get("replica").as_usize().unwrap_or(0),
+                        step: e
+                            .get("step")
+                            .as_str()
+                            .unwrap_or("?")
+                            .to_string(),
+                    });
+                }
+            }
+            _ => {}
+        }
+    }
+    let ledger = if entries.is_empty() && noops.is_empty() {
+        None
+    } else {
+        Some(LedgerReport {
+            source: format!("ingested trace `{label}`"),
+            replay: "n/a (ingested artifact)".to_string(),
+            state_hash: state_hash.clone(),
+            entries,
+            noops,
+            violations: Vec::new(),
+        })
+    };
+    let cell = CellReport {
+        name: label.to_string(),
+        state_hash,
+        end_time,
+        arrived,
+        completed: 0,
+        window: WINDOW,
+        notes: vec![
+            "ingested trace artifact: per-request latency is not \
+             recorded in the trace, so attainment timelines and \
+             device-second costs are unavailable (switchover time is \
+             the declared pause window)"
+                .to_string(),
+        ],
+        events,
+        timeline: Vec::new(),
+        violations: Vec::new(),
+        postmortem: None,
+    };
+    (cell, ledger)
+}
+
+/// Chrome trace-event export: rebuild the concurrent/switchover split
+/// from the `X` span events (which carry `args.event` and `args.cat`);
+/// timestamps are microseconds.
+fn ingest_chrome_trace(
+    label: &str,
+    doc: &Json,
+) -> (CellReport, Option<LedgerReport>) {
+    let span_events = doc.get("traceEvents").as_arr().unwrap_or(&[]);
+    // event id -> (start_us, end_us, concurrent_us, switchover_us)
+    let mut by_event: Vec<(usize, f64, f64, f64, f64)> = Vec::new();
+    let mut end_time: f64 = 0.0;
+    for e in span_events {
+        if e.get("ph").as_str() != Some("X") {
+            continue;
+        }
+        let ts = e.get("ts").as_f64().unwrap_or(0.0);
+        let dur = e.get("dur").as_f64().unwrap_or(0.0);
+        end_time = end_time.max((ts + dur) / 1e6);
+        let args = e.get("args");
+        let ev = match args.get("event").as_usize() {
+            Some(ev) => ev,
+            None => continue,
+        };
+        let cat = e.get("cat").as_str().unwrap_or("");
+        let idx = match by_event.iter().position(|r| r.0 == ev) {
+            Some(i) => i,
+            None => {
+                by_event.push((ev, f64::INFINITY, 0.0, 0.0, 0.0));
+                by_event.len() - 1
+            }
+        };
+        let slot = &mut by_event[idx];
+        slot.1 = slot.1.min(ts);
+        slot.2 = slot.2.max(ts + dur);
+        if cat == CAT_CONCURRENT {
+            slot.3 += dur;
+        } else if cat == CAT_SWITCHOVER {
+            slot.4 += dur;
+        }
+    }
+    by_event.sort_by_key(|r| r.0);
+    let events = by_event
+        .iter()
+        .map(|&(ev, s, d, c, w)| EventReport {
+            event: ev,
+            start: s / 1e6,
+            done: d / 1e6,
+            concurrent_s: c / 1e6,
+            switchover_s: w / 1e6,
+            device_seconds: f64::NAN,
+            attainment_before: f64::NAN,
+            attainment_after: f64::NAN,
+            outcome: "(see trace)".to_string(),
+        })
+        .collect();
+    let cell = CellReport {
+        name: label.to_string(),
+        state_hash: "unknown".to_string(),
+        end_time,
+        arrived: 0,
+        completed: 0,
+        window: WINDOW,
+        notes: vec![
+            "ingested Chrome trace-event artifact: spans only — \
+             request-level attainment, device-second costs and the \
+             decision ledger are not part of this export"
+                .to_string(),
+        ],
+        events,
+        timeline: Vec::new(),
+        violations: Vec::new(),
+        postmortem: None,
+    };
+    (cell, None)
+}
+
+// ---------------------------------------------------------------------
+// Rendering.
+
+/// Render the report. Pure: same input, same bytes (golden-pinned by
+/// `rust/tests/golden/report.md`).
+pub fn render(input: &ReportInput) -> String {
+    let mut out: Vec<String> = Vec::new();
+    out.push(format!("# repro report — {}", input.experiment));
+    out.push(String::new());
+    out.push(format!("- invocation: `{}`", input.invocation));
+    out.push(format!("- seed: {}", input.seed));
+    if input.slo.ttft.is_nan() {
+        out.push("- SLO: (unknown — ingested artifact)".to_string());
+    } else {
+        out.push(format!(
+            "- SLO: TTFT <= {}s, TPOT <= {}s, target attainment {:.0}%",
+            ft(input.slo.ttft),
+            ft(input.slo.tpot),
+            input.slo.target_attainment * 100.0
+        ));
+    }
+    out.push(format!("- cells: {}", input.cells.len()));
+    for cell in &input.cells {
+        render_cell(cell, &mut out);
+    }
+    if let Some(l) = &input.ledger {
+        render_ledger(l, &mut out);
+    }
+    if !input.metrics.is_empty() {
+        out.push(String::new());
+        out.push("## Metrics snapshot (ingested)".to_string());
+        out.push(String::new());
+        out.push("```".to_string());
+        for m in &input.metrics {
+            out.push(m.clone());
+        }
+        out.push("```".to_string());
+    }
+    out.push(String::new());
+    out.join("\n")
+}
+
+fn render_cell(cell: &CellReport, out: &mut Vec<String>) {
+    out.push(String::new());
+    out.push(format!("## Cell `{}`", cell.name));
+    out.push(String::new());
+    out.push(format!("- state hash: `{}`", cell.state_hash));
+    out.push(format!(
+        "- horizon: {}s; requests: {} arrived, {} recorded",
+        ft(cell.end_time),
+        cell.arrived,
+        cell.completed
+    ));
+    out.push(format!("- invariant violations: {}", cell.violations.len()));
+    for n in &cell.notes {
+        out.push(format!("- note: {n}"));
+    }
+    out.push(String::new());
+    out.push("### Scaling events — concurrent vs switchover".to_string());
+    out.push(String::new());
+    if cell.events.is_empty() {
+        out.push("(no scaling events)".to_string());
+    } else {
+        out.push(
+            "| event | start (s) | ready (s) | total (s) | concurrent (s) \
+             | switchover (s) | device-s | attain before | attain after \
+             | outcome |"
+                .to_string(),
+        );
+        out.push("|---|---|---|---|---|---|---|---|---|---|".to_string());
+        for e in &cell.events {
+            out.push(format!(
+                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |",
+                e.event,
+                ft(e.start),
+                ft(e.done),
+                ft(e.done - e.start),
+                fa3(e.concurrent_s),
+                fa3(e.switchover_s),
+                fd(e.device_seconds),
+                fa3(e.attainment_before),
+                fa3(e.attainment_after),
+                e.outcome
+            ));
+        }
+    }
+    if !cell.timeline.is_empty() {
+        out.push(String::new());
+        out.push(format!(
+            "### Attainment timeline ({:.0}s windows; burn rate over \
+             trailing {:.0}s)",
+            cell.window, BURN_HORIZON
+        ));
+        for row in &cell.timeline {
+            out.push(String::new());
+            out.push(format!("**{}** — burn rate {:.2}", row.key, row.burn));
+            out.push(String::new());
+            out.push(
+                "| window (s) | arrived | attained | violated | in-flight \
+                 | attainment | scaling |"
+                    .to_string(),
+            );
+            out.push("|---|---|---|---|---|---|---|".to_string());
+            for w in &row.windows {
+                let marks: Vec<String> = cell
+                    .events
+                    .iter()
+                    .filter(|e| e.start >= w.t0 && e.start < w.t1)
+                    .map(|e| {
+                        format!("#{} ({} dev-s)", e.event, fd(e.device_seconds))
+                    })
+                    .collect();
+                let scaling = if marks.is_empty() {
+                    "-".to_string()
+                } else {
+                    marks.join(", ")
+                };
+                out.push(format!(
+                    "| [{:.0}, {:.0}) | {} | {} | {} | {} | {} | {} |",
+                    w.t0,
+                    w.t1,
+                    w.arrived,
+                    w.attained,
+                    w.violated,
+                    w.in_flight,
+                    fa3(w.attainment()),
+                    scaling
+                ));
+            }
+        }
+    }
+    if let Some(p) = &cell.postmortem {
+        out.push(String::new());
+        out.push("### Postmortem".to_string());
+        out.push(String::new());
+        out.push(format!("- verdict: {}", p.verdict));
+        out.push(format!("- replay: `{}`", p.replay));
+        out.push(format!("- expected state hash: `{}`", p.state_hash));
+        out.push(format!("- violations: {}", p.violations.len()));
+        for v in &p.violations {
+            out.push(format!("  - {v}"));
+        }
+        out.push(String::new());
+        out.push("Replay bundle:".to_string());
+        out.push(String::new());
+        out.push("```json".to_string());
+        out.push(p.bundle.clone());
+        out.push("```".to_string());
+    }
+}
+
+fn render_ledger(l: &LedgerReport, out: &mut Vec<String>) {
+    out.push(String::new());
+    out.push("## Decision ledger".to_string());
+    out.push(String::new());
+    out.push(format!("- source: {} (`{}`)", l.source, l.replay));
+    out.push(format!("- state hash: `{}`", l.state_hash));
+    let acting = l.entries.iter().filter(|e| e.acting()).count();
+    let vetoed = l.entries.iter().filter(|e| e.vetoed).count();
+    out.push(format!(
+        "- entries: {} (acting: {}, vetoed: {}); reconciler checked \
+         no-ops: {}",
+        l.entries.len(),
+        acting,
+        vetoed,
+        l.noops.len()
+    ));
+    if !l.violations.is_empty() {
+        out.push(format!("- invariant violations: {}", l.violations.len()));
+        for v in &l.violations {
+            out.push(format!("  - {v}"));
+        }
+    }
+    out.push(String::new());
+    if l.entries.is_empty() {
+        out.push("(no policy ticks recorded)".to_string());
+    } else {
+        out.push(
+            "| t (s) | pool | serving | attain | occupancy | queue | bad \
+             | good | flags | decision | action | vetoed |"
+                .to_string(),
+        );
+        out.push("|---|---|---|---|---|---|---|---|---|---|---|---|".to_string());
+        let mut show: Vec<usize> =
+            (0..l.entries.len().min(SHOW_HEAD)).collect();
+        for (i, e) in l.entries.iter().enumerate() {
+            if e.acting() && !show.contains(&i) {
+                show.push(i);
+            }
+        }
+        show.sort_unstable();
+        show.truncate(LEDGER_CAP);
+        for &i in &show {
+            let e = &l.entries[i];
+            let mut flags: Vec<&str> = Vec::new();
+            if e.cooling {
+                flags.push("cooling");
+            }
+            if e.rearmed {
+                flags.push("rearmed");
+            }
+            if e.reburst {
+                flags.push("reburst");
+            }
+            let flags = if flags.is_empty() {
+                "-".to_string()
+            } else {
+                flags.join("+")
+            };
+            out.push(format!(
+                "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |",
+                ft(e.t),
+                e.pool,
+                e.serving,
+                fa3(e.attainment),
+                fa3(e.occupancy),
+                e.queue,
+                e.bad,
+                e.good,
+                flags,
+                e.decision,
+                e.action,
+                if e.vetoed { "yes" } else { "-" }
+            ));
+        }
+        let elided = l.entries.len() - show.len();
+        if elided > 0 {
+            out.push(String::new());
+            out.push(format!("({elided} steady-state hold entries elided)"));
+        }
+    }
+    if !l.noops.is_empty() {
+        out.push(String::new());
+        out.push(
+            "### Reconciler guard no-ops (steps refused as duplicate or \
+             already satisfied)"
+                .to_string(),
+        );
+        out.push(String::new());
+        out.push("| t (s) | replica | step |".to_string());
+        out.push("|---|---|---|".to_string());
+        for n in l.noops.iter().take(NOOP_CAP) {
+            out.push(format!(
+                "| {} | {} | {} |",
+                ft(n.t),
+                n.replica,
+                n.step
+            ));
+        }
+        if l.noops.len() > NOOP_CAP {
+            out.push(String::new());
+            out.push(format!("({} no-ops elided)", l.noops.len() - NOOP_CAP));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Golden fixture.
+
+/// The hand-built canonical report input: two cells (one clean with a
+/// completed event and a tenant timeline, one faulted with a
+/// postmortem bundle) plus a three-entry decision ledger with a vetoed
+/// action and one reconciler no-op. Every number is chosen so the
+/// rendered bytes are hand-checkable; `rust/tests/golden/report.md`
+/// pins them.
+pub fn sample_input() -> ReportInput {
+    let trail = vec![TraceEvent::ScaleAborted {
+        t: 43.0,
+        event: 0,
+        rolled_back: true,
+        reason: "p2p-link".to_string(),
+    }
+    .to_json()];
+    let bundle = replay_bundle(
+        "chaos",
+        "elastic/up/p2p-link",
+        23,
+        true,
+        "0000feedface0000",
+        &trail,
+        &[],
+    );
+    ReportInput {
+        experiment: "chaos".to_string(),
+        seed: 23,
+        fast: true,
+        invocation: "repro report chaos --seed 23 --fast".to_string(),
+        slo: SloConfig::new(8.0, 1.5),
+        cells: vec![
+            CellReport {
+                name: "elastic/up/none".to_string(),
+                state_hash: "00000000deadbeef".to_string(),
+                end_time: 160.0,
+                arrived: 4,
+                completed: 4,
+                window: 20.0,
+                notes: Vec::new(),
+                events: vec![EventReport {
+                    event: 0,
+                    start: 40.0,
+                    done: 52.5,
+                    concurrent_s: 11.5,
+                    switchover_s: 1.0,
+                    device_seconds: 100.0,
+                    attainment_before: 0.5,
+                    attainment_after: 1.0,
+                    outcome: "completed".to_string(),
+                }],
+                timeline: vec![TimelineRow {
+                    key: "tenant:0".to_string(),
+                    burn: 0.25,
+                    windows: vec![
+                        attain::WindowAttainment {
+                            t0: 0.0,
+                            t1: 20.0,
+                            arrived: 2,
+                            attained: 1,
+                            violated: 1,
+                            in_flight: 0,
+                        },
+                        attain::WindowAttainment {
+                            t0: 40.0,
+                            t1: 60.0,
+                            arrived: 2,
+                            attained: 2,
+                            violated: 0,
+                            in_flight: 0,
+                        },
+                    ],
+                }],
+                violations: Vec::new(),
+                postmortem: None,
+            },
+            CellReport {
+                name: "elastic/up/p2p-link".to_string(),
+                state_hash: "0000feedface0000".to_string(),
+                end_time: 160.0,
+                arrived: 3,
+                completed: 3,
+                window: 20.0,
+                notes: Vec::new(),
+                events: vec![EventReport {
+                    event: 0,
+                    start: 40.0,
+                    done: 43.0,
+                    concurrent_s: f64::NAN,
+                    switchover_s: f64::NAN,
+                    device_seconds: 24.0,
+                    attainment_before: 1.0,
+                    attainment_after: f64::NAN,
+                    outcome: "aborted+rolled-back".to_string(),
+                }],
+                timeline: Vec::new(),
+                violations: Vec::new(),
+                postmortem: Some(Postmortem {
+                    verdict: "fault injected and recovered; no invariant \
+                              violations (bundle kept for replay)"
+                        .to_string(),
+                    replay: "repro exp chaos --seed 23 --fast".to_string(),
+                    state_hash: "0000feedface0000".to_string(),
+                    violations: Vec::new(),
+                    bundle,
+                }),
+            },
+        ],
+        ledger: Some(LedgerReport {
+            source: "reconcile duplicate-command leg".to_string(),
+            replay: "repro exp reconcile --seed 23 --fast".to_string(),
+            state_hash: "0123456789abcdef".to_string(),
+            entries: vec![
+                LedgerEntry {
+                    t: 60.5,
+                    pool: "unified".to_string(),
+                    serving: 2,
+                    attainment: 0.612,
+                    occupancy: 0.94,
+                    queue: 12,
+                    bad: 2,
+                    good: 0,
+                    cooling: false,
+                    rearmed: false,
+                    reburst: true,
+                    decision: "up".to_string(),
+                    action: "grow r0->4dev".to_string(),
+                    vetoed: false,
+                },
+                LedgerEntry {
+                    t: 61.0,
+                    pool: "unified".to_string(),
+                    serving: 2,
+                    attainment: -1.0,
+                    occupancy: 0.5,
+                    queue: 0,
+                    bad: 0,
+                    good: 1,
+                    cooling: true,
+                    rearmed: false,
+                    reburst: false,
+                    decision: "hold".to_string(),
+                    action: "hold".to_string(),
+                    vetoed: false,
+                },
+                LedgerEntry {
+                    t: 62.0,
+                    pool: "unified".to_string(),
+                    serving: 3,
+                    attainment: 0.4,
+                    occupancy: 0.97,
+                    queue: 9,
+                    bad: 3,
+                    good: 0,
+                    cooling: false,
+                    rearmed: true,
+                    reburst: false,
+                    decision: "up".to_string(),
+                    action: "hold".to_string(),
+                    vetoed: true,
+                },
+            ],
+            noops: vec![NoopStep {
+                t: 62.5,
+                replica: 1,
+                step: "resize->4".to_string(),
+            }],
+            violations: Vec::new(),
+        }),
+        metrics: Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::Trace;
+
+    fn trace_with_events() -> Trace {
+        let mut tr = Trace::new();
+        tr.push(TraceEvent::ScaleCommand {
+            t: 10.0,
+            event: 0,
+            from_devices: 4,
+            to_devices: 6,
+            declared_pause: Some((19.0, 19.5)),
+        });
+        tr.push(TraceEvent::ScaleCompleted {
+            t: 20.0,
+            event: 0,
+            devices: 6,
+        });
+        tr.push(TraceEvent::ScaleCommand {
+            t: 30.0,
+            event: 1,
+            from_devices: 6,
+            to_devices: 8,
+            declared_pause: None,
+        });
+        tr.push(TraceEvent::ScaleAborted {
+            t: 33.0,
+            event: 1,
+            rolled_back: true,
+            reason: "device-loss".to_string(),
+        });
+        tr
+    }
+
+    #[test]
+    fn scaling_events_pair_commands_with_outcomes() {
+        let evs = scaling_events(&trace_with_events());
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0], (0, 10.0, 20.0, "completed".to_string()));
+        assert_eq!(
+            evs[1],
+            (1, 30.0, 33.0, "aborted+rolled-back".to_string())
+        );
+    }
+
+    #[test]
+    fn cell_report_builds_events_timeline_and_postmortem() {
+        let tr = trace_with_events();
+        let reqs = vec![
+            RequestMetrics {
+                id: 1,
+                arrival: 5.0,
+                finished: 6.0,
+                ttft: 0.5,
+                tpot: 0.1,
+                tokens: 10,
+                dropped: false,
+                tenant: 0,
+            },
+            RequestMetrics {
+                id: 2,
+                arrival: 25.0,
+                finished: 26.0,
+                ttft: 99.0,
+                tpot: 0.1,
+                tokens: 10,
+                dropped: false,
+                tenant: 1,
+            },
+        ];
+        let cell = cell_report(
+            &CellSource {
+                name: "elastic/up/device-loss",
+                arrived: 2,
+                reqs: &reqs,
+                trace: &tr,
+                state_hash: 0xabcd,
+                end_time: 40.0,
+                device_timeline: &[(0.0, 4), (20.0, 6)],
+                telemetry: None,
+                violations: &[],
+            },
+            &SloConfig::new(8.0, 1.5),
+            "chaos",
+            7,
+            true,
+        );
+        assert_eq!(cell.events.len(), 2);
+        // Event 0 spans [10, 20] at 4 devices.
+        assert!((cell.events[0].device_seconds - 40.0).abs() < 1e-9);
+        assert!(cell.events[0].concurrent_s.is_nan(), "no telemetry");
+        assert_eq!(cell.timeline.len(), 2, "one row per tenant");
+        assert_eq!(cell.state_hash, "000000000000abcd");
+        // The abort makes it a fault cell: postmortem with a bundle
+        // that parses and carries the seed and hash.
+        let p = cell.postmortem.expect("aborted event => postmortem");
+        assert_eq!(p.replay, "repro exp chaos --seed 7 --fast");
+        let bundle = json::parse(&p.bundle).unwrap();
+        assert_eq!(bundle.get("seed").as_u64(), Some(7));
+        assert_eq!(
+            bundle.get("state_hash").as_str(),
+            Some("000000000000abcd")
+        );
+        assert_eq!(bundle.get("trail").as_arr().unwrap().len(), tr.len());
+    }
+
+    #[test]
+    fn ledger_harvests_explains_and_noop_steps() {
+        let mut tr = Trace::new();
+        tr.push(TraceEvent::DecisionExplain {
+            t: 5.0,
+            pool: "unified",
+            serving: 2,
+            attainment: 0.8,
+            occupancy: 0.7,
+            queue: 3,
+            bad_windows: 1,
+            good_windows: 0,
+            cooling: false,
+            rearmed: false,
+            reburst: false,
+            decision: "up",
+            action: "hold".to_string(),
+            vetoed: true,
+        });
+        tr.push(TraceEvent::ReconcileStep {
+            t: 6.0,
+            replica: 1,
+            step: "resize->4".to_string(),
+            applied: false,
+        });
+        tr.push(TraceEvent::ReconcileStep {
+            t: 7.0,
+            replica: 1,
+            step: "resize->4".to_string(),
+            applied: true,
+        });
+        let l = ledger_from_trace("test", "repro exp x", &tr, 1, &[]);
+        assert_eq!(l.entries.len(), 1);
+        assert!(l.entries[0].vetoed);
+        assert!(l.entries[0].acting());
+        assert_eq!(l.noops.len(), 1, "applied steps are not no-ops");
+    }
+
+    #[test]
+    fn render_is_pure_and_contains_the_contract_sections() {
+        let input = sample_input();
+        let a = render(&input);
+        let b = render(&input);
+        assert_eq!(a, b);
+        for needle in [
+            "# repro report — chaos",
+            "## Cell `elastic/up/none`",
+            "### Scaling events — concurrent vs switchover",
+            "| 0 | 40.000 | 52.500 | 12.500 | 11.500 | 1.000 | 100.0 \
+             | 0.500 | 1.000 | completed |",
+            "### Attainment timeline (20s windows; burn rate over \
+             trailing 60s)",
+            "#0 (100.0 dev-s)",
+            "### Postmortem",
+            "Replay bundle:",
+            "## Decision ledger",
+            "| yes |",
+            "### Reconciler guard no-ops",
+        ] {
+            assert!(a.contains(needle), "missing {needle:?} in:\n{a}");
+        }
+        assert!(a.ends_with('\n'));
+    }
+
+    #[test]
+    fn ledger_elides_steady_state_holds_but_keeps_actions() {
+        let hold = LedgerEntry {
+            t: 0.0,
+            pool: "unified".to_string(),
+            serving: 1,
+            attainment: 1.0,
+            occupancy: 0.1,
+            queue: 0,
+            bad: 0,
+            good: 1,
+            cooling: false,
+            rearmed: false,
+            reburst: false,
+            decision: "hold".to_string(),
+            action: "hold".to_string(),
+            vetoed: false,
+        };
+        let mut entries: Vec<LedgerEntry> =
+            (0..30).map(|i| LedgerEntry { t: i as f64, ..hold.clone() }).collect();
+        entries.push(LedgerEntry {
+            t: 30.0,
+            decision: "up".to_string(),
+            action: "add-replica".to_string(),
+            ..hold.clone()
+        });
+        let l = LedgerReport {
+            source: "s".to_string(),
+            replay: "r".to_string(),
+            state_hash: "0".repeat(16),
+            entries,
+            noops: Vec::new(),
+            violations: Vec::new(),
+        };
+        let mut out = Vec::new();
+        render_ledger(&l, &mut out);
+        let text = out.join("\n");
+        assert!(text.contains("add-replica"), "{text}");
+        assert!(text.contains("steady-state hold entries elided"), "{text}");
+    }
+
+    #[test]
+    fn ingest_raw_trace_recovers_events_and_ledger() {
+        let mut tr = trace_with_events();
+        tr.push(TraceEvent::DecisionExplain {
+            t: 9.0,
+            pool: "unified",
+            serving: 1,
+            attainment: -1.0,
+            occupancy: 0.9,
+            queue: 5,
+            bad_windows: 2,
+            good_windows: 0,
+            cooling: false,
+            rearmed: false,
+            reburst: false,
+            decision: "up",
+            action: "scale->6dev".to_string(),
+            vetoed: false,
+        });
+        let text = format!("{}", tr.to_json());
+        let input = ingest("run1", &text, Some("# TYPE x gauge\nx 1\n"))
+            .unwrap();
+        assert_eq!(input.cells.len(), 1);
+        let cell = &input.cells[0];
+        assert_eq!(cell.events.len(), 2);
+        // Declared pause (19.0..19.5) stands in for the switchover.
+        assert!((cell.events[0].switchover_s - 0.5).abs() < 1e-9);
+        assert!((cell.events[0].concurrent_s - 9.5).abs() < 1e-9);
+        let ledger = input.ledger.expect("explain record => ledger");
+        assert_eq!(ledger.entries.len(), 1);
+        assert_eq!(ledger.entries[0].action, "scale->6dev");
+        assert_eq!(input.metrics, vec!["x 1".to_string()]);
+        let text = render(&input);
+        assert!(text.contains("## Metrics snapshot (ingested)"));
+    }
+}

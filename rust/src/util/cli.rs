@@ -81,6 +81,27 @@ impl Args {
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
     }
+
+    /// Option/flag names the user passed that are not in `accepted`
+    /// (sorted, deduplicated). Subcommands use this to reject typos —
+    /// a silently ignored `--sede 7` is worse than an error.
+    pub fn unexpected(&self, accepted: &[&str]) -> Vec<String> {
+        let mut out: Vec<String> = self
+            .options
+            .keys()
+            .filter(|k| !accepted.contains(&k.as_str()))
+            .cloned()
+            .chain(
+                self.flags
+                    .iter()
+                    .filter(|f| !accepted.contains(&f.as_str()))
+                    .cloned(),
+            )
+            .collect();
+        out.sort();
+        out.dedup();
+        out
+    }
 }
 
 #[cfg(test)]
@@ -114,5 +135,17 @@ mod tests {
     fn trailing_flag() {
         let a = parse("run --dry-run");
         assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn unexpected_reports_unknown_options_and_flags() {
+        let a = parse("exp chaos --fast --sede 7 --bogus");
+        assert_eq!(
+            a.unexpected(&["fast", "seed"]),
+            vec!["bogus".to_string(), "sede".to_string()]
+        );
+        assert!(a
+            .unexpected(&["fast", "sede", "bogus"])
+            .is_empty());
     }
 }

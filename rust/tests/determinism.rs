@@ -542,3 +542,78 @@ fn golden_trace_roundtrips_and_embeds_its_digest() {
         );
     }
 }
+
+/// Byte-for-byte regression of the `repro report` renderer against
+/// `rust/tests/golden/report.md`, over the hand-built canonical input
+/// ([`elastic_moe::report::sample_input`]). Bless a deliberate format
+/// change with `GOLDEN_BLESS=1 cargo test --test determinism golden`.
+#[test]
+fn golden_report_is_byte_stable() {
+    let rendered =
+        elastic_moe::report::render(&elastic_moe::report::sample_input());
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/golden/report.md");
+    if std::env::var_os("GOLDEN_BLESS").is_some() {
+        std::fs::write(&path, rendered.as_bytes()).unwrap();
+        return;
+    }
+    let golden = std::fs::read(&path).unwrap_or_else(|e| {
+        panic!(
+            "missing golden file {}: {e} — regenerate with \
+             `GOLDEN_BLESS=1 cargo test --test determinism golden`",
+            path.display()
+        )
+    });
+    assert!(
+        rendered.as_bytes() == golden.as_slice(),
+        "golden report drifted from {}; if the format change is \
+         intentional, regenerate with `GOLDEN_BLESS=1 cargo test --test \
+         determinism golden` and commit the diff",
+        path.display()
+    );
+}
+
+/// `repro report` is byte-deterministic: generating the chaos report
+/// twice from the same seed yields identical markdown, and that
+/// markdown carries every section the postmortem contract promises —
+/// the concurrent-vs-switchover cost table, a device-second-annotated
+/// scaling event in the attainment timeline, the decision ledger with
+/// its guard-vetoed (checked no-op) entries, and a fault cell's replay
+/// bundle.
+#[test]
+fn report_output_is_bit_identical_and_complete() {
+    let a = elastic_moe::report::generate("chaos", 23, true).unwrap();
+    let b = elastic_moe::report::generate("chaos", 23, true).unwrap();
+    assert_eq!(a, b, "same seed must render identical report bytes");
+    for needle in [
+        "### Scaling events — concurrent vs switchover",
+        "### Attainment timeline",
+        " dev-s)",
+        "## Decision ledger",
+        "### Reconciler guard no-ops",
+        "### Postmortem",
+        "Replay bundle:",
+        "```json",
+    ] {
+        assert!(a.contains(needle), "report misses {needle:?}");
+    }
+}
+
+/// `DecisionExplain` emission is unconditional — never gated on the
+/// telemetry registry — so the ledger leg's `state_hash` (which folds
+/// the trace, explains included) is bit-identical with observability
+/// on and off.
+#[test]
+fn decision_explains_are_telemetry_neutral() {
+    let is_explain =
+        |e: &TraceEvent| matches!(e, TraceEvent::DecisionExplain { .. });
+    let (on, v_on) = reconcile::ledger_run_obs(23, true, true).unwrap();
+    let (off, v_off) = reconcile::ledger_run_obs(23, true, false).unwrap();
+    assert_eq!(on.state_hash, off.state_hash, "telemetry changed the run");
+    assert!(on.telemetry.is_some());
+    assert!(off.telemetry.is_none());
+    assert_eq!(v_on.len(), v_off.len());
+    let n = on.trace.count(is_explain);
+    assert!(n > 0, "policy ticks must emit explain records");
+    assert_eq!(off.trace.count(is_explain), n);
+}

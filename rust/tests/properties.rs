@@ -1109,3 +1109,96 @@ fn prop_kv_migration_fabric_legs_conserve_bytes_across_tp() {
         assert_eq!(fabric_total, plan.copied_bytes());
     });
 }
+
+/// The attainment accounting conservation law over real runs: in every
+/// window of every per-tenant and per-pool series, `attained +
+/// violated + in_flight == arrived`, and the tenant partition covers
+/// every recorded request (`docs/architecture/11-reporting.md`).
+#[test]
+fn prop_attainment_windows_conserve_over_real_runs() {
+    use elastic_moe::obs::attain;
+
+    // Per tenant: the reconcile ledger leg (estimator, guards and the
+    // duplicate-command fault all active).
+    let (out, _) =
+        elastic_moe::experiments::reconcile::ledger_run(7, true).unwrap();
+    let slo = elastic_moe::experiments::reconcile::report_slo();
+    let reqs = out.recorder.all();
+    assert!(!reqs.is_empty());
+    let by_tenant = attain::per_tenant(reqs, &slo, 15.0, out.end_time);
+    let mut covered = 0usize;
+    for (key, ws) in &by_tenant {
+        for w in ws {
+            assert!(
+                w.conserves(),
+                "{key} window [{}, {}) leaks arrivals",
+                w.t0,
+                w.t1
+            );
+        }
+        covered += ws.iter().map(|w| w.arrived).sum::<usize>();
+        let burn = attain::burn_rate(
+            ws,
+            slo.target_attainment,
+            60.0,
+            out.end_time,
+        );
+        assert!(burn >= 0.0 && burn.is_finite(), "{key} burn {burn}");
+    }
+    let in_range =
+        reqs.iter().filter(|m| m.arrival < out.end_time).count();
+    assert_eq!(covered, in_range, "tenant partition must cover arrivals");
+
+    // Per pool: a disaggregated fleet cell, partitioned by KV-handoff
+    // membership (prefill→decode vs served in place).
+    let cells =
+        elastic_moe::experiments::disagg::report_cells(7, true).unwrap();
+    let slo = elastic_moe::experiments::disagg::report_slo();
+    let cell = cells
+        .iter()
+        .find(|c| {
+            c.out.trace.count(|e| {
+                matches!(
+                    e,
+                    elastic_moe::chaos::TraceEvent::HandoffPlanned { .. }
+                )
+            }) > 0
+        })
+        .expect("a disagg cell plans prefill→decode handoffs");
+    let handoff: std::collections::BTreeSet<u64> = cell
+        .out
+        .trace
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            elastic_moe::chaos::TraceEvent::HandoffPlanned {
+                id, ..
+            } => Some(*id),
+            _ => None,
+        })
+        .collect();
+    let by_pool = attain::windows_by(
+        cell.out.recorder.all(),
+        &slo,
+        15.0,
+        cell.out.end_time,
+        |m| {
+            Some(if handoff.contains(&m.id) {
+                "pool:prefill>decode".to_string()
+            } else {
+                "pool:local".to_string()
+            })
+        },
+    );
+    assert!(by_pool.contains_key("pool:prefill>decode"));
+    for (key, ws) in &by_pool {
+        for w in ws {
+            assert!(
+                w.conserves(),
+                "{key} window [{}, {}) leaks arrivals",
+                w.t0,
+                w.t1
+            );
+        }
+    }
+}

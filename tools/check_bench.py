@@ -1,0 +1,143 @@
+#!/usr/bin/env python3
+"""Bench regression gate: compare fresh BENCH_*.json against committed
+baselines.
+
+Usage:
+    python3 tools/check_bench.py <baseline_dir> <current_dir>
+
+Compares the higher-is-better throughput metrics in BENCH_hotpath.json
+and BENCH_serve.json (written by `repro bench --json`) against the
+baselines committed under rust/benches/baselines/. A drop of more than
+MAX_DROP (25%) in any gated metric fails the build.
+
+Baselines that carry `"provisional": true` are advisory: regressions are
+reported but the gate exits 0. This is how a fresh baseline is seeded —
+commit it provisional, let CI print the comparison for a few runs, then
+copy a representative artifact over the baseline and drop the flag.
+
+Deliberately dependency-free (stdlib json only): CI runs it with the
+system python3, and it must never be the reason a build needs a
+package manager.
+"""
+
+import json
+import sys
+
+MAX_DROP = 0.25
+
+# Gated metrics per file: dotted paths into the JSON document. All are
+# higher-is-better (events/sec, tokens/sec, attainment fraction).
+GATED = {
+    "BENCH_hotpath.json": [
+        "event_core.events_per_sec",
+        "windowed_reference.events_per_sec",
+    ],
+    "BENCH_serve.json": [
+        "steady.tokens_per_sec",
+        "steady.slo_attainment",
+    ],
+}
+
+# Informational-only metrics (printed, never gated): lower-is-better or
+# too noisy for a hard threshold.
+INFORMATIONAL = {
+    "BENCH_hotpath.json": [
+        "speedup",
+        "telemetry_overhead.overhead_frac",
+    ],
+    "BENCH_serve.json": [
+        "steady.ttft_p99_s",
+        "scale_up_latency_s.elastic",
+        "scale_up_latency_s.cold",
+    ],
+}
+
+
+def lookup(doc, path):
+    cur = doc
+    for part in path.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur if isinstance(cur, (int, float)) else None
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+    except json.JSONDecodeError as e:
+        print(f"error: {path} is not valid JSON: {e}")
+        sys.exit(2)
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        sys.exit(2)
+    baseline_dir, current_dir = sys.argv[1], sys.argv[2]
+
+    failures = []
+    advisory_only = True
+
+    for fname, paths in GATED.items():
+        base = load(f"{baseline_dir}/{fname}")
+        cur = load(f"{current_dir}/{fname}")
+        if base is None:
+            print(f"{fname}: no committed baseline — skipping (commit one "
+                  f"under {baseline_dir}/ with \"provisional\": true)")
+            continue
+        if cur is None:
+            failures.append(f"{fname}: current artifact missing in "
+                            f"{current_dir}/ (did `repro bench --json` run?)")
+            continue
+
+        provisional = bool(base.get("provisional", False))
+        if not provisional:
+            advisory_only = False
+        mode = "advisory (provisional baseline)" if provisional else "gated"
+        print(f"{fname} [{mode}]")
+
+        for path in paths:
+            b, c = lookup(base, path), lookup(cur, path)
+            if b is None:
+                print(f"  {path}: not in baseline — skipped")
+                continue
+            if c is None:
+                msg = f"{fname}: {path} missing from current artifact"
+                print(f"  {path}: MISSING from current run")
+                if not provisional:
+                    failures.append(msg)
+                continue
+            drop = 0.0 if b <= 0 else (b - c) / b
+            status = "ok"
+            if drop > MAX_DROP:
+                status = f"REGRESSION ({drop * 100.0:.1f}% drop)"
+                if not provisional:
+                    failures.append(
+                        f"{fname}: {path} dropped {drop * 100.0:.1f}% "
+                        f"({b:g} -> {c:g}), limit {MAX_DROP * 100.0:.0f}%")
+            print(f"  {path}: {b:g} -> {c:g}  [{status}]")
+
+        for path in INFORMATIONAL.get(fname, []):
+            b, c = lookup(base, path), lookup(cur, path)
+            if b is not None and c is not None:
+                print(f"  {path}: {b:g} -> {c:g}  [info]")
+
+    if failures:
+        print()
+        for f in failures:
+            print(f"FAIL: {f}")
+        sys.exit(1)
+    if advisory_only:
+        print()
+        print("all baselines provisional — advisory run, gate passes. "
+              "Bless a real baseline by copying a CI artifact over "
+              "rust/benches/baselines/ and removing \"provisional\".")
+    print("bench gate: OK")
+
+
+if __name__ == "__main__":
+    main()
